@@ -1,0 +1,55 @@
+//! Quickstart: solve a full-KRR problem with ASkotch and predict.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example quickstart
+//! ```
+
+use askotch::prelude::*;
+
+fn main() -> anyhow::Result<()> {
+    // 1. Data: a synthetic taxi-trip-duration regression task
+    //    (swap in `data::csv::load("your.csv", -1, true)?` for real data).
+    let data = synthetic::taxi_like(2000, 9, 42).standardized();
+
+    // 2. Problem: 0.8/0.2 split, dataset-recommended bandwidth, lam = n * 1e-6.
+    let problem =
+        KrrProblem::from_dataset(data, KernelKind::Rbf, BandwidthSpec::Auto, 1e-6, 0)?;
+    println!(
+        "problem: n={} d={} sigma={:.3} lambda={:.2e}",
+        problem.n(),
+        problem.d(),
+        problem.sigma,
+        problem.lam
+    );
+
+    // 3. Engine: load the AOT-compiled artifacts (Python ran once, at build).
+    let engine = Engine::from_manifest("artifacts")?;
+
+    // 4. Solve with ASkotch's paper defaults.
+    let mut solver = AskotchSolver::new(
+        AskotchConfig { rank: 20, track_residual: true, ..Default::default() },
+        /*accelerated=*/ true,
+    );
+    let report = solver.run(&engine, &problem, &Budget::iterations(800))?;
+    println!(
+        "solved in {} iterations ({:.2}s): test MAE {:.3}, rel residual {:.2e}",
+        report.iters, report.wall_secs, report.final_metric, report.final_residual
+    );
+
+    // 5. Predict on fresh points through the same fused kernel artifacts.
+    let preds = askotch::coordinator::runtime_ops::predict(
+        &engine,
+        problem.kernel,
+        &problem.train.x,
+        problem.n(),
+        problem.d(),
+        &report.weights,
+        &problem.test.x,
+        problem.test.n.min(5),
+        problem.sigma,
+    )?;
+    for (i, p) in preds.iter().enumerate() {
+        println!("test[{i}]: predicted {p:+.2}, actual {:+.2}", problem.test.y[i]);
+    }
+    Ok(())
+}

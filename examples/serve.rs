@@ -1,0 +1,88 @@
+//! Batched prediction serving demo: train once, then serve concurrent
+//! prediction requests through the dynamic batcher, reporting latency
+//! percentiles and batching efficiency.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example serve
+//! ```
+
+use askotch::config::{BandwidthSpec, KernelKind};
+use askotch::coordinator::{Budget, KrrProblem};
+use askotch::data::synthetic;
+use askotch::runtime::Engine;
+use askotch::server::{serve, ModelSnapshot, Request, ServerConfig};
+use askotch::solvers::askotch::{AskotchConfig, AskotchSolver};
+use askotch::solvers::Solver;
+use askotch::util::fmt;
+use std::sync::mpsc;
+
+fn main() -> anyhow::Result<()> {
+    // --- train ------------------------------------------------------------
+    let ds = synthetic::taxi_like(2000, 9, 1).standardized();
+    let problem = KrrProblem::from_dataset(ds, KernelKind::Rbf, BandwidthSpec::Auto, 1e-6, 0)?;
+    let engine = Engine::from_manifest("artifacts")?;
+    let mut solver = AskotchSolver::new(AskotchConfig { rank: 20, ..Default::default() }, true);
+    let report = solver.run(&engine, &problem, &Budget::iterations(400))?;
+    println!("trained askotch: test MAE {:.3}", report.final_metric);
+
+    let model = ModelSnapshot {
+        kernel: problem.kernel,
+        sigma: problem.sigma,
+        x_train: problem.train.x.clone(),
+        n: problem.n(),
+        d: problem.d(),
+        weights: report.weights.clone(),
+    };
+
+    // --- serve ------------------------------------------------------------
+    let (tx, rx) = mpsc::channel::<Request>();
+    let n_clients = 4;
+    let reqs_per_client = 250;
+    let test = problem.test.clone();
+    let mut clients = Vec::new();
+    for c in 0..n_clients {
+        let tx = tx.clone();
+        let rows: Vec<Vec<f64>> = (0..reqs_per_client)
+            .map(|i| test.row((c * reqs_per_client + i) % test.n).to_vec())
+            .collect();
+        clients.push(std::thread::spawn(move || {
+            let mut lat = Vec::with_capacity(rows.len());
+            for row in rows {
+                let (rtx, rrx) = mpsc::channel();
+                let t0 = std::time::Instant::now();
+                tx.send(Request { features: row, reply: rtx }).unwrap();
+                rrx.recv().unwrap().unwrap();
+                lat.push(t0.elapsed().as_secs_f64());
+            }
+            lat
+        }));
+    }
+    drop(tx); // server shuts down when all clients finish
+
+    let t0 = std::time::Instant::now();
+    let stats = serve(&engine, &model, rx, &ServerConfig::default());
+    let wall = t0.elapsed().as_secs_f64();
+
+    let mut lat: Vec<f64> = clients.into_iter().flat_map(|c| c.join().unwrap()).collect();
+    lat.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let pct = |p: f64| lat[((lat.len() as f64 * p) as usize).min(lat.len() - 1)];
+    println!(
+        "served {} requests in {} ({:.0} req/s)",
+        stats.requests,
+        fmt::duration(wall),
+        stats.requests as f64 / wall
+    );
+    println!(
+        "batches: {} (mean size {:.1}, max {}) — batching amortizes the artifact call",
+        stats.batches,
+        stats.mean_batch(),
+        stats.max_batch_seen
+    );
+    println!(
+        "latency: p50={} p90={} p99={}",
+        fmt::duration(pct(0.50)),
+        fmt::duration(pct(0.90)),
+        fmt::duration(pct(0.99))
+    );
+    Ok(())
+}

@@ -1,0 +1,176 @@
+"""AOT pipeline: lower every Layer-1/2 computation to HLO text + manifest.
+
+Interchange is HLO *text*, not a serialized HloModuleProto: jax >= 0.5
+emits protos with 64-bit instruction ids which xla_extension 0.5.1 (the
+version behind the rust `xla` crate) rejects; the HLO text parser
+reassigns ids, so text round-trips cleanly.
+
+Usage (normally via `make artifacts`):
+    cd python && python -m compile.aot --out-dir ../artifacts [--filter kmv]
+
+Incremental: an artifact is re-lowered only when missing or older than
+the compile/ sources (or with --force).
+"""
+
+import argparse
+import json
+import sys
+import time
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import configs, model
+
+MANIFEST_VERSION = 1
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (see module docstring)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _f32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def _i32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.int32)
+
+
+def artifact_specs(art):
+    """Return (callable, example_args) for an artifact description."""
+    op, kern = art["op"], art["kernel"]
+    n, d, b, r = art["n"], art["d"], art["b"], art["r"]
+    scalar = _f32()
+    if op == "askotch_step":
+        fn = model.build_askotch_step(kern)
+        args = (
+            _f32(n, d), _f32(n), _f32(n), _f32(n),            # X y v z
+            _i32(b), _f32(b, r), _f32(b),                     # idx omega pv0
+            scalar, scalar, scalar,                           # sigma lam damped
+            scalar, scalar, scalar,                           # beta gamma alpha
+        )
+    elif op == "askotch_step_identity":
+        fn = model.build_askotch_step(kern, identity=True)
+        args = (
+            _f32(n, d), _f32(n), _f32(n), _f32(n),            # X y v z
+            _i32(b), _f32(b),                                 # idx pv0
+            scalar, scalar,                                   # sigma lam
+            scalar, scalar, scalar,                           # beta gamma alpha
+        )
+    elif op == "skotch_step":
+        fn = model.build_skotch_step(kern)
+        args = (
+            _f32(n, d), _f32(n), _f32(n),
+            _i32(b), _f32(b, r), _f32(b),
+            scalar, scalar, scalar,
+        )
+    elif op == "skotch_step_identity":
+        fn = model.build_skotch_step(kern, identity=True)
+        args = (
+            _f32(n, d), _f32(n), _f32(n),
+            _i32(b), _f32(b),
+            scalar, scalar,
+        )
+    elif op == "kmv":
+        fn = model.build_kmv(kern)
+        args = (_f32(b, d), _f32(n, d), _f32(n), scalar)
+    elif op == "kblock":
+        fn = model.build_kblock(kern)
+        args = (_f32(b, d), scalar)
+    else:
+        raise ValueError(f"unknown op {op!r}")
+    return fn, args
+
+
+def artifact_filename(art):
+    return (
+        f"{art['op']}_{art['kernel']}"
+        f"_n{art['n']}_d{art['d']}_b{art['b']}_r{art['r']}.hlo.txt"
+    )
+
+
+def sources_mtime():
+    src_dir = Path(__file__).parent
+    return max(p.stat().st_mtime for p in src_dir.rglob("*.py"))
+
+
+def lower_one(art, out_dir: Path, force: bool, src_mtime: float) -> dict:
+    fname = artifact_filename(art)
+    path = out_dir / fname
+    entry = {
+        "op": art["op"],
+        "kernel": art["kernel"],
+        "dtype": "f32",
+        "file": fname,
+        "shapes": {"n": art["n"], "d": art["d"], "b": art["b"], "r": art["r"]},
+    }
+    if path.exists() and path.stat().st_mtime >= src_mtime and not force:
+        entry["cached"] = True
+        return entry
+    fn, args = artifact_specs(art)
+    t0 = time.time()
+    lowered = jax.jit(fn).lower(*args)
+    text = to_hlo_text(lowered)
+    path.write_text(text)
+    entry["lower_secs"] = round(time.time() - t0, 2)
+    entry["hlo_bytes"] = len(text)
+    return entry
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--filter", default="", help="substring filter on op/kernel")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--out", default=None, help=argparse.SUPPRESS)  # legacy
+    args = ap.parse_args(argv)
+
+    out_dir = Path(args.out_dir)
+    out_dir.mkdir(parents=True, exist_ok=True)
+    src_mtime = sources_mtime()
+
+    entries = []
+    todo = [a for a in configs.all_artifacts()
+            if args.filter in a["op"] or args.filter in a["kernel"]]
+    t0 = time.time()
+    for i, art in enumerate(todo):
+        entry = lower_one(art, out_dir, args.force, src_mtime)
+        entries.append(entry)
+        status = "cached" if entry.get("cached") else f"{entry.get('lower_secs', 0)}s"
+        print(f"[{i + 1:3d}/{len(todo)}] {entry['file']} ({status})", flush=True)
+
+    # Merge with the existing manifest so `--filter` runs do not clobber
+    # entries for artifacts that were not re-lowered.
+    by_file = {}
+    prev_path = out_dir / "manifest.json"
+    if prev_path.exists():
+        try:
+            for e in json.loads(prev_path.read_text()).get("artifacts", []):
+                if (out_dir / e["file"]).exists():
+                    by_file[e["file"]] = e
+        except (json.JSONDecodeError, KeyError):
+            pass
+    for e in entries:
+        by_file[e["file"]] = {k: v for k, v in e.items() if k != "cached"}
+    manifest = {
+        "version": MANIFEST_VERSION,
+        "generated_unix": int(time.time()),
+        "artifacts": sorted(by_file.values(), key=lambda e: e["file"]),
+    }
+    (out_dir / "manifest.json").write_text(json.dumps(manifest, indent=1))
+    fresh = sum(1 for e in entries if not e.get("cached"))
+    print(f"manifest: {len(entries)} artifacts ({fresh} lowered, "
+          f"{len(entries) - fresh} cached) in {time.time() - t0:.1f}s")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

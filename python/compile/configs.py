@@ -1,0 +1,94 @@
+"""Artifact shape grid: which (op, kernel, shapes) combinations to lower.
+
+The rust coordinator zero-pads problems up to the nearest compiled shape
+(see rust/src/runtime/tensor.rs for why padding is exact), so the grid
+only needs to *cover* the sizes used by the examples, tests, and paper
+benches — not enumerate them. Adding a row here and re-running
+`make artifacts` is all it takes to support a bigger problem.
+
+Conventions:
+  n: training rows (power of two, >= 1024 so the 512-tile divides it)
+  d: feature dim
+  b: ASkotch block size (paper default n/100; we use the nearest
+     power-of-two of n/64 so blocks stay >= 32 at small n)
+  r: Nystrom rank
+"""
+
+# --- askotch_step / skotch_step shapes: (kernel, n, d, b, r) --------------
+STEP_SHAPES = [
+    # quickstart + small synthetic tasks
+    ("rbf", 1024, 16, 32, 20),
+    ("rbf", 2048, 16, 32, 20),
+    ("rbf", 4096, 32, 64, 50),
+    # fig9 linear-convergence rank sweep (one n, three ranks)
+    ("rbf", 4096, 32, 64, 10),
+    ("rbf", 4096, 32, 64, 20),
+    # mid-size testbed
+    ("rbf", 8192, 64, 128, 50),
+    ("rbf", 16384, 64, 256, 100),
+    # showcase (taxi-like) rank sweep, paper Fig. 1
+    ("rbf", 32768, 16, 512, 10),
+    ("rbf", 32768, 16, 512, 20),
+    ("rbf", 32768, 16, 512, 50),
+    ("rbf", 32768, 16, 512, 100),
+    # vision-like tasks use the Laplacian kernel on wide features
+    ("laplacian", 4096, 128, 64, 50),
+    ("laplacian", 8192, 128, 128, 50),
+    # molecule-like regression uses Matern-5/2
+    ("matern52", 4096, 64, 64, 50),
+    ("matern52", 8192, 64, 128, 50),
+    # qm9-like regression uses Laplacian on wide features
+    ("laplacian", 4096, 64, 64, 50),
+]
+
+# Ablation arms (identity projector) only needed at testbed scale.
+IDENTITY_STEP_SHAPES = [
+    ("rbf", 4096, 32, 64, 50),
+    ("rbf", 8192, 64, 128, 50),
+    ("matern52", 4096, 64, 64, 50),
+    ("laplacian", 4096, 128, 64, 50),
+]
+
+# --- kmv shapes: (kernel, b_rows_of_x1, n_rows_of_x2, d) ------------------
+# b = 512 rows serve prediction/residual tiles; b = n rows serve the PCG
+# full matvec; the (n, m) / (m, n) pairs serve Falkon; (512, n) serves
+# EigenPro batch gradients.
+_FALKON_M = 1024
+
+def _kmv_closure():
+    shapes = set()
+    for kernel, n, d, _, _ in STEP_SHAPES:
+        shapes.add((kernel, 512, n, d))        # prediction / residual tile
+        shapes.add((kernel, n, n, d))          # PCG full matvec
+        shapes.add((kernel, n, _FALKON_M, d))  # Falkon K_nm v
+        shapes.add((kernel, _FALKON_M, n, d))  # Falkon K_nm^T u
+    # prediction may also run against padded test blocks of 1024 rows
+    shapes.add(("rbf", 1024, 32768, 16))
+    return sorted(shapes)
+
+KMV_SHAPES = _kmv_closure()
+
+# --- kblock shapes: (kernel, b, d) ----------------------------------------
+def _kblock_closure():
+    shapes = set()
+    for kernel, _, d, b, _ in STEP_SHAPES:
+        shapes.add((kernel, b, d))             # test oracles over step blocks
+        shapes.add((kernel, _FALKON_M, d))     # Falkon K_mm
+        shapes.add((kernel, 512, d))           # EigenPro subsample block
+    return sorted(shapes)
+
+KBLOCK_SHAPES = _kblock_closure()
+
+
+def all_artifacts():
+    """Yield dicts describing every artifact to lower."""
+    for kernel, n, d, b, r in STEP_SHAPES:
+        yield {"op": "askotch_step", "kernel": kernel, "n": n, "d": d, "b": b, "r": r}
+        yield {"op": "skotch_step", "kernel": kernel, "n": n, "d": d, "b": b, "r": r}
+    for kernel, n, d, b, r in IDENTITY_STEP_SHAPES:
+        yield {"op": "askotch_step_identity", "kernel": kernel, "n": n, "d": d, "b": b, "r": r}
+        yield {"op": "skotch_step_identity", "kernel": kernel, "n": n, "d": d, "b": b, "r": r}
+    for kernel, b, n, d in KMV_SHAPES:
+        yield {"op": "kmv", "kernel": kernel, "n": n, "d": d, "b": b, "r": 0}
+    for kernel, b, d in KBLOCK_SHAPES:
+        yield {"op": "kblock", "kernel": kernel, "n": 0, "d": d, "b": b, "r": 0}

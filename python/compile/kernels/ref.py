@@ -1,0 +1,54 @@
+"""Pure-jnp reference oracles for the Layer-1 Pallas kernels.
+
+Everything here materializes the full pairwise kernel matrix and is only
+used (a) as the correctness oracle in pytest and (b) as a slow fallback
+when tracing tiny shapes. The Pallas kernels in ``pallas_kernels.py`` must
+match these to float tolerance for every kernel function, shape, and dtype
+exercised by the hypothesis sweeps in ``python/tests/test_kernels.py``.
+
+Kernel functions (paper SC.1), bandwidth sigma:
+  rbf        k(x,x') = exp(-||x-x'||^2 / (2 sigma^2))
+  laplacian  k(x,x') = exp(-||x-x'||_1 / sigma)
+  matern52   k(x,x') = (1 + sqrt5 u + 5u^2/3) exp(-sqrt5 u),  u = ||x-x'||_2/sigma
+"""
+
+import jax.numpy as jnp
+
+KERNELS = ("rbf", "laplacian", "matern52")
+
+
+def sq_dists(x1, x2):
+    """Pairwise squared euclidean distances, shape (m, n)."""
+    # ||a-b||^2 = ||a||^2 + ||b||^2 - 2 a.b  (fast path for rbf/matern)
+    n1 = (x1 * x1).sum(-1)[:, None]
+    n2 = (x2 * x2).sum(-1)[None, :]
+    sq = n1 + n2 - 2.0 * (x1 @ x2.T)
+    return jnp.maximum(sq, 0.0)
+
+
+def l1_dists(x1, x2):
+    """Pairwise L1 distances, shape (m, n)."""
+    return jnp.abs(x1[:, None, :] - x2[None, :, :]).sum(-1)
+
+
+def kernel_matrix(name, x1, x2, sigma):
+    """Dense kernel matrix K(x1, x2), shape (m, n)."""
+    if name == "rbf":
+        return jnp.exp(-sq_dists(x1, x2) / (2.0 * sigma * sigma))
+    if name == "laplacian":
+        return jnp.exp(-l1_dists(x1, x2) / sigma)
+    if name == "matern52":
+        u = jnp.sqrt(sq_dists(x1, x2) + 1e-12) / sigma
+        s5u = jnp.sqrt(5.0) * u
+        return (1.0 + s5u + (5.0 / 3.0) * u * u) * jnp.exp(-s5u)
+    raise ValueError(f"unknown kernel {name!r}")
+
+
+def kmv(name, x1, x2, v, sigma):
+    """K(x1, x2) @ v without any tiling (oracle)."""
+    return kernel_matrix(name, x1, x2, sigma) @ v
+
+
+def kblock(name, x1, sigma):
+    """Symmetric kernel block K(x1, x1) (oracle)."""
+    return kernel_matrix(name, x1, x1, sigma)

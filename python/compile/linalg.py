@@ -1,0 +1,196 @@
+"""Pure-JAX (plain-HLO) dense linear algebra.
+
+The rust PJRT client (xla_extension 0.5.1) has no LAPACK custom-call
+registry, so ``jnp.linalg.{cholesky,qr,svd,eigh}`` — which lower to
+``lapack_*`` custom calls on CPU — would fail to load. Everything the
+AOT'd model needs is implemented here with ``lax.fori_loop`` + basic ops
+only, so the lowered HLO is self-contained.
+
+Sizes are small (r ~ 100, b ~ 1024), so unblocked algorithms are fine;
+the loops lower to XLA ``while`` ops with O(r) trip counts and vectorized
+bodies.
+
+Validated against numpy in ``python/tests/test_linalg.py``.
+"""
+
+import jax.numpy as jnp
+from jax import lax
+
+
+def chol(a, jitter=0.0):
+    """Lower-triangular Cholesky factor of an spd matrix.
+
+    Unblocked left-looking factorization: one fori_loop over columns, each
+    body O(n) vector work (the update uses a full matvec against the
+    already-built columns, masked to the strictly-lower part).
+
+    Numerically-rank-deficient inputs (kernel blocks of very smooth
+    kernels) produce ~ -eps*lambda_1 pivots in f32; pivots are floored
+    *relative to the trace* so the factor stays bounded instead of
+    dividing by ~1e-15 (which cascaded to NaN before this floor).
+    """
+    n = a.shape[0]
+    a = a + jitter * jnp.eye(n, dtype=a.dtype)
+    eps = jnp.asarray(jnp.finfo(a.dtype).eps, a.dtype)
+    pivot_floor = 10.0 * eps * (jnp.trace(a) / n) + 1e-30
+
+    def body(j, l):
+        row = l[j, :]
+        pivot = jnp.sqrt(jnp.maximum(a[j, j] - jnp.dot(row, row), pivot_floor))
+        col = (a[:, j] - l @ row) / pivot
+        below = jnp.arange(n) > j
+        col = jnp.where(below, col, 0.0)
+        col = col.at[j].set(pivot)
+        return l.at[:, j].set(col)
+
+    return lax.fori_loop(0, n, body, jnp.zeros_like(a))
+
+
+def solve_lower_vec(l, b):
+    """Solve L x = b with L lower triangular, b a vector."""
+    n = l.shape[0]
+
+    def body(i, x):
+        val = (b[i] - jnp.dot(l[i, :], x)) / l[i, i]
+        return x.at[i].set(val)
+
+    return lax.fori_loop(0, n, body, jnp.zeros_like(b))
+
+
+def solve_upper_vec(l_t_or_u, b):
+    """Solve U x = b with U upper triangular, b a vector."""
+    n = l_t_or_u.shape[0]
+
+    def body(k, x):
+        i = n - 1 - k
+        val = (b[i] - jnp.dot(l_t_or_u[i, :], x)) / l_t_or_u[i, i]
+        return x.at[i].set(val)
+
+    return lax.fori_loop(0, n, body, jnp.zeros_like(b))
+
+
+def chol_solve_vec(l, b):
+    """Solve (L L^T) x = b given the Cholesky factor L."""
+    return solve_upper_vec(l.T, solve_lower_vec(l, b))
+
+
+def solve_lowerT_right(y, l):
+    """Solve B L^T = Y for B, i.e. B = Y L^{-T}; Y is (p, r), L (r, r) lower.
+
+    Column-wise forward substitution:
+      B[:, j] = (Y[:, j] - sum_{i<j} B[:, i] L[j, i]) / L[j, j]
+    """
+    r = l.shape[0]
+
+    def body(j, bmat):
+        # bmat @ l[j, :] sums B[:, i] * L[j, i]; columns i >= j of B are
+        # still zero, so the masked sum is implicit.
+        acc = bmat @ l[j, :]
+        col = (y[:, j] - acc) / l[j, j]
+        return bmat.at[:, j].set(col)
+
+    return lax.fori_loop(0, r, body, jnp.zeros_like(y))
+
+
+def tri_inverse_lower(l):
+    """Explicit inverse of a lower-triangular matrix.
+
+    Row-wise forward substitution against the identity: `r` loop trips,
+    each a *vectorized* full-row update — much cheaper at runtime than
+    calling a vector solve per right-hand side (XLA while-loop trips have
+    fixed dispatch overhead; see EXPERIMENTS.md SPerf)."""
+    r = l.shape[0]
+    eye = jnp.eye(r, dtype=l.dtype)
+
+    def body(i, x):
+        row = (eye[i, :] - l[i, :] @ x) / l[i, i]
+        # l[i, j] for j >= i multiplies rows of x that are still zero, and
+        # l[i, i] * x[i, :] = 0 as well, so the masked sum is implicit.
+        return x.at[i, :].set(row)
+
+    return lax.fori_loop(0, r, body, jnp.zeros_like(l))
+
+
+def chol_inverse_spd(a, jitter=0.0):
+    """Explicit inverse of an spd matrix via Cholesky: A^{-1} = L^{-T} L^{-1}.
+
+    O(r^3) flops but only ~2r loop trips; use when the inverse is applied
+    many times per factorization (the get_L powering loop)."""
+    l = chol(a, jitter=jitter)
+    linv = tri_inverse_lower(l)
+    return linv.T @ linv
+
+
+def cgs2_orth(a, passes=2):
+    """Orthonormalize the columns of a (p, r) matrix.
+
+    Classical Gram-Schmidt applied `passes` times (default "CGS2"):
+    numerically comparable to modified GS but with matvec-shaped
+    (vectorizable) bodies. Rank-deficient columns are replaced by zero
+    vectors (their norms are floored, so downstream stays finite).
+
+    One pass suffices for Gaussian test matrices (they are
+    well-conditioned with overwhelming probability); the Nystrom sketch
+    uses `passes=1` for loop-trip economy and leans on the core jitter
+    for the rare near-degenerate draw (EXPERIMENTS.md SPerf).
+    """
+    p, r = a.shape
+
+    def one_pass(q):
+        def body(j, q):
+            v = q[:, j]
+            # project out columns 0..j-1 (columns >= j are untouched yet,
+            # so mask the coefficient vector)
+            coef = q.T @ v
+            mask = jnp.arange(r) < j
+            coef = jnp.where(mask, coef, 0.0)
+            v = v - q @ coef
+            norm = jnp.sqrt(jnp.maximum(jnp.dot(v, v), 1e-30))
+            return q.at[:, j].set(v / norm)
+
+        return lax.fori_loop(0, r, body, q)
+
+    q = a
+    for _ in range(passes):
+        q = one_pass(q)
+    return q
+
+
+def power_max_eig(matvec, v0, iters=10):
+    """Largest eigenvalue of an (implicitly) spd operator by powering.
+
+    `matvec` maps (p,) -> (p,). Returns the norm-ratio estimate after
+    `iters` normalized iterations (Kuczynski-Wozniakowski style, as the
+    paper's get_L does).
+    """
+
+    def body(_, carry):
+        v, _ = carry
+        w = matvec(v)
+        nrm = jnp.sqrt(jnp.maximum(jnp.dot(w, w), 1e-30))
+        vnrm = jnp.sqrt(jnp.maximum(jnp.dot(v, v), 1e-30))
+        return (w / nrm, nrm / vnrm)
+
+    v0n = v0 / jnp.sqrt(jnp.maximum(jnp.dot(v0, v0), 1e-30))
+    _, lam = lax.fori_loop(0, iters, body, (v0n, jnp.asarray(1.0, v0.dtype)))
+    return lam
+
+
+def inv_power_min_eig(g, v0, iters=10, jitter_scale=1e-6):
+    """Smallest eigenvalue of an spd (r, r) matrix via inverse powering.
+
+    Inverts once (explicitly — the powering loop then runs loop-free
+    matvecs); the estimate is the Rayleigh quotient of the final iterate
+    (robust even when the iteration has not fully converged).
+    """
+    r = g.shape[0]
+    jitter = jitter_scale * jnp.trace(g) / r
+    ginv = chol_inverse_spd(g + jitter * jnp.eye(r, dtype=g.dtype))
+
+    def body(_, v):
+        w = ginv @ v
+        return w / jnp.sqrt(jnp.maximum(jnp.dot(w, w), 1e-30))
+
+    v = lax.fori_loop(0, iters, body, v0 / jnp.sqrt(jnp.maximum(jnp.dot(v0, v0), 1e-30)))
+    rayleigh = jnp.dot(v, g @ v) / jnp.maximum(jnp.dot(v, v), 1e-30)
+    return jnp.maximum(rayleigh - jitter, 0.0)

@@ -1,0 +1,225 @@
+"""Layer-2 JAX model: the ASkotch / Skotch iteration and supporting ops.
+
+Each public ``build_*`` function returns a jax-traceable callable over
+fixed shapes; ``aot.py`` lowers them once to HLO text for the rust
+coordinator. Everything lowers to plain HLO (see ``linalg.py``).
+
+Paper mapping (Algorithms 2 & 3):
+
+  sample B                    -> rust side (uniform or BLESS/ARLS)
+  K_hat_BB = Nystrom(K_BB, r) -> `nystrom.nystrom_b_factor` (Gaussian
+                                  test matrix `omega` supplied by rust)
+  L_PB = get_L(...)           -> `nystrom.precond_max_eig` (10 powerings,
+                                  init vector `pv0` supplied by rust)
+  d_i, iterate updates        -> here, with the O(nb) product
+                                  (K_lambda)_B: z computed by the fused
+                                  Pallas `kmv` kernel.
+
+The damped vs regularization choice for rho (paper SS6, "damped" sets
+rho = lam + lambda_r(K_hat_BB)) is a runtime scalar switch `damped` in
+{0.0, 1.0}, so one artifact serves both ablation arms.
+
+Acceleration note: Algorithm 3 prints `z_{i+1} <- alpha v_i + ...` with a
+stale `v_i`; we follow Gower et al. (2018, Alg. 2) — which the paper cites
+for this step — and use the updated `v_{i+1}` (see DESIGN.md).
+"""
+
+import jax.numpy as jnp
+
+from . import linalg, nystrom
+from .kernels import pallas_kernels as pk
+from .kernels import ref as kref
+
+#: iterations of randomized powering in get_L (paper Appendix A.2).
+GETL_ITERS = 10
+
+
+def _block_gradient(kernel_name, x, xb, yb, z, zb, lam, sigma, n_tile, use_pallas):
+    """(K_lambda)_{B:} z - y_B, the O(nb) hot product."""
+    if use_pallas:
+        kz = pk.kmv(kernel_name, xb, x, z, sigma, n_tile=n_tile)
+    else:
+        kz = kref.kmv(kernel_name, xb, x, z, sigma)
+    return kz + lam * zb - yb
+
+
+def _direction(kernel_name, x, y, z, idx, omega, pv0, sigma, lam, damped,
+               n_tile, use_pallas):
+    """Shared core: returns (idx-gathered state, step = d_i / L_PB, metrics)."""
+    xb = jnp.take(x, idx, axis=0)
+    yb = jnp.take(y, idx)
+    zb = jnp.take(z, idx)
+
+    if use_pallas:
+        kbb = pk.kblock(kernel_name, xb, sigma)
+    else:
+        kbb = kref.kblock(kernel_name, xb, sigma)
+
+    b_factor = nystrom.nystrom_b_factor(kbb, omega)
+    lam_r = nystrom.lambda_r(b_factor, pv0, iters=GETL_ITERS)
+    # Damping noise floor: when r ~ rank(K_BB), lambda_r underruns the
+    # f32 error of the sketch itself, rho fails to damp the approximation
+    # error, and the 10-step powering can miss the resulting spectral
+    # spikes -> stepsize overshoot. Floor rho at O(eps) * tr(B^T B).
+    eps = jnp.asarray(jnp.finfo(x.dtype).eps, x.dtype)
+    noise_floor = 50.0 * eps * jnp.sum(b_factor * b_factor)
+    rho = lam + damped * jnp.maximum(lam_r, noise_floor)
+
+    # One explicit r x r core inverse serves both the powering loop and
+    # the projection apply (EXPERIMENTS.md SPerf).
+    core_inv = nystrom.woodbury_core_inv(b_factor, rho)
+    l_pb = nystrom.precond_max_eig(
+        kbb, lam, b_factor, rho, pv0, iters=GETL_ITERS, core_inv=core_inv)
+    # Lemma 8's stepsize clamp: eta_B = 1 / max(1, L_PB).
+    l_pb = jnp.maximum(l_pb, 1.0)
+
+    g_b = _block_gradient(kernel_name, x, xb, yb, z, zb, lam, sigma, n_tile, use_pallas)
+    d_b = nystrom.woodbury_apply(b_factor, rho, core_inv, g_b)
+    step = d_b / l_pb
+
+    metrics = jnp.stack(
+        [l_pb, rho, jnp.sqrt(jnp.maximum(jnp.dot(g_b, g_b), 0.0)), lam_r]
+    )
+    return step, metrics
+
+
+def _identity_direction(kernel_name, x, y, z, idx, pv0, sigma, lam,
+                        n_tile, use_pallas):
+    """Ablation arm (paper SS6.4 / Lin et al. 2024): projector = identity.
+
+    The preconditioner (K_hat + rho I)^{-1} is replaced by I; the stepsize
+    is still automatic, 1 / lambda_max(K_BB + lam I) by powering.
+    """
+    xb = jnp.take(x, idx, axis=0)
+    yb = jnp.take(y, idx)
+    zb = jnp.take(z, idx)
+    if use_pallas:
+        kbb = pk.kblock(kernel_name, xb, sigma)
+    else:
+        kbb = kref.kblock(kernel_name, xb, sigma)
+    l_pb = linalg.power_max_eig(lambda v: kbb @ v + lam * v, pv0, iters=GETL_ITERS)
+    l_pb = jnp.maximum(l_pb, 1e-12)
+    g_b = _block_gradient(kernel_name, x, xb, yb, z, zb, lam, sigma, n_tile, use_pallas)
+    step = g_b / l_pb
+    metrics = jnp.stack(
+        [l_pb, lam, jnp.sqrt(jnp.maximum(jnp.dot(g_b, g_b), 0.0)), jnp.asarray(0.0, x.dtype)]
+    )
+    return step, metrics
+
+
+def build_askotch_step(kernel_name, n_tile=None, use_pallas=True, identity=False):
+    """One ASkotch iteration (Algorithm 3).
+
+    Signature of the returned callable:
+      (X(n,d), y(n), v(n), z(n), idx(b,)i32, omega(b,r), pv0(b,),
+       sigma, lam, damped, beta, gamma, alpha)
+        -> (w', v', z', metrics(4,))
+    metrics = [L_PB, rho, ||g_B||, lambda_r].
+
+    Note the *previous* `w` is not an input: NSAP's update computes
+    `w_{i+1}` from `z_i` alone (Gower et al. 2018, Alg. 2), so passing it
+    would leave a dead parameter that jax DCEs out of the lowered HLO.
+    """
+
+    def _update(v, z, idx, s, beta, gamma, alpha, metrics):
+        w1 = z.at[idx].add(-s)                    # w_{i+1} = z_i - I_B^T s
+        v1 = (beta * v + (1.0 - beta) * z).at[idx].add(-gamma * s)
+        z1 = alpha * v1 + (1.0 - alpha) * w1
+        return (w1, v1, z1, metrics)
+
+    if identity:
+        # Reduced signature: the identity projector uses no test matrix and
+        # no damping switch (otherwise jax DCEs the parameters out of the
+        # lowered HLO and the rust-side input count mismatches).
+        def step_identity(x, y, v, z, idx, pv0, sigma, lam, beta, gamma, alpha):
+            s, metrics = _identity_direction(
+                kernel_name, x, y, z, idx, pv0, sigma, lam, n_tile, use_pallas)
+            return _update(v, z, idx, s, beta, gamma, alpha, metrics)
+
+        return step_identity
+
+    def step(x, y, v, z, idx, omega, pv0, sigma, lam, damped, beta, gamma, alpha):
+        s, metrics = _direction(
+            kernel_name, x, y, z, idx, omega, pv0, sigma, lam, damped,
+            n_tile, use_pallas)
+        return _update(v, z, idx, s, beta, gamma, alpha, metrics)
+
+    return step
+
+
+def build_skotch_step(kernel_name, n_tile=None, use_pallas=True, identity=False):
+    """One Skotch iteration (Algorithm 2) — no acceleration sequences.
+
+    Signature:
+      (X, y, w, idx, omega, pv0, sigma, lam, damped) -> (w', metrics(4,))
+    """
+
+    if identity:
+        def step_identity(x, y, w, idx, pv0, sigma, lam):
+            s, metrics = _identity_direction(
+                kernel_name, x, y, w, idx, pv0, sigma, lam, n_tile, use_pallas)
+            return (w.at[idx].add(-s), metrics)
+
+        return step_identity
+
+    def step(x, y, w, idx, omega, pv0, sigma, lam, damped):
+        s, metrics = _direction(
+            kernel_name, x, y, w, idx, omega, pv0, sigma, lam, damped,
+            n_tile, use_pallas)
+        w1 = w.at[idx].add(-s)
+        return (w1, metrics)
+
+    return step
+
+
+def build_kmv(kernel_name, n_tile=None, use_pallas=True):
+    """K(X1, X2) @ v. Used for prediction, PCG/Falkon/EigenPro matvecs,
+    residual checks, and the Nystrom sketch of the full matrix.
+
+    Signature: (X1(b,d), X2(n,d), v(n), sigma) -> (out(b,),)
+    """
+
+    def op(x1, x2, v, sigma):
+        if use_pallas:
+            return (pk.kmv(kernel_name, x1, x2, v, sigma, n_tile=n_tile),)
+        return (kref.kmv(kernel_name, x1, x2, v, sigma),)
+
+    return op
+
+
+def build_kblock(kernel_name, use_pallas=True):
+    """Materialized K(X1, X1) block: BLESS inner sketches, Falkon K_mm,
+    EigenPro subsample eigensystem, test oracles.
+
+    Signature: (X1(b,d), sigma) -> (K(b,b),)
+    """
+
+    def op(x1, sigma):
+        if use_pallas:
+            return (pk.kblock(kernel_name, x1, sigma),)
+        return (kref.kblock(kernel_name, x1, sigma),)
+
+    return op
+
+
+# ---------------------------------------------------------------------------
+# Reference (host-side) implementations used by python tests: a numpy-level
+# ASkotch that the AOT'd step must match bit-for-bit in structure.
+# ---------------------------------------------------------------------------
+
+def accel_params(mu_hat, nu_hat):
+    """beta, gamma, alpha from (mu, nu) (Algorithms 1/3 preamble)."""
+    beta = 1.0 - (mu_hat / nu_hat) ** 0.5
+    gamma = 1.0 / (mu_hat * nu_hat) ** 0.5
+    alpha = 1.0 / (1.0 + gamma * nu_hat)
+    return beta, gamma, alpha
+
+
+def default_hyperparams(n, b, lam):
+    """Paper SS3.2 defaults: mu = lam, nu = n/b (clamped to validity)."""
+    mu_hat = min(lam, 1.0)
+    nu_hat = max(n / b, mu_hat)
+    # ensure mu * nu <= 1 as required
+    if mu_hat * nu_hat > 1.0:
+        mu_hat = 1.0 / nu_hat
+    return mu_hat, nu_hat

@@ -1,0 +1,99 @@
+"""Randomized Nystrom approximation in factored form (paper SS2.2, Alg. 4).
+
+Follows Tropp et al. (2017, Alg. 3) but keeps the approximation in the
+"B-factor" form `K_hat = B B^T` (B = Y C^{-1}) instead of the eigenform
+(U, Lambda): the eigenform needs an SVD, which is not available as plain
+HLO, while the B-form needs only Cholesky factorizations of r x r
+matrices. Both the inverse application and the smallest retained
+eigenvalue (for the paper's "damped" rho) are recovered from B:
+
+* (B B^T + rho I)^{-1} g  via Woodbury with the r x r core
+  (rho I_r + B^T B). This is exactly the paper's single-precision
+  stabilized Woodbury (Appendix A.1.1) in different coordinates: no
+  orthogonality of any factor is assumed.
+* lambda_r(K_hat) = lambda_min(B^T B), estimated by inverse powering.
+
+Perf note (EXPERIMENTS.md SPerf): the Woodbury core inverse is computed
+*explicitly once per step* (`linalg.chol_inverse_spd`) so the get_L
+powering loop and the projection apply run loop-free matmuls. Triangular
+solves per application would cost ~100 XLA while-loop trips each — the
+loop dispatch overhead, not flops, dominated the step before this change.
+
+Deviations (documented in DESIGN.md): the stabilizing shift
+Delta = eps * tr(K) is folded into K_hat instead of subtracted per
+eigenvalue (needs the SVD); Delta ~ 1e-6 * tr/b is negligible against
+rho >= lambda.
+"""
+
+import jax.numpy as jnp
+
+from . import linalg
+
+
+def nystrom_b_factor(kbb, omega):
+    """Nystrom sketch of an spd (b, b) matrix in B-factor form.
+
+    Args:
+      kbb: (b, b) spd matrix (a kernel block).
+      omega: (b, r) Gaussian test matrix (supplied by the rust RNG so the
+        lowered artifact stays deterministic).
+    Returns:
+      b_factor: (b, r) with K_hat = b_factor @ b_factor.T (rank-r approx).
+    """
+    b = kbb.shape[0]
+    eps = jnp.asarray(jnp.finfo(kbb.dtype).eps, kbb.dtype)
+    q = linalg.cgs2_orth(omega, passes=1)             # (b, r) orthonormal
+    shift = eps * jnp.trace(kbb)                      # Tropp's stability shift
+    y = kbb @ q + shift * q                           # (b, r) sketch, shifted
+    m = q.T @ y                                       # (r, r) spd core
+    # jitter must dominate the f32 rounding of the *largest* eigenvalue
+    # (~eps * lambda_1 <= eps * tr), not the mean one — smooth kernels make
+    # m numerically rank-deficient and under-jittered pivots blow up B.
+    core_jitter = 10.0 * eps * jnp.trace(m)
+    c = linalg.chol(m, jitter=core_jitter)            # lower: c c^T = m
+    return linalg.solve_lowerT_right(y, c)            # B = Y C^{-T}
+
+
+def woodbury_core_inv(b_factor, rho):
+    """Explicit (rho I + B^T B)^{-1}, computed once per iteration."""
+    r = b_factor.shape[1]
+    core = rho * jnp.eye(r, dtype=b_factor.dtype) + b_factor.T @ b_factor
+    return linalg.chol_inverse_spd(core)
+
+
+def woodbury_apply(b_factor, rho, core_inv, g):
+    """(B B^T + rho I)^{-1} g, loop-free given the core inverse."""
+    return (g - b_factor @ (core_inv @ (b_factor.T @ g))) / rho
+
+
+def woodbury_solve(b_factor, rho, g):
+    """One-shot (B B^T + rho I)^{-1} g (factorize + apply)."""
+    return woodbury_apply(b_factor, rho, woodbury_core_inv(b_factor, rho), g)
+
+
+def lambda_r(b_factor, v0, iters=10):
+    """Smallest retained eigenvalue lambda_r(K_hat) = lambda_min(B^T B).
+
+    `v0` may be longer than r (the rust side passes one b-length powering
+    vector for both uses); the first r entries seed the iteration.
+    """
+    r = b_factor.shape[1]
+    g = b_factor.T @ b_factor
+    return linalg.inv_power_min_eig(g, v0[:r], iters=iters)
+
+
+def precond_max_eig(kbb, lam, b_factor, rho, v0, iters=10, core_inv=None):
+    """L_PB = lambda_max((K_hat + rho I)^{-1/2} (K + lam I) (K_hat + rho I)^{-1/2}).
+
+    Computed as lambda_max of the *similar* matrix
+    (K_hat + rho I)^{-1} (K + lam I) by plain powering — same spectrum,
+    no matrix square root needed (get_L, paper Alg. 5, 10 iterations).
+    """
+    if core_inv is None:
+        core_inv = woodbury_core_inv(b_factor, rho)
+
+    def matvec(v):
+        hv = kbb @ v + lam * v
+        return woodbury_apply(b_factor, rho, core_inv, hv)
+
+    return linalg.power_max_eig(matvec, v0, iters=iters)

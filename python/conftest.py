@@ -1,0 +1,6 @@
+"""Make `pytest python/tests/` work from the repo root (tests import the
+`compile` package relative to python/)."""
+import pathlib
+import sys
+
+sys.path.insert(0, str(pathlib.Path(__file__).parent.resolve()))

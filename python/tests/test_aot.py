@@ -1,0 +1,51 @@
+"""AOT pipeline: lowered HLO must be self-contained plain HLO text."""
+
+import json
+from pathlib import Path
+
+import pytest
+
+from compile import aot, configs
+
+ARTIFACT_DIR = Path(__file__).resolve().parents[2] / "artifacts"
+
+
+def test_grid_is_consistent():
+    arts = list(configs.all_artifacts())
+    assert len(arts) == len({aot.artifact_filename(a) for a in arts}), "duplicate artifacts"
+    for a in arts:
+        if a["op"].endswith("step") or a["op"].endswith("identity"):
+            assert a["r"] <= a["b"], f"rank > blocksize in {a}"
+            assert a["n"] % 512 == 0, f"n must be tile-divisible: {a}"
+            assert a["b"] >= 32
+
+
+def test_lower_one_step_artifact_no_custom_calls(tmp_path):
+    art = {"op": "skotch_step", "kernel": "rbf", "n": 1024, "d": 8, "b": 32, "r": 8}
+    entry = aot.lower_one(art, tmp_path, force=True, src_mtime=0.0)
+    text = (tmp_path / entry["file"]).read_text()
+    assert text.startswith("HloModule")
+    low = text.lower()
+    assert "custom-call" not in low, "artifact contains custom calls (not loadable)"
+    assert "lapack" not in low
+
+
+def test_kmv_artifact_has_loop_structure(tmp_path):
+    art = {"op": "kmv", "kernel": "rbf", "n": 1024, "d": 8, "b": 512, "r": 0}
+    entry = aot.lower_one(art, tmp_path, force=True, src_mtime=0.0)
+    text = (tmp_path / entry["file"]).read_text()
+    assert "while" in text, "tiled kmv should lower to an XLA loop"
+    assert "custom-call" not in text.lower()
+
+
+@pytest.mark.skipif(not (ARTIFACT_DIR / "manifest.json").exists(),
+                    reason="run `make artifacts` first")
+def test_manifest_matches_directory():
+    manifest = json.loads((ARTIFACT_DIR / "manifest.json").read_text())
+    assert manifest["version"] == aot.MANIFEST_VERSION
+    files = {a["file"] for a in manifest["artifacts"]}
+    for f in files:
+        assert (ARTIFACT_DIR / f).exists(), f"missing artifact {f}"
+    # every grid entry is present
+    want = {aot.artifact_filename(a) for a in configs.all_artifacts()}
+    assert want <= files

@@ -1,0 +1,108 @@
+"""Pure-HLO linear algebra vs numpy (the routines inside the AOT'd step)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import linalg
+
+
+def spd(seed, n, cond=100.0):
+    rng = np.random.default_rng(seed)
+    q, _ = np.linalg.qr(rng.normal(size=(n, n)))
+    eigs = np.geomspace(1.0, 1.0 / cond, n)
+    return (q * eigs) @ q.T
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 2**16), n=st.integers(1, 24))
+def test_chol_matches_numpy(seed, n):
+    a = spd(seed, n).astype(np.float32)
+    l = np.asarray(linalg.chol(jnp.asarray(a)))
+    want = np.linalg.cholesky(a.astype(np.float64))
+    np.testing.assert_allclose(l, want, rtol=5e-3, atol=5e-4)
+
+
+def test_chol_reconstructs():
+    a = spd(3, 40).astype(np.float32)
+    l = np.asarray(linalg.chol(jnp.asarray(a)))
+    np.testing.assert_allclose(l @ l.T, a, rtol=1e-4, atol=1e-4)
+    assert np.allclose(np.triu(l, 1), 0.0), "factor must be lower triangular"
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 2**16), n=st.integers(1, 20))
+def test_triangular_solves(seed, n):
+    rng = np.random.default_rng(seed)
+    l = np.tril(rng.normal(size=(n, n))).astype(np.float32)
+    np.fill_diagonal(l, np.abs(np.diag(l)) + 1.0)
+    b = rng.normal(size=n).astype(np.float32)
+    x = np.asarray(linalg.solve_lower_vec(jnp.asarray(l), jnp.asarray(b)))
+    np.testing.assert_allclose(l @ x, b, rtol=1e-4, atol=1e-4)
+    xu = np.asarray(linalg.solve_upper_vec(jnp.asarray(l.T), jnp.asarray(b)))
+    np.testing.assert_allclose(l.T @ xu, b, rtol=1e-4, atol=1e-4)
+
+
+def test_chol_solve_vec():
+    a = spd(5, 16).astype(np.float32)
+    b = np.random.default_rng(5).normal(size=16).astype(np.float32)
+    l = linalg.chol(jnp.asarray(a))
+    x = np.asarray(linalg.chol_solve_vec(l, jnp.asarray(b)))
+    np.testing.assert_allclose(a @ x, b, rtol=2e-3, atol=2e-3)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**16), p=st.integers(4, 40), r=st.integers(1, 4))
+def test_solve_lowerT_right(seed, p, r):
+    rng = np.random.default_rng(seed)
+    l = np.tril(rng.normal(size=(r, r))).astype(np.float32)
+    np.fill_diagonal(l, np.abs(np.diag(l)) + 1.0)
+    y = rng.normal(size=(p, r)).astype(np.float32)
+    b = np.asarray(linalg.solve_lowerT_right(jnp.asarray(y), jnp.asarray(l)))
+    np.testing.assert_allclose(b @ l.T, y, rtol=1e-3, atol=1e-3)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**16), p=st.integers(8, 64), r=st.integers(1, 8))
+def test_cgs2_orthonormal(seed, p, r):
+    rng = np.random.default_rng(seed)
+    a = rng.normal(size=(p, r)).astype(np.float32)
+    q = np.asarray(linalg.cgs2_orth(jnp.asarray(a)))
+    np.testing.assert_allclose(q.T @ q, np.eye(r), atol=5e-5)
+    # same column space
+    proj = q @ (q.T @ a)
+    np.testing.assert_allclose(proj, a, rtol=1e-3, atol=1e-3)
+
+
+def test_cgs2_rank_deficient_stays_finite():
+    a = np.ones((10, 3), dtype=np.float32)  # rank 1
+    q = np.asarray(linalg.cgs2_orth(jnp.asarray(a)))
+    assert np.isfinite(q).all()
+
+
+def test_power_max_eig():
+    a = spd(9, 30, cond=50.0).astype(np.float32)
+    v0 = np.random.default_rng(9).normal(size=30).astype(np.float32)
+    lam = float(linalg.power_max_eig(lambda v: jnp.asarray(a) @ v, jnp.asarray(v0), iters=40))
+    want = np.linalg.eigvalsh(a.astype(np.float64)).max()
+    assert abs(lam - want) / want < 1e-3
+
+
+def test_inv_power_min_eig():
+    a = spd(11, 20, cond=30.0).astype(np.float32)
+    v0 = np.random.default_rng(11).normal(size=20).astype(np.float32)
+    lam = float(linalg.inv_power_min_eig(jnp.asarray(a), jnp.asarray(v0), iters=40))
+    want = np.linalg.eigvalsh(a.astype(np.float64)).min()
+    assert abs(lam - want) / want < 2e-2
+
+
+@pytest.mark.parametrize("fn", ["chol", "cgs2_orth"])
+def test_lowers_to_plain_hlo(fn):
+    """No LAPACK custom-calls may appear in the lowered HLO (the rust PJRT
+    client cannot execute them)."""
+    f = getattr(linalg, fn)
+    spec = jax.ShapeDtypeStruct((8, 8), jnp.float32)
+    text = jax.jit(f).lower(spec).compiler_ir("stablehlo")
+    assert "lapack" not in str(text).lower()

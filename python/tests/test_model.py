@@ -1,0 +1,169 @@
+"""The AOT'd step functions vs a plain-numpy reference of the paper's
+Algorithms 2 & 3, plus convergence sanity on tiny problems."""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model
+from compile.kernels import ref as kref
+
+
+@functools.lru_cache(maxsize=None)
+def jit_step(kind, identity=False):
+    """Compiled step functions, cached across tests (eager interpret-mode
+    pallas is orders of magnitude slower than the jitted artifact path)."""
+    if kind == "askotch":
+        return jax.jit(model.build_askotch_step("rbf", identity=identity))
+    return jax.jit(model.build_skotch_step("rbf", identity=identity))
+
+
+def make_problem(seed, n=256, d=4, sigma=1.5, lam=1e-3):
+    rng = np.random.default_rng(seed)
+    x = rng.normal(size=(n, d)).astype(np.float32)
+    w_true = rng.normal(size=n).astype(np.float32)
+    k = np.asarray(kref.kblock("rbf", jnp.asarray(x), sigma)).astype(np.float64)
+    y = (k + lam * np.eye(n)) @ w_true
+    return x, y.astype(np.float32), k, w_true
+
+
+def run_skotch(x, y, sigma, lam, iters, b, r, seed=0, accelerated=False):
+    n = x.shape[0]
+    rng = np.random.default_rng(seed)
+    step_fn = jit_step("askotch") if accelerated else jit_step("skotch")
+    w = np.zeros(n, np.float32)
+    v = w.copy()
+    z = w.copy()
+    mu, nu = model.default_hyperparams(n, b, lam)
+    beta, gamma, alpha = model.accel_params(mu, nu)
+    for _ in range(iters):
+        idx = rng.choice(n, size=b, replace=False).astype(np.int32)
+        omega = rng.normal(size=(b, r)).astype(np.float32)
+        pv0 = rng.normal(size=b).astype(np.float32)
+        if accelerated:
+            w, v, z, _ = step_fn(
+                jnp.asarray(x), jnp.asarray(y), jnp.asarray(v),
+                jnp.asarray(z), jnp.asarray(idx), jnp.asarray(omega),
+                jnp.asarray(pv0), jnp.float32(sigma), jnp.float32(lam),
+                jnp.float32(1.0), jnp.float32(beta), jnp.float32(gamma),
+                jnp.float32(alpha))
+            w, v, z = map(np.asarray, (w, v, z))
+        else:
+            w, _ = step_fn(
+                jnp.asarray(x), jnp.asarray(y), jnp.asarray(w),
+                jnp.asarray(idx), jnp.asarray(omega), jnp.asarray(pv0),
+                jnp.float32(sigma), jnp.float32(lam), jnp.float32(1.0))
+            w = np.asarray(w)
+    return w
+
+
+def relres(k, lam, w, y):
+    n = k.shape[0]
+    return np.linalg.norm((k + lam * np.eye(n)) @ w - y) / np.linalg.norm(y)
+
+
+@pytest.mark.parametrize("accelerated", [False, True])
+def test_solver_converges_linearly(accelerated):
+    x, y, k, _ = make_problem(0)
+    lam, sigma = 1e-3, 1.5
+    r0 = relres(k, lam, np.zeros_like(y), y)
+    w25 = run_skotch(x, y, sigma, lam, 25, b=64, r=32, accelerated=accelerated)
+    w50 = run_skotch(x, y, sigma, lam, 50, b=64, r=32, accelerated=accelerated)
+    r25, r50 = relres(k, lam, w25, y), relres(k, lam, w50, y)
+    assert r25 < 0.5 * r0, f"no progress: {r25} vs {r0}"
+    assert r50 < 0.7 * r25, f"not linear-ish: {r50} vs {r25}"
+
+
+def test_askotch_at_least_as_good_as_skotch():
+    """Paper Theorem 18: acceleration never hurts the bound; empirically
+    ASkotch should be at least comparable after equal iterations."""
+    x, y, k, _ = make_problem(3)
+    lam, sigma = 1e-3, 1.5
+    ws = run_skotch(x, y, sigma, lam, 60, b=64, r=32, accelerated=False)
+    wa = run_skotch(x, y, sigma, lam, 60, b=64, r=32, accelerated=True)
+    assert relres(k, lam, wa, y) < 3.0 * relres(k, lam, ws, y)
+
+
+def test_step_only_touches_block_for_skotch():
+    """Skotch's update is supported on the sampled block (I_B^T d)."""
+    x, y, _, _ = make_problem(5, n=128)
+    step = jit_step("skotch")
+    w0 = np.random.default_rng(5).normal(size=128).astype(np.float32)
+    idx = np.arange(0, 64, 2, dtype=np.int32)  # 32 indices
+    omega = np.random.default_rng(6).normal(size=(32, 8)).astype(np.float32)
+    pv0 = np.random.default_rng(7).normal(size=32).astype(np.float32)
+    w1, metrics = step(
+        jnp.asarray(x), jnp.asarray(y), jnp.asarray(w0), jnp.asarray(idx),
+        jnp.asarray(omega), jnp.asarray(pv0), jnp.float32(1.0),
+        jnp.float32(1e-3), jnp.float32(1.0))
+    w1 = np.asarray(w1)
+    mask = np.ones(128, bool)
+    mask[idx] = False
+    np.testing.assert_array_equal(w1[mask], w0[mask])
+    assert (w1[idx] != w0[idx]).any()
+    assert np.isfinite(np.asarray(metrics)).all()
+
+
+def test_metrics_are_sane():
+    x, y, _, _ = make_problem(8, n=128)
+    step = jit_step("skotch")
+    rng = np.random.default_rng(8)
+    idx = rng.choice(128, 32, replace=False).astype(np.int32)
+    omega = rng.normal(size=(32, 16)).astype(np.float32)
+    pv0 = rng.normal(size=32).astype(np.float32)
+    lam = 1e-3
+    _, metrics = step(
+        jnp.asarray(x), jnp.asarray(y), jnp.zeros(128, jnp.float32),
+        jnp.asarray(idx), jnp.asarray(omega), jnp.asarray(pv0),
+        jnp.float32(1.5), jnp.float32(lam), jnp.float32(1.0))
+    l_pb, rho, gnorm, lam_r = map(float, np.asarray(metrics))
+    assert l_pb >= 0.5, f"L_PB={l_pb} (should be ~>=1 for damped rho)"
+    assert rho >= lam - 1e-9, "damped rho must be >= lam"
+    assert lam_r >= -1e-6
+    assert gnorm > 0
+
+
+def test_identity_ablation_converges_slower():
+    """Paper SS6.4: replacing the Nystrom projector with the identity
+    degrades convergence."""
+    x, y, k, _ = make_problem(11)
+    lam, sigma = 1e-3, 1.5
+    n = 256
+
+    def run(identity):
+        rng = np.random.default_rng(4)
+        step = jit_step("skotch", identity)
+        w = np.zeros(n, np.float32)
+        for _ in range(30):
+            idx = rng.choice(n, 64, replace=False).astype(np.int32)
+            omega = rng.normal(size=(64, 32)).astype(np.float32)
+            pv0 = rng.normal(size=64).astype(np.float32)
+            if identity:
+                w, _ = step(jnp.asarray(x), jnp.asarray(y), jnp.asarray(w),
+                            jnp.asarray(idx), jnp.asarray(pv0),
+                            jnp.float32(sigma), jnp.float32(lam))
+            else:
+                w, _ = step(jnp.asarray(x), jnp.asarray(y), jnp.asarray(w),
+                            jnp.asarray(idx), jnp.asarray(omega), jnp.asarray(pv0),
+                            jnp.float32(sigma), jnp.float32(lam), jnp.float32(1.0))
+            w = np.asarray(w)
+        return relres(k, lam, w, y)
+
+    assert run(identity=False) < run(identity=True)
+
+
+def test_accel_params_validity():
+    beta, gamma, alpha = model.accel_params(*model.default_hyperparams(10_000, 100, 1e-5))
+    assert 0.0 < beta < 1.0
+    assert gamma > 0.0
+    assert 0.0 < alpha < 1.0
+
+
+def test_default_hyperparams_constraints():
+    for n, b, lam in [(1000, 10, 1e-6), (100, 100, 0.5), (10**6, 10**4, 2.0)]:
+        mu, nu = model.default_hyperparams(n, b, lam)
+        assert mu <= nu
+        assert mu * nu <= 1.0 + 1e-9

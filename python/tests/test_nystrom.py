@@ -1,0 +1,93 @@
+"""Nystrom B-factor approximation vs exact dense linear algebra."""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile import nystrom
+from compile.kernels import ref as kref
+
+
+def kernel_block(seed, b, d=6, sigma=2.0):
+    rng = np.random.default_rng(seed)
+    x = rng.normal(size=(b, d)).astype(np.float32)
+    return np.asarray(kref.kblock("rbf", jnp.asarray(x), sigma))
+
+
+def omega(seed, b, r):
+    return np.random.default_rng(seed + 999).normal(size=(b, r)).astype(np.float32)
+
+
+def test_b_factor_low_rank_accuracy():
+    """With rank ~ numerical rank, K_hat must be a tight approximation."""
+    kbb = kernel_block(0, 96, d=3, sigma=3.0)  # smooth kernel: fast decay
+    b_factor = np.asarray(nystrom.nystrom_b_factor(jnp.asarray(kbb), jnp.asarray(omega(0, 96, 40))))
+    khat = b_factor @ b_factor.T
+    err = np.linalg.norm(kbb - khat, 2)
+    # Nystrom error is bounded by O(lambda_{r+1}); for this setup tiny.
+    eigs = np.linalg.eigvalsh(kbb.astype(np.float64))[::-1]
+    assert err < 50 * max(eigs[40], 1e-7) + 1e-4, f"err={err}, eig_r={eigs[40]}"
+
+
+def test_b_factor_is_psd_underestimate():
+    """Nystrom approximations satisfy 0 <= K_hat <= K (up to the tiny
+    stabilization shift)."""
+    kbb = kernel_block(1, 64, d=8, sigma=1.0)
+    bf = np.asarray(nystrom.nystrom_b_factor(jnp.asarray(kbb), jnp.asarray(omega(1, 64, 16))))
+    khat = (bf @ bf.T).astype(np.float64)
+    gap_eigs = np.linalg.eigvalsh(kbb.astype(np.float64) - khat)
+    assert gap_eigs.min() > -1e-3, f"K - K_hat not psd: {gap_eigs.min()}"
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**12), b=st.sampled_from([32, 64]),
+       r=st.sampled_from([8, 16]), rho=st.floats(1e-3, 1.0))
+def test_woodbury_matches_dense_solve(seed, b, r, rho):
+    kbb = kernel_block(seed, b)
+    bf = np.asarray(nystrom.nystrom_b_factor(jnp.asarray(kbb), jnp.asarray(omega(seed, b, r))))
+    g = np.random.default_rng(seed).normal(size=b).astype(np.float32)
+    got = np.asarray(nystrom.woodbury_solve(jnp.asarray(bf), jnp.float32(rho), jnp.asarray(g)))
+    dense = (bf.astype(np.float64) @ bf.T.astype(np.float64)
+             + rho * np.eye(b))
+    want = np.linalg.solve(dense, g.astype(np.float64))
+    np.testing.assert_allclose(got, want, rtol=5e-3, atol=5e-3)
+
+
+def test_lambda_r_matches_dense():
+    kbb = kernel_block(7, 80, d=8, sigma=1.0)
+    r = 20
+    bf = np.asarray(nystrom.nystrom_b_factor(jnp.asarray(kbb), jnp.asarray(omega(7, 80, r))))
+    pv0 = np.random.default_rng(7).normal(size=80).astype(np.float32)
+    got = float(nystrom.lambda_r(jnp.asarray(bf), jnp.asarray(pv0), iters=40))
+    want = np.linalg.eigvalsh(bf.astype(np.float64).T @ bf.astype(np.float64)).min()
+    assert abs(got - want) <= 0.05 * abs(want) + 1e-5
+
+
+def test_precond_max_eig_matches_dense():
+    kbb = kernel_block(9, 64, d=8, sigma=1.0)
+    lam, rho = 1e-3, 1e-2
+    bf = np.asarray(nystrom.nystrom_b_factor(jnp.asarray(kbb), jnp.asarray(omega(9, 64, 16))))
+    pv0 = np.random.default_rng(9).normal(size=64).astype(np.float32)
+    got = float(nystrom.precond_max_eig(
+        jnp.asarray(kbb), jnp.float32(lam), jnp.asarray(bf), jnp.float32(rho),
+        jnp.asarray(pv0), iters=60))
+    khat = bf.astype(np.float64) @ bf.T.astype(np.float64)
+    c = np.linalg.solve(khat + rho * np.eye(64), kbb.astype(np.float64) + lam * np.eye(64))
+    want = np.linalg.eigvals(c).real.max()
+    assert abs(got - want) / want < 0.05, f"{got} vs {want}"
+
+
+def test_precond_shrinks_condition_number():
+    """The whole point of the Nystrom projector: kappa(P^-1 H) << kappa(H)."""
+    kbb = kernel_block(13, 96, d=4, sigma=2.0)
+    lam = 1e-4
+    bf = np.asarray(nystrom.nystrom_b_factor(jnp.asarray(kbb), jnp.asarray(omega(13, 96, 32))))
+    khat = bf.astype(np.float64) @ bf.T.astype(np.float64)
+    h = kbb.astype(np.float64) + lam * np.eye(96)
+    rho = lam + np.linalg.eigvalsh(khat).max() * 1e-6
+    pinv_h = np.linalg.solve(khat + rho * np.eye(96), h)
+    eigs = np.sort(np.linalg.eigvals(pinv_h).real)
+    kappa_pre = eigs[-1] / eigs[0]
+    eigs_h = np.linalg.eigvalsh(h)
+    kappa_raw = eigs_h[-1] / eigs_h[0]
+    assert kappa_pre < kappa_raw / 50, f"{kappa_pre} !<< {kappa_raw}"

@@ -1,0 +1,142 @@
+"""Spot-checks of the paper's theory (SS5) on small exact instances.
+
+These are numerical verifications of the *statements*, not the proofs:
+  * Lemma 6/10 flavor: under exact ridge-leverage-score sampling, the
+    expected SAP projection matrix dominates ~ A(A + lam I)^{-1} / 2.
+  * Lemma 8: the stepsize-normalized approximate projection is sandwiched,
+    (sigma/L) Pi <= Pi_hat <= Pi, for concrete Nystrom draws.
+  * Theorem 18's contraction: one exact-arithmetic Skotch step contracts
+    E||w - w*||_{K_lam} with a factor bounded away from 1.
+"""
+
+import numpy as np
+import pytest
+
+from compile.kernels import ref as kref
+import jax.numpy as jnp
+
+
+def kernel_mat(seed, n, d=3, sigma=2.0):
+    rng = np.random.default_rng(seed)
+    x = rng.normal(size=(n, d)).astype(np.float64)
+    return np.asarray(kref.kblock("rbf", jnp.asarray(x), sigma)).astype(np.float64)
+
+
+def rls(a, lam):
+    n = a.shape[0]
+    return np.diag(a @ np.linalg.inv(a + lam * np.eye(n)))
+
+
+def projection(a_half, idx):
+    """Pi_B = A^{1/2} I_B^T (I_B A I_B^T)^+ I_B A^{1/2}."""
+    s = a_half[idx, :]  # I_B A^{1/2}
+    core = s @ s.T
+    return s.T @ np.linalg.pinv(core) @ s
+
+
+def sqrtm_psd(a):
+    w, v = np.linalg.eigh(a)
+    w = np.clip(w, 0.0, None)
+    return (v * np.sqrt(w)) @ v.T
+
+
+def test_expected_projection_dominates_ridge_resolvent():
+    """Monte-Carlo version of Lemma 10's conclusion (12) at tiny n."""
+    n, b, lam = 10, 5, 0.5
+    a = kernel_mat(0, n) + lam * np.eye(n)  # A = K_lambda, pd
+    a_half = sqrtm_psd(a)
+    scores = rls(a, lam_bar := 1.0)
+    probs = scores / scores.sum()
+    rng = np.random.default_rng(1)
+    acc = np.zeros((n, n))
+    trials = 3000
+    for _ in range(trials):
+        idx = np.unique(rng.choice(n, size=b, replace=True, p=probs))
+        acc += projection(a_half, idx)
+    e_pi = acc / trials
+    target = 0.5 * a @ np.linalg.inv(a + lam_bar * np.eye(n))
+    gap_eigs = np.linalg.eigvalsh(e_pi - target)
+    assert gap_eigs.min() > -0.05, f"E[Pi] does not dominate: {gap_eigs.min()}"
+
+
+def test_lemma8_sandwich():
+    """(sigma/L) Pi <= Pi_hat <= Pi for concrete Nystrom draws."""
+    rng = np.random.default_rng(2)
+    n, b, r, lam = 16, 8, 4, 1e-2
+    k = kernel_mat(3, n)
+    k_lam_half = sqrtm_psd(k + lam * np.eye(n))
+    for trial in range(10):
+        idx = np.sort(rng.choice(n, size=b, replace=False))
+        kbb = k[np.ix_(idx, idx)]
+        # Nystrom via random projection
+        omega = rng.normal(size=(b, r))
+        y = kbb @ omega
+        khat = y @ np.linalg.pinv(omega.T @ y) @ y.T
+        khat = 0.5 * (khat + khat.T)
+        rho = lam + max(np.linalg.eigvalsh(khat)[-r], 0.0)
+        reg_inv = np.linalg.inv(khat + rho * np.eye(b))
+        m = sqrtm_psd(kbb + lam * np.eye(b))
+        precond = m @ reg_inv @ m
+        eigs = np.linalg.eigvalsh(precond)
+        sigma_pb, l_pb = eigs[0], eigs[-1]
+        l_hat = max(1.0, l_pb)
+
+        sel = np.zeros((b, n))
+        sel[np.arange(b), idx] = 1.0
+        mid = sel.T @ reg_inv @ sel
+        pi_hat = (1.0 / l_hat) * k_lam_half @ mid @ k_lam_half
+        pi = projection(k_lam_half, idx)
+
+        up = np.linalg.eigvalsh(pi - pi_hat)
+        lo = np.linalg.eigvalsh(pi_hat - (sigma_pb / l_hat) * pi)
+        assert up.min() > -1e-8, f"trial {trial}: Pi_hat !<= Pi ({up.min()})"
+        assert lo.min() > -1e-8, f"trial {trial}: lower sandwich fails ({lo.min()})"
+
+
+def test_one_skotch_step_contracts_in_expectation():
+    """E||w' - w*||^2_{K_lam} <= (1 - mu_hat) ||w - w*||^2 empirically."""
+    rng = np.random.default_rng(4)
+    n, b, r, lam = 14, 7, 5, 0.05
+    k = kernel_mat(5, n)
+    k_lam = k + lam * np.eye(n)
+    w_star = rng.normal(size=n)
+    y = k_lam @ w_star
+    w0 = np.zeros(n)
+
+    def skotch_step(w, idx):
+        kbb = k[np.ix_(idx, idx)]
+        omega = rng.normal(size=(len(idx), r))
+        yk = kbb @ omega
+        khat = yk @ np.linalg.pinv(omega.T @ yk) @ yk.T
+        khat = 0.5 * (khat + khat.T)
+        rho = lam + max(np.linalg.eigvalsh(khat)[-min(r, len(idx))], 0.0)
+        reg_inv = np.linalg.inv(khat + rho * np.eye(len(idx)))
+        m = sqrtm_psd(kbb + lam * np.eye(len(idx)))
+        l_pb = np.linalg.eigvalsh(m @ reg_inv @ m)[-1]
+        g = k_lam[idx, :] @ w - y[idx]
+        d = reg_inv @ g / max(l_pb, 1.0)
+        w1 = w.copy()
+        w1[idx] -= d
+        return w1
+
+    def err(w):
+        e = w - w_star
+        return e @ (k_lam @ e)
+
+    e0 = err(w0)
+    ratios = []
+    for _ in range(300):
+        idx = np.sort(rng.choice(n, size=b, replace=False))
+        ratios.append(err(skotch_step(w0, idx)) / e0)
+    mean_ratio = np.mean(ratios)
+    assert mean_ratio < 0.95, f"no expected contraction: {mean_ratio}"
+    assert mean_ratio > 0.0
+
+
+@pytest.mark.parametrize("lam", [1e-3, 1e-1, 1.0])
+def test_effective_dimension_monotone_in_lam(lam):
+    a = kernel_mat(7, 20)
+    d1 = rls(a, lam).sum()
+    d2 = rls(a, lam * 10).sum()
+    assert d2 < d1
+    assert 0 < d1 <= 20

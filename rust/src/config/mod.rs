@@ -1,0 +1,335 @@
+//! Experiment configuration: kernels, solvers, datasets, budgets.
+//!
+//! Configs are plain JSON (parsed with `util::json`); every example and
+//! bench builds its `ExperimentConfig` either programmatically or from a
+//! file via [`ExperimentConfig::from_json`].
+
+use crate::util::json::{self, Json};
+
+/// Kernel function (paper SC.1).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum KernelKind {
+    Rbf,
+    Laplacian,
+    Matern52,
+}
+
+impl KernelKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            KernelKind::Rbf => "rbf",
+            KernelKind::Laplacian => "laplacian",
+            KernelKind::Matern52 => "matern52",
+        }
+    }
+
+    pub fn parse(s: &str) -> anyhow::Result<KernelKind> {
+        match s {
+            "rbf" => Ok(KernelKind::Rbf),
+            "laplacian" => Ok(KernelKind::Laplacian),
+            "matern52" | "matern" => Ok(KernelKind::Matern52),
+            _ => anyhow::bail!("unknown kernel {s:?} (rbf|laplacian|matern52)"),
+        }
+    }
+}
+
+/// How to choose the bandwidth sigma.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum BandwidthSpec {
+    /// Defer to the dataset's recommended bandwidth (mirrors the paper's
+    /// per-dataset Table 3 values).
+    Auto,
+    /// Median pairwise distance heuristic (Gretton et al. 2012), estimated
+    /// on a subsample.
+    Median,
+    /// Median heuristic scaled by a factor (the paper's per-dataset sigmas
+    /// are effectively scaled medians; larger factors = smoother kernels,
+    /// the d_eff = O(sqrt n) regime Corollary 19 assumes).
+    MedianTimes(f64),
+    /// sqrt(d) (the sGDML/molecule convention in the paper).
+    SqrtDim,
+    /// Fixed value.
+    Fixed(f64),
+}
+
+impl BandwidthSpec {
+    pub fn parse(s: &str) -> anyhow::Result<BandwidthSpec> {
+        if let Some(f) = s.strip_prefix("medianx") {
+            return f
+                .parse::<f64>()
+                .map(BandwidthSpec::MedianTimes)
+                .map_err(|_| anyhow::anyhow!("bad bandwidth {s:?}"));
+        }
+        match s {
+            "auto" => Ok(BandwidthSpec::Auto),
+            "median" => Ok(BandwidthSpec::Median),
+            "sqrtd" => Ok(BandwidthSpec::SqrtDim),
+            other => other
+                .parse::<f64>()
+                .map(BandwidthSpec::Fixed)
+                .map_err(|_| anyhow::anyhow!("bad bandwidth {other:?}")),
+        }
+    }
+}
+
+/// Which solver to run.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum SolverKind {
+    Askotch,
+    Skotch,
+    /// Ablation: identity projector instead of the Nystrom approximation.
+    AskotchIdentity,
+    SkotchIdentity,
+    /// Full-KRR Nystrom-preconditioned conjugate gradient.
+    Pcg,
+    /// Inducing-points KRR (Falkon-style PCG on the normal equations).
+    Falkon,
+    /// EigenPro-2.0-style preconditioned SGD on full KRR (lambda = 0).
+    EigenPro,
+    /// Exact dense Cholesky (small n reference).
+    Cholesky,
+}
+
+impl SolverKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            SolverKind::Askotch => "askotch",
+            SolverKind::Skotch => "skotch",
+            SolverKind::AskotchIdentity => "askotch-identity",
+            SolverKind::SkotchIdentity => "skotch-identity",
+            SolverKind::Pcg => "pcg",
+            SolverKind::Falkon => "falkon",
+            SolverKind::EigenPro => "eigenpro",
+            SolverKind::Cholesky => "cholesky",
+        }
+    }
+
+    pub fn parse(s: &str) -> anyhow::Result<SolverKind> {
+        match s {
+            "askotch" => Ok(SolverKind::Askotch),
+            "skotch" => Ok(SolverKind::Skotch),
+            "askotch-identity" => Ok(SolverKind::AskotchIdentity),
+            "skotch-identity" => Ok(SolverKind::SkotchIdentity),
+            "pcg" => Ok(SolverKind::Pcg),
+            "falkon" => Ok(SolverKind::Falkon),
+            "eigenpro" => Ok(SolverKind::EigenPro),
+            "cholesky" => Ok(SolverKind::Cholesky),
+            _ => anyhow::bail!("unknown solver {s:?}"),
+        }
+    }
+
+    pub fn all() -> &'static [SolverKind] {
+        &[
+            SolverKind::Askotch,
+            SolverKind::Skotch,
+            SolverKind::AskotchIdentity,
+            SolverKind::SkotchIdentity,
+            SolverKind::Pcg,
+            SolverKind::Falkon,
+            SolverKind::EigenPro,
+            SolverKind::Cholesky,
+        ]
+    }
+
+    /// Solves the *full* KRR problem (Table 1, column "Full KRR?").
+    pub fn is_full_krr(self) -> bool {
+        !matches!(self, SolverKind::Falkon)
+    }
+}
+
+/// Block coordinate sampling distribution (paper SS3.1).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SamplingScheme {
+    Uniform,
+    /// Approximate ridge leverage scores via BLESS.
+    Arls,
+}
+
+impl SamplingScheme {
+    pub fn parse(s: &str) -> anyhow::Result<SamplingScheme> {
+        match s {
+            "uniform" => Ok(SamplingScheme::Uniform),
+            "arls" | "rls" => Ok(SamplingScheme::Arls),
+            _ => anyhow::bail!("unknown sampling scheme {s:?}"),
+        }
+    }
+}
+
+/// rho selection (paper SS6 "Optimizer hyperparameters").
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RhoMode {
+    /// rho = lam + lambda_r(K_hat_BB)  (the default, "damped").
+    Damped,
+    /// rho = lam ("regularization").
+    Regularization,
+}
+
+impl RhoMode {
+    pub fn as_scalar(self) -> f32 {
+        match self {
+            RhoMode::Damped => 1.0,
+            RhoMode::Regularization => 0.0,
+        }
+    }
+}
+
+/// A fully-specified experiment.
+#[derive(Debug, Clone)]
+pub struct ExperimentConfig {
+    pub name: String,
+    pub dataset: String,
+    pub n: usize,
+    pub d: usize,
+    pub kernel: KernelKind,
+    pub bandwidth: BandwidthSpec,
+    /// Unscaled regularization; effective lambda = n * lam_unscaled.
+    pub lam_unscaled: f64,
+    pub solver: SolverKind,
+    pub sampling: SamplingScheme,
+    pub rho: RhoMode,
+    pub rank: usize,
+    pub seed: u64,
+    pub max_iters: usize,
+    pub time_limit_secs: f64,
+    /// Track the O(n^2) relative residual at eval points.
+    pub track_residual: bool,
+}
+
+impl Default for ExperimentConfig {
+    fn default() -> Self {
+        ExperimentConfig {
+            name: "experiment".into(),
+            dataset: "taxi_like".into(),
+            n: 2048,
+            d: 9,
+            kernel: KernelKind::Rbf,
+            bandwidth: BandwidthSpec::Auto,
+            lam_unscaled: 1e-6,
+            solver: SolverKind::Askotch,
+            sampling: SamplingScheme::Uniform,
+            rho: RhoMode::Damped,
+            rank: 20,
+            seed: 0,
+            max_iters: 500,
+            time_limit_secs: 600.0,
+            track_residual: false,
+        }
+    }
+}
+
+impl ExperimentConfig {
+    /// Parse from a JSON object; missing fields fall back to defaults.
+    pub fn from_json(text: &str) -> anyhow::Result<ExperimentConfig> {
+        let v = json::parse(text).map_err(|e| anyhow::anyhow!("config parse: {e}"))?;
+        let mut c = ExperimentConfig::default();
+        let gs = |k: &str| v.get(k).and_then(Json::as_str).map(str::to_string);
+        if let Some(s) = gs("name") {
+            c.name = s;
+        }
+        if let Some(s) = gs("dataset") {
+            c.dataset = s;
+        }
+        if let Some(x) = v.get("n").and_then(Json::as_usize) {
+            c.n = x;
+        }
+        if let Some(x) = v.get("d").and_then(Json::as_usize) {
+            c.d = x;
+        }
+        if let Some(s) = gs("kernel") {
+            c.kernel = KernelKind::parse(&s)?;
+        }
+        if let Some(s) = gs("bandwidth") {
+            c.bandwidth = BandwidthSpec::parse(&s)?;
+        }
+        if let Some(x) = v.get("lam_unscaled").and_then(Json::as_f64) {
+            c.lam_unscaled = x;
+        }
+        if let Some(s) = gs("solver") {
+            c.solver = SolverKind::parse(&s)?;
+        }
+        if let Some(s) = gs("sampling") {
+            c.sampling = SamplingScheme::parse(&s)?;
+        }
+        if let Some(s) = gs("rho") {
+            c.rho = match s.as_str() {
+                "damped" => RhoMode::Damped,
+                "regularization" => RhoMode::Regularization,
+                _ => anyhow::bail!("unknown rho mode {s:?}"),
+            };
+        }
+        if let Some(x) = v.get("rank").and_then(Json::as_usize) {
+            c.rank = x;
+        }
+        if let Some(x) = v.get("seed").and_then(Json::as_f64) {
+            c.seed = x as u64;
+        }
+        if let Some(x) = v.get("max_iters").and_then(Json::as_usize) {
+            c.max_iters = x;
+        }
+        if let Some(x) = v.get("time_limit_secs").and_then(Json::as_f64) {
+            c.time_limit_secs = x;
+        }
+        if let Some(b) = v.get("track_residual").and_then(Json::as_bool) {
+            c.track_residual = b;
+        }
+        Ok(c)
+    }
+
+    /// Effective regularization lambda = n * lam_unscaled (paper SC.2.1).
+    pub fn lam(&self) -> f64 {
+        self.n as f64 * self.lam_unscaled
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kernel_roundtrip() {
+        for k in [KernelKind::Rbf, KernelKind::Laplacian, KernelKind::Matern52] {
+            assert_eq!(KernelKind::parse(k.name()).unwrap(), k);
+        }
+        assert!(KernelKind::parse("poly").is_err());
+    }
+
+    #[test]
+    fn solver_roundtrip() {
+        for &s in SolverKind::all() {
+            assert_eq!(SolverKind::parse(s.name()).unwrap(), s);
+        }
+    }
+
+    #[test]
+    fn config_from_json() {
+        let c = ExperimentConfig::from_json(
+            r#"{"name":"t","n":4096,"kernel":"matern52","solver":"pcg",
+                "lam_unscaled":1e-8,"rank":50,"rho":"regularization"}"#,
+        )
+        .unwrap();
+        assert_eq!(c.n, 4096);
+        assert_eq!(c.kernel, KernelKind::Matern52);
+        assert_eq!(c.solver, SolverKind::Pcg);
+        assert_eq!(c.rho, RhoMode::Regularization);
+        assert!((c.lam() - 4096.0 * 1e-8).abs() < 1e-12);
+    }
+
+    #[test]
+    fn bad_config_rejected() {
+        assert!(ExperimentConfig::from_json(r#"{"kernel":"poly"}"#).is_err());
+        assert!(ExperimentConfig::from_json("not json").is_err());
+    }
+
+    #[test]
+    fn bandwidth_parse() {
+        assert_eq!(BandwidthSpec::parse("median").unwrap(), BandwidthSpec::Median);
+        assert_eq!(BandwidthSpec::parse("2.5").unwrap(), BandwidthSpec::Fixed(2.5));
+        assert!(BandwidthSpec::parse("wat").is_err());
+    }
+
+    #[test]
+    fn falkon_is_not_full_krr() {
+        assert!(!SolverKind::Falkon.is_full_krr());
+        assert!(SolverKind::Askotch.is_full_krr());
+    }
+}

@@ -1,0 +1,75 @@
+//! The Layer-3 coordinator: problems, budgets, shared runtime helpers
+//! (prediction / residual through the artifacts), and experiment
+//! orchestration.
+
+pub mod problem;
+pub mod runtime_ops;
+
+pub use problem::{Budget, KrrProblem, SolveReport};
+
+use crate::config::{ExperimentConfig, SolverKind};
+use crate::data::{synthetic, Dataset};
+use crate::runtime::Engine;
+use crate::solvers;
+
+/// Builds problems from configs and dispatches solvers — the entry point
+/// used by the CLI, examples, and the bench harness.
+pub struct Coordinator<'e> {
+    pub engine: &'e Engine,
+}
+
+impl<'e> Coordinator<'e> {
+    pub fn new(engine: &'e Engine) -> Self {
+        Coordinator { engine }
+    }
+
+    /// Materialize the dataset named in a config.
+    pub fn dataset(cfg: &ExperimentConfig) -> anyhow::Result<Dataset> {
+        let ds = match cfg.dataset.as_str() {
+            "taxi_like" => synthetic::taxi_like(cfg.n, cfg.d, cfg.seed),
+            "vision_like" => synthetic::vision_like("vision_like", cfg.n, cfg.d, 10, cfg.seed),
+            "physics_like" => synthetic::physics_like("physics_like", cfg.n, cfg.d, 0.1, cfg.seed),
+            "tabular_like" => synthetic::tabular_like("tabular_like", cfg.n, cfg.d, cfg.seed),
+            "molecule_like" => synthetic::molecule_like("molecule_like", cfg.n, (cfg.d / 3).max(2), cfg.seed),
+            "social_like" => synthetic::social_like("social_like", cfg.n, cfg.d, cfg.seed),
+            path if path.ends_with(".csv") => {
+                let mut ds = crate::data::csv::load(path, -1, true)?;
+                ds.kernel = cfg.kernel;
+                ds
+            }
+            other => anyhow::bail!("unknown dataset {other:?}"),
+        };
+        Ok(ds)
+    }
+
+    /// Build the KRR problem a config describes (standardize, split,
+    /// resolve bandwidth, scale lambda).
+    pub fn problem(&self, cfg: &ExperimentConfig) -> anyhow::Result<KrrProblem> {
+        let ds = Self::dataset(cfg)?.standardized();
+        KrrProblem::from_dataset(ds, cfg.kernel, cfg.bandwidth, cfg.lam_unscaled, cfg.seed)
+    }
+
+    /// Instantiate the solver a config selects.
+    pub fn solver(&self, cfg: &ExperimentConfig) -> Box<dyn solvers::Solver> {
+        match cfg.solver {
+            SolverKind::Askotch | SolverKind::AskotchIdentity => Box::new(
+                solvers::askotch::AskotchSolver::from_config(cfg, /*accelerated=*/ true),
+            ),
+            SolverKind::Skotch | SolverKind::SkotchIdentity => Box::new(
+                solvers::askotch::AskotchSolver::from_config(cfg, /*accelerated=*/ false),
+            ),
+            SolverKind::Pcg => Box::new(solvers::pcg::PcgSolver::from_config(cfg)),
+            SolverKind::Falkon => Box::new(solvers::falkon::FalkonSolver::from_config(cfg)),
+            SolverKind::EigenPro => Box::new(solvers::eigenpro::EigenProSolver::from_config(cfg)),
+            SolverKind::Cholesky => Box::new(solvers::cholesky::CholeskySolver::new()),
+        }
+    }
+
+    /// Run one experiment end to end.
+    pub fn run(&self, cfg: &ExperimentConfig) -> anyhow::Result<SolveReport> {
+        let problem = self.problem(cfg)?;
+        let mut solver = self.solver(cfg);
+        let budget = Budget { max_iters: cfg.max_iters, time_limit_secs: cfg.time_limit_secs };
+        solver.run(self.engine, &problem, &budget)
+    }
+}

@@ -1,0 +1,147 @@
+//! Problem and report types shared by every solver.
+
+use crate::config::{BandwidthSpec, KernelKind};
+use crate::data::{preprocess, Dataset, TaskKind};
+use crate::metrics::Trace;
+
+/// A fully-materialized full-KRR problem: standardized train/test split,
+/// resolved bandwidth, scaled regularization.
+#[derive(Debug, Clone)]
+pub struct KrrProblem {
+    pub name: String,
+    pub task: TaskKind,
+    pub train: Dataset,
+    pub test: Dataset,
+    pub kernel: KernelKind,
+    pub sigma: f64,
+    /// Effective lambda (already scaled by n).
+    pub lam: f64,
+}
+
+impl KrrProblem {
+    /// Standard construction mirroring the paper's SC.2 protocol:
+    /// 0.8/0.2 split, median-heuristic or sqrt(d) bandwidth,
+    /// `lam = n_train * lam_unscaled`.
+    pub fn from_dataset(
+        ds: Dataset,
+        kernel: KernelKind,
+        bandwidth: BandwidthSpec,
+        lam_unscaled: f64,
+        seed: u64,
+    ) -> anyhow::Result<KrrProblem> {
+        anyhow::ensure!(ds.n >= 16, "dataset too small: {}", ds.n);
+        let (train, test) = ds.split(0.2, seed);
+        let bandwidth = match bandwidth {
+            BandwidthSpec::Auto => train.bandwidth,
+            other => other,
+        };
+        let median = || {
+            preprocess::median_bandwidth(
+                &train.x,
+                train.n,
+                train.d,
+                kernel == KernelKind::Laplacian,
+                2000,
+                seed,
+            )
+        };
+        let sigma = match bandwidth {
+            BandwidthSpec::Fixed(s) => s,
+            BandwidthSpec::SqrtDim => (train.d as f64).sqrt(),
+            BandwidthSpec::Median | BandwidthSpec::Auto => median(),
+            BandwidthSpec::MedianTimes(f) => f * median(),
+        };
+        anyhow::ensure!(sigma > 0.0, "bandwidth must be positive");
+        let lam = (train.n as f64) * lam_unscaled;
+        Ok(KrrProblem { name: train.name.replace(":train", ""), task: train.task, train, test, kernel, sigma, lam })
+    }
+
+    /// Convenience for tests/examples that already have a split.
+    pub fn from_parts(
+        train: Dataset,
+        test: Dataset,
+        kernel: KernelKind,
+        sigma: f64,
+        lam: f64,
+    ) -> KrrProblem {
+        KrrProblem { name: train.name.clone(), task: train.task, train, test, kernel, sigma, lam }
+    }
+
+    pub fn n(&self) -> usize {
+        self.train.n
+    }
+
+    pub fn d(&self) -> usize {
+        self.train.d
+    }
+}
+
+/// Iteration/time budget for a solve.
+#[derive(Debug, Clone, Copy)]
+pub struct Budget {
+    pub max_iters: usize,
+    pub time_limit_secs: f64,
+}
+
+impl Budget {
+    pub fn iterations(max_iters: usize) -> Budget {
+        Budget { max_iters, time_limit_secs: f64::INFINITY }
+    }
+
+    pub fn seconds(time_limit_secs: f64) -> Budget {
+        Budget { max_iters: usize::MAX, time_limit_secs }
+    }
+
+    pub fn exhausted(&self, iters: usize, elapsed_secs: f64) -> bool {
+        iters >= self.max_iters || elapsed_secs >= self.time_limit_secs
+    }
+}
+
+/// Outcome of one solve.
+#[derive(Debug, Clone)]
+pub struct SolveReport {
+    pub solver: String,
+    pub problem: String,
+    pub task: TaskKind,
+    pub iters: usize,
+    pub wall_secs: f64,
+    pub trace: Trace,
+    /// Final task metric on the test set (accuracy or MAE).
+    pub final_metric: f64,
+    /// Final relative residual (NaN if never evaluated).
+    pub final_residual: f64,
+    /// Learned weights (length n for full KRR, m for inducing points).
+    pub weights: Vec<f64>,
+    /// Peak explicitly-allocated solver state in bytes (Table 1/2
+    /// storage accounting; excludes the streamed kernel products).
+    pub state_bytes: usize,
+    /// Did the solver detect divergence (EigenPro with bad defaults
+    /// reproduces the paper's observation)?
+    pub diverged: bool,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic;
+
+    #[test]
+    fn problem_construction() {
+        let ds = synthetic::taxi_like(500, 9, 0).standardized();
+        let p = KrrProblem::from_dataset(ds, KernelKind::Rbf, BandwidthSpec::Median, 1e-6, 0)
+            .unwrap();
+        assert_eq!(p.n() + p.test.n, 500);
+        assert!(p.sigma > 0.0);
+        assert!((p.lam - p.n() as f64 * 1e-6).abs() < 1e-12);
+    }
+
+    #[test]
+    fn budget_rules() {
+        let b = Budget::iterations(10);
+        assert!(!b.exhausted(9, 1e9)); // wait: time infinite
+        assert!(b.exhausted(10, 0.0));
+        let b = Budget { max_iters: 100, time_limit_secs: 1.0 };
+        assert!(b.exhausted(0, 2.0));
+        assert!(!b.exhausted(0, 0.5));
+    }
+}

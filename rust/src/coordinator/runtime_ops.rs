@@ -1,0 +1,164 @@
+//! Shared artifact-backed operations: prediction, residuals, and kernel
+//! matvecs with transparent zero-padding. Every solver's heavy products
+//! go through these (Python never runs here — the HLO was AOT-compiled).
+
+use crate::config::KernelKind;
+use crate::runtime::manifest::ShapeKey;
+use crate::runtime::tensor::{self, HostMat};
+use crate::runtime::Engine;
+
+/// Convert an f64 row-major slab into a zero-padded f32 [`HostMat`].
+pub fn slab_to_f32_padded(x: &[f64], n: usize, d: usize, n_pad: usize, d_pad: usize) -> HostMat {
+    assert!(n_pad >= n && d_pad >= d);
+    let mut out = HostMat::zeros(n_pad, d_pad);
+    for i in 0..n {
+        for j in 0..d {
+            out.data[i * d_pad + j] = x[i * d + j] as f32;
+        }
+    }
+    out
+}
+
+/// f64 vector -> zero-padded f32.
+pub fn vec_to_f32_padded(v: &[f64], len_pad: usize) -> Vec<f32> {
+    let mut out: Vec<f32> = v.iter().map(|&x| x as f32).collect();
+    out.resize(len_pad, 0.0);
+    out
+}
+
+/// `K(X1, X2) @ v` through the `kmv` artifact family.
+///
+/// `x1` (n1 x d) and `x2` (n2 x d) are f64 slabs; the result has length
+/// `n1`. Rows are padded transparently; padded `v` entries are zero so
+/// padding is exact (DESIGN.md).
+pub fn kernel_matvec(
+    engine: &Engine,
+    kernel: KernelKind,
+    x1: &[f64],
+    n1: usize,
+    x2: &[f64],
+    n2: usize,
+    d: usize,
+    v: &[f64],
+    sigma: f64,
+) -> anyhow::Result<Vec<f64>> {
+    assert_eq!(v.len(), n2);
+    let (meta, exe) = engine.prepare(
+        "kmv",
+        kernel.name(),
+        "f32",
+        ShapeKey { n: n2, d, b: n1, r: 0 },
+    )?;
+    let (bp, np, dp) = (meta.shapes.b, meta.shapes.n, meta.shapes.d);
+    let x1m = slab_to_f32_padded(x1, n1, d, bp, dp);
+    let x2m = slab_to_f32_padded(x2, n2, d, np, dp);
+    let vv = vec_to_f32_padded(v, np);
+    let out = engine.run(
+        &exe,
+        &[
+            x1m.literal()?,
+            x2m.literal()?,
+            tensor::vec_literal(&vv),
+            tensor::scalar_literal(sigma as f32),
+        ],
+    )?;
+    let y = tensor::literal_to_vec(&out[0], n1)?;
+    Ok(y.into_iter().map(|x| x as f64).collect())
+}
+
+/// Predictions `K(X_eval, X_train) @ w` tiled through the 512-row `kmv`
+/// artifacts (the serving path).
+pub fn predict(
+    engine: &Engine,
+    kernel: KernelKind,
+    x_train: &[f64],
+    n_train: usize,
+    d: usize,
+    weights: &[f64],
+    x_eval: &[f64],
+    n_eval: usize,
+    sigma: f64,
+) -> anyhow::Result<Vec<f64>> {
+    assert_eq!(weights.len(), n_train);
+    let tile = 512usize;
+    let mut out = Vec::with_capacity(n_eval);
+    let mut start = 0;
+    while start < n_eval {
+        let rows = tile.min(n_eval - start);
+        let x1 = &x_eval[start * d..(start + rows) * d];
+        let y = kernel_matvec(engine, kernel, x1, rows, x_train, n_train, d, weights, sigma)?;
+        out.extend_from_slice(&y);
+        start += rows;
+    }
+    Ok(out)
+}
+
+/// Relative residual in f64 host arithmetic (exact kernel evaluations).
+/// O(n^2 d) on the host — use for small n / high-precision studies where
+/// the f32 artifact matvec would floor the measurement at ~1e-3 relative.
+pub fn relative_residual_host(
+    kernel: KernelKind,
+    x: &[f64],
+    n: usize,
+    d: usize,
+    w: &[f64],
+    y: &[f64],
+    sigma: f64,
+    lam: f64,
+) -> f64 {
+    let idx: Vec<usize> = (0..n).collect();
+    let kw = crate::kernels::rows_matvec(kernel, x, n, d, &idx, w, sigma);
+    let mut num = 0.0;
+    let mut den = 0.0;
+    for i in 0..n {
+        let r = kw[i] + lam * w[i] - y[i];
+        num += r * r;
+        den += y[i] * y[i];
+    }
+    (num / den.max(1e-300)).sqrt()
+}
+
+/// Relative residual `||(K + lam I) w - y|| / ||y||` on the training set.
+/// O(n^2) through the full `kmv` artifact — evaluate sparsely.
+pub fn relative_residual(
+    engine: &Engine,
+    kernel: KernelKind,
+    x: &[f64],
+    n: usize,
+    d: usize,
+    w: &[f64],
+    y: &[f64],
+    sigma: f64,
+    lam: f64,
+) -> anyhow::Result<f64> {
+    let kw = kernel_matvec(engine, kernel, x, n, x, n, d, w, sigma)?;
+    let mut num = 0.0;
+    let mut den = 0.0;
+    for i in 0..n {
+        let r = kw[i] + lam * w[i] - y[i];
+        num += r * r;
+        den += y[i] * y[i];
+    }
+    Ok((num / den.max(1e-300)).sqrt())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn slab_padding_layout() {
+        let x = vec![1.0, 2.0, 3.0, 4.0]; // 2x2
+        let m = slab_to_f32_padded(&x, 2, 2, 3, 4);
+        assert_eq!(m.at(0, 0), 1.0);
+        assert_eq!(m.at(0, 1), 2.0);
+        assert_eq!(m.at(0, 2), 0.0);
+        assert_eq!(m.at(1, 1), 4.0);
+        assert_eq!(m.at(2, 0), 0.0);
+    }
+
+    #[test]
+    fn vec_padding() {
+        assert_eq!(vec_to_f32_padded(&[1.0, 2.0], 4), vec![1.0f32, 2.0, 0.0, 0.0]);
+    }
+}

@@ -1,0 +1,116 @@
+//! Minimal CSV loader for real datasets (offline substitute for the
+//! `csv` crate). Expects numeric columns; the target column is selected
+//! by index (negative = from the end, python-style).
+
+use super::{Dataset, TaskKind};
+use crate::config::{BandwidthSpec, KernelKind};
+use std::path::Path;
+
+/// Load a numeric CSV into a [`Dataset`].
+///
+/// * `target_col`: index of the label column (`-1` = last).
+/// * `has_header`: skip the first line.
+/// * Task is classification if every target is in {-1, 0, 1} (0 mapped to -1).
+pub fn load(path: impl AsRef<Path>, target_col: i64, has_header: bool) -> anyhow::Result<Dataset> {
+    let text = std::fs::read_to_string(path.as_ref())?;
+    parse(&text, target_col, has_header, path.as_ref().to_string_lossy().as_ref())
+}
+
+/// Parse CSV text (separated for tests).
+pub fn parse(text: &str, target_col: i64, has_header: bool, name: &str) -> anyhow::Result<Dataset> {
+    let mut lines = text.lines().enumerate();
+    if has_header {
+        lines.next();
+    }
+    let mut x = Vec::new();
+    let mut y = Vec::new();
+    let mut d_feat = None;
+    for (lineno, line) in lines {
+        let line = line.trim();
+        if line.is_empty() {
+            continue;
+        }
+        let cells: Vec<&str> = line.split(',').map(str::trim).collect();
+        let ncol = cells.len();
+        anyhow::ensure!(ncol >= 2, "line {}: need >= 2 columns", lineno + 1);
+        let t = if target_col < 0 {
+            (ncol as i64 + target_col) as usize
+        } else {
+            target_col as usize
+        };
+        anyhow::ensure!(t < ncol, "line {}: target col {t} out of range", lineno + 1);
+        match d_feat {
+            None => d_feat = Some(ncol - 1),
+            Some(df) => {
+                anyhow::ensure!(ncol - 1 == df, "line {}: ragged row", lineno + 1)
+            }
+        }
+        for (j, cell) in cells.iter().enumerate() {
+            let v: f64 = cell
+                .parse()
+                .map_err(|_| anyhow::anyhow!("line {}: bad number {cell:?}", lineno + 1))?;
+            if j == t {
+                y.push(v);
+            } else {
+                x.push(v);
+            }
+        }
+    }
+    let d = d_feat.ok_or_else(|| anyhow::anyhow!("empty csv"))?;
+    let n = y.len();
+    let classification = y
+        .iter()
+        .all(|&v| v == -1.0 || v == 0.0 || v == 1.0);
+    let y = if classification {
+        y.into_iter().map(|v| if v == 0.0 { -1.0 } else { v }).collect()
+    } else {
+        y
+    };
+    Ok(Dataset {
+        name: name.to_string(),
+        task: if classification { TaskKind::Classification } else { TaskKind::Regression },
+        x,
+        y,
+        n,
+        d,
+        kernel: KernelKind::Rbf,
+        lam_unscaled: 1e-6,
+        bandwidth: BandwidthSpec::Median,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_regression() {
+        let ds = parse("1.0,2.0,10.5\n3.0,4.0,-2.5\n", -1, false, "t").unwrap();
+        assert_eq!(ds.n, 2);
+        assert_eq!(ds.d, 2);
+        assert_eq!(ds.y, vec![10.5, -2.5]);
+        assert_eq!(ds.task, TaskKind::Regression);
+        assert_eq!(ds.x, vec![1.0, 2.0, 3.0, 4.0]);
+    }
+
+    #[test]
+    fn parses_classification_with_header_and_zero_labels() {
+        let ds = parse("a,b,label\n1,2,0\n3,4,1\n", -1, true, "t").unwrap();
+        assert_eq!(ds.task, TaskKind::Classification);
+        assert_eq!(ds.y, vec![-1.0, 1.0]);
+    }
+
+    #[test]
+    fn target_col_front() {
+        let ds = parse("7.5,1,2\n8.5,3,4\n", 0, false, "t").unwrap();
+        assert_eq!(ds.y, vec![7.5, 8.5]);
+        assert_eq!(ds.x, vec![1.0, 2.0, 3.0, 4.0]);
+    }
+
+    #[test]
+    fn rejects_ragged_and_garbage() {
+        assert!(parse("1,2,3\n1,2\n", -1, false, "t").is_err());
+        assert!(parse("1,x,3\n", -1, false, "t").is_err());
+        assert!(parse("", -1, false, "t").is_err());
+    }
+}

@@ -1,0 +1,62 @@
+//! Datasets: synthetic generators mirroring the paper's 23-task testbed,
+//! CSV loading for real data, and preprocessing (standardization, splits,
+//! median-heuristic bandwidth).
+
+pub mod csv;
+pub mod preprocess;
+pub mod synthetic;
+
+use crate::config::{BandwidthSpec, KernelKind};
+
+/// What a task asks of the model.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TaskKind {
+    /// Binary classification, labels in {-1, +1}; metric = accuracy.
+    Classification,
+    /// Regression; metric = MAE (testbed) or RMSE (showcase).
+    Regression,
+}
+
+/// An in-memory dataset, row-major f64 features.
+#[derive(Debug, Clone)]
+pub struct Dataset {
+    pub name: String,
+    pub task: TaskKind,
+    pub x: Vec<f64>,
+    pub y: Vec<f64>,
+    pub n: usize,
+    pub d: usize,
+    /// Suggested kernel (mirrors the paper's per-domain choices).
+    pub kernel: KernelKind,
+    /// Suggested unscaled regularization (paper Table 3).
+    pub lam_unscaled: f64,
+    /// Suggested bandwidth (paper Table 3's per-dataset sigma).
+    pub bandwidth: BandwidthSpec,
+}
+
+impl Dataset {
+    pub fn row(&self, i: usize) -> &[f64] {
+        &self.x[i * self.d..(i + 1) * self.d]
+    }
+
+    /// Standardize features in place (zero mean, unit variance per column)
+    /// and, for regression, center targets — mirroring SC.2.4.
+    pub fn standardized(mut self) -> Dataset {
+        preprocess::standardize_features(&mut self.x, self.n, self.d);
+        if self.task == TaskKind::Regression {
+            preprocess::center(&mut self.y);
+        }
+        self
+    }
+
+    /// Split into (train, test) with the paper's default 0.8/0.2.
+    pub fn split(&self, test_frac: f64, seed: u64) -> (Dataset, Dataset) {
+        preprocess::split(self, test_frac, seed)
+    }
+}
+
+/// The 23-task synthetic testbed standing in for the paper's SS6.1 suite.
+/// Grouped like Figs. 3-8 (domain -> tasks).
+pub fn testbed(scale: usize) -> Vec<Dataset> {
+    synthetic::testbed(scale)
+}

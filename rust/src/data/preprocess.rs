@@ -1,0 +1,178 @@
+//! Feature/target preprocessing and train/test splitting.
+
+use super::Dataset;
+use crate::util::Rng;
+
+/// Standardize each column to zero mean / unit variance (in place).
+/// Constant columns are left centered (variance floor avoids div by ~0).
+pub fn standardize_features(x: &mut [f64], n: usize, d: usize) {
+    if n == 0 {
+        return;
+    }
+    for j in 0..d {
+        let mut mean = 0.0;
+        for i in 0..n {
+            mean += x[i * d + j];
+        }
+        mean /= n as f64;
+        let mut var = 0.0;
+        for i in 0..n {
+            let c = x[i * d + j] - mean;
+            var += c * c;
+        }
+        var /= n as f64;
+        let sd = var.sqrt().max(1e-12);
+        for i in 0..n {
+            x[i * d + j] = (x[i * d + j] - mean) / sd;
+        }
+    }
+}
+
+/// Subtract the mean (targets of regression tasks, SC.2.4).
+pub fn center(y: &mut [f64]) {
+    if y.is_empty() {
+        return;
+    }
+    let mean = y.iter().sum::<f64>() / y.len() as f64;
+    for v in y.iter_mut() {
+        *v -= mean;
+    }
+}
+
+/// Random train/test split.
+pub fn split(ds: &Dataset, test_frac: f64, seed: u64) -> (Dataset, Dataset) {
+    assert!((0.0..1.0).contains(&test_frac));
+    let mut order: Vec<usize> = (0..ds.n).collect();
+    let mut rng = Rng::new(seed ^ SPLIT_SEED_SALT);
+    rng.shuffle(&mut order);
+    let n_test = ((ds.n as f64) * test_frac).round() as usize;
+    let (test_idx, train_idx) = order.split_at(n_test);
+    (take(ds, train_idx, "train"), take(ds, test_idx, "test"))
+}
+
+fn take(ds: &Dataset, idx: &[usize], suffix: &str) -> Dataset {
+    let mut x = Vec::with_capacity(idx.len() * ds.d);
+    let mut y = Vec::with_capacity(idx.len());
+    for &i in idx {
+        x.extend_from_slice(ds.row(i));
+        y.push(ds.y[i]);
+    }
+    Dataset {
+        name: format!("{}:{}", ds.name, suffix),
+        task: ds.task,
+        x,
+        y,
+        n: idx.len(),
+        d: ds.d,
+        kernel: ds.kernel,
+        lam_unscaled: ds.lam_unscaled,
+        bandwidth: ds.bandwidth,
+    }
+}
+
+/// Salt so split RNG streams never collide with solver streams.
+const SPLIT_SEED_SALT: u64 = 0x9E37_79B9_0000_0001;
+
+/// Median pairwise distance bandwidth (Gretton et al. 2012), estimated on
+/// at most `max_pairs` random pairs.
+pub fn median_bandwidth(
+    x: &[f64],
+    n: usize,
+    d: usize,
+    kernel_l1: bool,
+    max_pairs: usize,
+    seed: u64,
+) -> f64 {
+    assert!(n >= 2);
+    let mut rng = Rng::new(seed);
+    let pairs = max_pairs.min(n * (n - 1) / 2).max(1);
+    let mut dists = Vec::with_capacity(pairs);
+    for _ in 0..pairs {
+        let i = rng.below(n);
+        let mut j = rng.below(n);
+        if j == i {
+            j = (j + 1) % n;
+        }
+        let (a, b) = (&x[i * d..(i + 1) * d], &x[j * d..(j + 1) * d]);
+        let dist = if kernel_l1 {
+            a.iter().zip(b).map(|(p, q)| (p - q).abs()).sum::<f64>()
+        } else {
+            a.iter().zip(b).map(|(p, q)| (p - q) * (p - q)).sum::<f64>().sqrt()
+        };
+        dists.push(dist);
+    }
+    dists.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    dists[dists.len() / 2].max(1e-9)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{BandwidthSpec, KernelKind};
+    use crate::data::TaskKind;
+
+    fn toy(n: usize, d: usize, seed: u64) -> Dataset {
+        let mut rng = Rng::new(seed);
+        Dataset {
+            name: "toy".into(),
+            task: TaskKind::Regression,
+            x: (0..n * d).map(|_| 3.0 * rng.normal() + 1.0).collect(),
+            y: (0..n).map(|_| rng.normal() + 5.0).collect(),
+            n,
+            d,
+            kernel: KernelKind::Rbf,
+            lam_unscaled: 1e-6,
+            bandwidth: BandwidthSpec::Median,
+        }
+    }
+
+    #[test]
+    fn standardize_gives_zero_mean_unit_var() {
+        let mut ds = toy(500, 3, 0);
+        standardize_features(&mut ds.x, ds.n, ds.d);
+        for j in 0..3 {
+            let mean: f64 = (0..500).map(|i| ds.x[i * 3 + j]).sum::<f64>() / 500.0;
+            let var: f64 = (0..500).map(|i| ds.x[i * 3 + j].powi(2)).sum::<f64>() / 500.0;
+            assert!(mean.abs() < 1e-10);
+            assert!((var - 1.0).abs() < 1e-8);
+        }
+    }
+
+    #[test]
+    fn constant_column_survives() {
+        let mut x = vec![2.0; 10];
+        standardize_features(&mut x, 10, 1);
+        assert!(x.iter().all(|v| v.abs() < 1e-9));
+    }
+
+    #[test]
+    fn center_zeroes_mean() {
+        let mut y = vec![1.0, 2.0, 3.0];
+        center(&mut y);
+        assert!((y.iter().sum::<f64>()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn split_partitions() {
+        let ds = toy(100, 2, 1);
+        let (tr, te) = split(&ds, 0.2, 7);
+        assert_eq!(tr.n + te.n, 100);
+        assert_eq!(te.n, 20);
+        assert_eq!(tr.d, 2);
+        // deterministic
+        let (tr2, _) = split(&ds, 0.2, 7);
+        assert_eq!(tr.x, tr2.x);
+    }
+
+    #[test]
+    fn median_bandwidth_scales_with_data() {
+        let ds_small = toy(200, 4, 2);
+        let mut big = ds_small.clone();
+        for v in big.x.iter_mut() {
+            *v *= 10.0;
+        }
+        let s1 = median_bandwidth(&ds_small.x, 200, 4, false, 500, 0);
+        let s2 = median_bandwidth(&big.x, 200, 4, false, 500, 0);
+        assert!((s2 / s1 - 10.0).abs() < 0.5, "{s1} {s2}");
+    }
+}

@@ -1,0 +1,51 @@
+//! # ASkotch — full kernel ridge regression at scale
+//!
+//! A Rust + JAX + Pallas reproduction of *"Have ASkotch: A Neat Solution
+//! for Large-scale Kernel Ridge Regression"* (Rathore, Frangella, Yang,
+//! Dereziński, Udell).
+//!
+//! The crate is the **Layer-3 coordinator** of a three-layer stack:
+//!
+//! * **L1 — Pallas kernels** (`python/compile/kernels/`): fused, tiled
+//!   kernel matrix-vector products and kernel block materialization that
+//!   never form the `n x n` kernel matrix.
+//! * **L2 — JAX model** (`python/compile/`): the ASkotch / Skotch
+//!   iteration (Nystrom approximation, automatic stepsize via randomized
+//!   powering, Nesterov acceleration) lowered **once** to HLO text.
+//! * **L3 — this crate**: loads the AOT artifacts through PJRT (`xla`
+//!   crate) and owns block sampling (uniform and BLESS/ARLS), the solver
+//!   event loop, the baselines (PCG, Falkon-style inducing points,
+//!   EigenPro-style preconditioned SGD, direct Cholesky), datasets,
+//!   configs, metrics, the paper-bench harness, and a batched prediction
+//!   server.
+//!
+//! Python never runs on the solve or serve path: after `make artifacts`
+//! the `askotch` binary is self-contained.
+//!
+//! See `DESIGN.md` for the system inventory and the per-experiment index,
+//! and `EXPERIMENTS.md` for paper-vs-measured results.
+
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod kernels;
+pub mod linalg;
+pub mod metrics;
+pub mod runtime;
+pub mod sampling;
+pub mod server;
+pub mod solvers;
+pub mod testing;
+pub mod util;
+
+/// Convenience re-exports covering the common workflow.
+pub mod prelude {
+    pub use crate::config::{
+        BandwidthSpec, ExperimentConfig, KernelKind, RhoMode, SamplingScheme, SolverKind,
+    };
+    pub use crate::coordinator::{Budget, Coordinator, KrrProblem, SolveReport};
+    pub use crate::data::{synthetic, Dataset, TaskKind};
+    pub use crate::runtime::Engine;
+    pub use crate::solvers::askotch::{AskotchConfig, AskotchSolver};
+    pub use crate::solvers::Solver;
+}

@@ -1,0 +1,236 @@
+//! Row-major dense f64 matrix with the operations the coordinator needs.
+
+use crate::util::Rng;
+
+/// Row-major dense matrix of `f64`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Mat {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f64>,
+}
+
+impl Mat {
+    pub fn zeros(rows: usize, cols: usize) -> Mat {
+        Mat { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    pub fn eye(n: usize) -> Mat {
+        let mut m = Mat::zeros(n, n);
+        for i in 0..n {
+            m[(i, i)] = 1.0;
+        }
+        m
+    }
+
+    pub fn from_rows(rows: Vec<Vec<f64>>) -> Mat {
+        let r = rows.len();
+        let c = rows.first().map(|x| x.len()).unwrap_or(0);
+        let mut data = Vec::with_capacity(r * c);
+        for row in &rows {
+            assert_eq!(row.len(), c, "ragged rows");
+            data.extend_from_slice(row);
+        }
+        Mat { rows: r, cols: c, data }
+    }
+
+    /// Standard Gaussian entries.
+    pub fn randn(rows: usize, cols: usize, rng: &mut Rng) -> Mat {
+        Mat { rows, cols, data: (0..rows * cols).map(|_| rng.normal()).collect() }
+    }
+
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f64] {
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    #[inline]
+    pub fn row_mut(&mut self, i: usize) -> &mut [f64] {
+        &mut self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    pub fn t(&self) -> Mat {
+        let mut out = Mat::zeros(self.cols, self.rows);
+        for i in 0..self.rows {
+            for j in 0..self.cols {
+                out[(j, i)] = self[(i, j)];
+            }
+        }
+        out
+    }
+
+    /// Matrix-vector product.
+    pub fn matvec(&self, v: &[f64]) -> Vec<f64> {
+        assert_eq!(v.len(), self.cols);
+        (0..self.rows)
+            .map(|i| dot(self.row(i), v))
+            .collect()
+    }
+
+    /// `self^T v`.
+    pub fn matvec_t(&self, v: &[f64]) -> Vec<f64> {
+        assert_eq!(v.len(), self.rows);
+        let mut out = vec![0.0; self.cols];
+        for i in 0..self.rows {
+            let vi = v[i];
+            if vi != 0.0 {
+                for (o, &a) in out.iter_mut().zip(self.row(i)) {
+                    *o += vi * a;
+                }
+            }
+        }
+        out
+    }
+
+    /// Matrix product (ikj loop order, cache-friendly).
+    pub fn matmul(&self, other: &Mat) -> Mat {
+        assert_eq!(self.cols, other.rows, "inner dims");
+        let mut out = Mat::zeros(self.rows, other.cols);
+        for i in 0..self.rows {
+            for k in 0..self.cols {
+                let aik = self[(i, k)];
+                if aik != 0.0 {
+                    let orow = other.row(k);
+                    let out_row = out.row_mut(i);
+                    for (o, &b) in out_row.iter_mut().zip(orow) {
+                        *o += aik * b;
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    /// Gram matrix `self^T self`, exploiting symmetry.
+    pub fn gram(&self) -> Mat {
+        let mut out = Mat::zeros(self.cols, self.cols);
+        for i in 0..self.rows {
+            let r = self.row(i);
+            for a in 0..self.cols {
+                let ra = r[a];
+                if ra != 0.0 {
+                    for b in a..self.cols {
+                        out[(a, b)] += ra * r[b];
+                    }
+                }
+            }
+        }
+        for a in 0..self.cols {
+            for b in 0..a {
+                out[(a, b)] = out[(b, a)];
+            }
+        }
+        out
+    }
+
+    /// Add `c` to the diagonal in place.
+    pub fn add_diag(&mut self, c: f64) {
+        let n = self.rows.min(self.cols);
+        for i in 0..n {
+            self[(i, i)] += c;
+        }
+    }
+
+    /// Frobenius norm.
+    pub fn fro(&self) -> f64 {
+        self.data.iter().map(|x| x * x).sum::<f64>().sqrt()
+    }
+
+    /// Max |a_ij - b_ij|.
+    pub fn max_abs_diff(&self, other: &Mat) -> f64 {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f64::max)
+    }
+}
+
+impl std::ops::Index<(usize, usize)> for Mat {
+    type Output = f64;
+    #[inline]
+    fn index(&self, (i, j): (usize, usize)) -> &f64 {
+        &self.data[i * self.cols + j]
+    }
+}
+
+impl std::ops::IndexMut<(usize, usize)> for Mat {
+    #[inline]
+    fn index_mut(&mut self, (i, j): (usize, usize)) -> &mut f64 {
+        &mut self.data[i * self.cols + j]
+    }
+}
+
+/// Dot product.
+#[inline]
+pub fn dot(a: &[f64], b: &[f64]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    a.iter().zip(b).map(|(x, y)| x * y).sum()
+}
+
+/// Euclidean norm.
+pub fn norm(a: &[f64]) -> f64 {
+    dot(a, a).sqrt()
+}
+
+/// `a - b` elementwise.
+pub fn sub(a: &[f64], b: &[f64]) -> Vec<f64> {
+    a.iter().zip(b).map(|(x, y)| x - y).collect()
+}
+
+/// `a + c * b` elementwise.
+pub fn axpy(a: &[f64], c: f64, b: &[f64]) -> Vec<f64> {
+    a.iter().zip(b).map(|(x, y)| x + c * y).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matvec_identity() {
+        let m = Mat::eye(3);
+        assert_eq!(m.matvec(&[1.0, 2.0, 3.0]), vec![1.0, 2.0, 3.0]);
+    }
+
+    #[test]
+    fn matmul_matches_manual() {
+        let a = Mat::from_rows(vec![vec![1.0, 2.0], vec![3.0, 4.0]]);
+        let b = Mat::from_rows(vec![vec![5.0, 6.0], vec![7.0, 8.0]]);
+        let c = a.matmul(&b);
+        assert_eq!(c.data, vec![19.0, 22.0, 43.0, 50.0]);
+    }
+
+    #[test]
+    fn transpose_roundtrip() {
+        let mut rng = Rng::new(0);
+        let a = Mat::randn(4, 7, &mut rng);
+        assert_eq!(a.t().t(), a);
+    }
+
+    #[test]
+    fn gram_matches_matmul() {
+        let mut rng = Rng::new(1);
+        let a = Mat::randn(9, 4, &mut rng);
+        let g = a.gram();
+        let g2 = a.t().matmul(&a);
+        assert!(g.max_abs_diff(&g2) < 1e-12);
+    }
+
+    #[test]
+    fn matvec_t_matches_transpose() {
+        let mut rng = Rng::new(2);
+        let a = Mat::randn(5, 3, &mut rng);
+        let v: Vec<f64> = (0..5).map(|i| i as f64).collect();
+        let want = a.t().matvec(&v);
+        assert_eq!(a.matvec_t(&v), want);
+    }
+
+    #[test]
+    fn add_diag() {
+        let mut m = Mat::zeros(2, 2);
+        m.add_diag(3.0);
+        assert_eq!(m.data, vec![3.0, 0.0, 0.0, 3.0]);
+    }
+}

@@ -1,0 +1,244 @@
+//! Symmetric eigensolvers: block subspace iteration for the top-k pairs
+//! (EigenPro preconditioner, spectral diagnostics) and a full cyclic
+//! Jacobi solver for small matrices (test oracles, exact effective
+//! dimension on small problems).
+
+use super::dense::{dot, Mat};
+use crate::util::Rng;
+
+/// Top-k eigenpairs of an spd operator given as a closure `y = A x`.
+///
+/// Block subspace (orthogonal) iteration with Rayleigh-Ritz extraction:
+/// converges geometrically with ratio `lambda_{k+1}/lambda_k`, plenty for
+/// kernel matrices with fast spectral decay.
+pub fn subspace_topk(
+    n: usize,
+    k: usize,
+    matvec: impl Fn(&[f64]) -> Vec<f64>,
+    iters: usize,
+    rng: &mut Rng,
+) -> (Vec<f64>, Mat) {
+    assert!(k <= n);
+    let mut q = Mat::randn(n, k, rng);
+    orthonormalize_cols(&mut q);
+    for _ in 0..iters {
+        let mut aq = Mat::zeros(n, k);
+        apply_cols(&matvec, &q, &mut aq);
+        q = aq;
+        orthonormalize_cols(&mut q);
+    }
+    // Rayleigh-Ritz: eigendecompose Q^T A Q (k x k) with Jacobi.
+    let mut aq = Mat::zeros(n, k);
+    apply_cols(&matvec, &q, &mut aq);
+    let small = q.t().matmul(&aq);
+    let eig = SymEig::jacobi(&small, 100);
+    // rotate basis: V = Q * W
+    let v = q.matmul(&eig.vectors);
+    (eig.values, v)
+}
+
+fn apply_cols(matvec: &impl Fn(&[f64]) -> Vec<f64>, q: &Mat, out: &mut Mat) {
+    let (n, k) = (q.rows, q.cols);
+    let mut col = vec![0.0; n];
+    for j in 0..k {
+        for i in 0..n {
+            col[i] = q[(i, j)];
+        }
+        let y = matvec(&col);
+        for i in 0..n {
+            out[(i, j)] = y[i];
+        }
+    }
+}
+
+/// In-place modified Gram-Schmidt on columns.
+pub fn orthonormalize_cols(q: &mut Mat) {
+    let (n, k) = (q.rows, q.cols);
+    for j in 0..k {
+        for p in 0..j {
+            let mut c = 0.0;
+            for i in 0..n {
+                c += q[(i, p)] * q[(i, j)];
+            }
+            for i in 0..n {
+                let qp = q[(i, p)];
+                q[(i, j)] -= c * qp;
+            }
+        }
+        let mut nrm = 0.0;
+        for i in 0..n {
+            nrm += q[(i, j)] * q[(i, j)];
+        }
+        let nrm = nrm.sqrt().max(1e-300);
+        for i in 0..n {
+            q[(i, j)] /= nrm;
+        }
+    }
+}
+
+/// Full symmetric eigendecomposition (cyclic Jacobi).
+///
+/// `values` are sorted descending; `vectors` columns match.
+#[derive(Debug, Clone)]
+pub struct SymEig {
+    pub values: Vec<f64>,
+    pub vectors: Mat,
+}
+
+impl SymEig {
+    pub fn jacobi(a: &Mat, max_sweeps: usize) -> SymEig {
+        assert_eq!(a.rows, a.cols);
+        let n = a.rows;
+        let mut m = a.clone();
+        let mut v = Mat::eye(n);
+        for _ in 0..max_sweeps {
+            let mut off = 0.0;
+            for p in 0..n {
+                for q in (p + 1)..n {
+                    off += m[(p, q)] * m[(p, q)];
+                }
+            }
+            if off.sqrt() < 1e-13 * (m.fro() + 1e-300) {
+                break;
+            }
+            for p in 0..n {
+                for q in (p + 1)..n {
+                    let apq = m[(p, q)];
+                    if apq.abs() < 1e-300 {
+                        continue;
+                    }
+                    let app = m[(p, p)];
+                    let aqq = m[(q, q)];
+                    let tau = (aqq - app) / (2.0 * apq);
+                    let t = tau.signum() / (tau.abs() + (1.0 + tau * tau).sqrt());
+                    let c = 1.0 / (1.0 + t * t).sqrt();
+                    let s = t * c;
+                    // rotate rows/cols p, q of m
+                    for i in 0..n {
+                        let mip = m[(i, p)];
+                        let miq = m[(i, q)];
+                        m[(i, p)] = c * mip - s * miq;
+                        m[(i, q)] = s * mip + c * miq;
+                    }
+                    for i in 0..n {
+                        let mpi = m[(p, i)];
+                        let mqi = m[(q, i)];
+                        m[(p, i)] = c * mpi - s * mqi;
+                        m[(q, i)] = s * mpi + c * mqi;
+                    }
+                    // accumulate eigenvectors
+                    for i in 0..n {
+                        let vip = v[(i, p)];
+                        let viq = v[(i, q)];
+                        v[(i, p)] = c * vip - s * viq;
+                        v[(i, q)] = s * vip + c * viq;
+                    }
+                }
+            }
+        }
+        let mut order: Vec<usize> = (0..n).collect();
+        order.sort_by(|&i, &j| m[(j, j)].partial_cmp(&m[(i, i)]).unwrap());
+        let values: Vec<f64> = order.iter().map(|&i| m[(i, i)]).collect();
+        let mut vectors = Mat::zeros(n, n);
+        for (newj, &oldj) in order.iter().enumerate() {
+            for i in 0..n {
+                vectors[(i, newj)] = v[(i, oldj)];
+            }
+        }
+        SymEig { values, vectors }
+    }
+}
+
+/// Effective dimension `d_lam(A) = tr(A (A + lam I)^-1)` from eigenvalues.
+pub fn effective_dimension(eigs: &[f64], lam: f64) -> f64 {
+    eigs.iter().map(|&e| e / (e + lam)).sum()
+}
+
+/// Power iteration estimate of the largest eigenvalue of an spd operator.
+pub fn power_max_eig(
+    n: usize,
+    matvec: impl Fn(&[f64]) -> Vec<f64>,
+    iters: usize,
+    rng: &mut Rng,
+) -> f64 {
+    let mut v: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+    let mut lam = 0.0;
+    for _ in 0..iters {
+        let nrm = dot(&v, &v).sqrt().max(1e-300);
+        for x in v.iter_mut() {
+            *x /= nrm;
+        }
+        let w = matvec(&v);
+        lam = dot(&w, &w).sqrt();
+        v = w;
+    }
+    lam
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spd_with_eigs(eigs: &[f64], seed: u64) -> Mat {
+        let n = eigs.len();
+        let mut rng = Rng::new(seed);
+        let mut q = Mat::randn(n, n, &mut rng);
+        orthonormalize_cols(&mut q);
+        // A = Q diag(e) Q^T
+        let mut d = Mat::zeros(n, n);
+        for i in 0..n {
+            d[(i, i)] = eigs[i];
+        }
+        q.matmul(&d).matmul(&q.t())
+    }
+
+    #[test]
+    fn jacobi_recovers_spectrum() {
+        let eigs = [5.0, 2.0, 1.0, 0.5, 0.1];
+        let a = spd_with_eigs(&eigs, 0);
+        let e = SymEig::jacobi(&a, 50);
+        for (got, want) in e.values.iter().zip(&eigs) {
+            assert!((got - want).abs() < 1e-9, "{got} vs {want}");
+        }
+        // vectors orthonormal and diagonalize a
+        let vtv = e.vectors.t().matmul(&e.vectors);
+        assert!(vtv.max_abs_diff(&Mat::eye(5)) < 1e-9);
+        let avec = a.matmul(&e.vectors);
+        for j in 0..5 {
+            for i in 0..5 {
+                assert!((avec[(i, j)] - e.values[j] * e.vectors[(i, j)]).abs() < 1e-8);
+            }
+        }
+    }
+
+    #[test]
+    fn subspace_matches_jacobi_topk() {
+        let eigs = [10.0, 6.0, 3.0, 1.0, 0.3, 0.1, 0.05, 0.01];
+        let a = spd_with_eigs(&eigs, 1);
+        let mut rng = Rng::new(2);
+        let (vals, vecs) = subspace_topk(8, 3, |v| a.matvec(v), 60, &mut rng);
+        for (got, want) in vals.iter().zip(&eigs[..3]) {
+            assert!((got - want).abs() < 1e-6, "{got} vs {want}");
+        }
+        // Rayleigh check on leading vector
+        let v0: Vec<f64> = (0..8).map(|i| vecs[(i, 0)]).collect();
+        let av = a.matvec(&v0);
+        let rq = dot(&v0, &av) / dot(&v0, &v0);
+        assert!((rq - 10.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn effective_dimension_limits() {
+        let eigs = vec![1.0; 10];
+        assert!((effective_dimension(&eigs, 1e-12) - 10.0).abs() < 1e-6);
+        assert!(effective_dimension(&eigs, 1e12) < 1e-10);
+    }
+
+    #[test]
+    fn power_iteration_converges() {
+        let a = spd_with_eigs(&[4.0, 1.0, 0.2], 3);
+        let mut rng = Rng::new(4);
+        let lam = power_max_eig(3, |v| a.matvec(v), 60, &mut rng);
+        assert!((lam - 4.0).abs() < 1e-6);
+    }
+}

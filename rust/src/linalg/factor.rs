@@ -1,0 +1,143 @@
+//! Cholesky factorization and triangular solves.
+
+use super::dense::Mat;
+
+/// Lower-triangular Cholesky factor of an spd matrix.
+#[derive(Debug, Clone)]
+pub struct Chol {
+    pub l: Mat,
+}
+
+impl Chol {
+    /// Factorize `a` (must be spd); `jitter` is added to the diagonal.
+    pub fn new(a: &Mat, jitter: f64) -> anyhow::Result<Chol> {
+        anyhow::ensure!(a.rows == a.cols, "Cholesky needs a square matrix");
+        let n = a.rows;
+        let mut l = Mat::zeros(n, n);
+        for j in 0..n {
+            let mut diag = a[(j, j)] + jitter;
+            for k in 0..j {
+                diag -= l[(j, k)] * l[(j, k)];
+            }
+            anyhow::ensure!(
+                diag > 0.0,
+                "matrix not positive definite at pivot {j} (d={diag:.3e})"
+            );
+            let pivot = diag.sqrt();
+            l[(j, j)] = pivot;
+            for i in (j + 1)..n {
+                let mut s = a[(i, j)];
+                for k in 0..j {
+                    s -= l[(i, k)] * l[(j, k)];
+                }
+                l[(i, j)] = s / pivot;
+            }
+        }
+        Ok(Chol { l })
+    }
+
+    pub fn n(&self) -> usize {
+        self.l.rows
+    }
+
+    /// Solve `L x = b`.
+    pub fn solve_lower(&self, b: &[f64]) -> Vec<f64> {
+        let n = self.n();
+        let mut x = vec![0.0; n];
+        for i in 0..n {
+            let mut s = b[i];
+            for k in 0..i {
+                s -= self.l[(i, k)] * x[k];
+            }
+            x[i] = s / self.l[(i, i)];
+        }
+        x
+    }
+
+    /// Solve `L^T x = b`.
+    pub fn solve_upper(&self, b: &[f64]) -> Vec<f64> {
+        let n = self.n();
+        let mut x = vec![0.0; n];
+        for i in (0..n).rev() {
+            let mut s = b[i];
+            for k in (i + 1)..n {
+                s -= self.l[(k, i)] * x[k];
+            }
+            x[i] = s / self.l[(i, i)];
+        }
+        x
+    }
+
+    /// Solve `(L L^T) x = b`.
+    pub fn solve(&self, b: &[f64]) -> Vec<f64> {
+        self.solve_upper(&self.solve_lower(b))
+    }
+
+    /// log det(A) = 2 sum log L_ii.
+    pub fn logdet(&self) -> f64 {
+        (0..self.n()).map(|i| self.l[(i, i)].ln()).sum::<f64>() * 2.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn spd(n: usize, seed: u64) -> Mat {
+        let mut rng = Rng::new(seed);
+        let a = Mat::randn(n, n, &mut rng);
+        let mut g = a.gram();
+        g.add_diag(n as f64 * 0.1);
+        g
+    }
+
+    #[test]
+    fn reconstructs() {
+        let a = spd(12, 0);
+        let ch = Chol::new(&a, 0.0).unwrap();
+        let rec = ch.l.matmul(&ch.l.t());
+        assert!(rec.max_abs_diff(&a) < 1e-9);
+    }
+
+    #[test]
+    fn solves() {
+        let a = spd(20, 1);
+        let ch = Chol::new(&a, 0.0).unwrap();
+        let b: Vec<f64> = (0..20).map(|i| (i as f64).sin()).collect();
+        let x = ch.solve(&b);
+        let res = super::super::dense::sub(&a.matvec(&x), &b);
+        assert!(super::super::dense::norm(&res) < 1e-8);
+    }
+
+    #[test]
+    fn rejects_indefinite() {
+        let mut a = Mat::eye(3);
+        a[(2, 2)] = -1.0;
+        assert!(Chol::new(&a, 0.0).is_err());
+    }
+
+    #[test]
+    fn logdet_matches_identity() {
+        let a = Mat::eye(5);
+        let ch = Chol::new(&a, 0.0).unwrap();
+        assert!(ch.logdet().abs() < 1e-12);
+    }
+
+    #[test]
+    fn triangular_solves_consistent() {
+        let a = spd(8, 3);
+        let ch = Chol::new(&a, 0.0).unwrap();
+        let b = vec![1.0; 8];
+        let y = ch.solve_lower(&b);
+        let lo = ch.l.matvec(&y);
+        for (u, v) in lo.iter().zip(&b) {
+            assert!((u - v).abs() < 1e-10);
+        }
+        let z = ch.solve_upper(&b);
+        let up = ch.l.t().matvec(&z);
+        for (u, v) in up.iter().zip(&b) {
+            assert!((u - v).abs() < 1e-10);
+        }
+    }
+}

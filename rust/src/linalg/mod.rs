@@ -1,0 +1,15 @@
+//! Dense linear algebra substrate (f64).
+//!
+//! Powers everything the coordinator computes host-side: BLESS leverage
+//! scores, the Falkon preconditioner, EigenPro's subsample eigensystem,
+//! the exact small-`n` reference solver, and test oracles. Unblocked
+//! algorithms are deliberate: host-side matrices are at most a few
+//! thousand rows; the heavy O(nb)/O(n^2) work lives in the HLO artifacts.
+
+pub mod dense;
+pub mod eig;
+pub mod factor;
+
+pub use dense::Mat;
+pub use eig::{subspace_topk, SymEig};
+pub use factor::Chol;

@@ -1,0 +1,287 @@
+//! `askotch` — command-line launcher for the ASkotch KRR framework.
+//!
+//! Subcommands:
+//!   solve       run one solver on one dataset and print the trace
+//!   experiment  run a JSON experiment config (file path argument)
+//!   compare     run several solvers on the same problem, print a table
+//!   info        inspect the artifact manifest / engine
+//!   serve       demo the batched prediction server on a trained model
+//!
+//! Examples:
+//!   askotch solve --dataset taxi_like --n 2048 --solver askotch --iters 200
+//!   askotch compare --dataset physics_like --n 2048 --iters 100
+//!   askotch experiment configs/quickstart.json
+//!   askotch info
+
+use anyhow::Result;
+use askotch::config::{BandwidthSpec, ExperimentConfig, KernelKind, SamplingScheme, SolverKind};
+use askotch::coordinator::{Budget, Coordinator};
+use askotch::runtime::Engine;
+use askotch::util::cli::Args;
+use askotch::util::fmt;
+
+fn main() -> Result<()> {
+    let args = Args::from_env();
+    match args.positional.first().map(String::as_str) {
+        Some("solve") => cmd_solve(&args),
+        Some("experiment") => cmd_experiment(&args),
+        Some("compare") => cmd_compare(&args),
+        Some("info") => cmd_info(&args),
+        Some("serve") => cmd_serve(&args),
+        Some("perf") => cmd_perf(&args),
+        _ => {
+            eprintln!(
+                "usage: askotch <solve|experiment|compare|info|serve> [options]\n\
+                 run `askotch info` to inspect compiled artifacts"
+            );
+            Ok(())
+        }
+    }
+}
+
+fn artifacts_dir(args: &Args) -> String {
+    args.get_or("artifacts", "artifacts")
+}
+
+fn config_from_args(args: &Args) -> Result<ExperimentConfig> {
+    let mut cfg = ExperimentConfig::default();
+    cfg.dataset = args.get_or("dataset", "taxi_like");
+    cfg.n = args.get_usize("n", 2048);
+    cfg.d = args.get_usize("d", 9);
+    if let Some(k) = args.get("kernel") {
+        cfg.kernel = KernelKind::parse(k)?;
+    }
+    if let Some(bw) = args.get("bandwidth") {
+        cfg.bandwidth = BandwidthSpec::parse(bw)?;
+    }
+    cfg.lam_unscaled = args.get_f64("lam", 1e-6);
+    if let Some(s) = args.get("solver") {
+        cfg.solver = SolverKind::parse(s)?;
+    }
+    if let Some(s) = args.get("sampling") {
+        cfg.sampling = SamplingScheme::parse(s)?;
+    }
+    cfg.rank = args.get_usize("rank", 20);
+    cfg.seed = args.get_u64("seed", 0);
+    cfg.max_iters = args.get_usize("iters", 300);
+    cfg.time_limit_secs = args.get_f64("time-limit", 600.0);
+    cfg.track_residual = args.has_flag("residual");
+    Ok(cfg)
+}
+
+fn print_report(report: &askotch::coordinator::SolveReport) {
+    println!(
+        "solver={} problem={} iters={} wall={} metric={:.6} residual={:.3e} diverged={}",
+        report.solver,
+        report.problem,
+        report.iters,
+        fmt::duration(report.wall_secs),
+        report.final_metric,
+        report.final_residual,
+        report.diverged
+    );
+    for p in &report.trace.points {
+        println!(
+            "  iter={:6}  t={:8}  metric={:.6}  residual={}",
+            p.iter,
+            fmt::duration(p.secs),
+            p.metric,
+            if p.residual.is_finite() { format!("{:.3e}", p.residual) } else { "-".into() }
+        );
+    }
+}
+
+fn cmd_solve(args: &Args) -> Result<()> {
+    let cfg = config_from_args(args)?;
+    let engine = Engine::from_manifest(artifacts_dir(args))?;
+    let coord = Coordinator::new(&engine);
+    let report = coord.run(&cfg)?;
+    print_report(&report);
+    Ok(())
+}
+
+fn cmd_experiment(args: &Args) -> Result<()> {
+    let path = args
+        .positional
+        .get(1)
+        .ok_or_else(|| anyhow::anyhow!("usage: askotch experiment <config.json>"))?;
+    let text = std::fs::read_to_string(path)?;
+    let cfg = ExperimentConfig::from_json(&text)?;
+    let engine = Engine::from_manifest(artifacts_dir(args))?;
+    let coord = Coordinator::new(&engine);
+    let report = coord.run(&cfg)?;
+    print_report(&report);
+    if let Some(out) = args.get("trace-out") {
+        std::fs::write(out, report.trace.to_json().to_string())?;
+        println!("trace written to {out}");
+    }
+    Ok(())
+}
+
+fn cmd_compare(args: &Args) -> Result<()> {
+    let base = config_from_args(args)?;
+    let engine = Engine::from_manifest(artifacts_dir(args))?;
+    let coord = Coordinator::new(&engine);
+    let solvers = [
+        SolverKind::Askotch,
+        SolverKind::Skotch,
+        SolverKind::Pcg,
+        SolverKind::Falkon,
+        SolverKind::EigenPro,
+    ];
+    let mut table = fmt::Table::new(&["solver", "iters", "wall", "metric", "state", "diverged"]);
+    for s in solvers {
+        let mut cfg = base.clone();
+        cfg.solver = s;
+        match coord.run(&cfg) {
+            Ok(r) => table.row(vec![
+                r.solver,
+                r.iters.to_string(),
+                fmt::duration(r.wall_secs),
+                format!("{:.5}", r.final_metric),
+                fmt::count(r.state_bytes as f64),
+                r.diverged.to_string(),
+            ]),
+            Err(e) => table.row(vec![
+                s.name().into(),
+                "-".into(),
+                "-".into(),
+                format!("error: {e}"),
+                "-".into(),
+                "-".into(),
+            ]),
+        }
+    }
+    println!("{}", table.render());
+    Ok(())
+}
+
+fn cmd_info(args: &Args) -> Result<()> {
+    let engine = Engine::from_manifest(artifacts_dir(args))?;
+    let m = engine.manifest();
+    println!("platform: {}", engine.platform());
+    println!("artifact dir: {:?}", m.dir);
+    println!("ops: {:?}", m.ops());
+    let mut table = fmt::Table::new(&["op", "kernel", "n", "d", "b", "r", "file"]);
+    for a in &m.artifacts {
+        table.row(vec![
+            a.op.clone(),
+            a.kernel.clone(),
+            a.shapes.n.to_string(),
+            a.shapes.d.to_string(),
+            a.shapes.b.to_string(),
+            a.shapes.r.to_string(),
+            a.file.clone(),
+        ]);
+    }
+    println!("{}", table.render());
+    Ok(())
+}
+
+/// Hot-path profiling: run N ASkotch iterations and report where the
+/// time goes (engine execute vs host-side coordinator overhead).
+fn cmd_perf(args: &Args) -> Result<()> {
+    use askotch::solvers::askotch::{AskotchConfig, AskotchSolver};
+    use askotch::solvers::Solver;
+
+    let mut cfg = config_from_args(args)?;
+    cfg.solver = SolverKind::Askotch;
+    let engine = Engine::from_manifest(artifacts_dir(args))?;
+    let coord = Coordinator::new(&engine);
+    let problem = coord.problem(&cfg)?;
+    let iters = args.get_usize("iters", 200);
+    let mut solver = AskotchSolver::new(
+        AskotchConfig { rank: cfg.rank, eval_every: iters + 1, ..Default::default() },
+        true,
+    );
+    // warmup (compile)
+    solver.run(&engine, &problem, &Budget::iterations(3))?;
+    let pre = engine.stats();
+    let t0 = std::time::Instant::now();
+    let report = solver.run(&engine, &problem, &Budget::iterations(iters))?;
+    let wall = t0.elapsed().as_secs_f64();
+    let post = engine.stats();
+    let exec = post.execute_secs - pre.execute_secs;
+    let execs = post.executions - pre.executions;
+    println!(
+        "n={} b/r from artifact; iters={} wall={:.3}s ({:.2}ms/iter)",
+        problem.n(),
+        report.iters,
+        wall,
+        wall * 1e3 / report.iters.max(1) as f64
+    );
+    println!(
+        "engine execute: {:.3}s over {} executions ({:.2}ms each) = {:.1}% of wall",
+        exec,
+        execs,
+        exec * 1e3 / execs.max(1) as f64,
+        100.0 * exec / wall
+    );
+    println!(
+        "host overhead (sampling, RNG, literal conversion, state copies): {:.3}s = {:.1}%",
+        wall - exec,
+        100.0 * (wall - exec) / wall
+    );
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    use askotch::server::{serve, ModelSnapshot, Request, ServerConfig};
+    use std::sync::mpsc;
+
+    // Train a small model, then serve it.
+    let mut cfg = config_from_args(args)?;
+    cfg.solver = SolverKind::Askotch;
+    let engine = Engine::from_manifest(artifacts_dir(args))?;
+    let coord = Coordinator::new(&engine);
+    let problem = coord.problem(&cfg)?;
+    let mut solver = coord.solver(&cfg);
+    println!("training {} on {} (n={})...", cfg.solver.name(), cfg.dataset, problem.n());
+    let report = solver.run(
+        &engine,
+        &problem,
+        &Budget { max_iters: cfg.max_iters, time_limit_secs: cfg.time_limit_secs },
+    )?;
+    println!("trained: metric={:.5}", report.final_metric);
+
+    let model = ModelSnapshot {
+        kernel: problem.kernel,
+        sigma: problem.sigma,
+        x_train: problem.train.x.clone(),
+        n: problem.n(),
+        d: problem.d(),
+        weights: report.weights.clone(),
+    };
+
+    let (tx, rx) = mpsc::channel::<Request>();
+    let n_requests = args.get_usize("requests", 200);
+    // Client threads submit the test set as requests.
+    let test_rows: Vec<Vec<f64>> =
+        (0..problem.test.n.min(n_requests)).map(|i| problem.test.row(i).to_vec()).collect();
+    let client = std::thread::spawn(move || {
+        let mut lat = Vec::new();
+        for row in test_rows {
+            let (rtx, rrx) = mpsc::channel();
+            let t0 = std::time::Instant::now();
+            tx.send(Request { features: row, reply: rtx }).unwrap();
+            let _ = rrx.recv().unwrap();
+            lat.push(t0.elapsed().as_secs_f64());
+        }
+        lat
+    });
+    let stats = serve(&engine, &model, rx, &ServerConfig::default());
+    let mut lat = client.join().unwrap();
+    lat.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let p50 = lat[lat.len() / 2];
+    let p99 = lat[(lat.len() * 99) / 100];
+    println!(
+        "served {} requests in {} batches (mean batch {:.1}, max {}), p50={} p99={}",
+        stats.requests,
+        stats.batches,
+        stats.mean_batch(),
+        stats.max_batch_seen,
+        fmt::duration(p50),
+        fmt::duration(p99)
+    );
+    Ok(())
+}

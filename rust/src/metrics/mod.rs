@@ -1,0 +1,169 @@
+//! Metrics: test-set evaluation, convergence traces, storage accounting.
+
+use crate::data::TaskKind;
+use crate::util::json::Json;
+
+/// Classification accuracy for +-1 labels (predictions thresholded at 0).
+pub fn accuracy(pred: &[f64], target: &[f64]) -> f64 {
+    assert_eq!(pred.len(), target.len());
+    if pred.is_empty() {
+        return 0.0;
+    }
+    let correct = pred
+        .iter()
+        .zip(target)
+        .filter(|(p, t)| (p.is_sign_positive() && **t > 0.0) || (p.is_sign_negative() && **t < 0.0))
+        .count();
+    correct as f64 / pred.len() as f64
+}
+
+/// Mean absolute error.
+pub fn mae(pred: &[f64], target: &[f64]) -> f64 {
+    assert_eq!(pred.len(), target.len());
+    pred.iter().zip(target).map(|(p, t)| (p - t).abs()).sum::<f64>() / pred.len().max(1) as f64
+}
+
+/// Root mean square error.
+pub fn rmse(pred: &[f64], target: &[f64]) -> f64 {
+    assert_eq!(pred.len(), target.len());
+    (pred.iter().zip(target).map(|(p, t)| (p - t) * (p - t)).sum::<f64>()
+        / pred.len().max(1) as f64)
+        .sqrt()
+}
+
+/// The paper's per-task metric: accuracy for classification (higher =
+/// better), MAE for regression (lower = better).
+pub fn task_metric(task: TaskKind, pred: &[f64], target: &[f64]) -> f64 {
+    match task {
+        TaskKind::Classification => accuracy(pred, target),
+        TaskKind::Regression => mae(pred, target),
+    }
+}
+
+/// Is metric `a` better than `b` for this task?
+pub fn better(task: TaskKind, a: f64, b: f64) -> bool {
+    match task {
+        TaskKind::Classification => a > b,
+        TaskKind::Regression => a < b,
+    }
+}
+
+/// The paper's "solved" tolerance (SS6.1 / Fig. 2): within 0.001 of best
+/// accuracy, or within 1% relative of best MAE.
+pub fn solved(task: TaskKind, metric: f64, best: f64) -> bool {
+    match task {
+        TaskKind::Classification => metric >= best - 1e-3,
+        TaskKind::Regression => metric <= best * 1.01,
+    }
+}
+
+/// One point on a convergence trace.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct TracePoint {
+    pub iter: usize,
+    pub secs: f64,
+    /// Task metric (accuracy / MAE) on the test set, if evaluated.
+    pub metric: f64,
+    /// Relative residual ||K_lam w - y|| / ||y||, if evaluated (else NaN).
+    pub residual: f64,
+}
+
+/// A recorded solve trajectory.
+#[derive(Debug, Clone, Default)]
+pub struct Trace {
+    pub points: Vec<TracePoint>,
+}
+
+impl Trace {
+    pub fn push(&mut self, p: TracePoint) {
+        self.points.push(p);
+    }
+
+    pub fn last_metric(&self) -> Option<f64> {
+        self.points.iter().rev().find(|p| p.metric.is_finite()).map(|p| p.metric)
+    }
+
+    pub fn last_residual(&self) -> Option<f64> {
+        self.points.iter().rev().find(|p| p.residual.is_finite()).map(|p| p.residual)
+    }
+
+    /// Best metric achieved and the time it was first reached within
+    /// tolerance (the Fig. 2 "time to solve" statistic).
+    pub fn time_to_solve(&self, task: TaskKind, best: f64) -> Option<f64> {
+        self.points
+            .iter()
+            .find(|p| p.metric.is_finite() && solved(task, p.metric, best))
+            .map(|p| p.secs)
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::Arr(
+            self.points
+                .iter()
+                .map(|p| {
+                    Json::obj(vec![
+                        ("iter", Json::num(p.iter as f64)),
+                        ("secs", Json::num(p.secs)),
+                        ("metric", float_json(p.metric)),
+                        ("residual", float_json(p.residual)),
+                    ])
+                })
+                .collect(),
+        )
+    }
+}
+
+fn float_json(x: f64) -> Json {
+    if x.is_finite() {
+        Json::num(x)
+    } else {
+        Json::Null
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accuracy_counts() {
+        let pred = [0.4, -0.2, 2.0, -0.5];
+        let tgt = [1.0, 1.0, 1.0, -1.0];
+        assert!((accuracy(&pred, &tgt) - 0.75).abs() < 1e-12);
+    }
+
+    #[test]
+    fn mae_rmse_basics() {
+        let pred = [1.0, 3.0];
+        let tgt = [0.0, 0.0];
+        assert!((mae(&pred, &tgt) - 2.0).abs() < 1e-12);
+        assert!((rmse(&pred, &tgt) - (5.0f64).sqrt()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn solved_rules_match_paper() {
+        assert!(solved(TaskKind::Classification, 0.9995, 1.0));
+        assert!(!solved(TaskKind::Classification, 0.99, 1.0));
+        assert!(solved(TaskKind::Regression, 1.009, 1.0));
+        assert!(!solved(TaskKind::Regression, 1.02, 1.0));
+    }
+
+    #[test]
+    fn trace_time_to_solve() {
+        let mut t = Trace::default();
+        t.push(TracePoint { iter: 0, secs: 1.0, metric: 0.5, residual: f64::NAN });
+        t.push(TracePoint { iter: 10, secs: 2.0, metric: 0.95, residual: f64::NAN });
+        t.push(TracePoint { iter: 20, secs: 3.0, metric: 0.99, residual: f64::NAN });
+        assert_eq!(t.time_to_solve(TaskKind::Classification, 0.95), Some(2.0));
+        assert_eq!(t.time_to_solve(TaskKind::Classification, 0.999), None);
+        assert_eq!(t.last_metric(), Some(0.99));
+    }
+
+    #[test]
+    fn trace_json_roundtrips() {
+        let mut t = Trace::default();
+        t.push(TracePoint { iter: 1, secs: 0.5, metric: 0.8, residual: 1e-3 });
+        let j = t.to_json().to_string();
+        assert!(j.contains("\"metric\":0.8"));
+    }
+}

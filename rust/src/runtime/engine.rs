@@ -1,0 +1,122 @@
+//! The PJRT execution engine: compile-on-demand, cached executables.
+
+use super::manifest::{ArtifactMeta, Manifest, ShapeKey};
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::rc::Rc;
+use std::time::Instant;
+use xla::{Literal, PjRtClient, PjRtLoadedExecutable};
+
+/// Execution statistics, for the perf harness.
+#[derive(Debug, Default, Clone)]
+pub struct EngineStats {
+    pub compiles: usize,
+    pub compile_secs: f64,
+    pub executions: usize,
+    pub execute_secs: f64,
+}
+
+/// Owns the PJRT client and a cache of compiled executables.
+///
+/// Not `Send`: each thread that needs an engine should create its own (the
+/// prediction server does exactly this). Executables are handed out as
+/// `Rc` so callers can hold them across iterations without re-locking.
+pub struct Engine {
+    client: PjRtClient,
+    manifest: Manifest,
+    cache: RefCell<HashMap<String, Rc<PjRtLoadedExecutable>>>,
+    stats: RefCell<EngineStats>,
+}
+
+impl Engine {
+    /// Create an engine over the artifact directory produced by
+    /// `make artifacts`.
+    pub fn from_manifest(dir: impl AsRef<std::path::Path>) -> anyhow::Result<Engine> {
+        let manifest = Manifest::load(dir)?;
+        let client = PjRtClient::cpu()?;
+        Ok(Engine { client, manifest, cache: RefCell::new(HashMap::new()), stats: RefCell::new(EngineStats::default()) })
+    }
+
+    /// Engine over an already-parsed manifest (tests).
+    pub fn with_manifest(manifest: Manifest) -> anyhow::Result<Engine> {
+        let client = PjRtClient::cpu()?;
+        Ok(Engine { client, manifest, cache: RefCell::new(HashMap::new()), stats: RefCell::new(EngineStats::default()) })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    pub fn stats(&self) -> EngineStats {
+        self.stats.borrow().clone()
+    }
+
+    /// Compile (or fetch from cache) the executable for an artifact.
+    pub fn executable(&self, meta: &ArtifactMeta) -> anyhow::Result<Rc<PjRtLoadedExecutable>> {
+        let key = meta.cache_key();
+        if let Some(exe) = self.cache.borrow().get(&key) {
+            return Ok(exe.clone());
+        }
+        let path = self.manifest.dir.join(&meta.file);
+        let t0 = Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .map_err(|e| anyhow::anyhow!("loading HLO {path:?}: {e}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = Rc::new(self.client.compile(&comp)?);
+        let dt = t0.elapsed().as_secs_f64();
+        {
+            let mut s = self.stats.borrow_mut();
+            s.compiles += 1;
+            s.compile_secs += dt;
+        }
+        self.cache.borrow_mut().insert(key, exe.clone());
+        Ok(exe)
+    }
+
+    /// Look up an artifact allowing zero padding, compile, return both.
+    pub fn prepare(
+        &self,
+        op: &str,
+        kernel: &str,
+        dtype: &str,
+        want: ShapeKey,
+    ) -> anyhow::Result<(ArtifactMeta, Rc<PjRtLoadedExecutable>)> {
+        let meta = self
+            .manifest
+            .find_padded(op, kernel, dtype, want)
+            .ok_or_else(|| {
+                anyhow::anyhow!(
+                    "no artifact for op={op} kernel={kernel} dtype={dtype} \
+                     n>={} d>={} b={} r={}; re-run `make artifacts` with a larger grid \
+                     (see python/compile/configs.py)",
+                    want.n, want.d, want.b, want.r
+                )
+            })?
+            .clone();
+        let exe = self.executable(&meta)?;
+        Ok((meta, exe))
+    }
+
+    /// Execute with literal inputs (owned or borrowed); returns the
+    /// flattened output tuple.
+    pub fn run<L: std::borrow::Borrow<Literal>>(
+        &self,
+        exe: &PjRtLoadedExecutable,
+        inputs: &[L],
+    ) -> anyhow::Result<Vec<Literal>> {
+        let t0 = Instant::now();
+        let result = exe.execute::<L>(inputs)?[0][0].to_literal_sync()?;
+        let dt = t0.elapsed().as_secs_f64();
+        {
+            let mut s = self.stats.borrow_mut();
+            s.executions += 1;
+            s.execute_secs += dt;
+        }
+        // aot.py lowers with return_tuple=True, so outputs are always a tuple.
+        Ok(result.to_tuple()?)
+    }
+}

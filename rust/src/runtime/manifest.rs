@@ -1,0 +1,222 @@
+//! Artifact manifest: what `make artifacts` produced.
+//!
+//! The manifest is a JSON file written by `python/compile/aot.py`. Each
+//! entry describes one lowered HLO module: the operation name, the kernel
+//! function it was specialized for, and the static shape parameters.
+
+use crate::util::json::{self, Json};
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+/// Static shape/config parameters an artifact was lowered with.
+///
+/// Not every op uses every field; unused fields are zero.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct ShapeKey {
+    /// Number of rows of the "database" point set (training set).
+    pub n: usize,
+    /// Feature dimension.
+    pub d: usize,
+    /// Block size (rows of the "query" point set for matvec ops).
+    pub b: usize,
+    /// Nyström approximation rank.
+    pub r: usize,
+}
+
+/// One lowered HLO module.
+#[derive(Debug, Clone)]
+pub struct ArtifactMeta {
+    /// Operation name, e.g. `askotch_step`, `kmv`, `kblock`, `nystrom`.
+    pub op: String,
+    /// Kernel function baked into the artifact: `rbf`, `laplacian`, `matern52`.
+    pub kernel: String,
+    /// Element type: `f32` or `f64`.
+    pub dtype: String,
+    pub shapes: ShapeKey,
+    /// File name (relative to the artifact directory).
+    pub file: String,
+}
+
+impl ArtifactMeta {
+    /// Unique cache key for the compiled executable.
+    pub fn cache_key(&self) -> String {
+        format!(
+            "{}:{}:{}:n{}d{}b{}r{}",
+            self.op, self.kernel, self.dtype, self.shapes.n, self.shapes.d, self.shapes.b, self.shapes.r
+        )
+    }
+}
+
+/// Parsed manifest plus the directory it lives in.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub artifacts: Vec<ArtifactMeta>,
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: impl AsRef<Path>) -> anyhow::Result<Manifest> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .map_err(|e| anyhow::anyhow!("reading {path:?}: {e}. Run `make artifacts` first."))?;
+        Self::from_json_str(&text, dir)
+    }
+
+    /// Parse manifest JSON (exposed separately for tests).
+    pub fn from_json_str(text: &str, dir: PathBuf) -> anyhow::Result<Manifest> {
+        let root = json::parse(text).map_err(|e| anyhow::anyhow!("manifest parse: {e}"))?;
+        let arts = root
+            .get("artifacts")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow::anyhow!("manifest missing 'artifacts' array"))?;
+        let mut artifacts = Vec::new();
+        for a in arts {
+            let get_str = |k: &str| -> anyhow::Result<String> {
+                Ok(a.get(k)
+                    .and_then(Json::as_str)
+                    .ok_or_else(|| anyhow::anyhow!("artifact missing field '{k}'"))?
+                    .to_string())
+            };
+            let shapes_obj = a
+                .get("shapes")
+                .and_then(Json::as_obj)
+                .cloned()
+                .unwrap_or_else(BTreeMap::new);
+            let dim = |k: &str| shapes_obj.get(k).and_then(Json::as_usize).unwrap_or(0);
+            artifacts.push(ArtifactMeta {
+                op: get_str("op")?,
+                kernel: get_str("kernel")?,
+                dtype: a
+                    .get("dtype")
+                    .and_then(Json::as_str)
+                    .unwrap_or("f32")
+                    .to_string(),
+                shapes: ShapeKey { n: dim("n"), d: dim("d"), b: dim("b"), r: dim("r") },
+                file: get_str("file")?,
+            });
+        }
+        Ok(Manifest { dir, artifacts })
+    }
+
+    /// All artifacts implementing `op` for `kernel`.
+    pub fn candidates(
+        &self,
+        op: &str,
+        kernel: &str,
+        dtype: &str,
+    ) -> impl Iterator<Item = &ArtifactMeta> + '_ {
+        let (op, kernel, dtype) = (op.to_string(), kernel.to_string(), dtype.to_string());
+        self.artifacts
+            .iter()
+            .filter(move |a| a.op == op && a.kernel == kernel && a.dtype == dtype)
+    }
+
+    /// Find the *cheapest* artifact that can serve a request after zero
+    /// padding: `n`, `d`, and `b` may all round up (padded rows are exact
+    /// — see `tensor.rs`), while the Nystrom rank `r` must match exactly
+    /// when requested (it changes the algorithm, not just the shape).
+    /// Cost is modeled as the padded element count `n*d + n*b`.
+    pub fn find_padded(
+        &self,
+        op: &str,
+        kernel: &str,
+        dtype: &str,
+        want: ShapeKey,
+    ) -> Option<&ArtifactMeta> {
+        self.candidates(op, kernel, dtype)
+            .filter(|a| {
+                a.shapes.n >= want.n
+                    && a.shapes.d >= want.d
+                    && a.shapes.b >= want.b
+                    && (want.r == 0 || a.shapes.r == want.r)
+            })
+            .min_by_key(|a| a.shapes.n * a.shapes.d.max(1) + a.shapes.n * a.shapes.b.max(1))
+    }
+
+    /// Exact-match lookup.
+    pub fn find_exact(
+        &self,
+        op: &str,
+        kernel: &str,
+        dtype: &str,
+        want: ShapeKey,
+    ) -> Option<&ArtifactMeta> {
+        self.candidates(op, kernel, dtype).find(|a| a.shapes == want)
+    }
+
+    /// Distinct ops present.
+    pub fn ops(&self) -> Vec<String> {
+        let mut v: Vec<String> = self.artifacts.iter().map(|a| a.op.clone()).collect();
+        v.sort();
+        v.dedup();
+        v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "version": 1,
+      "artifacts": [
+        {"op":"kmv","kernel":"rbf","dtype":"f32","file":"a.hlo.txt",
+         "shapes":{"n":1024,"d":16,"b":64,"r":0}},
+        {"op":"kmv","kernel":"rbf","dtype":"f32","file":"b.hlo.txt",
+         "shapes":{"n":4096,"d":16,"b":64,"r":0}},
+        {"op":"askotch_step","kernel":"laplacian","dtype":"f32","file":"c.hlo.txt",
+         "shapes":{"n":4096,"d":32,"b":64,"r":32}}
+      ]
+    }"#;
+
+    fn manifest() -> Manifest {
+        Manifest::from_json_str(SAMPLE, PathBuf::from("/tmp")).unwrap()
+    }
+
+    #[test]
+    fn parses_entries() {
+        let m = manifest();
+        assert_eq!(m.artifacts.len(), 3);
+        assert_eq!(m.ops(), vec!["askotch_step".to_string(), "kmv".to_string()]);
+    }
+
+    #[test]
+    fn padded_lookup_picks_smallest_fit() {
+        let m = manifest();
+        let a = m
+            .find_padded("kmv", "rbf", "f32", ShapeKey { n: 900, d: 10, b: 64, r: 0 })
+            .unwrap();
+        assert_eq!(a.shapes.n, 1024);
+        let a = m
+            .find_padded("kmv", "rbf", "f32", ShapeKey { n: 2000, d: 16, b: 64, r: 0 })
+            .unwrap();
+        assert_eq!(a.shapes.n, 4096);
+        assert!(m
+            .find_padded("kmv", "rbf", "f32", ShapeKey { n: 8192, d: 16, b: 64, r: 0 })
+            .is_none());
+    }
+
+    #[test]
+    fn rank_must_match() {
+        let m = manifest();
+        assert!(m
+            .find_padded("askotch_step", "laplacian", "f32", ShapeKey { n: 100, d: 8, b: 64, r: 16 })
+            .is_none());
+        assert!(m
+            .find_padded("askotch_step", "laplacian", "f32", ShapeKey { n: 100, d: 8, b: 64, r: 32 })
+            .is_some());
+    }
+
+    #[test]
+    fn exact_lookup() {
+        let m = manifest();
+        assert!(m
+            .find_exact("kmv", "rbf", "f32", ShapeKey { n: 1024, d: 16, b: 64, r: 0 })
+            .is_some());
+        assert!(m
+            .find_exact("kmv", "rbf", "f32", ShapeKey { n: 1025, d: 16, b: 64, r: 0 })
+            .is_none());
+    }
+}

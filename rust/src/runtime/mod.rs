@@ -1,0 +1,23 @@
+//! PJRT runtime: load AOT-compiled HLO artifacts and execute them.
+//!
+//! The Python side (`python/compile/aot.py`) lowers every Layer-1/Layer-2
+//! computation **once** to HLO text plus a `manifest.json` describing the
+//! available (operation, shape, kernel) combinations. This module:
+//!
+//! * parses the manifest ([`manifest::Manifest`]),
+//! * compiles HLO text on the PJRT CPU client on first use and caches the
+//!   loaded executable ([`engine::Engine`]),
+//! * converts between host tensors and `xla::Literal`s, including the
+//!   zero-padding scheme that lets one compiled shape serve a range of
+//!   problem sizes ([`tensor`]).
+//!
+//! Python never runs at this layer: after `make artifacts` the binary is
+//! self-contained.
+
+pub mod engine;
+pub mod manifest;
+pub mod tensor;
+
+pub use engine::Engine;
+pub use manifest::{ArtifactMeta, Manifest};
+pub use tensor::{HostMat, HostVec};

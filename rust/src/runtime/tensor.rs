@@ -1,0 +1,158 @@
+//! Host-side tensors and conversions to/from `xla::Literal`.
+//!
+//! Includes the zero-padding scheme that lets one compiled HLO shape serve
+//! a range of logical problem sizes:
+//!
+//! * **Row padding** (`n -> n_pad`): extra data rows are zero vectors. All
+//!   matvec artifacts multiply by weight entries that are zero for padded
+//!   rows (weights are only ever updated at sampled active indices), so
+//!   padded rows contribute exactly nothing.
+//! * **Column padding** (`d -> d_pad`): zero feature columns add nothing to
+//!   distances `||x - x'||` or inner products, so every kernel function is
+//!   unchanged. Padding is *exact*, not approximate.
+
+use xla::Literal;
+
+/// Row-major host matrix of `f32`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct HostMat {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f32>,
+}
+
+/// Host vector of `f32`.
+pub type HostVec = Vec<f32>;
+
+impl HostMat {
+    pub fn zeros(rows: usize, cols: usize) -> HostMat {
+        HostMat { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    pub fn from_rows(rows: Vec<Vec<f32>>) -> HostMat {
+        let r = rows.len();
+        let c = rows.first().map(|x| x.len()).unwrap_or(0);
+        let mut data = Vec::with_capacity(r * c);
+        for row in &rows {
+            assert_eq!(row.len(), c, "ragged rows");
+            data.extend_from_slice(row);
+        }
+        HostMat { rows: r, cols: c, data }
+    }
+
+    #[inline]
+    pub fn at(&self, i: usize, j: usize) -> f32 {
+        self.data[i * self.cols + j]
+    }
+
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f32] {
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    /// Zero-pad to `(rows_pad, cols_pad)`.
+    pub fn padded(&self, rows_pad: usize, cols_pad: usize) -> HostMat {
+        assert!(rows_pad >= self.rows && cols_pad >= self.cols, "padding must grow");
+        if rows_pad == self.rows && cols_pad == self.cols {
+            return self.clone();
+        }
+        let mut out = HostMat::zeros(rows_pad, cols_pad);
+        for i in 0..self.rows {
+            out.data[i * cols_pad..i * cols_pad + self.cols].copy_from_slice(self.row(i));
+        }
+        out
+    }
+
+    /// Select a subset of rows.
+    pub fn gather_rows(&self, idx: &[usize]) -> HostMat {
+        let mut out = HostMat::zeros(idx.len(), self.cols);
+        for (k, &i) in idx.iter().enumerate() {
+            out.data[k * self.cols..(k + 1) * self.cols].copy_from_slice(self.row(i));
+        }
+        out
+    }
+
+    /// Convert to a 2-D literal.
+    pub fn literal(&self) -> anyhow::Result<Literal> {
+        Ok(Literal::vec1(&self.data).reshape(&[self.rows as i64, self.cols as i64])?)
+    }
+}
+
+/// Zero-pad a vector to `len_pad`.
+pub fn pad_vec(v: &[f32], len_pad: usize) -> Vec<f32> {
+    assert!(len_pad >= v.len());
+    let mut out = v.to_vec();
+    out.resize(len_pad, 0.0);
+    out
+}
+
+/// 1-D f32 literal.
+pub fn vec_literal(v: &[f32]) -> Literal {
+    Literal::vec1(v)
+}
+
+/// 1-D i32 literal from usize indices.
+pub fn idx_literal(idx: &[usize]) -> Literal {
+    let v: Vec<i32> = idx.iter().map(|&i| i as i32).collect();
+    Literal::vec1(&v)
+}
+
+/// Scalar f32 literal.
+pub fn scalar_literal(x: f32) -> Literal {
+    Literal::scalar(x)
+}
+
+/// Extract an f32 vector from a literal, truncated to `len`.
+pub fn literal_to_vec(lit: &Literal, len: usize) -> anyhow::Result<Vec<f32>> {
+    let mut v = lit.to_vec::<f32>()?;
+    anyhow::ensure!(v.len() >= len, "literal too short: {} < {}", v.len(), len);
+    v.truncate(len);
+    Ok(v)
+}
+
+/// Extract a scalar f32 from a literal.
+pub fn literal_to_scalar(lit: &Literal) -> anyhow::Result<f32> {
+    Ok(lit.get_first_element::<f32>()?)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn padding_preserves_content() {
+        let m = HostMat::from_rows(vec![vec![1.0, 2.0], vec![3.0, 4.0]]);
+        let p = m.padded(4, 3);
+        assert_eq!(p.rows, 4);
+        assert_eq!(p.cols, 3);
+        assert_eq!(p.at(0, 0), 1.0);
+        assert_eq!(p.at(1, 1), 4.0);
+        assert_eq!(p.at(0, 2), 0.0);
+        assert_eq!(p.at(3, 0), 0.0);
+    }
+
+    #[test]
+    fn padding_noop_when_equal() {
+        let m = HostMat::from_rows(vec![vec![1.0], vec![2.0]]);
+        assert_eq!(m.padded(2, 1), m);
+    }
+
+    #[test]
+    fn gather_rows_selects() {
+        let m = HostMat::from_rows(vec![vec![0.0], vec![1.0], vec![2.0]]);
+        let g = m.gather_rows(&[2, 0]);
+        assert_eq!(g.data, vec![2.0, 0.0]);
+    }
+
+    #[test]
+    fn pad_vec_grows_with_zeros() {
+        assert_eq!(pad_vec(&[1.0, 2.0], 4), vec![1.0, 2.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn padding_cannot_shrink() {
+        let m = HostMat::zeros(3, 3);
+        let _ = m.padded(2, 3);
+    }
+}

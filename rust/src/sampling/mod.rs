@@ -1,0 +1,288 @@
+//! Block coordinate sampling (paper SS2.4, SS3.1).
+//!
+//! * [`UniformSampler`] — the paper's recommended default: `b` distinct
+//!   uniform indices per iteration.
+//! * [`ArlsSampler`] — ARLS_c sampling (Definition 9): i.i.d. draws from
+//!   rounded approximate ridge-leverage-score probabilities, duplicates
+//!   discarded. Scores come from [`bless_rls`], a BLESS-style bottom-up
+//!   estimator (Rudi et al. 2018) with the paper's `k = O(sqrt n)` cap.
+
+use crate::config::KernelKind;
+use crate::kernels;
+use crate::linalg::{Chol, Mat};
+use crate::util::Rng;
+
+/// Exact lambda-ridge leverage scores, `diag(K (K + lam I)^-1)` — O(n^3),
+/// for tests and small-n validation only.
+pub fn exact_rls(k: &Mat, lam: f64) -> Vec<f64> {
+    let n = k.rows;
+    let mut klam = k.clone();
+    klam.add_diag(lam);
+    let ch = Chol::new(&klam, 0.0).expect("K + lam I must be spd");
+    // column i of (K+lam I)^-1 K = solve(K e_i); score_i = row i of K * col
+    let mut out = vec![0.0; n];
+    for i in 0..n {
+        let ki: Vec<f64> = (0..n).map(|j| k[(i, j)]).collect();
+        let col = ch.solve(&ki);
+        out[i] = col[i].clamp(0.0, 1.0);
+    }
+    out
+}
+
+/// BLESS-style approximate ridge leverage scores.
+///
+/// Bottom-up: start from a small uniform dictionary at a large
+/// regularization, repeatedly (a) estimate all `n` scores through the
+/// dictionary's Nystrom projection, (b) resample a dictionary
+/// proportional to the scores, (c) decrease the regularization
+/// geometrically until it reaches `lam`. Dictionary size is capped at
+/// `q_max` (the paper recommends O(sqrt n) so BLESS stays ~O(n^2) total).
+///
+/// Returned scores are inflated by 2x so they behave as the
+/// c-approximation *overestimates* that Definition 3 requires; this is
+/// validated against `exact_rls` on small problems in the tests.
+pub fn bless_rls(
+    x: &[f64],
+    n: usize,
+    d: usize,
+    kind: KernelKind,
+    sigma: f64,
+    lam: f64,
+    q_max: usize,
+    rng: &mut Rng,
+) -> Vec<f64> {
+    assert!(n > 0 && q_max > 0);
+    let q_max = q_max.min(n);
+    // Regularization schedule: from lam0 ~ n down to lam, halving.
+    let mut lam_t = (n as f64).max(lam * 2.0);
+    // Initial dictionary: small uniform sample.
+    let mut dict: Vec<usize> = rng.sample_distinct(n, q_max.min(16).max(1));
+    let mut scores = vec![1.0; n];
+    loop {
+        lam_t = (lam_t / 2.0).max(lam);
+        scores = nystrom_rls_estimate(x, n, d, kind, sigma, lam_t, &dict, rng);
+        // Resample dictionary proportional to current scores.
+        let target = q_max.min(((scores.iter().sum::<f64>() * 2.0).ceil() as usize).max(8));
+        dict = sample_weighted_distinct(&scores, target, rng);
+        if lam_t <= lam {
+            break;
+        }
+    }
+    // Inflate to overestimates (c-approximation slack).
+    for s in scores.iter_mut() {
+        *s = (*s * 2.0).clamp(1e-12, 1.0);
+    }
+    scores
+}
+
+/// RLS estimate through a dictionary:
+/// `l_i ~= (1/lam) (K_ii - k_iD (K_DD + lam I)^-1 k_Di)`, clipped to [0,1].
+fn nystrom_rls_estimate(
+    x: &[f64],
+    n: usize,
+    d: usize,
+    kind: KernelKind,
+    sigma: f64,
+    lam: f64,
+    dict: &[usize],
+    _rng: &mut Rng,
+) -> Vec<f64> {
+    let q = dict.len();
+    let mut kdd = kernels::block(kind, x, d, dict, sigma);
+    kdd.add_diag(lam);
+    let ch = Chol::new(&kdd, 1e-10 * q as f64).expect("K_DD + lam I spd");
+    (0..n)
+        .map(|i| {
+            let xi = &x[i * d..(i + 1) * d];
+            let kid: Vec<f64> = dict
+                .iter()
+                .map(|&j| kernels::eval(kind, xi, &x[j * d..(j + 1) * d], sigma))
+                .collect();
+            let sol = ch.solve(&kid);
+            let kii = 1.0; // normalized radial kernels
+            let proj: f64 = kid.iter().zip(&sol).map(|(a, b)| a * b).sum();
+            ((kii - proj) / lam).clamp(0.0, 1.0)
+        })
+        .collect()
+}
+
+/// Sample up to `k` *distinct* indices with probability proportional to
+/// weights (repeated i.i.d. draws, duplicates discarded — the ARLS way).
+fn sample_weighted_distinct(weights: &[f64], k: usize, rng: &mut Rng) -> Vec<usize> {
+    let mut seen = std::collections::HashSet::new();
+    let mut out = Vec::new();
+    // 4k draws is plenty: duplicates only matter for very peaked scores.
+    for _ in 0..(4 * k.max(1)) {
+        if out.len() >= k {
+            break;
+        }
+        let i = rng.weighted(weights);
+        if seen.insert(i) {
+            out.push(i);
+        }
+    }
+    if out.is_empty() {
+        out.push(rng.below(weights.len()));
+    }
+    out
+}
+
+/// Trait for per-iteration block samplers.
+pub trait BlockSampler {
+    /// Sample a block of (up to) `b` distinct coordinates from `[0, n)`.
+    fn sample_block(&mut self, n: usize, b: usize) -> Vec<usize>;
+    fn name(&self) -> &'static str;
+}
+
+/// Uniform distinct sampling (the paper's default `P`).
+pub struct UniformSampler {
+    rng: Rng,
+}
+
+impl UniformSampler {
+    pub fn new(seed: u64) -> Self {
+        UniformSampler { rng: Rng::new(seed) }
+    }
+}
+
+impl BlockSampler for UniformSampler {
+    fn sample_block(&mut self, n: usize, b: usize) -> Vec<usize> {
+        self.rng.sample_distinct(n, b.min(n))
+    }
+    fn name(&self) -> &'static str {
+        "uniform"
+    }
+}
+
+/// ARLS_c sampling (Definition 9): probabilities are the *rounded*
+/// leverage scores p_i = (l~/n) ceil(n l~_i / l~); i.i.d. draws with
+/// duplicates discarded. Blocks may therefore be slightly smaller than
+/// `b`; the HLO step pads by repeating the last index (harmless: the
+/// projection treats a duplicated coordinate as one).
+pub struct ArlsSampler {
+    probs: Vec<f64>,
+    rng: Rng,
+}
+
+impl ArlsSampler {
+    /// Build from approximate leverage scores (e.g. [`bless_rls`]).
+    pub fn from_scores(scores: &[f64], seed: u64) -> Self {
+        let n = scores.len();
+        let total: f64 = scores.iter().sum();
+        let probs = scores
+            .iter()
+            .map(|&s| {
+                // Definition 9 rounding
+                let t = (n as f64 / total * s).ceil();
+                (total / n as f64) * t
+            })
+            .collect();
+        ArlsSampler { probs, rng: Rng::new(seed) }
+    }
+
+    pub fn probs(&self) -> &[f64] {
+        &self.probs
+    }
+}
+
+impl BlockSampler for ArlsSampler {
+    fn sample_block(&mut self, n: usize, b: usize) -> Vec<usize> {
+        assert_eq!(n, self.probs.len());
+        let mut block = sample_weighted_distinct(&self.probs, b.min(n), &mut self.rng);
+        // pad to b by repeating the last element (see struct docs)
+        while block.len() < b.min(n) {
+            block.push(*block.last().unwrap());
+        }
+        block
+    }
+    fn name(&self) -> &'static str {
+        "arls"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toy_x(n: usize, d: usize, seed: u64) -> Vec<f64> {
+        let mut rng = Rng::new(seed);
+        (0..n * d).map(|_| rng.normal()).collect()
+    }
+
+    #[test]
+    fn exact_rls_properties() {
+        let x = toy_x(40, 3, 0);
+        let idx: Vec<usize> = (0..40).collect();
+        let k = kernels::block(KernelKind::Rbf, &x, 3, &idx, 1.0);
+        let lam = 0.1;
+        let rls = exact_rls(&k, lam);
+        assert!(rls.iter().all(|&v| (0.0..=1.0).contains(&v)));
+        // sum = effective dimension = tr(K (K+lam)^-1)
+        let eig = crate::linalg::SymEig::jacobi(&k, 60);
+        let deff = crate::linalg::eig::effective_dimension(&eig.values, lam);
+        let total: f64 = rls.iter().sum();
+        assert!((total - deff).abs() < 1e-6, "{total} vs {deff}");
+    }
+
+    #[test]
+    fn bless_overestimates_exact_scores() {
+        let n = 60;
+        let x = toy_x(n, 2, 1);
+        let idx: Vec<usize> = (0..n).collect();
+        let k = kernels::block(KernelKind::Rbf, &x, 2, &idx, 1.0);
+        let lam = 0.5;
+        let exact = exact_rls(&k, lam);
+        let mut rng = Rng::new(2);
+        let approx = bless_rls(&x, n, 2, KernelKind::Rbf, 1.0, lam, n, &mut rng);
+        // Definition 3: overestimate each score...
+        let violations = exact
+            .iter()
+            .zip(&approx)
+            .filter(|(e, a)| **a < **e * 0.99)
+            .count();
+        assert!(violations == 0, "{violations} underestimates");
+        // ...with bounded total mass (c-approximation)
+        let c = approx.iter().sum::<f64>() / exact.iter().sum::<f64>();
+        assert!(c < 10.0, "total mass blew up: c={c}");
+    }
+
+    #[test]
+    fn uniform_sampler_blocks_are_distinct() {
+        let mut s = UniformSampler::new(0);
+        for _ in 0..50 {
+            let b = s.sample_block(100, 16);
+            assert_eq!(b.len(), 16);
+            let set: std::collections::HashSet<_> = b.iter().collect();
+            assert_eq!(set.len(), 16);
+        }
+    }
+
+    #[test]
+    fn arls_sampler_prefers_high_leverage() {
+        let mut scores = vec![0.01; 100];
+        scores[7] = 1.0;
+        scores[42] = 1.0;
+        let mut s = ArlsSampler::from_scores(&scores, 3);
+        let mut hits7 = 0;
+        for _ in 0..200 {
+            let b = s.sample_block(100, 10);
+            if b.contains(&7) {
+                hits7 += 1;
+            }
+        }
+        assert!(hits7 > 150, "high-leverage point sampled only {hits7}/200");
+    }
+
+    #[test]
+    fn arls_rounding_is_overestimate() {
+        let scores = vec![0.3, 0.1, 0.05, 0.2];
+        let s = ArlsSampler::from_scores(&scores, 0);
+        let total: f64 = scores.iter().sum();
+        for (p, sc) in s.probs().iter().zip(&scores) {
+            // p_i >= l_i by the ceil rounding
+            assert!(*p >= *sc - 1e-12, "{p} < {sc}");
+            // and within one quantum
+            assert!(*p <= sc + total / 4.0 + 1e-12);
+        }
+    }
+}

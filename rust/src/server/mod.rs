@@ -1,0 +1,159 @@
+//! Batched prediction server: the serving path for a trained KRR model.
+//!
+//! A dedicated engine thread owns the (non-`Send`) PJRT engine and the
+//! trained weights; client threads submit feature vectors over an mpsc
+//! channel. The engine thread drains the queue into dynamic batches (up
+//! to `max_batch`, bounded linger) and answers each request with one
+//! tiled `kmv` execution — the same dynamic-batching structure a GPU
+//! serving stack would use, with the batch dimension amortizing the
+//! artifact invocation overhead.
+
+use crate::config::KernelKind;
+use crate::coordinator::runtime_ops;
+use crate::runtime::Engine;
+use std::sync::mpsc;
+use std::time::{Duration, Instant};
+
+/// A prediction request: features plus a reply channel.
+pub struct Request {
+    pub features: Vec<f64>,
+    pub reply: mpsc::Sender<anyhow::Result<f64>>,
+}
+
+/// Server configuration.
+#[derive(Debug, Clone)]
+pub struct ServerConfig {
+    pub max_batch: usize,
+    pub linger: Duration,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        ServerConfig { max_batch: 256, linger: Duration::from_millis(2) }
+    }
+}
+
+/// Aggregate serving statistics.
+#[derive(Debug, Default, Clone)]
+pub struct ServerStats {
+    pub requests: usize,
+    pub batches: usize,
+    pub max_batch_seen: usize,
+    pub busy_secs: f64,
+}
+
+impl ServerStats {
+    pub fn mean_batch(&self) -> f64 {
+        if self.batches == 0 {
+            0.0
+        } else {
+            self.requests as f64 / self.batches as f64
+        }
+    }
+}
+
+/// The trained model a server hosts.
+pub struct ModelSnapshot {
+    pub kernel: KernelKind,
+    pub sigma: f64,
+    pub x_train: Vec<f64>,
+    pub n: usize,
+    pub d: usize,
+    pub weights: Vec<f64>,
+}
+
+/// Run the serving loop until the request channel closes. Returns stats.
+///
+/// Call from a thread that owns `engine` (the engine is not `Send`).
+pub fn serve(
+    engine: &Engine,
+    model: &ModelSnapshot,
+    rx: mpsc::Receiver<Request>,
+    cfg: &ServerConfig,
+) -> ServerStats {
+    let mut stats = ServerStats::default();
+    loop {
+        // Block for the first request of a batch.
+        let first = match rx.recv() {
+            Ok(r) => r,
+            Err(_) => break, // channel closed: shut down
+        };
+        let mut batch = vec![first];
+        let deadline = Instant::now() + cfg.linger;
+        while batch.len() < cfg.max_batch {
+            let now = Instant::now();
+            if now >= deadline {
+                break;
+            }
+            match rx.recv_timeout(deadline - now) {
+                Ok(r) => batch.push(r),
+                Err(mpsc::RecvTimeoutError::Timeout) => break,
+                Err(mpsc::RecvTimeoutError::Disconnected) => break,
+            }
+        }
+
+        let t0 = Instant::now();
+        let mut x_eval = Vec::with_capacity(batch.len() * model.d);
+        let mut ok_shape = Vec::with_capacity(batch.len());
+        for r in &batch {
+            if r.features.len() == model.d {
+                x_eval.extend_from_slice(&r.features);
+                ok_shape.push(true);
+            } else {
+                // keep the slab aligned; this slot gets an error reply
+                x_eval.extend(std::iter::repeat(0.0).take(model.d));
+                ok_shape.push(false);
+            }
+        }
+        let preds = runtime_ops::predict(
+            engine,
+            model.kernel,
+            &model.x_train,
+            model.n,
+            model.d,
+            &model.weights,
+            &x_eval,
+            batch.len(),
+            model.sigma,
+        );
+        stats.busy_secs += t0.elapsed().as_secs_f64();
+        stats.batches += 1;
+        stats.requests += batch.len();
+        stats.max_batch_seen = stats.max_batch_seen.max(batch.len());
+
+        match preds {
+            Ok(p) => {
+                for (k, req) in batch.into_iter().enumerate() {
+                    let reply = if ok_shape[k] {
+                        Ok(p[k])
+                    } else {
+                        Err(anyhow::anyhow!(
+                            "feature dim mismatch: got {}, want {}",
+                            req.features.len(),
+                            model.d
+                        ))
+                    };
+                    let _ = req.reply.send(reply);
+                }
+            }
+            Err(e) => {
+                for req in batch {
+                    let _ = req.reply.send(Err(anyhow::anyhow!("predict failed: {e}")));
+                }
+            }
+        }
+    }
+    stats
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_mean_batch() {
+        let s = ServerStats { requests: 10, batches: 4, max_batch_seen: 4, busy_secs: 0.0 };
+        assert!((s.mean_batch() - 2.5).abs() < 1e-12);
+        assert_eq!(ServerStats::default().mean_batch(), 0.0);
+    }
+}

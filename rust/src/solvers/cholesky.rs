@@ -1,0 +1,71 @@
+//! Exact dense Cholesky solver — the O(n^3) direct method the paper's
+//! introduction rules out at scale. Kept for ground truth on small
+//! problems and for the Table 2 scaling measurements.
+
+use crate::coordinator::{Budget, KrrProblem, SolveReport};
+use crate::kernels;
+use crate::linalg::Chol;
+use crate::metrics::Trace;
+use crate::runtime::Engine;
+use crate::solvers::{eval_point, Solver};
+use std::time::Instant;
+
+/// Hard cap: beyond this the dense build/factorization is pointless on a
+/// CPU testbed (that is the paper's whole argument).
+pub const MAX_N: usize = 4096;
+
+#[derive(Default)]
+pub struct CholeskySolver;
+
+impl CholeskySolver {
+    pub fn new() -> Self {
+        CholeskySolver
+    }
+
+    /// Solve exactly and return the weights (shared with tests).
+    pub fn solve_weights(problem: &KrrProblem) -> anyhow::Result<Vec<f64>> {
+        let n = problem.n();
+        anyhow::ensure!(
+            n <= MAX_N,
+            "direct Cholesky capped at n={MAX_N} (got {n}); use an iterative solver"
+        );
+        let idx: Vec<usize> = (0..n).collect();
+        let mut k = kernels::block(problem.kernel, &problem.train.x, problem.d(), &idx, problem.sigma);
+        k.add_diag(problem.lam);
+        let ch = Chol::new(&k, 1e-10 * n as f64)?;
+        Ok(ch.solve(&problem.train.y))
+    }
+}
+
+impl Solver for CholeskySolver {
+    fn name(&self) -> String {
+        "cholesky".into()
+    }
+
+    fn run(
+        &mut self,
+        engine: &Engine,
+        problem: &KrrProblem,
+        _budget: &Budget,
+    ) -> anyhow::Result<SolveReport> {
+        let t0 = Instant::now();
+        let w = Self::solve_weights(problem)?;
+        let mut trace = Trace::default();
+        let metric =
+            eval_point(engine, problem, &w, 1, t0.elapsed().as_secs_f64(), &mut trace, f64::NAN)?;
+        let n = problem.n();
+        Ok(SolveReport {
+            solver: self.name(),
+            problem: problem.name.clone(),
+            task: problem.task,
+            iters: 1,
+            wall_secs: t0.elapsed().as_secs_f64(),
+            trace,
+            final_metric: metric,
+            final_residual: 0.0,
+            weights: w,
+            state_bytes: n * n * 8,
+            diverged: false,
+        })
+    }
+}

@@ -1,0 +1,189 @@
+//! Falkon-style inducing-points KRR baseline (paper SS4.2).
+//!
+//! Solves the m-dimensional system (paper eq. 5)
+//!     (K_nm^T K_nm + lam K_mm) w = K_nm^T y
+//! by preconditioned CG. The O(nm) products K_nm v / K_nm^T u run through
+//! the `kmv` artifacts; the m x m preconditioner (K_mm + delta I)^{-1} is
+//! a host Cholesky — exactly the memory object whose O(m^2) footprint
+//! limits inducing-points methods (Table 1 "Memory-efficient? NO").
+
+use crate::config::ExperimentConfig;
+use crate::coordinator::{runtime_ops, Budget, KrrProblem, SolveReport};
+use crate::kernels;
+use crate::linalg::{dense, Chol};
+use crate::metrics::{Trace, TracePoint};
+use crate::runtime::Engine;
+use crate::solvers::{eval_every, looks_diverged, Solver};
+use crate::util::Rng;
+use std::time::Instant;
+
+#[derive(Debug, Clone)]
+pub struct FalkonConfig {
+    /// Number of inducing points.
+    pub m: usize,
+    pub seed: u64,
+}
+
+impl Default for FalkonConfig {
+    fn default() -> Self {
+        FalkonConfig { m: 1024, seed: 0 }
+    }
+}
+
+pub struct FalkonSolver {
+    pub cfg: FalkonConfig,
+}
+
+impl FalkonSolver {
+    pub fn new(cfg: FalkonConfig) -> Self {
+        FalkonSolver { cfg }
+    }
+
+    pub fn from_config(cfg: &ExperimentConfig) -> Self {
+        // Paper regime: m << n (their m/n is ~1e-4..1e-2; memory caps m).
+        // m = n/8 keeps the inducing-points character at testbed scale.
+        FalkonSolver { cfg: FalkonConfig { m: 1024.min((cfg.n / 8).max(16)), seed: cfg.seed } }
+    }
+}
+
+impl Solver for FalkonSolver {
+    fn name(&self) -> String {
+        format!("falkon(m={})", self.cfg.m)
+    }
+
+    fn run(
+        &mut self,
+        engine: &Engine,
+        problem: &KrrProblem,
+        budget: &Budget,
+    ) -> anyhow::Result<SolveReport> {
+        let (n, d) = (problem.n(), problem.d());
+        let m = self.cfg.m.min(n);
+        let lam = problem.lam;
+        let t0 = Instant::now();
+
+        // Inducing points: uniform sample without replacement (SC.2.2).
+        let mut rng = Rng::new(self.cfg.seed ^ 0xFA1C);
+        let centers = rng.sample_distinct(n, m);
+        let mut xm = Vec::with_capacity(m * d);
+        for &c in &centers {
+            xm.extend_from_slice(problem.train.row(c));
+        }
+
+        // K_mm and its Cholesky preconditioner (the O(m^2)/O(m^3) cost).
+        let kmm = kernels::block(problem.kernel, &problem.train.x, d, &centers, problem.sigma);
+        let mut kmm_reg = kmm.clone();
+        kmm_reg.add_diag(lam + 1e-8 * m as f64);
+        let pre = Chol::new(&kmm_reg, 0.0)?;
+
+        // Operator A(v) = K_nm^T (K_nm v) + lam K_mm v via artifacts.
+        let apply = |v: &[f64]| -> anyhow::Result<Vec<f64>> {
+            let t = runtime_ops::kernel_matvec(
+                engine, problem.kernel, &problem.train.x, n, &xm, m, d, v, problem.sigma,
+            )?;
+            let mut s = runtime_ops::kernel_matvec(
+                engine, problem.kernel, &xm, m, &problem.train.x, n, d, &t, problem.sigma,
+            )?;
+            let kv = kmm.matvec(v);
+            for i in 0..m {
+                s[i] += lam * kv[i];
+            }
+            Ok(s)
+        };
+
+        // rhs = K_nm^T y.
+        let rhs = runtime_ops::kernel_matvec(
+            engine,
+            problem.kernel,
+            &xm,
+            m,
+            &problem.train.x,
+            n,
+            d,
+            &problem.train.y,
+            problem.sigma,
+        )?;
+        let rhs_norm = dense::norm(&rhs).max(1e-300);
+
+        // Preconditioned CG on the m-dimensional system.
+        let mut w = vec![0.0f64; m];
+        let mut res = rhs.clone();
+        let mut z = pre.solve(&res);
+        let mut p = z.clone();
+        let mut rz = dense::dot(&res, &z);
+
+        let eval_stride = eval_every(budget, 20);
+        let mut trace = Trace::default();
+        let mut diverged = false;
+        let mut iters = 0;
+        while !budget.exhausted(iters, t0.elapsed().as_secs_f64()) {
+            let ap = apply(&p)?;
+            let pap = dense::dot(&p, &ap);
+            if pap <= 0.0 || !pap.is_finite() {
+                diverged = !pap.is_finite();
+                break;
+            }
+            let alpha = rz / pap;
+            for i in 0..m {
+                w[i] += alpha * p[i];
+                res[i] -= alpha * ap[i];
+            }
+            z = pre.solve(&res);
+            let rz_new = dense::dot(&res, &z);
+            let beta = rz_new / rz;
+            rz = rz_new;
+            for i in 0..m {
+                p[i] = z[i] + beta * p[i];
+            }
+            iters += 1;
+
+            if iters % eval_stride == 0 || budget.exhausted(iters, t0.elapsed().as_secs_f64()) {
+                if looks_diverged(&w) {
+                    diverged = true;
+                    break;
+                }
+                // Inducing-points prediction: K(test, Xm) w.
+                let pred = runtime_ops::predict(
+                    engine,
+                    problem.kernel,
+                    &xm,
+                    m,
+                    d,
+                    &w,
+                    &problem.test.x,
+                    problem.test.n,
+                    problem.sigma,
+                )?;
+                let metric = crate::metrics::task_metric(problem.task, &pred, &problem.test.y);
+                let rel = dense::norm(&res) / rhs_norm;
+                trace.push(TracePoint {
+                    iter: iters,
+                    secs: t0.elapsed().as_secs_f64(),
+                    metric,
+                    residual: rel,
+                });
+                if rel < 1e-12 {
+                    break;
+                }
+            }
+        }
+
+        let final_metric = trace.last_metric().unwrap_or(f64::NAN);
+        let final_residual = trace.last_residual().unwrap_or(f64::NAN);
+        // K_mm + its factor dominate: 2 m^2 f64.
+        let state_bytes = 2 * m * m * 8 + 4 * m * 8;
+        Ok(SolveReport {
+            solver: self.name(),
+            problem: problem.name.clone(),
+            task: problem.task,
+            iters,
+            wall_secs: t0.elapsed().as_secs_f64(),
+            trace,
+            final_metric,
+            final_residual,
+            weights: w,
+            state_bytes,
+            diverged,
+        })
+    }
+}

@@ -1,0 +1,91 @@
+//! KRR solvers: the paper's contribution (ASkotch/Skotch) plus every
+//! baseline it is evaluated against (PCG, Falkon, EigenPro, exact
+//! Cholesky). All heavy kernel products run through the AOT artifacts.
+
+pub mod askotch;
+pub mod cholesky;
+pub mod eigenpro;
+pub mod falkon;
+pub mod pcg;
+
+use crate::coordinator::{Budget, KrrProblem, SolveReport};
+use crate::metrics::{TracePoint, Trace};
+use crate::runtime::Engine;
+
+/// A KRR solver that can be driven by the coordinator.
+pub trait Solver {
+    fn name(&self) -> String;
+
+    /// Run until the budget is exhausted (or convergence/divergence).
+    fn run(
+        &mut self,
+        engine: &Engine,
+        problem: &KrrProblem,
+        budget: &Budget,
+    ) -> anyhow::Result<SolveReport>;
+}
+
+/// Shared trace-evaluation cadence: evaluate the test metric roughly
+/// `target_points` times over the budget without dominating runtime.
+pub fn eval_every(budget: &Budget, target_points: usize) -> usize {
+    (budget.max_iters / target_points.max(1)).max(1)
+}
+
+/// Helper: evaluate test metric for full-KRR weights and append a trace
+/// point. Returns the metric.
+#[allow(clippy::too_many_arguments)]
+pub fn eval_point(
+    engine: &Engine,
+    problem: &KrrProblem,
+    weights: &[f64],
+    iter: usize,
+    secs: f64,
+    trace: &mut Trace,
+    residual: f64,
+) -> anyhow::Result<f64> {
+    let pred = crate::coordinator::runtime_ops::predict(
+        engine,
+        problem.kernel,
+        &problem.train.x,
+        problem.n(),
+        problem.d(),
+        weights,
+        &problem.test.x,
+        problem.test.n,
+        problem.sigma,
+    )?;
+    let metric = crate::metrics::task_metric(problem.task, &pred, &problem.test.y);
+    trace.push(TracePoint { iter, secs, metric, residual });
+    Ok(metric)
+}
+
+/// Divergence heuristic shared by the iterative solvers.
+pub fn looks_diverged(weights: &[f64]) -> bool {
+    let mut sq = 0.0f64;
+    for &w in weights {
+        if !w.is_finite() {
+            return true;
+        }
+        sq += w * w;
+    }
+    sq > 1e24
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn eval_cadence() {
+        let b = Budget::iterations(100);
+        assert_eq!(eval_every(&b, 10), 10);
+        assert_eq!(eval_every(&Budget::iterations(5), 10), 1);
+    }
+
+    #[test]
+    fn divergence_detector() {
+        assert!(!looks_diverged(&[1.0, -2.0]));
+        assert!(looks_diverged(&[f64::NAN]));
+        assert!(looks_diverged(&[1e13, 1e13]));
+    }
+}

@@ -1,0 +1,310 @@
+//! Full-KRR preconditioned conjugate gradient — the paper's strongest
+//! classical baseline (SS4.1). O(n^2) per iteration through the full
+//! `kmv` artifact; rank-r Nystrom preconditioner built at setup.
+//!
+//! Two preconditioner constructions, mirroring the paper's comparisons:
+//! * `Rpc` — column (pivoted) Nystrom from r uniformly sampled columns,
+//!   O(n r d) setup (randomly-pivoted-Cholesky-style).
+//! * `Gaussian` — Gaussian sketch Y = K Omega, needing r full O(n^2)
+//!   matvecs at setup. This is the construction whose setup cost blows up
+//!   at scale (Fig. 1: "fails to complete a single iteration").
+
+use crate::config::ExperimentConfig;
+use crate::coordinator::{runtime_ops, Budget, KrrProblem, SolveReport};
+use crate::kernels;
+use crate::linalg::{dense, Chol, Mat};
+use crate::metrics::Trace;
+use crate::runtime::Engine;
+use crate::solvers::{eval_every, eval_point, looks_diverged, Solver};
+use crate::util::Rng;
+use std::time::Instant;
+
+/// Preconditioner construction.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PcgPrecond {
+    Rpc,
+    Gaussian,
+    /// No preconditioner (plain CG), for ablations.
+    None,
+}
+
+#[derive(Debug, Clone)]
+pub struct PcgConfig {
+    pub rank: usize,
+    pub precond: PcgPrecond,
+    pub seed: u64,
+    /// Use exact f64 host matvecs instead of the f32 artifact (the
+    /// paper's double-precision PCG; only sensible at small n).
+    pub f64_matvec: bool,
+}
+
+impl Default for PcgConfig {
+    fn default() -> Self {
+        PcgConfig { rank: 50, precond: PcgPrecond::Rpc, seed: 0, f64_matvec: false }
+    }
+}
+
+pub struct PcgSolver {
+    pub cfg: PcgConfig,
+}
+
+/// Woodbury application of `(B B^T + rho I)^{-1}`.
+struct NystromPrecond {
+    b_factor: Mat,
+    core: Chol,
+    rho: f64,
+}
+
+impl NystromPrecond {
+    fn new(b_factor: Mat, rho: f64) -> anyhow::Result<NystromPrecond> {
+        let mut core = b_factor.gram();
+        core.add_diag(rho);
+        let core = Chol::new(&core, 0.0)?;
+        Ok(NystromPrecond { b_factor, core, rho })
+    }
+
+    fn apply(&self, v: &[f64]) -> Vec<f64> {
+        let btv = self.b_factor.matvec_t(v);
+        let s = self.core.solve(&btv);
+        let bs = self.b_factor.matvec(&s);
+        v.iter().zip(&bs).map(|(x, y)| (x - y) / self.rho).collect()
+    }
+}
+
+impl PcgSolver {
+    pub fn from_config(cfg: &ExperimentConfig) -> Self {
+        PcgSolver { cfg: PcgConfig { rank: cfg.rank, ..PcgConfig::default() } }
+    }
+
+    pub fn new(cfg: PcgConfig) -> Self {
+        PcgSolver { cfg }
+    }
+
+    /// Column-Nystrom B-factor from uniformly sampled pivots.
+    fn rpc_b_factor(&self, problem: &KrrProblem) -> anyhow::Result<Mat> {
+        let (n, d) = (problem.n(), problem.d());
+        let r = self.cfg.rank.min(n);
+        let mut rng = Rng::new(self.cfg.seed ^ 0x9C6);
+        let pivots = rng.sample_distinct(n, r);
+        // C = K(:, S): n x r, O(n r d)
+        let mut c = Mat::zeros(n, r);
+        for i in 0..n {
+            let xi = problem.train.row(i);
+            for (j, &p) in pivots.iter().enumerate() {
+                c[(i, j)] =
+                    kernels::eval(problem.kernel, xi, problem.train.row(p), problem.sigma);
+            }
+        }
+        // W = K_SS; B = C chol(W)^{-T}
+        let w = kernels::block(problem.kernel, &problem.train.x, d, &pivots, problem.sigma);
+        let ch = Chol::new(&w, 1e-8 * r as f64)?;
+        // B row i solves: B[i,:] = solve_lower(L, C[i,:]) since
+        // K_hat = C W^-1 C^T = (C L^{-T})(C L^{-T})^T with W = L L^T.
+        let mut b = Mat::zeros(n, r);
+        for i in 0..n {
+            let bi = ch.solve_lower(c.row(i));
+            b.row_mut(i).copy_from_slice(&bi);
+        }
+        Ok(b)
+    }
+
+    /// Gaussian-sketch B-factor: Y = K Omega via r full matvecs (O(n^2 r)).
+    fn gaussian_b_factor(
+        &self,
+        engine: &Engine,
+        problem: &KrrProblem,
+        deadline: &Budget,
+        t0: &Instant,
+    ) -> anyhow::Result<Option<Mat>> {
+        let n = problem.n();
+        let r = self.cfg.rank.min(n);
+        let mut rng = Rng::new(self.cfg.seed ^ 0x6A55);
+        let mut omega = Mat::randn(n, r, &mut rng);
+        crate::linalg::eig::orthonormalize_cols(&mut omega);
+        let mut y = Mat::zeros(n, r);
+        let mut col = vec![0.0; n];
+        for j in 0..r {
+            // setup can blow the budget — that *is* the paper's point
+            if t0.elapsed().as_secs_f64() >= deadline.time_limit_secs {
+                return Ok(None);
+            }
+            for i in 0..n {
+                col[i] = omega[(i, j)];
+            }
+            let kcol = self.matvec(engine, problem, &col)?;
+            for i in 0..n {
+                y[(i, j)] = kcol[i];
+            }
+        }
+        // core = Omega^T Y (spd up to noise); B = Y chol(core)^{-T}
+        let core = omega.t().matmul(&y);
+        let sym = symmetrize(&core);
+        let ch = Chol::new(&sym, 1e-8 * (1.0 + sym.fro()))?;
+        let mut b = Mat::zeros(n, r);
+        for i in 0..n {
+            let bi = ch.solve_lower(y.row(i));
+            b.row_mut(i).copy_from_slice(&bi);
+        }
+        Ok(Some(b))
+    }
+
+    /// K @ v (without the ridge term).
+    fn matvec(&self, engine: &Engine, problem: &KrrProblem, v: &[f64]) -> anyhow::Result<Vec<f64>> {
+        let (n, d) = (problem.n(), problem.d());
+        if self.cfg.f64_matvec {
+            let idx: Vec<usize> = (0..n).collect();
+            Ok(kernels::rows_matvec(problem.kernel, &problem.train.x, n, d, &idx, v, problem.sigma))
+        } else {
+            runtime_ops::kernel_matvec(
+                engine,
+                problem.kernel,
+                &problem.train.x,
+                n,
+                &problem.train.x,
+                n,
+                d,
+                v,
+                problem.sigma,
+            )
+        }
+    }
+}
+
+fn symmetrize(a: &Mat) -> Mat {
+    let mut out = a.clone();
+    for i in 0..a.rows {
+        for j in 0..a.cols {
+            out[(i, j)] = 0.5 * (a[(i, j)] + a[(j, i)]);
+        }
+    }
+    out
+}
+
+impl Solver for PcgSolver {
+    fn name(&self) -> String {
+        format!(
+            "pcg({},r={},{})",
+            match self.cfg.precond {
+                PcgPrecond::Rpc => "rpc",
+                PcgPrecond::Gaussian => "gaussian",
+                PcgPrecond::None => "plain",
+            },
+            self.cfg.rank,
+            if self.cfg.f64_matvec { "f64" } else { "f32" }
+        )
+    }
+
+    fn run(
+        &mut self,
+        engine: &Engine,
+        problem: &KrrProblem,
+        budget: &Budget,
+    ) -> anyhow::Result<SolveReport> {
+        let n = problem.n();
+        let lam = problem.lam;
+        let t0 = Instant::now();
+
+        // --- preconditioner setup (counted against the budget) ----------
+        let precond = match self.cfg.precond {
+            PcgPrecond::Rpc => {
+                Some(NystromPrecond::new(self.rpc_b_factor(problem)?, lam.max(1e-10))?)
+            }
+            PcgPrecond::Gaussian => {
+                match self.gaussian_b_factor(engine, problem, budget, &t0)? {
+                    Some(b) => Some(NystromPrecond::new(b, lam.max(1e-10))?),
+                    None => {
+                        // Setup starved the budget: report zero iterations
+                        // (paper Fig. 1's "did not complete one iteration").
+                        return Ok(SolveReport {
+                            solver: self.name(),
+                            problem: problem.name.clone(),
+                            task: problem.task,
+                            iters: 0,
+                            wall_secs: t0.elapsed().as_secs_f64(),
+                            trace: Trace::default(),
+                            final_metric: f64::NAN,
+                            final_residual: f64::NAN,
+                            weights: vec![0.0; n],
+                            state_bytes: n * self.cfg.rank * 8,
+                            diverged: false,
+                        });
+                    }
+                }
+            }
+            PcgPrecond::None => None,
+        };
+
+        // --- CG loop -----------------------------------------------------
+        let y = &problem.train.y;
+        let mut w = vec![0.0f64; n];
+        let mut res: Vec<f64> = y.clone(); // r = y - A w, w = 0
+        let mut zv = match &precond {
+            Some(p) => p.apply(&res),
+            None => res.clone(),
+        };
+        let mut p = zv.clone();
+        let mut rz = dense::dot(&res, &zv);
+        let y_norm = dense::norm(y).max(1e-300);
+
+        let eval_stride = eval_every(budget, 20);
+        let mut trace = Trace::default();
+        let mut diverged = false;
+        let mut iters = 0;
+        while !budget.exhausted(iters, t0.elapsed().as_secs_f64()) {
+            let mut ap = self.matvec(engine, problem, &p)?;
+            for i in 0..n {
+                ap[i] += lam * p[i];
+            }
+            let pap = dense::dot(&p, &ap);
+            if pap <= 0.0 || !pap.is_finite() {
+                diverged = !pap.is_finite();
+                break;
+            }
+            let alpha = rz / pap;
+            for i in 0..n {
+                w[i] += alpha * p[i];
+                res[i] -= alpha * ap[i];
+            }
+            zv = match &precond {
+                Some(pc) => pc.apply(&res),
+                None => res.clone(),
+            };
+            let rz_new = dense::dot(&res, &zv);
+            let beta = rz_new / rz;
+            rz = rz_new;
+            for i in 0..n {
+                p[i] = zv[i] + beta * p[i];
+            }
+            iters += 1;
+
+            if iters % eval_stride == 0 || budget.exhausted(iters, t0.elapsed().as_secs_f64()) {
+                if looks_diverged(&w) {
+                    diverged = true;
+                    break;
+                }
+                let rel = dense::norm(&res) / y_norm;
+                eval_point(engine, problem, &w, iters, t0.elapsed().as_secs_f64(), &mut trace, rel)?;
+                if rel < 1e-12 {
+                    break;
+                }
+            }
+        }
+
+        let final_metric = trace.last_metric().unwrap_or(f64::NAN);
+        let final_residual = trace.last_residual().unwrap_or(f64::NAN);
+        let state_bytes = n * self.cfg.rank * 8 + 4 * n * 8;
+        Ok(SolveReport {
+            solver: self.name(),
+            problem: problem.name.clone(),
+            task: problem.task,
+            iters,
+            wall_secs: t0.elapsed().as_secs_f64(),
+            trace,
+            final_metric,
+            final_residual,
+            weights: w,
+            state_bytes,
+            diverged,
+        })
+    }
+}

@@ -1,0 +1,156 @@
+//! Mini property-testing framework (offline substitute for `proptest`).
+//!
+//! Seeded generators + a runner that, on failure, greedily *shrinks* the
+//! failing case before reporting. Used by `rust/tests/proptests.rs` for
+//! coordinator invariants (sampling, padding, manifest resolution, config
+//! round-trips, linear-algebra identities).
+//!
+//! ```no_run
+//! use askotch::testing::{Gen, check};
+//! check("reverse twice is identity", 100, |g| {
+//!     let xs = g.vec_f64(0, 20, -1e3, 1e3);
+//!     let mut twice = xs.clone();
+//!     twice.reverse();
+//!     twice.reverse();
+//!     if twice != xs { return Err("mismatch".to_string()); }
+//!     Ok(())
+//! });
+//! ```
+
+use crate::util::Rng;
+
+/// A source of random test inputs for one case.
+pub struct Gen {
+    rng: Rng,
+    /// Log of the choices made, used for shrinking.
+    pub size_bias: f64,
+}
+
+impl Gen {
+    pub fn new(seed: u64, size_bias: f64) -> Gen {
+        Gen { rng: Rng::new(seed), size_bias }
+    }
+
+    /// Integer in `[lo, hi]`, biased smaller as `size_bias` shrinks.
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        assert!(lo <= hi);
+        let span = hi - lo;
+        let scaled = ((span as f64) * self.size_bias).ceil() as usize;
+        lo + if scaled == 0 { 0 } else { self.rng.below(scaled + 1) }
+    }
+
+    pub fn f64_in(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + (hi - lo) * self.rng.uniform() * self.size_bias.max(0.05)
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.uniform() < 0.5
+    }
+
+    pub fn vec_f64(&mut self, min_len: usize, max_len: usize, lo: f64, hi: f64) -> Vec<f64> {
+        let len = self.usize_in(min_len, max_len);
+        (0..len).map(|_| self.f64_in(lo, hi)).collect()
+    }
+
+    pub fn choice<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.rng.below(xs.len())]
+    }
+
+    pub fn rng(&mut self) -> &mut Rng {
+        &mut self.rng
+    }
+}
+
+/// Run `cases` random cases of `prop`. On failure, retry the same seed
+/// with progressively smaller `size_bias` (shrinking) and panic with the
+/// smallest reproduction found.
+pub fn check<F>(name: &str, cases: u64, prop: F)
+where
+    F: Fn(&mut Gen) -> Result<(), String>,
+{
+    let base_seed = fnv1a(name.as_bytes());
+    for case in 0..cases {
+        let seed = base_seed ^ (case.wrapping_mul(0x9E37_79B9_7F4A_7C15));
+        let mut g = Gen::new(seed, 1.0);
+        if let Err(msg) = prop(&mut g) {
+            // Shrink: same stream, smaller sizes.
+            let mut best = (1.0f64, msg);
+            for bias in [0.5, 0.25, 0.1, 0.05] {
+                let mut g = Gen::new(seed, bias);
+                if let Err(m) = prop(&mut g) {
+                    best = (bias, m);
+                }
+            }
+            panic!(
+                "property '{name}' failed (case {case}, seed {seed:#x}, \
+                 shrunk to size_bias={}): {}",
+                best.0, best.1
+            );
+        }
+    }
+}
+
+fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100_0000_01b3);
+    }
+    h
+}
+
+/// Assert-style helper for use inside properties.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($fmt:tt)+) => {
+        if !($cond) {
+            return Err(format!($($fmt)+));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check("tautology", 50, |g| {
+            let x = g.f64_in(-1.0, 1.0);
+            if x.abs() <= 1.0 {
+                Ok(())
+            } else {
+                Err("impossible".into())
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always-fails' failed")]
+    fn failing_property_panics_with_shrink_info() {
+        check("always-fails", 10, |g| {
+            let _ = g.vec_f64(0, 10, 0.0, 1.0);
+            Err("nope".into())
+        });
+    }
+
+    #[test]
+    fn generators_respect_bounds() {
+        let mut g = Gen::new(42, 1.0);
+        for _ in 0..1000 {
+            let u = g.usize_in(3, 9);
+            assert!((3..=9).contains(&u));
+            let f = g.f64_in(-2.0, 2.0);
+            assert!((-2.0..=2.0).contains(&f));
+        }
+    }
+
+    #[test]
+    fn shrinking_reduces_sizes() {
+        let mut big = Gen::new(7, 1.0);
+        let mut small = Gen::new(7, 0.05);
+        let lens: (usize, usize) =
+            (big.vec_f64(0, 100, 0.0, 1.0).len(), small.vec_f64(0, 100, 0.0, 1.0).len());
+        assert!(lens.1 <= lens.0);
+    }
+}

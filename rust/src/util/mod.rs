@@ -1,0 +1,13 @@
+//! Small self-contained substrates: RNG, JSON, CLI parsing, formatting.
+//!
+//! The build environment is fully offline, so instead of pulling `rand`,
+//! `serde`/`serde_json`, and `clap`, this crate implements the minimal
+//! functionality it needs from scratch. Each submodule is independently
+//! unit-tested.
+
+pub mod cli;
+pub mod fmt;
+pub mod json;
+pub mod rng;
+
+pub use rng::Rng;

@@ -1,0 +1,132 @@
+//! Integration tests over the real AOT artifacts: the rust PJRT runtime
+//! executing the lowered Pallas/JAX computations, validated against the
+//! pure-rust kernel oracles. Requires `make artifacts` (skips otherwise).
+
+use askotch::config::KernelKind;
+use askotch::coordinator::runtime_ops;
+use askotch::kernels;
+use askotch::runtime::Engine;
+use askotch::util::Rng;
+
+fn engine() -> Option<Engine> {
+    if !std::path::Path::new("artifacts/manifest.json").exists() {
+        eprintln!("SKIP: artifacts/ missing — run `make artifacts`");
+        return None;
+    }
+    Some(Engine::from_manifest("artifacts").expect("engine"))
+}
+
+fn rand_slab(n: usize, d: usize, seed: u64) -> Vec<f64> {
+    let mut rng = Rng::new(seed);
+    (0..n * d).map(|_| rng.normal()).collect()
+}
+
+#[test]
+fn kmv_artifact_matches_rust_oracle_all_kernels() {
+    let Some(engine) = engine() else { return };
+    for (kind, d) in [
+        (KernelKind::Rbf, 9),
+        (KernelKind::Laplacian, 64),
+        (KernelKind::Matern52, 21),
+    ] {
+        let (n1, n2) = (100, 700);
+        let x1 = rand_slab(n1, d, 1);
+        let x2 = rand_slab(n2, d, 2);
+        let v: Vec<f64> = rand_slab(n2, 1, 3);
+        let sigma = 1.7;
+        let got = runtime_ops::kernel_matvec(&engine, kind, &x1, n1, &x2, n2, d, &v, sigma)
+            .expect("kmv");
+        let km = kernels::matrix(kind, &x1, n1, &x2, n2, d, sigma);
+        let want = km.matvec(&v);
+        let denom: f64 = want.iter().map(|x| x.abs()).fold(1e-9, f64::max);
+        for (g, w) in got.iter().zip(&want) {
+            assert!(
+                (g - w).abs() / denom < 2e-4,
+                "{kind:?}: {g} vs {w} (rel {})",
+                (g - w).abs() / denom
+            );
+        }
+    }
+}
+
+#[test]
+fn padding_is_exact_not_approximate() {
+    let Some(engine) = engine() else { return };
+    // A logical shape served through zero padding must match the direct
+    // oracle exactly (up to f32 roundoff) — padding is not approximate.
+    let (n1, d) = (37, 5);
+    let x1 = rand_slab(n1, d, 4);
+    let v: Vec<f64> = rand_slab(200, 1, 5);
+    let x2 = rand_slab(200, d, 6);
+    let a = runtime_ops::kernel_matvec(&engine, KernelKind::Rbf, &x1, n1, &x2, 200, d, &v, 1.0)
+        .unwrap();
+    let km = kernels::matrix(KernelKind::Rbf, &x1, n1, &x2, 200, d, 1.0);
+    let want = km.matvec(&v);
+    for (g, w) in a.iter().zip(&want) {
+        assert!((g - w).abs() < 1e-3, "{g} vs {w}");
+    }
+}
+
+#[test]
+fn predict_tiles_consistently() {
+    let Some(engine) = engine() else { return };
+    let (n, d, ne) = (300, 9, 700); // ne > 512 forces multiple tiles
+    let x = rand_slab(n, d, 7);
+    let w: Vec<f64> = rand_slab(n, 1, 8);
+    let xe = rand_slab(ne, d, 9);
+    let got =
+        runtime_ops::predict(&engine, KernelKind::Rbf, &x, n, d, &w, &xe, ne, 1.3).unwrap();
+    assert_eq!(got.len(), ne);
+    let km = kernels::matrix(KernelKind::Rbf, &xe, ne, &x, n, d, 1.3);
+    let want = km.matvec(&w);
+    for (g, w) in got.iter().zip(&want) {
+        assert!((g - w).abs() < 1e-3);
+    }
+}
+
+#[test]
+fn relative_residual_zero_at_exact_solution() {
+    let Some(engine) = engine() else { return };
+    use askotch::linalg::Chol;
+    let (n, d) = (120, 9);
+    let x = rand_slab(n, d, 10);
+    let idx: Vec<usize> = (0..n).collect();
+    let mut k = kernels::block(KernelKind::Rbf, &x, d, &idx, 1.0);
+    let lam = 0.05;
+    k.add_diag(lam);
+    let y: Vec<f64> = rand_slab(n, 1, 11);
+    let w = Chol::new(&k, 0.0).unwrap().solve(&y);
+    let res = runtime_ops::relative_residual(
+        &engine,
+        KernelKind::Rbf,
+        &x,
+        n,
+        d,
+        &w,
+        &y,
+        1.0,
+        lam,
+    )
+    .unwrap();
+    assert!(res < 5e-4, "residual at exact solution: {res}");
+}
+
+#[test]
+fn engine_caches_executables() {
+    let Some(engine) = engine() else { return };
+    use askotch::runtime::manifest::ShapeKey;
+    let want = ShapeKey { n: 500, d: 9, b: 64, r: 0 };
+    let (_, _e1) = engine.prepare("kmv", "rbf", "f32", want).unwrap();
+    let compiles_after_first = engine.stats().compiles;
+    let (_, _e2) = engine.prepare("kmv", "rbf", "f32", want).unwrap();
+    assert_eq!(engine.stats().compiles, compiles_after_first, "second prepare must hit cache");
+}
+
+#[test]
+fn manifest_covers_required_ops() {
+    let Some(engine) = engine() else { return };
+    let ops = engine.manifest().ops();
+    for op in ["askotch_step", "skotch_step", "kmv", "kblock"] {
+        assert!(ops.iter().any(|o| o == op), "missing op {op}");
+    }
+}

@@ -1,0 +1,251 @@
+//! Property-based tests on coordinator invariants, using the in-repo
+//! mini-proptest framework (`askotch::testing`) — the offline stand-in
+//! for the `proptest` crate.
+
+use askotch::config::{ExperimentConfig, KernelKind};
+use askotch::data::{csv, preprocess, synthetic};
+use askotch::kernels;
+use askotch::linalg::{Chol, Mat};
+use askotch::prop_assert;
+use askotch::runtime::manifest::{Manifest, ShapeKey};
+use askotch::runtime::tensor::HostMat;
+use askotch::sampling::{ArlsSampler, BlockSampler, UniformSampler};
+use askotch::testing::check;
+
+#[test]
+fn prop_uniform_blocks_distinct_and_in_range() {
+    check("uniform blocks", 200, |g| {
+        let n = g.usize_in(1, 400);
+        let b = g.usize_in(1, n);
+        let mut s = UniformSampler::new(g.rng().next_u64());
+        let block = s.sample_block(n, b);
+        prop_assert!(block.len() == b, "len {} != {}", block.len(), b);
+        let set: std::collections::HashSet<_> = block.iter().collect();
+        prop_assert!(set.len() == b, "duplicates in block");
+        prop_assert!(block.iter().all(|&i| i < n), "index out of range");
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_arls_block_respects_support() {
+    check("arls support", 100, |g| {
+        let n = g.usize_in(2, 200);
+        let mut scores = vec![0.0f64; n];
+        // random support
+        let support = g.usize_in(1, n);
+        for i in 0..support {
+            scores[i] = g.f64_in(0.01, 1.0);
+        }
+        let mut s = ArlsSampler::from_scores(&scores, g.rng().next_u64());
+        let block = s.sample_block(n, g.usize_in(1, support));
+        // Definition 9 rounding gives every coordinate nonzero mass
+        // (ceil >= 1), so any index may appear — but the block must be
+        // valid regardless.
+        prop_assert!(block.iter().all(|&i| i < n), "index out of range");
+        prop_assert!(!block.is_empty(), "empty block");
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_padding_preserves_content_and_zeroes_rest() {
+    check("padding", 200, |g| {
+        let rows = g.usize_in(1, 20);
+        let cols = g.usize_in(1, 20);
+        let rp = rows + g.usize_in(0, 10);
+        let cp = cols + g.usize_in(0, 10);
+        let data = g.vec_f64(rows * cols, rows * cols, -10.0, 10.0);
+        let m = HostMat {
+            rows,
+            cols,
+            data: data.iter().map(|&x| x as f32).collect(),
+        };
+        let p = m.padded(rp, cp);
+        for i in 0..rp {
+            for j in 0..cp {
+                let want = if i < rows && j < cols { m.at(i, j) } else { 0.0 };
+                prop_assert!(p.at(i, j) == want, "({i},{j}) {} != {}", p.at(i, j), want);
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_manifest_padded_lookup_is_sound_and_minimal() {
+    // Build a random manifest; find_padded must return an artifact that
+    // fits, and no strictly-cheaper fitting artifact may exist.
+    check("manifest lookup", 200, |g| {
+        let mut arts = Vec::new();
+        let n_arts = g.usize_in(1, 12);
+        for i in 0..n_arts {
+            arts.push(format!(
+                r#"{{"op":"kmv","kernel":"rbf","dtype":"f32","file":"a{i}.hlo.txt",
+                   "shapes":{{"n":{},"d":{},"b":{},"r":0}}}}"#,
+                512 * g.usize_in(1, 8),
+                g.usize_in(1, 4) * 16,
+                g.usize_in(1, 4) * 128,
+            ));
+        }
+        let text = format!(r#"{{"version":1,"artifacts":[{}]}}"#, arts.join(","));
+        let m = Manifest::from_json_str(&text, "/tmp".into()).map_err(|e| e.to_string())?;
+        let want = ShapeKey {
+            n: g.usize_in(1, 5000),
+            d: g.usize_in(1, 64),
+            b: g.usize_in(1, 600),
+            r: 0,
+        };
+        let cost = |s: &ShapeKey| s.n * s.d.max(1) + s.n * s.b.max(1);
+        match m.find_padded("kmv", "rbf", "f32", want) {
+            None => {
+                // no candidate fits
+                for a in &m.artifacts {
+                    let fits =
+                        a.shapes.n >= want.n && a.shapes.d >= want.d && a.shapes.b >= want.b;
+                    prop_assert!(!fits, "lookup missed fitting artifact {:?}", a.shapes);
+                }
+            }
+            Some(a) => {
+                prop_assert!(
+                    a.shapes.n >= want.n && a.shapes.d >= want.d && a.shapes.b >= want.b,
+                    "returned artifact does not fit"
+                );
+                for other in m.artifacts.iter().filter(|o| {
+                    o.shapes.n >= want.n && o.shapes.d >= want.d && o.shapes.b >= want.b
+                }) {
+                    prop_assert!(
+                        cost(&a.shapes) <= cost(&other.shapes),
+                        "not minimal: picked {:?} over {:?}",
+                        a.shapes,
+                        other.shapes
+                    );
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_cholesky_solve_is_inverse() {
+    check("cholesky inverse", 60, |g| {
+        let n = g.usize_in(1, 24);
+        let mut rng = askotch::util::Rng::new(g.rng().next_u64());
+        let a = Mat::randn(n + 2, n, &mut rng);
+        let mut spd = a.gram();
+        spd.add_diag(0.5 + n as f64 * 0.05);
+        let b = g.vec_f64(n, n, -5.0, 5.0);
+        let ch = Chol::new(&spd, 0.0).map_err(|e| e.to_string())?;
+        let x = ch.solve(&b);
+        let ax = spd.matvec(&x);
+        for (u, v) in ax.iter().zip(&b) {
+            prop_assert!((u - v).abs() < 1e-6, "residual {}", (u - v).abs());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_kernel_matrices_are_psd() {
+    check("kernel psd", 60, |g| {
+        let n = g.usize_in(2, 24);
+        let d = g.usize_in(1, 6);
+        let sigma = g.f64_in(0.3, 5.0);
+        let kind = *g.choice(&[KernelKind::Rbf, KernelKind::Laplacian, KernelKind::Matern52]);
+        let mut rng = askotch::util::Rng::new(g.rng().next_u64());
+        let x: Vec<f64> = (0..n * d).map(|_| rng.normal()).collect();
+        let idx: Vec<usize> = (0..n).collect();
+        let k = kernels::block(kind, &x, d, &idx, sigma);
+        // psd check via Cholesky with tiny jitter
+        prop_assert!(
+            Chol::new(&k, 1e-8 * n as f64).is_ok(),
+            "{kind:?} block not psd (sigma={sigma})"
+        );
+        // symmetry + unit diagonal
+        for i in 0..n {
+            prop_assert!((k[(i, i)] - 1.0).abs() < 1e-9, "diag {}", k[(i, i)]);
+            for j in 0..i {
+                prop_assert!((k[(i, j)] - k[(j, i)]).abs() < 1e-12, "asym");
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_standardize_then_stats() {
+    check("standardize", 80, |g| {
+        let n = g.usize_in(2, 200);
+        let d = g.usize_in(1, 8);
+        let mut x = g.vec_f64(n * d, n * d, -100.0, 100.0);
+        preprocess::standardize_features(&mut x, n, d);
+        for j in 0..d {
+            let mean: f64 = (0..n).map(|i| x[i * d + j]).sum::<f64>() / n as f64;
+            prop_assert!(mean.abs() < 1e-6, "col {j} mean {mean}");
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_csv_roundtrip() {
+    check("csv roundtrip", 60, |g| {
+        let n = g.usize_in(1, 30);
+        let d = g.usize_in(1, 6);
+        let mut text = String::new();
+        let mut want_y = Vec::new();
+        for i in 0..n {
+            let mut cells: Vec<String> =
+                (0..d).map(|j| format!("{:.6}", (i * d + j) as f64 * 0.5 - 3.0)).collect();
+            let y = g.f64_in(-50.0, 50.0) + 2.0; // keep away from {-1,0,1}
+            want_y.push(y);
+            cells.push(format!("{y:.9}"));
+            text.push_str(&cells.join(","));
+            text.push('\n');
+        }
+        let ds = csv::parse(&text, -1, false, "prop").map_err(|e| e.to_string())?;
+        prop_assert!(ds.n == n && ds.d == d, "shape {}x{}", ds.n, ds.d);
+        for (a, b) in ds.y.iter().zip(&want_y) {
+            prop_assert!((a - b).abs() < 1e-6, "y {a} vs {b}");
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_config_json_roundtrip() {
+    check("config roundtrip", 60, |g| {
+        let n = g.usize_in(16, 100_000);
+        let rank = g.usize_in(1, 500);
+        let kernel = *g.choice(&["rbf", "laplacian", "matern52"]);
+        let solver = *g.choice(&["askotch", "skotch", "pcg", "falkon", "eigenpro"]);
+        let text = format!(
+            r#"{{"n":{n},"rank":{rank},"kernel":"{kernel}","solver":"{solver}"}}"#
+        );
+        let cfg = ExperimentConfig::from_json(&text).map_err(|e| e.to_string())?;
+        prop_assert!(cfg.n == n && cfg.rank == rank, "fields lost");
+        prop_assert!(cfg.kernel.name() == kernel, "kernel lost");
+        prop_assert!(cfg.solver.name() == solver, "solver lost");
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_split_is_a_partition() {
+    check("split partition", 40, |g| {
+        let n = g.usize_in(20, 300);
+        let ds = synthetic::taxi_like(n, 9, g.rng().next_u64());
+        let frac = g.f64_in(0.05, 0.5);
+        let (tr, te) = ds.split(frac, g.rng().next_u64());
+        prop_assert!(tr.n + te.n == n, "sizes {} + {} != {n}", tr.n, te.n);
+        // every training row exists in the original (by exact match)
+        let orig: std::collections::HashSet<_> =
+            (0..n).map(|i| ds.row(i).iter().map(|v| v.to_bits()).collect::<Vec<_>>()).collect();
+        for i in 0..tr.n {
+            let key: Vec<_> = tr.row(i).iter().map(|v| v.to_bits()).collect();
+            prop_assert!(orig.contains(&key), "train row {i} not from original");
+        }
+        Ok(())
+    });
+}
