@@ -1,6 +1,7 @@
-//! Batched prediction serving demo: train once, then serve concurrent
-//! prediction requests through the dynamic batcher, reporting latency
-//! percentiles and batching efficiency.
+//! Networked serving demo: train once, stand up the real HTTP/1.1
+//! prediction service, then hammer it with concurrent keep-alive
+//! clients over TCP and report latency percentiles, throughput, and the
+//! server's own `/metrics` view.
 //!
 //! ```bash
 //! make artifacts && cargo run --release --example serve
@@ -9,12 +10,53 @@
 use askotch::config::{BandwidthSpec, KernelKind};
 use askotch::coordinator::{Budget, KrrProblem};
 use askotch::data::synthetic;
+use askotch::json::ToJson;
+use askotch::metrics::percentile;
+use askotch::net::wire::PredictRequest;
+use askotch::net::{http, NetConfig, Server};
 use askotch::runtime::Engine;
-use askotch::server::{serve, ModelSnapshot, Request, ServerConfig};
+use askotch::server::{serve_predictor, EnginePredictor, ModelSnapshot, Request, ServerConfig};
 use askotch::solvers::askotch::{AskotchConfig, AskotchSolver};
 use askotch::solvers::Solver;
 use askotch::util::fmt;
+use std::io::{BufReader, Write};
+use std::net::{SocketAddr, TcpStream};
 use std::sync::mpsc;
+
+/// One keep-alive HTTP POST on an open connection; returns (status, body).
+fn post_predict(
+    stream: &mut TcpStream,
+    reader: &mut BufReader<TcpStream>,
+    body: &str,
+) -> anyhow::Result<(u16, String)> {
+    write!(
+        stream,
+        "POST /v1/predict HTTP/1.1\r\nhost: demo\r\ncontent-length: {}\r\n\r\n{}",
+        body.len(),
+        body
+    )?;
+    stream.flush()?;
+    let (status, body) = http::read_response(reader)?;
+    Ok((status, String::from_utf8(body)?))
+}
+
+fn features_json(row: &[f64]) -> String {
+    PredictRequest { features: row.to_vec() }.to_json().to_string()
+}
+
+fn client_loop(addr: SocketAddr, rows: Vec<Vec<f64>>) -> Vec<f64> {
+    let mut stream = TcpStream::connect(addr).expect("connect");
+    let mut reader = BufReader::new(stream.try_clone().expect("clone"));
+    let mut lat = Vec::with_capacity(rows.len());
+    for row in rows {
+        let body = features_json(&row);
+        let t0 = std::time::Instant::now();
+        let (status, resp) = post_predict(&mut stream, &mut reader, &body).expect("request");
+        lat.push(t0.elapsed().as_secs_f64());
+        assert_eq!(status, 200, "predict failed: {resp}");
+    }
+    lat
+}
 
 fn main() -> anyhow::Result<()> {
     // --- train ------------------------------------------------------------
@@ -34,40 +76,52 @@ fn main() -> anyhow::Result<()> {
         weights: report.weights.clone(),
     };
 
-    // --- serve ------------------------------------------------------------
+    // --- serve over real TCP ---------------------------------------------
+    let net_cfg = NetConfig { addr: "127.0.0.1:0".into(), threads: 4, ..Default::default() };
     let (tx, rx) = mpsc::channel::<Request>();
+    let server = Server::start(&net_cfg, tx)?;
+    let addr = server.addr();
+    println!("serving on http://{addr}");
+
     let n_clients = 4;
     let reqs_per_client = 250;
     let test = problem.test.clone();
     let mut clients = Vec::new();
     for c in 0..n_clients {
-        let tx = tx.clone();
         let rows: Vec<Vec<f64>> = (0..reqs_per_client)
             .map(|i| test.row((c * reqs_per_client + i) % test.n).to_vec())
             .collect();
-        clients.push(std::thread::spawn(move || {
-            let mut lat = Vec::with_capacity(rows.len());
-            for row in rows {
-                let (rtx, rrx) = mpsc::channel();
-                let t0 = std::time::Instant::now();
-                tx.send(Request { features: row, reply: rtx }).unwrap();
-                rrx.recv().unwrap().unwrap();
-                lat.push(t0.elapsed().as_secs_f64());
-            }
-            lat
-        }));
+        clients.push(std::thread::spawn(move || client_loop(addr, rows)));
     }
-    drop(tx); // server shuts down when all clients finish
+
+    // When all clients finish, fetch /metrics and shut the server down;
+    // that drops the batcher senders and lets `serve_predictor` below
+    // return on the main (engine-owning) thread.
+    let shutdown = std::thread::spawn(move || {
+        let mut lat: Vec<f64> = clients.into_iter().flat_map(|c| c.join().unwrap()).collect();
+        let mut stream = TcpStream::connect(addr).expect("connect");
+        let mut reader = BufReader::new(stream.try_clone().expect("clone"));
+        write!(stream, "GET /metrics HTTP/1.1\r\nhost: demo\r\nconnection: close\r\n\r\n").unwrap();
+        stream.flush().unwrap();
+        let (_, body) = http::read_response(&mut reader).expect("metrics");
+        let metrics_body = String::from_utf8(body).expect("utf8");
+        server.shutdown();
+        lat.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        (lat, metrics_body)
+    });
 
     let t0 = std::time::Instant::now();
-    let stats = serve(&engine, &model, rx, &ServerConfig::default());
+    let stats = serve_predictor(
+        &EnginePredictor { engine: &engine, model: &model },
+        rx,
+        &ServerConfig::default(),
+        None,
+    );
     let wall = t0.elapsed().as_secs_f64();
+    let (lat, metrics_body) = shutdown.join().unwrap();
 
-    let mut lat: Vec<f64> = clients.into_iter().flat_map(|c| c.join().unwrap()).collect();
-    lat.sort_by(|a, b| a.partial_cmp(b).unwrap());
-    let pct = |p: f64| lat[((lat.len() as f64 * p) as usize).min(lat.len() - 1)];
     println!(
-        "served {} requests in {} ({:.0} req/s)",
+        "served {} requests over TCP in {} ({:.0} req/s)",
         stats.requests,
         fmt::duration(wall),
         stats.requests as f64 / wall
@@ -79,10 +133,11 @@ fn main() -> anyhow::Result<()> {
         stats.max_batch_seen
     );
     println!(
-        "latency: p50={} p90={} p99={}",
-        fmt::duration(pct(0.50)),
-        fmt::duration(pct(0.90)),
-        fmt::duration(pct(0.99))
+        "end-to-end latency: p50={} p90={} p99={}",
+        fmt::duration(percentile(&lat, 0.50)),
+        fmt::duration(percentile(&lat, 0.90)),
+        fmt::duration(percentile(&lat, 0.99))
     );
+    println!("GET /metrics said:\n{}", askotch::json::parse(&metrics_body)?.pretty());
     Ok(())
 }

@@ -25,7 +25,7 @@ use askotch::solvers::pcg::{PcgConfig, PcgPrecond, PcgSolver};
 use askotch::solvers::Solver;
 use askotch::util::cli::Args;
 use askotch::util::fmt;
-use askotch::util::json::Json;
+use askotch::json::Json;
 use std::time::Instant;
 
 fn main() -> anyhow::Result<()> {

@@ -1,10 +1,10 @@
 //! Experiment configuration: kernels, solvers, datasets, budgets.
 //!
-//! Configs are plain JSON (parsed with `util::json`); every example and
-//! bench builds its `ExperimentConfig` either programmatically or from a
-//! file via [`ExperimentConfig::from_json`].
+//! Configs are plain JSON (parsed with the `crate::json` subsystem);
+//! every example and bench builds its `ExperimentConfig` either
+//! programmatically or from a file via [`ExperimentConfig::from_json`].
 
-use crate::util::json::{self, Json};
+use crate::json::{self, Decoder};
 
 /// Kernel function (paper SC.1).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
@@ -219,58 +219,61 @@ impl Default for ExperimentConfig {
 
 impl ExperimentConfig {
     /// Parse from a JSON object; missing fields fall back to defaults.
+    /// Errors carry field paths (`config.kernel: ...`).
     pub fn from_json(text: &str) -> anyhow::Result<ExperimentConfig> {
         let v = json::parse(text).map_err(|e| anyhow::anyhow!("config parse: {e}"))?;
+        let root = Decoder::root(&v, "config");
         let mut c = ExperimentConfig::default();
-        let gs = |k: &str| v.get(k).and_then(Json::as_str).map(str::to_string);
-        if let Some(s) = gs("name") {
-            c.name = s;
+        if let Some(d) = root.opt_field("name")? {
+            c.name = d.string()?;
         }
-        if let Some(s) = gs("dataset") {
-            c.dataset = s;
+        if let Some(d) = root.opt_field("dataset")? {
+            c.dataset = d.string()?;
         }
-        if let Some(x) = v.get("n").and_then(Json::as_usize) {
-            c.n = x;
+        if let Some(d) = root.opt_field("n")? {
+            c.n = d.usize()?;
         }
-        if let Some(x) = v.get("d").and_then(Json::as_usize) {
-            c.d = x;
+        if let Some(d) = root.opt_field("d")? {
+            c.d = d.usize()?;
         }
-        if let Some(s) = gs("kernel") {
-            c.kernel = KernelKind::parse(&s)?;
+        if let Some(d) = root.opt_field("kernel")? {
+            c.kernel = KernelKind::parse(d.str()?).map_err(|e| anyhow::anyhow!("{}: {e}", d.path()))?;
         }
-        if let Some(s) = gs("bandwidth") {
-            c.bandwidth = BandwidthSpec::parse(&s)?;
+        if let Some(d) = root.opt_field("bandwidth")? {
+            c.bandwidth =
+                BandwidthSpec::parse(d.str()?).map_err(|e| anyhow::anyhow!("{}: {e}", d.path()))?;
         }
-        if let Some(x) = v.get("lam_unscaled").and_then(Json::as_f64) {
-            c.lam_unscaled = x;
+        if let Some(d) = root.opt_field("lam_unscaled")? {
+            c.lam_unscaled = d.f64()?;
         }
-        if let Some(s) = gs("solver") {
-            c.solver = SolverKind::parse(&s)?;
+        if let Some(d) = root.opt_field("solver")? {
+            c.solver = SolverKind::parse(d.str()?).map_err(|e| anyhow::anyhow!("{}: {e}", d.path()))?;
         }
-        if let Some(s) = gs("sampling") {
-            c.sampling = SamplingScheme::parse(&s)?;
+        if let Some(d) = root.opt_field("sampling")? {
+            c.sampling =
+                SamplingScheme::parse(d.str()?).map_err(|e| anyhow::anyhow!("{}: {e}", d.path()))?;
         }
-        if let Some(s) = gs("rho") {
-            c.rho = match s.as_str() {
+        if let Some(d) = root.opt_field("rho")? {
+            c.rho = match d.str()? {
                 "damped" => RhoMode::Damped,
                 "regularization" => RhoMode::Regularization,
-                _ => anyhow::bail!("unknown rho mode {s:?}"),
+                s => return Err(d.error(format!("unknown rho mode {s:?}")).into()),
             };
         }
-        if let Some(x) = v.get("rank").and_then(Json::as_usize) {
-            c.rank = x;
+        if let Some(d) = root.opt_field("rank")? {
+            c.rank = d.usize()?;
         }
-        if let Some(x) = v.get("seed").and_then(Json::as_f64) {
-            c.seed = x as u64;
+        if let Some(d) = root.opt_field("seed")? {
+            c.seed = d.u64()?;
         }
-        if let Some(x) = v.get("max_iters").and_then(Json::as_usize) {
-            c.max_iters = x;
+        if let Some(d) = root.opt_field("max_iters")? {
+            c.max_iters = d.usize()?;
         }
-        if let Some(x) = v.get("time_limit_secs").and_then(Json::as_f64) {
-            c.time_limit_secs = x;
+        if let Some(d) = root.opt_field("time_limit_secs")? {
+            c.time_limit_secs = d.f64()?;
         }
-        if let Some(b) = v.get("track_residual").and_then(Json::as_bool) {
-            c.track_residual = b;
+        if let Some(d) = root.opt_field("track_residual")? {
+            c.track_residual = d.bool()?;
         }
         Ok(c)
     }
@@ -318,6 +321,14 @@ mod tests {
     fn bad_config_rejected() {
         assert!(ExperimentConfig::from_json(r#"{"kernel":"poly"}"#).is_err());
         assert!(ExperimentConfig::from_json("not json").is_err());
+    }
+
+    #[test]
+    fn type_errors_carry_field_paths() {
+        let e = ExperimentConfig::from_json(r#"{"n":"lots"}"#).unwrap_err();
+        assert!(e.to_string().contains("config.n"), "got: {e}");
+        let e = ExperimentConfig::from_json(r#"{"kernel":"poly"}"#).unwrap_err();
+        assert!(e.to_string().contains("config.kernel"), "got: {e}");
     }
 
     #[test]

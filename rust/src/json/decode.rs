@@ -1,0 +1,324 @@
+//! Typed JSON decoding with field-path error messages.
+//!
+//! A [`Decoder`] wraps a `&Json` plus the path that led to it, so every
+//! type mismatch reports *where* it happened:
+//!
+//! ```text
+//! body.requests[3].features: expected array, got string
+//! ```
+//!
+//! [`FromJson`]/[`ToJson`] are the typed bridge between Rust structs and
+//! the [`Json`] value tree; `config`, the artifact manifest, and the
+//! `net` wire protocol all decode through them.
+
+use super::Json;
+use std::fmt;
+
+/// A decoding failure: the path to the offending value plus what went
+/// wrong there.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct DecodeError {
+    pub path: String,
+    pub msg: String,
+}
+
+impl DecodeError {
+    pub fn new(path: impl Into<String>, msg: impl Into<String>) -> DecodeError {
+        DecodeError { path: path.into(), msg: msg.into() }
+    }
+}
+
+impl fmt::Display for DecodeError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}: {}", self.path, self.msg)
+    }
+}
+
+impl std::error::Error for DecodeError {}
+
+/// The JSON type name used in "expected X, got Y" messages.
+pub fn type_name(v: &Json) -> &'static str {
+    match v {
+        Json::Null => "null",
+        Json::Bool(_) => "boolean",
+        Json::Num(_) => "number",
+        Json::Str(_) => "string",
+        Json::Arr(_) => "array",
+        Json::Obj(_) => "object",
+    }
+}
+
+/// A value plus the path that reached it.
+#[derive(Debug, Clone)]
+pub struct Decoder<'a> {
+    v: &'a Json,
+    path: String,
+}
+
+impl<'a> Decoder<'a> {
+    /// Root decoder; `root` names the document in error paths
+    /// (`"config"`, `"manifest"`, `"body"`, ...).
+    pub fn root(v: &'a Json, root: &str) -> Decoder<'a> {
+        Decoder { v, path: root.to_string() }
+    }
+
+    pub fn json(&self) -> &'a Json {
+        self.v
+    }
+
+    pub fn path(&self) -> &str {
+        &self.path
+    }
+
+    /// An error anchored at this decoder's path.
+    pub fn error(&self, msg: impl Into<String>) -> DecodeError {
+        DecodeError::new(self.path.clone(), msg)
+    }
+
+    fn mismatch(&self, want: &str) -> DecodeError {
+        self.error(format!("expected {want}, got {}", type_name(self.v)))
+    }
+
+    /// Required object field.
+    pub fn field(&self, key: &str) -> Result<Decoder<'a>, DecodeError> {
+        match self.v {
+            Json::Obj(m) => match m.get(key) {
+                Some(v) => Ok(Decoder { v, path: format!("{}.{key}", self.path) }),
+                None => Err(self.error(format!("missing field {key:?}"))),
+            },
+            _ => Err(self.mismatch("object")),
+        }
+    }
+
+    /// Optional object field: `None` if this is an object without the
+    /// key, error if this is not an object at all.
+    pub fn opt_field(&self, key: &str) -> Result<Option<Decoder<'a>>, DecodeError> {
+        match self.v {
+            Json::Obj(m) => Ok(m
+                .get(key)
+                .map(|v| Decoder { v, path: format!("{}.{key}", self.path) })),
+            _ => Err(self.mismatch("object")),
+        }
+    }
+
+    /// Array elements, each with its `[i]` path segment.
+    pub fn items(&self) -> Result<Vec<Decoder<'a>>, DecodeError> {
+        match self.v {
+            Json::Arr(xs) => Ok(xs
+                .iter()
+                .enumerate()
+                .map(|(i, v)| Decoder { v, path: format!("{}[{i}]", self.path) })
+                .collect()),
+            _ => Err(self.mismatch("array")),
+        }
+    }
+
+    pub fn f64(&self) -> Result<f64, DecodeError> {
+        self.v.as_f64().ok_or_else(|| self.mismatch("number"))
+    }
+
+    pub fn usize(&self) -> Result<usize, DecodeError> {
+        match self.v {
+            Json::Num(x) if *x >= 0.0 && x.fract() == 0.0 && *x <= usize::MAX as f64 => {
+                Ok(*x as usize)
+            }
+            Json::Num(_) => Err(self.error("expected non-negative integer".to_string())),
+            _ => Err(self.mismatch("number")),
+        }
+    }
+
+    pub fn u64(&self) -> Result<u64, DecodeError> {
+        match self.v {
+            Json::Num(x) if *x >= 0.0 && x.fract() == 0.0 => Ok(*x as u64),
+            Json::Num(_) => Err(self.error("expected non-negative integer".to_string())),
+            _ => Err(self.mismatch("number")),
+        }
+    }
+
+    pub fn bool(&self) -> Result<bool, DecodeError> {
+        self.v.as_bool().ok_or_else(|| self.mismatch("boolean"))
+    }
+
+    pub fn str(&self) -> Result<&'a str, DecodeError> {
+        self.v.as_str().ok_or_else(|| self.mismatch("string"))
+    }
+
+    pub fn string(&self) -> Result<String, DecodeError> {
+        self.str().map(str::to_string)
+    }
+
+    /// Decode into any [`FromJson`] type.
+    pub fn decode<T: FromJson>(&self) -> Result<T, DecodeError> {
+        T::from_json(self)
+    }
+}
+
+/// Construct a value of `Self` from a JSON decoder, reporting failures
+/// with full field paths.
+pub trait FromJson: Sized {
+    fn from_json(d: &Decoder<'_>) -> Result<Self, DecodeError>;
+}
+
+/// Serialize `Self` into a [`Json`] value tree.
+pub trait ToJson {
+    fn to_json(&self) -> Json;
+}
+
+impl FromJson for f64 {
+    fn from_json(d: &Decoder<'_>) -> Result<f64, DecodeError> {
+        d.f64()
+    }
+}
+
+impl FromJson for usize {
+    fn from_json(d: &Decoder<'_>) -> Result<usize, DecodeError> {
+        d.usize()
+    }
+}
+
+impl FromJson for u64 {
+    fn from_json(d: &Decoder<'_>) -> Result<u64, DecodeError> {
+        d.u64()
+    }
+}
+
+impl FromJson for bool {
+    fn from_json(d: &Decoder<'_>) -> Result<bool, DecodeError> {
+        d.bool()
+    }
+}
+
+impl FromJson for String {
+    fn from_json(d: &Decoder<'_>) -> Result<String, DecodeError> {
+        d.string()
+    }
+}
+
+impl<T: FromJson> FromJson for Vec<T> {
+    fn from_json(d: &Decoder<'_>) -> Result<Vec<T>, DecodeError> {
+        d.items()?.iter().map(|item| item.decode()).collect()
+    }
+}
+
+impl<T: FromJson> FromJson for Option<T> {
+    fn from_json(d: &Decoder<'_>) -> Result<Option<T>, DecodeError> {
+        match d.json() {
+            Json::Null => Ok(None),
+            _ => d.decode().map(Some),
+        }
+    }
+}
+
+impl ToJson for Json {
+    fn to_json(&self) -> Json {
+        self.clone()
+    }
+}
+
+impl ToJson for f64 {
+    fn to_json(&self) -> Json {
+        Json::Num(*self)
+    }
+}
+
+impl ToJson for usize {
+    fn to_json(&self) -> Json {
+        Json::Num(*self as f64)
+    }
+}
+
+impl ToJson for bool {
+    fn to_json(&self) -> Json {
+        Json::Bool(*self)
+    }
+}
+
+impl ToJson for str {
+    fn to_json(&self) -> Json {
+        Json::Str(self.to_string())
+    }
+}
+
+impl ToJson for String {
+    fn to_json(&self) -> Json {
+        Json::Str(self.clone())
+    }
+}
+
+impl<T: ToJson> ToJson for [T] {
+    fn to_json(&self) -> Json {
+        Json::Arr(self.iter().map(ToJson::to_json).collect())
+    }
+}
+
+impl<T: ToJson> ToJson for Vec<T> {
+    fn to_json(&self) -> Json {
+        self.as_slice().to_json()
+    }
+}
+
+impl<T: ToJson> ToJson for Option<T> {
+    fn to_json(&self) -> Json {
+        match self {
+            Some(x) => x.to_json(),
+            None => Json::Null,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::parse;
+    use super::*;
+
+    #[test]
+    fn field_paths_in_errors() {
+        let v = parse(r#"{"requests":[{"features":[1,2]},{"features":"oops"}]}"#).unwrap();
+        let d = Decoder::root(&v, "body");
+        let items = d.field("requests").unwrap().items().unwrap();
+        let good: Vec<f64> = items[0].field("features").unwrap().decode().unwrap();
+        assert_eq!(good, vec![1.0, 2.0]);
+        let err = items[1].field("features").unwrap().decode::<Vec<f64>>().unwrap_err();
+        assert_eq!(err.to_string(), "body.requests[1].features: expected array, got string");
+    }
+
+    #[test]
+    fn missing_field_path() {
+        let v = parse(r#"{"a":{}}"#).unwrap();
+        let err = Decoder::root(&v, "doc").field("a").unwrap().field("b").unwrap_err();
+        assert_eq!(err.to_string(), "doc.a: missing field \"b\"");
+    }
+
+    #[test]
+    fn element_path_in_vec_decode() {
+        let v = parse(r#"[1,2,"x",4]"#).unwrap();
+        let err = Decoder::root(&v, "xs").decode::<Vec<f64>>().unwrap_err();
+        assert_eq!(err.to_string(), "xs[2]: expected number, got string");
+    }
+
+    #[test]
+    fn integer_decoding_is_strict() {
+        let v = parse(r#"{"n":3.5,"m":-1,"k":7}"#).unwrap();
+        let d = Decoder::root(&v, "q");
+        assert!(d.field("n").unwrap().usize().is_err());
+        assert!(d.field("m").unwrap().usize().is_err());
+        assert_eq!(d.field("k").unwrap().usize().unwrap(), 7);
+    }
+
+    #[test]
+    fn option_and_opt_field() {
+        let v = parse(r#"{"a":null,"b":2}"#).unwrap();
+        let d = Decoder::root(&v, "o");
+        assert_eq!(d.field("a").unwrap().decode::<Option<f64>>().unwrap(), None);
+        assert_eq!(d.field("b").unwrap().decode::<Option<f64>>().unwrap(), Some(2.0));
+        assert!(d.opt_field("zzz").unwrap().is_none());
+    }
+
+    #[test]
+    fn to_json_primitives() {
+        assert_eq!(vec![1.0, 2.0].to_json().to_string(), "[1,2]");
+        assert_eq!("hi".to_json().to_string(), "\"hi\"");
+        assert_eq!(3usize.to_json(), Json::Num(3.0));
+        assert_eq!(Option::<f64>::None.to_json(), Json::Null);
+    }
+}

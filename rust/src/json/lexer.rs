@@ -1,0 +1,348 @@
+//! JSON lexer: bytes -> tokens, with byte positions for error reporting.
+//!
+//! Strings are fully decoded here (escapes, `\u` surrogate pairs, raw
+//! UTF-8 passthrough). Numbers are validated against the RFC 8259
+//! grammar *before* being handed to `f64::parse`, so malformed forms the
+//! float parser would happily accept (`01`, `1.`, `1e`, `-`) are
+//! rejected at the lexical level.
+
+use std::fmt;
+
+/// A lexical error with the byte offset it occurred at.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ParseError {
+    pub pos: usize,
+    pub msg: String,
+}
+
+impl ParseError {
+    pub fn new(pos: usize, msg: impl Into<String>) -> ParseError {
+        ParseError { pos, msg: msg.into() }
+    }
+}
+
+impl fmt::Display for ParseError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{} at byte {}", self.msg, self.pos)
+    }
+}
+
+impl std::error::Error for ParseError {}
+
+/// One JSON token.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Tok {
+    LBrace,
+    RBrace,
+    LBracket,
+    RBracket,
+    Colon,
+    Comma,
+    Str(String),
+    Num(f64),
+    True,
+    False,
+    Null,
+}
+
+impl Tok {
+    /// Short human name for error messages.
+    pub fn describe(&self) -> &'static str {
+        match self {
+            Tok::LBrace => "'{'",
+            Tok::RBrace => "'}'",
+            Tok::LBracket => "'['",
+            Tok::RBracket => "']'",
+            Tok::Colon => "':'",
+            Tok::Comma => "','",
+            Tok::Str(_) => "string",
+            Tok::Num(_) => "number",
+            Tok::True | Tok::False => "boolean",
+            Tok::Null => "null",
+        }
+    }
+}
+
+/// Streaming tokenizer over a byte slice.
+pub struct Lexer<'a> {
+    b: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Lexer<'a> {
+    pub fn new(input: &'a str) -> Lexer<'a> {
+        Lexer { b: input.as_bytes(), pos: 0 }
+    }
+
+    /// Byte offset of the next unread byte.
+    pub fn pos(&self) -> usize {
+        self.pos
+    }
+
+    fn peek(&self) -> Option<u8> {
+        self.b.get(self.pos).copied()
+    }
+
+    fn bump(&mut self) -> Option<u8> {
+        let c = self.peek();
+        if c.is_some() {
+            self.pos += 1;
+        }
+        c
+    }
+
+    fn err(&self, msg: impl Into<String>) -> ParseError {
+        ParseError::new(self.pos, msg)
+    }
+
+    fn skip_ws(&mut self) {
+        while matches!(self.peek(), Some(b' ' | b'\t' | b'\n' | b'\r')) {
+            self.pos += 1;
+        }
+    }
+
+    /// Next token, or `None` at end of input.
+    pub fn next_tok(&mut self) -> Result<Option<Tok>, ParseError> {
+        self.skip_ws();
+        let Some(c) = self.peek() else { return Ok(None) };
+        let tok = match c {
+            b'{' => {
+                self.pos += 1;
+                Tok::LBrace
+            }
+            b'}' => {
+                self.pos += 1;
+                Tok::RBrace
+            }
+            b'[' => {
+                self.pos += 1;
+                Tok::LBracket
+            }
+            b']' => {
+                self.pos += 1;
+                Tok::RBracket
+            }
+            b':' => {
+                self.pos += 1;
+                Tok::Colon
+            }
+            b',' => {
+                self.pos += 1;
+                Tok::Comma
+            }
+            b'"' => Tok::Str(self.string()?),
+            b't' => self.lit("true", Tok::True)?,
+            b'f' => self.lit("false", Tok::False)?,
+            b'n' => self.lit("null", Tok::Null)?,
+            c if c == b'-' || c.is_ascii_digit() => Tok::Num(self.number()?),
+            c => return Err(self.err(format!("unexpected character {:?}", c as char))),
+        };
+        Ok(Some(tok))
+    }
+
+    fn lit(&mut self, s: &str, tok: Tok) -> Result<Tok, ParseError> {
+        if self.b[self.pos..].starts_with(s.as_bytes()) {
+            self.pos += s.len();
+            Ok(tok)
+        } else {
+            Err(self.err("invalid literal"))
+        }
+    }
+
+    /// RFC 8259 number: `-? (0 | [1-9][0-9]*) (\. [0-9]+)? ([eE][+-]?[0-9]+)?`.
+    ///
+    /// Leading zeros (`01`), bare fractions (`1.`), and empty exponents
+    /// (`1e`) are grammar violations and rejected even though
+    /// `f64::parse` would accept some of them.
+    fn number(&mut self) -> Result<f64, ParseError> {
+        let start = self.pos;
+        if self.peek() == Some(b'-') {
+            self.pos += 1;
+        }
+        // Integer part: one digit, or a nonzero digit followed by more.
+        match self.peek() {
+            Some(b'0') => {
+                self.pos += 1;
+                if matches!(self.peek(), Some(c) if c.is_ascii_digit()) {
+                    return Err(self.err("leading zero in number"));
+                }
+            }
+            Some(c) if c.is_ascii_digit() => {
+                while matches!(self.peek(), Some(c) if c.is_ascii_digit()) {
+                    self.pos += 1;
+                }
+            }
+            _ => return Err(self.err("expected digit in number")),
+        }
+        if self.peek() == Some(b'.') {
+            self.pos += 1;
+            if !matches!(self.peek(), Some(c) if c.is_ascii_digit()) {
+                return Err(self.err("expected digit after decimal point"));
+            }
+            while matches!(self.peek(), Some(c) if c.is_ascii_digit()) {
+                self.pos += 1;
+            }
+        }
+        if matches!(self.peek(), Some(b'e' | b'E')) {
+            self.pos += 1;
+            if matches!(self.peek(), Some(b'+' | b'-')) {
+                self.pos += 1;
+            }
+            if !matches!(self.peek(), Some(c) if c.is_ascii_digit()) {
+                return Err(self.err("expected digit in exponent"));
+            }
+            while matches!(self.peek(), Some(c) if c.is_ascii_digit()) {
+                self.pos += 1;
+            }
+        }
+        let s = std::str::from_utf8(&self.b[start..self.pos]).expect("ascii number");
+        s.parse::<f64>().map_err(|e| ParseError::new(start, e.to_string()))
+    }
+
+    fn string(&mut self) -> Result<String, ParseError> {
+        if self.bump() != Some(b'"') {
+            return Err(self.err("expected '\"'"));
+        }
+        let mut out = String::new();
+        loop {
+            match self.bump() {
+                None => return Err(self.err("unterminated string")),
+                Some(b'"') => return Ok(out),
+                Some(b'\\') => match self.bump() {
+                    Some(b'"') => out.push('"'),
+                    Some(b'\\') => out.push('\\'),
+                    Some(b'/') => out.push('/'),
+                    Some(b'b') => out.push('\u{8}'),
+                    Some(b'f') => out.push('\u{c}'),
+                    Some(b'n') => out.push('\n'),
+                    Some(b'r') => out.push('\r'),
+                    Some(b't') => out.push('\t'),
+                    Some(b'u') => {
+                        let code = self.hex4()?;
+                        // Surrogate pairs.
+                        let ch = if (0xD800..0xDC00).contains(&code) {
+                            if self.bump() != Some(b'\\') || self.bump() != Some(b'u') {
+                                return Err(self.err("lone high surrogate"));
+                            }
+                            let low = self.hex4()?;
+                            if !(0xDC00..0xE000).contains(&low) {
+                                return Err(self.err("invalid low surrogate"));
+                            }
+                            0x10000 + ((code - 0xD800) << 10) + (low - 0xDC00)
+                        } else {
+                            code
+                        };
+                        out.push(char::from_u32(ch).ok_or_else(|| self.err("invalid codepoint"))?);
+                    }
+                    other => {
+                        return Err(self.err(format!("bad escape {:?}", other.map(|c| c as char))))
+                    }
+                },
+                Some(c) if c < 0x20 => return Err(self.err("control character in string")),
+                Some(c) => {
+                    // Re-assemble UTF-8 multibyte sequences.
+                    if c < 0x80 {
+                        out.push(c as char);
+                    } else {
+                        let start = self.pos - 1;
+                        let len = if c >= 0xF0 {
+                            4
+                        } else if c >= 0xE0 {
+                            3
+                        } else {
+                            2
+                        };
+                        let end = start + len;
+                        if end > self.b.len() {
+                            return Err(self.err("truncated utf8"));
+                        }
+                        let s = std::str::from_utf8(&self.b[start..end])
+                            .map_err(|e| ParseError::new(start, e.to_string()))?;
+                        out.push_str(s);
+                        self.pos = end;
+                    }
+                }
+            }
+        }
+    }
+
+    fn hex4(&mut self) -> Result<u32, ParseError> {
+        let mut code = 0u32;
+        for _ in 0..4 {
+            let c = self.bump().ok_or_else(|| self.err("bad \\u escape"))? as char;
+            code = code * 16 + c.to_digit(16).ok_or_else(|| self.err("bad hex in \\u"))?;
+        }
+        Ok(code)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn lex_all(s: &str) -> Result<Vec<Tok>, ParseError> {
+        let mut l = Lexer::new(s);
+        let mut out = Vec::new();
+        while let Some(t) = l.next_tok()? {
+            out.push(t);
+        }
+        Ok(out)
+    }
+
+    #[test]
+    fn punctuation_and_literals() {
+        assert_eq!(
+            lex_all("{}[]:, true false null").unwrap(),
+            vec![
+                Tok::LBrace,
+                Tok::RBrace,
+                Tok::LBracket,
+                Tok::RBracket,
+                Tok::Colon,
+                Tok::Comma,
+                Tok::True,
+                Tok::False,
+                Tok::Null
+            ]
+        );
+    }
+
+    #[test]
+    fn valid_numbers() {
+        for (s, want) in [
+            ("0", 0.0),
+            ("-0", 0.0),
+            ("10", 10.0),
+            ("1.5", 1.5),
+            ("-1.5e2", -150.0),
+            ("0.25", 0.25),
+            ("2E+3", 2000.0),
+            ("7e-2", 0.07),
+        ] {
+            assert_eq!(lex_all(s).unwrap(), vec![Tok::Num(want)], "{s}");
+        }
+    }
+
+    #[test]
+    fn rejects_rfc8259_number_violations() {
+        // Each of these slips through a bare `f64::parse`.
+        for s in ["01", "-01", "1.", "1e", "1e+", ".5", "-", "1.e2", "00"] {
+            assert!(lex_all(s).is_err(), "{s:?} must be rejected");
+        }
+    }
+
+    #[test]
+    fn error_carries_position() {
+        let e = lex_all("  @").unwrap_err();
+        assert_eq!(e.pos, 2);
+    }
+
+    #[test]
+    fn string_escapes() {
+        assert_eq!(lex_all(r#""a\nb""#).unwrap(), vec![Tok::Str("a\nb".into())]);
+        assert_eq!(lex_all(r#""é""#).unwrap(), vec![Tok::Str("é".into())]);
+        assert_eq!(lex_all(r#""😀""#).unwrap(), vec![Tok::Str("😀".into())]);
+        assert!(lex_all(r#""\ud83d""#).is_err(), "lone surrogate");
+        assert!(lex_all("\"a").is_err(), "unterminated");
+    }
+}

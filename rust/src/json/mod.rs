@@ -1,0 +1,118 @@
+//! First-class JSON subsystem: value tree, strict parser, printers, and
+//! typed decode with field-path errors.
+//!
+//! The promotion of the old `util::json` single file into a proper
+//! subsystem, split along the classic lexer / parser / printer seams
+//! (the `hifijson` architecture) plus a typed layer:
+//!
+//! * [`lexer`] — tokens with byte positions; strict RFC 8259 number
+//!   grammar (`01`, `1.`, `1e` are rejected *before* `f64::parse`).
+//! * [`parser`] — recursive descent with a nesting-depth cap, duplicate
+//!   key rejection, and no trailing garbage: safe on untrusted network
+//!   bodies.
+//! * [`print`] — compact `Display` and [`pretty`] printing; non-finite
+//!   numbers always serialize as `null` so output re-parses.
+//! * [`decode`] — [`FromJson`]/[`ToJson`] traits and the path-tracking
+//!   [`Decoder`], producing errors like
+//!   `body.requests[3].features: expected array, got string`.
+//!
+//! Numbers are held as `f64` and strings must be valid UTF-8. Consumers:
+//! experiment configs, the artifact manifest, metric traces, and the
+//! `net` wire protocol.
+
+pub mod decode;
+pub mod lexer;
+pub mod parser;
+pub mod print;
+
+pub use decode::{type_name, DecodeError, Decoder, FromJson, ToJson};
+pub use lexer::ParseError;
+pub use parser::parse;
+pub use print::pretty;
+
+use std::collections::BTreeMap;
+
+/// A JSON value. Objects use a `BTreeMap` so serialization is
+/// deterministic.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Json {
+    Null,
+    Bool(bool),
+    Num(f64),
+    Str(String),
+    Arr(Vec<Json>),
+    Obj(BTreeMap<String, Json>),
+}
+
+impl Json {
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Json::Num(x) => Some(*x),
+            _ => None,
+        }
+    }
+    pub fn as_usize(&self) -> Option<usize> {
+        self.as_f64().and_then(|x| {
+            if x >= 0.0 && x.fract() == 0.0 {
+                Some(x as usize)
+            } else {
+                None
+            }
+        })
+    }
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Json::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Json::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+    pub fn as_arr(&self) -> Option<&[Json]> {
+        match self {
+            Json::Arr(v) => Some(v),
+            _ => None,
+        }
+    }
+    pub fn as_obj(&self) -> Option<&BTreeMap<String, Json>> {
+        match self {
+            Json::Obj(m) => Some(m),
+            _ => None,
+        }
+    }
+    /// Object field access, `None` if not an object or missing.
+    pub fn get(&self, key: &str) -> Option<&Json> {
+        self.as_obj().and_then(|m| m.get(key))
+    }
+
+    pub fn obj(pairs: Vec<(&str, Json)>) -> Json {
+        Json::Obj(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
+    }
+    pub fn num(x: f64) -> Json {
+        Json::Num(x)
+    }
+    pub fn str(s: &str) -> Json {
+        Json::Str(s.to_string())
+    }
+    pub fn arr_nums(xs: &[f64]) -> Json {
+        Json::Arr(xs.iter().map(|&x| Json::Num(x)).collect())
+    }
+    pub fn arr_strs(xs: &[&str]) -> Json {
+        Json::Arr(xs.iter().map(|s| Json::str(s)).collect())
+    }
+
+    /// Pretty-printed form (two-space indent).
+    pub fn pretty(&self) -> String {
+        print::pretty(self)
+    }
+
+    /// Decode this value into a typed `T`; `root` names the document in
+    /// error paths.
+    pub fn decode_as<T: FromJson>(&self, root: &str) -> Result<T, DecodeError> {
+        Decoder::root(self, root).decode()
+    }
+}

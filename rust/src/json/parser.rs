@@ -1,0 +1,190 @@
+//! Recursive-descent JSON parser over [`lexer::Lexer`] tokens.
+//!
+//! Strict by design (the wire protocol depends on it): no trailing
+//! garbage, no trailing commas, duplicate object keys rejected, and a
+//! nesting-depth cap so adversarial network input cannot overflow the
+//! stack.
+
+use super::lexer::{Lexer, ParseError, Tok};
+use super::Json;
+use std::collections::BTreeMap;
+
+/// Maximum object/array nesting. Deep enough for any real config or
+/// request, shallow enough that parsing untrusted input stays stack-safe.
+const MAX_DEPTH: usize = 256;
+
+/// Parse a complete JSON document.
+pub fn parse(input: &str) -> Result<Json, ParseError> {
+    let mut p = Parser { lex: Lexer::new(input), depth: 0 };
+    let first = p.required()?;
+    let v = p.value(first)?;
+    if p.lex.next_tok()?.is_some() {
+        return Err(ParseError::new(p.lex.pos(), "trailing garbage"));
+    }
+    Ok(v)
+}
+
+struct Parser<'a> {
+    lex: Lexer<'a>,
+    depth: usize,
+}
+
+impl<'a> Parser<'a> {
+    fn required(&mut self) -> Result<Tok, ParseError> {
+        self.lex
+            .next_tok()?
+            .ok_or_else(|| ParseError::new(self.lex.pos(), "unexpected end of input"))
+    }
+
+    fn value(&mut self, tok: Tok) -> Result<Json, ParseError> {
+        match tok {
+            Tok::LBrace => self.object(),
+            Tok::LBracket => self.array(),
+            Tok::Str(s) => Ok(Json::Str(s)),
+            Tok::Num(x) => Ok(Json::Num(x)),
+            Tok::True => Ok(Json::Bool(true)),
+            Tok::False => Ok(Json::Bool(false)),
+            Tok::Null => Ok(Json::Null),
+            other => Err(ParseError::new(
+                self.lex.pos(),
+                format!("expected value, found {}", other.describe()),
+            )),
+        }
+    }
+
+    fn enter(&mut self) -> Result<(), ParseError> {
+        self.depth += 1;
+        if self.depth > MAX_DEPTH {
+            return Err(ParseError::new(self.lex.pos(), "nesting too deep"));
+        }
+        Ok(())
+    }
+
+    fn object(&mut self) -> Result<Json, ParseError> {
+        self.enter()?;
+        let mut m = BTreeMap::new();
+        match self.required()? {
+            Tok::RBrace => {
+                self.depth -= 1;
+                return Ok(Json::Obj(m));
+            }
+            mut tok => loop {
+                let key = match tok {
+                    Tok::Str(s) => s,
+                    other => {
+                        return Err(ParseError::new(
+                            self.lex.pos(),
+                            format!("expected object key string, found {}", other.describe()),
+                        ))
+                    }
+                };
+                match self.required()? {
+                    Tok::Colon => {}
+                    other => {
+                        return Err(ParseError::new(
+                            self.lex.pos(),
+                            format!("expected ':', found {}", other.describe()),
+                        ))
+                    }
+                }
+                let first = self.required()?;
+                let v = self.value(first)?;
+                if m.insert(key.clone(), v).is_some() {
+                    return Err(ParseError::new(
+                        self.lex.pos(),
+                        format!("duplicate object key {key:?}"),
+                    ));
+                }
+                match self.required()? {
+                    Tok::Comma => tok = self.required()?,
+                    Tok::RBrace => {
+                        self.depth -= 1;
+                        return Ok(Json::Obj(m));
+                    }
+                    other => {
+                        return Err(ParseError::new(
+                            self.lex.pos(),
+                            format!("expected ',' or '}}', found {}", other.describe()),
+                        ))
+                    }
+                }
+            },
+        }
+    }
+
+    fn array(&mut self) -> Result<Json, ParseError> {
+        self.enter()?;
+        let mut v = Vec::new();
+        match self.required()? {
+            Tok::RBracket => {
+                self.depth -= 1;
+                return Ok(Json::Arr(v));
+            }
+            mut tok => loop {
+                v.push(self.value(tok)?);
+                match self.required()? {
+                    Tok::Comma => tok = self.required()?,
+                    Tok::RBracket => {
+                        self.depth -= 1;
+                        return Ok(Json::Arr(v));
+                    }
+                    other => {
+                        return Err(ParseError::new(
+                            self.lex.pos(),
+                            format!("expected ',' or ']', found {}", other.describe()),
+                        ))
+                    }
+                }
+            },
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_scalars() {
+        assert_eq!(parse("null").unwrap(), Json::Null);
+        assert_eq!(parse("true").unwrap(), Json::Bool(true));
+        assert_eq!(parse("-1.5e2").unwrap(), Json::Num(-150.0));
+        assert_eq!(parse("\"hi\\n\"").unwrap(), Json::Str("hi\n".into()));
+    }
+
+    #[test]
+    fn parse_nested() {
+        let v = parse(r#"{"a":[1,2,{"b":false}],"c":"x"}"#).unwrap();
+        assert_eq!(v.get("c").unwrap().as_str().unwrap(), "x");
+        assert_eq!(v.get("a").unwrap().as_arr().unwrap().len(), 3);
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(parse("{").is_err());
+        assert!(parse("[1,]").is_err());
+        assert!(parse("12 34").is_err());
+        assert!(parse("'single'").is_err());
+        assert!(parse("{\"a\":1,}").is_err());
+        assert!(parse("").is_err());
+    }
+
+    #[test]
+    fn rejects_duplicate_keys() {
+        assert!(parse(r#"{"a":1,"a":2}"#).is_err());
+    }
+
+    #[test]
+    fn depth_capped() {
+        let deep = "[".repeat(10_000) + &"]".repeat(10_000);
+        let e = parse(&deep).unwrap_err();
+        assert!(e.to_string().contains("nesting too deep"));
+    }
+
+    #[test]
+    fn empty_containers() {
+        assert_eq!(parse("[]").unwrap(), Json::Arr(vec![]));
+        assert_eq!(parse("{}").unwrap(), Json::Obj(Default::default()));
+        assert_eq!(parse(" [ { } , [ ] ] ").unwrap().as_arr().unwrap().len(), 2);
+    }
+}

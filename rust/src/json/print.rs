@@ -1,0 +1,147 @@
+//! JSON printers: compact (`Display`) and pretty (indented).
+//!
+//! Every printer path serializes non-finite numbers (`NaN`, `±inf`) as
+//! `null` — JSON has no representation for them, and emitting `NaN`
+//! verbatim (as the old `util::json` did) produced documents no strict
+//! parser, including our own, would accept back.
+
+use super::Json;
+use std::fmt;
+
+impl fmt::Display for Json {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Json::Null => write!(f, "null"),
+            Json::Bool(b) => write!(f, "{b}"),
+            Json::Num(x) => write_num(f, *x),
+            Json::Str(s) => write_escaped(f, s),
+            Json::Arr(v) => {
+                write!(f, "[")?;
+                for (i, x) in v.iter().enumerate() {
+                    if i > 0 {
+                        write!(f, ",")?;
+                    }
+                    write!(f, "{x}")?;
+                }
+                write!(f, "]")
+            }
+            Json::Obj(m) => {
+                write!(f, "{{")?;
+                for (i, (k, v)) in m.iter().enumerate() {
+                    if i > 0 {
+                        write!(f, ",")?;
+                    }
+                    write_escaped(f, k)?;
+                    write!(f, ":{v}")?;
+                }
+                write!(f, "}}")
+            }
+        }
+    }
+}
+
+fn write_num(f: &mut fmt::Formatter<'_>, x: f64) -> fmt::Result {
+    if !x.is_finite() {
+        write!(f, "null")
+    } else if x.fract() == 0.0 && x.abs() < 1e15 {
+        write!(f, "{}", x as i64)
+    } else {
+        write!(f, "{x}")
+    }
+}
+
+pub(super) fn write_escaped(f: &mut fmt::Formatter<'_>, s: &str) -> fmt::Result {
+    write!(f, "\"")?;
+    for c in s.chars() {
+        match c {
+            '"' => write!(f, "\\\"")?,
+            '\\' => write!(f, "\\\\")?,
+            '\n' => write!(f, "\\n")?,
+            '\r' => write!(f, "\\r")?,
+            '\t' => write!(f, "\\t")?,
+            c if (c as u32) < 0x20 => write!(f, "\\u{:04x}", c as u32)?,
+            c => write!(f, "{c}")?,
+        }
+    }
+    write!(f, "\"")
+}
+
+/// Pretty-printed form with two-space indentation (configs, docs,
+/// human-facing traces; the wire protocol stays compact).
+pub fn pretty(v: &Json) -> String {
+    let mut out = String::new();
+    pretty_into(v, 0, &mut out);
+    out
+}
+
+fn pretty_into(v: &Json, indent: usize, out: &mut String) {
+    match v {
+        Json::Arr(items) if !items.is_empty() => {
+            out.push_str("[\n");
+            for (i, x) in items.iter().enumerate() {
+                out.push_str(&"  ".repeat(indent + 1));
+                pretty_into(x, indent + 1, out);
+                out.push_str(if i + 1 < items.len() { ",\n" } else { "\n" });
+            }
+            out.push_str(&"  ".repeat(indent));
+            out.push(']');
+        }
+        Json::Obj(m) if !m.is_empty() => {
+            out.push_str("{\n");
+            for (i, (k, x)) in m.iter().enumerate() {
+                out.push_str(&"  ".repeat(indent + 1));
+                out.push_str(&Json::Str(k.clone()).to_string());
+                out.push_str(": ");
+                pretty_into(x, indent + 1, out);
+                out.push_str(if i + 1 < m.len() { ",\n" } else { "\n" });
+            }
+            out.push_str(&"  ".repeat(indent));
+            out.push('}');
+        }
+        // Scalars and empty containers render compactly.
+        other => out.push_str(&other.to_string()),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::parse;
+    use super::*;
+
+    #[test]
+    fn roundtrip() {
+        let src = r#"{"arr":[1,2.5,-3],"nested":{"deep":[true,null,"s"]},"s":"q\"uote"}"#;
+        let v = parse(src).unwrap();
+        assert_eq!(parse(&v.to_string()).unwrap(), v);
+    }
+
+    #[test]
+    fn non_finite_serializes_as_null() {
+        // Regression: NaN/inf used to print verbatim, producing documents
+        // our own parser rejects.
+        for x in [f64::NAN, f64::INFINITY, f64::NEG_INFINITY] {
+            assert_eq!(Json::Num(x).to_string(), "null");
+        }
+        let doc = Json::obj(vec![("bad", Json::num(f64::NAN)), ("ok", Json::num(1.0))]);
+        let printed = doc.to_string();
+        assert_eq!(printed, r#"{"bad":null,"ok":1}"#);
+        assert!(parse(&printed).is_ok(), "printed output must re-parse");
+        assert_eq!(Json::arr_nums(&[1.0, f64::INFINITY]).to_string(), "[1,null]");
+    }
+
+    #[test]
+    fn integers_print_without_fraction() {
+        assert_eq!(Json::num(3.0).to_string(), "3");
+        assert_eq!(Json::num(2.5).to_string(), "2.5");
+        assert_eq!(Json::num(-0.0).to_string(), "0");
+    }
+
+    #[test]
+    fn pretty_reparses_and_indents() {
+        let v = parse(r#"{"a":[1,2],"b":{"c":true},"empty":[]}"#).unwrap();
+        let p = pretty(&v);
+        assert_eq!(parse(&p).unwrap(), v);
+        assert!(p.contains("\n  \"a\": [\n"), "indented form, got:\n{p}");
+        assert!(p.contains("\"empty\": []"), "empty array stays compact");
+    }
+}

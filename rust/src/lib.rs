@@ -13,24 +13,38 @@
 //!   iteration (Nystrom approximation, automatic stepsize via randomized
 //!   powering, Nesterov acceleration) lowered **once** to HLO text.
 //! * **L3 — this crate**: loads the AOT artifacts through PJRT (`xla`
-//!   crate) and owns block sampling (uniform and BLESS/ARLS), the solver
-//!   event loop, the baselines (PCG, Falkon-style inducing points,
-//!   EigenPro-style preconditioned SGD, direct Cholesky), datasets,
-//!   configs, metrics, the paper-bench harness, and a batched prediction
-//!   server.
+//!   crate) and owns everything around them.
 //!
 //! Python never runs on the solve or serve path: after `make artifacts`
 //! the `askotch` binary is self-contained.
 //!
-//! See `DESIGN.md` for the system inventory and the per-experiment index,
-//! and `EXPERIMENTS.md` for paper-vs-measured results.
+//! ## Module map
+//!
+//! | Module        | Role |
+//! |---------------|------|
+//! | [`config`]    | Experiment configuration (kernels, solvers, budgets), JSON decode |
+//! | [`coordinator`] | Problem setup and the solver event loop |
+//! | [`data`]      | Synthetic testbed generators, CSV loading, preprocessing |
+//! | [`json`]      | First-class JSON subsystem: strict parser, printers, typed `FromJson`/`ToJson` |
+//! | [`kernels`]   | Exact host-side kernel evaluation (oracles, reference paths) |
+//! | [`linalg`]    | Dense matrices, Cholesky/eigen factorizations |
+//! | [`metrics`]   | Task metrics, convergence traces, latency percentiles |
+//! | [`net`]       | HTTP/1.1 prediction service + typed JSON wire protocol (`docs/SERVING.md`) |
+//! | [`runtime`]   | PJRT engine, artifact manifest, host tensors |
+//! | [`sampling`]  | Block coordinate sampling (uniform, BLESS/ARLS) |
+//! | [`server`]    | Dynamic-batching model thread and [`server::Predictor`] backends |
+//! | [`solvers`]   | ASkotch/Skotch and the baselines (PCG, Falkon, EigenPro, Cholesky) |
+//! | [`testing`]   | Mini property-testing framework |
+//! | [`util`]      | RNG, CLI parsing, formatting substrates |
 
 pub mod config;
 pub mod coordinator;
 pub mod data;
+pub mod json;
 pub mod kernels;
 pub mod linalg;
 pub mod metrics;
+pub mod net;
 pub mod runtime;
 pub mod sampling;
 pub mod server;

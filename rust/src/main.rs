@@ -5,12 +5,13 @@
 //!   experiment  run a JSON experiment config (file path argument)
 //!   compare     run several solvers on the same problem, print a table
 //!   info        inspect the artifact manifest / engine
-//!   serve       demo the batched prediction server on a trained model
+//!   serve       train a model and serve it over HTTP (docs/SERVING.md)
 //!
 //! Examples:
 //!   askotch solve --dataset taxi_like --n 2048 --solver askotch --iters 200
 //!   askotch compare --dataset physics_like --n 2048 --iters 100
 //!   askotch experiment configs/quickstart.json
+//!   askotch serve --addr 0.0.0.0:8080 --config configs/quickstart.json
 //!   askotch info
 
 use anyhow::Result;
@@ -225,12 +226,24 @@ fn cmd_perf(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// `askotch serve --addr 0.0.0.0:8080 [--config cfg.json] [--threads N]`
+///
+/// Trains a model (from `--config` JSON or the usual dataset flags),
+/// then serves `POST /v1/predict`, `GET /healthz`, and `GET /metrics`
+/// over HTTP until the process is killed. The main thread becomes the
+/// model thread (the PJRT engine is not `Send`); the `net` accept pool
+/// feeds it through the dynamic batcher. See `docs/SERVING.md` for the
+/// wire protocol.
 fn cmd_serve(args: &Args) -> Result<()> {
-    use askotch::server::{serve, ModelSnapshot, Request, ServerConfig};
+    use askotch::net::{NetConfig, Server};
+    use askotch::server::{serve_predictor, EnginePredictor, ModelSnapshot, Request, ServerConfig};
     use std::sync::mpsc;
+    use std::time::Duration;
 
-    // Train a small model, then serve it.
-    let mut cfg = config_from_args(args)?;
+    let mut cfg = match args.get("config") {
+        Some(path) => ExperimentConfig::from_json(&std::fs::read_to_string(path)?)?,
+        None => config_from_args(args)?,
+    };
     cfg.solver = SolverKind::Askotch;
     let engine = Engine::from_manifest(artifacts_dir(args))?;
     let coord = Coordinator::new(&engine);
@@ -253,35 +266,39 @@ fn cmd_serve(args: &Args) -> Result<()> {
         weights: report.weights.clone(),
     };
 
+    let net_cfg = NetConfig {
+        addr: args.get_or("addr", "127.0.0.1:8080"),
+        threads: args.get_usize("threads", 4),
+        ..Default::default()
+    };
+    let batch_cfg = ServerConfig {
+        max_batch: args.get_usize("max-batch", 256),
+        linger: Duration::from_micros((args.get_f64("linger-ms", 2.0) * 1e3) as u64),
+    };
     let (tx, rx) = mpsc::channel::<Request>();
-    let n_requests = args.get_usize("requests", 200);
-    // Client threads submit the test set as requests.
-    let test_rows: Vec<Vec<f64>> =
-        (0..problem.test.n.min(n_requests)).map(|i| problem.test.row(i).to_vec()).collect();
-    let client = std::thread::spawn(move || {
-        let mut lat = Vec::new();
-        for row in test_rows {
-            let (rtx, rrx) = mpsc::channel();
-            let t0 = std::time::Instant::now();
-            tx.send(Request { features: row, reply: rtx }).unwrap();
-            let _ = rrx.recv().unwrap();
-            lat.push(t0.elapsed().as_secs_f64());
-        }
-        lat
-    });
-    let stats = serve(&engine, &model, rx, &ServerConfig::default());
-    let mut lat = client.join().unwrap();
-    lat.sort_by(|a, b| a.partial_cmp(b).unwrap());
-    let p50 = lat[lat.len() / 2];
-    let p99 = lat[(lat.len() * 99) / 100];
+    let server = Server::start(&net_cfg, tx)?;
     println!(
-        "served {} requests in {} batches (mean batch {:.1}, max {}), p50={} p99={}",
+        "serving on http://{} (threads={}, max_batch={}) — POST /v1/predict, GET /healthz, GET /metrics",
+        server.addr(),
+        net_cfg.threads,
+        batch_cfg.max_batch
+    );
+    // Block this thread in the batching loop until the server goes away
+    // (in practice: until the process is killed).
+    let live = server.metrics().clone();
+    let stats = serve_predictor(
+        &EnginePredictor { engine: &engine, model: &model },
+        rx,
+        &batch_cfg,
+        Some(live.batcher()),
+    );
+    server.shutdown();
+    println!(
+        "served {} requests in {} batches (mean batch {:.1}, max {})",
         stats.requests,
         stats.batches,
         stats.mean_batch(),
-        stats.max_batch_seen,
-        fmt::duration(p50),
-        fmt::duration(p99)
+        stats.max_batch_seen
     );
     Ok(())
 }

@@ -1,7 +1,8 @@
-//! Metrics: test-set evaluation, convergence traces, storage accounting.
+//! Metrics: test-set evaluation, convergence traces, latency
+//! percentiles, storage accounting.
 
 use crate::data::TaskKind;
-use crate::util::json::Json;
+use crate::json::{Json, ToJson};
 
 /// Classification accuracy for +-1 labels (predictions thresholded at 0).
 pub fn accuracy(pred: &[f64], target: &[f64]) -> f64 {
@@ -97,28 +98,39 @@ impl Trace {
     }
 
     pub fn to_json(&self) -> Json {
-        Json::Arr(
-            self.points
-                .iter()
-                .map(|p| {
-                    Json::obj(vec![
-                        ("iter", Json::num(p.iter as f64)),
-                        ("secs", Json::num(p.secs)),
-                        ("metric", float_json(p.metric)),
-                        ("residual", float_json(p.residual)),
-                    ])
-                })
-                .collect(),
-        )
+        ToJson::to_json(self)
     }
 }
 
-fn float_json(x: f64) -> Json {
-    if x.is_finite() {
-        Json::num(x)
-    } else {
-        Json::Null
+impl ToJson for TracePoint {
+    fn to_json(&self) -> Json {
+        // Non-finite metric/residual serialize as null via the printer's
+        // non-finite guard; no special casing needed here anymore.
+        Json::obj(vec![
+            ("iter", Json::num(self.iter as f64)),
+            ("secs", Json::num(self.secs)),
+            ("metric", Json::num(self.metric)),
+            ("residual", Json::num(self.residual)),
+        ])
     }
+}
+
+impl ToJson for Trace {
+    fn to_json(&self) -> Json {
+        self.points.to_json()
+    }
+}
+
+/// Nearest-rank percentile of an **ascending-sorted** slice: the
+/// smallest element with at least `p` of the mass at or below it
+/// (`p` in `[0, 1]`). Unlike the naive `(len as f64 * p) as usize`
+/// index, this never over-reads the tail: on 100 samples, p99 is the
+/// 99th element (index 98), not the maximum.
+pub fn percentile(sorted: &[f64], p: f64) -> f64 {
+    assert!(!sorted.is_empty(), "percentile of empty slice");
+    let n = sorted.len();
+    let rank = (p.clamp(0.0, 1.0) * n as f64).ceil() as usize;
+    sorted[rank.clamp(1, n) - 1]
 }
 
 #[cfg(test)]
@@ -165,5 +177,29 @@ mod tests {
         t.push(TracePoint { iter: 1, secs: 0.5, metric: 0.8, residual: 1e-3 });
         let j = t.to_json().to_string();
         assert!(j.contains("\"metric\":0.8"));
+    }
+
+    #[test]
+    fn trace_json_nan_residual_is_null() {
+        let mut t = Trace::default();
+        t.push(TracePoint { iter: 0, secs: 0.1, metric: 0.5, residual: f64::NAN });
+        let j = t.to_json().to_string();
+        assert!(j.contains("\"residual\":null"), "got: {j}");
+        assert!(crate::json::parse(&j).is_ok());
+    }
+
+    #[test]
+    fn percentile_nearest_rank() {
+        let xs: Vec<f64> = (1..=100).map(|i| i as f64).collect();
+        // p50 of 1..=100 is the 50th value; the old biased index
+        // (len * p) as usize read the 51st.
+        assert_eq!(percentile(&xs, 0.50), 50.0);
+        assert_eq!(percentile(&xs, 0.99), 99.0);
+        assert_eq!(percentile(&xs, 1.00), 100.0);
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        // Tail must not over-read: p99 of 2 samples is the max, p50 the min.
+        assert_eq!(percentile(&[1.0, 2.0], 0.99), 2.0);
+        assert_eq!(percentile(&[1.0, 2.0], 0.50), 1.0);
+        assert_eq!(percentile(&[7.0], 0.99), 7.0);
     }
 }

@@ -1,0 +1,356 @@
+//! Minimal, strict HTTP/1.1 message layer over any `Read`/`Write`.
+//!
+//! Supports exactly what the prediction service needs: request-line +
+//! header parsing with hard size caps, `Content-Length` bodies (chunked
+//! transfer encoding is rejected with 501), keep-alive negotiation, and
+//! response serialization. All parsing is bounded so a hostile peer
+//! cannot balloon memory: header block and body limits are enforced
+//! *before* allocation.
+
+use std::io::{self, BufRead, Read, Write};
+
+/// Maximum length of the request line and of each header line.
+const MAX_LINE: u64 = 8 * 1024;
+/// Maximum number of headers per request.
+const MAX_HEADERS: usize = 64;
+
+/// Why reading a request failed, mapped to a response status.
+#[derive(Debug)]
+pub enum HttpError {
+    /// Malformed syntax -> 400.
+    BadRequest(String),
+    /// Body larger than the configured cap -> 413.
+    PayloadTooLarge { limit: usize },
+    /// A feature we deliberately don't implement (chunked bodies) -> 501.
+    NotImplemented(String),
+    /// Socket error / timeout / mid-request EOF: no response possible,
+    /// just drop the connection.
+    Io(io::Error),
+}
+
+impl From<io::Error> for HttpError {
+    fn from(e: io::Error) -> HttpError {
+        HttpError::Io(e)
+    }
+}
+
+impl HttpError {
+    /// Status code + message for errors that warrant a response.
+    pub fn response_parts(&self) -> Option<(u16, String)> {
+        match self {
+            HttpError::BadRequest(m) => Some((400, m.clone())),
+            HttpError::PayloadTooLarge { limit } => {
+                Some((413, format!("request body exceeds {limit} byte limit")))
+            }
+            HttpError::NotImplemented(m) => Some((501, m.clone())),
+            HttpError::Io(_) => None,
+        }
+    }
+}
+
+/// A parsed request.
+#[derive(Debug)]
+pub struct HttpRequest {
+    pub method: String,
+    /// Path component only (no query parsing; the API doesn't use them).
+    pub target: String,
+    /// `true` for HTTP/1.1, `false` for HTTP/1.0.
+    pub http11: bool,
+    /// Header names lowercased.
+    pub headers: Vec<(String, String)>,
+    pub body: Vec<u8>,
+}
+
+impl HttpRequest {
+    pub fn header(&self, name: &str) -> Option<&str> {
+        self.headers
+            .iter()
+            .find(|(k, _)| k == name)
+            .map(|(_, v)| v.as_str())
+    }
+
+    /// Keep-alive per RFC 9112: 1.1 defaults on, 1.0 defaults off,
+    /// `Connection` header overrides either way.
+    pub fn keep_alive(&self) -> bool {
+        match self.header("connection").map(|v| v.to_ascii_lowercase()) {
+            Some(v) if v.split(',').any(|t| t.trim() == "close") => false,
+            Some(v) if v.split(',').any(|t| t.trim() == "keep-alive") => true,
+            _ => self.http11,
+        }
+    }
+}
+
+/// Read one CRLF- (or bare-LF-) terminated line, capped at `MAX_LINE`.
+/// Returns `None` on clean EOF before any byte.
+fn read_line<R: BufRead>(r: &mut R) -> Result<Option<String>, HttpError> {
+    let mut buf = Vec::new();
+    let n = (&mut *r).take(MAX_LINE).read_until(b'\n', &mut buf)?;
+    if n == 0 {
+        return Ok(None);
+    }
+    if buf.last() != Some(&b'\n') {
+        return Err(HttpError::BadRequest(format!("line exceeds {MAX_LINE} bytes")));
+    }
+    buf.pop();
+    if buf.last() == Some(&b'\r') {
+        buf.pop();
+    }
+    String::from_utf8(buf)
+        .map(Some)
+        .map_err(|_| HttpError::BadRequest("non-utf8 header bytes".into()))
+}
+
+/// Read and parse one request from the stream.
+///
+/// `Ok(None)` means the peer closed the connection cleanly between
+/// requests (the normal end of a keep-alive session).
+pub fn read_request<R: BufRead>(
+    r: &mut R,
+    max_body: usize,
+) -> Result<Option<HttpRequest>, HttpError> {
+    let Some(request_line) = read_line(r)? else {
+        return Ok(None);
+    };
+    let mut parts = request_line.split(' ');
+    let (Some(method), Some(target), Some(version)) = (parts.next(), parts.next(), parts.next())
+    else {
+        return Err(HttpError::BadRequest(format!("malformed request line {request_line:?}")));
+    };
+    if parts.next().is_some() {
+        return Err(HttpError::BadRequest("malformed request line".into()));
+    }
+    let http11 = match version {
+        "HTTP/1.1" => true,
+        "HTTP/1.0" => false,
+        v => return Err(HttpError::BadRequest(format!("unsupported version {v:?}"))),
+    };
+
+    let mut headers = Vec::new();
+    loop {
+        let Some(line) = read_line(r)? else {
+            return Err(HttpError::Io(io::ErrorKind::UnexpectedEof.into()));
+        };
+        if line.is_empty() {
+            break;
+        }
+        if headers.len() >= MAX_HEADERS {
+            return Err(HttpError::BadRequest("too many headers".into()));
+        }
+        let Some((name, value)) = line.split_once(':') else {
+            return Err(HttpError::BadRequest(format!("malformed header {line:?}")));
+        };
+        if name.is_empty() || name.contains(' ') {
+            return Err(HttpError::BadRequest(format!("malformed header name {name:?}")));
+        }
+        headers.push((name.to_ascii_lowercase(), value.trim().to_string()));
+    }
+
+    let req = HttpRequest { method: method.to_string(), target: target.to_string(), http11, headers, body: Vec::new() };
+
+    if let Some(te) = req.header("transfer-encoding") {
+        return Err(HttpError::NotImplemented(format!(
+            "transfer-encoding {te:?} not supported; send Content-Length"
+        )));
+    }
+    // Reject duplicate Content-Length outright (RFC 9112 §6.3): picking
+    // either copy desyncs keep-alive framing against any intermediary
+    // that picks the other — the classic request-smuggling vector.
+    let mut body_len = 0usize;
+    let mut seen_len = false;
+    for (name, value) in &req.headers {
+        if name == "content-length" {
+            if seen_len {
+                return Err(HttpError::BadRequest("duplicate content-length header".into()));
+            }
+            seen_len = true;
+            body_len = value
+                .parse::<usize>()
+                .map_err(|_| HttpError::BadRequest(format!("invalid content-length {value:?}")))?;
+        }
+    }
+    if body_len > max_body {
+        return Err(HttpError::PayloadTooLarge { limit: max_body });
+    }
+    let mut body = vec![0u8; body_len];
+    r.read_exact(&mut body)?;
+    Ok(Some(HttpRequest { body, ..req }))
+}
+
+/// Reason phrase for the status codes the service emits.
+pub fn reason(status: u16) -> &'static str {
+    match status {
+        200 => "OK",
+        400 => "Bad Request",
+        404 => "Not Found",
+        405 => "Method Not Allowed",
+        413 => "Payload Too Large",
+        500 => "Internal Server Error",
+        501 => "Not Implemented",
+        503 => "Service Unavailable",
+        _ => "Unknown",
+    }
+}
+
+/// Client-side counterpart to [`write_response`]: read one response's
+/// status and body from a stream (status line, headers, Content-Length
+/// body). Used by the serving example's load-generator client and the
+/// integration tests so the response-framing logic lives in one place.
+pub fn read_response<R: BufRead>(r: &mut R) -> io::Result<(u16, Vec<u8>)> {
+    let bad = |msg: String| io::Error::new(io::ErrorKind::InvalidData, msg);
+    let mut status_line = String::new();
+    if r.read_line(&mut status_line)? == 0 {
+        return Err(io::ErrorKind::UnexpectedEof.into());
+    }
+    let status: u16 = status_line
+        .split(' ')
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .ok_or_else(|| bad(format!("bad status line {status_line:?}")))?;
+    let mut len = 0usize;
+    loop {
+        let mut line = String::new();
+        if r.read_line(&mut line)? == 0 {
+            return Err(io::ErrorKind::UnexpectedEof.into());
+        }
+        let line = line.trim_end();
+        if line.is_empty() {
+            break;
+        }
+        if let Some(v) = line.to_ascii_lowercase().strip_prefix("content-length:") {
+            len = v.trim().parse().map_err(|_| bad(format!("bad content-length {v:?}")))?;
+        }
+    }
+    let mut body = vec![0u8; len];
+    r.read_exact(&mut body)?;
+    Ok((status, body))
+}
+
+/// Serialize a response. All bodies are JSON in this service.
+pub fn write_response<W: Write>(
+    w: &mut W,
+    status: u16,
+    body: &[u8],
+    keep_alive: bool,
+) -> io::Result<()> {
+    write!(
+        w,
+        "HTTP/1.1 {} {}\r\ncontent-type: application/json\r\ncontent-length: {}\r\nconnection: {}\r\n\r\n",
+        status,
+        reason(status),
+        body.len(),
+        if keep_alive { "keep-alive" } else { "close" },
+    )?;
+    w.write_all(body)?;
+    w.flush()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::{BufReader, Cursor};
+
+    fn req(raw: &str) -> Result<Option<HttpRequest>, HttpError> {
+        read_request(&mut BufReader::new(Cursor::new(raw.as_bytes().to_vec())), 1024)
+    }
+
+    #[test]
+    fn parses_get() {
+        let r = req("GET /healthz HTTP/1.1\r\nHost: x\r\n\r\n").unwrap().unwrap();
+        assert_eq!(r.method, "GET");
+        assert_eq!(r.target, "/healthz");
+        assert!(r.http11);
+        assert_eq!(r.header("host"), Some("x"));
+        assert!(r.keep_alive());
+        assert!(r.body.is_empty());
+    }
+
+    #[test]
+    fn parses_post_with_body() {
+        let r = req("POST /v1/predict HTTP/1.1\r\nContent-Length: 5\r\n\r\nhello")
+            .unwrap()
+            .unwrap();
+        assert_eq!(r.body, b"hello");
+    }
+
+    #[test]
+    fn keep_alive_negotiation() {
+        let r = req("GET / HTTP/1.1\r\nConnection: close\r\n\r\n").unwrap().unwrap();
+        assert!(!r.keep_alive());
+        let r = req("GET / HTTP/1.0\r\n\r\n").unwrap().unwrap();
+        assert!(!r.keep_alive());
+        let r = req("GET / HTTP/1.0\r\nConnection: keep-alive\r\n\r\n").unwrap().unwrap();
+        assert!(r.keep_alive());
+    }
+
+    #[test]
+    fn clean_eof_is_none() {
+        assert!(req("").unwrap().is_none());
+    }
+
+    #[test]
+    fn body_cap_enforced_before_read() {
+        let e = req("POST / HTTP/1.1\r\nContent-Length: 999999\r\n\r\n").unwrap_err();
+        match e {
+            HttpError::PayloadTooLarge { limit } => assert_eq!(limit, 1024),
+            other => panic!("want 413, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn chunked_is_rejected() {
+        let e = req("POST / HTTP/1.1\r\nTransfer-Encoding: chunked\r\n\r\n").unwrap_err();
+        assert!(matches!(e, HttpError::NotImplemented(_)));
+    }
+
+    #[test]
+    fn garbage_is_bad_request() {
+        assert!(matches!(req("NOT-HTTP\r\n\r\n"), Err(HttpError::BadRequest(_))));
+        assert!(matches!(req("GET / HTTP/2.0\r\n\r\n"), Err(HttpError::BadRequest(_))));
+        assert!(matches!(
+            req("GET / HTTP/1.1\r\nbad header line\r\n\r\n"),
+            Err(HttpError::BadRequest(_))
+        ));
+        assert!(matches!(
+            req("POST / HTTP/1.1\r\nContent-Length: nope\r\n\r\n"),
+            Err(HttpError::BadRequest(_))
+        ));
+    }
+
+    #[test]
+    fn truncated_body_is_io_error() {
+        let e = req("POST / HTTP/1.1\r\nContent-Length: 10\r\n\r\nshort").unwrap_err();
+        assert!(matches!(e, HttpError::Io(_)));
+    }
+
+    #[test]
+    fn response_serialization() {
+        let mut out = Vec::new();
+        write_response(&mut out, 200, br#"{"ok":true}"#, true).unwrap();
+        let s = String::from_utf8(out).unwrap();
+        assert!(s.starts_with("HTTP/1.1 200 OK\r\n"));
+        assert!(s.contains("content-length: 11\r\n"));
+        assert!(s.contains("connection: keep-alive\r\n"));
+        assert!(s.ends_with("\r\n\r\n{\"ok\":true}"));
+    }
+
+    #[test]
+    fn duplicate_content_length_rejected() {
+        let e = req("POST / HTTP/1.1\r\nContent-Length: 5\r\nContent-Length: 50\r\n\r\nhello")
+            .unwrap_err();
+        assert!(matches!(e, HttpError::BadRequest(_)), "smuggling vector must 400");
+        // Even identical duplicates are rejected — strict beats clever.
+        let e = req("POST / HTTP/1.1\r\nContent-Length: 5\r\nContent-Length: 5\r\n\r\nhello")
+            .unwrap_err();
+        assert!(matches!(e, HttpError::BadRequest(_)));
+    }
+
+    #[test]
+    fn read_response_roundtrips_write_response() {
+        let mut out = Vec::new();
+        write_response(&mut out, 404, br#"{"error":"x"}"#, false).unwrap();
+        let (status, body) =
+            read_response(&mut BufReader::new(Cursor::new(out))).unwrap();
+        assert_eq!(status, 404);
+        assert_eq!(body, br#"{"error":"x"}"#);
+    }
+}

@@ -1,0 +1,387 @@
+//! Networked prediction service: a zero-dependency HTTP/1.1 front end
+//! over the dynamic batcher in `crate::server`.
+//!
+//! Architecture (one process, two kinds of threads):
+//!
+//! ```text
+//!   clients --TCP--> [accept pool: N worker threads]    [model thread]
+//!                      parse HTTP + wire JSON             owns Predictor
+//!                      mpsc::Sender<server::Request> ---> dynamic batcher
+//!                      <----- per-request reply channel ----'
+//! ```
+//!
+//! * **Routes**: `POST /v1/predict` (single + batch), `GET /healthz`,
+//!   `GET /metrics` (JSON serving stats: req/s, batch-size histogram,
+//!   latency percentiles).
+//! * **Keep-alive** per connection with a request cap; bounded request
+//!   bodies and header blocks (see [`http`]).
+//! * **Graceful shutdown**: [`Server::shutdown`] stops accepting, lets
+//!   in-flight requests drain (their replies are already in the reply
+//!   channels), then joins the workers and drops the batcher senders so
+//!   the model thread exits its loop.
+//!
+//! The submodules are independently testable: [`http`] (message layer),
+//! [`wire`] (typed JSON protocol), [`stats`] (observability).
+
+pub mod http;
+pub mod stats;
+pub mod wire;
+
+use crate::json::Json;
+use crate::server::Request;
+use http::{read_request, write_response, HttpRequest};
+use stats::Metrics;
+use std::io::{self, BufRead, BufReader, BufWriter, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{mpsc, Arc};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+/// Network front-end configuration.
+#[derive(Debug, Clone)]
+pub struct NetConfig {
+    /// Bind address, e.g. `127.0.0.1:8080` (port 0 picks a free port).
+    pub addr: String,
+    /// Accept-pool size: worker threads handling connections.
+    pub threads: usize,
+    /// Maximum request body size in bytes.
+    pub max_body_bytes: usize,
+    /// Maximum requests served per keep-alive connection.
+    pub keep_alive_requests: usize,
+    /// Idle read timeout per connection.
+    pub read_timeout: Duration,
+}
+
+impl Default for NetConfig {
+    fn default() -> NetConfig {
+        NetConfig {
+            addr: "127.0.0.1:8080".into(),
+            threads: 4,
+            max_body_bytes: 4 * 1024 * 1024,
+            keep_alive_requests: 1000,
+            read_timeout: Duration::from_secs(30),
+        }
+    }
+}
+
+/// A running HTTP prediction service.
+///
+/// Holds the worker pool; the model/batcher thread is owned by the
+/// caller (the PJRT engine is not `Send`, so the caller keeps it on a
+/// thread of its choosing and hands us the request sender).
+pub struct Server {
+    addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    workers: Vec<JoinHandle<()>>,
+    metrics: Arc<Metrics>,
+}
+
+impl Server {
+    /// Bind and start the accept pool. `submit` is the batcher's request
+    /// channel; each worker holds a clone, and all clones are dropped on
+    /// shutdown so the batcher loop can exit.
+    pub fn start(cfg: &NetConfig, submit: mpsc::Sender<Request>) -> anyhow::Result<Server> {
+        let listener = TcpListener::bind(&cfg.addr)
+            .map_err(|e| anyhow::anyhow!("binding {}: {e}", cfg.addr))?;
+        let addr = listener.local_addr()?;
+        let listener = Arc::new(listener);
+        let stop = Arc::new(AtomicBool::new(false));
+        let metrics = Arc::new(Metrics::default());
+        let mut workers = Vec::with_capacity(cfg.threads.max(1));
+        for _ in 0..cfg.threads.max(1) {
+            let listener = listener.clone();
+            let stop = stop.clone();
+            let metrics = metrics.clone();
+            let submit = submit.clone();
+            let cfg = cfg.clone();
+            workers.push(std::thread::spawn(move || loop {
+                match listener.accept() {
+                    Ok((stream, _peer)) => {
+                        if stop.load(Ordering::SeqCst) {
+                            break;
+                        }
+                        let _ = handle_connection(stream, &cfg, &submit, &metrics, &stop);
+                    }
+                    Err(_) => {
+                        if stop.load(Ordering::SeqCst) {
+                            break;
+                        }
+                        // Transient accept error (EMFILE etc.): back off.
+                        std::thread::sleep(Duration::from_millis(10));
+                    }
+                }
+            }));
+        }
+        // The original sender is dropped here; workers hold the clones.
+        drop(submit);
+        Ok(Server { addr, stop, workers, metrics })
+    }
+
+    /// The actually-bound address (resolves port 0).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Live serving metrics (shared with `GET /metrics`). Pass
+    /// `metrics().batcher()` to `server::serve_predictor` as its `live`
+    /// argument so batch stats show up remotely.
+    pub fn metrics(&self) -> &Arc<Metrics> {
+        &self.metrics
+    }
+
+    /// Stop accepting, drain in-flight requests, join the pool, and drop
+    /// the batcher senders (which lets the model thread's serve loop
+    /// return once the queue empties).
+    pub fn shutdown(mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        // Each worker may be parked in accept(); poke them awake.
+        for _ in 0..self.workers.len() {
+            let _ = TcpStream::connect(self.addr);
+        }
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        // If shutdown() was not called, stop workers on drop. Workers
+        // blocked in accept() are woken by the connect pokes.
+        if !self.workers.is_empty() {
+            self.stop.store(true, Ordering::SeqCst);
+            for _ in 0..self.workers.len() {
+                let _ = TcpStream::connect(self.addr);
+            }
+            for w in self.workers.drain(..) {
+                let _ = w.join();
+            }
+        }
+    }
+}
+
+/// How often an idle keep-alive connection re-checks the stop flag.
+/// Bounds how long `Server::shutdown` can wait on idle connections.
+const IDLE_TICK: Duration = Duration::from_millis(200);
+
+/// Serve one connection: a bounded keep-alive loop.
+fn handle_connection(
+    stream: TcpStream,
+    cfg: &NetConfig,
+    submit: &mpsc::Sender<Request>,
+    metrics: &Metrics,
+    stop: &AtomicBool,
+) -> anyhow::Result<()> {
+    stream.set_nodelay(true)?;
+    // Clones share the fd, so timeout changes via `sock` affect `reader`.
+    let sock = stream.try_clone()?;
+    let mut reader = BufReader::new(stream.try_clone()?);
+    let mut writer = BufWriter::new(stream);
+    for served in 0..cfg.keep_alive_requests {
+        // Wait for the next request's first byte in short ticks so a
+        // shutdown is observed promptly even on idle connections; the
+        // overall idle budget is still cfg.read_timeout.
+        sock.set_read_timeout(Some(IDLE_TICK))?;
+        let idle_deadline = Instant::now() + cfg.read_timeout;
+        loop {
+            match reader.fill_buf() {
+                Ok([]) => return Ok(()), // clean close between requests
+                Ok(_) => break,          // request bytes available
+                Err(e)
+                    if matches!(
+                        e.kind(),
+                        io::ErrorKind::WouldBlock | io::ErrorKind::TimedOut
+                    ) =>
+                {
+                    if stop.load(Ordering::SeqCst) || Instant::now() >= idle_deadline {
+                        return Ok(());
+                    }
+                }
+                Err(_) => return Ok(()),
+            }
+        }
+        // Parsing an in-flight request gets the full timeout.
+        sock.set_read_timeout(Some(cfg.read_timeout))?;
+        let req = match read_request(&mut reader, cfg.max_body_bytes) {
+            Ok(Some(req)) => req,
+            Ok(None) => break, // clean close between requests
+            Err(e) => {
+                // Parse-level failure: answer if the protocol still
+                // allows it, then close.
+                if let Some((status, msg)) = e.response_parts() {
+                    metrics.http_requests.fetch_add(1, Ordering::Relaxed);
+                    metrics.http_errors.fetch_add(1, Ordering::Relaxed);
+                    let code = match status {
+                        400 => "bad_request",
+                        413 => "payload_too_large",
+                        _ => "unsupported",
+                    };
+                    respond(&mut writer, status, &wire::error_body(code, &msg), false)?;
+                }
+                break;
+            }
+        };
+        metrics.http_requests.fetch_add(1, Ordering::Relaxed);
+        // Advertise close on the final permitted request of the
+        // connection so clients don't pipeline into a dropped socket.
+        let keep = req.keep_alive()
+            && !stop.load(Ordering::SeqCst)
+            && served + 1 < cfg.keep_alive_requests;
+        let (status, body) = route(&req, submit, metrics);
+        if status >= 400 {
+            metrics.http_errors.fetch_add(1, Ordering::Relaxed);
+        }
+        respond(&mut writer, status, &body, keep)?;
+        if !keep {
+            break;
+        }
+    }
+    Ok(())
+}
+
+fn respond<W: Write>(w: &mut W, status: u16, body: &Json, keep: bool) -> anyhow::Result<()> {
+    write_response(w, status, body.to_string().as_bytes(), keep)?;
+    Ok(())
+}
+
+/// Dispatch one request to its handler.
+fn route(req: &HttpRequest, submit: &mpsc::Sender<Request>, metrics: &Metrics) -> (u16, Json) {
+    match (req.method.as_str(), req.target.as_str()) {
+        ("POST", "/v1/predict") => handle_predict(req, submit, metrics),
+        ("GET", "/healthz") => (200, Json::obj(vec![("status", Json::str("ok"))])),
+        ("GET", "/metrics") => (200, metrics.snapshot_json()),
+        (_, "/v1/predict" | "/healthz" | "/metrics") => (
+            405,
+            wire::error_body("method_not_allowed", &format!("{} not allowed here", req.method)),
+        ),
+        (_, path) => (404, wire::error_body("not_found", &format!("no route for {path:?}"))),
+    }
+}
+
+fn handle_predict(
+    req: &HttpRequest,
+    submit: &mpsc::Sender<Request>,
+    metrics: &Metrics,
+) -> (u16, Json) {
+    let t0 = Instant::now();
+    let body = match wire::parse_predict_body(&req.body) {
+        Ok(b) => b,
+        Err(e) => return (400, wire::error_body("bad_request", &e.to_string())),
+    };
+    let single = body.is_single();
+    // Fan the slots into the batcher (moving each feature vector, no
+    // copies), then collect every reply. Reply channels are per-slot,
+    // so replies cannot be mixed up across concurrent connections.
+    let requests = body.into_requests();
+    let mut pending = Vec::with_capacity(requests.len());
+    for r in requests {
+        let (rtx, rrx) = mpsc::channel();
+        if submit.send(Request { features: r.features, reply: rtx }).is_err() {
+            return (
+                503,
+                wire::error_body("unavailable", "model thread is down; try again later"),
+            );
+        }
+        pending.push(rrx);
+    }
+    let mut results: Vec<wire::SlotResult> = Vec::with_capacity(pending.len());
+    for rrx in pending {
+        match rrx.recv() {
+            Ok(Ok(x)) => results.push(Ok(x)),
+            Ok(Err(e)) => results.push(Err(e.to_string())),
+            Err(_) => results.push(Err("model thread dropped the request".into())),
+        }
+    }
+    metrics.record_predict(results.len(), t0.elapsed().as_secs_f64());
+    let all_failed = results.iter().all(|r| r.is_err());
+    let status = if all_failed && single { 500 } else { 200 };
+    (status, wire::predict_response(single, &results))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::KernelKind;
+    use crate::server::{serve_predictor, HostPredictor, ModelSnapshot, ServerConfig};
+
+    /// Tiny blocking HTTP client for tests.
+    fn http_call(
+        addr: SocketAddr,
+        method: &str,
+        path: &str,
+        body: Option<&str>,
+    ) -> (u16, String) {
+        let mut stream = TcpStream::connect(addr).expect("connect");
+        let body = body.unwrap_or("");
+        write!(
+            stream,
+            "{method} {path} HTTP/1.1\r\nhost: t\r\ncontent-length: {}\r\nconnection: close\r\n\r\n{body}",
+            body.len()
+        )
+        .unwrap();
+        let (status, body) = http::read_response(&mut BufReader::new(stream)).unwrap();
+        (status, String::from_utf8(body).unwrap())
+    }
+
+    fn toy_model() -> ModelSnapshot {
+        // weights = e_0: prediction = k(x, [0,0]).
+        ModelSnapshot {
+            kernel: KernelKind::Rbf,
+            sigma: 1.0,
+            x_train: vec![0.0, 0.0, 1.0, 1.0],
+            n: 2,
+            d: 2,
+            weights: vec![1.0, 0.0],
+        }
+    }
+
+    fn start_toy() -> (Server, std::thread::JoinHandle<crate::server::ServerStats>) {
+        let (tx, rx) = mpsc::channel();
+        let cfg = NetConfig { addr: "127.0.0.1:0".into(), threads: 2, ..Default::default() };
+        let server = Server::start(&cfg, tx).expect("start");
+        let live = server.metrics().clone();
+        let model_thread = std::thread::spawn(move || {
+            serve_predictor(
+                &HostPredictor { model: toy_model() },
+                rx,
+                &ServerConfig::default(),
+                Some(live.batcher()),
+            )
+        });
+        (server, model_thread)
+    }
+
+    #[test]
+    fn healthz_and_routing() {
+        let (server, model) = start_toy();
+        let addr = server.addr();
+        let (status, body) = http_call(addr, "GET", "/healthz", None);
+        assert_eq!(status, 200);
+        assert!(body.contains("\"ok\""));
+        let (status, _) = http_call(addr, "GET", "/nope", None);
+        assert_eq!(status, 404);
+        let (status, _) = http_call(addr, "GET", "/v1/predict", None);
+        assert_eq!(status, 405);
+        server.shutdown();
+        model.join().unwrap();
+    }
+
+    #[test]
+    fn predict_single_and_malformed() {
+        let (server, model) = start_toy();
+        let addr = server.addr();
+        let (status, body) =
+            http_call(addr, "POST", "/v1/predict", Some(r#"{"features":[0,0]}"#));
+        assert_eq!(status, 200, "{body}");
+        let v = crate::json::parse(&body).unwrap();
+        assert!((v.get("prediction").unwrap().as_f64().unwrap() - 1.0).abs() < 1e-12);
+
+        let (status, body) =
+            http_call(addr, "POST", "/v1/predict", Some(r#"{"features":"oops"}"#));
+        assert_eq!(status, 400);
+        assert!(body.contains("body.features"), "field path in error, got: {body}");
+        server.shutdown();
+        model.join().unwrap();
+    }
+}

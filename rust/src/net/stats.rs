@@ -1,0 +1,166 @@
+//! Serving observability: request counters, latency percentiles, and
+//! the batcher's live batch-size histogram, exported as JSON on
+//! `GET /metrics`.
+
+use crate::metrics::percentile;
+use crate::server::{ServerStats, BATCH_HIST_BUCKETS};
+use crate::json::Json;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::Instant;
+
+/// How many recent request latencies the percentile window keeps.
+const LATENCY_WINDOW: usize = 4096;
+
+/// Shared, thread-safe serving metrics. One instance per `net::Server`,
+/// shared with the batcher thread through [`Metrics::batcher`].
+pub struct Metrics {
+    started: Instant,
+    /// All HTTP requests, any route or status.
+    pub http_requests: AtomicU64,
+    /// Responses with status >= 400.
+    pub http_errors: AtomicU64,
+    /// Feature vectors pushed through the batcher (a batch POST counts
+    /// each slot).
+    pub predictions: AtomicU64,
+    /// Ring buffer of recent predict-request latencies (seconds).
+    latencies: Mutex<LatencyWindow>,
+    /// Live mirror of the batcher's stats (the batcher thread updates
+    /// it after every batch).
+    batcher: Mutex<ServerStats>,
+}
+
+struct LatencyWindow {
+    buf: Vec<f64>,
+    next: usize,
+}
+
+impl Default for Metrics {
+    fn default() -> Metrics {
+        Metrics {
+            started: Instant::now(),
+            http_requests: AtomicU64::new(0),
+            http_errors: AtomicU64::new(0),
+            predictions: AtomicU64::new(0),
+            latencies: Mutex::new(LatencyWindow { buf: Vec::new(), next: 0 }),
+            batcher: Mutex::new(ServerStats::default()),
+        }
+    }
+}
+
+impl Metrics {
+    /// The mutex the batching loop mirrors its stats into (pass to
+    /// `server::serve_predictor` as the `live` argument).
+    pub fn batcher(&self) -> &Mutex<ServerStats> {
+        &self.batcher
+    }
+
+    /// Record one served predict request.
+    pub fn record_predict(&self, slots: usize, latency_secs: f64) {
+        self.predictions.fetch_add(slots as u64, Ordering::Relaxed);
+        let mut w = self.latencies.lock().unwrap();
+        if w.buf.len() < LATENCY_WINDOW {
+            w.buf.push(latency_secs);
+        } else {
+            let i = w.next;
+            w.buf[i] = latency_secs;
+        }
+        w.next = (w.next + 1) % LATENCY_WINDOW;
+    }
+
+    /// Snapshot all metrics as the `GET /metrics` JSON document.
+    pub fn snapshot_json(&self) -> Json {
+        let uptime = self.started.elapsed().as_secs_f64().max(1e-9);
+        let http_requests = self.http_requests.load(Ordering::Relaxed);
+        let mut lat = self.latencies.lock().unwrap().buf.clone();
+        lat.sort_by(|a, b| a.partial_cmp(b).unwrap_or(std::cmp::Ordering::Equal));
+        let lat_json = if lat.is_empty() {
+            Json::Null
+        } else {
+            Json::obj(vec![
+                ("p50_ms", Json::num(percentile(&lat, 0.50) * 1e3)),
+                ("p90_ms", Json::num(percentile(&lat, 0.90) * 1e3)),
+                ("p99_ms", Json::num(percentile(&lat, 0.99) * 1e3)),
+                ("max_ms", Json::num(percentile(&lat, 1.0) * 1e3)),
+                ("window", Json::num(lat.len() as f64)),
+            ])
+        };
+        let b = self.batcher.lock().unwrap().clone();
+        Json::obj(vec![
+            ("uptime_secs", Json::num(uptime)),
+            ("http_requests", Json::num(http_requests as f64)),
+            ("http_errors", Json::num(self.http_errors.load(Ordering::Relaxed) as f64)),
+            ("requests_per_sec", Json::num(http_requests as f64 / uptime)),
+            ("predictions", Json::num(self.predictions.load(Ordering::Relaxed) as f64)),
+            ("latency", lat_json),
+            ("batcher", batcher_json(&b)),
+        ])
+    }
+}
+
+fn batcher_json(s: &ServerStats) -> Json {
+    // Histogram as {"1": c0, "2-3": c1, "4-7": c2, ...}, dropping empty
+    // tail buckets.
+    let last = (0..BATCH_HIST_BUCKETS).rev().find(|&i| s.batch_hist[i] > 0);
+    let mut hist = Vec::new();
+    if let Some(last) = last {
+        for i in 0..=last {
+            let lo = 1usize << i;
+            let hi = (1usize << (i + 1)) - 1;
+            let label = if lo == hi { lo.to_string() } else { format!("{lo}-{hi}") };
+            hist.push((label, Json::num(s.batch_hist[i] as f64)));
+        }
+    }
+    Json::obj(vec![
+        ("requests", Json::num(s.requests as f64)),
+        ("batches", Json::num(s.batches as f64)),
+        ("mean_batch", Json::num(s.mean_batch())),
+        ("max_batch", Json::num(s.max_batch_seen as f64)),
+        ("busy_secs", Json::num(s.busy_secs)),
+        ("batch_size_hist", Json::Obj(hist.into_iter().collect())),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn snapshot_counts_and_percentiles() {
+        let m = Metrics::default();
+        m.http_requests.fetch_add(10, Ordering::Relaxed);
+        for i in 1..=100 {
+            m.record_predict(1, i as f64 / 1000.0);
+        }
+        {
+            let mut b = m.batcher().lock().unwrap();
+            b.requests = 100;
+            b.batches = 25;
+            b.batch_hist[2] = 25; // all batches size 4-7
+        }
+        let j = m.snapshot_json();
+        assert_eq!(j.get("http_requests").unwrap().as_f64().unwrap(), 10.0);
+        assert_eq!(j.get("predictions").unwrap().as_f64().unwrap(), 100.0);
+        let lat = j.get("latency").unwrap();
+        assert!((lat.get("p50_ms").unwrap().as_f64().unwrap() - 50.0).abs() < 1e-9);
+        assert!((lat.get("p99_ms").unwrap().as_f64().unwrap() - 99.0).abs() < 1e-9);
+        let b = j.get("batcher").unwrap();
+        assert_eq!(b.get("mean_batch").unwrap().as_f64().unwrap(), 4.0);
+        assert_eq!(
+            b.get("batch_size_hist").unwrap().get("4-7").unwrap().as_f64().unwrap(),
+            25.0
+        );
+        // The whole snapshot must serialize to valid JSON.
+        assert!(crate::json::parse(&j.to_string()).is_ok());
+    }
+
+    #[test]
+    fn latency_window_wraps() {
+        let m = Metrics::default();
+        for i in 0..(LATENCY_WINDOW + 100) {
+            m.record_predict(1, i as f64);
+        }
+        let w = m.latencies.lock().unwrap();
+        assert_eq!(w.buf.len(), LATENCY_WINDOW);
+    }
+}

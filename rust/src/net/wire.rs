@@ -1,0 +1,226 @@
+//! Typed JSON wire protocol for the prediction service.
+//!
+//! Request body for `POST /v1/predict` is either a single prediction
+//!
+//! ```json
+//! {"features": [0.1, 0.2, 0.3]}
+//! ```
+//!
+//! or a batch
+//!
+//! ```json
+//! {"requests": [{"features": [...]}, {"features": [...]}]}
+//! ```
+//!
+//! Responses mirror the shape: `{"prediction": 1.25}` for a single,
+//! `{"predictions": [...], "count": n}` for a batch (failed slots are
+//! `null`, detailed in an `"errors"` array). All failures use the error
+//! envelope `{"error": {"code": ..., "message": ...}}` where `message`
+//! carries a field path for decode failures
+//! (`body.requests[3].features: expected array, got string`).
+//!
+//! See `docs/SERVING.md` for the full schema reference.
+
+use crate::json::{self, DecodeError, Decoder, FromJson, Json, ToJson};
+
+/// One prediction to compute.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PredictRequest {
+    pub features: Vec<f64>,
+}
+
+impl FromJson for PredictRequest {
+    fn from_json(d: &Decoder<'_>) -> Result<PredictRequest, DecodeError> {
+        let features: Vec<f64> = d.field("features")?.decode()?;
+        if features.is_empty() {
+            return Err(d.field("features")?.error("features must be non-empty"));
+        }
+        Ok(PredictRequest { features })
+    }
+}
+
+impl ToJson for PredictRequest {
+    fn to_json(&self) -> Json {
+        Json::obj(vec![("features", self.features.to_json())])
+    }
+}
+
+/// A parsed `POST /v1/predict` body.
+#[derive(Debug, Clone, PartialEq)]
+pub enum PredictBody {
+    Single(PredictRequest),
+    Batch(Vec<PredictRequest>),
+}
+
+impl PredictBody {
+    /// The flat list of feature vectors to push through the batcher.
+    pub fn requests(&self) -> &[PredictRequest] {
+        match self {
+            PredictBody::Single(r) => std::slice::from_ref(r),
+            PredictBody::Batch(rs) => rs,
+        }
+    }
+
+    pub fn is_single(&self) -> bool {
+        matches!(self, PredictBody::Single(_))
+    }
+
+    /// Consume into the flat request list (lets the caller move feature
+    /// vectors into batcher requests instead of cloning them).
+    pub fn into_requests(self) -> Vec<PredictRequest> {
+        match self {
+            PredictBody::Single(r) => vec![r],
+            PredictBody::Batch(rs) => rs,
+        }
+    }
+}
+
+/// Parse and decode a request body. The error path is rooted at `body`.
+pub fn parse_predict_body(bytes: &[u8]) -> Result<PredictBody, DecodeError> {
+    let text = std::str::from_utf8(bytes)
+        .map_err(|_| DecodeError::new("body", "request body is not valid UTF-8"))?;
+    let v = json::parse(text).map_err(|e| DecodeError::new("body", format!("invalid JSON: {e}")))?;
+    let root = Decoder::root(&v, "body");
+    match (root.opt_field("requests")?, root.opt_field("features")?) {
+        (Some(_), Some(_)) => {
+            Err(root.error("give either \"features\" (single) or \"requests\" (batch), not both"))
+        }
+        (Some(reqs), None) => {
+            let rs: Vec<PredictRequest> = reqs.decode()?;
+            if rs.is_empty() {
+                return Err(reqs.error("requests must be non-empty"));
+            }
+            Ok(PredictBody::Batch(rs))
+        }
+        (None, Some(_)) => Ok(PredictBody::Single(root.decode()?)),
+        (None, None) => Err(root.error("missing field \"features\" or \"requests\"")),
+    }
+}
+
+/// Outcome of one prediction slot.
+pub type SlotResult = Result<f64, String>;
+
+/// Build the success-path response body for a predict call. `single`
+/// is [`PredictBody::is_single`] of the request this answers.
+pub fn predict_response(single: bool, results: &[SlotResult]) -> Json {
+    if single {
+        match &results[0] {
+            Ok(x) => Json::obj(vec![("prediction", Json::num(*x))]),
+            Err(e) => error_body("predict_failed", e),
+        }
+    } else {
+        let mut preds = Vec::with_capacity(results.len());
+        let mut errors = Vec::new();
+        for (i, r) in results.iter().enumerate() {
+            match r {
+                Ok(x) => preds.push(Json::num(*x)),
+                Err(e) => {
+                    preds.push(Json::Null);
+                    errors.push(Json::obj(vec![
+                        ("index", Json::num(i as f64)),
+                        ("error", Json::str(e)),
+                    ]));
+                }
+            }
+        }
+        let mut fields = vec![
+            ("predictions", Json::Arr(preds)),
+            ("count", Json::num(results.len() as f64)),
+        ];
+        if !errors.is_empty() {
+            fields.push(("errors", Json::Arr(errors)));
+        }
+        Json::obj(fields)
+    }
+}
+
+/// The uniform error envelope: `{"error":{"code":...,"message":...}}`.
+pub fn error_body(code: &str, message: &str) -> Json {
+    Json::obj(vec![(
+        "error",
+        Json::obj(vec![("code", Json::str(code)), ("message", Json::str(message))]),
+    )])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn single_body() {
+        let b = parse_predict_body(br#"{"features":[1,2,3]}"#).unwrap();
+        assert_eq!(b.requests().len(), 1);
+        assert_eq!(b.requests()[0].features, vec![1.0, 2.0, 3.0]);
+    }
+
+    #[test]
+    fn batch_body() {
+        let b =
+            parse_predict_body(br#"{"requests":[{"features":[1]},{"features":[2]}]}"#).unwrap();
+        assert_eq!(b.requests().len(), 2);
+        assert_eq!(b.requests()[1].features, vec![2.0]);
+    }
+
+    #[test]
+    fn decode_errors_have_field_paths() {
+        let e = parse_predict_body(br#"{"requests":[{"features":[1]},{"features":"x"}]}"#)
+            .unwrap_err();
+        assert_eq!(e.to_string(), "body.requests[1].features: expected array, got string");
+        let e = parse_predict_body(br#"{"features":[1,"two"]}"#).unwrap_err();
+        assert_eq!(e.to_string(), "body.features[1]: expected number, got string");
+        let e = parse_predict_body(br#"{"requests":[{}]}"#).unwrap_err();
+        assert_eq!(e.to_string(), "body.requests[0]: missing field \"features\"");
+    }
+
+    #[test]
+    fn rejects_empty_and_ambiguous() {
+        assert!(parse_predict_body(br#"{}"#).is_err());
+        assert!(parse_predict_body(br#"{"features":[]}"#).is_err());
+        assert!(parse_predict_body(br#"{"requests":[]}"#).is_err());
+        assert!(parse_predict_body(br#"{"features":[1],"requests":[]}"#).is_err());
+        assert!(parse_predict_body(b"not json").is_err());
+        assert!(parse_predict_body(&[0xff, 0xfe]).is_err());
+    }
+
+    #[test]
+    fn single_response_shape() {
+        let b = parse_predict_body(br#"{"features":[1]}"#).unwrap();
+        assert!(b.is_single());
+        assert_eq!(b.into_requests().len(), 1);
+        let r = predict_response(true, &[Ok(2.5)]);
+        assert_eq!(r.to_string(), r#"{"prediction":2.5}"#);
+    }
+
+    #[test]
+    fn batch_response_with_partial_failure() {
+        let b = parse_predict_body(br#"{"requests":[{"features":[1]},{"features":[2]}]}"#)
+            .unwrap();
+        assert!(!b.is_single());
+        let r = predict_response(b.is_single(), &[Ok(1.5), Err("dim mismatch".into())]);
+        let s = r.to_string();
+        assert!(s.contains(r#""predictions":[1.5,null]"#), "got {s}");
+        assert!(s.contains(r#""count":2"#), "got {s}");
+        assert!(s.contains(r#""index":1"#), "got {s}");
+        assert!(s.contains("dim mismatch"), "got {s}");
+    }
+
+    #[test]
+    fn error_envelope_shape() {
+        let e = error_body("bad_request", "body.features: expected array, got string");
+        let s = e.to_string();
+        assert!(s.starts_with(r#"{"error":{"code":"bad_request""#), "got {s}");
+        let parsed = json::parse(&s).unwrap();
+        assert_eq!(
+            parsed.get("error").unwrap().get("message").unwrap().as_str().unwrap(),
+            "body.features: expected array, got string"
+        );
+    }
+
+    #[test]
+    fn roundtrip_to_json() {
+        let r = PredictRequest { features: vec![1.0, 2.0] };
+        let j = r.to_json();
+        let back: PredictRequest = Decoder::root(&j, "body").decode().unwrap();
+        assert_eq!(back, r);
+    }
+}

@@ -4,8 +4,7 @@
 //! entry describes one lowered HLO module: the operation name, the kernel
 //! function it was specialized for, and the static shape parameters.
 
-use crate::util::json::{self, Json};
-use std::collections::BTreeMap;
+use crate::json::{self, DecodeError, Decoder, FromJson};
 use std::path::{Path, PathBuf};
 
 /// Static shape/config parameters an artifact was lowered with.
@@ -47,6 +46,36 @@ impl ArtifactMeta {
     }
 }
 
+impl FromJson for ShapeKey {
+    fn from_json(d: &Decoder<'_>) -> Result<ShapeKey, DecodeError> {
+        let dim = |k: &str| -> Result<usize, DecodeError> {
+            match d.opt_field(k)? {
+                Some(f) => f.usize(),
+                None => Ok(0),
+            }
+        };
+        Ok(ShapeKey { n: dim("n")?, d: dim("d")?, b: dim("b")?, r: dim("r")? })
+    }
+}
+
+impl FromJson for ArtifactMeta {
+    fn from_json(d: &Decoder<'_>) -> Result<ArtifactMeta, DecodeError> {
+        Ok(ArtifactMeta {
+            op: d.field("op")?.string()?,
+            kernel: d.field("kernel")?.string()?,
+            dtype: match d.opt_field("dtype")? {
+                Some(f) => f.string()?,
+                None => "f32".to_string(),
+            },
+            shapes: match d.opt_field("shapes")? {
+                Some(f) => f.decode()?,
+                None => ShapeKey::default(),
+            },
+            file: d.field("file")?.string()?,
+        })
+    }
+}
+
 /// Parsed manifest plus the directory it lives in.
 #[derive(Debug, Clone)]
 pub struct Manifest {
@@ -64,39 +93,12 @@ impl Manifest {
         Self::from_json_str(&text, dir)
     }
 
-    /// Parse manifest JSON (exposed separately for tests).
+    /// Parse manifest JSON (exposed separately for tests). Decode errors
+    /// carry field paths (`manifest.artifacts[2].op: ...`).
     pub fn from_json_str(text: &str, dir: PathBuf) -> anyhow::Result<Manifest> {
         let root = json::parse(text).map_err(|e| anyhow::anyhow!("manifest parse: {e}"))?;
-        let arts = root
-            .get("artifacts")
-            .and_then(Json::as_arr)
-            .ok_or_else(|| anyhow::anyhow!("manifest missing 'artifacts' array"))?;
-        let mut artifacts = Vec::new();
-        for a in arts {
-            let get_str = |k: &str| -> anyhow::Result<String> {
-                Ok(a.get(k)
-                    .and_then(Json::as_str)
-                    .ok_or_else(|| anyhow::anyhow!("artifact missing field '{k}'"))?
-                    .to_string())
-            };
-            let shapes_obj = a
-                .get("shapes")
-                .and_then(Json::as_obj)
-                .cloned()
-                .unwrap_or_else(BTreeMap::new);
-            let dim = |k: &str| shapes_obj.get(k).and_then(Json::as_usize).unwrap_or(0);
-            artifacts.push(ArtifactMeta {
-                op: get_str("op")?,
-                kernel: get_str("kernel")?,
-                dtype: a
-                    .get("dtype")
-                    .and_then(Json::as_str)
-                    .unwrap_or("f32")
-                    .to_string(),
-                shapes: ShapeKey { n: dim("n"), d: dim("d"), b: dim("b"), r: dim("r") },
-                file: get_str("file")?,
-            });
-        }
+        let artifacts: Vec<ArtifactMeta> =
+            Decoder::root(&root, "manifest").field("artifacts")?.decode()?;
         Ok(Manifest { dir, artifacts })
     }
 
@@ -180,6 +182,17 @@ mod tests {
         let m = manifest();
         assert_eq!(m.artifacts.len(), 3);
         assert_eq!(m.ops(), vec!["askotch_step".to_string(), "kmv".to_string()]);
+    }
+
+    #[test]
+    fn decode_errors_carry_paths() {
+        let bad = r#"{"artifacts":[{"op":"kmv","kernel":"rbf","file":"a","shapes":{"n":"big"}}]}"#;
+        let e = Manifest::from_json_str(bad, PathBuf::from("/tmp")).unwrap_err();
+        assert!(e.to_string().contains("manifest.artifacts[0].shapes.n"), "got: {e}");
+        let missing = r#"{"artifacts":[{"kernel":"rbf","file":"a"}]}"#;
+        let e = Manifest::from_json_str(missing, PathBuf::from("/tmp")).unwrap_err();
+        assert!(e.to_string().contains("manifest.artifacts[0]"), "got: {e}");
+        assert!(e.to_string().contains("\"op\""), "got: {e}");
     }
 
     #[test]

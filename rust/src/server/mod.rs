@@ -1,17 +1,26 @@
 //! Batched prediction server: the serving path for a trained KRR model.
 //!
-//! A dedicated engine thread owns the (non-`Send`) PJRT engine and the
-//! trained weights; client threads submit feature vectors over an mpsc
-//! channel. The engine thread drains the queue into dynamic batches (up
-//! to `max_batch`, bounded linger) and answers each request with one
-//! tiled `kmv` execution — the same dynamic-batching structure a GPU
+//! A dedicated model thread owns the predictor (for the PJRT engine
+//! backend the engine is not `Send`, so it must live on one thread) and
+//! the trained weights; client threads submit feature vectors over an
+//! mpsc channel. The model thread drains the queue into dynamic batches
+//! (up to `max_batch`, bounded linger) and answers each request with one
+//! batched prediction — the same dynamic-batching structure a GPU
 //! serving stack would use, with the batch dimension amortizing the
 //! artifact invocation overhead.
+//!
+//! The [`Predictor`] trait decouples the batching loop from the compute
+//! backend: [`EnginePredictor`] runs through the AOT artifacts,
+//! [`HostPredictor`] evaluates the kernel exactly in host f64 (small
+//! models, tests, artifact-free environments). The `net` subsystem puts
+//! an HTTP/1.1 front end on the same channel.
 
 use crate::config::KernelKind;
 use crate::coordinator::runtime_ops;
+use crate::kernels;
 use crate::runtime::Engine;
 use std::sync::mpsc;
+use std::sync::Mutex;
 use std::time::{Duration, Instant};
 
 /// A prediction request: features plus a reply channel.
@@ -33,13 +42,32 @@ impl Default for ServerConfig {
     }
 }
 
+/// Batch sizes are histogrammed into power-of-two buckets; bucket `i`
+/// counts batches with `2^i <= size < 2^(i+1)`. 16 buckets cover sizes
+/// up to 65535, far beyond any realistic `max_batch`.
+pub const BATCH_HIST_BUCKETS: usize = 16;
+
 /// Aggregate serving statistics.
-#[derive(Debug, Default, Clone)]
+#[derive(Debug, Clone)]
 pub struct ServerStats {
     pub requests: usize,
     pub batches: usize,
     pub max_batch_seen: usize,
     pub busy_secs: f64,
+    /// Power-of-two batch-size histogram (see [`BATCH_HIST_BUCKETS`]).
+    pub batch_hist: [usize; BATCH_HIST_BUCKETS],
+}
+
+impl Default for ServerStats {
+    fn default() -> Self {
+        ServerStats {
+            requests: 0,
+            batches: 0,
+            max_batch_seen: 0,
+            busy_secs: 0.0,
+            batch_hist: [0; BATCH_HIST_BUCKETS],
+        }
+    }
 }
 
 impl ServerStats {
@@ -49,6 +77,15 @@ impl ServerStats {
         } else {
             self.requests as f64 / self.batches as f64
         }
+    }
+
+    fn record_batch(&mut self, size: usize, busy: f64) {
+        self.batches += 1;
+        self.requests += size;
+        self.max_batch_seen = self.max_batch_seen.max(size);
+        self.busy_secs += busy;
+        let bucket = (usize::BITS - 1 - size.max(1).leading_zeros()) as usize;
+        self.batch_hist[bucket.min(BATCH_HIST_BUCKETS - 1)] += 1;
     }
 }
 
@@ -62,7 +99,62 @@ pub struct ModelSnapshot {
     pub weights: Vec<f64>,
 }
 
-/// Run the serving loop until the request channel closes. Returns stats.
+/// A batched prediction backend.
+pub trait Predictor {
+    /// Feature dimension the model expects.
+    fn dim(&self) -> usize;
+    /// Predictions for a row-major slab of `rows` feature vectors; must
+    /// return exactly `rows` values on success.
+    fn predict_batch(&self, x_eval: &[f64], rows: usize) -> anyhow::Result<Vec<f64>>;
+}
+
+/// Predictor backed by the AOT artifacts (tiled `kmv` executions).
+pub struct EnginePredictor<'a> {
+    pub engine: &'a Engine,
+    pub model: &'a ModelSnapshot,
+}
+
+impl Predictor for EnginePredictor<'_> {
+    fn dim(&self) -> usize {
+        self.model.d
+    }
+
+    fn predict_batch(&self, x_eval: &[f64], rows: usize) -> anyhow::Result<Vec<f64>> {
+        runtime_ops::predict(
+            self.engine,
+            self.model.kernel,
+            &self.model.x_train,
+            self.model.n,
+            self.model.d,
+            &self.model.weights,
+            x_eval,
+            rows,
+            self.model.sigma,
+        )
+    }
+}
+
+/// Exact host-arithmetic predictor: `K(X_eval, X_train) @ w` in f64.
+/// O(rows * n * d) per batch — the reference/serving path when no
+/// artifacts are available (tests, small models).
+pub struct HostPredictor {
+    pub model: ModelSnapshot,
+}
+
+impl Predictor for HostPredictor {
+    fn dim(&self) -> usize {
+        self.model.d
+    }
+
+    fn predict_batch(&self, x_eval: &[f64], rows: usize) -> anyhow::Result<Vec<f64>> {
+        let m = &self.model;
+        let km = kernels::matrix(m.kernel, x_eval, rows, &m.x_train, m.n, m.d, m.sigma);
+        Ok(km.matvec(&m.weights))
+    }
+}
+
+/// Run the serving loop over the artifact engine until the request
+/// channel closes. Returns stats.
 ///
 /// Call from a thread that owns `engine` (the engine is not `Send`).
 pub fn serve(
@@ -71,6 +163,20 @@ pub fn serve(
     rx: mpsc::Receiver<Request>,
     cfg: &ServerConfig,
 ) -> ServerStats {
+    serve_predictor(&EnginePredictor { engine, model }, rx, cfg, None)
+}
+
+/// Run the serving loop over any [`Predictor`] until the request channel
+/// closes. If `live` is given, stats are mirrored into it after every
+/// batch so another thread (the `net` metrics endpoint) can observe
+/// them mid-flight.
+pub fn serve_predictor<P: Predictor + ?Sized>(
+    predictor: &P,
+    rx: mpsc::Receiver<Request>,
+    cfg: &ServerConfig,
+    live: Option<&Mutex<ServerStats>>,
+) -> ServerStats {
+    let d = predictor.dim();
     let mut stats = ServerStats::default();
     loop {
         // Block for the first request of a batch.
@@ -93,44 +199,45 @@ pub fn serve(
         }
 
         let t0 = Instant::now();
-        let mut x_eval = Vec::with_capacity(batch.len() * model.d);
+        let mut x_eval = Vec::with_capacity(batch.len() * d);
         let mut ok_shape = Vec::with_capacity(batch.len());
         for r in &batch {
-            if r.features.len() == model.d {
+            if r.features.len() == d {
                 x_eval.extend_from_slice(&r.features);
                 ok_shape.push(true);
             } else {
                 // keep the slab aligned; this slot gets an error reply
-                x_eval.extend(std::iter::repeat(0.0).take(model.d));
+                x_eval.extend(std::iter::repeat(0.0).take(d));
                 ok_shape.push(false);
             }
         }
-        let preds = runtime_ops::predict(
-            engine,
-            model.kernel,
-            &model.x_train,
-            model.n,
-            model.d,
-            &model.weights,
-            &x_eval,
-            batch.len(),
-            model.sigma,
-        );
-        stats.busy_secs += t0.elapsed().as_secs_f64();
-        stats.batches += 1;
-        stats.requests += batch.len();
-        stats.max_batch_seen = stats.max_batch_seen.max(batch.len());
+        let preds = predictor.predict_batch(&x_eval, batch.len());
+        stats.record_batch(batch.len(), t0.elapsed().as_secs_f64());
+        if let Some(shared) = live {
+            if let Ok(mut s) = shared.lock() {
+                *s = stats.clone();
+            }
+        }
 
         match preds {
             Ok(p) => {
                 for (k, req) in batch.into_iter().enumerate() {
-                    let reply = if ok_shape[k] {
-                        Ok(p[k])
-                    } else {
+                    let reply = if !ok_shape[k] {
                         Err(anyhow::anyhow!(
                             "feature dim mismatch: got {}, want {}",
                             req.features.len(),
-                            model.d
+                            d
+                        ))
+                    } else if let Some(&pk) = p.get(k) {
+                        Ok(pk)
+                    } else {
+                        // Backend returned fewer predictions than the
+                        // batch size: answer with an error instead of
+                        // panicking the whole serving thread.
+                        Err(anyhow::anyhow!(
+                            "predict returned {} values for batch of {}",
+                            p.len(),
+                            k + 1
                         ))
                     };
                     let _ = req.reply.send(reply);
@@ -152,8 +259,93 @@ mod tests {
 
     #[test]
     fn stats_mean_batch() {
-        let s = ServerStats { requests: 10, batches: 4, max_batch_seen: 4, busy_secs: 0.0 };
+        let s = ServerStats { requests: 10, batches: 4, max_batch_seen: 4, ..Default::default() };
         assert!((s.mean_batch() - 2.5).abs() < 1e-12);
         assert_eq!(ServerStats::default().mean_batch(), 0.0);
+    }
+
+    #[test]
+    fn batch_histogram_buckets() {
+        let mut s = ServerStats::default();
+        s.record_batch(1, 0.0);
+        s.record_batch(2, 0.0);
+        s.record_batch(3, 0.0);
+        s.record_batch(4, 0.0);
+        s.record_batch(255, 0.0);
+        assert_eq!(s.batch_hist[0], 1); // size 1
+        assert_eq!(s.batch_hist[1], 2); // sizes 2, 3
+        assert_eq!(s.batch_hist[2], 1); // size 4
+        assert_eq!(s.batch_hist[7], 1); // size 255
+        assert_eq!(s.batches, 5);
+        assert_eq!(s.requests, 265);
+    }
+
+    /// A predictor that lies about its output length.
+    struct ShortPredictor;
+    impl Predictor for ShortPredictor {
+        fn dim(&self) -> usize {
+            2
+        }
+        fn predict_batch(&self, _x: &[f64], rows: usize) -> anyhow::Result<Vec<f64>> {
+            Ok(vec![0.5; rows.saturating_sub(1)])
+        }
+    }
+
+    #[test]
+    fn short_prediction_batch_yields_error_not_panic() {
+        let (tx, rx) = mpsc::channel::<Request>();
+        let (rtx, rrx) = mpsc::channel();
+        tx.send(Request { features: vec![1.0, 2.0], reply: rtx }).unwrap();
+        drop(tx);
+        let stats = serve_predictor(&ShortPredictor, rx, &ServerConfig::default(), None);
+        assert_eq!(stats.requests, 1);
+        let reply = rrx.recv().unwrap();
+        assert!(reply.is_err(), "missing prediction slot must be an error reply");
+        assert!(reply.unwrap_err().to_string().contains("returned 0 values"));
+    }
+
+    #[test]
+    fn host_predictor_serves_exact_predictions() {
+        // weights = e_0 => prediction is k(x, x_train[0]).
+        let model = ModelSnapshot {
+            kernel: KernelKind::Rbf,
+            sigma: 1.0,
+            x_train: vec![0.0, 0.0, 1.0, 1.0],
+            n: 2,
+            d: 2,
+            weights: vec![1.0, 0.0],
+        };
+        let p = HostPredictor { model };
+        let (tx, rx) = mpsc::channel::<Request>();
+        let (rtx, rrx) = mpsc::channel();
+        tx.send(Request { features: vec![0.0, 0.0], reply: rtx }).unwrap();
+        drop(tx);
+        let live = Mutex::new(ServerStats::default());
+        serve_predictor(&p, rx, &ServerConfig::default(), Some(&live));
+        let got = rrx.recv().unwrap().unwrap();
+        assert!((got - 1.0).abs() < 1e-12, "k(0,0)=1, got {got}");
+        assert_eq!(live.lock().unwrap().requests, 1);
+    }
+
+    #[test]
+    fn dim_mismatch_is_rejected_per_slot() {
+        let model = ModelSnapshot {
+            kernel: KernelKind::Rbf,
+            sigma: 1.0,
+            x_train: vec![0.0, 0.0],
+            n: 1,
+            d: 2,
+            weights: vec![1.0],
+        };
+        let p = HostPredictor { model };
+        let (tx, rx) = mpsc::channel::<Request>();
+        let (rtx1, rrx1) = mpsc::channel();
+        let (rtx2, rrx2) = mpsc::channel();
+        tx.send(Request { features: vec![0.0, 0.0], reply: rtx1 }).unwrap();
+        tx.send(Request { features: vec![0.0], reply: rtx2 }).unwrap();
+        drop(tx);
+        serve_predictor(&p, rx, &ServerConfig::default(), None);
+        assert!(rrx1.recv().unwrap().is_ok());
+        assert!(rrx2.recv().unwrap().is_err());
     }
 }

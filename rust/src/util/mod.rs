@@ -1,13 +1,12 @@
-//! Small self-contained substrates: RNG, JSON, CLI parsing, formatting.
+//! Small self-contained substrates: RNG, CLI parsing, formatting.
 //!
-//! The build environment is fully offline, so instead of pulling `rand`,
-//! `serde`/`serde_json`, and `clap`, this crate implements the minimal
-//! functionality it needs from scratch. Each submodule is independently
-//! unit-tested.
+//! The build environment is fully offline, so instead of pulling `rand`
+//! and `clap`, this crate implements the minimal functionality it needs
+//! from scratch. Each submodule is independently unit-tested. JSON
+//! handling lives in the first-class `crate::json` subsystem.
 
 pub mod cli;
 pub mod fmt;
-pub mod json;
 pub mod rng;
 
 pub use rng::Rng;

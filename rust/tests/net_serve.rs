@@ -1,0 +1,281 @@
+//! End-to-end test of the networked prediction service: binds a real
+//! TCP port and drives `net::Server` + the dynamic batcher against a
+//! model trained on synthetic data.
+//!
+//! Runs without AOT artifacts: training is an exact host Cholesky solve
+//! and serving goes through `server::HostPredictor` (the same batching
+//! loop the engine path uses — only the `Predictor` differs).
+
+use askotch::data::synthetic;
+use askotch::json;
+use askotch::json::ToJson;
+use askotch::kernels;
+use askotch::linalg::Chol;
+use askotch::net::wire::PredictRequest;
+use askotch::net::{http, NetConfig, Server};
+use askotch::server::{serve_predictor, HostPredictor, ModelSnapshot, Request, ServerConfig};
+use std::io::{BufReader, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::sync::mpsc;
+use std::time::Duration;
+
+const SIGMA: f64 = 2.0;
+const LAM: f64 = 1e-3;
+
+/// Exact-KRR training on a synthetic regression task, pure host math.
+fn trained_model() -> (ModelSnapshot, askotch::data::Dataset) {
+    let ds = synthetic::taxi_like(240, 6, 7).standardized();
+    let (train, test) = ds.split(0.2, 0);
+    let mut k = kernels::matrix(
+        ds_kernel(&train),
+        &train.x,
+        train.n,
+        &train.x,
+        train.n,
+        train.d,
+        SIGMA,
+    );
+    k.add_diag(LAM);
+    let chol = Chol::new(&k, 0.0).expect("spd");
+    let weights = chol.solve(&train.y);
+    let model = ModelSnapshot {
+        kernel: ds_kernel(&train),
+        sigma: SIGMA,
+        x_train: train.x.clone(),
+        n: train.n,
+        d: train.d,
+        weights,
+    };
+    (model, test)
+}
+
+fn ds_kernel(ds: &askotch::data::Dataset) -> askotch::config::KernelKind {
+    ds.kernel
+}
+
+/// Direct (no server) predictions for verification.
+fn direct_predict(model: &ModelSnapshot, rows: &[f64], n_rows: usize) -> Vec<f64> {
+    kernels::matrix(model.kernel, rows, n_rows, &model.x_train, model.n, model.d, model.sigma)
+        .matvec(&model.weights)
+}
+
+/// Start the full stack: HTTP front end + batcher thread on a host
+/// predictor. Returns the server handle and the batcher join handle.
+fn start_stack(
+    model: ModelSnapshot,
+    threads: usize,
+) -> (Server, std::thread::JoinHandle<askotch::server::ServerStats>) {
+    let (tx, rx) = mpsc::channel::<Request>();
+    let cfg = NetConfig { addr: "127.0.0.1:0".into(), threads, ..Default::default() };
+    let server = Server::start(&cfg, tx).expect("bind");
+    let live = server.metrics().clone();
+    let batcher = std::thread::spawn(move || {
+        serve_predictor(
+            &HostPredictor { model },
+            rx,
+            &ServerConfig::default(),
+            Some(live.batcher()),
+        )
+    });
+    (server, batcher)
+}
+
+/// Minimal HTTP client: one request on a fresh or reused connection.
+struct Conn {
+    stream: TcpStream,
+    reader: BufReader<TcpStream>,
+}
+
+impl Conn {
+    fn open(addr: SocketAddr) -> Conn {
+        let stream = TcpStream::connect(addr).expect("connect");
+        let reader = BufReader::new(stream.try_clone().expect("clone"));
+        Conn { stream, reader }
+    }
+
+    fn send(&mut self, method: &str, path: &str, body: &str) {
+        write!(
+            self.stream,
+            "{method} {path} HTTP/1.1\r\nhost: t\r\ncontent-length: {}\r\n\r\n{body}",
+            body.len()
+        )
+        .expect("write");
+        self.stream.flush().expect("flush");
+    }
+
+    fn read_response(&mut self) -> (u16, String) {
+        let (status, body) = http::read_response(&mut self.reader).expect("response");
+        (status, String::from_utf8(body).expect("utf8"))
+    }
+
+    fn call(&mut self, method: &str, path: &str, body: &str) -> (u16, String) {
+        self.send(method, path, body);
+        self.read_response()
+    }
+}
+
+fn features_json(row: &[f64]) -> String {
+    PredictRequest { features: row.to_vec() }.to_json().to_string()
+}
+
+#[test]
+fn concurrent_predictions_over_tcp_match_direct_predict() {
+    let (model, test) = trained_model();
+    let want = direct_predict(&model, &test.x, test.n);
+    let (server, batcher) = start_stack(model, 3);
+    let addr = server.addr();
+
+    // Three concurrent keep-alive clients, interleaving single and
+    // batch POSTs over the same port.
+    let n_clients = 3;
+    let mut clients = Vec::new();
+    for c in 0..n_clients {
+        let rows: Vec<(usize, Vec<f64>)> = (0..test.n)
+            .filter(|i| i % n_clients == c)
+            .map(|i| (i, test.row(i).to_vec()))
+            .collect();
+        clients.push(std::thread::spawn(move || {
+            let mut conn = Conn::open(addr);
+            let mut got: Vec<(usize, f64)> = Vec::new();
+            // Singles for the first half...
+            let half = rows.len() / 2;
+            for (i, row) in &rows[..half] {
+                let (status, body) = conn.call("POST", "/v1/predict", &features_json(row));
+                assert_eq!(status, 200, "{body}");
+                let v = json::parse(&body).unwrap();
+                got.push((*i, v.get("prediction").unwrap().as_f64().unwrap()));
+            }
+            // ...one batch request for the rest.
+            if rows.len() > half {
+                let items: Vec<String> =
+                    rows[half..].iter().map(|(_, r)| features_json(r)).collect();
+                let body = format!("{{\"requests\":[{}]}}", items.join(","));
+                let (status, resp) = conn.call("POST", "/v1/predict", &body);
+                assert_eq!(status, 200, "{resp}");
+                let v = json::parse(&resp).unwrap();
+                let preds = v.get("predictions").unwrap().as_arr().unwrap();
+                assert_eq!(preds.len(), rows.len() - half);
+                assert_eq!(
+                    v.get("count").unwrap().as_usize().unwrap(),
+                    rows.len() - half
+                );
+                for ((i, _), p) in rows[half..].iter().zip(preds) {
+                    got.push((*i, p.as_f64().unwrap()));
+                }
+            }
+            got
+        }));
+    }
+    let mut got = vec![f64::NAN; test.n];
+    for c in clients {
+        for (i, p) in c.join().unwrap() {
+            got[i] = p;
+        }
+    }
+    for (i, (g, w)) in got.iter().zip(&want).enumerate() {
+        assert!(
+            (g - w).abs() <= 1e-9 * (1.0 + w.abs()),
+            "row {i}: served {g} vs direct {w}"
+        );
+    }
+
+    // Metrics must reflect the traffic (live mirror from the batcher).
+    let (status, body) = Conn::open(addr).call("GET", "/metrics", "");
+    assert_eq!(status, 200);
+    let m = json::parse(&body).unwrap();
+    let b = m.get("batcher").unwrap();
+    assert!(b.get("requests").unwrap().as_usize().unwrap() >= test.n, "{body}");
+    assert!(b.get("batches").unwrap().as_usize().unwrap() > 0, "{body}");
+    assert!(m.get("http_requests").unwrap().as_f64().unwrap() > 0.0, "{body}");
+    assert!(m.get("predictions").unwrap().as_usize().unwrap() >= test.n, "{body}");
+
+    server.shutdown();
+    let stats = batcher.join().unwrap();
+    assert!(stats.requests >= test.n);
+}
+
+#[test]
+fn malformed_bodies_get_400_with_field_paths() {
+    let (model, _) = trained_model();
+    let (server, batcher) = start_stack(model, 2);
+    let addr = server.addr();
+
+    let cases: &[(&str, &str)] = &[
+        (r#"{"features":"oops"}"#, "body.features: expected array, got string"),
+        (r#"{"requests":[{"features":[1]},{"features":{}}]}"#, "body.requests[1].features"),
+        (r#"{"nope":1}"#, "missing field"),
+        (r#"{"features":[01]}"#, "invalid JSON"),
+        ("{", "invalid JSON"),
+    ];
+    for (body, want_msg) in cases {
+        let (status, resp) = Conn::open(addr).call("POST", "/v1/predict", body);
+        assert_eq!(status, 400, "body {body:?} -> {resp}");
+        let v = json::parse(&resp).unwrap();
+        let msg = v.get("error").unwrap().get("message").unwrap().as_str().unwrap().to_string();
+        assert!(msg.contains(want_msg), "body {body:?}: message {msg:?} missing {want_msg:?}");
+    }
+
+    // healthz still fine afterwards.
+    let (status, body) = Conn::open(addr).call("GET", "/healthz", "");
+    assert_eq!(status, 200);
+    assert!(body.contains("ok"));
+
+    server.shutdown();
+    batcher.join().unwrap();
+}
+
+#[test]
+fn batch_with_bad_slot_reports_per_slot_error() {
+    let (model, test) = trained_model();
+    let d = model.d;
+    let (server, batcher) = start_stack(model, 2);
+    let addr = server.addr();
+
+    let good = features_json(test.row(0));
+    let bad = features_json(&vec![0.0; d + 3]); // wrong dimension
+    let body = format!("{{\"requests\":[{good},{bad}]}}");
+    let (status, resp) = Conn::open(addr).call("POST", "/v1/predict", &body);
+    assert_eq!(status, 200, "{resp}");
+    let v = json::parse(&resp).unwrap();
+    let preds = v.get("predictions").unwrap().as_arr().unwrap();
+    assert!(preds[0].as_f64().is_some());
+    assert_eq!(preds[1], json::Json::Null);
+    let errs = v.get("errors").unwrap().as_arr().unwrap();
+    assert_eq!(errs[0].get("index").unwrap().as_usize().unwrap(), 1);
+    assert!(errs[0].get("error").unwrap().as_str().unwrap().contains("dim mismatch"));
+
+    server.shutdown();
+    batcher.join().unwrap();
+}
+
+#[test]
+fn shutdown_drains_in_flight_requests() {
+    let (model, test) = trained_model();
+    let want = direct_predict(&model, test.row(1), 1);
+    let (server, batcher) = start_stack(model, 2);
+    let addr = server.addr();
+
+    let mut conn = Conn::open(addr);
+    // First request proves the connection is established and served.
+    let (status, _) = conn.call("POST", "/v1/predict", &features_json(test.row(0)));
+    assert_eq!(status, 200);
+
+    // Write the second request, then shut down while it is in flight.
+    conn.send("POST", "/v1/predict", &features_json(test.row(1)));
+    // Give the worker a moment to pick the request up so the shutdown
+    // genuinely races the handling, not the delivery.
+    std::thread::sleep(Duration::from_millis(50));
+    let shutdown = std::thread::spawn(move || server.shutdown());
+    let (status, body) = conn.read_response();
+    assert_eq!(status, 200, "in-flight request must drain, got: {body}");
+    let v = json::parse(&body).unwrap();
+    let got = v.get("prediction").unwrap().as_f64().unwrap();
+    assert!((got - want[0]).abs() <= 1e-9 * (1.0 + want[0].abs()));
+
+    // The worker notices `stop` within one idle tick even while this
+    // connection stays open; closing it just ends things sooner.
+    drop(conn);
+    shutdown.join().unwrap();
+    let stats = batcher.join().unwrap();
+    assert_eq!(stats.requests, 2, "both requests answered through the batcher");
+}
