@@ -3,13 +3,16 @@
 //! solver and an inducing-points baseline.
 //!
 //! ```bash
-//! make artifacts && cargo run --release --example classification
+//! cargo run --release --example classification
 //! ```
+//!
+//! Runs on the PJRT artifact engine when `make artifacts` has been run,
+//! and on the host-native parallel backend otherwise.
 
+use askotch::backend::AnyBackend;
 use askotch::config::{BandwidthSpec, KernelKind};
 use askotch::coordinator::{Budget, KrrProblem};
 use askotch::data::synthetic;
-use askotch::runtime::Engine;
 use askotch::solvers::askotch::{AskotchConfig, AskotchSolver};
 use askotch::solvers::cholesky::CholeskySolver;
 use askotch::solvers::falkon::{FalkonConfig, FalkonSolver};
@@ -24,18 +27,19 @@ fn main() -> anyhow::Result<()> {
         problem.d(),
         problem.sigma
     );
-    let engine = Engine::from_manifest("artifacts")?;
+    let backend = AnyBackend::auto("artifacts")?;
+    let backend = backend.as_dyn();
 
     let mut askotch = AskotchSolver::new(AskotchConfig { rank: 50, ..Default::default() }, true);
-    let a = askotch.run(&engine, &problem, &Budget::iterations(600))?;
+    let a = askotch.run(backend, &problem, &Budget::iterations(600))?;
     println!("askotch:  accuracy {:.4} in {:.2}s", a.final_metric, a.wall_secs);
 
     let mut falkon = FalkonSolver::new(FalkonConfig { m: 256, seed: 0 });
-    let f = falkon.run(&engine, &problem, &Budget::iterations(100))?;
+    let f = falkon.run(backend, &problem, &Budget::iterations(100))?;
     println!("falkon:   accuracy {:.4} in {:.2}s (m=256 inducing points)", f.final_metric, f.wall_secs);
 
     let mut exact = CholeskySolver::new();
-    let e = exact.run(&engine, &problem, &Budget::iterations(1))?;
+    let e = exact.run(backend, &problem, &Budget::iterations(1))?;
     println!("cholesky: accuracy {:.4} in {:.2}s (exact, O(n^3))", e.final_metric, e.wall_secs);
 
     let gap = e.final_metric - a.final_metric;

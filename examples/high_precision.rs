@@ -3,13 +3,16 @@
 //! axis these are straight lines, steeper for larger r.
 //!
 //! ```bash
-//! make artifacts && cargo run --release --example high_precision
+//! cargo run --release --example high_precision
 //! ```
+//!
+//! Artifact-free by default (host backend, f64 — no arithmetic floor);
+//! with `make artifacts` the AOT engine is picked automatically.
 
+use askotch::backend::AnyBackend;
 use askotch::config::{BandwidthSpec, KernelKind};
 use askotch::coordinator::{Budget, KrrProblem};
 use askotch::data::synthetic;
-use askotch::runtime::Engine;
 use askotch::solvers::askotch::{AskotchConfig, AskotchSolver};
 use askotch::solvers::Solver;
 
@@ -17,7 +20,7 @@ fn main() -> anyhow::Result<()> {
     let n = 3000usize;
     let ds = synthetic::taxi_like(n, 9, 5).standardized();
     let problem = KrrProblem::from_dataset(ds, KernelKind::Rbf, BandwidthSpec::Auto, 1e-6, 0)?;
-    let engine = Engine::from_manifest("artifacts")?;
+    let backend = AnyBackend::auto("artifacts")?;
 
     println!("# relative residual ||K_lam w - y|| / ||y|| vs full data passes");
     for rank in [10usize, 20, 50] {
@@ -26,7 +29,7 @@ fn main() -> anyhow::Result<()> {
             true,
         );
         // ~40 full passes: iterations = passes * n / b.
-        let report = solver.run(&engine, &problem, &Budget::iterations(2400))?;
+        let report = solver.run(backend.as_dyn(), &problem, &Budget::iterations(2400))?;
         println!("\n## rank r = {rank}");
         println!("{:>10} {:>14}", "passes", "rel residual");
         for p in &report.trace.points {

@@ -1,8 +1,14 @@
-//! Quickstart: solve a full-KRR problem with ASkotch and predict.
+//! Quickstart: solve a full-KRR problem with ASkotch and predict —
+//! straight from a fresh clone, **no artifacts required**: the solve
+//! runs on the host-native parallel backend.
 //!
 //! ```bash
-//! make artifacts && cargo run --release --example quickstart
+//! cargo run --release --example quickstart
 //! ```
+//!
+//! (After `make artifacts`, swap in `PjrtBackend::from_manifest("artifacts")?`
+//! — or `AnyBackend::auto("artifacts")?` to pick automatically — and the
+//! same code runs through the AOT artifact engine.)
 
 use askotch::prelude::*;
 
@@ -22,23 +28,24 @@ fn main() -> anyhow::Result<()> {
         problem.lam
     );
 
-    // 3. Engine: load the AOT-compiled artifacts (Python ran once, at build).
-    let engine = Engine::from_manifest("artifacts")?;
+    // 3. Backend: the multi-threaded host engine (zero artifacts).
+    let backend = HostBackend::auto_threads();
+    println!("backend: {} ({} threads)", backend.name(), backend.threads());
 
     // 4. Solve with ASkotch's paper defaults.
     let mut solver = AskotchSolver::new(
         AskotchConfig { rank: 20, track_residual: true, ..Default::default() },
         /*accelerated=*/ true,
     );
-    let report = solver.run(&engine, &problem, &Budget::iterations(800))?;
+    let report = solver.run(&backend, &problem, &Budget::iterations(800))?;
     println!(
         "solved in {} iterations ({:.2}s): test MAE {:.3}, rel residual {:.2e}",
         report.iters, report.wall_secs, report.final_metric, report.final_residual
     );
 
-    // 5. Predict on fresh points through the same fused kernel artifacts.
+    // 5. Predict on fresh points through the same backend.
     let preds = askotch::coordinator::runtime_ops::predict(
-        &engine,
+        &backend,
         problem.kernel,
         &problem.train.x,
         problem.n(),

@@ -4,9 +4,14 @@
 //! server's own `/metrics` view.
 //!
 //! ```bash
-//! make artifacts && cargo run --release --example serve
+//! cargo run --release --example serve
 //! ```
+//!
+//! Artifact-free by default: serving dispatches through the backend
+//! trait, so the host-parallel engine stands in when `make artifacts`
+//! has not been run.
 
+use askotch::backend::{AnyBackend, Backend};
 use askotch::config::{BandwidthSpec, KernelKind};
 use askotch::coordinator::{Budget, KrrProblem};
 use askotch::data::synthetic;
@@ -14,8 +19,7 @@ use askotch::json::ToJson;
 use askotch::metrics::percentile;
 use askotch::net::wire::PredictRequest;
 use askotch::net::{http, NetConfig, Server};
-use askotch::runtime::Engine;
-use askotch::server::{serve_predictor, EnginePredictor, ModelSnapshot, Request, ServerConfig};
+use askotch::server::{serve_predictor, BackendPredictor, ModelSnapshot, Request, ServerConfig};
 use askotch::solvers::askotch::{AskotchConfig, AskotchSolver};
 use askotch::solvers::Solver;
 use askotch::util::fmt;
@@ -62,9 +66,11 @@ fn main() -> anyhow::Result<()> {
     // --- train ------------------------------------------------------------
     let ds = synthetic::taxi_like(2000, 9, 1).standardized();
     let problem = KrrProblem::from_dataset(ds, KernelKind::Rbf, BandwidthSpec::Auto, 1e-6, 0)?;
-    let engine = Engine::from_manifest("artifacts")?;
+    let any_backend = AnyBackend::auto("artifacts")?;
+    let backend = any_backend.as_dyn();
+    println!("backend: {}", backend.name());
     let mut solver = AskotchSolver::new(AskotchConfig { rank: 20, ..Default::default() }, true);
-    let report = solver.run(&engine, &problem, &Budget::iterations(400))?;
+    let report = solver.run(backend, &problem, &Budget::iterations(400))?;
     println!("trained askotch: test MAE {:.3}", report.final_metric);
 
     let model = ModelSnapshot {
@@ -112,7 +118,7 @@ fn main() -> anyhow::Result<()> {
 
     let t0 = std::time::Instant::now();
     let stats = serve_predictor(
-        &EnginePredictor { engine: &engine, model: &model },
+        &BackendPredictor { backend, model: &model },
         rx,
         &ServerConfig::default(),
         None,

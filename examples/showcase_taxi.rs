@@ -8,14 +8,17 @@
 //! metrics) on a real workload and logs the full metric trajectory.
 //!
 //! ```bash
-//! make artifacts && cargo run --release --example showcase_taxi -- [n] [budget_secs]
+//! cargo run --release --example showcase_taxi -- [n] [budget_secs]
 //! ```
+//!
+//! Uses the AOT artifacts when present, the host-parallel backend
+//! otherwise — every layer runs either way.
 
+use askotch::backend::{AnyBackend, Backend};
 use askotch::config::{BandwidthSpec, KernelKind};
 use askotch::coordinator::{Budget, KrrProblem};
 use askotch::data::synthetic;
 use askotch::metrics::rmse;
-use askotch::runtime::Engine;
 use askotch::solvers::askotch::{AskotchConfig, AskotchSolver};
 use askotch::solvers::eigenpro::{EigenProConfig, EigenProSolver};
 use askotch::solvers::falkon::{FalkonConfig, FalkonSolver};
@@ -39,7 +42,9 @@ fn main() -> anyhow::Result<()> {
         problem.lam,
         budget_secs
     );
-    let engine = Engine::from_manifest("artifacts")?;
+    let any_backend = AnyBackend::auto("artifacts")?;
+    let backend = any_backend.as_dyn();
+    println!("backend: {}", backend.name());
     let budget = Budget::seconds(budget_secs);
 
     let mut results: Vec<(String, f64, usize, bool)> = Vec::new();
@@ -50,8 +55,8 @@ fn main() -> anyhow::Result<()> {
             AskotchSolver::new(AskotchConfig { rank, ..Default::default() }, true);
         let mut b = budget;
         b.max_iters = 1_000_000;
-        let r = solver.run(&engine, &problem, &b)?;
-        let rmse_final = final_rmse(&engine, &problem, &r.weights)?;
+        let r = solver.run(backend, &problem, &b)?;
+        let rmse_final = final_rmse(backend, &problem, &r.weights)?;
         println!(
             "askotch(r={rank:3}): iters={:6} wall={} RMSE={:.3}",
             r.iters,
@@ -64,8 +69,8 @@ fn main() -> anyhow::Result<()> {
     // Falkon, inducing points capped like the paper's memory-limited runs.
     for m in [256usize, 1024] {
         let mut solver = FalkonSolver::new(FalkonConfig { m, seed: 0 });
-        let r = solver.run(&engine, &problem, &budget)?;
-        let rmse_final = falkon_rmse(&engine, &problem, m, &r.weights)?;
+        let r = solver.run(backend, &problem, &budget)?;
+        let rmse_final = falkon_rmse(backend, &problem, m, &r.weights)?;
         println!(
             "falkon(m={m:4}):  iters={:6} wall={} RMSE={:.3}",
             r.iters,
@@ -82,12 +87,12 @@ fn main() -> anyhow::Result<()> {
         precond: PcgPrecond::Gaussian,
         ..Default::default()
     });
-    let r = pcg.run(&engine, &problem, &budget)?;
+    let r = pcg.run(backend, &problem, &budget)?;
     if r.iters == 0 {
         println!("pcg(gaussian,r=50): completed ZERO iterations in the budget (paper Fig. 1!)");
         results.push(("pcg(gaussian)".into(), f64::NAN, 0, false));
     } else {
-        let rmse_final = final_rmse(&engine, &problem, &r.weights)?;
+        let rmse_final = final_rmse(backend, &problem, &r.weights)?;
         println!(
             "pcg(gaussian):  iters={:6} wall={} RMSE={:.3}",
             r.iters,
@@ -99,11 +104,11 @@ fn main() -> anyhow::Result<()> {
 
     // EigenPro with its defaults (the paper observes divergence on taxi).
     let mut ep = EigenProSolver::new(EigenProConfig::default());
-    let r = ep.run(&engine, &problem, &budget)?;
+    let r = ep.run(backend, &problem, &budget)?;
     let label = if r.diverged {
         "DIVERGED (with default hyperparameters, as the paper reports)".to_string()
     } else {
-        format!("RMSE={:.3}", final_rmse(&engine, &problem, &r.weights)?)
+        format!("RMSE={:.3}", final_rmse(backend, &problem, &r.weights)?)
     };
     println!("eigenpro:       iters={:6} wall={} {}", r.iters, fmt::duration(r.wall_secs), label);
     results.push(("eigenpro".into(), f64::NAN, r.iters, r.diverged));
@@ -119,12 +124,12 @@ fn main() -> anyhow::Result<()> {
 }
 
 fn final_rmse(
-    engine: &Engine,
+    backend: &dyn Backend,
     problem: &KrrProblem,
     weights: &[f64],
 ) -> anyhow::Result<f64> {
     let pred = askotch::coordinator::runtime_ops::predict(
-        engine,
+        backend,
         problem.kernel,
         &problem.train.x,
         problem.n(),
@@ -138,7 +143,7 @@ fn final_rmse(
 }
 
 fn falkon_rmse(
-    engine: &Engine,
+    backend: &dyn Backend,
     problem: &KrrProblem,
     m: usize,
     weights: &[f64],
@@ -152,7 +157,7 @@ fn falkon_rmse(
         xm.extend_from_slice(problem.train.row(c));
     }
     let pred = askotch::coordinator::runtime_ops::predict(
-        engine,
+        backend,
         problem.kernel,
         &xm,
         centers.len(),

@@ -13,11 +13,12 @@
 //! reproduce *shapes* (orderings, crossovers, slopes), not the absolute
 //! wall-clock of a 48 GB A6000 (see EXPERIMENTS.md).
 
-use askotch::config::{BandwidthSpec, ExperimentConfig, RhoMode, SamplingScheme, SolverKind};
+use askotch::backend::{AnyBackend, Backend, HostBackend};
+use askotch::config::{BandwidthSpec, ExperimentConfig, KernelKind, RhoMode, SamplingScheme, SolverKind};
 use askotch::coordinator::{Budget, Coordinator, KrrProblem, SolveReport};
 use askotch::data::{synthetic, Dataset, TaskKind};
+use askotch::kernels;
 use askotch::metrics;
-use askotch::runtime::Engine;
 use askotch::solvers::askotch::{AskotchConfig, AskotchSolver};
 use askotch::solvers::eigenpro::{EigenProConfig, EigenProSolver};
 use askotch::solvers::falkon::{FalkonConfig, FalkonSolver};
@@ -34,9 +35,12 @@ fn main() -> anyhow::Result<()> {
     let filter = args.positional.first().cloned().unwrap_or_default();
     let scale = args.get_usize("scale", 1);
     std::fs::create_dir_all("bench_results")?;
-    let engine = Engine::from_manifest("artifacts")?;
+    // Artifact engine when compiled, host-parallel engine otherwise: the
+    // whole exhibit suite runs on a fresh clone with zero artifacts.
+    let backend = AnyBackend::auto("artifacts")?;
+    println!("backend: {}", backend.as_dyn().name());
 
-    let exhibits: Vec<(&str, fn(&Engine, usize) -> anyhow::Result<Json>)> = vec![
+    let exhibits: Vec<(&str, fn(&dyn Backend, usize) -> anyhow::Result<Json>)> = vec![
         ("fig1_showcase", fig1_showcase),
         ("table1_capabilities", table1_capabilities),
         ("table2_complexity", table2_complexity),
@@ -44,6 +48,7 @@ fn main() -> anyhow::Result<()> {
         ("fig9_linear_convergence", fig9_linear_convergence),
         ("fig10_11_ablations", fig10_11_ablations),
         ("fig12_precision", fig12_precision),
+        ("host_kernel_assembly", host_kernel_assembly),
     ];
 
     for (name, run) in exhibits {
@@ -52,7 +57,7 @@ fn main() -> anyhow::Result<()> {
         }
         println!("\n==================== {name} ====================");
         let t0 = Instant::now();
-        let result = run(&engine, scale)?;
+        let result = run(backend.as_dyn(), scale)?;
         let path = format!("bench_results/{name}.json");
         std::fs::write(&path, result.to_string())?;
         println!("[{name}: {} -> {path}]", fmt::duration(t0.elapsed().as_secs_f64()));
@@ -71,7 +76,7 @@ fn problem_for(ds: Dataset) -> anyhow::Result<KrrProblem> {
 }
 
 fn run_solver(
-    engine: &Engine,
+    backend: &dyn Backend,
     problem: &KrrProblem,
     kind: SolverKind,
     rank: usize,
@@ -80,9 +85,9 @@ fn run_solver(
     let mut cfg = ExperimentConfig::default();
     cfg.solver = kind;
     cfg.rank = rank;
-    let coord = Coordinator::new(engine);
+    let coord = Coordinator::new(backend);
     let mut solver = coord.solver(&cfg);
-    solver.run(engine, problem, budget)
+    solver.run(backend, problem, budget)
 }
 
 fn report_json(r: &SolveReport) -> Json {
@@ -111,7 +116,7 @@ fn num_or_null(x: f64) -> Json {
 // Fig. 1 + SS6.2: showcase — ASkotch vs the field on taxi-like data
 // ---------------------------------------------------------------------------
 
-fn fig1_showcase(engine: &Engine, scale: usize) -> anyhow::Result<Json> {
+fn fig1_showcase(backend: &dyn Backend, scale: usize) -> anyhow::Result<Json> {
     let n = 8_000 * scale;
     let ds = synthetic::taxi_like(n, 9, 2024);
     let problem = problem_for(ds)?;
@@ -138,14 +143,14 @@ fn fig1_showcase(engine: &Engine, scale: usize) -> anyhow::Result<Json> {
 
     for rank in [10usize, 20, 50, 100] {
         let mut s = AskotchSolver::new(AskotchConfig { rank, ..Default::default() }, true);
-        let r = s.run(engine, &problem, &budget)?;
-        let rmse_v = test_rmse(engine, &problem, &r.weights)?;
+        let r = s.run(backend, &problem, &budget)?;
+        let rmse_v = test_rmse(backend, &problem, &r.weights)?;
         record(format!("askotch(r={rank})"), &r, rmse_v, "full KRR");
     }
     for m in [256usize, 1024] {
         let mut s = FalkonSolver::new(FalkonConfig { m, seed: 0 });
-        let r = s.run(engine, &problem, &budget)?;
-        let rmse_v = falkon_test_rmse(engine, &problem, m, &r.weights)?;
+        let r = s.run(backend, &problem, &budget)?;
+        let rmse_v = falkon_test_rmse(backend, &problem, m, &r.weights)?;
         record(format!("falkon(m={m})"), &r, rmse_v, "inducing points");
     }
     {
@@ -154,34 +159,34 @@ fn fig1_showcase(engine: &Engine, scale: usize) -> anyhow::Result<Json> {
             precond: PcgPrecond::Gaussian,
             ..Default::default()
         });
-        let r = s.run(engine, &problem, &budget)?;
+        let r = s.run(backend, &problem, &budget)?;
         let note = if r.iters == 0 {
             "setup starved budget (paper: 'no iteration completed')"
         } else {
             "full KRR"
         };
-        let rmse_v = if r.iters > 0 { test_rmse(engine, &problem, &r.weights)? } else { f64::NAN };
+        let rmse_v = if r.iters > 0 { test_rmse(backend, &problem, &r.weights)? } else { f64::NAN };
         record("pcg(gaussian,r=50)".into(), &r, rmse_v, note);
     }
     {
         let mut s = EigenProSolver::new(EigenProConfig::default());
-        let r = s.run(engine, &problem, &budget)?;
+        let r = s.run(backend, &problem, &budget)?;
         let note = if r.diverged { "DIVERGED on defaults (paper: same)" } else { "full KRR" };
-        let rmse_v = if r.diverged { f64::NAN } else { test_rmse(engine, &problem, &r.weights)? };
+        let rmse_v = if r.diverged { f64::NAN } else { test_rmse(backend, &problem, &r.weights)? };
         record("eigenpro".into(), &r, rmse_v, note);
     }
     println!("{}", table.render());
     Ok(Json::Arr(rows))
 }
 
-fn test_rmse(engine: &Engine, p: &KrrProblem, w: &[f64]) -> anyhow::Result<f64> {
+fn test_rmse(backend: &dyn Backend, p: &KrrProblem, w: &[f64]) -> anyhow::Result<f64> {
     let pred = askotch::coordinator::runtime_ops::predict(
-        engine, p.kernel, &p.train.x, p.n(), p.d(), w, &p.test.x, p.test.n, p.sigma,
+        backend, p.kernel, &p.train.x, p.n(), p.d(), w, &p.test.x, p.test.n, p.sigma,
     )?;
     Ok(metrics::rmse(&pred, &p.test.y))
 }
 
-fn falkon_test_rmse(engine: &Engine, p: &KrrProblem, m: usize, w: &[f64]) -> anyhow::Result<f64> {
+fn falkon_test_rmse(backend: &dyn Backend, p: &KrrProblem, m: usize, w: &[f64]) -> anyhow::Result<f64> {
     let mut rng = askotch::util::Rng::new(0u64 ^ 0xFA1C);
     let centers = rng.sample_distinct(p.n(), m.min(p.n()));
     let mut xm = Vec::with_capacity(centers.len() * p.d());
@@ -189,7 +194,7 @@ fn falkon_test_rmse(engine: &Engine, p: &KrrProblem, m: usize, w: &[f64]) -> any
         xm.extend_from_slice(p.train.row(c));
     }
     let pred = askotch::coordinator::runtime_ops::predict(
-        engine, p.kernel, &xm, centers.len(), p.d(), w, &p.test.x, p.test.n, p.sigma,
+        backend, p.kernel, &xm, centers.len(), p.d(), w, &p.test.x, p.test.n, p.sigma,
     )?;
     Ok(metrics::rmse(&pred, &p.test.y))
 }
@@ -198,7 +203,7 @@ fn falkon_test_rmse(engine: &Engine, p: &KrrProblem, m: usize, w: &[f64]) -> any
 // Table 1: capabilities matrix, measured
 // ---------------------------------------------------------------------------
 
-fn table1_capabilities(engine: &Engine, _scale: usize) -> anyhow::Result<Json> {
+fn table1_capabilities(backend: &dyn Backend, _scale: usize) -> anyhow::Result<Json> {
     let ds = synthetic::physics_like("capability_probe", 2000, 18, 0.12, 9);
     let problem = problem_for(ds)?;
     let budget = Budget { max_iters: 150, time_limit_secs: 30.0 };
@@ -213,7 +218,7 @@ fn table1_capabilities(engine: &Engine, _scale: usize) -> anyhow::Result<Json> {
         fmt::Table::new(&["method", "full KRR?", "memory (B)", "reliable defaults?", "converged?"]);
     let mut rows = Vec::new();
     for (kind, rank) in entries {
-        let r = run_solver(engine, &problem, kind, rank, &budget)?;
+        let r = run_solver(backend, &problem, kind, rank, &budget)?;
         let improved = r.final_metric.is_finite() && r.final_metric > 0.55;
         let converged = !r.diverged && improved;
         table.row(vec![
@@ -235,7 +240,7 @@ fn table1_capabilities(engine: &Engine, _scale: usize) -> anyhow::Result<Json> {
 // Table 2: per-iteration cost & storage scaling in n
 // ---------------------------------------------------------------------------
 
-fn table2_complexity(engine: &Engine, _scale: usize) -> anyhow::Result<Json> {
+fn table2_complexity(backend: &dyn Backend, _scale: usize) -> anyhow::Result<Json> {
     let sizes = [1000usize, 2000, 4000, 8000];
     let mut table = fmt::Table::new(&[
         "n", "askotch s/iter", "pcg s/iter", "askotch state", "pcg state", "falkon state",
@@ -246,9 +251,9 @@ fn table2_complexity(engine: &Engine, _scale: usize) -> anyhow::Result<Json> {
     for &n in &sizes {
         let problem = problem_for(synthetic::taxi_like(n, 9, 7))?;
         let budget = Budget { max_iters: 40, time_limit_secs: 30.0 };
-        let a = run_solver(engine, &problem, SolverKind::Askotch, 20, &budget)?;
-        let p = run_solver(engine, &problem, SolverKind::Pcg, 20, &budget)?;
-        let f = run_solver(engine, &problem, SolverKind::Falkon, 20, &budget)?;
+        let a = run_solver(backend, &problem, SolverKind::Askotch, 20, &budget)?;
+        let p = run_solver(backend, &problem, SolverKind::Pcg, 20, &budget)?;
+        let f = run_solver(backend, &problem, SolverKind::Falkon, 20, &budget)?;
         let ais = a.wall_secs / a.iters.max(1) as f64;
         let pis = p.wall_secs / p.iters.max(1) as f64;
         ask_t.push((problem.n() as f64, ais));
@@ -296,7 +301,7 @@ fn table2_complexity(engine: &Engine, _scale: usize) -> anyhow::Result<Json> {
 // Figs. 2-8: the 23-task testbed + performance profiles + domain tables
 // ---------------------------------------------------------------------------
 
-fn fig2_to_8_testbed(engine: &Engine, scale: usize) -> anyhow::Result<Json> {
+fn fig2_to_8_testbed(backend: &dyn Backend, scale: usize) -> anyhow::Result<Json> {
     let tasks = synthetic::testbed(scale);
     let solvers = [
         (SolverKind::Askotch, 50usize),
@@ -325,7 +330,7 @@ fn fig2_to_8_testbed(engine: &Engine, scale: usize) -> anyhow::Result<Json> {
             }
         };
         for (kind, rank) in solvers {
-            match run_solver(engine, &problem, kind, rank, &budget_for(kind)) {
+            match run_solver(backend, &problem, kind, rank, &budget_for(kind)) {
                 Ok(r) => all.push((name.clone(), task, kind.name().to_string(), r)),
                 Err(e) => println!("  {name}/{}: error {e}", kind.name()),
             }
@@ -478,7 +483,7 @@ fn fig2_to_8_testbed(engine: &Engine, scale: usize) -> anyhow::Result<Json> {
 // Fig. 9: linear convergence to (arithmetic-limited) precision
 // ---------------------------------------------------------------------------
 
-fn fig9_linear_convergence(engine: &Engine, _scale: usize) -> anyhow::Result<Json> {
+fn fig9_linear_convergence(backend: &dyn Backend, _scale: usize) -> anyhow::Result<Json> {
     let problem = problem_for(synthetic::taxi_like(3000, 9, 5))?;
     let mut rows = Vec::new();
     let mut table = fmt::Table::new(&["rank", "passes", "final residual", "log-slope/iter"]);
@@ -487,7 +492,7 @@ fn fig9_linear_convergence(engine: &Engine, _scale: usize) -> anyhow::Result<Jso
             AskotchConfig { rank, track_residual: true, ..Default::default() },
             true,
         );
-        let r = solver.run(engine, &problem, &Budget::iterations(1600))?;
+        let r = solver.run(backend, &problem, &Budget::iterations(1600))?;
         let finite: Vec<(f64, f64)> = r
             .trace
             .points
@@ -519,7 +524,7 @@ fn fig9_linear_convergence(engine: &Engine, _scale: usize) -> anyhow::Result<Jso
 // Figs. 10-11 (+13-16): ablations
 // ---------------------------------------------------------------------------
 
-fn fig10_11_ablations(engine: &Engine, _scale: usize) -> anyhow::Result<Json> {
+fn fig10_11_ablations(backend: &dyn Backend, _scale: usize) -> anyhow::Result<Json> {
     let tasks: Vec<Dataset> = vec![
         synthetic::physics_like("susy_like", 3000, 18, 0.2, 202),
         synthetic::tabular_like("covtype_like", 3000, 32, 300),
@@ -547,7 +552,7 @@ fn fig10_11_ablations(engine: &Engine, _scale: usize) -> anyhow::Result<Json> {
                 accel,
             );
             solver.identity = identity;
-            let r = solver.run(engine, &problem, &budget)?;
+            let r = solver.run(backend, &problem, &budget)?;
             table.row(vec![
                 name.clone(),
                 label.into(),
@@ -572,7 +577,7 @@ fn fig10_11_ablations(engine: &Engine, _scale: usize) -> anyhow::Result<Json> {
 // Fig. 12: single vs double precision baselines
 // ---------------------------------------------------------------------------
 
-fn fig12_precision(engine: &Engine, _scale: usize) -> anyhow::Result<Json> {
+fn fig12_precision(backend: &dyn Backend, _scale: usize) -> anyhow::Result<Json> {
     let problem = problem_for(synthetic::taxi_like(2000, 9, 12))?;
     let budget = Budget { max_iters: 40, time_limit_secs: 25.0 };
     let mut rows = Vec::new();
@@ -585,10 +590,16 @@ fn fig12_precision(engine: &Engine, _scale: usize) -> anyhow::Result<Json> {
             f64_matvec: f64_mv,
             ..Default::default()
         });
-        let r = s.run(engine, &problem, &budget)?;
+        let r = s.run(backend, &problem, &budget)?;
         table.row(vec![
             "pcg(rpc,r=50)".into(),
-            if f64_mv { "f64 host" } else { "f32 artifact" }.into(),
+            if f64_mv {
+                "f64 host (scalar oracle)".into()
+            } else if backend.exact_arithmetic() {
+                format!("f64 ({} backend)", backend.name())
+            } else {
+                format!("f32 ({} backend)", backend.name())
+            },
             format!("{:.4}", r.final_metric),
             format!("{:.2e}", r.final_residual),
             fmt::duration(r.wall_secs),
@@ -600,10 +611,10 @@ fn fig12_precision(engine: &Engine, _scale: usize) -> anyhow::Result<Json> {
         AskotchConfig { rank: 50, track_residual: true, ..Default::default() },
         true,
     );
-    let r = s.run(engine, &problem, &Budget::iterations(600))?;
+    let r = s.run(backend, &problem, &Budget::iterations(600))?;
     table.row(vec![
         "askotch(r=50)".into(),
-        "f32".into(),
+        if backend.exact_arithmetic() { "f64" } else { "f32" }.into(),
         format!("{:.4}", r.final_metric),
         format!("{:.2e}", r.final_residual),
         fmt::duration(r.wall_secs),
@@ -611,6 +622,77 @@ fn fig12_precision(engine: &Engine, _scale: usize) -> anyhow::Result<Json> {
     rows.push(report_json(&r));
     println!("{}", table.render());
     println!("(paper SC.3 / Fig 12: ASkotch is stable in single precision and still");
-    println!(" competitive when the baselines run in single precision)");
+    println!(" competitive when the baselines run in single precision; on the host");
+    println!(" backend every arm is f64, so the rows differ only by matvec path)");
+    Ok(Json::Arr(rows))
+}
+
+// ---------------------------------------------------------------------------
+// Host engine: parallel blocked kernel assembly vs the scalar reference
+// ---------------------------------------------------------------------------
+
+/// Times symmetric kernel-matrix assembly three ways: the scalar
+/// reference (`kernels::matrix`), the blocked single-thread host path
+/// (symmetric tiles computed once => ~2x fewer kernel evals), and the
+/// full multi-core host path. On a multi-core box the parallel blocked
+/// path must win by a wide margin — that is the headroom You et al.
+/// identify for host-side KRR.
+fn host_kernel_assembly(_backend: &dyn Backend, scale: usize) -> anyhow::Result<Json> {
+    let d = 9;
+    let sigma = 1.3;
+    let mut rows = Vec::new();
+    let mut table = fmt::Table::new(&[
+        "n", "kernel", "scalar", "blocked(1t)", "parallel", "threads", "speedup",
+    ]);
+    let par = HostBackend::auto_threads();
+    let single = HostBackend::new(1);
+    let mut rng = askotch::util::Rng::new(2024);
+    for &n in &[1024usize * scale, 2048 * scale] {
+        let x: Vec<f64> = (0..n * d).map(|_| rng.normal()).collect();
+        let idx: Vec<usize> = (0..n).collect();
+        for kernel in [KernelKind::Rbf, KernelKind::Laplacian] {
+            let t0 = Instant::now();
+            let reference = kernels::matrix(kernel, &x, n, &x, n, d, sigma);
+            let t_scalar = t0.elapsed().as_secs_f64();
+
+            let t0 = Instant::now();
+            let blocked = single.kernel_block(kernel, &x, d, &idx, sigma);
+            let t_blocked = t0.elapsed().as_secs_f64();
+
+            let t0 = Instant::now();
+            let parallel = par.kernel_block(kernel, &x, d, &idx, sigma);
+            let t_parallel = t0.elapsed().as_secs_f64();
+
+            // the fast paths must agree with the reference bit-for-bit
+            // modulo roundoff before their timings mean anything
+            anyhow::ensure!(blocked.max_abs_diff(&reference) < 1e-12, "blocked mismatch");
+            anyhow::ensure!(parallel.max_abs_diff(&reference) < 1e-12, "parallel mismatch");
+
+            let speedup = t_scalar / t_parallel.max(1e-12);
+            table.row(vec![
+                n.to_string(),
+                kernel.name().into(),
+                fmt::duration(t_scalar),
+                fmt::duration(t_blocked),
+                fmt::duration(t_parallel),
+                par.threads().to_string(),
+                format!("{speedup:.1}x"),
+            ]);
+            rows.push(Json::obj(vec![
+                ("n", Json::num(n as f64)),
+                ("kernel", Json::str(kernel.name())),
+                ("scalar_secs", Json::num(t_scalar)),
+                ("blocked_1t_secs", Json::num(t_blocked)),
+                ("parallel_secs", Json::num(t_parallel)),
+                ("threads", Json::num(par.threads() as f64)),
+                ("speedup", Json::num(speedup)),
+            ]));
+        }
+    }
+    println!("{}", table.render());
+    println!(
+        "(symmetric tiles computed once give the 1-thread win; the worker pool\n\
+         scales it by the core count — this is the host engine the solvers use)"
+    );
     Ok(Json::Arr(rows))
 }

@@ -1,0 +1,748 @@
+//! Host-native parallel compute backend: multi-threaded, cache-blocked
+//! kernel products with **zero AOT artifacts**.
+//!
+//! Parallelism is plain `std::thread::scope` worker pools over disjoint
+//! output spans — no dependencies, no work-stealing runtime. The three
+//! structural ideas (You et al., *Accurate, Fast and Scalable KRR*):
+//!
+//! * **Row-span parallel matvec**: evaluation rows are split across
+//!   threads; inside each thread the "database" point set is walked in
+//!   cache-sized panels so a panel of `X2` rows stays hot across many
+//!   output rows. Panel order is ascending, so per-row summation order
+//!   matches the scalar reference (`kernels::matrix` + `Mat::matvec`)
+//!   and results agree to roundoff.
+//! * **Tiled symmetric assembly**: `K(X[idx], X[idx])` is cut into
+//!   square tiles; only tiles on or above the diagonal are computed
+//!   (each symmetric entry evaluated once) and mirrored on scatter.
+//!   Tile pairs are dealt round-robin to the workers.
+//! * **Per-thread RNG streams**: parallel Gaussian slab generation
+//!   derives one deterministic stream per fixed-size chunk (not per
+//!   thread), so results are bit-identical for any thread count.
+//!
+//! The SAP step ([`HostSapStepper`]) mirrors `python/compile/model.py`
+//! in f64: gather -> K_BB -> Nystrom B-factor -> lambda_r / get_L by
+//! powering -> Woodbury projection -> (Nesterov) update. Running in f64
+//! also makes the host path the high-precision arm of the paper's
+//! Fig. 12 comparison.
+
+use super::{accel_params, Backend, SapOptions, SapStepper};
+use crate::config::{KernelKind, RhoMode};
+use crate::coordinator::KrrProblem;
+use crate::kernels;
+use crate::linalg::{dense, eig, Chol, Mat};
+use crate::util::Rng;
+
+/// Rows of the `X2` panel kept hot per thread in the matvec inner loop
+/// (targets ~128 KiB of panel per thread at f64).
+const PANEL_TARGET_BYTES: usize = 128 * 1024;
+
+/// Default square tile edge for symmetric assembly.
+const DEFAULT_ASSEMBLY_TILE: usize = 128;
+
+/// Chunk rows for deterministic parallel Gaussian generation.
+const RNG_CHUNK: usize = 64;
+
+/// Iterations of randomized powering in get_L / lambda_r (paper
+/// Appendix A.2; mirrors `GETL_ITERS` on the Python side).
+const GETL_ITERS: usize = 10;
+
+/// The host-native parallel backend.
+#[derive(Debug, Clone)]
+pub struct HostBackend {
+    threads: usize,
+    assembly_tile: usize,
+    predict_tile_override: Option<usize>,
+}
+
+impl Default for HostBackend {
+    fn default() -> Self {
+        HostBackend::new(0)
+    }
+}
+
+impl HostBackend {
+    /// `threads == 0` resolves to the machine's available parallelism.
+    pub fn new(threads: usize) -> HostBackend {
+        let threads = if threads == 0 {
+            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+        } else {
+            threads
+        };
+        HostBackend {
+            threads: threads.max(1),
+            assembly_tile: DEFAULT_ASSEMBLY_TILE,
+            predict_tile_override: None,
+        }
+    }
+
+    /// All available cores (the default).
+    pub fn auto_threads() -> HostBackend {
+        HostBackend::new(0)
+    }
+
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Override the symmetric-assembly tile edge (tests, benches).
+    pub fn with_assembly_tile(mut self, tile: usize) -> HostBackend {
+        self.assembly_tile = tile.max(1);
+        self
+    }
+
+    /// Override the prediction row tile (tests).
+    pub fn with_predict_tile(mut self, tile: usize) -> HostBackend {
+        self.predict_tile_override = Some(tile.max(1));
+        self
+    }
+
+    /// Rows of `X2` per cache panel for feature dimension `d`.
+    fn panel_rows(&self, d: usize) -> usize {
+        (PANEL_TARGET_BYTES / 8 / d.max(1)).clamp(8, 4096)
+    }
+
+    /// Contiguous rows per worker when splitting `n` rows.
+    fn rows_per_worker(&self, n: usize) -> usize {
+        n.div_ceil(self.threads.min(n).max(1))
+    }
+
+    /// Fill `out[i] = K(x1[row0 + i], X2) . v` for a span of rows, with
+    /// `X2` walked in ascending cache panels.
+    #[allow(clippy::too_many_arguments)]
+    fn matvec_span(
+        &self,
+        kernel: KernelKind,
+        x1: &[f64],
+        row0: usize,
+        x2: &[f64],
+        n2: usize,
+        d: usize,
+        v: &[f64],
+        sigma: f64,
+        out: &mut [f64],
+    ) {
+        let panel = self.panel_rows(d);
+        let mut j0 = 0;
+        while j0 < n2 {
+            let j1 = (j0 + panel).min(n2);
+            for (k, o) in out.iter_mut().enumerate() {
+                let i = row0 + k;
+                let xi = &x1[i * d..(i + 1) * d];
+                let mut acc = 0.0;
+                for j in j0..j1 {
+                    let vj = v[j];
+                    if vj != 0.0 {
+                        acc += kernels::eval(kernel, xi, &x2[j * d..(j + 1) * d], sigma) * vj;
+                    }
+                }
+                *o += acc;
+            }
+            j0 = j1;
+        }
+    }
+
+    /// Deterministic parallel standard-normal slab: one RNG stream per
+    /// [`RNG_CHUNK`]-element chunk, streams dealt round-robin to the
+    /// workers. Identical output for any thread count.
+    pub fn par_normal_slab(&self, seed: u64, len: usize) -> Vec<f64> {
+        let mut data = vec![0.0f64; len];
+        let parts = self.threads.min(len.div_ceil(RNG_CHUNK)).max(1);
+        if parts == 1 {
+            for (c, chunk) in data.chunks_mut(RNG_CHUNK).enumerate() {
+                fill_normal_chunk(seed, c, chunk);
+            }
+            return data;
+        }
+        let mut buckets: Vec<Vec<(usize, &mut [f64])>> = (0..parts).map(|_| Vec::new()).collect();
+        for (c, chunk) in data.chunks_mut(RNG_CHUNK).enumerate() {
+            buckets[c % parts].push((c, chunk));
+        }
+        std::thread::scope(|s| {
+            for bucket in buckets {
+                s.spawn(move || {
+                    for (c, chunk) in bucket {
+                        fill_normal_chunk(seed, c, chunk);
+                    }
+                });
+            }
+        });
+        data
+    }
+}
+
+fn fill_normal_chunk(seed: u64, chunk_id: usize, out: &mut [f64]) {
+    let stream = seed ^ (chunk_id as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+    let mut rng = Rng::new(stream);
+    for o in out.iter_mut() {
+        *o = rng.normal();
+    }
+}
+
+impl Backend for HostBackend {
+    fn name(&self) -> &'static str {
+        "host"
+    }
+
+    fn exact_arithmetic(&self) -> bool {
+        true // every product runs in f64
+    }
+
+    fn kernel_matvec(
+        &self,
+        kernel: KernelKind,
+        x1: &[f64],
+        n1: usize,
+        x2: &[f64],
+        n2: usize,
+        d: usize,
+        v: &[f64],
+        sigma: f64,
+    ) -> anyhow::Result<Vec<f64>> {
+        anyhow::ensure!(v.len() == n2, "matvec length mismatch: {} vs {n2}", v.len());
+        let mut out = vec![0.0f64; n1];
+        let rows = self.rows_per_worker(n1);
+        if rows >= n1 {
+            self.matvec_span(kernel, x1, 0, x2, n2, d, v, sigma, &mut out);
+            return Ok(out);
+        }
+        std::thread::scope(|s| {
+            for (t, chunk) in out.chunks_mut(rows).enumerate() {
+                let row0 = t * rows;
+                s.spawn(move || {
+                    self.matvec_span(kernel, x1, row0, x2, n2, d, v, sigma, chunk);
+                });
+            }
+        });
+        Ok(out)
+    }
+
+    fn kernel_matrix(
+        &self,
+        kernel: KernelKind,
+        x1: &[f64],
+        n1: usize,
+        x2: &[f64],
+        n2: usize,
+        d: usize,
+        sigma: f64,
+    ) -> Mat {
+        let mut out = Mat::zeros(n1, n2);
+        if n2 == 0 {
+            return out;
+        }
+        let panel = self.panel_rows(d);
+        let fill = |row0: usize, slab: &mut [f64]| {
+            let rows = slab.len() / n2;
+            let mut j0 = 0;
+            while j0 < n2 {
+                let j1 = (j0 + panel).min(n2);
+                for k in 0..rows {
+                    let xi = &x1[(row0 + k) * d..(row0 + k + 1) * d];
+                    let row = &mut slab[k * n2..(k + 1) * n2];
+                    for j in j0..j1 {
+                        row[j] = kernels::eval(kernel, xi, &x2[j * d..(j + 1) * d], sigma);
+                    }
+                }
+                j0 = j1;
+            }
+        };
+        let rows = self.rows_per_worker(n1);
+        if rows >= n1 {
+            fill(0, &mut out.data);
+            return out;
+        }
+        std::thread::scope(|s| {
+            for (t, slab) in out.data.chunks_mut(rows * n2).enumerate() {
+                let fill = &fill;
+                s.spawn(move || fill(t * rows, slab));
+            }
+        });
+        out
+    }
+
+    fn kernel_block(
+        &self,
+        kernel: KernelKind,
+        x: &[f64],
+        d: usize,
+        idx: &[usize],
+        sigma: f64,
+    ) -> Mat {
+        let b = idx.len();
+        let tile = self.assembly_tile;
+        let nt = b.div_ceil(tile.max(1)).max(1);
+        // Upper-triangular tile pairs: each symmetric tile computed once.
+        let pairs: Vec<(usize, usize)> =
+            (0..nt).flat_map(|ti| (ti..nt).map(move |tj| (ti, tj))).collect();
+        let compute = |(ti, tj): (usize, usize)| -> (usize, usize, Vec<f64>) {
+            let (a0, a1) = (ti * tile, ((ti + 1) * tile).min(b));
+            let (c0, c1) = (tj * tile, ((tj + 1) * tile).min(b));
+            let w = c1 - c0;
+            let mut buf = vec![0.0f64; (a1 - a0) * w];
+            for a in a0..a1 {
+                let xa = &x[idx[a] * d..idx[a] * d + d];
+                let start = if ti == tj { a.max(c0) } else { c0 };
+                for c in start..c1 {
+                    let xc = &x[idx[c] * d..idx[c] * d + d];
+                    buf[(a - a0) * w + (c - c0)] = kernels::eval(kernel, xa, xc, sigma);
+                }
+            }
+            (ti, tj, buf)
+        };
+
+        let parts = self.threads.min(pairs.len()).max(1);
+        let tiles: Vec<(usize, usize, Vec<f64>)> = if parts == 1 {
+            pairs.iter().copied().map(compute).collect()
+        } else {
+            std::thread::scope(|s| {
+                let handles: Vec<_> = (0..parts)
+                    .map(|t| {
+                        let pairs = &pairs;
+                        let compute = &compute;
+                        s.spawn(move || {
+                            pairs
+                                .iter()
+                                .skip(t)
+                                .step_by(parts)
+                                .copied()
+                                .map(compute)
+                                .collect::<Vec<_>>()
+                        })
+                    })
+                    .collect();
+                handles.into_iter().flat_map(|h| h.join().unwrap()).collect()
+            })
+        };
+
+        let mut out = Mat::zeros(b, b);
+        for (ti, tj, buf) in tiles {
+            let (a0, a1) = (ti * tile, ((ti + 1) * tile).min(b));
+            let (c0, c1) = (tj * tile, ((tj + 1) * tile).min(b));
+            let w = c1 - c0;
+            for a in a0..a1 {
+                let start = if ti == tj { a.max(c0) } else { c0 };
+                for c in start..c1 {
+                    let v = buf[(a - a0) * w + (c - c0)];
+                    out[(a, c)] = v;
+                    out[(c, a)] = v;
+                }
+            }
+        }
+        out
+    }
+
+    fn predict_tile(&self, _kernel: KernelKind, _n_train: usize, d: usize) -> usize {
+        if let Some(t) = self.predict_tile_override {
+            return t;
+        }
+        // Cache-sized eval panels, widened with the worker count so each
+        // kernel_matvec call has enough rows to split across threads.
+        let per_thread = (4 * PANEL_TARGET_BYTES / 8 / d.max(1)).clamp(64, 8192);
+        (self.threads * per_thread).clamp(256, 16384)
+    }
+
+    fn sap_stepper<'a>(
+        &'a self,
+        problem: &'a KrrProblem,
+        opts: &SapOptions,
+    ) -> anyhow::Result<Box<dyn SapStepper + 'a>> {
+        Ok(Box::new(HostSapStepper::new(self, problem, opts)))
+    }
+}
+
+// ---------------------------------------------------------------------------
+// SAP stepper (ASkotch / Skotch in host f64)
+// ---------------------------------------------------------------------------
+
+/// Host f64 implementation of the fused SAP step — the twin of the
+/// `askotch_step` / `skotch_step` artifacts (`python/compile/model.py`).
+pub struct HostSapStepper<'a> {
+    backend: &'a HostBackend,
+    problem: &'a KrrProblem,
+    b: usize,
+    r: usize,
+    accelerated: bool,
+    identity: bool,
+    damped: bool,
+    beta: f64,
+    gamma: f64,
+    alpha: f64,
+    rng: Rng,
+    w: Vec<f64>,
+    v: Vec<f64>,
+    z: Vec<f64>,
+}
+
+impl<'a> HostSapStepper<'a> {
+    fn new(backend: &'a HostBackend, problem: &'a KrrProblem, opts: &SapOptions) -> Self {
+        let n = problem.n();
+        // Paper operating point: ~100 blocks per epoch, floored so tiny
+        // problems still amortize the per-step Nystrom setup.
+        let b = (n / 100).max(64).min(n);
+        let r = opts.rank.clamp(1, b);
+        let (beta, gamma, alpha) = accel_params(n, b, problem.lam);
+        HostSapStepper {
+            backend,
+            problem,
+            b,
+            r,
+            accelerated: opts.accelerated,
+            identity: opts.identity,
+            damped: matches!(opts.rho, RhoMode::Damped),
+            beta,
+            gamma,
+            alpha,
+            rng: Rng::new(opts.seed ^ 0x5EED),
+            w: vec![0.0; n],
+            v: vec![0.0; n],
+            z: vec![0.0; n],
+        }
+    }
+
+    /// `(K_lambda)_{B:} z - y_B`: the O(nb) hot product, through the
+    /// parallel panel matvec.
+    fn block_gradient(
+        &self,
+        xb: &[f64],
+        idx: &[usize],
+        zfull: &[f64],
+        zb: &[f64],
+    ) -> anyhow::Result<Vec<f64>> {
+        let p = self.problem;
+        let kz = self.backend.kernel_matvec(
+            p.kernel,
+            xb,
+            idx.len(),
+            &p.train.x,
+            p.n(),
+            p.d(),
+            zfull,
+            p.sigma,
+        )?;
+        Ok((0..idx.len()).map(|k| kz[k] + p.lam * zb[k] - p.train.y[idx[k]]).collect())
+    }
+}
+
+impl SapStepper for HostSapStepper<'_> {
+    fn block_size(&self) -> usize {
+        self.b
+    }
+
+    fn step(&mut self, idx: &[usize]) -> anyhow::Result<()> {
+        let p = self.problem;
+        let (d, lam) = (p.d(), p.lam);
+        let b = idx.len();
+        let mut xb = Vec::with_capacity(b * d);
+        for &i in idx {
+            xb.extend_from_slice(&p.train.x[i * d..(i + 1) * d]);
+        }
+        // Randomness first: `zfull` immutably borrows the iterate state,
+        // so the (mutable) RNG must be done before it.
+        let pv0: Vec<f64> = (0..b).map(|_| self.rng.normal()).collect();
+        let omega_seed = if self.identity { 0 } else { self.rng.next_u64() };
+        let zfull: &[f64] = if self.accelerated { &self.z } else { &self.w };
+        let zb: Vec<f64> = idx.iter().map(|&i| zfull[i]).collect();
+
+        let kbb = self.backend.kernel_block(p.kernel, &p.train.x, d, idx, p.sigma);
+
+        let s = if self.identity {
+            // Ablation arm: projector = identity, stepsize still
+            // automatic (1 / lambda_max(K_BB + lam I) by powering).
+            let l_pb = power_max_eig(
+                |v| {
+                    let mut kv = kbb.matvec(v);
+                    for (o, &vi) in kv.iter_mut().zip(v) {
+                        *o += lam * vi;
+                    }
+                    kv
+                },
+                &pv0,
+                GETL_ITERS,
+            )
+            .max(1e-12);
+            let g_b = self.block_gradient(&xb, idx, zfull, &zb)?;
+            g_b.into_iter().map(|g| g / l_pb).collect::<Vec<f64>>()
+        } else {
+            // Rank-r Nystrom B-factor from a per-thread-RNG Gaussian
+            // test matrix (K_hat_BB = B B^T).
+            let omega = Mat {
+                rows: b,
+                cols: self.r,
+                data: self.backend.par_normal_slab(omega_seed, b * self.r),
+            };
+            let b_factor = nystrom_b_factor(&kbb, omega)?;
+            // One B^T B Gram serves both lambda_r and the Woodbury core
+            // (the artifact computes its core once per step for the same
+            // reason — nystrom.py).
+            let gram = b_factor.gram();
+
+            // rho = lam (+ lambda_r(K_hat) when damped, floored at the
+            // sketch's own rounding noise, as the artifact does).
+            let lam_r = inv_power_min_eig(&gram, &pv0[..self.r], GETL_ITERS)?;
+            let noise_floor = 50.0 * f64::EPSILON * b_factor.fro().powi(2);
+            let rho = if self.damped { lam + lam_r.max(noise_floor) } else { lam };
+
+            let wb = Woodbury::new(&b_factor, gram, rho)?;
+            // get_L: lambda_max((K_hat + rho I)^{-1} (K_BB + lam I)) by
+            // powering; Lemma 8's stepsize clamp eta = 1 / max(1, L_PB).
+            let l_pb = power_max_eig(
+                |v| {
+                    let mut kv = kbb.matvec(v);
+                    for (o, &vi) in kv.iter_mut().zip(v) {
+                        *o += lam * vi;
+                    }
+                    wb.apply(&kv)
+                },
+                &pv0,
+                GETL_ITERS,
+            )
+            .max(1.0);
+
+            let g_b = self.block_gradient(&xb, idx, zfull, &zb)?;
+            let d_b = wb.apply(&g_b);
+            d_b.into_iter().map(|g| g / l_pb).collect()
+        };
+
+        // Iterate update (Gower et al. 2018 Alg. 2 indexing; duplicates
+        // in idx accumulate, matching jax's scatter-add).
+        if self.accelerated {
+            let mut w1 = self.z.clone();
+            for (k, &i) in idx.iter().enumerate() {
+                w1[i] -= s[k];
+            }
+            let mut v1: Vec<f64> = self
+                .v
+                .iter()
+                .zip(&self.z)
+                .map(|(&vi, &zi)| self.beta * vi + (1.0 - self.beta) * zi)
+                .collect();
+            for (k, &i) in idx.iter().enumerate() {
+                v1[i] -= self.gamma * s[k];
+            }
+            let z1: Vec<f64> = v1
+                .iter()
+                .zip(&w1)
+                .map(|(&vi, &wi)| self.alpha * vi + (1.0 - self.alpha) * wi)
+                .collect();
+            self.w = w1;
+            self.v = v1;
+            self.z = z1;
+        } else {
+            for (k, &i) in idx.iter().enumerate() {
+                self.w[i] -= s[k];
+            }
+        }
+        Ok(())
+    }
+
+    fn weights(&self) -> Vec<f64> {
+        self.w.clone()
+    }
+
+    fn state_bytes(&self) -> usize {
+        let n = self.problem.n();
+        (if self.accelerated { 3 } else { 1 }) * n * 8 + self.b * self.r * 8 + self.b * 8
+    }
+}
+
+// ---------------------------------------------------------------------------
+// f64 twins of python/compile/nystrom.py + linalg.py
+// ---------------------------------------------------------------------------
+
+/// Nystrom sketch of an spd (b, b) matrix in B-factor form:
+/// `K_hat = B B^T` with `B = Y C^{-T}`, `Y = (K + shift I) Q`,
+/// `C C^T = Q^T Y` (Tropp et al. 2017, Alg. 3 without the SVD).
+fn nystrom_b_factor(kbb: &Mat, mut omega: Mat) -> anyhow::Result<Mat> {
+    let b = kbb.rows;
+    let r = omega.cols;
+    eig::orthonormalize_cols(&mut omega);
+    let trace: f64 = (0..b).map(|i| kbb[(i, i)]).sum();
+    let shift = f64::EPSILON * trace;
+    let mut y = kbb.matmul(&omega);
+    for (yv, qv) in y.data.iter_mut().zip(&omega.data) {
+        *yv += shift * qv;
+    }
+    let m = omega.t().matmul(&y);
+    let core_trace: f64 = (0..r).map(|i| m[(i, i)]).sum();
+    let ch = chol_jittered(&m, 10.0 * f64::EPSILON * core_trace)?;
+    let mut b_factor = Mat::zeros(b, r);
+    for i in 0..b {
+        let bi = ch.solve_lower(y.row(i));
+        b_factor.row_mut(i).copy_from_slice(&bi);
+    }
+    Ok(b_factor)
+}
+
+/// Cholesky with an escalating jitter ladder: f64 kernel blocks of very
+/// smooth kernels are numerically rank-deficient, and a fixed jitter
+/// occasionally underruns the rounding of the largest eigenvalue.
+fn chol_jittered(a: &Mat, base: f64) -> anyhow::Result<Chol> {
+    let mut jitter = base.max(1e-300);
+    for _ in 0..4 {
+        if let Ok(ch) = Chol::new(a, jitter) {
+            return Ok(ch);
+        }
+        jitter *= 1e4;
+    }
+    Chol::new(a, jitter)
+}
+
+/// Woodbury application of `(B B^T + rho I)^{-1}` through the r x r core.
+struct Woodbury<'m> {
+    b_factor: &'m Mat,
+    core: Chol,
+    rho: f64,
+}
+
+impl<'m> Woodbury<'m> {
+    /// `gram` must be `b_factor.gram()` (B^T B) — taken by value so the
+    /// per-step Gram is computed once and shared with the lambda_r
+    /// powering.
+    fn new(b_factor: &'m Mat, gram: Mat, rho: f64) -> anyhow::Result<Woodbury<'m>> {
+        let mut core = gram;
+        core.add_diag(rho);
+        let core_trace: f64 = (0..core.rows).map(|i| core[(i, i)]).sum();
+        let core = chol_jittered(&core, 1e-14 * core_trace)?;
+        Ok(Woodbury { b_factor, core, rho })
+    }
+
+    fn apply(&self, g: &[f64]) -> Vec<f64> {
+        let btg = self.b_factor.matvec_t(g);
+        let s = self.core.solve(&btg);
+        let bs = self.b_factor.matvec(&s);
+        g.iter().zip(&bs).map(|(x, y)| (x - y) / self.rho).collect()
+    }
+}
+
+/// Largest eigenvalue of an (implicitly) spd operator by normalized
+/// powering; returns the final norm-ratio estimate (`power_max_eig` in
+/// `python/compile/linalg.py`).
+fn power_max_eig(matvec: impl Fn(&[f64]) -> Vec<f64>, v0: &[f64], iters: usize) -> f64 {
+    let n0 = dense::norm(v0).max(1e-150);
+    let mut v: Vec<f64> = v0.iter().map(|x| x / n0).collect();
+    let mut est = 1.0;
+    for _ in 0..iters {
+        let w = matvec(&v);
+        let wn = dense::norm(&w).max(1e-150);
+        let vn = dense::norm(&v).max(1e-150);
+        est = wn / vn;
+        v = w.into_iter().map(|x| x / wn).collect();
+    }
+    est
+}
+
+/// Smallest eigenvalue of an spd (r, r) matrix via inverse powering with
+/// a Rayleigh-quotient readout.
+///
+/// The jitter subtraction deliberately mirrors `inv_power_min_eig` in
+/// `python/compile/linalg.py` (where the Rayleigh quotient is also taken
+/// on the unjittered matrix): it can underestimate lambda_min by up to
+/// the jitter, which only makes the damped rho slightly more
+/// conservative — kept for step-for-step parity with the artifact.
+fn inv_power_min_eig(g: &Mat, v0: &[f64], iters: usize) -> anyhow::Result<f64> {
+    let r = g.rows;
+    let trace: f64 = (0..r).map(|i| g[(i, i)]).sum();
+    let jitter = 1e-6 * trace / r.max(1) as f64;
+    let mut gj = g.clone();
+    gj.add_diag(jitter);
+    let ch = chol_jittered(&gj, 0.0)?;
+    let n0 = dense::norm(v0).max(1e-150);
+    let mut v: Vec<f64> = v0.iter().map(|x| x / n0).collect();
+    for _ in 0..iters {
+        let w = ch.solve(&v);
+        let wn = dense::norm(&w).max(1e-150);
+        v = w.into_iter().map(|x| x / wn).collect();
+    }
+    let gv = g.matvec(&v);
+    let rayleigh = dense::dot(&v, &gv) / dense::dot(&v, &v).max(1e-150);
+    Ok((rayleigh - jitter).max(0.0))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::KernelKind;
+
+    fn slab(n: usize, d: usize, seed: u64) -> Vec<f64> {
+        let mut rng = Rng::new(seed);
+        (0..n * d).map(|_| rng.normal()).collect()
+    }
+
+    #[test]
+    fn parallel_matvec_matches_scalar_reference() {
+        let (n1, n2, d) = (23, 117, 3); // odd: not divisible by tiles
+        let x1 = slab(n1, d, 1);
+        let x2 = slab(n2, d, 2);
+        let v = slab(n2, 1, 3);
+        for kind in [KernelKind::Rbf, KernelKind::Laplacian, KernelKind::Matern52] {
+            let want = kernels::matrix(kind, &x1, n1, &x2, n2, d, 1.1).matvec(&v);
+            for threads in [1usize, 2, 3, 7] {
+                let b = HostBackend::new(threads);
+                let got = b.kernel_matvec(kind, &x1, n1, &x2, n2, d, &v, 1.1).unwrap();
+                for (g, w) in got.iter().zip(&want) {
+                    assert!((g - w).abs() < 1e-12, "{kind:?} t={threads}: {g} vs {w}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn tiled_symmetric_assembly_matches_scalar_reference() {
+        let (n, d) = (57, 4);
+        let x = slab(n, d, 4);
+        let idx: Vec<usize> = (0..n).rev().collect(); // permuted subset order
+        for kind in [KernelKind::Rbf, KernelKind::Laplacian, KernelKind::Matern52] {
+            let want = kernels::block(kind, &x, d, &idx, 0.9);
+            let b = HostBackend::new(3).with_assembly_tile(13);
+            let got = b.kernel_block(kind, &x, d, &idx, 0.9);
+            assert!(got.max_abs_diff(&want) < 1e-12, "{kind:?}");
+        }
+    }
+
+    #[test]
+    fn parallel_matrix_matches_scalar_reference() {
+        let (n1, n2, d) = (19, 31, 5);
+        let x1 = slab(n1, d, 5);
+        let x2 = slab(n2, d, 6);
+        let want = kernels::matrix(KernelKind::Matern52, &x1, n1, &x2, n2, d, 1.4);
+        let got = HostBackend::new(4).kernel_matrix(KernelKind::Matern52, &x1, n1, &x2, n2, d, 1.4);
+        assert!(got.max_abs_diff(&want) < 1e-12);
+    }
+
+    #[test]
+    fn par_normal_slab_is_thread_count_invariant() {
+        let a = HostBackend::new(1).par_normal_slab(42, 500);
+        let b = HostBackend::new(5).par_normal_slab(42, 500);
+        assert_eq!(a, b);
+        // basic sanity: roughly standard-normal mass
+        let mean: f64 = a.iter().sum::<f64>() / a.len() as f64;
+        assert!(mean.abs() < 0.2, "mean {mean}");
+    }
+
+    #[test]
+    fn nystrom_factor_approximates_block() {
+        // Full-rank sketch (r = b) must reconstruct K almost exactly
+        // (Laplacian: slow spectral decay keeps the block well
+        // conditioned, so roundoff stays tiny).
+        let n = 24;
+        let x = slab(n, 3, 7);
+        let idx: Vec<usize> = (0..n).collect();
+        let k = kernels::block(KernelKind::Laplacian, &x, 3, &idx, 1.0);
+        let mut rng = Rng::new(8);
+        let omega = Mat::randn(n, n, &mut rng);
+        let b = nystrom_b_factor(&k, omega).unwrap();
+        let rec = b.matmul(&b.t());
+        assert!(rec.max_abs_diff(&k) < 1e-6, "diff {}", rec.max_abs_diff(&k));
+    }
+
+    #[test]
+    fn powering_finds_dominant_eigenvalue() {
+        let mut m = Mat::eye(6);
+        m[(2, 2)] = 9.0;
+        let v0 = vec![1.0; 6];
+        let est = power_max_eig(|v| m.matvec(v), &v0, 30);
+        assert!((est - 9.0).abs() < 1e-6, "est {est}");
+        let low = inv_power_min_eig(&m, &v0, 30).unwrap();
+        assert!((low - 1.0).abs() < 1e-3, "low {low}");
+    }
+}

@@ -1,0 +1,262 @@
+//! Pluggable compute backends.
+//!
+//! Every heavy product the solvers and the serving path need — kernel
+//! matvecs, dense/symmetric kernel-matrix assembly, tiled prediction,
+//! and the fused ASkotch/Skotch SAP step — goes through the [`Backend`]
+//! trait. Two implementations ship:
+//!
+//! * [`PjrtBackend`] — the AOT artifact path: fused Pallas/JAX HLO
+//!   modules executed through the PJRT [`crate::runtime::Engine`].
+//!   Fastest when `make artifacts` has been run; f32 arithmetic.
+//! * [`HostBackend`] — a host-native parallel engine: multi-threaded
+//!   (`std::thread::scope` worker pools), cache-blocked kernel-matrix
+//!   assembly (symmetric tiles computed once), tiled matvecs, and
+//!   per-thread RNG streams. Needs **zero artifacts**, runs everywhere
+//!   (CI, fresh clones, serving hosts without the artifact grid), and
+//!   computes in f64.
+//!
+//! `docs/BACKENDS.md` documents the trait surface, how to add a third
+//! backend, and the host-vs-PJRT tradeoffs.
+
+use crate::config::{BackendKind, KernelKind, RhoMode};
+use crate::coordinator::KrrProblem;
+use crate::kernels;
+use crate::linalg::Mat;
+
+pub mod host;
+pub mod pjrt;
+
+pub use host::HostBackend;
+pub use pjrt::PjrtBackend;
+
+/// Hyperparameters of one SAP (ASkotch/Skotch) run that the backend
+/// needs to build a stepper.
+#[derive(Debug, Clone)]
+pub struct SapOptions {
+    /// Nystrom rank of the block preconditioner.
+    pub rank: usize,
+    /// Nesterov acceleration (ASkotch) vs plain (Skotch).
+    pub accelerated: bool,
+    /// Ablation arm: identity projector instead of Nystrom (paper SS6.4).
+    pub identity: bool,
+    pub rho: RhoMode,
+    /// Seed for the stepper-owned RNG (test matrices, powering vectors).
+    pub seed: u64,
+}
+
+/// One ASkotch/Skotch iteration engine bound to a problem.
+///
+/// The solver owns the outer loop (block sampling, budgets, eval
+/// cadence); the stepper owns the iterate state and performs the fused
+/// gather -> K_BB -> Nystrom -> get_L -> projection -> update step.
+pub trait SapStepper {
+    /// Block size `b` this stepper operates with (the solver samples
+    /// index blocks of this size).
+    fn block_size(&self) -> usize;
+
+    /// One SAP iteration on the sampled coordinate block `idx`
+    /// (`idx.len() == block_size()`, duplicates allowed — ARLS pads).
+    fn step(&mut self, idx: &[usize]) -> anyhow::Result<()>;
+
+    /// Current full-KRR weights in f64 (length n).
+    fn weights(&self) -> Vec<f64>;
+
+    /// Explicitly-allocated iterate/sketch state, for the Table 1/2
+    /// storage accounting.
+    fn state_bytes(&self) -> usize;
+}
+
+/// A compute backend: the kernel-product engine behind every solver,
+/// the residual checks, and the prediction server.
+pub trait Backend {
+    fn name(&self) -> &'static str;
+
+    /// `K(X1, X2) @ v` with `x1` (n1 x d) and `x2` (n2 x d) row-major
+    /// f64 slabs; the result has length `n1`.
+    #[allow(clippy::too_many_arguments)]
+    fn kernel_matvec(
+        &self,
+        kernel: KernelKind,
+        x1: &[f64],
+        n1: usize,
+        x2: &[f64],
+        n2: usize,
+        d: usize,
+        v: &[f64],
+        sigma: f64,
+    ) -> anyhow::Result<Vec<f64>>;
+
+    /// Dense kernel matrix `K(X1, X2)` (setup-time assembly: PCG column
+    /// factors, EigenPro correction blocks). The default is the scalar
+    /// reference; [`HostBackend`] overrides with the parallel blocked
+    /// path.
+    #[allow(clippy::too_many_arguments)]
+    fn kernel_matrix(
+        &self,
+        kernel: KernelKind,
+        x1: &[f64],
+        n1: usize,
+        x2: &[f64],
+        n2: usize,
+        d: usize,
+        sigma: f64,
+    ) -> Mat {
+        kernels::matrix(kernel, x1, n1, x2, n2, d, sigma)
+    }
+
+    /// Symmetric kernel block `K(X[idx], X[idx])` (Falkon K_mm, EigenPro
+    /// subsample eigensystem, direct Cholesky). The default is the
+    /// scalar reference; [`HostBackend`] overrides with the parallel
+    /// tiled path that computes each symmetric tile once.
+    fn kernel_block(
+        &self,
+        kernel: KernelKind,
+        x: &[f64],
+        d: usize,
+        idx: &[usize],
+        sigma: f64,
+    ) -> Mat {
+        kernels::block(kernel, x, d, idx, sigma)
+    }
+
+    /// Does this backend evaluate kernel products in full f64? Exact
+    /// backends have no measurement floor, so high-precision residual
+    /// checks can run through them directly instead of falling back to
+    /// the single-threaded scalar oracle.
+    fn exact_arithmetic(&self) -> bool {
+        false
+    }
+
+    /// Preferred evaluation-row tile for [`Backend::predict`] against a
+    /// model of `n_train` points in dimension `d`: the largest
+    /// satisfiable manifest batch shape for PJRT, a cache-sized panel
+    /// for the host.
+    fn predict_tile(&self, kernel: KernelKind, n_train: usize, d: usize) -> usize;
+
+    /// Predictions `K(X_eval, X_train) @ w`, tiled over evaluation rows
+    /// with [`Backend::predict_tile`] (the serving path).
+    #[allow(clippy::too_many_arguments)]
+    fn predict(
+        &self,
+        kernel: KernelKind,
+        x_train: &[f64],
+        n_train: usize,
+        d: usize,
+        weights: &[f64],
+        x_eval: &[f64],
+        n_eval: usize,
+        sigma: f64,
+    ) -> anyhow::Result<Vec<f64>> {
+        assert_eq!(weights.len(), n_train);
+        let tile = self.predict_tile(kernel, n_train, d).max(1);
+        let mut out = Vec::with_capacity(n_eval);
+        let mut start = 0;
+        while start < n_eval {
+            let rows = tile.min(n_eval - start);
+            let x1 = &x_eval[start * d..(start + rows) * d];
+            let y = self.kernel_matvec(kernel, x1, rows, x_train, n_train, d, weights, sigma)?;
+            out.extend_from_slice(&y);
+            start += rows;
+        }
+        Ok(out)
+    }
+
+    /// Build a SAP stepper (the ASkotch/Skotch hot loop) for a problem.
+    fn sap_stepper<'a>(
+        &'a self,
+        problem: &'a KrrProblem,
+        opts: &SapOptions,
+    ) -> anyhow::Result<Box<dyn SapStepper + 'a>>;
+}
+
+/// Nesterov parameters `(beta, gamma, alpha)` from the paper's SS3.2
+/// defaults `mu = lam`, `nu = n/b`, with the validity clamps
+/// `mu <= nu`, `mu * nu <= 1`. The paper's default `nu = n/b` implicitly
+/// assumes b = n/100 (nu = 100); small-n problems can give much larger
+/// blocks relative to n, and a small nu makes the momentum aggressive
+/// enough to diverge when the powering estimate of L_PB is occasionally
+/// loose — so nu is clamped from below at the paper's operating point.
+pub fn accel_params(n: usize, b: usize, lam: f64) -> (f64, f64, f64) {
+    // Floor mu away from zero: lam = 0 is expressible from the CLI/config
+    // and would give gamma = 1/sqrt(0) = inf (NaN iterates). The floor
+    // keeps the momentum finite and maximally conservative instead.
+    let mut mu = lam.min(1.0).max(1e-12);
+    let nu = (n as f64 / b as f64).max(100.0).max(mu);
+    if mu * nu > 1.0 {
+        mu = 1.0 / nu;
+    }
+    let beta = 1.0 - (mu / nu).sqrt();
+    let gamma = 1.0 / (mu * nu).sqrt();
+    let alpha = 1.0 / (1.0 + gamma * nu);
+    (beta, gamma, alpha)
+}
+
+/// A concrete backend chosen at startup (CLI, examples, benches).
+///
+/// Keeps the concrete type available (e.g. `perf` wants
+/// [`crate::runtime::engine::EngineStats`] from the PJRT engine) while
+/// still handing a `&dyn Backend` to everything else via
+/// [`AnyBackend::as_dyn`].
+pub enum AnyBackend {
+    Host(HostBackend),
+    Pjrt(PjrtBackend),
+}
+
+impl AnyBackend {
+    /// Resolve a [`BackendKind`]: `Auto` picks PJRT when the artifact
+    /// manifest exists and the host engine otherwise.
+    pub fn from_kind(kind: BackendKind, artifacts_dir: &str) -> anyhow::Result<AnyBackend> {
+        match kind {
+            BackendKind::Host => Ok(AnyBackend::Host(HostBackend::auto_threads())),
+            BackendKind::Pjrt => Ok(AnyBackend::Pjrt(PjrtBackend::from_manifest(artifacts_dir)?)),
+            BackendKind::Auto => {
+                let manifest = std::path::Path::new(artifacts_dir).join("manifest.json");
+                if manifest.exists() {
+                    Ok(AnyBackend::Pjrt(PjrtBackend::from_manifest(artifacts_dir)?))
+                } else {
+                    Ok(AnyBackend::Host(HostBackend::auto_threads()))
+                }
+            }
+        }
+    }
+
+    /// `Auto` resolution against the conventional `artifacts/` directory.
+    pub fn auto(artifacts_dir: &str) -> anyhow::Result<AnyBackend> {
+        Self::from_kind(BackendKind::Auto, artifacts_dir)
+    }
+
+    pub fn as_dyn(&self) -> &dyn Backend {
+        match self {
+            AnyBackend::Host(b) => b,
+            AnyBackend::Pjrt(b) => b,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accel_params_respect_validity_clamps() {
+        // lam = 0 must stay finite (mu is floored), not gamma = inf.
+        for (n, b, lam) in
+            [(10_000usize, 64usize, 1e-2), (640, 64, 10.0), (100, 100, 1e-8), (500, 64, 0.0)]
+        {
+            let (beta, gamma, alpha) = accel_params(n, b, lam);
+            assert!((0.0..=1.0).contains(&beta), "beta {beta}");
+            assert!(gamma > 0.0, "gamma {gamma}");
+            assert!((0.0..=1.0).contains(&alpha), "alpha {alpha}");
+            assert!(beta.is_finite() && gamma.is_finite() && alpha.is_finite());
+        }
+    }
+
+    #[test]
+    fn accel_params_match_paper_operating_point() {
+        // nu clamps at 100 even when n/b is small.
+        let (beta, _, _) = accel_params(200, 100, 1e-4);
+        let mu = 1e-4f64;
+        let nu = 100.0f64;
+        assert!((beta - (1.0 - (mu / nu).sqrt())).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,303 @@
+//! PJRT artifact backend: the AOT-compiled HLO path behind [`Backend`].
+//!
+//! Wraps [`crate::runtime::Engine`] (compile-on-demand, cached
+//! executables) and implements the trait's products through the `kmv`
+//! artifact family plus the fused `askotch_step` / `skotch_step`
+//! modules. Inputs are zero-padded to the compiled shapes (padding is
+//! exact — see `runtime/tensor.rs`), arithmetic is f32.
+//!
+//! Setup-time assembly (`kernel_matrix` / `kernel_block`) keeps the
+//! trait's default host oracle: those products are O(n r d) one-offs
+//! outside the hot loop, and the f64 host path is both exact and what
+//! the pre-trait code used.
+
+use super::{accel_params, Backend, SapOptions, SapStepper};
+use crate::config::KernelKind;
+use crate::coordinator::runtime_ops::{slab_to_f32_padded, vec_to_f32_padded};
+use crate::coordinator::KrrProblem;
+use crate::runtime::manifest::ShapeKey;
+use crate::runtime::{tensor, Engine};
+use crate::util::Rng;
+use std::rc::Rc;
+
+/// Backend over the AOT artifact engine.
+pub struct PjrtBackend {
+    engine: Engine,
+}
+
+impl PjrtBackend {
+    /// Load the artifact directory produced by `make artifacts`.
+    pub fn from_manifest(dir: impl AsRef<std::path::Path>) -> anyhow::Result<PjrtBackend> {
+        Ok(PjrtBackend { engine: Engine::from_manifest(dir)? })
+    }
+
+    /// Wrap an already-constructed engine (tests).
+    pub fn new(engine: Engine) -> PjrtBackend {
+        PjrtBackend { engine }
+    }
+
+    /// The underlying engine (manifest inspection, perf counters).
+    pub fn engine(&self) -> &Engine {
+        &self.engine
+    }
+}
+
+impl Backend for PjrtBackend {
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+
+    /// `K(X1, X2) @ v` through the `kmv` artifact family. Rows are
+    /// padded transparently; padded `v` entries are zero so padding is
+    /// exact (see the zero-padding argument in `runtime/tensor.rs`).
+    fn kernel_matvec(
+        &self,
+        kernel: KernelKind,
+        x1: &[f64],
+        n1: usize,
+        x2: &[f64],
+        n2: usize,
+        d: usize,
+        v: &[f64],
+        sigma: f64,
+    ) -> anyhow::Result<Vec<f64>> {
+        assert_eq!(v.len(), n2);
+        let (meta, exe) = self.engine.prepare(
+            "kmv",
+            kernel.name(),
+            "f32",
+            ShapeKey { n: n2, d, b: n1, r: 0 },
+        )?;
+        let (bp, np, dp) = (meta.shapes.b, meta.shapes.n, meta.shapes.d);
+        let x1m = slab_to_f32_padded(x1, n1, d, bp, dp);
+        let x2m = slab_to_f32_padded(x2, n2, d, np, dp);
+        let vv = vec_to_f32_padded(v, np);
+        let out = self.engine.run(
+            &exe,
+            &[
+                x1m.literal()?,
+                x2m.literal()?,
+                tensor::vec_literal(&vv),
+                tensor::scalar_literal(sigma as f32),
+            ],
+        )?;
+        let y = tensor::literal_to_vec(&out[0], n1)?;
+        Ok(y.into_iter().map(|x| x as f64).collect())
+    }
+
+    /// Manifest batch shapes decide the prediction tile: the largest
+    /// compiled `b` among `kmv` artifacts that can actually serve this
+    /// model (n and d fit after padding) amortizes the per-invocation
+    /// overhead best. Falls back to 512 when the grid has no fitting
+    /// entry — `prepare` then reports the missing artifact clearly.
+    fn predict_tile(&self, kernel: KernelKind, n_train: usize, d: usize) -> usize {
+        self.engine
+            .manifest()
+            .candidates("kmv", kernel.name(), "f32")
+            .filter(|a| a.shapes.n >= n_train && a.shapes.d >= d)
+            .map(|a| a.shapes.b)
+            .max()
+            .unwrap_or(512)
+            .max(1)
+    }
+
+    fn sap_stepper<'a>(
+        &'a self,
+        problem: &'a KrrProblem,
+        opts: &SapOptions,
+    ) -> anyhow::Result<Box<dyn SapStepper + 'a>> {
+        Ok(Box::new(PjrtSapStepper::new(&self.engine, problem, opts)?))
+    }
+}
+
+/// ASkotch/Skotch stepper over the fused step artifacts. Host-side
+/// per-iteration work is O(b r) RNG plus O(n) state copies; the gather
+/// -> K_BB -> Nystrom -> get_L -> projection -> update chain runs in
+/// one compiled HLO module.
+pub struct PjrtSapStepper<'a> {
+    engine: &'a Engine,
+    exe: Rc<xla::PjRtLoadedExecutable>,
+    n: usize,
+    b: usize,
+    r: usize,
+    np: usize,
+    accelerated: bool,
+    identity: bool,
+    rng: Rng,
+    // Static inputs, converted once and passed by reference each step.
+    x_lit: xla::Literal,
+    y_lit: xla::Literal,
+    sigma_lit: xla::Literal,
+    lam_lit: xla::Literal,
+    damped_lit: xla::Literal,
+    beta_lit: xla::Literal,
+    gamma_lit: xla::Literal,
+    alpha_lit: xla::Literal,
+    w: Vec<f32>,
+    v: Vec<f32>,
+    z: Vec<f32>,
+}
+
+fn op_name(accelerated: bool, identity: bool) -> &'static str {
+    match (accelerated, identity) {
+        (true, false) => "askotch_step",
+        (false, false) => "skotch_step",
+        (true, true) => "askotch_step_identity",
+        (false, true) => "skotch_step_identity",
+    }
+}
+
+impl<'a> PjrtSapStepper<'a> {
+    fn new(
+        engine: &'a Engine,
+        problem: &KrrProblem,
+        opts: &SapOptions,
+    ) -> anyhow::Result<PjrtSapStepper<'a>> {
+        let (n, d) = (problem.n(), problem.d());
+        let (meta, exe) = engine.prepare(
+            op_name(opts.accelerated, opts.identity),
+            problem.kernel.name(),
+            "f32",
+            ShapeKey { n, d, b: 0, r: opts.rank },
+        )?;
+        let (np, dp, b, r) = (meta.shapes.n, meta.shapes.d, meta.shapes.b, meta.shapes.r);
+
+        let x_lit = slab_to_f32_padded(&problem.train.x, n, d, np, dp).literal()?;
+        let y_lit = tensor::vec_literal(&vec_to_f32_padded(&problem.train.y, np));
+        let (beta, gamma, alpha) = accel_params(n, b, problem.lam);
+
+        Ok(PjrtSapStepper {
+            engine,
+            exe,
+            n,
+            b,
+            r,
+            np,
+            accelerated: opts.accelerated,
+            identity: opts.identity,
+            rng: Rng::new(opts.seed ^ 0x5EED),
+            x_lit,
+            y_lit,
+            sigma_lit: tensor::scalar_literal(problem.sigma as f32),
+            lam_lit: tensor::scalar_literal(problem.lam as f32),
+            damped_lit: tensor::scalar_literal(opts.rho.as_scalar()),
+            beta_lit: tensor::scalar_literal(beta as f32),
+            gamma_lit: tensor::scalar_literal(gamma as f32),
+            alpha_lit: tensor::scalar_literal(alpha as f32),
+            w: vec![0.0; np],
+            v: vec![0.0; np],
+            z: vec![0.0; np],
+        })
+    }
+}
+
+impl SapStepper for PjrtSapStepper<'_> {
+    fn block_size(&self) -> usize {
+        self.b
+    }
+
+    fn step(&mut self, idx: &[usize]) -> anyhow::Result<()> {
+        let (b, r) = (self.b, self.r);
+        let omega = self.rng.normal_vec_f32(b * r);
+        let pv0 = self.rng.normal_vec_f32(b);
+        let idx_lit = tensor::idx_literal(idx);
+        let omega_lit = xla::Literal::vec1(&omega).reshape(&[b as i64, r as i64])?;
+        let pv0_lit = tensor::vec_literal(&pv0);
+
+        // The identity-projector ablation artifacts have a reduced
+        // signature (no omega / damped — see python/compile/model.py).
+        let outputs = match (self.accelerated, self.identity) {
+            (true, false) => {
+                let v_lit = tensor::vec_literal(&self.v);
+                let z_lit = tensor::vec_literal(&self.z);
+                self.engine.run(
+                    &self.exe,
+                    &[
+                        &self.x_lit,
+                        &self.y_lit,
+                        &v_lit,
+                        &z_lit,
+                        &idx_lit,
+                        &omega_lit,
+                        &pv0_lit,
+                        &self.sigma_lit,
+                        &self.lam_lit,
+                        &self.damped_lit,
+                        &self.beta_lit,
+                        &self.gamma_lit,
+                        &self.alpha_lit,
+                    ],
+                )?
+            }
+            (true, true) => {
+                let v_lit = tensor::vec_literal(&self.v);
+                let z_lit = tensor::vec_literal(&self.z);
+                self.engine.run(
+                    &self.exe,
+                    &[
+                        &self.x_lit,
+                        &self.y_lit,
+                        &v_lit,
+                        &z_lit,
+                        &idx_lit,
+                        &pv0_lit,
+                        &self.sigma_lit,
+                        &self.lam_lit,
+                        &self.beta_lit,
+                        &self.gamma_lit,
+                        &self.alpha_lit,
+                    ],
+                )?
+            }
+            (false, false) => {
+                let w_lit = tensor::vec_literal(&self.w);
+                self.engine.run(
+                    &self.exe,
+                    &[
+                        &self.x_lit,
+                        &self.y_lit,
+                        &w_lit,
+                        &idx_lit,
+                        &omega_lit,
+                        &pv0_lit,
+                        &self.sigma_lit,
+                        &self.lam_lit,
+                        &self.damped_lit,
+                    ],
+                )?
+            }
+            (false, true) => {
+                let w_lit = tensor::vec_literal(&self.w);
+                self.engine.run(
+                    &self.exe,
+                    &[
+                        &self.x_lit,
+                        &self.y_lit,
+                        &w_lit,
+                        &idx_lit,
+                        &pv0_lit,
+                        &self.sigma_lit,
+                        &self.lam_lit,
+                    ],
+                )?
+            }
+        };
+
+        if self.accelerated {
+            self.w = outputs[0].to_vec::<f32>()?;
+            self.v = outputs[1].to_vec::<f32>()?;
+            self.z = outputs[2].to_vec::<f32>()?;
+        } else {
+            self.w = outputs[0].to_vec::<f32>()?;
+        }
+        Ok(())
+    }
+
+    fn weights(&self) -> Vec<f64> {
+        self.w[..self.n].iter().map(|&x| x as f64).collect()
+    }
+
+    fn state_bytes(&self) -> usize {
+        (if self.accelerated { 3 } else { 1 }) * self.np * 4 + self.b * self.r * 4 + self.b * 4
+    }
+}

@@ -33,6 +33,37 @@ impl KernelKind {
     }
 }
 
+/// Which compute backend to run the solve on (`docs/BACKENDS.md`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum BackendKind {
+    /// PJRT when the artifact manifest exists, host otherwise.
+    #[default]
+    Auto,
+    /// Host-native parallel engine; needs zero artifacts.
+    Host,
+    /// AOT artifact engine; requires `make artifacts`.
+    Pjrt,
+}
+
+impl BackendKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            BackendKind::Auto => "auto",
+            BackendKind::Host => "host",
+            BackendKind::Pjrt => "pjrt",
+        }
+    }
+
+    pub fn parse(s: &str) -> anyhow::Result<BackendKind> {
+        match s {
+            "auto" => Ok(BackendKind::Auto),
+            "host" => Ok(BackendKind::Host),
+            "pjrt" | "artifact" | "artifacts" => Ok(BackendKind::Pjrt),
+            _ => anyhow::bail!("unknown backend {s:?} (auto|host|pjrt)"),
+        }
+    }
+}
+
 /// How to choose the bandwidth sigma.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub enum BandwidthSpec {
@@ -193,6 +224,8 @@ pub struct ExperimentConfig {
     pub time_limit_secs: f64,
     /// Track the O(n^2) relative residual at eval points.
     pub track_residual: bool,
+    /// Compute backend to dispatch the solve through.
+    pub backend: BackendKind,
 }
 
 impl Default for ExperimentConfig {
@@ -213,6 +246,7 @@ impl Default for ExperimentConfig {
             max_iters: 500,
             time_limit_secs: 600.0,
             track_residual: false,
+            backend: BackendKind::Auto,
         }
     }
 }
@@ -275,6 +309,10 @@ impl ExperimentConfig {
         if let Some(d) = root.opt_field("track_residual")? {
             c.track_residual = d.bool()?;
         }
+        if let Some(d) = root.opt_field("backend")? {
+            c.backend =
+                BackendKind::parse(d.str()?).map_err(|e| anyhow::anyhow!("{}: {e}", d.path()))?;
+        }
         Ok(c)
     }
 
@@ -329,6 +367,19 @@ mod tests {
         assert!(e.to_string().contains("config.n"), "got: {e}");
         let e = ExperimentConfig::from_json(r#"{"kernel":"poly"}"#).unwrap_err();
         assert!(e.to_string().contains("config.kernel"), "got: {e}");
+    }
+
+    #[test]
+    fn backend_roundtrip_and_default() {
+        for k in [BackendKind::Auto, BackendKind::Host, BackendKind::Pjrt] {
+            assert_eq!(BackendKind::parse(k.name()).unwrap(), k);
+        }
+        assert!(BackendKind::parse("gpu").is_err());
+        let c = ExperimentConfig::from_json(r#"{"backend":"host"}"#).unwrap();
+        assert_eq!(c.backend, BackendKind::Host);
+        assert_eq!(ExperimentConfig::default().backend, BackendKind::Auto);
+        let e = ExperimentConfig::from_json(r#"{"backend":"tpu"}"#).unwrap_err();
+        assert!(e.to_string().contains("config.backend"), "got: {e}");
     }
 
     #[test]

@@ -1,5 +1,5 @@
 //! The Layer-3 coordinator: problems, budgets, shared runtime helpers
-//! (prediction / residual through the artifacts), and experiment
+//! (prediction / residual through the compute backend), and experiment
 //! orchestration.
 
 pub mod problem;
@@ -7,20 +7,23 @@ pub mod runtime_ops;
 
 pub use problem::{Budget, KrrProblem, SolveReport};
 
+use crate::backend::Backend;
 use crate::config::{ExperimentConfig, SolverKind};
 use crate::data::{synthetic, Dataset};
-use crate::runtime::Engine;
 use crate::solvers;
 
 /// Builds problems from configs and dispatches solvers — the entry point
-/// used by the CLI, examples, and the bench harness.
-pub struct Coordinator<'e> {
-    pub engine: &'e Engine,
+/// used by the CLI, examples, and the bench harness. Generic over the
+/// compute backend: hand it a [`crate::backend::HostBackend`] for the
+/// artifact-free path or a [`crate::backend::PjrtBackend`] for the AOT
+/// engine.
+pub struct Coordinator<'b> {
+    pub backend: &'b dyn Backend,
 }
 
-impl<'e> Coordinator<'e> {
-    pub fn new(engine: &'e Engine) -> Self {
-        Coordinator { engine }
+impl<'b> Coordinator<'b> {
+    pub fn new(backend: &'b dyn Backend) -> Self {
+        Coordinator { backend }
     }
 
     /// Materialize the dataset named in a config.
@@ -70,6 +73,6 @@ impl<'e> Coordinator<'e> {
         let problem = self.problem(cfg)?;
         let mut solver = self.solver(cfg);
         let budget = Budget { max_iters: cfg.max_iters, time_limit_secs: cfg.time_limit_secs };
-        solver.run(self.engine, &problem, &budget)
+        solver.run(self.backend, &problem, &budget)
     }
 }

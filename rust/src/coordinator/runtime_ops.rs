@@ -1,11 +1,13 @@
-//! Shared artifact-backed operations: prediction, residuals, and kernel
-//! matvecs with transparent zero-padding. Every solver's heavy products
-//! go through these (Python never runs here — the HLO was AOT-compiled).
+//! Shared backend-dispatched operations: prediction, residuals, and the
+//! f32 padding helpers the PJRT backend layers on top of the host
+//! tensors. Every solver's heavy products go through a
+//! [`crate::backend::Backend`]; this module holds the pieces that are
+//! backend-*generic* (residual accounting, tiled prediction entry
+//! points) plus the zero-padding conversions the artifact path needs.
 
+use crate::backend::Backend;
 use crate::config::KernelKind;
-use crate::runtime::manifest::ShapeKey;
-use crate::runtime::tensor::{self, HostMat};
-use crate::runtime::Engine;
+use crate::runtime::tensor::HostMat;
 
 /// Convert an f64 row-major slab into a zero-padded f32 [`HostMat`].
 pub fn slab_to_f32_padded(x: &[f64], n: usize, d: usize, n_pad: usize, d_pad: usize) -> HostMat {
@@ -26,50 +28,12 @@ pub fn vec_to_f32_padded(v: &[f64], len_pad: usize) -> Vec<f32> {
     out
 }
 
-/// `K(X1, X2) @ v` through the `kmv` artifact family.
-///
-/// `x1` (n1 x d) and `x2` (n2 x d) are f64 slabs; the result has length
-/// `n1`. Rows are padded transparently; padded `v` entries are zero so
-/// padding is exact (DESIGN.md).
-pub fn kernel_matvec(
-    engine: &Engine,
-    kernel: KernelKind,
-    x1: &[f64],
-    n1: usize,
-    x2: &[f64],
-    n2: usize,
-    d: usize,
-    v: &[f64],
-    sigma: f64,
-) -> anyhow::Result<Vec<f64>> {
-    assert_eq!(v.len(), n2);
-    let (meta, exe) = engine.prepare(
-        "kmv",
-        kernel.name(),
-        "f32",
-        ShapeKey { n: n2, d, b: n1, r: 0 },
-    )?;
-    let (bp, np, dp) = (meta.shapes.b, meta.shapes.n, meta.shapes.d);
-    let x1m = slab_to_f32_padded(x1, n1, d, bp, dp);
-    let x2m = slab_to_f32_padded(x2, n2, d, np, dp);
-    let vv = vec_to_f32_padded(v, np);
-    let out = engine.run(
-        &exe,
-        &[
-            x1m.literal()?,
-            x2m.literal()?,
-            tensor::vec_literal(&vv),
-            tensor::scalar_literal(sigma as f32),
-        ],
-    )?;
-    let y = tensor::literal_to_vec(&out[0], n1)?;
-    Ok(y.into_iter().map(|x| x as f64).collect())
-}
-
-/// Predictions `K(X_eval, X_train) @ w` tiled through the 512-row `kmv`
-/// artifacts (the serving path).
+/// Predictions `K(X_eval, X_train) @ w` tiled over evaluation rows (the
+/// serving path). The tile size comes from the backend: manifest batch
+/// shapes for PJRT, cache-sized panels for the host engine.
+#[allow(clippy::too_many_arguments)]
 pub fn predict(
-    engine: &Engine,
+    backend: &dyn Backend,
     kernel: KernelKind,
     x_train: &[f64],
     n_train: usize,
@@ -79,23 +43,28 @@ pub fn predict(
     n_eval: usize,
     sigma: f64,
 ) -> anyhow::Result<Vec<f64>> {
-    assert_eq!(weights.len(), n_train);
-    let tile = 512usize;
-    let mut out = Vec::with_capacity(n_eval);
-    let mut start = 0;
-    while start < n_eval {
-        let rows = tile.min(n_eval - start);
-        let x1 = &x_eval[start * d..(start + rows) * d];
-        let y = kernel_matvec(engine, kernel, x1, rows, x_train, n_train, d, weights, sigma)?;
-        out.extend_from_slice(&y);
-        start += rows;
+    backend.predict(kernel, x_train, n_train, d, weights, x_eval, n_eval, sigma)
+}
+
+/// `||(K + lam I) w - y|| / ||y||` given the precomputed product
+/// `kw = K w`. The shared accumulation behind both residual entry
+/// points.
+pub fn residual_ratio(kw: &[f64], w: &[f64], y: &[f64], lam: f64) -> f64 {
+    debug_assert!(kw.len() == w.len() && w.len() == y.len());
+    let mut num = 0.0;
+    let mut den = 0.0;
+    for i in 0..y.len() {
+        let r = kw[i] + lam * w[i] - y[i];
+        num += r * r;
+        den += y[i] * y[i];
     }
-    Ok(out)
+    (num / den.max(1e-300)).sqrt()
 }
 
 /// Relative residual in f64 host arithmetic (exact kernel evaluations).
 /// O(n^2 d) on the host — use for small n / high-precision studies where
 /// the f32 artifact matvec would floor the measurement at ~1e-3 relative.
+#[allow(clippy::too_many_arguments)]
 pub fn relative_residual_host(
     kernel: KernelKind,
     x: &[f64],
@@ -108,20 +77,14 @@ pub fn relative_residual_host(
 ) -> f64 {
     let idx: Vec<usize> = (0..n).collect();
     let kw = crate::kernels::rows_matvec(kernel, x, n, d, &idx, w, sigma);
-    let mut num = 0.0;
-    let mut den = 0.0;
-    for i in 0..n {
-        let r = kw[i] + lam * w[i] - y[i];
-        num += r * r;
-        den += y[i] * y[i];
-    }
-    (num / den.max(1e-300)).sqrt()
+    residual_ratio(&kw, w, y, lam)
 }
 
-/// Relative residual `||(K + lam I) w - y|| / ||y||` on the training set.
-/// O(n^2) through the full `kmv` artifact — evaluate sparsely.
+/// Relative residual `||(K + lam I) w - y|| / ||y||` on the training
+/// set, through the backend's O(n^2) full matvec — evaluate sparsely.
+#[allow(clippy::too_many_arguments)]
 pub fn relative_residual(
-    engine: &Engine,
+    backend: &dyn Backend,
     kernel: KernelKind,
     x: &[f64],
     n: usize,
@@ -131,15 +94,8 @@ pub fn relative_residual(
     sigma: f64,
     lam: f64,
 ) -> anyhow::Result<f64> {
-    let kw = kernel_matvec(engine, kernel, x, n, x, n, d, w, sigma)?;
-    let mut num = 0.0;
-    let mut den = 0.0;
-    for i in 0..n {
-        let r = kw[i] + lam * w[i] - y[i];
-        num += r * r;
-        den += y[i] * y[i];
-    }
-    Ok((num / den.max(1e-300)).sqrt())
+    let kw = backend.kernel_matvec(kernel, x, n, x, n, d, w, sigma)?;
+    Ok(residual_ratio(&kw, w, y, lam))
 }
 
 #[cfg(test)]
@@ -160,5 +116,39 @@ mod tests {
     #[test]
     fn vec_padding() {
         assert_eq!(vec_to_f32_padded(&[1.0, 2.0], 4), vec![1.0f32, 2.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn residual_ratio_zero_at_exact_solution() {
+        // kw + lam w == y exactly => residual 0.
+        let w = vec![1.0, -2.0, 0.5];
+        let lam = 0.25;
+        let kw = vec![0.75, 1.0, 2.0];
+        let y: Vec<f64> = kw.iter().zip(&w).map(|(k, wi)| k + lam * wi).collect();
+        assert!(residual_ratio(&kw, &w, &y, lam) < 1e-15);
+    }
+
+    #[test]
+    fn residual_ratio_scales_with_error() {
+        let w = vec![0.0, 0.0];
+        let kw = vec![0.0, 0.0];
+        let y = vec![3.0, 4.0]; // ||y|| = 5, residual = ||y||/||y|| = 1
+        assert!((residual_ratio(&kw, &w, &y, 1.0) - 1.0).abs() < 1e-15);
+    }
+
+    #[test]
+    fn host_residual_matches_backend_residual() {
+        use crate::backend::HostBackend;
+        use crate::util::Rng;
+        let (n, d) = (30, 3);
+        let mut rng = Rng::new(3);
+        let x: Vec<f64> = (0..n * d).map(|_| rng.normal()).collect();
+        let w: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+        let y: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+        let b = HostBackend::new(2);
+        let via_backend =
+            relative_residual(&b, KernelKind::Rbf, &x, n, d, &w, &y, 1.0, 0.1).unwrap();
+        let via_host = relative_residual_host(KernelKind::Rbf, &x, n, d, &w, &y, 1.0, 0.1);
+        assert!((via_backend - via_host).abs() < 1e-10, "{via_backend} vs {via_host}");
     }
 }

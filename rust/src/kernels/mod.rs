@@ -1,10 +1,13 @@
-//! Host-side kernel function evaluation.
+//! Exact scalar kernel evaluation — the reference semantics every
+//! compute backend must reproduce.
 //!
-//! The rust twin of the L1 Pallas kernels. Used where HLO artifacts are
-//! the wrong tool: BLESS leverage-score estimation (small adaptive
-//! subsets), the exact small-`n` reference solver, the f64 baseline path,
-//! and as the oracle the integration tests compare artifacts against.
-//! The solver hot loops go through the artifacts, not this module.
+//! The rust twin of the L1 Pallas kernels. [`eval`] is the single
+//! source of truth for the kernel functions: the parallel blocked
+//! [`crate::backend::HostBackend`] calls it per entry (so the fast
+//! paths agree with these oracles to roundoff — the property tests pin
+//! that), and the integration tests compare the AOT artifacts against
+//! the dense assemblies here. The solver hot loops go through
+//! [`crate::backend::Backend`], not this module directly.
 
 use crate::config::KernelKind;
 use crate::linalg::Mat;

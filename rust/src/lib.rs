@@ -12,31 +12,36 @@
 //! * **L2 — JAX model** (`python/compile/`): the ASkotch / Skotch
 //!   iteration (Nystrom approximation, automatic stepsize via randomized
 //!   powering, Nesterov acceleration) lowered **once** to HLO text.
-//! * **L3 — this crate**: loads the AOT artifacts through PJRT (`xla`
-//!   crate) and owns everything around them.
+//! * **L3 — this crate**: owns the solvers, data, and serving stack,
+//!   and dispatches every heavy kernel product through a pluggable
+//!   [`backend::Backend`] — the PJRT artifact engine when `make
+//!   artifacts` has run, or the host-native parallel engine
+//!   ([`backend::HostBackend`]) with zero artifacts.
 //!
-//! Python never runs on the solve or serve path: after `make artifacts`
-//! the `askotch` binary is self-contained.
+//! Python never runs on the solve or serve path; with the host backend
+//! the `askotch` binary is self-contained straight from a fresh clone.
 //!
 //! ## Module map
 //!
 //! | Module        | Role |
 //! |---------------|------|
-//! | [`config`]    | Experiment configuration (kernels, solvers, budgets), JSON decode |
+//! | [`backend`]   | Pluggable compute backends: [`backend::Backend`] trait, host-parallel + PJRT engines (`docs/BACKENDS.md`) |
+//! | [`config`]    | Experiment configuration (kernels, solvers, budgets, backend), JSON decode |
 //! | [`coordinator`] | Problem setup and the solver event loop |
 //! | [`data`]      | Synthetic testbed generators, CSV loading, preprocessing |
 //! | [`json`]      | First-class JSON subsystem: strict parser, printers, typed `FromJson`/`ToJson` |
-//! | [`kernels`]   | Exact host-side kernel evaluation (oracles, reference paths) |
-//! | [`linalg`]    | Dense matrices, Cholesky/eigen factorizations |
+//! | [`kernels`]   | Exact scalar kernel evaluation (oracles, reference paths) |
+//! | [`linalg`]    | Dense matrices (tiled matmul), Cholesky/eigen factorizations |
 //! | [`metrics`]   | Task metrics, convergence traces, latency percentiles |
 //! | [`net`]       | HTTP/1.1 prediction service + typed JSON wire protocol (`docs/SERVING.md`) |
 //! | [`runtime`]   | PJRT engine, artifact manifest, host tensors |
 //! | [`sampling`]  | Block coordinate sampling (uniform, BLESS/ARLS) |
-//! | [`server`]    | Dynamic-batching model thread and [`server::Predictor`] backends |
+//! | [`server`]    | Dynamic-batching model thread and [`server::Predictor`] over any backend |
 //! | [`solvers`]   | ASkotch/Skotch and the baselines (PCG, Falkon, EigenPro, Cholesky) |
 //! | [`testing`]   | Mini property-testing framework |
 //! | [`util`]      | RNG, CLI parsing, formatting substrates |
 
+pub mod backend;
 pub mod config;
 pub mod coordinator;
 pub mod data;
@@ -54,8 +59,10 @@ pub mod util;
 
 /// Convenience re-exports covering the common workflow.
 pub mod prelude {
+    pub use crate::backend::{AnyBackend, Backend, HostBackend, PjrtBackend};
     pub use crate::config::{
-        BandwidthSpec, ExperimentConfig, KernelKind, RhoMode, SamplingScheme, SolverKind,
+        BackendKind, BandwidthSpec, ExperimentConfig, KernelKind, RhoMode, SamplingScheme,
+        SolverKind,
     };
     pub use crate::coordinator::{Budget, Coordinator, KrrProblem, SolveReport};
     pub use crate::data::{synthetic, Dataset, TaskKind};

@@ -82,18 +82,35 @@ impl Mat {
         out
     }
 
-    /// Matrix product (ikj loop order, cache-friendly).
+    /// Cache-tile edge for [`Mat::matmul`]: a (MM_TILE x cols) panel of
+    /// `other` stays resident while a tile of `self` rows streams over
+    /// it.
+    const MM_TILE: usize = 64;
+
+    /// Matrix product, tiled over rows and the inner dimension (blocked
+    /// ikj order). Within one output entry the inner-dimension sum runs
+    /// in ascending `k` order — panels ascend and each panel scans `k`
+    /// ascending — so results are bit-identical to the unblocked ikj
+    /// loop while the `other` panel stays hot in cache across a whole
+    /// tile of `self` rows.
     pub fn matmul(&self, other: &Mat) -> Mat {
         assert_eq!(self.cols, other.rows, "inner dims");
         let mut out = Mat::zeros(self.rows, other.cols);
-        for i in 0..self.rows {
-            for k in 0..self.cols {
-                let aik = self[(i, k)];
-                if aik != 0.0 {
-                    let orow = other.row(k);
+        let t = Self::MM_TILE;
+        for i0 in (0..self.rows).step_by(t) {
+            let i1 = (i0 + t).min(self.rows);
+            for k0 in (0..self.cols).step_by(t) {
+                let k1 = (k0 + t).min(self.cols);
+                for i in i0..i1 {
                     let out_row = out.row_mut(i);
-                    for (o, &b) in out_row.iter_mut().zip(orow) {
-                        *o += aik * b;
+                    for k in k0..k1 {
+                        let aik = self[(i, k)];
+                        if aik != 0.0 {
+                            let orow = other.row(k);
+                            for (o, &b) in out_row.iter_mut().zip(orow) {
+                                *o += aik * b;
+                            }
+                        }
                     }
                 }
             }
@@ -200,6 +217,26 @@ mod tests {
         let b = Mat::from_rows(vec![vec![5.0, 6.0], vec![7.0, 8.0]]);
         let c = a.matmul(&b);
         assert_eq!(c.data, vec![19.0, 22.0, 43.0, 50.0]);
+    }
+
+    #[test]
+    fn tiled_matmul_matches_naive_past_tile_edge() {
+        // Sizes straddling MM_TILE (64) with odd remainders.
+        let mut rng = Rng::new(9);
+        let a = Mat::randn(70, 65, &mut rng);
+        let b = Mat::randn(65, 67, &mut rng);
+        let got = a.matmul(&b);
+        let mut want = Mat::zeros(70, 67);
+        for i in 0..70 {
+            for j in 0..67 {
+                let mut s = 0.0;
+                for k in 0..65 {
+                    s += a[(i, k)] * b[(k, j)];
+                }
+                want[(i, j)] = s;
+            }
+        }
+        assert!(got.max_abs_diff(&want) < 1e-12);
     }
 
     #[test]

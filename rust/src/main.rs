@@ -4,20 +4,29 @@
 //!   solve       run one solver on one dataset and print the trace
 //!   experiment  run a JSON experiment config (file path argument)
 //!   compare     run several solvers on the same problem, print a table
-//!   info        inspect the artifact manifest / engine
+//!   info        inspect the selected backend (manifest / thread pool)
 //!   serve       train a model and serve it over HTTP (docs/SERVING.md)
+//!   perf        profile the ASkotch hot loop
+//!
+//! Every subcommand accepts `--backend auto|host|pjrt` (default `auto`:
+//! the PJRT artifact engine when `artifacts/manifest.json` exists, the
+//! host-native parallel engine otherwise — so a fresh clone solves with
+//! no artifacts at all). `--host-threads N` sizes the host worker pool.
 //!
 //! Examples:
 //!   askotch solve --dataset taxi_like --n 2048 --solver askotch --iters 200
 //!   askotch compare --dataset physics_like --n 2048 --iters 100
+//!   askotch solve --backend host --dataset taxi_like --n 4096 --iters 300
 //!   askotch experiment configs/quickstart.json
 //!   askotch serve --addr 0.0.0.0:8080 --config configs/quickstart.json
 //!   askotch info
 
 use anyhow::Result;
-use askotch::config::{BandwidthSpec, ExperimentConfig, KernelKind, SamplingScheme, SolverKind};
+use askotch::backend::{AnyBackend, Backend, HostBackend};
+use askotch::config::{
+    BackendKind, BandwidthSpec, ExperimentConfig, KernelKind, SamplingScheme, SolverKind,
+};
 use askotch::coordinator::{Budget, Coordinator};
-use askotch::runtime::Engine;
 use askotch::util::cli::Args;
 use askotch::util::fmt;
 
@@ -32,8 +41,9 @@ fn main() -> Result<()> {
         Some("perf") => cmd_perf(&args),
         _ => {
             eprintln!(
-                "usage: askotch <solve|experiment|compare|info|serve> [options]\n\
-                 run `askotch info` to inspect compiled artifacts"
+                "usage: askotch <solve|experiment|compare|info|serve|perf> [options]\n\
+                 common: --backend auto|host|pjrt (default auto), --host-threads N\n\
+                 run `askotch info` to inspect the selected backend"
             );
             Ok(())
         }
@@ -42,6 +52,30 @@ fn main() -> Result<()> {
 
 fn artifacts_dir(args: &Args) -> String {
     args.get_or("artifacts", "artifacts")
+}
+
+/// Resolve the backend: `--backend` wins, then the config's `backend`
+/// field, then `auto`.
+fn make_backend(args: &Args, cfg_kind: BackendKind) -> Result<AnyBackend> {
+    let kind = match args.get("backend") {
+        Some(s) => BackendKind::parse(s)?,
+        None => cfg_kind,
+    };
+    let dir = artifacts_dir(args);
+    // `--host-threads` implies the host engine unless pjrt was demanded.
+    let force_host = kind == BackendKind::Host
+        || (kind == BackendKind::Auto && args.get("host-threads").is_some());
+    let backend = if force_host {
+        AnyBackend::Host(HostBackend::new(args.get_usize("host-threads", 0)))
+    } else {
+        AnyBackend::from_kind(kind, &dir)?
+    };
+    if let AnyBackend::Host(h) = &backend {
+        eprintln!("backend: host ({} threads, zero artifacts)", h.threads());
+    } else {
+        eprintln!("backend: pjrt (artifacts at {dir:?})");
+    }
+    Ok(backend)
 }
 
 fn config_from_args(args: &Args) -> Result<ExperimentConfig> {
@@ -67,6 +101,9 @@ fn config_from_args(args: &Args) -> Result<ExperimentConfig> {
     cfg.max_iters = args.get_usize("iters", 300);
     cfg.time_limit_secs = args.get_f64("time-limit", 600.0);
     cfg.track_residual = args.has_flag("residual");
+    if let Some(b) = args.get("backend") {
+        cfg.backend = BackendKind::parse(b)?;
+    }
     Ok(cfg)
 }
 
@@ -94,8 +131,8 @@ fn print_report(report: &askotch::coordinator::SolveReport) {
 
 fn cmd_solve(args: &Args) -> Result<()> {
     let cfg = config_from_args(args)?;
-    let engine = Engine::from_manifest(artifacts_dir(args))?;
-    let coord = Coordinator::new(&engine);
+    let backend = make_backend(args, cfg.backend)?;
+    let coord = Coordinator::new(backend.as_dyn());
     let report = coord.run(&cfg)?;
     print_report(&report);
     Ok(())
@@ -108,8 +145,8 @@ fn cmd_experiment(args: &Args) -> Result<()> {
         .ok_or_else(|| anyhow::anyhow!("usage: askotch experiment <config.json>"))?;
     let text = std::fs::read_to_string(path)?;
     let cfg = ExperimentConfig::from_json(&text)?;
-    let engine = Engine::from_manifest(artifacts_dir(args))?;
-    let coord = Coordinator::new(&engine);
+    let backend = make_backend(args, cfg.backend)?;
+    let coord = Coordinator::new(backend.as_dyn());
     let report = coord.run(&cfg)?;
     print_report(&report);
     if let Some(out) = args.get("trace-out") {
@@ -121,8 +158,8 @@ fn cmd_experiment(args: &Args) -> Result<()> {
 
 fn cmd_compare(args: &Args) -> Result<()> {
     let base = config_from_args(args)?;
-    let engine = Engine::from_manifest(artifacts_dir(args))?;
-    let coord = Coordinator::new(&engine);
+    let backend = make_backend(args, base.backend)?;
+    let coord = Coordinator::new(backend.as_dyn());
     let solvers = [
         SolverKind::Askotch,
         SolverKind::Skotch,
@@ -158,71 +195,99 @@ fn cmd_compare(args: &Args) -> Result<()> {
 }
 
 fn cmd_info(args: &Args) -> Result<()> {
-    let engine = Engine::from_manifest(artifacts_dir(args))?;
-    let m = engine.manifest();
-    println!("platform: {}", engine.platform());
-    println!("artifact dir: {:?}", m.dir);
-    println!("ops: {:?}", m.ops());
-    let mut table = fmt::Table::new(&["op", "kernel", "n", "d", "b", "r", "file"]);
-    for a in &m.artifacts {
-        table.row(vec![
-            a.op.clone(),
-            a.kernel.clone(),
-            a.shapes.n.to_string(),
-            a.shapes.d.to_string(),
-            a.shapes.b.to_string(),
-            a.shapes.r.to_string(),
-            a.file.clone(),
-        ]);
+    let backend = make_backend(args, BackendKind::Auto)?;
+    match &backend {
+        AnyBackend::Host(h) => {
+            println!("backend: host");
+            println!("threads: {}", h.threads());
+            println!(
+                "predict tile (n=2048, d=9): {} rows",
+                h.predict_tile(KernelKind::Rbf, 2048, 9)
+            );
+            println!("artifacts: not required");
+        }
+        AnyBackend::Pjrt(p) => {
+            let engine = p.engine();
+            let m = engine.manifest();
+            println!("backend: pjrt");
+            println!("platform: {}", engine.platform());
+            println!("artifact dir: {:?}", m.dir);
+            println!("ops: {:?}", m.ops());
+            let mut table = fmt::Table::new(&["op", "kernel", "n", "d", "b", "r", "file"]);
+            for a in &m.artifacts {
+                table.row(vec![
+                    a.op.clone(),
+                    a.kernel.clone(),
+                    a.shapes.n.to_string(),
+                    a.shapes.d.to_string(),
+                    a.shapes.b.to_string(),
+                    a.shapes.r.to_string(),
+                    a.file.clone(),
+                ]);
+            }
+            println!("{}", table.render());
+        }
     }
-    println!("{}", table.render());
     Ok(())
 }
 
 /// Hot-path profiling: run N ASkotch iterations and report where the
-/// time goes (engine execute vs host-side coordinator overhead).
+/// time goes. On the PJRT backend the engine's execute counters split
+/// artifact time from host-side coordinator overhead; on the host
+/// backend the whole step *is* host time.
 fn cmd_perf(args: &Args) -> Result<()> {
     use askotch::solvers::askotch::{AskotchConfig, AskotchSolver};
     use askotch::solvers::Solver;
 
     let mut cfg = config_from_args(args)?;
     cfg.solver = SolverKind::Askotch;
-    let engine = Engine::from_manifest(artifacts_dir(args))?;
-    let coord = Coordinator::new(&engine);
+    let backend = make_backend(args, cfg.backend)?;
+    let coord = Coordinator::new(backend.as_dyn());
     let problem = coord.problem(&cfg)?;
     let iters = args.get_usize("iters", 200);
     let mut solver = AskotchSolver::new(
         AskotchConfig { rank: cfg.rank, eval_every: iters + 1, ..Default::default() },
         true,
     );
-    // warmup (compile)
-    solver.run(&engine, &problem, &Budget::iterations(3))?;
-    let pre = engine.stats();
+    // warmup (compile on pjrt, page-in on host)
+    solver.run(backend.as_dyn(), &problem, &Budget::iterations(3))?;
+    let pre = match &backend {
+        AnyBackend::Pjrt(p) => Some(p.engine().stats()),
+        AnyBackend::Host(_) => None,
+    };
     let t0 = std::time::Instant::now();
-    let report = solver.run(&engine, &problem, &Budget::iterations(iters))?;
+    let report = solver.run(backend.as_dyn(), &problem, &Budget::iterations(iters))?;
     let wall = t0.elapsed().as_secs_f64();
-    let post = engine.stats();
-    let exec = post.execute_secs - pre.execute_secs;
-    let execs = post.executions - pre.executions;
     println!(
-        "n={} b/r from artifact; iters={} wall={:.3}s ({:.2}ms/iter)",
+        "backend={} n={} iters={} wall={:.3}s ({:.2}ms/iter)",
+        backend.as_dyn().name(),
         problem.n(),
         report.iters,
         wall,
         wall * 1e3 / report.iters.max(1) as f64
     );
-    println!(
-        "engine execute: {:.3}s over {} executions ({:.2}ms each) = {:.1}% of wall",
-        exec,
-        execs,
-        exec * 1e3 / execs.max(1) as f64,
-        100.0 * exec / wall
-    );
-    println!(
-        "host overhead (sampling, RNG, literal conversion, state copies): {:.3}s = {:.1}%",
-        wall - exec,
-        100.0 * (wall - exec) / wall
-    );
+    if let (Some(pre), AnyBackend::Pjrt(p)) = (pre, &backend) {
+        let post = p.engine().stats();
+        let exec = post.execute_secs - pre.execute_secs;
+        let execs = post.executions - pre.executions;
+        println!(
+            "engine execute: {:.3}s over {} executions ({:.2}ms each) = {:.1}% of wall",
+            exec,
+            execs,
+            exec * 1e3 / execs.max(1) as f64,
+            100.0 * exec / wall
+        );
+        println!(
+            "host overhead (sampling, RNG, literal conversion, state copies): {:.3}s = {:.1}%",
+            wall - exec,
+            100.0 * (wall - exec) / wall
+        );
+    } else if let AnyBackend::Host(h) = &backend {
+        println!(
+            "host backend: {} worker threads; step = gather + tiled K_BB + Nystrom + powering + O(nb) matvec",
+            h.threads()
+        );
+    }
     Ok(())
 }
 
@@ -233,10 +298,11 @@ fn cmd_perf(args: &Args) -> Result<()> {
 /// over HTTP until the process is killed. The main thread becomes the
 /// model thread (the PJRT engine is not `Send`); the `net` accept pool
 /// feeds it through the dynamic batcher. See `docs/SERVING.md` for the
-/// wire protocol.
+/// wire protocol. With `--backend host` (or no artifacts present) the
+/// whole serving stack runs artifact-free.
 fn cmd_serve(args: &Args) -> Result<()> {
     use askotch::net::{NetConfig, Server};
-    use askotch::server::{serve_predictor, EnginePredictor, ModelSnapshot, Request, ServerConfig};
+    use askotch::server::{serve_predictor, BackendPredictor, ModelSnapshot, Request, ServerConfig};
     use std::sync::mpsc;
     use std::time::Duration;
 
@@ -245,13 +311,13 @@ fn cmd_serve(args: &Args) -> Result<()> {
         None => config_from_args(args)?,
     };
     cfg.solver = SolverKind::Askotch;
-    let engine = Engine::from_manifest(artifacts_dir(args))?;
-    let coord = Coordinator::new(&engine);
+    let backend = make_backend(args, cfg.backend)?;
+    let coord = Coordinator::new(backend.as_dyn());
     let problem = coord.problem(&cfg)?;
     let mut solver = coord.solver(&cfg);
     println!("training {} on {} (n={})...", cfg.solver.name(), cfg.dataset, problem.n());
     let report = solver.run(
-        &engine,
+        backend.as_dyn(),
         &problem,
         &Budget { max_iters: cfg.max_iters, time_limit_secs: cfg.time_limit_secs },
     )?;
@@ -278,8 +344,9 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let (tx, rx) = mpsc::channel::<Request>();
     let server = Server::start(&net_cfg, tx)?;
     println!(
-        "serving on http://{} (threads={}, max_batch={}) — POST /v1/predict, GET /healthz, GET /metrics",
+        "serving on http://{} (backend={}, threads={}, max_batch={}) — POST /v1/predict, GET /healthz, GET /metrics",
         server.addr(),
+        backend.as_dyn().name(),
         net_cfg.threads,
         batch_cfg.max_batch
     );
@@ -287,7 +354,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
     // (in practice: until the process is killed).
     let live = server.metrics().clone();
     let stats = serve_predictor(
-        &EnginePredictor { engine: &engine, model: &model },
+        &BackendPredictor { backend: backend.as_dyn(), model: &model },
         rx,
         &batch_cfg,
         Some(live.batcher()),

@@ -303,7 +303,8 @@ fn handle_predict(
 mod tests {
     use super::*;
     use crate::config::KernelKind;
-    use crate::server::{serve_predictor, HostPredictor, ModelSnapshot, ServerConfig};
+    use crate::backend::HostBackend;
+    use crate::server::{serve_predictor, BackendPredictor, ModelSnapshot, ServerConfig};
 
     /// Tiny blocking HTTP client for tests.
     fn http_call(
@@ -342,8 +343,10 @@ mod tests {
         let server = Server::start(&cfg, tx).expect("start");
         let live = server.metrics().clone();
         let model_thread = std::thread::spawn(move || {
+            let backend = HostBackend::new(1);
+            let model = toy_model();
             serve_predictor(
-                &HostPredictor { model: toy_model() },
+                &BackendPredictor { backend: &backend, model: &model },
                 rx,
                 &ServerConfig::default(),
                 Some(live.batcher()),

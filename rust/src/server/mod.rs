@@ -1,24 +1,24 @@
 //! Batched prediction server: the serving path for a trained KRR model.
 //!
-//! A dedicated model thread owns the predictor (for the PJRT engine
-//! backend the engine is not `Send`, so it must live on one thread) and
-//! the trained weights; client threads submit feature vectors over an
-//! mpsc channel. The model thread drains the queue into dynamic batches
-//! (up to `max_batch`, bounded linger) and answers each request with one
+//! A dedicated model thread owns the predictor (for the PJRT backend
+//! the engine is not `Send`, so it must live on one thread) and the
+//! trained weights; client threads submit feature vectors over an mpsc
+//! channel. The model thread drains the queue into dynamic batches (up
+//! to `max_batch`, bounded linger) and answers each request with one
 //! batched prediction — the same dynamic-batching structure a GPU
 //! serving stack would use, with the batch dimension amortizing the
-//! artifact invocation overhead.
+//! per-invocation overhead.
 //!
 //! The [`Predictor`] trait decouples the batching loop from the compute
-//! backend: [`EnginePredictor`] runs through the AOT artifacts,
-//! [`HostPredictor`] evaluates the kernel exactly in host f64 (small
-//! models, tests, artifact-free environments). The `net` subsystem puts
-//! an HTTP/1.1 front end on the same channel.
+//! layer; [`BackendPredictor`] implements it over *any*
+//! [`crate::backend::Backend`] — the AOT artifacts through
+//! [`crate::backend::PjrtBackend`], or the artifact-free parallel
+//! [`crate::backend::HostBackend`] (tests, fresh clones, serving hosts
+//! without the artifact grid). The `net` subsystem puts an HTTP/1.1
+//! front end on the same channel.
 
+use crate::backend::Backend;
 use crate::config::KernelKind;
-use crate::coordinator::runtime_ops;
-use crate::kernels;
-use crate::runtime::Engine;
 use std::sync::mpsc;
 use std::sync::Mutex;
 use std::time::{Duration, Instant};
@@ -108,62 +108,37 @@ pub trait Predictor {
     fn predict_batch(&self, x_eval: &[f64], rows: usize) -> anyhow::Result<Vec<f64>>;
 }
 
-/// Predictor backed by the AOT artifacts (tiled `kmv` executions).
-pub struct EnginePredictor<'a> {
-    pub engine: &'a Engine,
+/// Predictor over any compute backend: batches run through
+/// [`Backend::predict`] (tiled `kmv` artifacts on PJRT, parallel
+/// cache-blocked panels on the host engine).
+pub struct BackendPredictor<'a> {
+    pub backend: &'a dyn Backend,
     pub model: &'a ModelSnapshot,
 }
 
-impl Predictor for EnginePredictor<'_> {
+impl Predictor for BackendPredictor<'_> {
     fn dim(&self) -> usize {
         self.model.d
     }
 
     fn predict_batch(&self, x_eval: &[f64], rows: usize) -> anyhow::Result<Vec<f64>> {
-        runtime_ops::predict(
-            self.engine,
-            self.model.kernel,
-            &self.model.x_train,
-            self.model.n,
-            self.model.d,
-            &self.model.weights,
-            x_eval,
-            rows,
-            self.model.sigma,
-        )
+        let m = self.model;
+        self.backend.predict(m.kernel, &m.x_train, m.n, m.d, &m.weights, x_eval, rows, m.sigma)
     }
 }
 
-/// Exact host-arithmetic predictor: `K(X_eval, X_train) @ w` in f64.
-/// O(rows * n * d) per batch — the reference/serving path when no
-/// artifacts are available (tests, small models).
-pub struct HostPredictor {
-    pub model: ModelSnapshot,
-}
-
-impl Predictor for HostPredictor {
-    fn dim(&self) -> usize {
-        self.model.d
-    }
-
-    fn predict_batch(&self, x_eval: &[f64], rows: usize) -> anyhow::Result<Vec<f64>> {
-        let m = &self.model;
-        let km = kernels::matrix(m.kernel, x_eval, rows, &m.x_train, m.n, m.d, m.sigma);
-        Ok(km.matvec(&m.weights))
-    }
-}
-
-/// Run the serving loop over the artifact engine until the request
-/// channel closes. Returns stats.
+/// Run the serving loop over a backend until the request channel
+/// closes. Returns stats.
 ///
-/// Call from a thread that owns `engine` (the engine is not `Send`).
+/// Call from a thread that owns the backend (the PJRT engine is not
+/// `Send`; the host backend can live anywhere).
 pub fn serve(
-    engine: &Engine,
+    backend: &dyn Backend,
     model: &ModelSnapshot,
     rx: mpsc::Receiver<Request>,
     cfg: &ServerConfig,
 ) -> ServerStats {
-    serve_predictor(&EnginePredictor { engine, model }, rx, cfg, None)
+    serve_predictor(&BackendPredictor { backend, model }, rx, cfg, None)
 }
 
 /// Run the serving loop over any [`Predictor`] until the request channel
@@ -256,6 +231,7 @@ pub fn serve_predictor<P: Predictor + ?Sized>(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::backend::HostBackend;
 
     #[test]
     fn stats_mean_batch() {
@@ -305,7 +281,7 @@ mod tests {
     }
 
     #[test]
-    fn host_predictor_serves_exact_predictions() {
+    fn host_backend_predictor_serves_exact_predictions() {
         // weights = e_0 => prediction is k(x, x_train[0]).
         let model = ModelSnapshot {
             kernel: KernelKind::Rbf,
@@ -315,7 +291,8 @@ mod tests {
             d: 2,
             weights: vec![1.0, 0.0],
         };
-        let p = HostPredictor { model };
+        let backend = HostBackend::new(2);
+        let p = BackendPredictor { backend: &backend, model: &model };
         let (tx, rx) = mpsc::channel::<Request>();
         let (rtx, rrx) = mpsc::channel();
         tx.send(Request { features: vec![0.0, 0.0], reply: rtx }).unwrap();
@@ -337,13 +314,14 @@ mod tests {
             d: 2,
             weights: vec![1.0],
         };
-        let p = HostPredictor { model };
+        let backend = HostBackend::new(1);
         let (tx, rx) = mpsc::channel::<Request>();
         let (rtx1, rrx1) = mpsc::channel();
         let (rtx2, rrx2) = mpsc::channel();
         tx.send(Request { features: vec![0.0, 0.0], reply: rtx1 }).unwrap();
         tx.send(Request { features: vec![0.0], reply: rtx2 }).unwrap();
         drop(tx);
+        let p = BackendPredictor { backend: &backend, model: &model };
         serve_predictor(&p, rx, &ServerConfig::default(), None);
         assert!(rrx1.recv().unwrap().is_ok());
         assert!(rrx2.recv().unwrap().is_err());

@@ -1,19 +1,18 @@
 //! ASkotch / Skotch — the paper's contribution (Algorithms 2 & 3).
 //!
-//! Per iteration the coordinator: samples a block (uniform or ARLS),
-//! draws the Gaussian test matrix and powering vector, and invokes the
-//! fused `askotch_step` artifact, which performs gather -> K_BB ->
-//! Nystrom -> get_L -> approximate projection -> Nesterov update in one
-//! compiled HLO module. Host-side per-iteration work is O(b r) RNG plus
-//! O(n) state copies.
+//! The solver owns the outer loop: per iteration it samples a block
+//! (uniform or ARLS) and hands it to the backend's
+//! [`crate::backend::SapStepper`], which performs the fused gather ->
+//! K_BB -> Nystrom -> get_L -> approximate projection -> (Nesterov)
+//! update. On the PJRT backend that chain is one compiled HLO module;
+//! on the host backend it is the multi-threaded f64 twin. Host-side
+//! per-iteration work in this file is O(b) sampling plus budget checks.
 
+use crate::backend::{Backend, SapOptions};
 use crate::config::{ExperimentConfig, RhoMode, SamplingScheme};
 use crate::coordinator::{runtime_ops, Budget, KrrProblem, SolveReport};
 use crate::metrics::Trace;
-use crate::runtime::manifest::ShapeKey;
-use crate::runtime::tensor;
 use crate::sampling::{self, ArlsSampler, BlockSampler, UniformSampler};
-use crate::runtime::Engine;
 use crate::solvers::{eval_every, eval_point, looks_diverged, Solver};
 use crate::util::Rng;
 use std::time::Instant;
@@ -21,7 +20,8 @@ use std::time::Instant;
 /// Hyperparameters (paper SS3.2 defaults).
 #[derive(Debug, Clone)]
 pub struct AskotchConfig {
-    /// Nystrom rank (paper default 100; must exist in the artifact grid).
+    /// Nystrom rank (paper default 100; must exist in the artifact grid
+    /// when running on the PJRT backend).
     pub rank: usize,
     pub rho: RhoMode,
     pub sampling: SamplingScheme,
@@ -77,22 +77,7 @@ impl AskotchSolver {
         }
     }
 
-    fn op_name(&self) -> &'static str {
-        match (self.accelerated, self.identity) {
-            (true, false) => "askotch_step",
-            (false, false) => "skotch_step",
-            (true, true) => "askotch_step_identity",
-            (false, true) => "skotch_step_identity",
-        }
-    }
-
-    fn build_sampler(
-        &self,
-        engine: &Engine,
-        problem: &KrrProblem,
-        b: usize,
-    ) -> Box<dyn BlockSampler> {
-        let _ = engine;
+    fn build_sampler(&self, problem: &KrrProblem, b: usize) -> Box<dyn BlockSampler> {
         match self.cfg.sampling {
             SamplingScheme::Uniform => Box::new(UniformSampler::new(self.cfg.seed ^ 0xB10C)),
             SamplingScheme::Arls => {
@@ -140,51 +125,21 @@ impl Solver for AskotchSolver {
 
     fn run(
         &mut self,
-        engine: &Engine,
+        backend: &dyn Backend,
         problem: &KrrProblem,
         budget: &Budget,
     ) -> anyhow::Result<SolveReport> {
         let (n, d) = (problem.n(), problem.d());
-        let (meta, exe) = engine.prepare(
-            self.op_name(),
-            problem.kernel.name(),
-            "f32",
-            ShapeKey { n, d, b: 0, r: self.cfg.rank },
-        )?;
-        let (np, dp, b, r) = (meta.shapes.n, meta.shapes.d, meta.shapes.b, meta.shapes.r);
-
-        // Static inputs, converted once and passed by reference each step.
-        let x_lit = runtime_ops::slab_to_f32_padded(&problem.train.x, n, d, np, dp).literal()?;
-        let y_lit = tensor::vec_literal(&runtime_ops::vec_to_f32_padded(&problem.train.y, np));
-        let sigma_lit = tensor::scalar_literal(problem.sigma as f32);
-        let lam_lit = tensor::scalar_literal(problem.lam as f32);
-        let damped_lit = tensor::scalar_literal(self.cfg.rho.as_scalar());
-
-        // Acceleration parameters (paper SS3.2: mu = lam, nu = n/b, with
-        // the validity clamps mu <= nu, mu*nu <= 1). The paper's default
-        // nu = n/b implicitly assumes b = n/100 (nu = 100); our artifact
-        // tiers can give much larger blocks relative to n, and a small nu
-        // makes the momentum aggressive enough to diverge when the
-        // powering estimate of L_PB is occasionally loose. Clamp nu from
-        // below at the paper's operating point.
-        let mut mu = problem.lam.min(1.0);
-        let nu = (n as f64 / b as f64).max(100.0).max(mu);
-        if mu * nu > 1.0 {
-            mu = 1.0 / nu;
-        }
-        let beta = 1.0 - (mu / nu).sqrt();
-        let gamma = 1.0 / (mu * nu).sqrt();
-        let alpha = 1.0 / (1.0 + gamma * nu);
-        let beta_lit = tensor::scalar_literal(beta as f32);
-        let gamma_lit = tensor::scalar_literal(gamma as f32);
-        let alpha_lit = tensor::scalar_literal(alpha as f32);
-
-        let mut sampler = self.build_sampler(engine, problem, b);
-        let mut rng = Rng::new(self.cfg.seed ^ 0x5EED);
-
-        let mut w = vec![0.0f32; np];
-        let mut v = vec![0.0f32; np];
-        let mut z = vec![0.0f32; np];
+        let opts = SapOptions {
+            rank: self.cfg.rank,
+            accelerated: self.accelerated,
+            identity: self.identity,
+            rho: self.cfg.rho,
+            seed: self.cfg.seed,
+        };
+        let mut stepper = backend.sap_stepper(problem, &opts)?;
+        let b = stepper.block_size();
+        let mut sampler = self.build_sampler(problem, b);
 
         let eval_stride = if self.cfg.eval_every > 0 {
             self.cfg.eval_every
@@ -198,78 +153,22 @@ impl Solver for AskotchSolver {
         let mut iters = 0;
         while !budget.exhausted(iters, t0.elapsed().as_secs_f64()) {
             let idx = sampler.sample_block(n, b);
-            let omega = rng.normal_vec_f32(b * r);
-            let pv0 = rng.normal_vec_f32(b);
-            let idx_lit = tensor::idx_literal(&idx);
-            let omega_lit =
-                xla::Literal::vec1(&omega).reshape(&[b as i64, r as i64])?;
-            let pv0_lit = tensor::vec_literal(&pv0);
-
-            // The identity-projector ablation artifacts have a reduced
-            // signature (no omega / damped — see python/compile/model.py).
-            let outputs = match (self.accelerated, self.identity) {
-                (true, false) => {
-                    let v_lit = tensor::vec_literal(&v);
-                    let z_lit = tensor::vec_literal(&z);
-                    engine.run(
-                        &exe,
-                        &[
-                            &x_lit, &y_lit, &v_lit, &z_lit, &idx_lit, &omega_lit,
-                            &pv0_lit, &sigma_lit, &lam_lit, &damped_lit, &beta_lit,
-                            &gamma_lit, &alpha_lit,
-                        ],
-                    )?
-                }
-                (true, true) => {
-                    let v_lit = tensor::vec_literal(&v);
-                    let z_lit = tensor::vec_literal(&z);
-                    engine.run(
-                        &exe,
-                        &[
-                            &x_lit, &y_lit, &v_lit, &z_lit, &idx_lit, &pv0_lit,
-                            &sigma_lit, &lam_lit, &beta_lit, &gamma_lit, &alpha_lit,
-                        ],
-                    )?
-                }
-                (false, false) => {
-                    let w_lit = tensor::vec_literal(&w);
-                    engine.run(
-                        &exe,
-                        &[
-                            &x_lit, &y_lit, &w_lit, &idx_lit, &omega_lit, &pv0_lit,
-                            &sigma_lit, &lam_lit, &damped_lit,
-                        ],
-                    )?
-                }
-                (false, true) => {
-                    let w_lit = tensor::vec_literal(&w);
-                    engine.run(
-                        &exe,
-                        &[&x_lit, &y_lit, &w_lit, &idx_lit, &pv0_lit, &sigma_lit, &lam_lit],
-                    )?
-                }
-            };
-
-            if self.accelerated {
-                w = outputs[0].to_vec::<f32>()?;
-                v = outputs[1].to_vec::<f32>()?;
-                z = outputs[2].to_vec::<f32>()?;
-            } else {
-                w = outputs[0].to_vec::<f32>()?;
-            }
+            stepper.step(&idx)?;
             iters += 1;
 
             if iters % eval_stride == 0 || budget.exhausted(iters, t0.elapsed().as_secs_f64()) {
-                let w64: Vec<f64> = w[..n].iter().map(|&x| x as f64).collect();
+                let w64 = stepper.weights();
                 if looks_diverged(&w64) {
                     diverged = true;
                     break;
                 }
                 let residual = if self.cfg.track_residual {
-                    if n <= 4096 {
-                        // f64 host path: the f32 artifact matvec floors the
-                        // *measurement* around 1e-3 relative on
-                        // ill-conditioned K (fig9 needs better).
+                    if !backend.exact_arithmetic() && n <= 4096 {
+                        // Scalar f64 oracle: the f32 artifact matvec floors
+                        // the *measurement* around 1e-3 relative on
+                        // ill-conditioned K (fig9 needs better). Exact
+                        // backends skip this — their own (parallel) matvec
+                        // is already f64.
                         runtime_ops::relative_residual_host(
                             problem.kernel,
                             &problem.train.x,
@@ -282,7 +181,7 @@ impl Solver for AskotchSolver {
                         )
                     } else {
                         runtime_ops::relative_residual(
-                            engine,
+                            backend,
                             problem.kernel,
                             &problem.train.x,
                             n,
@@ -297,7 +196,7 @@ impl Solver for AskotchSolver {
                     f64::NAN
                 };
                 eval_point(
-                    engine,
+                    backend,
                     problem,
                     &w64,
                     iters,
@@ -308,11 +207,10 @@ impl Solver for AskotchSolver {
             }
         }
 
-        let weights: Vec<f64> = w[..n].iter().map(|&x| x as f64).collect();
+        let weights = stepper.weights();
         let final_metric = trace.last_metric().unwrap_or(f64::NAN);
         let final_residual = trace.last_residual().unwrap_or(f64::NAN);
-        // Solver state: iterate sequences + per-iteration sketch buffers.
-        let state_bytes = (if self.accelerated { 3 } else { 1 }) * np * 4 + b * r * 4 + b * 4;
+        let state_bytes = stepper.state_bytes();
         Ok(SolveReport {
             solver: self.name(),
             problem: problem.name.clone(),

@@ -1,12 +1,14 @@
 //! Exact dense Cholesky solver — the O(n^3) direct method the paper's
 //! introduction rules out at scale. Kept for ground truth on small
-//! problems and for the Table 2 scaling measurements.
+//! problems and for the Table 2 scaling measurements. Kernel assembly
+//! goes through the backend (parallel tiled on the host engine); the
+//! factorization itself is the host Cholesky.
 
+use crate::backend::Backend;
 use crate::coordinator::{Budget, KrrProblem, SolveReport};
 use crate::kernels;
-use crate::linalg::Chol;
+use crate::linalg::{Chol, Mat};
 use crate::metrics::Trace;
-use crate::runtime::Engine;
 use crate::solvers::{eval_point, Solver};
 use std::time::Instant;
 
@@ -22,18 +24,42 @@ impl CholeskySolver {
         CholeskySolver
     }
 
-    /// Solve exactly and return the weights (shared with tests).
-    pub fn solve_weights(problem: &KrrProblem) -> anyhow::Result<Vec<f64>> {
-        let n = problem.n();
+    /// The O(n^2) assembly is pointless past the cap — refuse before it.
+    fn check_cap(n: usize) -> anyhow::Result<()> {
         anyhow::ensure!(
             n <= MAX_N,
             "direct Cholesky capped at n={MAX_N} (got {n}); use an iterative solver"
         );
-        let idx: Vec<usize> = (0..n).collect();
-        let mut k = kernels::block(problem.kernel, &problem.train.x, problem.d(), &idx, problem.sigma);
+        Ok(())
+    }
+
+    /// Factor `K + lam I` and solve for the weights.
+    fn weights_from_kernel(mut k: Mat, problem: &KrrProblem) -> anyhow::Result<Vec<f64>> {
+        let n = problem.n();
         k.add_diag(problem.lam);
         let ch = Chol::new(&k, 1e-10 * n as f64)?;
         Ok(ch.solve(&problem.train.y))
+    }
+
+    /// Solve exactly with scalar host assembly and return the weights
+    /// (the reference oracle shared with tests).
+    pub fn solve_weights(problem: &KrrProblem) -> anyhow::Result<Vec<f64>> {
+        Self::check_cap(problem.n())?;
+        let idx: Vec<usize> = (0..problem.n()).collect();
+        let k = kernels::block(problem.kernel, &problem.train.x, problem.d(), &idx, problem.sigma);
+        Self::weights_from_kernel(k, problem)
+    }
+
+    /// Solve exactly with backend-accelerated assembly.
+    pub fn solve_weights_on(
+        backend: &dyn Backend,
+        problem: &KrrProblem,
+    ) -> anyhow::Result<Vec<f64>> {
+        Self::check_cap(problem.n())?;
+        let idx: Vec<usize> = (0..problem.n()).collect();
+        let k =
+            backend.kernel_block(problem.kernel, &problem.train.x, problem.d(), &idx, problem.sigma);
+        Self::weights_from_kernel(k, problem)
     }
 }
 
@@ -44,15 +70,15 @@ impl Solver for CholeskySolver {
 
     fn run(
         &mut self,
-        engine: &Engine,
+        backend: &dyn Backend,
         problem: &KrrProblem,
         _budget: &Budget,
     ) -> anyhow::Result<SolveReport> {
         let t0 = Instant::now();
-        let w = Self::solve_weights(problem)?;
+        let w = Self::solve_weights_on(backend, problem)?;
         let mut trace = Trace::default();
         let metric =
-            eval_point(engine, problem, &w, 1, t0.elapsed().as_secs_f64(), &mut trace, f64::NAN)?;
+            eval_point(backend, problem, &w, 1, t0.elapsed().as_secs_f64(), &mut trace, f64::NAN)?;
         let n = problem.n();
         Ok(SolveReport {
             solver: self.name(),

@@ -3,8 +3,8 @@
 //! Solves full KRR with lambda = 0 (as the EigenPro papers recommend) by
 //! stochastic gradient descent whose gradient is preconditioned through
 //! the top-q eigensystem of a size-s uniform subsample of the kernel
-//! matrix. The batch gradient K(X_B, :) w runs through the `kmv`
-//! artifacts; the s x s eigensystem is a host subspace iteration.
+//! matrix. The batch gradient K(X_B, :) w runs through the backend's
+//! kernel matvec; the s x s eigensystem is a host subspace iteration.
 //!
 //! Default hyperparameters follow the reference implementation's spirit
 //! (fixed s, q, eta = 2 / lambda_{q+1} with a safety factor). As the
@@ -13,12 +13,11 @@
 //! `diverged = true` rather than tuning per problem, reproducing the
 //! paper's comparison honestly.
 
+use crate::backend::Backend;
 use crate::config::ExperimentConfig;
-use crate::coordinator::{runtime_ops, Budget, KrrProblem, SolveReport};
-use crate::kernels;
+use crate::coordinator::{Budget, KrrProblem, SolveReport};
 use crate::linalg::eig;
 use crate::metrics::Trace;
-use crate::runtime::Engine;
 use crate::solvers::{eval_every, eval_point, looks_diverged, Solver};
 use crate::util::Rng;
 use std::time::Instant;
@@ -61,7 +60,7 @@ impl Solver for EigenProSolver {
 
     fn run(
         &mut self,
-        engine: &Engine,
+        backend: &dyn Backend,
         problem: &KrrProblem,
         budget: &Budget,
     ) -> anyhow::Result<SolveReport> {
@@ -74,7 +73,7 @@ impl Solver for EigenProSolver {
         // --- preconditioner: top-q eigensystem of (1/s) K_SS -------------
         let mut rng = Rng::new(self.cfg.seed ^ 0xE16E);
         let s_idx = rng.sample_distinct(n, s);
-        let kss = kernels::block(problem.kernel, &problem.train.x, d, &s_idx, problem.sigma);
+        let kss = backend.kernel_block(problem.kernel, &problem.train.x, d, &s_idx, problem.sigma);
         let (mut eigs, qmat) =
             eig::subspace_topk(s, q + 1, |v| kss.matvec(v), 40, &mut rng);
         for e in eigs.iter_mut() {
@@ -100,14 +99,22 @@ impl Solver for EigenProSolver {
         let mut diverged = false;
         let mut iters = 0;
         let mut xb = vec![0.0f64; bg * d];
+        let xs = subslab(&problem.train.x, &s_idx, d);
         while !budget.exhausted(iters, t0.elapsed().as_secs_f64()) {
             let batch = rng.sample_distinct(n, bg);
             for (k, &i) in batch.iter().enumerate() {
                 xb[k * d..(k + 1) * d].copy_from_slice(problem.train.row(i));
             }
-            // grad_k = K(x_k, :) w - y_k (lambda = 0), via artifact
-            let kw = runtime_ops::kernel_matvec(
-                engine, problem.kernel, &xb, bg, &problem.train.x, n, d, &w, problem.sigma,
+            // grad_k = K(x_k, :) w - y_k (lambda = 0), via the backend
+            let kw = backend.kernel_matvec(
+                problem.kernel,
+                &xb,
+                bg,
+                &problem.train.x,
+                n,
+                d,
+                &w,
+                problem.sigma,
             )?;
             let grad: Vec<f64> =
                 (0..bg).map(|k| kw[k] - problem.train.y[batch[k]]).collect();
@@ -118,15 +125,7 @@ impl Solver for EigenProSolver {
             }
             // preconditioner correction on the subsample coordinates:
             // w_S += eta * Q diag(flatten) Q^T K(X_S, X_B) grad / s
-            let ksb = kernels::matrix(
-                problem.kernel,
-                &subslab(&problem.train.x, &s_idx, d),
-                s,
-                &xb,
-                bg,
-                d,
-                problem.sigma,
-            );
+            let ksb = backend.kernel_matrix(problem.kernel, &xs, s, &xb, bg, d, problem.sigma);
             let kg = ksb.matvec(&grad);
             let qt_kg = qmat.matvec_t(&kg);
             let mut coef = vec![0.0f64; q + 1];
@@ -144,7 +143,7 @@ impl Solver for EigenProSolver {
                     diverged = true;
                     break;
                 }
-                eval_point(engine, problem, &w, iters, t0.elapsed().as_secs_f64(), &mut trace, f64::NAN)?;
+                eval_point(backend, problem, &w, iters, t0.elapsed().as_secs_f64(), &mut trace, f64::NAN)?;
             }
         }
 

@@ -2,17 +2,17 @@
 //!
 //! Solves the m-dimensional system (paper eq. 5)
 //!     (K_nm^T K_nm + lam K_mm) w = K_nm^T y
-//! by preconditioned CG. The O(nm) products K_nm v / K_nm^T u run through
-//! the `kmv` artifacts; the m x m preconditioner (K_mm + delta I)^{-1} is
-//! a host Cholesky — exactly the memory object whose O(m^2) footprint
-//! limits inducing-points methods (Table 1 "Memory-efficient? NO").
+//! by preconditioned CG. The O(nm) products K_nm v / K_nm^T u run
+//! through the backend's kernel matvec; the m x m preconditioner
+//! (K_mm + delta I)^{-1} is a host Cholesky — exactly the memory object
+//! whose O(m^2) footprint limits inducing-points methods (Table 1
+//! "Memory-efficient? NO").
 
+use crate::backend::Backend;
 use crate::config::ExperimentConfig;
-use crate::coordinator::{runtime_ops, Budget, KrrProblem, SolveReport};
-use crate::kernels;
+use crate::coordinator::{Budget, KrrProblem, SolveReport};
 use crate::linalg::{dense, Chol};
 use crate::metrics::{Trace, TracePoint};
-use crate::runtime::Engine;
 use crate::solvers::{eval_every, looks_diverged, Solver};
 use crate::util::Rng;
 use std::time::Instant;
@@ -53,7 +53,7 @@ impl Solver for FalkonSolver {
 
     fn run(
         &mut self,
-        engine: &Engine,
+        backend: &dyn Backend,
         problem: &KrrProblem,
         budget: &Budget,
     ) -> anyhow::Result<SolveReport> {
@@ -71,18 +71,32 @@ impl Solver for FalkonSolver {
         }
 
         // K_mm and its Cholesky preconditioner (the O(m^2)/O(m^3) cost).
-        let kmm = kernels::block(problem.kernel, &problem.train.x, d, &centers, problem.sigma);
+        let kmm = backend.kernel_block(problem.kernel, &problem.train.x, d, &centers, problem.sigma);
         let mut kmm_reg = kmm.clone();
         kmm_reg.add_diag(lam + 1e-8 * m as f64);
         let pre = Chol::new(&kmm_reg, 0.0)?;
 
-        // Operator A(v) = K_nm^T (K_nm v) + lam K_mm v via artifacts.
+        // Operator A(v) = K_nm^T (K_nm v) + lam K_mm v via the backend.
         let apply = |v: &[f64]| -> anyhow::Result<Vec<f64>> {
-            let t = runtime_ops::kernel_matvec(
-                engine, problem.kernel, &problem.train.x, n, &xm, m, d, v, problem.sigma,
+            let t = backend.kernel_matvec(
+                problem.kernel,
+                &problem.train.x,
+                n,
+                &xm,
+                m,
+                d,
+                v,
+                problem.sigma,
             )?;
-            let mut s = runtime_ops::kernel_matvec(
-                engine, problem.kernel, &xm, m, &problem.train.x, n, d, &t, problem.sigma,
+            let mut s = backend.kernel_matvec(
+                problem.kernel,
+                &xm,
+                m,
+                &problem.train.x,
+                n,
+                d,
+                &t,
+                problem.sigma,
             )?;
             let kv = kmm.matvec(v);
             for i in 0..m {
@@ -92,8 +106,7 @@ impl Solver for FalkonSolver {
         };
 
         // rhs = K_nm^T y.
-        let rhs = runtime_ops::kernel_matvec(
-            engine,
+        let rhs = backend.kernel_matvec(
             problem.kernel,
             &xm,
             m,
@@ -143,8 +156,7 @@ impl Solver for FalkonSolver {
                     break;
                 }
                 // Inducing-points prediction: K(test, Xm) w.
-                let pred = runtime_ops::predict(
-                    engine,
+                let pred = backend.predict(
                     problem.kernel,
                     &xm,
                     m,

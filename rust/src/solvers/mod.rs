@@ -1,6 +1,8 @@
 //! KRR solvers: the paper's contribution (ASkotch/Skotch) plus every
 //! baseline it is evaluated against (PCG, Falkon, EigenPro, exact
-//! Cholesky). All heavy kernel products run through the AOT artifacts.
+//! Cholesky). All heavy kernel products dispatch through the
+//! [`crate::backend::Backend`] trait — the AOT artifacts when a PJRT
+//! backend is supplied, the parallel host engine otherwise.
 
 pub mod askotch;
 pub mod cholesky;
@@ -8,9 +10,9 @@ pub mod eigenpro;
 pub mod falkon;
 pub mod pcg;
 
+use crate::backend::Backend;
 use crate::coordinator::{Budget, KrrProblem, SolveReport};
-use crate::metrics::{TracePoint, Trace};
-use crate::runtime::Engine;
+use crate::metrics::{Trace, TracePoint};
 
 /// A KRR solver that can be driven by the coordinator.
 pub trait Solver {
@@ -19,7 +21,7 @@ pub trait Solver {
     /// Run until the budget is exhausted (or convergence/divergence).
     fn run(
         &mut self,
-        engine: &Engine,
+        backend: &dyn Backend,
         problem: &KrrProblem,
         budget: &Budget,
     ) -> anyhow::Result<SolveReport>;
@@ -35,7 +37,7 @@ pub fn eval_every(budget: &Budget, target_points: usize) -> usize {
 /// point. Returns the metric.
 #[allow(clippy::too_many_arguments)]
 pub fn eval_point(
-    engine: &Engine,
+    backend: &dyn Backend,
     problem: &KrrProblem,
     weights: &[f64],
     iter: usize,
@@ -43,8 +45,7 @@ pub fn eval_point(
     trace: &mut Trace,
     residual: f64,
 ) -> anyhow::Result<f64> {
-    let pred = crate::coordinator::runtime_ops::predict(
-        engine,
+    let pred = backend.predict(
         problem.kernel,
         &problem.train.x,
         problem.n(),

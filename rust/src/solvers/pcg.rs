@@ -1,6 +1,7 @@
 //! Full-KRR preconditioned conjugate gradient — the paper's strongest
-//! classical baseline (SS4.1). O(n^2) per iteration through the full
-//! `kmv` artifact; rank-r Nystrom preconditioner built at setup.
+//! classical baseline (SS4.1). O(n^2) per iteration through the
+//! backend's full kernel matvec; rank-r Nystrom preconditioner built at
+//! setup.
 //!
 //! Two preconditioner constructions, mirroring the paper's comparisons:
 //! * `Rpc` — column (pivoted) Nystrom from r uniformly sampled columns,
@@ -9,12 +10,12 @@
 //!   matvecs at setup. This is the construction whose setup cost blows up
 //!   at scale (Fig. 1: "fails to complete a single iteration").
 
+use crate::backend::Backend;
 use crate::config::ExperimentConfig;
-use crate::coordinator::{runtime_ops, Budget, KrrProblem, SolveReport};
+use crate::coordinator::{Budget, KrrProblem, SolveReport};
 use crate::kernels;
 use crate::linalg::{dense, Chol, Mat};
 use crate::metrics::Trace;
-use crate::runtime::Engine;
 use crate::solvers::{eval_every, eval_point, looks_diverged, Solver};
 use crate::util::Rng;
 use std::time::Instant;
@@ -33,8 +34,8 @@ pub struct PcgConfig {
     pub rank: usize,
     pub precond: PcgPrecond,
     pub seed: u64,
-    /// Use exact f64 host matvecs instead of the f32 artifact (the
-    /// paper's double-precision PCG; only sensible at small n).
+    /// Use exact f64 scalar matvecs instead of the backend (the paper's
+    /// double-precision PCG oracle; only sensible at small n).
     pub f64_matvec: bool,
 }
 
@@ -80,23 +81,22 @@ impl PcgSolver {
         PcgSolver { cfg }
     }
 
-    /// Column-Nystrom B-factor from uniformly sampled pivots.
-    fn rpc_b_factor(&self, problem: &KrrProblem) -> anyhow::Result<Mat> {
+    /// Column-Nystrom B-factor from uniformly sampled pivots. The n x r
+    /// column slab and the r x r pivot block assemble through the
+    /// backend (blocked + parallel on the host engine).
+    fn rpc_b_factor(&self, backend: &dyn Backend, problem: &KrrProblem) -> anyhow::Result<Mat> {
         let (n, d) = (problem.n(), problem.d());
         let r = self.cfg.rank.min(n);
         let mut rng = Rng::new(self.cfg.seed ^ 0x9C6);
         let pivots = rng.sample_distinct(n, r);
-        // C = K(:, S): n x r, O(n r d)
-        let mut c = Mat::zeros(n, r);
-        for i in 0..n {
-            let xi = problem.train.row(i);
-            for (j, &p) in pivots.iter().enumerate() {
-                c[(i, j)] =
-                    kernels::eval(problem.kernel, xi, problem.train.row(p), problem.sigma);
-            }
+        let mut xp = Vec::with_capacity(r * d);
+        for &p in &pivots {
+            xp.extend_from_slice(problem.train.row(p));
         }
+        // C = K(:, S): n x r, O(n r d)
+        let c = backend.kernel_matrix(problem.kernel, &problem.train.x, n, &xp, r, d, problem.sigma);
         // W = K_SS; B = C chol(W)^{-T}
-        let w = kernels::block(problem.kernel, &problem.train.x, d, &pivots, problem.sigma);
+        let w = backend.kernel_block(problem.kernel, &problem.train.x, d, &pivots, problem.sigma);
         let ch = Chol::new(&w, 1e-8 * r as f64)?;
         // B row i solves: B[i,:] = solve_lower(L, C[i,:]) since
         // K_hat = C W^-1 C^T = (C L^{-T})(C L^{-T})^T with W = L L^T.
@@ -111,7 +111,7 @@ impl PcgSolver {
     /// Gaussian-sketch B-factor: Y = K Omega via r full matvecs (O(n^2 r)).
     fn gaussian_b_factor(
         &self,
-        engine: &Engine,
+        backend: &dyn Backend,
         problem: &KrrProblem,
         deadline: &Budget,
         t0: &Instant,
@@ -131,7 +131,7 @@ impl PcgSolver {
             for i in 0..n {
                 col[i] = omega[(i, j)];
             }
-            let kcol = self.matvec(engine, problem, &col)?;
+            let kcol = self.matvec(backend, problem, &col)?;
             for i in 0..n {
                 y[(i, j)] = kcol[i];
             }
@@ -149,14 +149,18 @@ impl PcgSolver {
     }
 
     /// K @ v (without the ridge term).
-    fn matvec(&self, engine: &Engine, problem: &KrrProblem, v: &[f64]) -> anyhow::Result<Vec<f64>> {
+    fn matvec(
+        &self,
+        backend: &dyn Backend,
+        problem: &KrrProblem,
+        v: &[f64],
+    ) -> anyhow::Result<Vec<f64>> {
         let (n, d) = (problem.n(), problem.d());
         if self.cfg.f64_matvec {
             let idx: Vec<usize> = (0..n).collect();
             Ok(kernels::rows_matvec(problem.kernel, &problem.train.x, n, d, &idx, v, problem.sigma))
         } else {
-            runtime_ops::kernel_matvec(
-                engine,
+            backend.kernel_matvec(
                 problem.kernel,
                 &problem.train.x,
                 n,
@@ -190,13 +194,13 @@ impl Solver for PcgSolver {
                 PcgPrecond::None => "plain",
             },
             self.cfg.rank,
-            if self.cfg.f64_matvec { "f64" } else { "f32" }
+            if self.cfg.f64_matvec { "f64" } else { "backend" }
         )
     }
 
     fn run(
         &mut self,
-        engine: &Engine,
+        backend: &dyn Backend,
         problem: &KrrProblem,
         budget: &Budget,
     ) -> anyhow::Result<SolveReport> {
@@ -207,10 +211,10 @@ impl Solver for PcgSolver {
         // --- preconditioner setup (counted against the budget) ----------
         let precond = match self.cfg.precond {
             PcgPrecond::Rpc => {
-                Some(NystromPrecond::new(self.rpc_b_factor(problem)?, lam.max(1e-10))?)
+                Some(NystromPrecond::new(self.rpc_b_factor(backend, problem)?, lam.max(1e-10))?)
             }
             PcgPrecond::Gaussian => {
-                match self.gaussian_b_factor(engine, problem, budget, &t0)? {
+                match self.gaussian_b_factor(backend, problem, budget, &t0)? {
                     Some(b) => Some(NystromPrecond::new(b, lam.max(1e-10))?),
                     None => {
                         // Setup starved the budget: report zero iterations
@@ -251,7 +255,7 @@ impl Solver for PcgSolver {
         let mut diverged = false;
         let mut iters = 0;
         while !budget.exhausted(iters, t0.elapsed().as_secs_f64()) {
-            let mut ap = self.matvec(engine, problem, &p)?;
+            let mut ap = self.matvec(backend, problem, &p)?;
             for i in 0..n {
                 ap[i] += lam * p[i];
             }
@@ -283,7 +287,7 @@ impl Solver for PcgSolver {
                     break;
                 }
                 let rel = dense::norm(&res) / y_norm;
-                eval_point(engine, problem, &w, iters, t0.elapsed().as_secs_f64(), &mut trace, rel)?;
+                eval_point(backend, problem, &w, iters, t0.elapsed().as_secs_f64(), &mut trace, rel)?;
                 if rel < 1e-12 {
                     break;
                 }

@@ -2,6 +2,7 @@
 //! executing the lowered Pallas/JAX computations, validated against the
 //! pure-rust kernel oracles. Requires `make artifacts` (skips otherwise).
 
+use askotch::backend::{Backend, PjrtBackend};
 use askotch::config::KernelKind;
 use askotch::coordinator::runtime_ops;
 use askotch::kernels;
@@ -16,6 +17,10 @@ fn engine() -> Option<Engine> {
     Some(Engine::from_manifest("artifacts").expect("engine"))
 }
 
+fn backend() -> Option<PjrtBackend> {
+    engine().map(PjrtBackend::new)
+}
+
 fn rand_slab(n: usize, d: usize, seed: u64) -> Vec<f64> {
     let mut rng = Rng::new(seed);
     (0..n * d).map(|_| rng.normal()).collect()
@@ -23,7 +28,7 @@ fn rand_slab(n: usize, d: usize, seed: u64) -> Vec<f64> {
 
 #[test]
 fn kmv_artifact_matches_rust_oracle_all_kernels() {
-    let Some(engine) = engine() else { return };
+    let Some(backend) = backend() else { return };
     for (kind, d) in [
         (KernelKind::Rbf, 9),
         (KernelKind::Laplacian, 64),
@@ -34,8 +39,8 @@ fn kmv_artifact_matches_rust_oracle_all_kernels() {
         let x2 = rand_slab(n2, d, 2);
         let v: Vec<f64> = rand_slab(n2, 1, 3);
         let sigma = 1.7;
-        let got = runtime_ops::kernel_matvec(&engine, kind, &x1, n1, &x2, n2, d, &v, sigma)
-            .expect("kmv");
+        let got =
+            backend.kernel_matvec(kind, &x1, n1, &x2, n2, d, &v, sigma).expect("kmv");
         let km = kernels::matrix(kind, &x1, n1, &x2, n2, d, sigma);
         let want = km.matvec(&v);
         let denom: f64 = want.iter().map(|x| x.abs()).fold(1e-9, f64::max);
@@ -51,15 +56,14 @@ fn kmv_artifact_matches_rust_oracle_all_kernels() {
 
 #[test]
 fn padding_is_exact_not_approximate() {
-    let Some(engine) = engine() else { return };
+    let Some(backend) = backend() else { return };
     // A logical shape served through zero padding must match the direct
     // oracle exactly (up to f32 roundoff) — padding is not approximate.
     let (n1, d) = (37, 5);
     let x1 = rand_slab(n1, d, 4);
     let v: Vec<f64> = rand_slab(200, 1, 5);
     let x2 = rand_slab(200, d, 6);
-    let a = runtime_ops::kernel_matvec(&engine, KernelKind::Rbf, &x1, n1, &x2, 200, d, &v, 1.0)
-        .unwrap();
+    let a = backend.kernel_matvec(KernelKind::Rbf, &x1, n1, &x2, 200, d, &v, 1.0).unwrap();
     let km = kernels::matrix(KernelKind::Rbf, &x1, n1, &x2, 200, d, 1.0);
     let want = km.matvec(&v);
     for (g, w) in a.iter().zip(&want) {
@@ -69,13 +73,15 @@ fn padding_is_exact_not_approximate() {
 
 #[test]
 fn predict_tiles_consistently() {
-    let Some(engine) = engine() else { return };
-    let (n, d, ne) = (300, 9, 700); // ne > 512 forces multiple tiles
+    let Some(backend) = backend() else { return };
+    // ne past the largest manifest batch shape forces multiple tiles
+    let (n, d) = (300, 9);
+    let ne = 2 * backend.predict_tile(KernelKind::Rbf, n, d) + 77;
     let x = rand_slab(n, d, 7);
     let w: Vec<f64> = rand_slab(n, 1, 8);
     let xe = rand_slab(ne, d, 9);
     let got =
-        runtime_ops::predict(&engine, KernelKind::Rbf, &x, n, d, &w, &xe, ne, 1.3).unwrap();
+        runtime_ops::predict(&backend, KernelKind::Rbf, &x, n, d, &w, &xe, ne, 1.3).unwrap();
     assert_eq!(got.len(), ne);
     let km = kernels::matrix(KernelKind::Rbf, &xe, ne, &x, n, d, 1.3);
     let want = km.matvec(&w);
@@ -86,7 +92,7 @@ fn predict_tiles_consistently() {
 
 #[test]
 fn relative_residual_zero_at_exact_solution() {
-    let Some(engine) = engine() else { return };
+    let Some(backend) = backend() else { return };
     use askotch::linalg::Chol;
     let (n, d) = (120, 9);
     let x = rand_slab(n, d, 10);
@@ -97,7 +103,7 @@ fn relative_residual_zero_at_exact_solution() {
     let y: Vec<f64> = rand_slab(n, 1, 11);
     let w = Chol::new(&k, 0.0).unwrap().solve(&y);
     let res = runtime_ops::relative_residual(
-        &engine,
+        &backend,
         KernelKind::Rbf,
         &x,
         n,

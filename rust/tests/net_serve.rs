@@ -3,8 +3,9 @@
 //! model trained on synthetic data.
 //!
 //! Runs without AOT artifacts: training is an exact host Cholesky solve
-//! and serving goes through `server::HostPredictor` (the same batching
-//! loop the engine path uses — only the `Predictor` differs).
+//! and serving goes through `server::BackendPredictor` over the
+//! parallel `HostBackend` (the same batching loop the artifact path
+//! uses — only the backend differs).
 
 use askotch::data::synthetic;
 use askotch::json;
@@ -13,7 +14,8 @@ use askotch::kernels;
 use askotch::linalg::Chol;
 use askotch::net::wire::PredictRequest;
 use askotch::net::{http, NetConfig, Server};
-use askotch::server::{serve_predictor, HostPredictor, ModelSnapshot, Request, ServerConfig};
+use askotch::backend::HostBackend;
+use askotch::server::{serve_predictor, BackendPredictor, ModelSnapshot, Request, ServerConfig};
 use std::io::{BufReader, Write};
 use std::net::{SocketAddr, TcpStream};
 use std::sync::mpsc;
@@ -70,8 +72,9 @@ fn start_stack(
     let server = Server::start(&cfg, tx).expect("bind");
     let live = server.metrics().clone();
     let batcher = std::thread::spawn(move || {
+        let backend = HostBackend::auto_threads();
         serve_predictor(
-            &HostPredictor { model },
+            &BackendPredictor { backend: &backend, model: &model },
             rx,
             &ServerConfig::default(),
             Some(live.batcher()),

@@ -2,6 +2,7 @@
 //! mini-proptest framework (`askotch::testing`) — the offline stand-in
 //! for the `proptest` crate.
 
+use askotch::backend::{Backend, HostBackend};
 use askotch::config::{ExperimentConfig, KernelKind};
 use askotch::data::{csv, preprocess, synthetic};
 use askotch::kernels;
@@ -122,6 +123,89 @@ fn prop_manifest_padded_lookup_is_sound_and_minimal() {
                     );
                 }
             }
+        }
+        Ok(())
+    });
+}
+
+const ALL_KERNELS: [KernelKind; 3] =
+    [KernelKind::Rbf, KernelKind::Laplacian, KernelKind::Matern52];
+
+/// Blocked + parallel host kernel assembly must match the scalar
+/// reference entry-for-entry, across all kernels, odd shapes (n not
+/// divisible by the tile), and any thread count.
+#[test]
+fn prop_host_kernel_assembly_matches_scalar_reference() {
+    check("host assembly", 60, |g| {
+        let n = g.usize_in(1, 70);
+        let d = g.usize_in(1, 6);
+        let sigma = g.f64_in(0.4, 3.0);
+        let kind = *g.choice(&ALL_KERNELS);
+        let threads = g.usize_in(1, 4);
+        let tile = g.usize_in(1, 17); // deliberately odd vs n
+        let mut rng = askotch::util::Rng::new(g.rng().next_u64());
+        let x: Vec<f64> = (0..n * d).map(|_| rng.normal()).collect();
+        let backend = HostBackend::new(threads).with_assembly_tile(tile);
+
+        // symmetric block over a shuffled subset
+        let take = g.usize_in(1, n);
+        let mut idx: Vec<usize> = (0..n).collect();
+        rng.shuffle(&mut idx);
+        idx.truncate(take);
+        let got = backend.kernel_block(kind, &x, d, &idx, sigma);
+        let want = kernels::block(kind, &x, d, &idx, sigma);
+        prop_assert!(
+            got.max_abs_diff(&want) < 1e-12,
+            "{kind:?} block diff {} (n={take}, tile={tile}, threads={threads})",
+            got.max_abs_diff(&want)
+        );
+
+        // dense cross matrix
+        let n2 = g.usize_in(1, 40);
+        let x2: Vec<f64> = (0..n2 * d).map(|_| rng.normal()).collect();
+        let got = backend.kernel_matrix(kind, &x, n, &x2, n2, d, sigma);
+        let want = kernels::matrix(kind, &x, n, &x2, n2, d, sigma);
+        prop_assert!(
+            got.max_abs_diff(&want) < 1e-12,
+            "{kind:?} matrix diff {}",
+            got.max_abs_diff(&want)
+        );
+        Ok(())
+    });
+}
+
+/// The parallel panel matvec and the backend-tiled predict must match
+/// the scalar reference within 1e-12 for every kernel and odd shape.
+#[test]
+fn prop_host_tiled_matvec_and_predict_match_reference() {
+    check("host matvec", 60, |g| {
+        let n1 = g.usize_in(1, 50);
+        let n2 = g.usize_in(1, 90);
+        let d = g.usize_in(1, 6);
+        let sigma = g.f64_in(0.4, 3.0);
+        let kind = *g.choice(&ALL_KERNELS);
+        let threads = g.usize_in(1, 4);
+        let mut rng = askotch::util::Rng::new(g.rng().next_u64());
+        let x1: Vec<f64> = (0..n1 * d).map(|_| rng.normal()).collect();
+        let x2: Vec<f64> = (0..n2 * d).map(|_| rng.normal()).collect();
+        let v: Vec<f64> = (0..n2).map(|_| rng.normal()).collect();
+        let backend = HostBackend::new(threads).with_predict_tile(g.usize_in(1, 13));
+
+        let want = kernels::matrix(kind, &x1, n1, &x2, n2, d, sigma).matvec(&v);
+        let got = backend
+            .kernel_matvec(kind, &x1, n1, &x2, n2, d, &v, sigma)
+            .map_err(|e| e.to_string())?;
+        for (a, b) in got.iter().zip(&want) {
+            prop_assert!((a - b).abs() < 1e-12, "{kind:?} matvec {a} vs {b}");
+        }
+
+        // predict tiles over eval rows; tile deliberately not a divisor
+        let pred = backend
+            .predict(kind, &x2, n2, d, &v, &x1, n1, sigma)
+            .map_err(|e| e.to_string())?;
+        prop_assert!(pred.len() == n1, "predict len {}", pred.len());
+        for (a, b) in pred.iter().zip(&want) {
+            prop_assert!((a - b).abs() < 1e-12, "{kind:?} predict {a} vs {b}");
         }
         Ok(())
     });

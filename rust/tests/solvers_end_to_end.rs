@@ -1,7 +1,10 @@
-//! End-to-end solver tests: every solver on small synthetic problems,
-//! including agreement with the exact Cholesky solution and the batched
-//! prediction server. Requires `make artifacts` (skips otherwise).
+//! End-to-end solver tests over the PJRT artifact backend: every solver
+//! on small synthetic problems, including agreement with the exact
+//! Cholesky solution and the batched prediction server. Requires
+//! `make artifacts` (skips otherwise); the artifact-free twin of this
+//! suite is `rust/tests/host_backend_e2e.rs`.
 
+use askotch::backend::PjrtBackend;
 use askotch::config::{BandwidthSpec, KernelKind, RhoMode, SamplingScheme};
 use askotch::coordinator::{runtime_ops, Budget, KrrProblem};
 use askotch::data::{synthetic, TaskKind};
@@ -13,12 +16,12 @@ use askotch::solvers::falkon::{FalkonConfig, FalkonSolver};
 use askotch::solvers::pcg::{PcgConfig, PcgSolver};
 use askotch::solvers::Solver;
 
-fn engine() -> Option<Engine> {
+fn engine() -> Option<PjrtBackend> {
     if !std::path::Path::new("artifacts/manifest.json").exists() {
         eprintln!("SKIP: artifacts/ missing — run `make artifacts`");
         return None;
     }
-    Some(Engine::from_manifest("artifacts").expect("engine"))
+    Some(PjrtBackend::new(Engine::from_manifest("artifacts").expect("engine")))
 }
 
 fn taxi_problem(n: usize) -> KrrProblem {
