@@ -36,7 +36,10 @@ fn main() -> anyhow::Result<()> {
 
     let mut falkon = FalkonSolver::new(FalkonConfig { m: 256, seed: 0 });
     let f = falkon.run(backend, &problem, &Budget::iterations(100))?;
-    println!("falkon:   accuracy {:.4} in {:.2}s (m=256 inducing points)", f.final_metric, f.wall_secs);
+    println!(
+        "falkon:   accuracy {:.4} in {:.2}s (m=256 inducing points)",
+        f.final_metric, f.wall_secs
+    );
 
     let mut exact = CholeskySolver::new();
     let e = exact.run(backend, &problem, &Budget::iterations(1))?;

@@ -59,7 +59,9 @@ fn main() -> anyhow::Result<()> {
             let rate1 = (finite[mid].1 - finite[0].1) / (finite[mid].0 - finite[0].0);
             let rate2 = (finite[finite.len() - 1].1 - finite[mid].1)
                 / (finite[finite.len() - 1].0 - finite[mid].0);
-            println!("log-slope first half {rate1:.2e}, second half {rate2:.2e} (linear => similar)");
+            println!(
+                "log-slope first half {rate1:.2e}, second half {rate2:.2e} (linear => similar)"
+            );
         }
     }
     Ok(())

@@ -14,7 +14,9 @@
 //! wall-clock of a 48 GB A6000 (see EXPERIMENTS.md).
 
 use askotch::backend::{AnyBackend, Backend, HostBackend};
-use askotch::config::{BandwidthSpec, ExperimentConfig, KernelKind, RhoMode, SamplingScheme, SolverKind};
+use askotch::config::{
+    BandwidthSpec, ExperimentConfig, KernelKind, RhoMode, SamplingScheme, SolverKind,
+};
 use askotch::coordinator::{Budget, Coordinator, KrrProblem, SolveReport};
 use askotch::data::{synthetic, Dataset, TaskKind};
 use askotch::kernels;
@@ -186,7 +188,12 @@ fn test_rmse(backend: &dyn Backend, p: &KrrProblem, w: &[f64]) -> anyhow::Result
     Ok(metrics::rmse(&pred, &p.test.y))
 }
 
-fn falkon_test_rmse(backend: &dyn Backend, p: &KrrProblem, m: usize, w: &[f64]) -> anyhow::Result<f64> {
+fn falkon_test_rmse(
+    backend: &dyn Backend,
+    p: &KrrProblem,
+    m: usize,
+    w: &[f64],
+) -> anyhow::Result<f64> {
     let mut rng = askotch::util::Rng::new(0u64 ^ 0xFA1C);
     let centers = rng.sample_distinct(p.n(), m.min(p.n()));
     let mut xm = Vec::with_capacity(centers.len() * p.d());
@@ -420,7 +427,7 @@ fn fig2_to_8_testbed(backend: &dyn Backend, scale: usize) -> anyhow::Result<Json
     let task_names: std::collections::BTreeSet<_> =
         all.iter().map(|(n, _, _, _)| n.clone()).collect();
     let mut prof_table =
-        fmt::Table::new(&["solver", "classif solved", "regr solved", "diverged", "mean t-to-solve"]);
+        fmt::Table::new(&["solver", "classif solved", "regr solved", "diverged", "t-to-solve"]);
     let mut prof_json = Vec::new();
     for (kind, _) in solvers {
         let sname = kind.name();
@@ -543,12 +550,24 @@ fn fig10_11_ablations(backend: &dyn Backend, _scale: usize) -> anyhow::Result<Js
             ("askotch(nystrom,damped,unif)", true, false, RhoMode::Damped, SamplingScheme::Uniform),
             ("skotch(nystrom,damped,unif)", false, false, RhoMode::Damped, SamplingScheme::Uniform),
             ("askotch(identity)", true, true, RhoMode::Damped, SamplingScheme::Uniform),
-            ("askotch(nystrom,reg,unif)", true, false, RhoMode::Regularization, SamplingScheme::Uniform),
+            (
+                "askotch(nystrom,reg,unif)",
+                true,
+                false,
+                RhoMode::Regularization,
+                SamplingScheme::Uniform,
+            ),
             ("askotch(nystrom,damped,arls)", true, false, RhoMode::Damped, SamplingScheme::Arls),
         ];
         for (label, accel, identity, rho, sampling) in variants {
             let mut solver = AskotchSolver::new(
-                AskotchConfig { rank: 50, rho, sampling, track_residual: true, ..Default::default() },
+                AskotchConfig {
+                    rank: 50,
+                    rho,
+                    sampling,
+                    track_residual: true,
+                    ..Default::default()
+                },
                 accel,
             );
             solver.identity = identity;

@@ -142,7 +142,7 @@ impl HostBackend {
     }
 
     /// Deterministic parallel standard-normal slab: one RNG stream per
-    /// [`RNG_CHUNK`]-element chunk, streams dealt round-robin to the
+    /// `RNG_CHUNK`-element chunk, streams dealt round-robin to the
     /// workers. Identical output for any thread count.
     pub fn par_normal_slab(&self, seed: u64, len: usize) -> Vec<f64> {
         let mut data = vec![0.0f64; len];

@@ -166,6 +166,119 @@ impl SolverKind {
     pub fn is_full_krr(self) -> bool {
         !matches!(self, SolverKind::Falkon)
     }
+
+    /// One representative per solver family the paper compares on the
+    /// 23-task testbed: ASkotch plus the four baselines (the testbed
+    /// runner's default solver set).
+    pub fn families() -> &'static [SolverKind] {
+        &[
+            SolverKind::Askotch,
+            SolverKind::Pcg,
+            SolverKind::Falkon,
+            SolverKind::EigenPro,
+            SolverKind::Cholesky,
+        ]
+    }
+}
+
+/// Row-count scale for the 23-task testbed (`askotch testbed --scale`).
+///
+/// The synthetic suite is paper-shaped at factor 1.0 (2-4k rows per
+/// task); smaller factors shrink every task proportionally so the whole
+/// suite stays laptop/CI friendly. See
+/// [`crate::data::synthetic::testbed_scaled`].
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum TestbedScale {
+    /// ~1/16 of the base row counts — seconds per task; the CI smoke
+    /// setting.
+    Smoke,
+    /// ~1/4 of the base row counts — minutes for the whole suite on a
+    /// multi-core host; the acceptance-gate default.
+    Small,
+    /// The full paper-shaped row counts (factor 1.0).
+    Full,
+    /// Explicit multiplier on the base row counts.
+    Factor(f64),
+}
+
+impl TestbedScale {
+    /// The row multiplier this scale applies to the suite's base counts.
+    pub fn row_factor(self) -> f64 {
+        match self {
+            TestbedScale::Smoke => 1.0 / 16.0,
+            TestbedScale::Small => 0.25,
+            TestbedScale::Full => 1.0,
+            TestbedScale::Factor(f) => f,
+        }
+    }
+
+    pub fn name(self) -> String {
+        match self {
+            TestbedScale::Smoke => "smoke".into(),
+            TestbedScale::Small => "small".into(),
+            TestbedScale::Full => "full".into(),
+            TestbedScale::Factor(f) => format!("{f}"),
+        }
+    }
+
+    /// Parse `smoke|small|full` or a positive numeric factor.
+    pub fn parse(s: &str) -> anyhow::Result<TestbedScale> {
+        match s {
+            "smoke" => Ok(TestbedScale::Smoke),
+            "small" => Ok(TestbedScale::Small),
+            "full" => Ok(TestbedScale::Full),
+            other => match other.parse::<f64>() {
+                Ok(f) if f > 0.0 && f.is_finite() => Ok(TestbedScale::Factor(f)),
+                _ => anyhow::bail!("bad testbed scale {s:?} (smoke|small|full|<factor>)"),
+            },
+        }
+    }
+}
+
+/// Per-solver-family budgets for one testbed run.
+///
+/// The solver families burn their budgets very differently — the SAP
+/// methods take hundreds of O(nb) iterations, the Krylov methods tens of
+/// O(n^2)/O(nm) ones, EigenPro sits in between — so a single iteration
+/// cap would either starve ASkotch or let PCG spin long past
+/// convergence. One wall-clock cap applies to every run regardless of
+/// family (the paper's per-task time budget, SS6.1).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct BudgetSettings {
+    /// Wall-clock cap per (task, solver) run, in seconds.
+    pub time_limit_secs: f64,
+    /// Iteration cap for the SAP methods (ASkotch/Skotch + ablations).
+    pub sap_iters: usize,
+    /// Iteration cap for the Krylov methods (PCG, Falkon).
+    pub cg_iters: usize,
+    /// Iteration cap for EigenPro's preconditioned SGD.
+    pub sgd_iters: usize,
+}
+
+impl Default for BudgetSettings {
+    fn default() -> Self {
+        BudgetSettings { time_limit_secs: 8.0, sap_iters: 600, cg_iters: 60, sgd_iters: 150 }
+    }
+}
+
+impl BudgetSettings {
+    /// Iteration cap for one solver family (Cholesky is direct: 1).
+    pub fn max_iters(&self, kind: SolverKind) -> usize {
+        match kind {
+            SolverKind::Pcg | SolverKind::Falkon => self.cg_iters,
+            SolverKind::EigenPro => self.sgd_iters,
+            SolverKind::Cholesky => 1,
+            _ => self.sap_iters,
+        }
+    }
+
+    /// The [`crate::coordinator::Budget`] for one solver family.
+    pub fn budget(&self, kind: SolverKind) -> crate::coordinator::Budget {
+        crate::coordinator::Budget {
+            max_iters: self.max_iters(kind),
+            time_limit_secs: self.time_limit_secs,
+        }
+    }
 }
 
 /// Block coordinate sampling distribution (paper SS3.1).
@@ -271,7 +384,8 @@ impl ExperimentConfig {
             c.d = d.usize()?;
         }
         if let Some(d) = root.opt_field("kernel")? {
-            c.kernel = KernelKind::parse(d.str()?).map_err(|e| anyhow::anyhow!("{}: {e}", d.path()))?;
+            c.kernel =
+                KernelKind::parse(d.str()?).map_err(|e| anyhow::anyhow!("{}: {e}", d.path()))?;
         }
         if let Some(d) = root.opt_field("bandwidth")? {
             c.bandwidth =
@@ -281,7 +395,8 @@ impl ExperimentConfig {
             c.lam_unscaled = d.f64()?;
         }
         if let Some(d) = root.opt_field("solver")? {
-            c.solver = SolverKind::parse(d.str()?).map_err(|e| anyhow::anyhow!("{}: {e}", d.path()))?;
+            c.solver =
+                SolverKind::parse(d.str()?).map_err(|e| anyhow::anyhow!("{}: {e}", d.path()))?;
         }
         if let Some(d) = root.opt_field("sampling")? {
             c.sampling =
@@ -393,5 +508,32 @@ mod tests {
     fn falkon_is_not_full_krr() {
         assert!(!SolverKind::Falkon.is_full_krr());
         assert!(SolverKind::Askotch.is_full_krr());
+    }
+
+    #[test]
+    fn testbed_scale_parse_and_factors() {
+        assert_eq!(TestbedScale::parse("small").unwrap(), TestbedScale::Small);
+        assert_eq!(TestbedScale::parse("0.5").unwrap(), TestbedScale::Factor(0.5));
+        assert!(TestbedScale::parse("-1").is_err());
+        assert!(TestbedScale::parse("big").is_err());
+        assert!(TestbedScale::Smoke.row_factor() < TestbedScale::Small.row_factor());
+        assert_eq!(TestbedScale::Full.row_factor(), 1.0);
+        for s in [TestbedScale::Smoke, TestbedScale::Small, TestbedScale::Full] {
+            assert_eq!(TestbedScale::parse(&s.name()).unwrap(), s);
+        }
+    }
+
+    #[test]
+    fn budget_settings_per_family() {
+        let b = BudgetSettings::default();
+        assert_eq!(b.max_iters(SolverKind::Pcg), b.cg_iters);
+        assert_eq!(b.max_iters(SolverKind::Falkon), b.cg_iters);
+        assert_eq!(b.max_iters(SolverKind::EigenPro), b.sgd_iters);
+        assert_eq!(b.max_iters(SolverKind::Cholesky), 1);
+        assert_eq!(b.max_iters(SolverKind::Askotch), b.sap_iters);
+        assert_eq!(b.max_iters(SolverKind::SkotchIdentity), b.sap_iters);
+        let budget = b.budget(SolverKind::Askotch);
+        assert_eq!(budget.max_iters, b.sap_iters);
+        assert_eq!(budget.time_limit_secs, b.time_limit_secs);
     }
 }

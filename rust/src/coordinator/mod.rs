@@ -33,7 +33,9 @@ impl<'b> Coordinator<'b> {
             "vision_like" => synthetic::vision_like("vision_like", cfg.n, cfg.d, 10, cfg.seed),
             "physics_like" => synthetic::physics_like("physics_like", cfg.n, cfg.d, 0.1, cfg.seed),
             "tabular_like" => synthetic::tabular_like("tabular_like", cfg.n, cfg.d, cfg.seed),
-            "molecule_like" => synthetic::molecule_like("molecule_like", cfg.n, (cfg.d / 3).max(2), cfg.seed),
+            "molecule_like" => {
+                synthetic::molecule_like("molecule_like", cfg.n, (cfg.d / 3).max(2), cfg.seed)
+            }
             "social_like" => synthetic::social_like("social_like", cfg.n, cfg.d, cfg.seed),
             path if path.ends_with(".csv") => {
                 let mut ds = crate::data::csv::load(path, -1, true)?;
@@ -70,9 +72,20 @@ impl<'b> Coordinator<'b> {
 
     /// Run one experiment end to end.
     pub fn run(&self, cfg: &ExperimentConfig) -> anyhow::Result<SolveReport> {
+        self.run_observed(cfg, &mut solvers::NullObserver)
+    }
+
+    /// Run one experiment end to end, streaming solve progress into
+    /// `obs` (the testbed runner's entry point; see
+    /// [`crate::solvers::Observer`]).
+    pub fn run_observed(
+        &self,
+        cfg: &ExperimentConfig,
+        obs: &mut dyn solvers::Observer,
+    ) -> anyhow::Result<SolveReport> {
         let problem = self.problem(cfg)?;
         let mut solver = self.solver(cfg);
         let budget = Budget { max_iters: cfg.max_iters, time_limit_secs: cfg.time_limit_secs };
-        solver.run(self.backend, &problem, &budget)
+        solver.run_observed(self.backend, &problem, &budget, obs)
     }
 }

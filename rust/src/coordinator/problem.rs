@@ -53,7 +53,15 @@ impl KrrProblem {
         };
         anyhow::ensure!(sigma > 0.0, "bandwidth must be positive");
         let lam = (train.n as f64) * lam_unscaled;
-        Ok(KrrProblem { name: train.name.replace(":train", ""), task: train.task, train, test, kernel, sigma, lam })
+        Ok(KrrProblem {
+            name: train.name.replace(":train", ""),
+            task: train.task,
+            train,
+            test,
+            kernel,
+            sigma,
+            lam,
+        })
     }
 
     /// Convenience for tests/examples that already have a split.

@@ -113,4 +113,59 @@ mod tests {
         assert!(parse("1,x,3\n", -1, false, "t").is_err());
         assert!(parse("", -1, false, "t").is_err());
     }
+
+    #[test]
+    fn ragged_error_names_the_line() {
+        let e = parse("1,2,3\n4,5\n", -1, false, "t").unwrap_err();
+        assert!(e.to_string().contains("line 2"), "got: {e}");
+        assert!(e.to_string().contains("ragged"), "got: {e}");
+        // a *wider* later row is just as ragged as a narrower one
+        assert!(parse("1,2,3\n4,5,6,7\n", -1, false, "t").is_err());
+    }
+
+    #[test]
+    fn missing_target_column_is_an_error() {
+        // positive index past the row width
+        let e = parse("1,2,3\n", 5, false, "t").unwrap_err();
+        assert!(e.to_string().contains("target col"), "got: {e}");
+        // negative index reaching before the first column
+        assert!(parse("1,2,3\n", -4, false, "t").is_err());
+        // the last valid negative index still works
+        let ds = parse("7,1,2\n8,3,4\n", -3, false, "t").unwrap();
+        assert_eq!(ds.y, vec![7.0, 8.0]);
+    }
+
+    #[test]
+    fn header_is_skipped_only_when_declared() {
+        // declared header: non-numeric first line is fine
+        let ds = parse("a,b,label\n1,2,3.5\n", -1, true, "t").unwrap();
+        assert_eq!(ds.n, 1);
+        // undeclared header: the same text must fail on the bad number
+        let e = parse("a,b,label\n1,2,3.5\n", -1, false, "t").unwrap_err();
+        assert!(e.to_string().contains("line 1"), "got: {e}");
+        // declared header over an otherwise empty file = empty csv
+        assert!(parse("a,b,label\n", -1, true, "t").is_err());
+    }
+
+    #[test]
+    fn blank_lines_and_whitespace_are_tolerated() {
+        let ds = parse("\n 1 , 2 , 3.5 \n\n4,5,6.5\n\n", -1, false, "t").unwrap();
+        assert_eq!(ds.n, 2);
+        assert_eq!(ds.x, vec![1.0, 2.0, 4.0, 5.0]);
+        assert_eq!(ds.y, vec![3.5, 6.5]);
+    }
+
+    #[test]
+    fn single_feature_and_mixed_label_edge_cases() {
+        // exactly two columns: one feature + target
+        let ds = parse("1.5,0\n2.5,1\n", -1, false, "t").unwrap();
+        assert_eq!(ds.d, 1);
+        assert_eq!(ds.task, TaskKind::Classification);
+        // one non {-1,0,1} value flips the whole file to regression
+        let ds = parse("1.5,0\n2.5,2\n", -1, false, "t").unwrap();
+        assert_eq!(ds.task, TaskKind::Regression);
+        assert_eq!(ds.y, vec![0.0, 2.0]);
+        // a lone column can never satisfy features + target
+        assert!(parse("1.5\n", -1, false, "t").is_err());
+    }
 }

@@ -17,6 +17,24 @@ pub enum TaskKind {
     Regression,
 }
 
+impl TaskKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            TaskKind::Classification => "classification",
+            TaskKind::Regression => "regression",
+        }
+    }
+
+    /// Display name of the task's metric (`crate::metrics::task_metric`):
+    /// accuracy is higher-is-better, MAE lower-is-better.
+    pub fn metric_name(self) -> &'static str {
+        match self {
+            TaskKind::Classification => "accuracy",
+            TaskKind::Regression => "MAE",
+        }
+    }
+}
+
 /// An in-memory dataset, row-major f64 features.
 #[derive(Debug, Clone)]
 pub struct Dataset {
@@ -56,7 +74,9 @@ impl Dataset {
 }
 
 /// The 23-task synthetic testbed standing in for the paper's SS6.1 suite.
-/// Grouped like Figs. 3-8 (domain -> tasks).
+/// Grouped like Figs. 3-8 (domain -> tasks). See
+/// [`synthetic::testbed_scaled`] for fractional row scaling (the
+/// testbed runner's `--scale smoke|small`).
 pub fn testbed(scale: usize) -> Vec<Dataset> {
     synthetic::testbed(scale)
 }

@@ -146,6 +146,67 @@ mod tests {
     }
 
     #[test]
+    fn constant_column_next_to_varying_column() {
+        // column 0 constant (centered to ~0, no blow-up from the variance
+        // floor), column 1 standardized normally — the standardization
+        // must not mix columns.
+        let mut x = vec![5.0, 1.0, 5.0, 3.0, 5.0, 5.0, 5.0, 7.0];
+        standardize_features(&mut x, 4, 2);
+        for i in 0..4 {
+            assert!(x[i * 2].abs() < 1e-9, "constant col: {}", x[i * 2]);
+            assert!(x[i * 2 + 1].is_finite());
+        }
+        let mean1: f64 = (0..4).map(|i| x[i * 2 + 1]).sum::<f64>() / 4.0;
+        let var1: f64 = (0..4).map(|i| x[i * 2 + 1].powi(2)).sum::<f64>() / 4.0;
+        assert!(mean1.abs() < 1e-10);
+        assert!((var1 - 1.0).abs() < 1e-8);
+    }
+
+    #[test]
+    fn standardize_and_center_tolerate_empty_input() {
+        let mut x: Vec<f64> = vec![];
+        standardize_features(&mut x, 0, 3);
+        assert!(x.is_empty());
+        let mut y: Vec<f64> = vec![];
+        center(&mut y);
+        assert!(y.is_empty());
+    }
+
+    #[test]
+    fn split_extremes() {
+        let ds = toy(50, 2, 3);
+        // test_frac = 0.0: everything lands in train
+        let (tr, te) = split(&ds, 0.0, 1);
+        assert_eq!((tr.n, te.n), (50, 0));
+        assert_eq!(tr.x.len(), 50 * 2);
+        // names carry the split suffix for tracing
+        assert!(tr.name.ends_with(":train"));
+        assert!(te.name.ends_with(":test"));
+        // different seeds shuffle differently
+        let (a, _) = split(&ds, 0.2, 1);
+        let (b, _) = split(&ds, 0.2, 2);
+        assert_ne!(a.x, b.x);
+    }
+
+    #[test]
+    fn median_bandwidth_l1_exceeds_l2() {
+        // On multi-dimensional data the L1 (Laplacian) median distance
+        // dominates the L2 one; both must be positive.
+        let ds = toy(300, 6, 9);
+        let l2 = median_bandwidth(&ds.x, 300, 6, false, 800, 0);
+        let l1 = median_bandwidth(&ds.x, 300, 6, true, 800, 0);
+        assert!(l2 > 0.0 && l1 > 0.0);
+        assert!(l1 > l2, "l1 {l1} <= l2 {l2}");
+    }
+
+    #[test]
+    fn median_bandwidth_identical_points_hits_floor() {
+        let x = vec![1.0; 20 * 2];
+        let s = median_bandwidth(&x, 20, 2, false, 100, 0);
+        assert_eq!(s, 1e-9);
+    }
+
+    #[test]
     fn center_zeroes_mean() {
         let mut y = vec![1.0, 2.0, 3.0];
         center(&mut y);

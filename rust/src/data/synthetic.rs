@@ -289,21 +289,35 @@ pub fn social_like(name: &str, n: usize, d: usize, seed: u64) -> Dataset {
 /// 13 regression). `scale` multiplies the base row counts (scale=1 keeps
 /// every task CPU-interpret friendly).
 pub fn testbed(scale: usize) -> Vec<Dataset> {
-    let s = scale.max(1);
+    testbed_scaled(scale.max(1) as f64)
+}
+
+/// Minimum rows per testbed task: keeps the 0.8/0.2 split, the SAP block
+/// size (64), and Falkon's inducing set meaningful at smoke scale.
+pub const TESTBED_MIN_ROWS: usize = 128;
+
+/// The 23-task testbed with fractional row scaling: every base row count
+/// is multiplied by `row_factor` and floored at [`TESTBED_MIN_ROWS`].
+/// `row_factor = 1.0` is the paper-shaped suite (2-4k rows per task);
+/// the testbed runner's `--scale small` is 0.25 and `--scale smoke`
+/// 1/16. Feature dimensions, kernels, and seeds are scale-invariant, so
+/// a task keeps its statistical character (and its name) across scales.
+pub fn testbed_scaled(row_factor: f64) -> Vec<Dataset> {
+    let rows = |base: usize| ((base as f64 * row_factor).round() as usize).max(TESTBED_MIN_ROWS);
     let mut tasks = Vec::new();
     // --- classification (10): vision x4, physics x4, tabular x2 ---------
     for (i, name) in ["mnist_like", "fashion_like", "cifar_like", "svhn_like"]
         .iter()
         .enumerate()
     {
-        tasks.push(vision_like(name, 2000 * s, 128, 10, 100 + i as u64));
+        tasks.push(vision_like(name, rows(2000), 128, 10, 100 + i as u64));
     }
-    tasks.push(physics_like("miniboone_like", 2000 * s, 32, 0.08, 200));
-    tasks.push(physics_like("comet_like", 3000 * s, 4, 0.05, 201));
-    tasks.push(physics_like("susy_like", 4000 * s, 18, 0.2, 202));
-    tasks.push(physics_like("higgs_like", 4000 * s, 28, 0.25, 203));
-    tasks.push(tabular_like("covtype_like", 3000 * s, 32, 300));
-    tasks.push(tabular_like("click_like", 3000 * s, 11, 301));
+    tasks.push(physics_like("miniboone_like", rows(2000), 32, 0.08, 200));
+    tasks.push(physics_like("comet_like", rows(3000), 4, 0.05, 201));
+    tasks.push(physics_like("susy_like", rows(4000), 18, 0.2, 202));
+    tasks.push(physics_like("higgs_like", rows(4000), 28, 0.25, 203));
+    tasks.push(tabular_like("covtype_like", rows(3000), 32, 300));
+    tasks.push(tabular_like("click_like", rows(3000), 11, 301));
     // --- regression (13): molecules x8, qm9, music x2, social, taxi -----
     for (i, name) in [
         "aspirin_like",
@@ -318,17 +332,17 @@ pub fn testbed(scale: usize) -> Vec<Dataset> {
     .iter()
     .enumerate()
     {
-        tasks.push(molecule_like(name, 2000 * s, 7 + (i % 4) * 3, 400 + i as u64));
+        tasks.push(molecule_like(name, rows(2000), 7 + (i % 4) * 3, 400 + i as u64));
     }
-    let mut qm9 = social_like("qm9_like", 3000 * s, 64, 500);
+    let mut qm9 = social_like("qm9_like", rows(3000), 64, 500);
     qm9.kernel = KernelKind::Laplacian;
     qm9.lam_unscaled = 1e-8;
     qm9.name = "qm9_like".into();
     tasks.push(qm9);
-    tasks.push(social_like("yolanda_like", 3000 * s, 64, 501));
-    tasks.push(social_like("msd_like", 3000 * s, 64, 502));
-    tasks.push(social_like("acsincome_like", 3000 * s, 11, 503));
-    tasks.push(taxi_like(4000 * s, 9, 504));
+    tasks.push(social_like("yolanda_like", rows(3000), 64, 501));
+    tasks.push(social_like("msd_like", rows(3000), 64, 502));
+    tasks.push(social_like("acsincome_like", rows(3000), 11, 503));
+    tasks.push(taxi_like(rows(4000), 9, 504));
     tasks
 }
 
@@ -345,6 +359,26 @@ mod tests {
         assert_eq!((ncls, nreg), (10, 13));
         let names: std::collections::HashSet<_> = tb.iter().map(|d| d.name.clone()).collect();
         assert_eq!(names.len(), 23);
+    }
+
+    #[test]
+    fn scaled_testbed_shrinks_rows_but_keeps_tasks() {
+        let small = testbed_scaled(0.25);
+        let full = testbed(1);
+        assert_eq!(small.len(), 23);
+        for (s, f) in small.iter().zip(&full) {
+            assert_eq!(s.name, f.name);
+            assert_eq!(s.task, f.task);
+            assert_eq!(s.d, f.d);
+            assert_eq!(s.kernel, f.kernel);
+            assert!(s.n <= f.n);
+            assert!(s.n >= TESTBED_MIN_ROWS);
+        }
+        // fractional scaling is deterministic too
+        let again = testbed_scaled(0.25);
+        assert_eq!(small[0].x, again[0].x);
+        // the floor engages at smoke scale
+        assert!(testbed_scaled(1.0 / 64.0).iter().all(|t| t.n == TESTBED_MIN_ROWS));
     }
 
     #[test]

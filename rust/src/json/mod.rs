@@ -92,6 +92,28 @@ impl Json {
     pub fn obj(pairs: Vec<(&str, Json)>) -> Json {
         Json::Obj(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
     }
+    /// Insert (or overwrite) a field, turning `Null` into an empty object
+    /// first; any other non-object value panics. Lets builders extend an
+    /// object produced elsewhere without pattern-matching the variant:
+    ///
+    /// ```
+    /// use askotch::json::Json;
+    /// let mut j = Json::obj(vec![("a", Json::num(1.0))]);
+    /// j.set("b", Json::str("x")).set("a", Json::num(2.0));
+    /// assert_eq!(j.to_string(), r#"{"a":2,"b":"x"}"#);
+    /// ```
+    pub fn set(&mut self, key: &str, value: Json) -> &mut Json {
+        if matches!(self, Json::Null) {
+            *self = Json::Obj(BTreeMap::new());
+        }
+        match self {
+            Json::Obj(m) => {
+                m.insert(key.to_string(), value);
+            }
+            other => panic!("Json::set on non-object {}", decode::type_name(other)),
+        }
+        self
+    }
     pub fn num(x: f64) -> Json {
         Json::Num(x)
     }

@@ -4,6 +4,8 @@
 //!   solve       run one solver on one dataset and print the trace
 //!   experiment  run a JSON experiment config (file path argument)
 //!   compare     run several solvers on the same problem, print a table
+//!   testbed     run the paper's 23-task suite across the solver
+//!               families; write JSON records + docs/RESULTS.md
 //!   info        inspect the selected backend (manifest / thread pool)
 //!   serve       train a model and serve it over HTTP (docs/SERVING.md)
 //!   perf        profile the ASkotch hot loop
@@ -18,6 +20,7 @@
 //!   askotch compare --dataset physics_like --n 2048 --iters 100
 //!   askotch solve --backend host --dataset taxi_like --n 4096 --iters 300
 //!   askotch experiment configs/quickstart.json
+//!   askotch testbed --scale small --jobs 4
 //!   askotch serve --addr 0.0.0.0:8080 --config configs/quickstart.json
 //!   askotch info
 
@@ -36,12 +39,13 @@ fn main() -> Result<()> {
         Some("solve") => cmd_solve(&args),
         Some("experiment") => cmd_experiment(&args),
         Some("compare") => cmd_compare(&args),
+        Some("testbed") => cmd_testbed(&args),
         Some("info") => cmd_info(&args),
         Some("serve") => cmd_serve(&args),
         Some("perf") => cmd_perf(&args),
         _ => {
             eprintln!(
-                "usage: askotch <solve|experiment|compare|info|serve|perf> [options]\n\
+                "usage: askotch <solve|experiment|compare|testbed|info|serve|perf> [options]\n\
                  common: --backend auto|host|pjrt (default auto), --host-threads N\n\
                  run `askotch info` to inspect the selected backend"
             );
@@ -79,10 +83,12 @@ fn make_backend(args: &Args, cfg_kind: BackendKind) -> Result<AnyBackend> {
 }
 
 fn config_from_args(args: &Args) -> Result<ExperimentConfig> {
-    let mut cfg = ExperimentConfig::default();
-    cfg.dataset = args.get_or("dataset", "taxi_like");
-    cfg.n = args.get_usize("n", 2048);
-    cfg.d = args.get_usize("d", 9);
+    let mut cfg = ExperimentConfig {
+        dataset: args.get_or("dataset", "taxi_like"),
+        n: args.get_usize("n", 2048),
+        d: args.get_usize("d", 9),
+        ..ExperimentConfig::default()
+    };
     if let Some(k) = args.get("kernel") {
         cfg.kernel = KernelKind::parse(k)?;
     }
@@ -191,6 +197,82 @@ fn cmd_compare(args: &Args) -> Result<()> {
         }
     }
     println!("{}", table.render());
+    Ok(())
+}
+
+/// `askotch testbed [--scale smoke|small|full|<factor>] [--jobs N] ...`
+///
+/// Runs the paper's 23-task suite across the solver families on the
+/// host backend (artifact-free, tasks in parallel), then writes the
+/// JSON run records (`--out` dir) and the Markdown report (`--report`
+/// path, default `docs/RESULTS.md`). `--config file.json` seeds the
+/// same settings from a file; explicit flags win. `--no-json` /
+/// `--no-report` skip the respective outputs; `--solvers a,b,c` narrows
+/// the families; `--filter susy` narrows the tasks.
+fn cmd_testbed(args: &Args) -> Result<()> {
+    use askotch::testbed::{self, TestbedConfig};
+
+    let mut cfg = match args.get("config") {
+        Some(path) => TestbedConfig::from_json(&std::fs::read_to_string(path)?)?,
+        None => TestbedConfig::default(),
+    };
+    if let Some(s) = args.get("scale") {
+        cfg.scale = askotch::config::TestbedScale::parse(s)?;
+    }
+    if let Some(list) = args.get("solvers") {
+        cfg.solvers = list
+            .split(',')
+            .map(|s| SolverKind::parse(s.trim()))
+            .collect::<Result<Vec<_>>>()?;
+    }
+    cfg.rank = args.get_usize("rank", cfg.rank);
+    cfg.jobs = args.get_usize("jobs", cfg.jobs);
+    cfg.job_threads = args.get_usize("job-threads", cfg.job_threads);
+    cfg.seed = args.get_u64("seed", cfg.seed);
+    cfg.budgets.time_limit_secs = args.get_f64("time-limit", cfg.budgets.time_limit_secs);
+    cfg.budgets.sap_iters = args.get_usize("sap-iters", cfg.budgets.sap_iters);
+    cfg.budgets.cg_iters = args.get_usize("cg-iters", cfg.budgets.cg_iters);
+    cfg.budgets.sgd_iters = args.get_usize("sgd-iters", cfg.budgets.sgd_iters);
+    if let Some(f) = args.get("filter") {
+        cfg.filter = f.to_string();
+    }
+    if let Some(dir) = args.get("out") {
+        cfg.out_dir = dir.to_string();
+    }
+    if let Some(path) = args.get("report") {
+        cfg.report_path = path.to_string();
+    }
+    if args.has_flag("no-json") {
+        cfg.out_dir.clear();
+    }
+    if args.has_flag("no-report") {
+        cfg.report_path.clear();
+    }
+    cfg.track_residual = cfg.track_residual || args.has_flag("residual");
+    cfg.echo_evals = cfg.echo_evals || args.has_flag("echo-evals");
+
+    eprintln!(
+        "testbed: scale={} (row factor {}), solvers=[{}], budget {}/run",
+        cfg.scale.name(),
+        cfg.scale.row_factor(),
+        cfg.solvers.iter().map(|s| s.name()).collect::<Vec<_>>().join(","),
+        fmt::duration(cfg.budgets.time_limit_secs),
+    );
+    let outcome = testbed::run(&cfg)?;
+    println!(
+        "\n{} tasks x {} solvers in {} ({} workers x {} threads)",
+        outcome.tasks,
+        cfg.solvers.len(),
+        fmt::duration(outcome.wall_secs),
+        outcome.jobs,
+        outcome.job_threads
+    );
+
+    println!("{}", testbed::report::profile_table(&outcome.records).render());
+
+    for path in testbed::runner::persist(&outcome, &cfg)? {
+        println!("wrote {path}");
+    }
     Ok(())
 }
 

@@ -49,6 +49,20 @@ pub fn better(task: TaskKind, a: f64, b: f64) -> bool {
     }
 }
 
+/// Best (task-direction-aware) metric among `values`, ignoring
+/// non-finite entries; `NaN` when nothing finite was offered. The
+/// testbed's per-task reference point for [`solved`] /
+/// [`Trace::time_to_solve`].
+pub fn best_metric(task: TaskKind, values: impl IntoIterator<Item = f64>) -> f64 {
+    let mut best = f64::NAN;
+    for v in values {
+        if v.is_finite() && (best.is_nan() || better(task, v, best)) {
+            best = v;
+        }
+    }
+    best
+}
+
 /// The paper's "solved" tolerance (SS6.1 / Fig. 2): within 0.001 of best
 /// accuracy, or within 1% relative of best MAE.
 pub fn solved(task: TaskKind, metric: f64, best: f64) -> bool {
@@ -150,6 +164,15 @@ mod tests {
         let tgt = [0.0, 0.0];
         assert!((mae(&pred, &tgt) - 2.0).abs() < 1e-12);
         assert!((rmse(&pred, &tgt) - (5.0f64).sqrt()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn best_metric_follows_task_direction() {
+        let vals = [0.9, f64::NAN, 0.95, 0.8];
+        assert_eq!(best_metric(TaskKind::Classification, vals), 0.95);
+        assert_eq!(best_metric(TaskKind::Regression, vals), 0.8);
+        assert!(best_metric(TaskKind::Regression, [f64::NAN, f64::INFINITY]).is_nan());
+        assert!(best_metric(TaskKind::Classification, []).is_nan());
     }
 
     #[test]

@@ -145,7 +145,13 @@ pub fn read_request<R: BufRead>(
         headers.push((name.to_ascii_lowercase(), value.trim().to_string()));
     }
 
-    let req = HttpRequest { method: method.to_string(), target: target.to_string(), http11, headers, body: Vec::new() };
+    let req = HttpRequest {
+        method: method.to_string(),
+        target: target.to_string(),
+        http11,
+        headers,
+        body: Vec::new(),
+    };
 
     if let Some(te) = req.header("transfer-encoding") {
         return Err(HttpError::NotImplemented(format!(

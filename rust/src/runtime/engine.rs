@@ -34,13 +34,23 @@ impl Engine {
     pub fn from_manifest(dir: impl AsRef<std::path::Path>) -> anyhow::Result<Engine> {
         let manifest = Manifest::load(dir)?;
         let client = PjRtClient::cpu()?;
-        Ok(Engine { client, manifest, cache: RefCell::new(HashMap::new()), stats: RefCell::new(EngineStats::default()) })
+        Ok(Engine {
+            client,
+            manifest,
+            cache: RefCell::new(HashMap::new()),
+            stats: RefCell::new(EngineStats::default()),
+        })
     }
 
     /// Engine over an already-parsed manifest (tests).
     pub fn with_manifest(manifest: Manifest) -> anyhow::Result<Engine> {
         let client = PjRtClient::cpu()?;
-        Ok(Engine { client, manifest, cache: RefCell::new(HashMap::new()), stats: RefCell::new(EngineStats::default()) })
+        Ok(Engine {
+            client,
+            manifest,
+            cache: RefCell::new(HashMap::new()),
+            stats: RefCell::new(EngineStats::default()),
+        })
     }
 
     pub fn manifest(&self) -> &Manifest {

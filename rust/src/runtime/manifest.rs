@@ -41,7 +41,13 @@ impl ArtifactMeta {
     pub fn cache_key(&self) -> String {
         format!(
             "{}:{}:{}:n{}d{}b{}r{}",
-            self.op, self.kernel, self.dtype, self.shapes.n, self.shapes.d, self.shapes.b, self.shapes.r
+            self.op,
+            self.kernel,
+            self.dtype,
+            self.shapes.n,
+            self.shapes.d,
+            self.shapes.b,
+            self.shapes.r
         )
     }
 }
@@ -214,12 +220,10 @@ mod tests {
     #[test]
     fn rank_must_match() {
         let m = manifest();
-        assert!(m
-            .find_padded("askotch_step", "laplacian", "f32", ShapeKey { n: 100, d: 8, b: 64, r: 16 })
-            .is_none());
-        assert!(m
-            .find_padded("askotch_step", "laplacian", "f32", ShapeKey { n: 100, d: 8, b: 64, r: 32 })
-            .is_some());
+        let key16 = ShapeKey { n: 100, d: 8, b: 64, r: 16 };
+        assert!(m.find_padded("askotch_step", "laplacian", "f32", key16).is_none());
+        let key32 = ShapeKey { n: 100, d: 8, b: 64, r: 32 };
+        assert!(m.find_padded("askotch_step", "laplacian", "f32", key32).is_some());
     }
 
     #[test]

@@ -13,7 +13,7 @@ use crate::config::{ExperimentConfig, RhoMode, SamplingScheme};
 use crate::coordinator::{runtime_ops, Budget, KrrProblem, SolveReport};
 use crate::metrics::Trace;
 use crate::sampling::{self, ArlsSampler, BlockSampler, UniformSampler};
-use crate::solvers::{eval_every, eval_point, looks_diverged, Solver};
+use crate::solvers::{eval_every, eval_point, looks_diverged, Observer, Solver};
 use crate::util::Rng;
 use std::time::Instant;
 
@@ -123,11 +123,12 @@ impl Solver for AskotchSolver {
         )
     }
 
-    fn run(
+    fn run_observed(
         &mut self,
         backend: &dyn Backend,
         problem: &KrrProblem,
         budget: &Budget,
+        obs: &mut dyn Observer,
     ) -> anyhow::Result<SolveReport> {
         let (n, d) = (problem.n(), problem.d());
         let opts = SapOptions {
@@ -155,6 +156,7 @@ impl Solver for AskotchSolver {
             let idx = sampler.sample_block(n, b);
             stepper.step(&idx)?;
             iters += 1;
+            obs.on_iter(iters, t0.elapsed().as_secs_f64());
 
             if iters % eval_stride == 0 || budget.exhausted(iters, t0.elapsed().as_secs_f64()) {
                 let w64 = stepper.weights();
@@ -203,6 +205,7 @@ impl Solver for AskotchSolver {
                     t0.elapsed().as_secs_f64(),
                     &mut trace,
                     residual,
+                    obs,
                 )?;
             }
         }

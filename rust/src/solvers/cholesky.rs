@@ -9,7 +9,7 @@ use crate::coordinator::{Budget, KrrProblem, SolveReport};
 use crate::kernels;
 use crate::linalg::{Chol, Mat};
 use crate::metrics::Trace;
-use crate::solvers::{eval_point, Solver};
+use crate::solvers::{eval_point, Observer, Solver};
 use std::time::Instant;
 
 /// Hard cap: beyond this the dense build/factorization is pointless on a
@@ -57,8 +57,13 @@ impl CholeskySolver {
     ) -> anyhow::Result<Vec<f64>> {
         Self::check_cap(problem.n())?;
         let idx: Vec<usize> = (0..problem.n()).collect();
-        let k =
-            backend.kernel_block(problem.kernel, &problem.train.x, problem.d(), &idx, problem.sigma);
+        let k = backend.kernel_block(
+            problem.kernel,
+            &problem.train.x,
+            problem.d(),
+            &idx,
+            problem.sigma,
+        );
         Self::weights_from_kernel(k, problem)
     }
 }
@@ -68,17 +73,19 @@ impl Solver for CholeskySolver {
         "cholesky".into()
     }
 
-    fn run(
+    fn run_observed(
         &mut self,
         backend: &dyn Backend,
         problem: &KrrProblem,
         _budget: &Budget,
+        obs: &mut dyn Observer,
     ) -> anyhow::Result<SolveReport> {
         let t0 = Instant::now();
         let w = Self::solve_weights_on(backend, problem)?;
+        obs.on_iter(1, t0.elapsed().as_secs_f64());
         let mut trace = Trace::default();
-        let metric =
-            eval_point(backend, problem, &w, 1, t0.elapsed().as_secs_f64(), &mut trace, f64::NAN)?;
+        let secs = t0.elapsed().as_secs_f64();
+        let metric = eval_point(backend, problem, &w, 1, secs, &mut trace, f64::NAN, obs)?;
         let n = problem.n();
         Ok(SolveReport {
             solver: self.name(),

@@ -18,7 +18,7 @@ use crate::config::ExperimentConfig;
 use crate::coordinator::{Budget, KrrProblem, SolveReport};
 use crate::linalg::eig;
 use crate::metrics::Trace;
-use crate::solvers::{eval_every, eval_point, looks_diverged, Solver};
+use crate::solvers::{eval_every, eval_point, looks_diverged, Observer, Solver};
 use crate::util::Rng;
 use std::time::Instant;
 
@@ -58,11 +58,12 @@ impl Solver for EigenProSolver {
         format!("eigenpro(s={},q={},bg={})", self.cfg.s, self.cfg.q, self.cfg.batch)
     }
 
-    fn run(
+    fn run_observed(
         &mut self,
         backend: &dyn Backend,
         problem: &KrrProblem,
         budget: &Budget,
+        obs: &mut dyn Observer,
     ) -> anyhow::Result<SolveReport> {
         let (n, d) = (problem.n(), problem.d());
         let s = self.cfg.s.min(n);
@@ -137,13 +138,15 @@ impl Solver for EigenProSolver {
                 w[i] += eta * corr[k] / s as f64;
             }
             iters += 1;
+            obs.on_iter(iters, t0.elapsed().as_secs_f64());
 
             if iters % eval_stride == 0 || budget.exhausted(iters, t0.elapsed().as_secs_f64()) {
                 if looks_diverged(&w) {
                     diverged = true;
                     break;
                 }
-                eval_point(backend, problem, &w, iters, t0.elapsed().as_secs_f64(), &mut trace, f64::NAN)?;
+                let secs = t0.elapsed().as_secs_f64();
+                eval_point(backend, problem, &w, iters, secs, &mut trace, f64::NAN, obs)?;
             }
         }
 

@@ -13,7 +13,7 @@ use crate::config::ExperimentConfig;
 use crate::coordinator::{Budget, KrrProblem, SolveReport};
 use crate::linalg::{dense, Chol};
 use crate::metrics::{Trace, TracePoint};
-use crate::solvers::{eval_every, looks_diverged, Solver};
+use crate::solvers::{eval_every, looks_diverged, Observer, Solver};
 use crate::util::Rng;
 use std::time::Instant;
 
@@ -51,11 +51,12 @@ impl Solver for FalkonSolver {
         format!("falkon(m={})", self.cfg.m)
     }
 
-    fn run(
+    fn run_observed(
         &mut self,
         backend: &dyn Backend,
         problem: &KrrProblem,
         budget: &Budget,
+        obs: &mut dyn Observer,
     ) -> anyhow::Result<SolveReport> {
         let (n, d) = (problem.n(), problem.d());
         let m = self.cfg.m.min(n);
@@ -71,7 +72,8 @@ impl Solver for FalkonSolver {
         }
 
         // K_mm and its Cholesky preconditioner (the O(m^2)/O(m^3) cost).
-        let kmm = backend.kernel_block(problem.kernel, &problem.train.x, d, &centers, problem.sigma);
+        let kmm =
+            backend.kernel_block(problem.kernel, &problem.train.x, d, &centers, problem.sigma);
         let mut kmm_reg = kmm.clone();
         kmm_reg.add_diag(lam + 1e-8 * m as f64);
         let pre = Chol::new(&kmm_reg, 0.0)?;
@@ -149,6 +151,7 @@ impl Solver for FalkonSolver {
                 p[i] = z[i] + beta * p[i];
             }
             iters += 1;
+            obs.on_iter(iters, t0.elapsed().as_secs_f64());
 
             if iters % eval_stride == 0 || budget.exhausted(iters, t0.elapsed().as_secs_f64()) {
                 if looks_diverged(&w) {
@@ -168,12 +171,14 @@ impl Solver for FalkonSolver {
                 )?;
                 let metric = crate::metrics::task_metric(problem.task, &pred, &problem.test.y);
                 let rel = dense::norm(&res) / rhs_norm;
-                trace.push(TracePoint {
+                let point = TracePoint {
                     iter: iters,
                     secs: t0.elapsed().as_secs_f64(),
                     metric,
                     residual: rel,
-                });
+                };
+                trace.push(point);
+                obs.on_eval(&point);
                 if rel < 1e-12 {
                     break;
                 }

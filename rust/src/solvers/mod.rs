@@ -14,6 +14,37 @@ use crate::backend::Backend;
 use crate::coordinator::{Budget, KrrProblem, SolveReport};
 use crate::metrics::{Trace, TracePoint};
 
+/// Streams solve progress out of a running solver.
+///
+/// Every solver calls [`Observer::on_iter`] once per completed iteration
+/// (cheap — counters only) and [`Observer::on_eval`] whenever it records
+/// a [`TracePoint`] (test metric + residual at the eval cadence). The
+/// testbed runner uses this to print heartbeat lines and to account
+/// per-iteration timing without touching the solver loops; [`Solver::run`]
+/// plugs in [`NullObserver`] so existing call sites pay nothing.
+///
+/// Both hooks default to no-ops, so observers implement only what they
+/// watch.
+pub trait Observer {
+    /// One iteration finished: `iter` iterations done, `secs` elapsed
+    /// since the solve started. Called on the solver's hot path — keep
+    /// it O(1).
+    fn on_iter(&mut self, iter: usize, secs: f64) {
+        let _ = (iter, secs);
+    }
+
+    /// A trace point (test metric, residual) was just recorded.
+    fn on_eval(&mut self, point: &TracePoint) {
+        let _ = point;
+    }
+}
+
+/// The do-nothing [`Observer`] behind [`Solver::run`].
+#[derive(Debug, Default, Clone, Copy)]
+pub struct NullObserver;
+
+impl Observer for NullObserver {}
+
 /// A KRR solver that can be driven by the coordinator.
 pub trait Solver {
     fn name(&self) -> String;
@@ -24,6 +55,19 @@ pub trait Solver {
         backend: &dyn Backend,
         problem: &KrrProblem,
         budget: &Budget,
+    ) -> anyhow::Result<SolveReport> {
+        self.run_observed(backend, problem, budget, &mut NullObserver)
+    }
+
+    /// Like [`Solver::run`], but streams per-iteration and per-eval
+    /// progress into `obs` while the solve is in flight (the testbed
+    /// runner's hook; `run` is this with a [`NullObserver`]).
+    fn run_observed(
+        &mut self,
+        backend: &dyn Backend,
+        problem: &KrrProblem,
+        budget: &Budget,
+        obs: &mut dyn Observer,
     ) -> anyhow::Result<SolveReport>;
 }
 
@@ -33,8 +77,8 @@ pub fn eval_every(budget: &Budget, target_points: usize) -> usize {
     (budget.max_iters / target_points.max(1)).max(1)
 }
 
-/// Helper: evaluate test metric for full-KRR weights and append a trace
-/// point. Returns the metric.
+/// Helper: evaluate test metric for full-KRR weights, append a trace
+/// point, and notify the observer. Returns the metric.
 #[allow(clippy::too_many_arguments)]
 pub fn eval_point(
     backend: &dyn Backend,
@@ -44,6 +88,7 @@ pub fn eval_point(
     secs: f64,
     trace: &mut Trace,
     residual: f64,
+    obs: &mut dyn Observer,
 ) -> anyhow::Result<f64> {
     let pred = backend.predict(
         problem.kernel,
@@ -56,7 +101,9 @@ pub fn eval_point(
         problem.sigma,
     )?;
     let metric = crate::metrics::task_metric(problem.task, &pred, &problem.test.y);
-    trace.push(TracePoint { iter, secs, metric, residual });
+    let point = TracePoint { iter, secs, metric, residual };
+    trace.push(point);
+    obs.on_eval(&point);
     Ok(metric)
 }
 
@@ -88,5 +135,45 @@ mod tests {
         assert!(!looks_diverged(&[1.0, -2.0]));
         assert!(looks_diverged(&[f64::NAN]));
         assert!(looks_diverged(&[1e13, 1e13]));
+    }
+
+    #[test]
+    fn observer_hooks_fire_during_a_solve() {
+        use crate::backend::HostBackend;
+        use crate::config::{BandwidthSpec, KernelKind};
+        use crate::data::synthetic;
+
+        #[derive(Default)]
+        struct Counting {
+            iters: usize,
+            evals: usize,
+            last_iter: usize,
+        }
+        impl Observer for Counting {
+            fn on_iter(&mut self, iter: usize, _secs: f64) {
+                self.iters += 1;
+                self.last_iter = iter;
+            }
+            fn on_eval(&mut self, point: &TracePoint) {
+                self.evals += 1;
+                assert!(point.secs >= 0.0);
+            }
+        }
+
+        let ds = synthetic::taxi_like(120, 9, 1).standardized();
+        let problem =
+            KrrProblem::from_dataset(ds, KernelKind::Rbf, BandwidthSpec::Auto, 1e-6, 0).unwrap();
+        let backend = HostBackend::new(1);
+        let mut solver = crate::solvers::askotch::AskotchSolver::new(
+            crate::solvers::askotch::AskotchConfig { rank: 10, ..Default::default() },
+            true,
+        );
+        let mut obs = Counting::default();
+        let report =
+            solver.run_observed(&backend, &problem, &Budget::iterations(20), &mut obs).unwrap();
+        assert_eq!(obs.iters, report.iters);
+        assert_eq!(obs.last_iter, report.iters);
+        assert_eq!(obs.evals, report.trace.points.len());
+        assert!(obs.evals >= 1, "budget exhaustion must still record a final eval");
     }
 }

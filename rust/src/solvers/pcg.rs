@@ -16,7 +16,7 @@ use crate::coordinator::{Budget, KrrProblem, SolveReport};
 use crate::kernels;
 use crate::linalg::{dense, Chol, Mat};
 use crate::metrics::Trace;
-use crate::solvers::{eval_every, eval_point, looks_diverged, Solver};
+use crate::solvers::{eval_every, eval_point, looks_diverged, Observer, Solver};
 use crate::util::Rng;
 use std::time::Instant;
 
@@ -94,7 +94,8 @@ impl PcgSolver {
             xp.extend_from_slice(problem.train.row(p));
         }
         // C = K(:, S): n x r, O(n r d)
-        let c = backend.kernel_matrix(problem.kernel, &problem.train.x, n, &xp, r, d, problem.sigma);
+        let c =
+            backend.kernel_matrix(problem.kernel, &problem.train.x, n, &xp, r, d, problem.sigma);
         // W = K_SS; B = C chol(W)^{-T}
         let w = backend.kernel_block(problem.kernel, &problem.train.x, d, &pivots, problem.sigma);
         let ch = Chol::new(&w, 1e-8 * r as f64)?;
@@ -198,11 +199,12 @@ impl Solver for PcgSolver {
         )
     }
 
-    fn run(
+    fn run_observed(
         &mut self,
         backend: &dyn Backend,
         problem: &KrrProblem,
         budget: &Budget,
+        obs: &mut dyn Observer,
     ) -> anyhow::Result<SolveReport> {
         let n = problem.n();
         let lam = problem.lam;
@@ -280,6 +282,7 @@ impl Solver for PcgSolver {
                 p[i] = zv[i] + beta * p[i];
             }
             iters += 1;
+            obs.on_iter(iters, t0.elapsed().as_secs_f64());
 
             if iters % eval_stride == 0 || budget.exhausted(iters, t0.elapsed().as_secs_f64()) {
                 if looks_diverged(&w) {
@@ -287,7 +290,8 @@ impl Solver for PcgSolver {
                     break;
                 }
                 let rel = dense::norm(&res) / y_norm;
-                eval_point(backend, problem, &w, iters, t0.elapsed().as_secs_f64(), &mut trace, rel)?;
+                let secs = t0.elapsed().as_secs_f64();
+                eval_point(backend, problem, &w, iters, secs, &mut trace, rel, obs)?;
                 if rel < 1e-12 {
                     break;
                 }

@@ -1,0 +1,232 @@
+//! The experiment testbed: the paper's 23-task, five-solver-family
+//! comparison (SS6.1, Figs. 2-8) as a first-class subsystem.
+//!
+//! `askotch testbed` drives the whole suite end to end on the host
+//! backend — no artifacts, straight from a fresh clone:
+//!
+//! 1. [`runner`] materializes the 23 synthetic tasks at the requested
+//!    [`TestbedScale`], splits them across a pool of task workers
+//!    (each with its own [`crate::backend::HostBackend`]), and runs
+//!    every selected solver family under per-family
+//!    [`BudgetSettings`], streaming progress through the
+//!    [`crate::solvers::Observer`] hook.
+//! 2. Every (task, solver) run becomes a structured
+//!    [`runner::RunRecord`] — metadata, final metrics, and the full
+//!    convergence trace — serialized through the in-house
+//!    [`crate::json`] subsystem into `<out_dir>/runs.json` +
+//!    `<out_dir>/summary.json`.
+//! 3. [`report`] renders the records into `docs/RESULTS.md`: a
+//!    performance profile (paper Fig. 2), per-domain task tables
+//!    (Figs. 3-8), and ASCII convergence charts.
+//!
+//! The runner is deliberately **host-only**: tasks run concurrently on
+//! plain `std::thread::scope` workers, and the PJRT engine is neither
+//! `Send` nor shareable across them. On an artifact machine, point
+//! `askotch solve --backend pjrt` at a single task instead.
+
+pub mod report;
+pub mod runner;
+
+pub use report::render_report;
+pub use runner::{run, RunRecord, TestbedOutcome};
+
+use crate::config::{BudgetSettings, SolverKind, TestbedScale};
+use crate::json::{self, Decoder};
+
+/// Everything one `askotch testbed` invocation runs: which tasks (scale
+/// + filter), which solver families, under what budgets, with how much
+/// parallelism, and where the outputs land.
+#[derive(Debug, Clone)]
+pub struct TestbedConfig {
+    /// Row-count scale of the 23 synthetic tasks.
+    pub scale: TestbedScale,
+    /// Solver families to compare (default: one per paper family).
+    pub solvers: Vec<SolverKind>,
+    /// Nystrom/preconditioner rank shared by the rank-r solvers.
+    pub rank: usize,
+    /// Per-family iteration caps + the shared wall-clock cap.
+    pub budgets: BudgetSettings,
+    /// Parallel task workers (0 = half the cores).
+    pub jobs: usize,
+    /// Host-backend threads per worker (0 = cores / jobs).
+    pub job_threads: usize,
+    /// Seed for splits and solver randomness.
+    pub seed: u64,
+    /// Also track the O(n^2) relative residual at eval points.
+    pub track_residual: bool,
+    /// Substring filter on task names ("" = all 23).
+    pub filter: String,
+    /// Directory for the JSON run records ("" = skip writing).
+    pub out_dir: String,
+    /// Path for the Markdown report ("" = skip writing).
+    pub report_path: String,
+    /// Print per-eval heartbeat lines (very chatty; per-run summary
+    /// lines print regardless).
+    pub echo_evals: bool,
+}
+
+impl Default for TestbedConfig {
+    fn default() -> Self {
+        TestbedConfig {
+            scale: TestbedScale::Small,
+            solvers: SolverKind::families().to_vec(),
+            rank: 50,
+            budgets: BudgetSettings::default(),
+            jobs: 0,
+            job_threads: 0,
+            seed: 0,
+            track_residual: false,
+            filter: String::new(),
+            out_dir: "testbed_results".into(),
+            report_path: "docs/RESULTS.md".into(),
+            echo_evals: false,
+        }
+    }
+}
+
+impl TestbedConfig {
+    /// Parse from a JSON object; missing fields fall back to defaults.
+    /// Errors carry field paths (`testbed.scale: ...`), like
+    /// [`crate::config::ExperimentConfig::from_json`].
+    pub fn from_json(text: &str) -> anyhow::Result<TestbedConfig> {
+        let v = json::parse(text).map_err(|e| anyhow::anyhow!("testbed config parse: {e}"))?;
+        let root = Decoder::root(&v, "testbed");
+        let mut c = TestbedConfig::default();
+        if let Some(d) = root.opt_field("scale")? {
+            c.scale =
+                TestbedScale::parse(d.str()?).map_err(|e| anyhow::anyhow!("{}: {e}", d.path()))?;
+        }
+        if let Some(d) = root.opt_field("solvers")? {
+            let mut solvers = Vec::new();
+            for item in d.items()? {
+                solvers.push(
+                    SolverKind::parse(item.str()?)
+                        .map_err(|e| anyhow::anyhow!("{}: {e}", item.path()))?,
+                );
+            }
+            c.solvers = solvers;
+        }
+        if let Some(d) = root.opt_field("rank")? {
+            c.rank = d.usize()?;
+        }
+        if let Some(d) = root.opt_field("time_limit_secs")? {
+            c.budgets.time_limit_secs = d.f64()?;
+        }
+        if let Some(d) = root.opt_field("sap_iters")? {
+            c.budgets.sap_iters = d.usize()?;
+        }
+        if let Some(d) = root.opt_field("cg_iters")? {
+            c.budgets.cg_iters = d.usize()?;
+        }
+        if let Some(d) = root.opt_field("sgd_iters")? {
+            c.budgets.sgd_iters = d.usize()?;
+        }
+        if let Some(d) = root.opt_field("jobs")? {
+            c.jobs = d.usize()?;
+        }
+        if let Some(d) = root.opt_field("job_threads")? {
+            c.job_threads = d.usize()?;
+        }
+        if let Some(d) = root.opt_field("seed")? {
+            c.seed = d.u64()?;
+        }
+        if let Some(d) = root.opt_field("track_residual")? {
+            c.track_residual = d.bool()?;
+        }
+        if let Some(d) = root.opt_field("filter")? {
+            c.filter = d.string()?;
+        }
+        if let Some(d) = root.opt_field("out_dir")? {
+            c.out_dir = d.string()?;
+        }
+        if let Some(d) = root.opt_field("report_path")? {
+            c.report_path = d.string()?;
+        }
+        Ok(c)
+    }
+}
+
+/// Domain grouping for the report's sections, mirroring the paper's
+/// per-domain figures (Figs. 3-8). Order matters: it is the section
+/// order of `docs/RESULTS.md`.
+pub const DOMAINS: &[&str] =
+    &["vision", "particle physics", "ecology & ads", "molecules", "music, social & taxi"];
+
+/// Which [`DOMAINS`] entry a testbed task belongs to.
+pub fn domain_of(task: &str) -> &'static str {
+    match task {
+        "mnist_like" | "fashion_like" | "cifar_like" | "svhn_like" => "vision",
+        "miniboone_like" | "comet_like" | "susy_like" | "higgs_like" => "particle physics",
+        "covtype_like" | "click_like" => "ecology & ads",
+        "aspirin_like" | "benzene_like" | "ethanol_like" | "malonaldehyde_like"
+        | "naphthalene_like" | "salicylic_like" | "toluene_like" | "uracil_like" | "qm9_like" => {
+            "molecules"
+        }
+        _ => "music, social & taxi",
+    }
+}
+
+/// One-character series glyph per solver family (the ASCII charts'
+/// legend).
+pub fn glyph(kind: SolverKind) -> char {
+    match kind {
+        SolverKind::Askotch => 'A',
+        SolverKind::Skotch => 'S',
+        SolverKind::AskotchIdentity => 'i',
+        SolverKind::SkotchIdentity => 'j',
+        SolverKind::Pcg => 'P',
+        SolverKind::Falkon => 'F',
+        SolverKind::EigenPro => 'E',
+        SolverKind::Cholesky => 'C',
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn config_from_json_overrides_defaults() {
+        let c = TestbedConfig::from_json(
+            r#"{"scale":"smoke","solvers":["askotch","cholesky"],"rank":20,
+                "time_limit_secs":2.5,"sap_iters":40,"cg_iters":12,"sgd_iters":20,
+                "jobs":3,"job_threads":2,"seed":7,"filter":"taxi",
+                "out_dir":"","report_path":"r.md"}"#,
+        )
+        .unwrap();
+        assert_eq!(c.scale, TestbedScale::Smoke);
+        assert_eq!(c.solvers, vec![SolverKind::Askotch, SolverKind::Cholesky]);
+        assert_eq!(c.rank, 20);
+        assert_eq!(c.budgets.sap_iters, 40);
+        assert_eq!(c.budgets.cg_iters, 12);
+        assert!((c.budgets.time_limit_secs - 2.5).abs() < 1e-12);
+        assert_eq!((c.jobs, c.job_threads, c.seed), (3, 2, 7));
+        assert_eq!(c.filter, "taxi");
+        assert!(c.out_dir.is_empty());
+        assert_eq!(c.report_path, "r.md");
+    }
+
+    #[test]
+    fn config_errors_carry_field_paths() {
+        let e = TestbedConfig::from_json(r#"{"scale":"huge"}"#).unwrap_err();
+        assert!(e.to_string().contains("testbed.scale"), "got: {e}");
+        let e = TestbedConfig::from_json(r#"{"solvers":["nope"]}"#).unwrap_err();
+        assert!(e.to_string().contains("testbed.solvers[0]"), "got: {e}");
+    }
+
+    #[test]
+    fn every_testbed_task_has_a_known_domain() {
+        for ds in crate::data::synthetic::testbed_scaled(1.0 / 64.0) {
+            let dom = domain_of(&ds.name);
+            assert!(DOMAINS.contains(&dom), "{}: unknown domain {dom}", ds.name);
+        }
+        assert_eq!(domain_of("something_else"), "music, social & taxi");
+    }
+
+    #[test]
+    fn glyphs_are_distinct() {
+        let all: std::collections::HashSet<char> =
+            SolverKind::all().iter().map(|&k| glyph(k)).collect();
+        assert_eq!(all.len(), SolverKind::all().len());
+    }
+}

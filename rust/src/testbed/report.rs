@@ -1,0 +1,626 @@
+//! Render testbed run records into the human-facing artifacts: the
+//! performance profile, the per-domain Markdown tables of
+//! `docs/RESULTS.md` (mirroring the paper's Section 6 comparisons), and
+//! ASCII convergence charts.
+//!
+//! Everything here is pure (records in, strings/JSON out) so the report
+//! shape is unit-testable without running a single solver.
+
+use super::runner::{RunRecord, TestbedOutcome};
+use super::{glyph, TestbedConfig, DOMAINS};
+use crate::config::SolverKind;
+use crate::data::TaskKind;
+use crate::json::Json;
+use crate::metrics;
+use crate::util::fmt;
+use std::collections::BTreeMap;
+
+/// One row of the performance profile (paper Fig. 2): how many tasks a
+/// solver family solved to within the paper's tolerance of the
+/// per-task best.
+#[derive(Debug, Clone)]
+pub struct ProfileRow {
+    pub family: SolverKind,
+    pub solved_cls: usize,
+    pub total_cls: usize,
+    pub solved_reg: usize,
+    pub total_reg: usize,
+    pub diverged: usize,
+    pub errors: usize,
+    /// Mean time-to-tolerance over the tasks this family solved (NaN if
+    /// it solved none).
+    pub mean_tts: f64,
+}
+
+/// Best final metric per task across completed runs (the reference
+/// point for [`metrics::solved`] and time-to-tolerance).
+pub fn best_by_task(records: &[RunRecord]) -> BTreeMap<String, f64> {
+    let mut tasks: BTreeMap<String, (TaskKind, Vec<f64>)> = BTreeMap::new();
+    for r in records {
+        let entry = tasks.entry(r.task.clone()).or_insert((r.task_kind, Vec::new()));
+        if r.completed() {
+            entry.1.push(r.final_metric);
+        }
+    }
+    tasks
+        .into_iter()
+        .map(|(name, (kind, vals))| (name, metrics::best_metric(kind, vals)))
+        .collect()
+}
+
+/// Compute the performance profile, one row per solver family, in
+/// first-appearance order (i.e. the run order).
+pub fn profile(records: &[RunRecord]) -> Vec<ProfileRow> {
+    let best = best_by_task(records);
+    let mut order: Vec<SolverKind> = Vec::new();
+    for r in records {
+        if !order.contains(&r.family) {
+            order.push(r.family);
+        }
+    }
+    order
+        .into_iter()
+        .map(|family| {
+            let mut row = ProfileRow {
+                family,
+                solved_cls: 0,
+                total_cls: 0,
+                solved_reg: 0,
+                total_reg: 0,
+                diverged: 0,
+                errors: 0,
+                mean_tts: f64::NAN,
+            };
+            let mut tts = Vec::new();
+            for r in records.iter().filter(|r| r.family == family) {
+                match r.task_kind {
+                    TaskKind::Classification => row.total_cls += 1,
+                    TaskKind::Regression => row.total_reg += 1,
+                }
+                if r.diverged {
+                    row.diverged += 1;
+                }
+                if r.error.is_some() {
+                    row.errors += 1;
+                }
+                let task_best = best.get(&r.task).copied().unwrap_or(f64::NAN);
+                if r.completed()
+                    && task_best.is_finite()
+                    && metrics::solved(r.task_kind, r.final_metric, task_best)
+                {
+                    match r.task_kind {
+                        TaskKind::Classification => row.solved_cls += 1,
+                        TaskKind::Regression => row.solved_reg += 1,
+                    }
+                    if let Some(t) = r.trace.time_to_solve(r.task_kind, task_best) {
+                        tts.push(t);
+                    }
+                }
+            }
+            if !tts.is_empty() {
+                row.mean_tts = tts.iter().sum::<f64>() / tts.len() as f64;
+            }
+            row
+        })
+        .collect()
+}
+
+/// The `summary.json` document: execution shape + the profile rows.
+pub fn summary_json(outcome: &TestbedOutcome, cfg: &TestbedConfig) -> Json {
+    let mut j = Json::obj(vec![
+        ("scale", Json::str(&cfg.scale.name())),
+        ("row_factor", Json::num(cfg.scale.row_factor())),
+        ("tasks", Json::num(outcome.tasks as f64)),
+        ("jobs", Json::num(outcome.jobs as f64)),
+        ("job_threads", Json::num(outcome.job_threads as f64)),
+        ("wall_secs", Json::num(outcome.wall_secs)),
+        ("rank", Json::num(cfg.rank as f64)),
+        ("seed", Json::num(cfg.seed as f64)),
+        (
+            "budgets",
+            Json::obj(vec![
+                ("time_limit_secs", Json::num(cfg.budgets.time_limit_secs)),
+                ("sap_iters", Json::num(cfg.budgets.sap_iters as f64)),
+                ("cg_iters", Json::num(cfg.budgets.cg_iters as f64)),
+                ("sgd_iters", Json::num(cfg.budgets.sgd_iters as f64)),
+            ]),
+        ),
+    ]);
+    let rows: Vec<Json> = profile(&outcome.records)
+        .iter()
+        .map(|p| {
+            Json::obj(vec![
+                ("solver", Json::str(p.family.name())),
+                ("solved_classification", Json::num(p.solved_cls as f64)),
+                ("total_classification", Json::num(p.total_cls as f64)),
+                ("solved_regression", Json::num(p.solved_reg as f64)),
+                ("total_regression", Json::num(p.total_reg as f64)),
+                ("diverged", Json::num(p.diverged as f64)),
+                ("errors", Json::num(p.errors as f64)),
+                ("mean_time_to_tolerance", Json::num(p.mean_tts)),
+            ])
+        })
+        .collect();
+    j.set("profile", Json::Arr(rows));
+    j
+}
+
+/// The performance-profile rows as a rendered table — shared by the
+/// Markdown report and the CLI summary so the two can never drift.
+pub fn profile_table(records: &[RunRecord]) -> fmt::Table {
+    let mut table = fmt::Table::new(&[
+        "solver",
+        "classification solved",
+        "regression solved",
+        "diverged",
+        "errors",
+        "mean time-to-tol",
+    ]);
+    for p in profile(records) {
+        table.row(vec![
+            p.family.name().into(),
+            format!("{}/{}", p.solved_cls, p.total_cls),
+            format!("{}/{}", p.solved_reg, p.total_reg),
+            p.diverged.to_string(),
+            p.errors.to_string(),
+            if p.mean_tts.is_finite() { fmt::duration(p.mean_tts) } else { "-".into() },
+        ]);
+    }
+    table
+}
+
+/// Format a metric/axis value compactly: plain decimals in the human
+/// range, scientific outside it, `-` for non-finite.
+pub fn fmt_metric(v: f64) -> String {
+    if !v.is_finite() {
+        "-".into()
+    } else if v == 0.0 {
+        "0".into()
+    } else if (1e-3..1e4).contains(&v.abs()) {
+        format!("{v:.4}")
+    } else {
+        format!("{v:.2e}")
+    }
+}
+
+fn fig_of(domain: &str) -> &'static str {
+    match domain {
+        "vision" => "paper Fig. 3",
+        "particle physics" => "paper Fig. 4",
+        "ecology & ads" => "paper Fig. 5",
+        "molecules" => "paper Figs. 6-7",
+        _ => "paper Fig. 8",
+    }
+}
+
+/// Render metric-vs-seconds series as a fixed-size character chart.
+/// One glyph per series; later series overwrite earlier ones where they
+/// collide. With `log_y` the vertical axis is log10 (points `<= 0` are
+/// skipped); axis labels always print in original units.
+pub fn ascii_chart(
+    series: &[(char, String, Vec<(f64, f64)>)],
+    log_y: bool,
+    width: usize,
+    height: usize,
+) -> String {
+    let (width, height) = (width.max(16), height.max(4));
+    let keep = |t: f64, y: f64| t.is_finite() && y.is_finite() && (!log_y || y > 0.0);
+    let ty = |y: f64| if log_y { y.log10() } else { y };
+
+    let mut xmax = 0.0f64;
+    let (mut ymin, mut ymax) = (f64::INFINITY, f64::NEG_INFINITY);
+    for (_, _, pts) in series {
+        for &(t, y) in pts.iter().filter(|&&(t, y)| keep(t, y)) {
+            xmax = xmax.max(t);
+            ymin = ymin.min(y);
+            ymax = ymax.max(y);
+        }
+    }
+    if !ymin.is_finite() {
+        return "(no finite trace points to plot)\n".into();
+    }
+    let xmax = xmax.max(1e-9);
+    let (mut ylo, mut yhi) = (ty(ymin), ty(ymax));
+    if yhi - ylo < 1e-12 {
+        ylo -= 0.5;
+        yhi += 0.5;
+    }
+
+    let col = |t: f64| (((t / xmax) * (width - 1) as f64).round() as usize).min(width - 1);
+    let row = |yt: f64| {
+        let frac = ((yt - ylo) / (yhi - ylo)).clamp(0.0, 1.0);
+        height - 1 - ((frac * (height - 1) as f64).round() as usize).min(height - 1)
+    };
+
+    let mut grid = vec![vec![' '; width]; height];
+    for (mark, _, pts) in series {
+        let pts: Vec<(f64, f64)> =
+            pts.iter().filter(|&&(t, y)| keep(t, y)).map(|&(t, y)| (t, ty(y))).collect();
+        if pts.len() == 1 {
+            grid[row(pts[0].1)][col(pts[0].0)] = *mark;
+        }
+        for pair in pts.windows(2) {
+            let ((t0, y0), (t1, y1)) = (pair[0], pair[1]);
+            let (c0, c1) = (col(t0), col(t1));
+            let (c0, c1, y0, y1) = if c0 <= c1 { (c0, c1, y0, y1) } else { (c1, c0, y1, y0) };
+            for c in c0..=c1 {
+                let frac = if c1 > c0 { (c - c0) as f64 / (c1 - c0) as f64 } else { 0.0 };
+                grid[row(y0 + frac * (y1 - y0))][c] = *mark;
+            }
+        }
+    }
+
+    let top_label = fmt_metric(ymax);
+    let bot_label = fmt_metric(ymin);
+    let lw = top_label.len().max(bot_label.len());
+    let mut out = String::new();
+    for (i, line) in grid.iter().enumerate() {
+        let label: &str = if i == 0 {
+            top_label.as_str()
+        } else if i == height - 1 {
+            bot_label.as_str()
+        } else {
+            ""
+        };
+        out.push_str(&format!("{label:>lw$} |"));
+        out.extend(line.iter());
+        out.push('\n');
+    }
+    out.push_str(&format!("{:>lw$} +{}\n", "", "-".repeat(width)));
+    let xlabel = format!("0s{:>pad$}", fmt::duration(xmax), pad = width.saturating_sub(2));
+    out.push_str(&format!("{:>lw$}  {xlabel}\n", ""));
+    for (mark, name, _) in series {
+        out.push_str(&format!("{:>lw$}  {mark} = {name}\n", ""));
+    }
+    out
+}
+
+/// Render the whole Markdown report (`docs/RESULTS.md`).
+pub fn render_report(outcome: &TestbedOutcome, cfg: &TestbedConfig) -> String {
+    let records = &outcome.records;
+    let best = best_by_task(records);
+    let mut md = String::new();
+
+    md.push_str("# ASkotch testbed results\n\n");
+    md.push_str(&format!(
+        "> Generated by `askotch testbed --scale {}`. Regenerate with that command \
+         rather than editing by hand; `testbed_results/runs.json` holds the \
+         machine-readable records behind every number here.\n\n",
+        cfg.scale.name()
+    ));
+    md.push_str(
+        "The suite reproduces the paper's Section 6 comparison — the 23-task \
+         synthetic testbed (SS6.1) across the five solver families — on the \
+         artifact-free host backend. Synthetic tasks reproduce the *statistical \
+         shape* of the paper's datasets (low intrinsic dimension, per-domain \
+         kernels and regularization), not their raw bytes, so orderings and \
+         convergence shapes are the comparable quantities, not absolute metric \
+         values.\n\n",
+    );
+
+    // --- system section --------------------------------------------------
+    md.push_str("## System under test\n\n");
+    let mut sys = fmt::Table::new(&["setting", "value"]);
+    sys.row(vec!["backend".into(), "host (f64, zero artifacts)".into()]);
+    sys.row(vec!["task workers".into(), outcome.jobs.to_string()]);
+    sys.row(vec!["threads per worker".into(), outcome.job_threads.to_string()]);
+    sys.row(vec![
+        "scale".into(),
+        format!("{} (row factor {})", cfg.scale.name(), cfg.scale.row_factor()),
+    ]);
+    sys.row(vec![
+        "tasks".into(),
+        if cfg.filter.is_empty() {
+            outcome.tasks.to_string()
+        } else {
+            format!("{} (filter {:?})", outcome.tasks, cfg.filter)
+        },
+    ]);
+    sys.row(vec![
+        "solvers".into(),
+        cfg.solvers.iter().map(|s| s.name()).collect::<Vec<_>>().join(", "),
+    ]);
+    sys.row(vec![
+        "budget per run".into(),
+        format!(
+            "{} wall; {} SAP / {} CG / {} SGD iters",
+            fmt::duration(cfg.budgets.time_limit_secs),
+            cfg.budgets.sap_iters,
+            cfg.budgets.cg_iters,
+            cfg.budgets.sgd_iters
+        ),
+    ]);
+    sys.row(vec!["rank".into(), cfg.rank.to_string()]);
+    sys.row(vec!["seed".into(), cfg.seed.to_string()]);
+    sys.row(vec!["suite wall clock".into(), fmt::duration(outcome.wall_secs)]);
+    md.push_str(&sys.render());
+    md.push('\n');
+
+    // --- performance profile (Fig. 2) ------------------------------------
+    md.push_str("## Performance profile (paper Fig. 2)\n\n");
+    md.push_str(
+        "A task counts as **solved** when the family's final metric is within \
+         the paper's tolerance of the best final metric any family reached on \
+         that task (0.001 absolute accuracy / 1% relative MAE).\n\n",
+    );
+    md.push_str(&profile_table(records).render());
+    md.push('\n');
+
+    // --- per-domain task sections ----------------------------------------
+    for &domain in DOMAINS {
+        let domain_records: Vec<&RunRecord> =
+            records.iter().filter(|r| r.domain == domain).collect();
+        if domain_records.is_empty() {
+            continue;
+        }
+        md.push_str(&format!("## {} ({})\n\n", capitalize(domain), fig_of(domain)));
+
+        let mut task_order: Vec<&str> = Vec::new();
+        for r in &domain_records {
+            if !task_order.contains(&r.task.as_str()) {
+                task_order.push(&r.task);
+            }
+        }
+        for task in task_order {
+            let runs: Vec<&&RunRecord> =
+                domain_records.iter().filter(|r| r.task == task).collect();
+            let head = runs[0];
+            md.push_str(&format!(
+                "### {task} — {} ({}, {})\n\n",
+                head.task_kind.name(),
+                head.task_kind.metric_name(),
+                match head.task_kind {
+                    TaskKind::Classification => "higher is better",
+                    TaskKind::Regression => "lower is better",
+                },
+            ));
+            md.push_str(&format!(
+                "n_train={}, n_test={}, d={}, kernel={}, sigma={}, lambda={}\n\n",
+                head.n_train,
+                head.n_test,
+                head.d,
+                head.kernel.name(),
+                fmt_metric(head.sigma),
+                fmt_metric(head.lam),
+            ));
+
+            let task_best = best.get(task).copied().unwrap_or(f64::NAN);
+            let mut table = fmt::Table::new(&[
+                "solver",
+                "iters",
+                "wall",
+                "s/iter",
+                head.task_kind.metric_name(),
+                "time-to-tol",
+                "residual",
+                "state",
+                "note",
+            ]);
+            for r in &runs {
+                let tts = if task_best.is_finite() {
+                    r.trace.time_to_solve(r.task_kind, task_best)
+                } else {
+                    None
+                };
+                let note = if let Some(e) = &r.error {
+                    format!("error: {e}")
+                } else if r.diverged {
+                    "DIVERGED".into()
+                } else if r.completed()
+                    && task_best.is_finite()
+                    && metrics::solved(r.task_kind, r.final_metric, task_best)
+                {
+                    "solved".into()
+                } else {
+                    String::new()
+                };
+                table.row(vec![
+                    r.solver.clone(),
+                    r.iters.to_string(),
+                    fmt::duration(r.wall_secs),
+                    fmt_metric(r.s_per_iter),
+                    fmt_metric(r.final_metric),
+                    tts.map_or("-".into(), fmt::duration),
+                    fmt_metric(r.final_residual),
+                    fmt::count(r.state_bytes as f64),
+                    note,
+                ]);
+            }
+            md.push_str(&table.render());
+            md.push('\n');
+
+            let series: Vec<(char, String, Vec<(f64, f64)>)> = runs
+                .iter()
+                .map(|r| {
+                    (
+                        glyph(r.family),
+                        r.solver.clone(),
+                        r.trace.points.iter().map(|p| (p.secs, p.metric)).collect(),
+                    )
+                })
+                .collect();
+            let log_y = head.task_kind == TaskKind::Regression;
+            md.push_str("```text\n");
+            md.push_str(&ascii_chart(&series, log_y, 64, 12));
+            md.push_str("```\n\n");
+        }
+    }
+    md
+}
+
+fn capitalize(s: &str) -> String {
+    let mut chars = s.chars();
+    match chars.next() {
+        Some(c) => c.to_uppercase().collect::<String>() + chars.as_str(),
+        None => String::new(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::KernelKind;
+    use crate::metrics::{Trace, TracePoint};
+
+    fn record(
+        task: &str,
+        kind: TaskKind,
+        family: SolverKind,
+        metric: f64,
+        diverged: bool,
+        points: &[(usize, f64, f64)],
+    ) -> RunRecord {
+        let mut trace = Trace::default();
+        for &(iter, secs, m) in points {
+            trace.push(TracePoint { iter, secs, metric: m, residual: f64::NAN });
+        }
+        RunRecord {
+            task: task.into(),
+            domain: super::super::domain_of(task),
+            task_kind: kind,
+            n_train: 100,
+            n_test: 25,
+            d: 9,
+            kernel: KernelKind::Rbf,
+            sigma: 1.5,
+            lam: 1e-4,
+            family,
+            solver: family.name().into(),
+            iters: points.last().map_or(0, |p| p.0),
+            wall_secs: points.last().map_or(0.0, |p| p.1),
+            s_per_iter: 0.01,
+            final_metric: metric,
+            final_residual: f64::NAN,
+            state_bytes: 800,
+            diverged,
+            error: None,
+            trace,
+        }
+    }
+
+    fn sample_records() -> Vec<RunRecord> {
+        vec![
+            record(
+                "taxi_like",
+                TaskKind::Regression,
+                SolverKind::Askotch,
+                0.10,
+                false,
+                &[(10, 0.1, 1.0), (20, 0.2, 0.10)],
+            ),
+            record(
+                "taxi_like",
+                TaskKind::Regression,
+                SolverKind::Pcg,
+                0.25,
+                false,
+                &[(5, 0.3, 0.25)],
+            ),
+            record(
+                "susy_like",
+                TaskKind::Classification,
+                SolverKind::Askotch,
+                0.80,
+                false,
+                &[(10, 0.1, 0.80)],
+            ),
+            record(
+                "susy_like",
+                TaskKind::Classification,
+                SolverKind::Pcg,
+                f64::NAN,
+                true,
+                &[],
+            ),
+        ]
+    }
+
+    #[test]
+    fn profile_counts_solved_and_diverged() {
+        let rows = profile(&sample_records());
+        assert_eq!(rows.len(), 2);
+        assert_eq!(rows[0].family, SolverKind::Askotch);
+        // askotch: best on both tasks -> solved 1 cls + 1 reg
+        assert_eq!((rows[0].solved_cls, rows[0].solved_reg), (1, 1));
+        assert_eq!(rows[0].diverged, 0);
+        assert!(rows[0].mean_tts.is_finite());
+        // pcg: 0.25 vs best 0.10 is outside 1% MAE; diverged on susy
+        assert_eq!((rows[1].solved_cls, rows[1].solved_reg), (0, 0));
+        assert_eq!(rows[1].diverged, 1);
+    }
+
+    #[test]
+    fn best_by_task_ignores_diverged_runs() {
+        let best = best_by_task(&sample_records());
+        assert_eq!(best["taxi_like"], 0.10);
+        assert_eq!(best["susy_like"], 0.80);
+    }
+
+    #[test]
+    fn report_mentions_tasks_solvers_and_charts() {
+        let outcome = TestbedOutcome {
+            records: sample_records(),
+            tasks: 2,
+            jobs: 2,
+            job_threads: 1,
+            wall_secs: 1.5,
+        };
+        let cfg = TestbedConfig::default();
+        let md = render_report(&outcome, &cfg);
+        assert!(md.contains("# ASkotch testbed results"));
+        assert!(md.contains("## Performance profile"));
+        assert!(md.contains("### taxi_like"));
+        assert!(md.contains("### susy_like"));
+        assert!(md.contains("DIVERGED"));
+        assert!(md.contains("```text"));
+        assert!(md.contains("A = askotch"));
+        // the Fig. 8 domain section hosts taxi_like
+        assert!(md.contains("paper Fig. 8"));
+    }
+
+    #[test]
+    fn summary_json_reparses() {
+        let outcome = TestbedOutcome {
+            records: sample_records(),
+            tasks: 2,
+            jobs: 1,
+            job_threads: 2,
+            wall_secs: 0.5,
+        };
+        let cfg = TestbedConfig::default();
+        let j = summary_json(&outcome, &cfg);
+        let text = j.pretty();
+        let back = crate::json::parse(&text).unwrap();
+        assert_eq!(back.get("tasks").and_then(|v| v.as_usize()), Some(2));
+        assert!(back.get("profile").and_then(|v| v.as_arr()).is_some());
+    }
+
+    #[test]
+    fn chart_plots_points_and_handles_empty() {
+        let series = vec![
+            ('A', "askotch".to_string(), vec![(0.0, 1.0), (1.0, 0.1), (2.0, 0.01)]),
+            ('P', "pcg".to_string(), vec![(2.0, 0.5)]),
+        ];
+        let chart = ascii_chart(&series, true, 40, 8);
+        assert!(chart.contains('A'));
+        assert!(chart.contains('P'));
+        assert!(chart.contains("A = askotch"));
+        assert!(chart.contains("0s"));
+        // log-y skips non-positive points instead of crashing
+        let with_zero = vec![('Z', "z".to_string(), vec![(0.0, 0.0)])];
+        assert!(ascii_chart(&with_zero, true, 40, 8).contains("no finite trace points"));
+        assert!(ascii_chart(&[], false, 40, 8).contains("no finite trace points"));
+        // flat series must not divide by zero
+        let flat = vec![('F', "flat".to_string(), vec![(0.0, 0.5), (1.0, 0.5)])];
+        assert!(ascii_chart(&flat, false, 40, 8).contains('F'));
+    }
+
+    #[test]
+    fn fmt_metric_ranges() {
+        assert_eq!(fmt_metric(f64::NAN), "-");
+        assert_eq!(fmt_metric(0.0), "0");
+        assert_eq!(fmt_metric(0.9876), "0.9876");
+        assert_eq!(fmt_metric(1.0e-6), "1.00e-6");
+        assert_eq!(fmt_metric(5.0e6), "5.00e6");
+    }
+}

@@ -1,0 +1,391 @@
+//! Parallel testbed execution: a work queue of tasks over
+//! `std::thread::scope` workers, each with its own host backend, every
+//! run recorded as a structured [`RunRecord`].
+
+use super::{domain_of, TestbedConfig};
+use crate::backend::HostBackend;
+use crate::config::{
+    BackendKind, BandwidthSpec, ExperimentConfig, KernelKind, RhoMode, SamplingScheme, SolverKind,
+};
+use crate::coordinator::{Coordinator, KrrProblem, SolveReport};
+use crate::data::{synthetic, Dataset, TaskKind};
+use crate::json::{Json, ToJson};
+use crate::metrics::{Trace, TracePoint};
+use crate::solvers::Observer;
+use crate::util::fmt;
+use std::sync::Mutex;
+use std::time::Instant;
+
+/// One (task, solver) run: task metadata, the solve outcome, and the
+/// full convergence trace. This is the schema of
+/// `testbed_results/runs.json`.
+#[derive(Debug, Clone)]
+pub struct RunRecord {
+    /// Task name (`taxi_like`, `mnist_like`, ...).
+    pub task: String,
+    /// Report section this task belongs to ([`super::domain_of`]).
+    pub domain: &'static str,
+    pub task_kind: TaskKind,
+    pub n_train: usize,
+    pub n_test: usize,
+    pub d: usize,
+    pub kernel: KernelKind,
+    /// Resolved bandwidth (NaN when problem construction failed).
+    pub sigma: f64,
+    /// Effective regularization `n * lam_unscaled` (NaN on failure).
+    pub lam: f64,
+    /// Solver family this run belongs to.
+    pub family: SolverKind,
+    /// Full display name (`askotch(r=50,rho=damped,P=uniform)`).
+    pub solver: String,
+    pub iters: usize,
+    pub wall_secs: f64,
+    /// Mean seconds per iteration, eval overhead included.
+    pub s_per_iter: f64,
+    /// Final test metric (accuracy / MAE; NaN if never evaluated).
+    pub final_metric: f64,
+    pub final_residual: f64,
+    pub state_bytes: usize,
+    pub diverged: bool,
+    /// The solver returned an error (e.g. Cholesky past its size cap).
+    pub error: Option<String>,
+    pub trace: Trace,
+}
+
+impl RunRecord {
+    fn from_report(
+        meta: &TaskMeta,
+        problem: &KrrProblem,
+        family: SolverKind,
+        r: SolveReport,
+    ) -> Self {
+        RunRecord {
+            task: meta.name.clone(),
+            domain: meta.domain,
+            task_kind: meta.kind,
+            n_train: problem.n(),
+            n_test: problem.test.n,
+            d: meta.d,
+            kernel: meta.kernel,
+            sigma: problem.sigma,
+            lam: problem.lam,
+            family,
+            solver: r.solver,
+            iters: r.iters,
+            wall_secs: r.wall_secs,
+            s_per_iter: r.wall_secs / r.iters.max(1) as f64,
+            final_metric: r.final_metric,
+            final_residual: r.final_residual,
+            state_bytes: r.state_bytes,
+            diverged: r.diverged,
+            error: None,
+            trace: r.trace,
+        }
+    }
+
+    fn failed(
+        meta: &TaskMeta,
+        problem: Option<&KrrProblem>,
+        family: SolverKind,
+        err: String,
+    ) -> Self {
+        RunRecord {
+            task: meta.name.clone(),
+            domain: meta.domain,
+            task_kind: meta.kind,
+            // 0 when the split never happened: a failed-setup record must
+            // not report a different "n_train" than its task's successful
+            // runs would.
+            n_train: problem.map_or(0, |p| p.n()),
+            n_test: problem.map_or(0, |p| p.test.n),
+            d: meta.d,
+            kernel: meta.kernel,
+            sigma: problem.map_or(f64::NAN, |p| p.sigma),
+            lam: problem.map_or(f64::NAN, |p| p.lam),
+            family,
+            solver: family.name().to_string(),
+            iters: 0,
+            wall_secs: 0.0,
+            s_per_iter: f64::NAN,
+            final_metric: f64::NAN,
+            final_residual: f64::NAN,
+            state_bytes: 0,
+            diverged: false,
+            error: Some(err),
+            trace: Trace::default(),
+        }
+    }
+
+    /// Did this run complete (no error, no divergence) with a finite
+    /// final metric?
+    pub fn completed(&self) -> bool {
+        self.error.is_none() && !self.diverged && self.final_metric.is_finite()
+    }
+}
+
+impl ToJson for RunRecord {
+    fn to_json(&self) -> Json {
+        // Non-finite sigma/metrics serialize as null via the printer.
+        Json::obj(vec![
+            ("task", Json::str(&self.task)),
+            ("domain", Json::str(self.domain)),
+            ("task_kind", Json::str(self.task_kind.name())),
+            ("metric_name", Json::str(self.task_kind.metric_name())),
+            ("n_train", Json::num(self.n_train as f64)),
+            ("n_test", Json::num(self.n_test as f64)),
+            ("d", Json::num(self.d as f64)),
+            ("kernel", Json::str(self.kernel.name())),
+            ("sigma", Json::num(self.sigma)),
+            ("lambda", Json::num(self.lam)),
+            ("family", Json::str(self.family.name())),
+            ("solver", Json::str(&self.solver)),
+            ("iters", Json::num(self.iters as f64)),
+            ("wall_secs", Json::num(self.wall_secs)),
+            ("s_per_iter", Json::num(self.s_per_iter)),
+            ("final_metric", Json::num(self.final_metric)),
+            ("final_residual", Json::num(self.final_residual)),
+            ("state_bytes", Json::num(self.state_bytes as f64)),
+            ("diverged", Json::Bool(self.diverged)),
+            (
+                "error",
+                match &self.error {
+                    Some(e) => Json::str(e),
+                    None => Json::Null,
+                },
+            ),
+            ("trace", self.trace.to_json()),
+        ])
+    }
+}
+
+/// Everything a finished testbed run knows about itself: the records
+/// plus the execution shape (for the report's system section).
+#[derive(Debug, Clone)]
+pub struct TestbedOutcome {
+    /// All records, task-major in suite order, solver order within.
+    pub records: Vec<RunRecord>,
+    /// Number of tasks that ran (after filtering).
+    pub tasks: usize,
+    /// Parallel task workers used.
+    pub jobs: usize,
+    /// Host-backend threads inside each worker.
+    pub job_threads: usize,
+    /// Whole-suite wall clock, seconds.
+    pub wall_secs: f64,
+}
+
+impl TestbedOutcome {
+    /// The `runs.json` document: every record, in order.
+    pub fn runs_json(&self) -> Json {
+        Json::Arr(self.records.iter().map(|r| r.to_json()).collect())
+    }
+}
+
+/// Task metadata captured before the dataset is consumed by the split.
+struct TaskMeta {
+    name: String,
+    domain: &'static str,
+    kind: TaskKind,
+    n: usize,
+    d: usize,
+    kernel: KernelKind,
+    lam_unscaled: f64,
+}
+
+/// Heartbeat observer: optional live eval lines for one run.
+struct Heartbeat<'a> {
+    label: String,
+    metric_name: &'static str,
+    echo: Option<&'a Mutex<()>>,
+}
+
+impl Observer for Heartbeat<'_> {
+    fn on_eval(&mut self, p: &TracePoint) {
+        if let Some(lock) = self.echo {
+            let _guard = lock.lock().unwrap();
+            eprintln!(
+                "    {} iter={:6} t={:>8} {}={:.4}",
+                self.label,
+                p.iter,
+                fmt::duration(p.secs),
+                self.metric_name,
+                p.metric
+            );
+        }
+    }
+}
+
+/// The `ExperimentConfig` describing one (task, solver) run — what
+/// [`Coordinator::solver`] instantiates the solver from (the problem
+/// itself is built once per task and shared across families).
+fn experiment_for(cfg: &TestbedConfig, meta: &TaskMeta, kind: SolverKind) -> ExperimentConfig {
+    ExperimentConfig {
+        name: format!("testbed/{}/{}", meta.name, kind.name()),
+        dataset: meta.name.clone(),
+        n: meta.n,
+        d: meta.d,
+        kernel: meta.kernel,
+        bandwidth: BandwidthSpec::Auto,
+        lam_unscaled: meta.lam_unscaled,
+        solver: kind,
+        sampling: SamplingScheme::Uniform,
+        rho: RhoMode::Damped,
+        rank: cfg.rank,
+        seed: cfg.seed,
+        max_iters: cfg.budgets.max_iters(kind),
+        time_limit_secs: cfg.budgets.time_limit_secs,
+        track_residual: cfg.track_residual,
+        backend: BackendKind::Host,
+    }
+}
+
+/// Run the full suite described by `cfg`. Tasks execute in parallel
+/// across `jobs` workers (each owning a [`HostBackend`] with
+/// `job_threads` threads); within a task the solver families run
+/// sequentially so their wall-clock numbers are comparable.
+pub fn run(cfg: &TestbedConfig) -> anyhow::Result<TestbedOutcome> {
+    anyhow::ensure!(!cfg.solvers.is_empty(), "testbed: no solvers selected");
+    let t0 = Instant::now();
+    let tasks: Vec<Dataset> = synthetic::testbed_scaled(cfg.scale.row_factor())
+        .into_iter()
+        .filter(|d| cfg.filter.is_empty() || d.name.contains(&cfg.filter))
+        .collect();
+    anyhow::ensure!(!tasks.is_empty(), "testbed: filter {:?} matched no task", cfg.filter);
+
+    let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    let jobs = if cfg.jobs == 0 { cores.div_ceil(2) } else { cfg.jobs }.clamp(1, tasks.len());
+    let job_threads = if cfg.job_threads == 0 { (cores / jobs).max(1) } else { cfg.job_threads };
+
+    let total = tasks.len();
+    // Reverse so popping off the queue's tail hands out suite order.
+    let queue: Mutex<Vec<(usize, Dataset)>> =
+        Mutex::new(tasks.into_iter().enumerate().rev().collect());
+    let results: Mutex<Vec<(usize, Vec<RunRecord>)>> = Mutex::new(Vec::with_capacity(total));
+    let echo_lock = Mutex::new(());
+
+    std::thread::scope(|s| {
+        for _ in 0..jobs {
+            s.spawn(|| {
+                let backend = HostBackend::new(job_threads);
+                loop {
+                    let next = queue.lock().unwrap().pop();
+                    let Some((index, ds)) = next else { break };
+                    let records = run_task(cfg, &backend, ds, &echo_lock, index, total);
+                    results.lock().unwrap().push((index, records));
+                }
+            });
+        }
+    });
+
+    let mut results = results.into_inner().unwrap();
+    results.sort_by_key(|(index, _)| *index);
+    let records: Vec<RunRecord> = results.into_iter().flat_map(|(_, r)| r).collect();
+    Ok(TestbedOutcome {
+        records,
+        tasks: total,
+        jobs,
+        job_threads,
+        wall_secs: t0.elapsed().as_secs_f64(),
+    })
+}
+
+/// One task end to end: build the problem once, run every solver family
+/// against it, one record per run (errors become records, not aborts).
+fn run_task(
+    cfg: &TestbedConfig,
+    backend: &HostBackend,
+    ds: Dataset,
+    echo_lock: &Mutex<()>,
+    index: usize,
+    total: usize,
+) -> Vec<RunRecord> {
+    let meta = TaskMeta {
+        name: ds.name.clone(),
+        domain: domain_of(&ds.name),
+        kind: ds.task,
+        n: ds.n,
+        d: ds.d,
+        kernel: ds.kernel,
+        lam_unscaled: ds.lam_unscaled,
+    };
+    let kernel = ds.kernel;
+    let lam_unscaled = ds.lam_unscaled;
+    let problem = match KrrProblem::from_dataset(
+        ds.standardized(),
+        kernel,
+        BandwidthSpec::Auto,
+        lam_unscaled,
+        cfg.seed,
+    ) {
+        Ok(p) => p,
+        Err(e) => {
+            return cfg
+                .solvers
+                .iter()
+                .map(|&k| RunRecord::failed(&meta, None, k, format!("problem setup: {e}")))
+                .collect();
+        }
+    };
+
+    let coord = Coordinator::new(backend);
+    let mut out = Vec::with_capacity(cfg.solvers.len());
+    for &kind in &cfg.solvers {
+        let ecfg = experiment_for(cfg, &meta, kind);
+        let mut solver = coord.solver(&ecfg);
+        let budget = cfg.budgets.budget(kind);
+        let mut heartbeat = Heartbeat {
+            label: format!("{}/{}", meta.name, kind.name()),
+            metric_name: meta.kind.metric_name(),
+            echo: cfg.echo_evals.then_some(echo_lock),
+        };
+        let record = match solver.run_observed(backend, &problem, &budget, &mut heartbeat) {
+            Ok(r) => RunRecord::from_report(&meta, &problem, kind, r),
+            Err(e) => RunRecord::failed(&meta, Some(&problem), kind, e.to_string()),
+        };
+        {
+            let _guard = echo_lock.lock().unwrap();
+            let status = if let Some(e) = &record.error {
+                format!("ERROR: {e}")
+            } else if record.diverged {
+                "DIVERGED".into()
+            } else {
+                format!("{}={:.4}", record.task_kind.metric_name(), record.final_metric)
+            };
+            eprintln!(
+                "[{:2}/{total}] {:22} {:10} {:5} iters  {:>8}  {status}",
+                index + 1,
+                record.task,
+                kind.name(),
+                record.iters,
+                fmt::duration(record.wall_secs),
+            );
+        }
+        out.push(record);
+    }
+    out
+}
+
+/// Write the JSON records and the Markdown report the config asks for;
+/// returns the paths written.
+pub fn persist(outcome: &TestbedOutcome, cfg: &TestbedConfig) -> anyhow::Result<Vec<String>> {
+    let mut written = Vec::new();
+    if !cfg.out_dir.is_empty() {
+        std::fs::create_dir_all(&cfg.out_dir)?;
+        let runs = format!("{}/runs.json", cfg.out_dir);
+        std::fs::write(&runs, outcome.runs_json().pretty())?;
+        written.push(runs);
+        let summary = format!("{}/summary.json", cfg.out_dir);
+        std::fs::write(&summary, super::report::summary_json(outcome, cfg).pretty())?;
+        written.push(summary);
+    }
+    if !cfg.report_path.is_empty() {
+        if let Some(dir) = std::path::Path::new(&cfg.report_path).parent() {
+            if !dir.as_os_str().is_empty() {
+                std::fs::create_dir_all(dir)?;
+            }
+        }
+        std::fs::write(&cfg.report_path, super::report::render_report(outcome, cfg))?;
+        written.push(cfg.report_path.clone());
+    }
+    Ok(written)
+}

@@ -1,0 +1,134 @@
+//! Testbed smoke suite — the acceptance gate behind `askotch testbed`:
+//! the full 23-task suite at smoke scale runs end to end through the
+//! parallel runner on the host backend (zero artifacts), and the JSON
+//! records + Markdown report round-trip through the in-house JSON
+//! subsystem. Budgets are tiny: this checks plumbing and recording, not
+//! convergence quality (docs/RESULTS.md at `--scale small` is for
+//! that).
+
+use askotch::config::{BudgetSettings, SolverKind, TestbedScale};
+use askotch::testbed::{self, runner, TestbedConfig};
+
+fn smoke_config() -> TestbedConfig {
+    TestbedConfig {
+        scale: TestbedScale::Smoke,
+        rank: 20,
+        budgets: BudgetSettings {
+            time_limit_secs: 3.0,
+            sap_iters: 30,
+            cg_iters: 10,
+            sgd_iters: 12,
+        },
+        // keep the filesystem untouched unless a test opts in
+        out_dir: String::new(),
+        report_path: String::new(),
+        ..TestbedConfig::default()
+    }
+}
+
+/// All 23 tasks x all five solver families produce a record — errors and
+/// divergence are *recorded*, never dropped — and ASkotch itself (the
+/// paper's "reliable defaults" claim) completes everywhere.
+#[test]
+fn full_suite_records_every_task_and_solver() {
+    let cfg = smoke_config();
+    let outcome = testbed::run(&cfg).unwrap();
+    assert_eq!(outcome.tasks, 23);
+    assert_eq!(outcome.records.len(), 23 * cfg.solvers.len());
+
+    // task-major suite order, config solver order within each task
+    for (i, r) in outcome.records.iter().enumerate() {
+        assert_eq!(r.family, cfg.solvers[i % cfg.solvers.len()], "record {i} out of order");
+    }
+    let tasks: std::collections::BTreeSet<&str> =
+        outcome.records.iter().map(|r| r.task.as_str()).collect();
+    assert_eq!(tasks.len(), 23);
+
+    for r in &outcome.records {
+        // a run either completed with a finite metric, or says why not
+        assert!(
+            r.completed() || r.diverged || r.error.is_some(),
+            "{}/{}: metric {} with no recorded cause",
+            r.task,
+            r.solver,
+            r.final_metric
+        );
+        if r.family == SolverKind::Askotch {
+            assert!(r.error.is_none(), "{}/askotch: {:?}", r.task, r.error);
+            assert!(!r.diverged, "{}/askotch diverged", r.task);
+            assert!(r.final_metric.is_finite(), "{}/askotch: no metric", r.task);
+            assert!(!r.trace.points.is_empty(), "{}/askotch: empty trace", r.task);
+        }
+    }
+
+    // every task has at least one completed run, so the report's
+    // per-task best (time-to-tolerance reference) is well-defined
+    let best = testbed::report::best_by_task(&outcome.records);
+    for (task, best_metric) in &best {
+        assert!(best_metric.is_finite(), "{task}: no completed run");
+    }
+    // and the profile covers exactly the configured families
+    let profile = testbed::report::profile(&outcome.records);
+    assert_eq!(profile.len(), cfg.solvers.len());
+    for row in &profile {
+        assert_eq!(row.total_cls, 10);
+        assert_eq!(row.total_reg, 13);
+    }
+}
+
+/// A filtered run persists both artifacts: parseable JSON records with
+/// full traces, and a Markdown report with tables + ASCII charts.
+#[test]
+fn persists_json_records_and_markdown_report() {
+    let dir = std::env::temp_dir().join(format!("askotch_testbed_smoke_{}", std::process::id()));
+    let mut cfg = smoke_config();
+    cfg.filter = "taxi".into();
+    cfg.solvers = vec![SolverKind::Askotch, SolverKind::Cholesky];
+    cfg.out_dir = dir.join("records").to_string_lossy().into_owned();
+    cfg.report_path = dir.join("RESULTS.md").to_string_lossy().into_owned();
+
+    let outcome = testbed::run(&cfg).unwrap();
+    assert_eq!(outcome.tasks, 1);
+    let written = runner::persist(&outcome, &cfg).unwrap();
+    assert_eq!(written.len(), 3, "runs.json + summary.json + report: {written:?}");
+
+    let runs_text = std::fs::read_to_string(&written[0]).unwrap();
+    let runs = askotch::json::parse(&runs_text).unwrap();
+    let arr = runs.as_arr().unwrap();
+    assert_eq!(arr.len(), 2);
+    assert_eq!(arr[0].get("task").and_then(|v| v.as_str()), Some("taxi_like"));
+    assert_eq!(arr[0].get("family").and_then(|v| v.as_str()), Some("askotch"));
+    assert_eq!(arr[0].get("metric_name").and_then(|v| v.as_str()), Some("MAE"));
+    let trace = arr[0].get("trace").and_then(|v| v.as_arr()).unwrap();
+    assert!(!trace.is_empty(), "trace must serialize");
+    assert!(trace[0].get("metric").is_some());
+
+    let summary_text = std::fs::read_to_string(&written[1]).unwrap();
+    let summary = askotch::json::parse(&summary_text).unwrap();
+    assert_eq!(summary.get("tasks").and_then(|v| v.as_usize()), Some(1));
+    assert_eq!(summary.get("profile").and_then(|v| v.as_arr()).map(|a| a.len()), Some(2));
+
+    let report = std::fs::read_to_string(&cfg.report_path).unwrap();
+    assert!(report.contains("# ASkotch testbed results"));
+    assert!(report.contains("### taxi_like"));
+    assert!(report.contains("```text"), "report needs its ASCII charts");
+    assert!(report.contains("| solver"), "report needs its tables");
+
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// The filter is honored and an unmatched filter errors instead of
+/// silently reporting an empty suite.
+#[test]
+fn filter_narrows_or_errors() {
+    let mut cfg = smoke_config();
+    cfg.solvers = vec![SolverKind::Cholesky];
+    cfg.filter = "susy".into();
+    let outcome = testbed::run(&cfg).unwrap();
+    assert_eq!(outcome.tasks, 1);
+    assert_eq!(outcome.records[0].task, "susy_like");
+
+    cfg.filter = "no_such_task".into();
+    let err = testbed::run(&cfg).unwrap_err();
+    assert!(err.to_string().contains("no_such_task"), "got: {err}");
+}
