@@ -118,7 +118,7 @@ fn main() -> anyhow::Result<()> {
 
     let t0 = std::time::Instant::now();
     let stats = serve_predictor(
-        &BackendPredictor { backend, model: &model },
+        &BackendPredictor::new(backend, &model),
         rx,
         &ServerConfig::default(),
         None,

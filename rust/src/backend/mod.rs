@@ -9,11 +9,13 @@
 //!   modules executed through the PJRT [`crate::runtime::Engine`].
 //!   Fastest when `make artifacts` has been run; f32 arithmetic.
 //! * [`HostBackend`] — a host-native parallel engine: multi-threaded
-//!   (`std::thread::scope` worker pools), cache-blocked kernel-matrix
-//!   assembly (symmetric tiles computed once), tiled matvecs, and
-//!   per-thread RNG streams. Needs **zero artifacts**, runs everywhere
-//!   (CI, fresh clones, serving hosts without the artifact grid), and
-//!   computes in f64.
+//!   (`std::thread::scope` worker pools) over the fused panel kernel
+//!   engine ([`crate::kernels::fused`]): GEMM-based distance algebra
+//!   with cached squared row norms for RBF/Matern, a blocked L1 walk
+//!   for Laplacian, symmetric tiles computed once, and per-thread RNG
+//!   streams. Needs **zero artifacts**, runs everywhere (CI, fresh
+//!   clones, serving hosts without the artifact grid), and computes in
+//!   f64 (fused products match the scalar oracle to <= 1e-8 relative).
 //!
 //! `docs/BACKENDS.md` documents the trait surface, how to add a third
 //! backend, and the host-vs-PJRT tradeoffs.
@@ -86,6 +88,31 @@ pub trait Backend {
         sigma: f64,
     ) -> anyhow::Result<Vec<f64>>;
 
+    /// [`Backend::kernel_matvec`] with optionally precomputed squared
+    /// row norms of `x2` ([`crate::kernels::fused::sq_norms`]). The
+    /// host panel engine's distance algebra reuses them across every
+    /// panel — and, when the caller caches them (the training slab on
+    /// [`KrrProblem`], the model slab on a serving snapshot), across
+    /// every call against the same slab. `None` is always correct:
+    /// norms are then derived per call. Backends that cannot exploit
+    /// the hint ignore it.
+    #[allow(clippy::too_many_arguments)]
+    fn kernel_matvec_with_norms(
+        &self,
+        kernel: KernelKind,
+        x1: &[f64],
+        n1: usize,
+        x2: &[f64],
+        n2: usize,
+        d: usize,
+        v: &[f64],
+        sigma: f64,
+        x2_sq_norms: Option<&[f64]>,
+    ) -> anyhow::Result<Vec<f64>> {
+        let _ = x2_sq_norms;
+        self.kernel_matvec(kernel, x1, n1, x2, n2, d, v, sigma)
+    }
+
     /// Dense kernel matrix `K(X1, X2)` (setup-time assembly: PCG column
     /// factors, EigenPro correction blocks). The default is the scalar
     /// reference; [`HostBackend`] overrides with the parallel blocked
@@ -147,6 +174,26 @@ pub trait Backend {
         n_eval: usize,
         sigma: f64,
     ) -> anyhow::Result<Vec<f64>> {
+        self.predict_with_norms(kernel, x_train, n_train, d, weights, x_eval, n_eval, sigma, None)
+    }
+
+    /// [`Backend::predict`] with the model slab's squared row norms
+    /// precomputed once at model-build time: without the cache a
+    /// single-row serving request pays an O(n d) norm pass comparable
+    /// to its whole kernel product.
+    #[allow(clippy::too_many_arguments)]
+    fn predict_with_norms(
+        &self,
+        kernel: KernelKind,
+        x_train: &[f64],
+        n_train: usize,
+        d: usize,
+        weights: &[f64],
+        x_eval: &[f64],
+        n_eval: usize,
+        sigma: f64,
+        train_sq_norms: Option<&[f64]>,
+    ) -> anyhow::Result<Vec<f64>> {
         assert_eq!(weights.len(), n_train);
         let tile = self.predict_tile(kernel, n_train, d).max(1);
         let mut out = Vec::with_capacity(n_eval);
@@ -154,7 +201,17 @@ pub trait Backend {
         while start < n_eval {
             let rows = tile.min(n_eval - start);
             let x1 = &x_eval[start * d..(start + rows) * d];
-            let y = self.kernel_matvec(kernel, x1, rows, x_train, n_train, d, weights, sigma)?;
+            let y = self.kernel_matvec_with_norms(
+                kernel,
+                x1,
+                rows,
+                x_train,
+                n_train,
+                d,
+                weights,
+                sigma,
+                train_sq_norms,
+            )?;
             out.extend_from_slice(&y);
             start += rows;
         }

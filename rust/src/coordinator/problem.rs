@@ -2,6 +2,7 @@
 
 use crate::config::{BandwidthSpec, KernelKind};
 use crate::data::{preprocess, Dataset, TaskKind};
+use crate::kernels::fused;
 use crate::metrics::Trace;
 
 /// A fully-materialized full-KRR problem: standardized train/test split,
@@ -16,6 +17,12 @@ pub struct KrrProblem {
     pub sigma: f64,
     /// Effective lambda (already scaled by n).
     pub lam: f64,
+    /// Squared row norms of the training slab, computed once at
+    /// construction and reused by every fused kernel product against
+    /// it — SAP block gradients, solver matvecs, residual checks,
+    /// prediction tiles (`crate::kernels::fused`). Empty when the
+    /// kernel's panel path ignores norms (Laplacian).
+    pub train_sq_norms: Vec<f64>,
 }
 
 impl KrrProblem {
@@ -53,6 +60,11 @@ impl KrrProblem {
         };
         anyhow::ensure!(sigma > 0.0, "bandwidth must be positive");
         let lam = (train.n as f64) * lam_unscaled;
+        let train_sq_norms = if fused::uses_norms(kernel) {
+            fused::sq_norms(&train.x, train.n, train.d)
+        } else {
+            Vec::new()
+        };
         Ok(KrrProblem {
             name: train.name.replace(":train", ""),
             task: train.task,
@@ -61,6 +73,7 @@ impl KrrProblem {
             kernel,
             sigma,
             lam,
+            train_sq_norms,
         })
     }
 
@@ -72,7 +85,21 @@ impl KrrProblem {
         sigma: f64,
         lam: f64,
     ) -> KrrProblem {
-        KrrProblem { name: train.name.clone(), task: train.task, train, test, kernel, sigma, lam }
+        let train_sq_norms = if fused::uses_norms(kernel) {
+            fused::sq_norms(&train.x, train.n, train.d)
+        } else {
+            Vec::new()
+        };
+        KrrProblem {
+            name: train.name.clone(),
+            task: train.task,
+            train,
+            test,
+            kernel,
+            sigma,
+            lam,
+            train_sq_norms,
+        }
     }
 
     pub fn n(&self) -> usize {

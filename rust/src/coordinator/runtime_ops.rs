@@ -82,6 +82,8 @@ pub fn relative_residual_host(
 
 /// Relative residual `||(K + lam I) w - y|| / ||y||` on the training
 /// set, through the backend's O(n^2) full matvec — evaluate sparsely.
+/// `x_sq_norms` is the slab's cached squared row norms (pass
+/// `KrrProblem::train_sq_norms` when available; `None` recomputes).
 #[allow(clippy::too_many_arguments)]
 pub fn relative_residual(
     backend: &dyn Backend,
@@ -93,8 +95,9 @@ pub fn relative_residual(
     y: &[f64],
     sigma: f64,
     lam: f64,
+    x_sq_norms: Option<&[f64]>,
 ) -> anyhow::Result<f64> {
-    let kw = backend.kernel_matvec(kernel, x, n, x, n, d, w, sigma)?;
+    let kw = backend.kernel_matvec_with_norms(kernel, x, n, x, n, d, w, sigma, x_sq_norms)?;
     Ok(residual_ratio(&kw, w, y, lam))
 }
 
@@ -147,8 +150,14 @@ mod tests {
         let y: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
         let b = HostBackend::new(2);
         let via_backend =
-            relative_residual(&b, KernelKind::Rbf, &x, n, d, &w, &y, 1.0, 0.1).unwrap();
+            relative_residual(&b, KernelKind::Rbf, &x, n, d, &w, &y, 1.0, 0.1, None).unwrap();
         let via_host = relative_residual_host(KernelKind::Rbf, &x, n, d, &w, &y, 1.0, 0.1);
         assert!((via_backend - via_host).abs() < 1e-10, "{via_backend} vs {via_host}");
+        // Cached norms must be an exact no-op vs recomputing them.
+        let norms = crate::kernels::fused::sq_norms(&x, n, d);
+        let via_cached =
+            relative_residual(&b, KernelKind::Rbf, &x, n, d, &w, &y, 1.0, 0.1, Some(&norms))
+                .unwrap();
+        assert_eq!(via_backend, via_cached);
     }
 }

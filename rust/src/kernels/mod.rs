@@ -2,15 +2,17 @@
 //! compute backend must reproduce.
 //!
 //! The rust twin of the L1 Pallas kernels. [`eval`] is the single
-//! source of truth for the kernel functions: the parallel blocked
-//! [`crate::backend::HostBackend`] calls it per entry (so the fast
-//! paths agree with these oracles to roundoff — the property tests pin
-//! that), and the integration tests compare the AOT artifacts against
-//! the dense assemblies here. The solver hot loops go through
+//! source of truth for the kernel functions: the hot paths run through
+//! the [`fused`] panel engine (GEMM distance algebra, <= 1e-8 relative
+//! parity against these oracles — the property tests pin that), and
+//! the integration tests compare the AOT artifacts against the dense
+//! assemblies here. The solver hot loops go through
 //! [`crate::backend::Backend`], not this module directly.
 
 use crate::config::KernelKind;
 use crate::linalg::Mat;
+
+pub mod fused;
 
 /// Evaluate `k(x, x')` for one pair of points.
 pub fn eval(kind: KernelKind, x: &[f64], y: &[f64], sigma: f64) -> f64 {
@@ -70,7 +72,18 @@ pub fn block(kind: KernelKind, x: &[f64], d: usize, idx: &[usize], sigma: f64) -
     out
 }
 
+/// `v` sparsity below which [`rows_matvec`] takes the gathered path
+/// (shared with the host backend's pre-scan heuristic).
+pub(crate) const SPARSE_DENSITY: usize = 8;
+
 /// Kernel rows: `K(X[idx], X) v` evaluated directly (reference path).
+///
+/// One pre-scan of `v` picks between a dense inner loop (no
+/// per-element branch, so the sum vectorizes) and a gathered sparse
+/// loop over the nonzero coordinates (early SAP iterates are mostly
+/// zero). Both walk `j` ascending, so the summation order — and the
+/// result, up to the exactly-zero terms the sparse path skips — is the
+/// same either way.
 pub fn rows_matvec(
     kind: KernelKind,
     x: &[f64],
@@ -81,19 +94,21 @@ pub fn rows_matvec(
     sigma: f64,
 ) -> Vec<f64> {
     assert_eq!(v.len(), n);
+    let nnz = v.iter().filter(|&&vj| vj != 0.0).count();
+    if nnz * SPARSE_DENSITY < n {
+        let nz: Vec<usize> = (0..n).filter(|&j| v[j] != 0.0).collect();
+        return idx
+            .iter()
+            .map(|&i| {
+                let xi = &x[i * d..(i + 1) * d];
+                nz.iter().map(|&j| eval(kind, xi, &x[j * d..(j + 1) * d], sigma) * v[j]).sum()
+            })
+            .collect();
+    }
     idx.iter()
         .map(|&i| {
             let xi = &x[i * d..(i + 1) * d];
-            (0..n)
-                .map(|j| {
-                    let vj = v[j];
-                    if vj == 0.0 {
-                        0.0
-                    } else {
-                        eval(kind, xi, &x[j * d..(j + 1) * d], sigma) * vj
-                    }
-                })
-                .sum()
+            (0..n).map(|j| eval(kind, xi, &x[j * d..(j + 1) * d], sigma) * v[j]).sum()
         })
         .collect()
 }

@@ -82,39 +82,28 @@ impl Mat {
         out
     }
 
-    /// Cache-tile edge for [`Mat::matmul`]: a (MM_TILE x cols) panel of
-    /// `other` stays resident while a tile of `self` rows streams over
-    /// it.
-    const MM_TILE: usize = 64;
-
-    /// Matrix product, tiled over rows and the inner dimension (blocked
-    /// ikj order). Within one output entry the inner-dimension sum runs
-    /// in ascending `k` order — panels ascend and each panel scans `k`
-    /// ascending — so results are bit-identical to the unblocked ikj
-    /// loop while the `other` panel stays hot in cache across a whole
-    /// tile of `self` rows.
+    /// Matrix product through the register-blocked [`gemm_nt`]
+    /// microkernel: `other` is transposed once so both operands stream
+    /// contiguously along the inner dimension. Each output entry is a
+    /// single ascending-`k` dot product, so results are bit-identical
+    /// to the unblocked ikj loop.
     pub fn matmul(&self, other: &Mat) -> Mat {
         assert_eq!(self.cols, other.rows, "inner dims");
+        let bt = other.t();
         let mut out = Mat::zeros(self.rows, other.cols);
-        let t = Self::MM_TILE;
-        for i0 in (0..self.rows).step_by(t) {
-            let i1 = (i0 + t).min(self.rows);
-            for k0 in (0..self.cols).step_by(t) {
-                let k1 = (k0 + t).min(self.cols);
-                for i in i0..i1 {
-                    let out_row = out.row_mut(i);
-                    for k in k0..k1 {
-                        let aik = self[(i, k)];
-                        if aik != 0.0 {
-                            let orow = other.row(k);
-                            for (o, &b) in out_row.iter_mut().zip(orow) {
-                                *o += aik * b;
-                            }
-                        }
-                    }
-                }
-            }
-        }
+        let mut scratch = GemmScratch::default();
+        gemm_nt(
+            self.rows,
+            other.cols,
+            self.cols,
+            &self.data,
+            self.cols,
+            &bt.data,
+            self.cols,
+            &mut out.data,
+            other.cols,
+            &mut scratch,
+        );
         out
     }
 
@@ -201,6 +190,117 @@ pub fn axpy(a: &[f64], c: f64, b: &[f64]) -> Vec<f64> {
     a.iter().zip(b).map(|(x, y)| x + c * y).collect()
 }
 
+/// Rows per micro-tile of the [`gemm_nt`] register kernel.
+const GEMM_MR: usize = 4;
+/// Columns per micro-tile of the [`gemm_nt`] register kernel.
+const GEMM_NR: usize = 8;
+
+/// Reusable packing buffers for [`gemm_nt`]: the whole A panel in
+/// `[k][MR]` micro-column order and one B micro-panel in `[k][NR]`
+/// order, so the micro-kernel reads contiguous, broadcast-friendly
+/// memory at every step of the inner loop. Hold one per thread and
+/// reuse it across calls — packing reallocates only on growth.
+#[derive(Debug, Default)]
+pub struct GemmScratch {
+    ap: Vec<f64>,
+    bp: Vec<f64>,
+}
+
+/// `c[i*ldc + j] = dot(a_row_i, b_row_j)` — the "NT" product `A Bᵀ` of
+/// two row-major slabs `a` (`m` rows, stride `lda`) and `b` (`n` rows,
+/// stride `ldb`), overwriting the `m x n` region of `c` (stride `ldc`).
+///
+/// This is the workhorse behind [`Mat::matmul`] and the fused panel
+/// kernel engine's cross terms (`crate::kernels::fused`): both operands
+/// walk rows, so the inner dimension is contiguous on each side, and
+/// packing into micro-panels lets the 4x8 accumulator tile vectorize.
+/// Every output element is one ascending-`k` dot product with a single
+/// accumulator, so the result is bit-identical to the naive loop (and
+/// independent of the blocking).
+#[allow(clippy::too_many_arguments)]
+pub fn gemm_nt(
+    m: usize,
+    n: usize,
+    k: usize,
+    a: &[f64],
+    lda: usize,
+    b: &[f64],
+    ldb: usize,
+    c: &mut [f64],
+    ldc: usize,
+    scratch: &mut GemmScratch,
+) {
+    if m == 0 || n == 0 {
+        return;
+    }
+    if m < 3 || k == 0 {
+        // Degenerate heights (serving single rows) are plain dot
+        // products; packing would cost as much as the compute.
+        for r in 0..m {
+            let ar = &a[r * lda..r * lda + k];
+            for j in 0..n {
+                c[r * ldc + j] = dot(ar, &b[j * ldb..j * ldb + k]);
+            }
+        }
+        return;
+    }
+    // Pack A once: micro-blocks of MR rows, [k][MR] layout, zero-padded
+    // so the edge block runs the same kernel.
+    let mblocks = m.div_ceil(GEMM_MR);
+    scratch.ap.clear();
+    scratch.ap.resize(mblocks * k * GEMM_MR, 0.0);
+    for ib in 0..mblocks {
+        let base = ib * k * GEMM_MR;
+        let rmax = (m - ib * GEMM_MR).min(GEMM_MR);
+        for r in 0..rmax {
+            let arow = &a[(ib * GEMM_MR + r) * lda..(ib * GEMM_MR + r) * lda + k];
+            for (kk, &av) in arow.iter().enumerate() {
+                scratch.ap[base + kk * GEMM_MR + r] = av;
+            }
+        }
+    }
+    scratch.bp.clear();
+    scratch.bp.resize(k * GEMM_NR, 0.0);
+    let mut j0 = 0;
+    while j0 < n {
+        let nb = (n - j0).min(GEMM_NR);
+        // Pack one B micro-panel ([k][NR]); every lane is written each
+        // round, so the buffer carries no stale state between panels.
+        for jj in 0..GEMM_NR {
+            if jj < nb {
+                let brow = &b[(j0 + jj) * ldb..(j0 + jj) * ldb + k];
+                for (kk, &bv) in brow.iter().enumerate() {
+                    scratch.bp[kk * GEMM_NR + jj] = bv;
+                }
+            } else {
+                for kk in 0..k {
+                    scratch.bp[kk * GEMM_NR + jj] = 0.0;
+                }
+            }
+        }
+        for ib in 0..mblocks {
+            let base = ib * k * GEMM_MR;
+            let mut acc = [[0.0f64; GEMM_NR]; GEMM_MR];
+            for kk in 0..k {
+                let ap = &scratch.ap[base + kk * GEMM_MR..base + kk * GEMM_MR + GEMM_MR];
+                let bp = &scratch.bp[kk * GEMM_NR..kk * GEMM_NR + GEMM_NR];
+                for r in 0..GEMM_MR {
+                    let av = ap[r];
+                    for jj in 0..GEMM_NR {
+                        acc[r][jj] += av * bp[jj];
+                    }
+                }
+            }
+            let rmax = (m - ib * GEMM_MR).min(GEMM_MR);
+            for r in 0..rmax {
+                let row = ib * GEMM_MR + r;
+                c[row * ldc + j0..row * ldc + j0 + nb].copy_from_slice(&acc[r][..nb]);
+            }
+        }
+        j0 += GEMM_NR;
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -221,7 +321,7 @@ mod tests {
 
     #[test]
     fn tiled_matmul_matches_naive_past_tile_edge() {
-        // Sizes straddling MM_TILE (64) with odd remainders.
+        // Sizes straddling the gemm micro-tiles with odd remainders.
         let mut rng = Rng::new(9);
         let a = Mat::randn(70, 65, &mut rng);
         let b = Mat::randn(65, 67, &mut rng);
@@ -237,6 +337,47 @@ mod tests {
             }
         }
         assert!(got.max_abs_diff(&want) < 1e-12);
+    }
+
+    #[test]
+    fn gemm_nt_matches_naive_dots_across_edge_shapes() {
+        // Straddle MR (4) and NR (8) with odd remainders, plus the
+        // short-m fallback path and k = 0.
+        let mut rng = Rng::new(11);
+        for (m, n, k) in [(1usize, 5usize, 7usize), (2, 9, 3), (5, 17, 6), (13, 23, 1), (4, 8, 0)]
+        {
+            let a = Mat::randn(m, k, &mut rng);
+            let b = Mat::randn(n, k, &mut rng);
+            let mut c = vec![f64::NAN; m * n];
+            let mut scratch = GemmScratch::default();
+            gemm_nt(m, n, k, &a.data, k, &b.data, k, &mut c, n, &mut scratch);
+            for i in 0..m {
+                for j in 0..n {
+                    let want = dot(a.row(i), b.row(j));
+                    assert_eq!(c[i * n + j], want, "({i},{j}) m={m} n={n} k={k}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn gemm_nt_respects_leading_dimensions() {
+        // Write a 3x5 product into the top-left corner of a wider slab.
+        let mut rng = Rng::new(12);
+        let a = Mat::randn(3, 4, &mut rng);
+        let b = Mat::randn(5, 4, &mut rng);
+        let ldc = 9;
+        let mut c = vec![-7.0f64; 3 * ldc];
+        let mut scratch = GemmScratch::default();
+        gemm_nt(3, 5, 4, &a.data, 4, &b.data, 4, &mut c, ldc, &mut scratch);
+        for i in 0..3 {
+            for j in 0..5 {
+                assert_eq!(c[i * ldc + j], dot(a.row(i), b.row(j)));
+            }
+            for j in 5..ldc {
+                assert_eq!(c[i * ldc + j], -7.0, "untouched tail overwritten");
+            }
+        }
     }
 
     #[test]

@@ -436,7 +436,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
     // (in practice: until the process is killed).
     let live = server.metrics().clone();
     let stats = serve_predictor(
-        &BackendPredictor { backend: backend.as_dyn(), model: &model },
+        &BackendPredictor::new(backend.as_dyn(), &model),
         rx,
         &batch_cfg,
         Some(live.batcher()),

@@ -346,7 +346,7 @@ mod tests {
             let backend = HostBackend::new(1);
             let model = toy_model();
             serve_predictor(
-                &BackendPredictor { backend: &backend, model: &model },
+                &BackendPredictor::new(&backend, &model),
                 rx,
                 &ServerConfig::default(),
                 Some(live.batcher()),

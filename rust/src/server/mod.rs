@@ -19,6 +19,7 @@
 
 use crate::backend::Backend;
 use crate::config::KernelKind;
+use crate::kernels::fused;
 use std::sync::mpsc;
 use std::sync::Mutex;
 use std::time::{Duration, Instant};
@@ -109,11 +110,27 @@ pub trait Predictor {
 }
 
 /// Predictor over any compute backend: batches run through
-/// [`Backend::predict`] (tiled `kmv` artifacts on PJRT, parallel
-/// cache-blocked panels on the host engine).
+/// [`Backend::predict_with_norms`] (tiled `kmv` artifacts on PJRT, the
+/// fused panel engine on the host).
 pub struct BackendPredictor<'a> {
-    pub backend: &'a dyn Backend,
-    pub model: &'a ModelSnapshot,
+    backend: &'a dyn Backend,
+    model: &'a ModelSnapshot,
+    /// Squared row norms of the model slab, computed once per snapshot:
+    /// without the cache every single-row request would pay an O(n d)
+    /// norm pass comparable to its whole kernel product. Empty when
+    /// the kernel's panel path ignores norms (Laplacian).
+    train_sq_norms: Vec<f64>,
+}
+
+impl<'a> BackendPredictor<'a> {
+    pub fn new(backend: &'a dyn Backend, model: &'a ModelSnapshot) -> BackendPredictor<'a> {
+        let train_sq_norms = if fused::uses_norms(model.kernel) {
+            fused::sq_norms(&model.x_train, model.n, model.d)
+        } else {
+            Vec::new()
+        };
+        BackendPredictor { backend, model, train_sq_norms }
+    }
 }
 
 impl Predictor for BackendPredictor<'_> {
@@ -123,7 +140,17 @@ impl Predictor for BackendPredictor<'_> {
 
     fn predict_batch(&self, x_eval: &[f64], rows: usize) -> anyhow::Result<Vec<f64>> {
         let m = self.model;
-        self.backend.predict(m.kernel, &m.x_train, m.n, m.d, &m.weights, x_eval, rows, m.sigma)
+        self.backend.predict_with_norms(
+            m.kernel,
+            &m.x_train,
+            m.n,
+            m.d,
+            &m.weights,
+            x_eval,
+            rows,
+            m.sigma,
+            Some(&self.train_sq_norms),
+        )
     }
 }
 
@@ -138,7 +165,7 @@ pub fn serve(
     rx: mpsc::Receiver<Request>,
     cfg: &ServerConfig,
 ) -> ServerStats {
-    serve_predictor(&BackendPredictor { backend, model }, rx, cfg, None)
+    serve_predictor(&BackendPredictor::new(backend, model), rx, cfg, None)
 }
 
 /// Run the serving loop over any [`Predictor`] until the request channel
@@ -292,7 +319,7 @@ mod tests {
             weights: vec![1.0, 0.0],
         };
         let backend = HostBackend::new(2);
-        let p = BackendPredictor { backend: &backend, model: &model };
+        let p = BackendPredictor::new(&backend, &model);
         let (tx, rx) = mpsc::channel::<Request>();
         let (rtx, rrx) = mpsc::channel();
         tx.send(Request { features: vec![0.0, 0.0], reply: rtx }).unwrap();
@@ -321,7 +348,7 @@ mod tests {
         tx.send(Request { features: vec![0.0, 0.0], reply: rtx1 }).unwrap();
         tx.send(Request { features: vec![0.0], reply: rtx2 }).unwrap();
         drop(tx);
-        let p = BackendPredictor { backend: &backend, model: &model };
+        let p = BackendPredictor::new(&backend, &model);
         serve_predictor(&p, rx, &ServerConfig::default(), None);
         assert!(rrx1.recv().unwrap().is_ok());
         assert!(rrx2.recv().unwrap().is_err());

@@ -192,6 +192,7 @@ impl Solver for AskotchSolver {
                             &problem.train.y,
                             problem.sigma,
                             problem.lam,
+                            Some(&problem.train_sq_norms),
                         )?
                     }
                 } else {

@@ -107,7 +107,8 @@ impl Solver for EigenProSolver {
                 xb[k * d..(k + 1) * d].copy_from_slice(problem.train.row(i));
             }
             // grad_k = K(x_k, :) w - y_k (lambda = 0), via the backend
-            let kw = backend.kernel_matvec(
+            // with the problem's cached train-slab norms
+            let kw = backend.kernel_matvec_with_norms(
                 problem.kernel,
                 &xb,
                 bg,
@@ -116,6 +117,7 @@ impl Solver for EigenProSolver {
                 d,
                 &w,
                 problem.sigma,
+                Some(&problem.train_sq_norms),
             )?;
             let grad: Vec<f64> =
                 (0..bg).map(|k| kw[k] - problem.train.y[batch[k]]).collect();

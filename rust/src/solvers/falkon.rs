@@ -11,6 +11,7 @@
 use crate::backend::Backend;
 use crate::config::ExperimentConfig;
 use crate::coordinator::{Budget, KrrProblem, SolveReport};
+use crate::kernels::fused;
 use crate::linalg::{dense, Chol};
 use crate::metrics::{Trace, TracePoint};
 use crate::solvers::{eval_every, looks_diverged, Observer, Solver};
@@ -70,6 +71,10 @@ impl Solver for FalkonSolver {
         for &c in &centers {
             xm.extend_from_slice(problem.train.row(c));
         }
+        // Norm caches for the two slabs every CG iteration multiplies
+        // against: the inducing points (computed once here) and the
+        // training slab (cached on the problem).
+        let xm_sq = fused::sq_norms(&xm, m, d);
 
         // K_mm and its Cholesky preconditioner (the O(m^2)/O(m^3) cost).
         let kmm =
@@ -80,7 +85,7 @@ impl Solver for FalkonSolver {
 
         // Operator A(v) = K_nm^T (K_nm v) + lam K_mm v via the backend.
         let apply = |v: &[f64]| -> anyhow::Result<Vec<f64>> {
-            let t = backend.kernel_matvec(
+            let t = backend.kernel_matvec_with_norms(
                 problem.kernel,
                 &problem.train.x,
                 n,
@@ -89,8 +94,9 @@ impl Solver for FalkonSolver {
                 d,
                 v,
                 problem.sigma,
+                Some(&xm_sq),
             )?;
-            let mut s = backend.kernel_matvec(
+            let mut s = backend.kernel_matvec_with_norms(
                 problem.kernel,
                 &xm,
                 m,
@@ -99,6 +105,7 @@ impl Solver for FalkonSolver {
                 d,
                 &t,
                 problem.sigma,
+                Some(&problem.train_sq_norms),
             )?;
             let kv = kmm.matvec(v);
             for i in 0..m {
@@ -108,7 +115,7 @@ impl Solver for FalkonSolver {
         };
 
         // rhs = K_nm^T y.
-        let rhs = backend.kernel_matvec(
+        let rhs = backend.kernel_matvec_with_norms(
             problem.kernel,
             &xm,
             m,
@@ -117,6 +124,7 @@ impl Solver for FalkonSolver {
             d,
             &problem.train.y,
             problem.sigma,
+            Some(&problem.train_sq_norms),
         )?;
         let rhs_norm = dense::norm(&rhs).max(1e-300);
 
@@ -159,7 +167,7 @@ impl Solver for FalkonSolver {
                     break;
                 }
                 // Inducing-points prediction: K(test, Xm) w.
-                let pred = backend.predict(
+                let pred = backend.predict_with_norms(
                     problem.kernel,
                     &xm,
                     m,
@@ -168,6 +176,7 @@ impl Solver for FalkonSolver {
                     &problem.test.x,
                     problem.test.n,
                     problem.sigma,
+                    Some(&xm_sq),
                 )?;
                 let metric = crate::metrics::task_metric(problem.task, &pred, &problem.test.y);
                 let rel = dense::norm(&res) / rhs_norm;

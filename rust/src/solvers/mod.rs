@@ -90,7 +90,7 @@ pub fn eval_point(
     residual: f64,
     obs: &mut dyn Observer,
 ) -> anyhow::Result<f64> {
-    let pred = backend.predict(
+    let pred = backend.predict_with_norms(
         problem.kernel,
         &problem.train.x,
         problem.n(),
@@ -99,6 +99,7 @@ pub fn eval_point(
         &problem.test.x,
         problem.test.n,
         problem.sigma,
+        Some(&problem.train_sq_norms),
     )?;
     let metric = crate::metrics::task_metric(problem.task, &pred, &problem.test.y);
     let point = TracePoint { iter, secs, metric, residual };

@@ -161,7 +161,7 @@ impl PcgSolver {
             let idx: Vec<usize> = (0..n).collect();
             Ok(kernels::rows_matvec(problem.kernel, &problem.train.x, n, d, &idx, v, problem.sigma))
         } else {
-            backend.kernel_matvec(
+            backend.kernel_matvec_with_norms(
                 problem.kernel,
                 &problem.train.x,
                 n,
@@ -170,6 +170,7 @@ impl PcgSolver {
                 d,
                 v,
                 problem.sigma,
+                Some(&problem.train_sq_norms),
             )
         }
     }

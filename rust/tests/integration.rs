@@ -112,6 +112,7 @@ fn relative_residual_zero_at_exact_solution() {
         &y,
         1.0,
         lam,
+        None,
     )
     .unwrap();
     assert!(res < 5e-4, "residual at exact solution: {res}");

@@ -74,7 +74,7 @@ fn start_stack(
     let batcher = std::thread::spawn(move || {
         let backend = HostBackend::auto_threads();
         serve_predictor(
-            &BackendPredictor { backend: &backend, model: &model },
+            &BackendPredictor::new(&backend, &model),
             rx,
             &ServerConfig::default(),
             Some(live.batcher()),
