@@ -1,7 +1,14 @@
-//! Networked serving demo: train once, stand up the real HTTP/1.1
-//! prediction service, then hammer it with concurrent keep-alive
-//! clients over TCP and report latency percentiles, throughput, and the
-//! server's own `/metrics` view.
+//! Model-lifecycle serving demo: **train once, persist, serve
+//! cold-start-free, hot-swap under load**.
+//!
+//! 1. Train ASkotch on a synthetic task and save the model as an
+//!    on-disk artifact (`askotch train --save` in library form).
+//! 2. Load the artifact back — no retraining — and stand up the real
+//!    HTTP/1.1 prediction service over it.
+//! 3. Hammer it with concurrent keep-alive clients over TCP while one
+//!    client hot-swaps the served model via `POST /v1/admin/reload`.
+//! 4. Report latency percentiles, throughput, the server's own
+//!    `/metrics` view, and `time_to_first_prediction`.
 //!
 //! ```bash
 //! cargo run --release --example serve
@@ -17,9 +24,10 @@ use askotch::coordinator::{Budget, KrrProblem};
 use askotch::data::synthetic;
 use askotch::json::ToJson;
 use askotch::metrics::percentile;
+use askotch::model::ModelArtifact;
 use askotch::net::wire::PredictRequest;
 use askotch::net::{http, NetConfig, Server};
-use askotch::server::{serve_predictor, BackendPredictor, ModelSnapshot, Request, ServerConfig};
+use askotch::server::{serve_reloadable, Job, ServerConfig};
 use askotch::solvers::askotch::{AskotchConfig, AskotchSolver};
 use askotch::solvers::Solver;
 use askotch::util::fmt;
@@ -28,14 +36,15 @@ use std::net::{SocketAddr, TcpStream};
 use std::sync::mpsc;
 
 /// One keep-alive HTTP POST on an open connection; returns (status, body).
-fn post_predict(
+fn post(
     stream: &mut TcpStream,
     reader: &mut BufReader<TcpStream>,
+    path: &str,
     body: &str,
 ) -> anyhow::Result<(u16, String)> {
     write!(
         stream,
-        "POST /v1/predict HTTP/1.1\r\nhost: demo\r\ncontent-length: {}\r\n\r\n{}",
+        "POST {path} HTTP/1.1\r\nhost: demo\r\ncontent-length: {}\r\n\r\n{}",
         body.len(),
         body
     )?;
@@ -55,7 +64,8 @@ fn client_loop(addr: SocketAddr, rows: Vec<Vec<f64>>) -> Vec<f64> {
     for row in rows {
         let body = features_json(&row);
         let t0 = std::time::Instant::now();
-        let (status, resp) = post_predict(&mut stream, &mut reader, &body).expect("request");
+        let (status, resp) =
+            post(&mut stream, &mut reader, "/v1/predict", &body).expect("request");
         lat.push(t0.elapsed().as_secs_f64());
         assert_eq!(status, 200, "predict failed: {resp}");
     }
@@ -63,29 +73,45 @@ fn client_loop(addr: SocketAddr, rows: Vec<Vec<f64>>) -> Vec<f64> {
 }
 
 fn main() -> anyhow::Result<()> {
-    // --- train ------------------------------------------------------------
+    // --- train once -------------------------------------------------------
     let ds = synthetic::taxi_like(2000, 9, 1).standardized();
     let problem = KrrProblem::from_dataset(ds, KernelKind::Rbf, BandwidthSpec::Auto, 1e-6, 0)?;
     let any_backend = AnyBackend::auto("artifacts")?;
     let backend = any_backend.as_dyn();
     println!("backend: {}", backend.name());
+    let t_train = std::time::Instant::now();
     let mut solver = AskotchSolver::new(AskotchConfig { rank: 20, ..Default::default() }, true);
     let report = solver.run(backend, &problem, &Budget::iterations(400))?;
-    println!("trained askotch: test MAE {:.3}", report.final_metric);
+    println!(
+        "trained askotch in {}: test MAE {:.3}",
+        fmt::duration(t_train.elapsed().as_secs_f64()),
+        report.final_metric
+    );
 
-    let model = ModelSnapshot {
-        kernel: problem.kernel,
-        sigma: problem.sigma,
-        x_train: problem.train.x.clone(),
-        n: problem.n(),
-        d: problem.d(),
-        weights: report.weights.clone(),
-    };
+    // --- persist the artifact (train --save) -----------------------------
+    let mut model_dir = std::env::temp_dir();
+    model_dir.push(format!("askotch_serve_demo_{}", std::process::id()));
+    let model_dir = model_dir.to_string_lossy().to_string();
+    ModelArtifact::from_solve(&problem, &report, 0)?.save(&model_dir)?;
+    println!("model artifact saved to {model_dir}");
+
+    // --- cold-start-free load (serve --model) ----------------------------
+    let t_load = std::time::Instant::now();
+    let artifact = ModelArtifact::load(&model_dir)?;
+    println!(
+        "model loaded back in {} (vs {} of training) — this is the whole point",
+        fmt::duration(t_load.elapsed().as_secs_f64()),
+        fmt::duration(t_train.elapsed().as_secs_f64()),
+    );
+    let meta = artifact.meta.summary_json();
+    let snapshot = artifact.into_snapshot();
 
     // --- serve over real TCP ---------------------------------------------
     let net_cfg = NetConfig { addr: "127.0.0.1:0".into(), threads: 4, ..Default::default() };
-    let (tx, rx) = mpsc::channel::<Request>();
+    let (tx, rx) = mpsc::channel::<Job>();
     let server = Server::start(&net_cfg, tx)?;
+    server.metrics().set_model_info(meta);
+    let live = server.metrics().clone();
     let addr = server.addr();
     println!("serving on http://{addr}");
 
@@ -99,12 +125,26 @@ fn main() -> anyhow::Result<()> {
             .collect();
         clients.push(std::thread::spawn(move || client_loop(addr, rows)));
     }
+    // A fifth client hot-swaps the served model mid-load: the reload is
+    // applied between batches, so none of the concurrent predictions
+    // above are dropped.
+    let reload_dir = model_dir.clone();
+    let reloader = std::thread::spawn(move || {
+        let mut stream = TcpStream::connect(addr).expect("connect");
+        let mut reader = BufReader::new(stream.try_clone().expect("clone"));
+        let body = format!("{{\"model\":{}}}", askotch::json::Json::str(&reload_dir));
+        let (status, resp) =
+            post(&mut stream, &mut reader, "/v1/admin/reload", &body).expect("reload");
+        assert_eq!(status, 200, "reload failed: {resp}");
+        resp
+    });
 
     // When all clients finish, fetch /metrics and shut the server down;
-    // that drops the batcher senders and lets `serve_predictor` below
+    // that drops the batcher senders and lets `serve_reloadable` below
     // return on the main (engine-owning) thread.
     let shutdown = std::thread::spawn(move || {
         let mut lat: Vec<f64> = clients.into_iter().flat_map(|c| c.join().unwrap()).collect();
+        let reload_resp = reloader.join().unwrap();
         let mut stream = TcpStream::connect(addr).expect("connect");
         let mut reader = BufReader::new(stream.try_clone().expect("clone"));
         write!(stream, "GET /metrics HTTP/1.1\r\nhost: demo\r\nconnection: close\r\n\r\n").unwrap();
@@ -113,27 +153,30 @@ fn main() -> anyhow::Result<()> {
         let metrics_body = String::from_utf8(body).expect("utf8");
         server.shutdown();
         lat.sort_by(|a, b| a.partial_cmp(b).unwrap());
-        (lat, metrics_body)
+        (lat, metrics_body, reload_resp)
     });
 
     let t0 = std::time::Instant::now();
-    let stats = serve_predictor(
-        &BackendPredictor::new(backend, &model),
+    let stats = serve_reloadable(
+        backend,
+        snapshot,
         rx,
         &ServerConfig::default(),
-        None,
+        Some(live.batcher()),
+        Some(live.model_slot()),
     );
     let wall = t0.elapsed().as_secs_f64();
-    let (lat, metrics_body) = shutdown.join().unwrap();
+    let (lat, metrics_body, reload_resp) = shutdown.join().unwrap();
 
     println!(
-        "served {} requests over TCP in {} ({:.0} req/s)",
+        "served {} requests over TCP in {} ({:.0} req/s), {} hot reload(s)",
         stats.requests,
         fmt::duration(wall),
-        stats.requests as f64 / wall
+        stats.requests as f64 / wall,
+        stats.reloads
     );
     println!(
-        "batches: {} (mean size {:.1}, max {}) — batching amortizes the artifact call",
+        "batches: {} (mean size {:.1}, max {}) — batching amortizes the kernel product",
         stats.batches,
         stats.mean_batch(),
         stats.max_batch_seen
@@ -144,6 +187,11 @@ fn main() -> anyhow::Result<()> {
         fmt::duration(percentile(&lat, 0.90)),
         fmt::duration(percentile(&lat, 0.99))
     );
+    println!("POST /v1/admin/reload said: {reload_resp}");
+    if let Some(ttfp) = live.time_to_first_prediction() {
+        println!("time_to_first_prediction: {} (no training at serve time)", fmt::duration(ttfp));
+    }
     println!("GET /metrics said:\n{}", askotch::json::parse(&metrics_body)?.pretty());
+    let _ = std::fs::remove_dir_all(&model_dir);
     Ok(())
 }

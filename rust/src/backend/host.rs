@@ -41,7 +41,8 @@ use crate::config::{KernelKind, RhoMode};
 use crate::coordinator::KrrProblem;
 use crate::kernels::fused::PANEL_TARGET_BYTES;
 use crate::kernels::{self, fused};
-use crate::linalg::{dense, eig, Chol, Mat};
+use crate::linalg::{chol_jittered, dense, nystrom_b_factor, Mat, Woodbury};
+use crate::solvers::state::Checkpoint;
 use crate::util::Rng;
 
 /// Default square tile edge for symmetric assembly.
@@ -737,7 +738,7 @@ impl SapStepper for HostSapStepper<'_> {
             let noise_floor = 50.0 * f64::EPSILON * b_factor.fro().powi(2);
             let rho = if self.damped { lam + lam_r.max(noise_floor) } else { lam };
 
-            let wb = Woodbury::new(&b_factor, gram, rho)?;
+            let wb = Woodbury::new(b_factor, gram, rho)?;
             // get_L: lambda_max((K_hat + rho I)^{-1} (K_BB + lam I)) by
             // powering; Lemma 8's stepsize clamp eta = 1 / max(1, L_PB).
             let l_pb = power_max_eig(
@@ -805,76 +806,42 @@ impl SapStepper for HostSapStepper<'_> {
         let scratch = self.b * (self.problem.d() + 2) * 8;
         iterates + sketch + scratch
     }
-}
 
-// ---------------------------------------------------------------------------
-// f64 twins of python/compile/nystrom.py + linalg.py
-// ---------------------------------------------------------------------------
-
-/// Nystrom sketch of an spd (b, b) matrix in B-factor form:
-/// `K_hat = B B^T` with `B = Y C^{-T}`, `Y = (K + shift I) Q`,
-/// `C C^T = Q^T Y` (Tropp et al. 2017, Alg. 3 without the SVD).
-fn nystrom_b_factor(kbb: &Mat, mut omega: Mat) -> anyhow::Result<Mat> {
-    let b = kbb.rows;
-    let r = omega.cols;
-    eig::orthonormalize_cols(&mut omega);
-    let trace: f64 = (0..b).map(|i| kbb[(i, i)]).sum();
-    let shift = f64::EPSILON * trace;
-    let mut y = kbb.matmul(&omega);
-    for (yv, qv) in y.data.iter_mut().zip(&omega.data) {
-        *yv += shift * qv;
-    }
-    let m = omega.t().matmul(&y);
-    let core_trace: f64 = (0..r).map(|i| m[(i, i)]).sum();
-    let ch = chol_jittered(&m, 10.0 * f64::EPSILON * core_trace)?;
-    let mut b_factor = Mat::zeros(b, r);
-    for i in 0..b {
-        let bi = ch.solve_lower(y.row(i));
-        b_factor.row_mut(i).copy_from_slice(&bi);
-    }
-    Ok(b_factor)
-}
-
-/// Cholesky with an escalating jitter ladder: f64 kernel blocks of very
-/// smooth kernels are numerically rank-deficient, and a fixed jitter
-/// occasionally underruns the rounding of the largest eigenvalue.
-fn chol_jittered(a: &Mat, base: f64) -> anyhow::Result<Chol> {
-    let mut jitter = base.max(1e-300);
-    for _ in 0..4 {
-        if let Ok(ch) = Chol::new(a, jitter) {
-            return Ok(ch);
+    fn export_state(&self, ck: &mut Checkpoint) {
+        // Precision tag: a checkpoint from the f32 PJRT stepper must
+        // not silently resume here (bit-for-bit would be broken).
+        ck.push_scalar("sap_precision", 64.0);
+        ck.push_rng("sap_rng", self.rng.state());
+        ck.push_vec("w", self.w.clone());
+        if self.accelerated {
+            ck.push_vec("v", self.v.clone());
+            ck.push_vec("z", self.z.clone());
         }
-        jitter *= 1e4;
-    }
-    Chol::new(a, jitter)
-}
-
-/// Woodbury application of `(B B^T + rho I)^{-1}` through the r x r core.
-struct Woodbury<'m> {
-    b_factor: &'m Mat,
-    core: Chol,
-    rho: f64,
-}
-
-impl<'m> Woodbury<'m> {
-    /// `gram` must be `b_factor.gram()` (B^T B) — taken by value so the
-    /// per-step Gram is computed once and shared with the lambda_r
-    /// powering.
-    fn new(b_factor: &'m Mat, gram: Mat, rho: f64) -> anyhow::Result<Woodbury<'m>> {
-        let mut core = gram;
-        core.add_diag(rho);
-        let core_trace: f64 = (0..core.rows).map(|i| core[(i, i)]).sum();
-        let core = chol_jittered(&core, 1e-14 * core_trace)?;
-        Ok(Woodbury { b_factor, core, rho })
     }
 
-    fn apply(&self, g: &[f64]) -> Vec<f64> {
-        let btg = self.b_factor.matvec_t(g);
-        let s = self.core.solve(&btg);
-        let bs = self.b_factor.matvec(&s);
-        g.iter().zip(&bs).map(|(x, y)| (x - y) / self.rho).collect()
+    fn import_state(&mut self, ck: &Checkpoint) -> anyhow::Result<()> {
+        let prec = ck.scalar("sap_precision")?;
+        anyhow::ensure!(
+            prec == 64.0,
+            "checkpoint was taken on a {prec}-bit SAP stepper; this is the 64-bit host \
+             stepper — resume on the original backend"
+        );
+        let n = self.problem.n();
+        self.rng = Rng::from_state(ck.rng("sap_rng")?);
+        self.w = ck.vec("w", n)?.to_vec();
+        if self.accelerated {
+            self.v = ck.vec("v", n)?.to_vec();
+            self.z = ck.vec("z", n)?.to_vec();
+        }
+        Ok(())
     }
 }
+
+// ---------------------------------------------------------------------------
+// f64 twins of python/compile/linalg.py (the Nystrom B-factor and the
+// Woodbury application moved to `crate::linalg::factor`, shared with
+// the PCG preconditioner)
+// ---------------------------------------------------------------------------
 
 /// Largest eigenvalue of an (implicitly) spd operator by normalized
 /// powering; returns the final norm-ratio estimate (`power_max_eig` in
@@ -978,6 +945,46 @@ mod tests {
         let want = kernels::matrix(KernelKind::Matern52, &x1, n1, &x2, n2, d, 1.4);
         let got = HostBackend::new(4).kernel_matrix(KernelKind::Matern52, &x1, n1, &x2, n2, d, 1.4);
         assert!(got.max_abs_diff(&want) < 1e-8);
+    }
+
+    #[test]
+    fn sap_stepper_state_roundtrip_resumes_bit_for_bit() {
+        use crate::backend::SapOptions;
+        use crate::config::{BandwidthSpec, RhoMode};
+        use crate::data::synthetic;
+
+        let ds = synthetic::taxi_like(150, 5, 3).standardized();
+        let problem =
+            crate::coordinator::KrrProblem::from_dataset(ds, KernelKind::Rbf, BandwidthSpec::Auto, 1e-6, 0)
+                .unwrap();
+        let backend = HostBackend::new(2);
+        let opts = SapOptions {
+            rank: 8,
+            accelerated: true,
+            identity: false,
+            rho: RhoMode::Damped,
+            seed: 7,
+        };
+        let mut a = backend.sap_stepper(&problem, &opts).unwrap();
+        let b = a.block_size();
+        let blocks: Vec<Vec<usize>> =
+            (0..5).map(|i| (0..b).map(|k| (i * 13 + k * 7) % problem.n()).collect()).collect();
+        for blk in &blocks[..3] {
+            a.step(blk).unwrap();
+        }
+        let mut ck = Checkpoint::new("sap", "test", &problem.name, 3, 0.0);
+        a.export_state(&mut ck);
+        for blk in &blocks[3..] {
+            a.step(blk).unwrap();
+        }
+        let mut fresh = backend.sap_stepper(&problem, &opts).unwrap();
+        fresh.import_state(&ck).unwrap();
+        for blk in &blocks[3..] {
+            fresh.step(blk).unwrap();
+        }
+        for (x, y) in a.weights().iter().zip(fresh.weights()) {
+            assert_eq!(x.to_bits(), y.to_bits(), "resumed stepper diverged: {x} vs {y}");
+        }
     }
 
     #[test]

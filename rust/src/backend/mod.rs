@@ -24,6 +24,7 @@ use crate::config::{BackendKind, KernelKind, RhoMode};
 use crate::coordinator::KrrProblem;
 use crate::kernels;
 use crate::linalg::Mat;
+use crate::solvers::state::Checkpoint;
 
 pub mod host;
 pub mod pjrt;
@@ -66,6 +67,16 @@ pub trait SapStepper {
     /// Explicitly-allocated iterate/sketch state, for the Table 1/2
     /// storage accounting.
     fn state_bytes(&self) -> usize;
+
+    /// Append the stepper's resumable core (iterate vectors + RNG
+    /// streams) to `ck`. Section names are stepper-private;
+    /// [`SapStepper::import_state`] must accept its own export, and a
+    /// resumed stepper must continue bit-for-bit.
+    fn export_state(&self, ck: &mut Checkpoint);
+
+    /// Restore a core previously captured by [`SapStepper::export_state`]
+    /// on an identically-configured stepper.
+    fn import_state(&mut self, ck: &Checkpoint) -> anyhow::Result<()>;
 }
 
 /// A compute backend: the kernel-product engine behind every solver,

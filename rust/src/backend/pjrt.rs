@@ -17,6 +17,7 @@ use crate::coordinator::runtime_ops::{slab_to_f32_padded, vec_to_f32_padded};
 use crate::coordinator::KrrProblem;
 use crate::runtime::manifest::ShapeKey;
 use crate::runtime::{tensor, Engine};
+use crate::solvers::state::Checkpoint;
 use crate::util::Rng;
 use std::rc::Rc;
 
@@ -299,5 +300,37 @@ impl SapStepper for PjrtSapStepper<'_> {
 
     fn state_bytes(&self) -> usize {
         (if self.accelerated { 3 } else { 1 }) * self.np * 4 + self.b * self.r * 4 + self.b * 4
+    }
+
+    fn export_state(&self, ck: &mut Checkpoint) {
+        // f32 iterates widen to f64 losslessly, so the checkpoint
+        // schema stays one f64 slab format across backends. The
+        // precision tag stops a host (f64) resume of this f32 state —
+        // and vice versa — from silently breaking bit-for-bit.
+        let widen = |v: &[f32]| v.iter().map(|&x| x as f64).collect::<Vec<f64>>();
+        ck.push_scalar("sap_precision", 32.0);
+        ck.push_rng("sap_rng", self.rng.state());
+        ck.push_vec("w", widen(&self.w));
+        if self.accelerated {
+            ck.push_vec("v", widen(&self.v));
+            ck.push_vec("z", widen(&self.z));
+        }
+    }
+
+    fn import_state(&mut self, ck: &Checkpoint) -> anyhow::Result<()> {
+        let prec = ck.scalar("sap_precision")?;
+        anyhow::ensure!(
+            prec == 32.0,
+            "checkpoint was taken on a {prec}-bit SAP stepper; this is the 32-bit PJRT \
+             stepper — resume on the original backend"
+        );
+        let narrow = |v: &[f64]| v.iter().map(|&x| x as f32).collect::<Vec<f32>>();
+        self.rng = Rng::from_state(ck.rng("sap_rng")?);
+        self.w = narrow(ck.vec("w", self.np)?);
+        if self.accelerated {
+            self.v = narrow(ck.vec("v", self.np)?);
+            self.z = narrow(ck.vec("z", self.np)?);
+        }
+        Ok(())
     }
 }

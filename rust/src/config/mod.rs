@@ -339,6 +339,12 @@ pub struct ExperimentConfig {
     pub track_residual: bool,
     /// Compute backend to dispatch the solve through.
     pub backend: BackendKind,
+    /// Checkpoint directory for resumable solves ("" = no checkpoints;
+    /// see `docs/MODELS.md`).
+    pub checkpoint_dir: String,
+    /// Write a checkpoint every this many iterations (0 with a
+    /// `checkpoint_dir` set = the coordinator's default cadence).
+    pub checkpoint_every: usize,
 }
 
 impl Default for ExperimentConfig {
@@ -360,6 +366,8 @@ impl Default for ExperimentConfig {
             time_limit_secs: 600.0,
             track_residual: false,
             backend: BackendKind::Auto,
+            checkpoint_dir: String::new(),
+            checkpoint_every: 0,
         }
     }
 }
@@ -428,6 +436,12 @@ impl ExperimentConfig {
             c.backend =
                 BackendKind::parse(d.str()?).map_err(|e| anyhow::anyhow!("{}: {e}", d.path()))?;
         }
+        if let Some(d) = root.opt_field("checkpoint_dir")? {
+            c.checkpoint_dir = d.string()?;
+        }
+        if let Some(d) = root.opt_field("checkpoint_every")? {
+            c.checkpoint_every = d.usize()?;
+        }
         Ok(c)
     }
 
@@ -460,7 +474,8 @@ mod tests {
     fn config_from_json() {
         let c = ExperimentConfig::from_json(
             r#"{"name":"t","n":4096,"kernel":"matern52","solver":"pcg",
-                "lam_unscaled":1e-8,"rank":50,"rho":"regularization"}"#,
+                "lam_unscaled":1e-8,"rank":50,"rho":"regularization",
+                "checkpoint_dir":"ckpts/t","checkpoint_every":25}"#,
         )
         .unwrap();
         assert_eq!(c.n, 4096);
@@ -468,6 +483,9 @@ mod tests {
         assert_eq!(c.solver, SolverKind::Pcg);
         assert_eq!(c.rho, RhoMode::Regularization);
         assert!((c.lam() - 4096.0 * 1e-8).abs() < 1e-12);
+        assert_eq!(c.checkpoint_dir, "ckpts/t");
+        assert_eq!(c.checkpoint_every, 25);
+        assert!(ExperimentConfig::default().checkpoint_dir.is_empty());
     }
 
     #[test]

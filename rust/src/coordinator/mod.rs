@@ -88,4 +88,60 @@ impl<'b> Coordinator<'b> {
         let budget = Budget { max_iters: cfg.max_iters, time_limit_secs: cfg.time_limit_secs };
         solver.run_observed(self.backend, &problem, &budget, obs)
     }
+
+    /// The checkpoint policy a config asks for: the config's cadence,
+    /// or [`DEFAULT_CHECKPOINT_EVERY`] when a directory is set without
+    /// one.
+    pub fn checkpoint_policy(cfg: &ExperimentConfig) -> solvers::DrivePolicy {
+        let every = if cfg.checkpoint_dir.is_empty() {
+            0
+        } else if cfg.checkpoint_every > 0 {
+            cfg.checkpoint_every
+        } else {
+            DEFAULT_CHECKPOINT_EVERY
+        };
+        solvers::DrivePolicy {
+            checkpoint_every: every,
+            checkpoint_path: cfg.checkpoint_dir.clone(),
+            ..Default::default()
+        }
+    }
+
+    /// The full solve lifecycle entry point: build the problem, bind
+    /// the solver state machine, optionally restore a
+    /// [`solvers::Checkpoint`] (the solve then continues bit-for-bit),
+    /// and drive under `policy`. Returns the problem alongside the
+    /// report so callers can package a [`crate::model::ModelArtifact`]
+    /// without rebuilding it (`askotch train --save`).
+    pub fn run_with_policy(
+        &self,
+        cfg: &ExperimentConfig,
+        obs: &mut dyn solvers::Observer,
+        policy: &solvers::DrivePolicy,
+        resume: Option<&solvers::Checkpoint>,
+    ) -> anyhow::Result<(KrrProblem, SolveReport)> {
+        let problem = self.problem(cfg)?;
+        let solver = self.solver(cfg);
+        let budget = Budget { max_iters: cfg.max_iters, time_limit_secs: cfg.time_limit_secs };
+        let t_init = std::time::Instant::now();
+        let mut state = solver.init(self.backend, &problem, &budget)?;
+        let mut policy = policy.clone();
+        if policy.eval_every == 0 {
+            policy.eval_every = solver.eval_every_override();
+        }
+        // Setup time counts against the wall budget; a resumed solve
+        // additionally continues the original run's clock.
+        policy.base_secs += t_init.elapsed().as_secs_f64();
+        if let Some(ck) = resume {
+            state.restore(ck)?;
+            policy.base_secs += ck.secs;
+        }
+        let report =
+            solvers::drive(solver.name(), state.as_mut(), &problem, &budget, obs, &policy)?;
+        Ok((problem, report))
+    }
 }
+
+/// Checkpoint cadence when a checkpoint directory is configured
+/// without an explicit `checkpoint_every`.
+pub const DEFAULT_CHECKPOINT_EVERY: usize = 50;

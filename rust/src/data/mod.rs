@@ -33,6 +33,15 @@ impl TaskKind {
             TaskKind::Regression => "MAE",
         }
     }
+
+    /// Inverse of [`TaskKind::name`] (model-artifact manifests).
+    pub fn parse(s: &str) -> anyhow::Result<TaskKind> {
+        match s {
+            "classification" => Ok(TaskKind::Classification),
+            "regression" => Ok(TaskKind::Regression),
+            _ => anyhow::bail!("unknown task kind {s:?} (classification|regression)"),
+        }
+    }
 }
 
 /// An in-memory dataset, row-major f64 features.

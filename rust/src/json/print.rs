@@ -40,12 +40,22 @@ impl fmt::Display for Json {
     }
 }
 
+/// Largest magnitude at which every integer-valued f64 is exactly
+/// representable (2^53). Above it the `fract() == 0` test is vacuous —
+/// *all* such f64s are integers — and an `as i64` cast would start
+/// printing values the f64 does not hold (and saturate past 2^63), so
+/// the integer fast path is rejected there and Rust's shortest
+/// round-trip `Display` takes over.
+const MAX_SAFE_INT: f64 = 9_007_199_254_740_992.0;
+
 fn write_num(f: &mut fmt::Formatter<'_>, x: f64) -> fmt::Result {
     if !x.is_finite() {
         write!(f, "null")
-    } else if x.fract() == 0.0 && x.abs() < 1e15 {
+    } else if x.fract() == 0.0 && x.abs() < MAX_SAFE_INT {
         write!(f, "{}", x as i64)
     } else {
+        // Rust's f64 Display is the shortest decimal that parses back
+        // to the same bits — model weights round-trip exactly.
         write!(f, "{x}")
     }
 }
@@ -134,6 +144,51 @@ mod tests {
         assert_eq!(Json::num(3.0).to_string(), "3");
         assert_eq!(Json::num(2.5).to_string(), "2.5");
         assert_eq!(Json::num(-0.0).to_string(), "0");
+    }
+
+    /// Pinned: finite f64s round-trip print -> parse **bit-for-bit**
+    /// (the model-artifact manifests and solver checkpoints rely on
+    /// it). Known, deliberate exceptions: non-finite -> null, and
+    /// -0.0 -> "0" (sign dropped by the integer path).
+    #[test]
+    fn finite_f64_roundtrips_bit_exactly() {
+        let tricky = [
+            0.1,
+            1.0 / 3.0,
+            std::f64::consts::PI,
+            1e-300,
+            f64::MIN_POSITIVE,
+            f64::MIN_POSITIVE / 8.0, // subnormal
+            f64::MAX,
+            1e15 + 1.0,              // integer above the old 1e15 cutoff
+            9007199254740991.0,      // 2^53 - 1: last exact integer
+            2.5e-17,
+            -123456.789012345,
+        ];
+        for &x in &tricky {
+            let printed = Json::num(x).to_string();
+            let back = crate::json::parse(&printed).unwrap().as_f64().unwrap();
+            assert_eq!(back.to_bits(), x.to_bits(), "{x} printed as {printed} -> {back}");
+        }
+    }
+
+    /// Pinned: values >= 2^53 with `fract() == 0` (which is *every*
+    /// f64 up there) must take the shortest-repr path, never the
+    /// `as i64` cast — the cast prints digits the float does not hold
+    /// and saturates past 2^63.
+    #[test]
+    fn large_integers_reject_the_i64_path() {
+        let two53 = 9007199254740992.0f64; // 2^53
+        for &x in &[two53, two53 + 2.0, 1e16, 1e19, 1e300, -1e300] {
+            assert_eq!(x.fract(), 0.0, "{x} must exercise the integer-valued branch");
+            let printed = Json::num(x).to_string();
+            let back = crate::json::parse(&printed).unwrap().as_f64().unwrap();
+            assert_eq!(back.to_bits(), x.to_bits(), "{x} printed as {printed} -> {back}");
+        }
+        // 1e19 overflows i64; a saturating cast would print 2^63 - 1.
+        assert!(!Json::num(1e19).to_string().contains("9223372036854775807"));
+        // Just below the boundary the exact integer path still holds.
+        assert_eq!(Json::num(9007199254740991.0).to_string(), "9007199254740991");
     }
 
     #[test]

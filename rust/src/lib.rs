@@ -55,11 +55,12 @@
 //! | [`kernels`]   | Exact scalar kernel evaluation (oracles, reference paths) |
 //! | [`linalg`]    | Dense matrices (tiled matmul), Cholesky/eigen factorizations |
 //! | [`metrics`]   | Task metrics, convergence traces, latency percentiles |
+//! | [`model`]     | Durable model artifacts + solver checkpoints (`docs/MODELS.md`) |
 //! | [`net`]       | HTTP/1.1 prediction service + typed JSON wire protocol (`docs/SERVING.md`) |
 //! | [`runtime`]   | PJRT engine, artifact manifest, host tensors |
 //! | [`sampling`]  | Block coordinate sampling (uniform, BLESS/ARLS) |
 //! | [`server`]    | Dynamic-batching model thread and [`server::Predictor`] over any backend |
-//! | [`solvers`]   | ASkotch/Skotch and the baselines (PCG, Falkon, EigenPro, Cholesky); the [`solvers::Observer`] progress hook |
+//! | [`solvers`]   | ASkotch/Skotch and the baselines as resumable state machines ([`solvers::SolveState`]); the [`solvers::Observer`] progress hook |
 //! | [`testbed`]   | The 23-task experiment runner + Markdown/JSON reporting (`docs/RESULTS.md`) |
 //! | [`testing`]   | Mini property-testing framework |
 //! | [`util`]      | RNG, CLI parsing, formatting substrates |
@@ -79,6 +80,7 @@ pub mod json;
 pub mod kernels;
 pub mod linalg;
 pub mod metrics;
+pub mod model;
 pub mod net;
 pub mod runtime;
 pub mod sampling;
@@ -97,8 +99,11 @@ pub mod prelude {
     };
     pub use crate::coordinator::{Budget, Coordinator, KrrProblem, SolveReport};
     pub use crate::data::{synthetic, Dataset, TaskKind};
+    pub use crate::model::{ModelArtifact, ModelMeta};
     pub use crate::runtime::Engine;
     pub use crate::solvers::askotch::{AskotchConfig, AskotchSolver};
-    pub use crate::solvers::{NullObserver, Observer, Solver};
+    pub use crate::solvers::{
+        Checkpoint, DrivePolicy, NullObserver, Observer, SolveState, Solver,
+    };
     pub use crate::testbed::TestbedConfig;
 }

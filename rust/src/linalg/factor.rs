@@ -1,4 +1,8 @@
-//! Cholesky factorization and triangular solves.
+//! Cholesky factorization, triangular solves, and the shared
+//! Nystrom-factor machinery: [`chol_jittered`], [`nystrom_b_factor`],
+//! and the [`Woodbury`] application of `(B B^T + rho I)^{-1}` used by
+//! both the SAP stepper (`backend::host`) and the PCG preconditioner
+//! (`solvers::pcg`).
 
 use super::dense::Mat;
 
@@ -79,6 +83,97 @@ impl Chol {
     }
 }
 
+/// Cholesky with an escalating jitter ladder: f64 kernel blocks of very
+/// smooth kernels are numerically rank-deficient, and a fixed jitter
+/// occasionally underruns the rounding of the largest eigenvalue.
+pub fn chol_jittered(a: &Mat, base: f64) -> anyhow::Result<Chol> {
+    let mut jitter = base.max(1e-300);
+    for _ in 0..4 {
+        if let Ok(ch) = Chol::new(a, jitter) {
+            return Ok(ch);
+        }
+        jitter *= 1e4;
+    }
+    Chol::new(a, jitter)
+}
+
+/// Nystrom sketch of an spd (b, b) matrix in B-factor form:
+/// `K_hat = B B^T` with `B = Y C^{-T}`, `Y = (K + shift I) Q`,
+/// `C C^T = Q^T Y` (Tropp et al. 2017, Alg. 3 without the SVD). The f64
+/// twin of `nystrom_b_factor` in `python/compile/nystrom.py`, shared by
+/// the host SAP stepper and available to any rank-r sketching caller.
+pub fn nystrom_b_factor(kbb: &Mat, mut omega: Mat) -> anyhow::Result<Mat> {
+    let b = kbb.rows;
+    let r = omega.cols;
+    super::eig::orthonormalize_cols(&mut omega);
+    let trace: f64 = (0..b).map(|i| kbb[(i, i)]).sum();
+    let shift = f64::EPSILON * trace;
+    let mut y = kbb.matmul(&omega);
+    for (yv, qv) in y.data.iter_mut().zip(&omega.data) {
+        *yv += shift * qv;
+    }
+    let m = omega.t().matmul(&y);
+    let core_trace: f64 = (0..r).map(|i| m[(i, i)]).sum();
+    let ch = chol_jittered(&m, 10.0 * f64::EPSILON * core_trace)?;
+    let mut b_factor = Mat::zeros(b, r);
+    for i in 0..b {
+        let bi = ch.solve_lower(y.row(i));
+        b_factor.row_mut(i).copy_from_slice(&bi);
+    }
+    Ok(b_factor)
+}
+
+/// Woodbury application of `(B B^T + rho I)^{-1}` through the r x r
+/// core `(B^T B + rho I)`: the one shared implementation behind the SAP
+/// stepper's approximate projection (`backend::host::HostSapStepper`)
+/// and the PCG Nystrom preconditioner (`solvers::pcg`).
+pub struct Woodbury {
+    b_factor: Mat,
+    core: Chol,
+    rho: f64,
+}
+
+impl Woodbury {
+    /// Build from a B-factor and its precomputed Gram `B^T B` (callers
+    /// that also power the Gram for `lambda_r` compute it once and hand
+    /// it over). The core factorization uses [`chol_jittered`] with a
+    /// trace-scaled base jitter, so near-rank-deficient sketches degrade
+    /// into a slightly more regularized application instead of failing.
+    pub fn new(b_factor: Mat, gram: Mat, rho: f64) -> anyhow::Result<Woodbury> {
+        anyhow::ensure!(
+            gram.rows == b_factor.cols && gram.cols == b_factor.cols,
+            "Woodbury: gram is {}x{}, want {r}x{r}",
+            gram.rows,
+            gram.cols,
+            r = b_factor.cols
+        );
+        let mut core = gram;
+        core.add_diag(rho);
+        let core_trace: f64 = (0..core.rows).map(|i| core[(i, i)]).sum();
+        let core = chol_jittered(&core, 1e-14 * core_trace)?;
+        Ok(Woodbury { b_factor, core, rho })
+    }
+
+    /// Convenience when the caller has no separate use for the Gram.
+    pub fn from_factor(b_factor: Mat, rho: f64) -> anyhow::Result<Woodbury> {
+        let gram = b_factor.gram();
+        Woodbury::new(b_factor, gram, rho)
+    }
+
+    /// `(B B^T + rho I)^{-1} g`.
+    pub fn apply(&self, g: &[f64]) -> Vec<f64> {
+        let btg = self.b_factor.matvec_t(g);
+        let s = self.core.solve(&btg);
+        let bs = self.b_factor.matvec(&s);
+        g.iter().zip(&bs).map(|(x, y)| (x - y) / self.rho).collect()
+    }
+
+    /// Rank of the low-rank term (columns of B).
+    pub fn rank(&self) -> usize {
+        self.b_factor.cols
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -122,6 +217,60 @@ mod tests {
         let a = Mat::eye(5);
         let ch = Chol::new(&a, 0.0).unwrap();
         assert!(ch.logdet().abs() < 1e-12);
+    }
+
+    #[test]
+    fn woodbury_matches_dense_inverse_application() {
+        // (B B^T + rho I)^{-1} g via Woodbury vs a dense Cholesky solve.
+        let (n, r) = (16, 4);
+        let mut rng = Rng::new(9);
+        let b = Mat::randn(n, r, &mut rng);
+        let rho = 0.3;
+        let mut dense_op = b.matmul(&b.t());
+        dense_op.add_diag(rho);
+        let g: Vec<f64> = (0..n).map(|i| (i as f64 * 0.7).cos()).collect();
+        let want = Chol::new(&dense_op, 0.0).unwrap().solve(&g);
+        let wb = Woodbury::from_factor(b, rho).unwrap();
+        assert_eq!(wb.rank(), r);
+        let got = wb.apply(&g);
+        for (a, w) in got.iter().zip(&want) {
+            assert!((a - w).abs() < 1e-8, "{a} vs {w}");
+        }
+    }
+
+    #[test]
+    fn woodbury_rejects_mismatched_gram() {
+        let mut rng = Rng::new(10);
+        let b = Mat::randn(8, 3, &mut rng);
+        let bad_gram = Mat::zeros(4, 4);
+        assert!(Woodbury::new(b, bad_gram, 0.1).is_err());
+    }
+
+    #[test]
+    fn nystrom_b_factor_reconstructs_low_rank_matrices() {
+        // For an exactly rank-r spd matrix, the rank-r sketch is exact:
+        // B B^T == K.
+        let (n, r) = (12, 3);
+        let mut rng = Rng::new(11);
+        let c = Mat::randn(n, r, &mut rng);
+        let k = c.matmul(&c.t());
+        let omega = Mat::randn(n, r, &mut rng);
+        let b = nystrom_b_factor(&k, omega).unwrap();
+        let rec = b.matmul(&b.t());
+        assert!(rec.max_abs_diff(&k) < 1e-6, "diff {}", rec.max_abs_diff(&k));
+    }
+
+    #[test]
+    fn chol_jittered_recovers_semidefinite() {
+        // Rank-deficient Gram: plain Chol fails, the jitter ladder holds.
+        let mut a = Mat::zeros(3, 3);
+        for i in 0..3 {
+            for j in 0..3 {
+                a[(i, j)] = 1.0; // rank 1
+            }
+        }
+        assert!(Chol::new(&a, 0.0).is_err());
+        assert!(chol_jittered(&a, 1e-12).is_ok());
     }
 
     #[test]

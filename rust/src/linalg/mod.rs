@@ -12,4 +12,4 @@ pub mod factor;
 
 pub use dense::Mat;
 pub use eig::{subspace_topk, SymEig};
-pub use factor::Chol;
+pub use factor::{chol_jittered, nystrom_b_factor, Chol, Woodbury};

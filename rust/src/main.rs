@@ -2,12 +2,16 @@
 //!
 //! Subcommands:
 //!   solve       run one solver on one dataset and print the trace
+//!               (`--checkpoint DIR` + `--resume` pause/continue it)
+//!   train       solve, then persist the model artifact (`--save DIR`)
 //!   experiment  run a JSON experiment config (file path argument)
 //!   compare     run several solvers on the same problem, print a table
 //!   testbed     run the paper's 23-task suite across the solver
 //!               families; write JSON records + docs/RESULTS.md
 //!   info        inspect the selected backend (manifest / thread pool)
-//!   serve       train a model and serve it over HTTP (docs/SERVING.md)
+//!   serve       serve a model over HTTP (docs/SERVING.md): load a
+//!               saved artifact with `--model DIR` (cold-start-free)
+//!               or train at startup from `--config`/dataset flags
 //!   perf        profile the ASkotch hot loop
 //!
 //! Every subcommand accepts `--backend auto|host|pjrt` (default `auto`:
@@ -17,11 +21,12 @@
 //!
 //! Examples:
 //!   askotch solve --dataset taxi_like --n 2048 --solver askotch --iters 200
+//!   askotch train --dataset taxi_like --n 4096 --iters 300 --save models/taxi
+//!   askotch serve --model models/taxi --addr 0.0.0.0:8080
+//!   askotch solve --checkpoint ckpts/taxi --checkpoint-every 50 --resume
 //!   askotch compare --dataset physics_like --n 2048 --iters 100
-//!   askotch solve --backend host --dataset taxi_like --n 4096 --iters 300
 //!   askotch experiment configs/quickstart.json
 //!   askotch testbed --scale small --jobs 4
-//!   askotch serve --addr 0.0.0.0:8080 --config configs/quickstart.json
 //!   askotch info
 
 use anyhow::Result;
@@ -30,6 +35,8 @@ use askotch::config::{
     BackendKind, BandwidthSpec, ExperimentConfig, KernelKind, SamplingScheme, SolverKind,
 };
 use askotch::coordinator::{Budget, Coordinator};
+use askotch::model::ModelArtifact;
+use askotch::solvers::Checkpoint;
 use askotch::util::cli::Args;
 use askotch::util::fmt;
 
@@ -37,6 +44,7 @@ fn main() -> Result<()> {
     let args = Args::from_env();
     match args.positional.first().map(String::as_str) {
         Some("solve") => cmd_solve(&args),
+        Some("train") => cmd_train(&args),
         Some("experiment") => cmd_experiment(&args),
         Some("compare") => cmd_compare(&args),
         Some("testbed") => cmd_testbed(&args),
@@ -45,8 +53,11 @@ fn main() -> Result<()> {
         Some("perf") => cmd_perf(&args),
         _ => {
             eprintln!(
-                "usage: askotch <solve|experiment|compare|testbed|info|serve|perf> [options]\n\
+                "usage: askotch <solve|train|experiment|compare|testbed|info|serve|perf> \
+                 [options]\n\
                  common: --backend auto|host|pjrt (default auto), --host-threads N\n\
+                 lifecycle: train --save DIR, serve --model DIR, \
+                 solve/train --checkpoint DIR [--checkpoint-every N] [--resume]\n\
                  run `askotch info` to inspect the selected backend"
             );
             Ok(())
@@ -135,12 +146,112 @@ fn print_report(report: &askotch::coordinator::SolveReport) {
     }
 }
 
+/// `--checkpoint DIR [--checkpoint-every N]` onto a config.
+fn apply_checkpoint_flags(args: &Args, cfg: &mut ExperimentConfig) {
+    if let Some(dir) = args.get("checkpoint") {
+        cfg.checkpoint_dir = dir.to_string();
+    }
+    cfg.checkpoint_every = args.get_usize("checkpoint-every", cfg.checkpoint_every);
+}
+
+/// `--resume`: load the checkpoint in `cfg.checkpoint_dir` if one
+/// exists (a missing directory starts fresh; a corrupt one is a hard
+/// error — silently restarting would discard paid-for iterations).
+fn load_resume(args: &Args, cfg: &ExperimentConfig) -> Result<Option<Checkpoint>> {
+    if !args.has_flag("resume") {
+        return Ok(None);
+    }
+    anyhow::ensure!(
+        !cfg.checkpoint_dir.is_empty(),
+        "--resume needs --checkpoint DIR (or checkpoint_dir in the config)"
+    );
+    let manifest = std::path::Path::new(&cfg.checkpoint_dir)
+        .join(askotch::model::checkpoint::MANIFEST_FILE);
+    if !manifest.exists() {
+        eprintln!("no checkpoint at {:?} yet; starting fresh", cfg.checkpoint_dir);
+        return Ok(None);
+    }
+    let ck = Checkpoint::load(&cfg.checkpoint_dir)?;
+    eprintln!(
+        "resuming {} on {} from iteration {} ({} elapsed)",
+        ck.solver,
+        ck.problem,
+        ck.iters,
+        fmt::duration(ck.secs)
+    );
+    Ok(Some(ck))
+}
+
 fn cmd_solve(args: &Args) -> Result<()> {
-    let cfg = config_from_args(args)?;
+    let mut cfg = config_from_args(args)?;
+    apply_checkpoint_flags(args, &mut cfg);
     let backend = make_backend(args, cfg.backend)?;
     let coord = Coordinator::new(backend.as_dyn());
-    let report = coord.run(&cfg)?;
+    let policy = Coordinator::checkpoint_policy(&cfg);
+    let resume = load_resume(args, &cfg)?;
+    let (_, report) = coord.run_with_policy(
+        &cfg,
+        &mut askotch::solvers::NullObserver,
+        &policy,
+        resume.as_ref(),
+    )?;
     print_report(&report);
+    if !cfg.checkpoint_dir.is_empty() {
+        println!("checkpoints in {} (resume with --resume)", cfg.checkpoint_dir);
+    }
+    Ok(())
+}
+
+/// `askotch train --save models/taxi [--config cfg.json | dataset flags]
+///               [--checkpoint DIR [--checkpoint-every N]] [--resume]`
+///
+/// The solve stage of the model lifecycle: run one solver to its
+/// budget, then persist the trained model as a versioned on-disk
+/// artifact (`docs/MODELS.md`) that `askotch serve --model` loads
+/// without retraining. `--checkpoint`/`--resume` make the (long) solve
+/// interruptible.
+fn cmd_train(args: &Args) -> Result<()> {
+    let mut cfg = match args.get("config") {
+        Some(path) => ExperimentConfig::from_json(&std::fs::read_to_string(path)?)?,
+        None => config_from_args(args)?,
+    };
+    apply_checkpoint_flags(args, &mut cfg);
+    // Fail before the (potentially hours-long) solve, not after it:
+    // inducing-points weights are not packageable as model artifacts.
+    anyhow::ensure!(
+        !(args.get("save").is_some() && cfg.solver == SolverKind::Falkon),
+        "--save needs full-KRR weights; {} keeps a private center slab and cannot be \
+         packaged as a model artifact (train a full-KRR solver, e.g. askotch)",
+        cfg.solver.name()
+    );
+    let backend = make_backend(args, cfg.backend)?;
+    let coord = Coordinator::new(backend.as_dyn());
+    let policy = Coordinator::checkpoint_policy(&cfg);
+    let resume = load_resume(args, &cfg)?;
+    println!("training {} on {} (n={})...", cfg.solver.name(), cfg.dataset, cfg.n);
+    let (problem, report) = coord.run_with_policy(
+        &cfg,
+        &mut askotch::solvers::NullObserver,
+        &policy,
+        resume.as_ref(),
+    )?;
+    print_report(&report);
+    match args.get("save") {
+        Some(dir) => {
+            let artifact = ModelArtifact::from_solve(&problem, &report, cfg.seed)?;
+            artifact.save(dir)?;
+            println!(
+                "model saved to {dir} (format v{}, solver {}, n={}, d={}, {} kernel) — \
+                 serve it with `askotch serve --model {dir}`",
+                artifact.meta.version,
+                artifact.meta.solver,
+                artifact.meta.n,
+                artifact.meta.d,
+                artifact.meta.kernel.name()
+            );
+        }
+        None => eprintln!("note: no --save DIR given; the trained weights were discarded"),
+    }
     Ok(())
 }
 
@@ -153,7 +264,16 @@ fn cmd_experiment(args: &Args) -> Result<()> {
     let cfg = ExperimentConfig::from_json(&text)?;
     let backend = make_backend(args, cfg.backend)?;
     let coord = Coordinator::new(backend.as_dyn());
-    let report = coord.run(&cfg)?;
+    // The config's checkpoint settings (and `--resume`) flow through
+    // the same lifecycle entry point as `solve`/`train`.
+    let policy = Coordinator::checkpoint_policy(&cfg);
+    let resume = load_resume(args, &cfg)?;
+    let (_, report) = coord.run_with_policy(
+        &cfg,
+        &mut askotch::solvers::NullObserver,
+        &policy,
+        resume.as_ref(),
+    )?;
     print_report(&report);
     if let Some(out) = args.get("trace-out") {
         std::fs::write(out, report.trace.to_json().to_string())?;
@@ -208,7 +328,9 @@ fn cmd_compare(args: &Args) -> Result<()> {
 /// path, default `docs/RESULTS.md`). `--config file.json` seeds the
 /// same settings from a file; explicit flags win. `--no-json` /
 /// `--no-report` skip the respective outputs; `--solvers a,b,c` narrows
-/// the families; `--filter susy` narrows the tasks.
+/// the families; `--filter susy` narrows the tasks. `--checkpoints DIR
+/// [--checkpoint-every N]` checkpoints every solve; `--resume` picks an
+/// interrupted suite back up from those checkpoints.
 fn cmd_testbed(args: &Args) -> Result<()> {
     use askotch::testbed::{self, TestbedConfig};
 
@@ -250,6 +372,11 @@ fn cmd_testbed(args: &Args) -> Result<()> {
     }
     cfg.track_residual = cfg.track_residual || args.has_flag("residual");
     cfg.echo_evals = cfg.echo_evals || args.has_flag("echo-evals");
+    if let Some(dir) = args.get("checkpoints") {
+        cfg.checkpoint_dir = dir.to_string();
+    }
+    cfg.checkpoint_every = args.get_usize("checkpoint-every", cfg.checkpoint_every);
+    cfg.resume = cfg.resume || args.has_flag("resume");
 
     eprintln!(
         "testbed: scale={} (row factor {}), solvers=[{}], budget {}/run",
@@ -373,21 +500,28 @@ fn cmd_perf(args: &Args) -> Result<()> {
     Ok(())
 }
 
-/// `askotch serve --addr 0.0.0.0:8080 [--config cfg.json] [--threads N]`
-///
-/// Trains a model (from `--config` JSON or the usual dataset flags),
-/// then serves `POST /v1/predict`, `GET /healthz`, and `GET /metrics`
-/// over HTTP until the process is killed. The main thread becomes the
-/// model thread (the PJRT engine is not `Send`); the `net` accept pool
-/// feeds it through the dynamic batcher. See `docs/SERVING.md` for the
-/// wire protocol. With `--backend host` (or no artifacts present) the
-/// whole serving stack runs artifact-free.
-fn cmd_serve(args: &Args) -> Result<()> {
-    use askotch::net::{NetConfig, Server};
-    use askotch::server::{serve_predictor, BackendPredictor, ModelSnapshot, Request, ServerConfig};
-    use std::sync::mpsc;
-    use std::time::Duration;
-
+/// The model a `serve` invocation hosts: loaded cold-start-free from a
+/// saved artifact (`--model DIR`), or trained at startup (legacy path).
+fn serve_setup(
+    args: &Args,
+) -> Result<(AnyBackend, askotch::server::ModelSnapshot, askotch::json::Json)> {
+    if let Some(path) = args.get("model") {
+        let backend = make_backend(args, BackendKind::Auto)?;
+        let t0 = std::time::Instant::now();
+        let artifact = ModelArtifact::load(path)?;
+        println!(
+            "loaded model {path:?} in {} — no training at startup (solver {}, n={}, d={}, \
+             {} kernel, metric={:.5})",
+            fmt::duration(t0.elapsed().as_secs_f64()),
+            artifact.meta.solver,
+            artifact.meta.n,
+            artifact.meta.d,
+            artifact.meta.kernel.name(),
+            artifact.meta.final_metric
+        );
+        let meta = artifact.meta.summary_json();
+        return Ok((backend, artifact.into_snapshot(), meta));
+    }
     let mut cfg = match args.get("config") {
         Some(path) => ExperimentConfig::from_json(&std::fs::read_to_string(path)?)?,
         None => config_from_args(args)?,
@@ -395,25 +529,42 @@ fn cmd_serve(args: &Args) -> Result<()> {
     cfg.solver = SolverKind::Askotch;
     let backend = make_backend(args, cfg.backend)?;
     let coord = Coordinator::new(backend.as_dyn());
-    let problem = coord.problem(&cfg)?;
-    let mut solver = coord.solver(&cfg);
-    println!("training {} on {} (n={})...", cfg.solver.name(), cfg.dataset, problem.n());
-    let report = solver.run(
-        backend.as_dyn(),
-        &problem,
-        &Budget { max_iters: cfg.max_iters, time_limit_secs: cfg.time_limit_secs },
+    println!("training {} on {} (n={})...", cfg.solver.name(), cfg.dataset, cfg.n);
+    let (problem, report) = coord.run_with_policy(
+        &cfg,
+        &mut askotch::solvers::NullObserver,
+        &askotch::solvers::DrivePolicy::default(),
+        None,
     )?;
-    println!("trained: metric={:.5}", report.final_metric);
+    println!(
+        "trained: metric={:.5} (tip: `askotch train --save DIR` once, then \
+         `serve --model DIR` skips this cold start)",
+        report.final_metric
+    );
+    let artifact = ModelArtifact::from_solve(&problem, &report, cfg.seed)?;
+    let meta = artifact.meta.summary_json();
+    Ok((backend, artifact.into_snapshot(), meta))
+}
 
-    let model = ModelSnapshot {
-        kernel: problem.kernel,
-        sigma: problem.sigma,
-        x_train: problem.train.x.clone(),
-        n: problem.n(),
-        d: problem.d(),
-        weights: report.weights.clone(),
-    };
+/// `askotch serve --model models/taxi --addr 0.0.0.0:8080 [--threads N]`
+/// (or legacy: `askotch serve --config cfg.json` to train at startup).
+///
+/// Serves `POST /v1/predict`, `GET /healthz`, `GET /metrics`, and
+/// `POST /v1/admin/reload` over HTTP until the process is killed. The
+/// main thread becomes the model thread (the PJRT engine is not
+/// `Send`); the `net` accept pool feeds it through the dynamic
+/// batcher, and a reload hot-swaps the served model between batches
+/// without dropping in-flight requests. See `docs/SERVING.md` for the
+/// wire protocol and `docs/MODELS.md` for the artifact format. With
+/// `--backend host` (or no artifacts present) the whole serving stack
+/// runs artifact-free.
+fn cmd_serve(args: &Args) -> Result<()> {
+    use askotch::net::{NetConfig, Server};
+    use askotch::server::{serve_reloadable, Job, ServerConfig};
+    use std::sync::mpsc;
+    use std::time::Duration;
 
+    let (backend, snapshot, meta) = serve_setup(args)?;
     let net_cfg = NetConfig {
         addr: args.get_or("addr", "127.0.0.1:8080"),
         threads: args.get_usize("threads", 4),
@@ -423,10 +574,12 @@ fn cmd_serve(args: &Args) -> Result<()> {
         max_batch: args.get_usize("max-batch", 256),
         linger: Duration::from_micros((args.get_f64("linger-ms", 2.0) * 1e3) as u64),
     };
-    let (tx, rx) = mpsc::channel::<Request>();
+    let (tx, rx) = mpsc::channel::<Job>();
     let server = Server::start(&net_cfg, tx)?;
+    server.metrics().set_model_info(meta);
     println!(
-        "serving on http://{} (backend={}, threads={}, max_batch={}) — POST /v1/predict, GET /healthz, GET /metrics",
+        "serving on http://{} (backend={}, threads={}, max_batch={}) — POST /v1/predict, \
+         GET /healthz, GET /metrics, POST /v1/admin/reload",
         server.addr(),
         backend.as_dyn().name(),
         net_cfg.threads,
@@ -435,19 +588,25 @@ fn cmd_serve(args: &Args) -> Result<()> {
     // Block this thread in the batching loop until the server goes away
     // (in practice: until the process is killed).
     let live = server.metrics().clone();
-    let stats = serve_predictor(
-        &BackendPredictor::new(backend.as_dyn(), &model),
+    let stats = serve_reloadable(
+        backend.as_dyn(),
+        snapshot,
         rx,
         &batch_cfg,
         Some(live.batcher()),
+        Some(live.model_slot()),
     );
     server.shutdown();
     println!(
-        "served {} requests in {} batches (mean batch {:.1}, max {})",
+        "served {} requests in {} batches (mean batch {:.1}, max {}, reloads {})",
         stats.requests,
         stats.batches,
         stats.mean_batch(),
-        stats.max_batch_seen
+        stats.max_batch_seen,
+        stats.reloads
     );
+    if let Some(ttfp) = live.time_to_first_prediction() {
+        println!("time_to_first_prediction: {}", fmt::duration(ttfp));
+    }
     Ok(())
 }

@@ -1,0 +1,356 @@
+//! Versioned on-disk model artifacts: train once, serve forever.
+//!
+//! An artifact is a directory holding
+//!
+//! * `model.json` — the manifest: format version, problem metadata
+//!   (kernel, bandwidth, lambda, task), solver provenance (display
+//!   name, iterations, wall clock, final metric/residual, seed), and
+//!   the slab section lengths;
+//! * `weights.slab` — the training slab and the learned weights as a
+//!   checksummed binary f64 container ([`super::slab`]), so a loaded
+//!   model predicts **bit-identically** to the in-memory snapshot it
+//!   was saved from.
+//!
+//! `askotch train --save DIR` writes one; `askotch serve --model DIR`
+//! loads it and answers its first request without any training work;
+//! `POST /v1/admin/reload` hot-swaps one into a running server. See
+//! `docs/MODELS.md` for the schema and versioning rules.
+
+use crate::config::KernelKind;
+use crate::coordinator::{KrrProblem, SolveReport};
+use crate::data::TaskKind;
+use crate::json::{self, Decoder, Json};
+use crate::server::ModelSnapshot;
+use std::path::Path;
+
+/// Manifest format version; bump on any layout change. Load rejects
+/// other versions instead of guessing.
+pub const MODEL_FORMAT_VERSION: u32 = 1;
+/// Manifest file name inside an artifact directory.
+pub const MANIFEST_FILE: &str = "model.json";
+/// Weights-slab file name inside an artifact directory.
+pub const SLAB_FILE: &str = "weights.slab";
+
+/// Everything about a model that is not the numbers: problem
+/// parameters needed to predict, plus training provenance.
+#[derive(Debug, Clone)]
+pub struct ModelMeta {
+    pub version: u32,
+    /// Problem / dataset name the model was trained on.
+    pub name: String,
+    pub task: TaskKind,
+    pub kernel: KernelKind,
+    /// Resolved bandwidth.
+    pub sigma: f64,
+    /// Effective regularization (already scaled by n).
+    pub lam: f64,
+    /// Training rows.
+    pub n: usize,
+    /// Feature dimension.
+    pub d: usize,
+    /// Solver display name (provenance).
+    pub solver: String,
+    pub iters: usize,
+    pub train_secs: f64,
+    /// Final test metric at save time.
+    pub final_metric: f64,
+    /// Final training residual at save time (NaN if never measured).
+    pub final_residual: f64,
+    pub seed: u64,
+}
+
+/// Bitwise float comparison so metadata equality is total: a NaN
+/// metric (never measured) round-trips as equal, not as never-equal.
+impl PartialEq for ModelMeta {
+    fn eq(&self, other: &ModelMeta) -> bool {
+        self.version == other.version
+            && self.name == other.name
+            && self.task == other.task
+            && self.kernel == other.kernel
+            && self.sigma.to_bits() == other.sigma.to_bits()
+            && self.lam.to_bits() == other.lam.to_bits()
+            && self.n == other.n
+            && self.d == other.d
+            && self.solver == other.solver
+            && self.iters == other.iters
+            && self.train_secs.to_bits() == other.train_secs.to_bits()
+            && self.final_metric.to_bits() == other.final_metric.to_bits()
+            && self.final_residual.to_bits() == other.final_residual.to_bits()
+            && self.seed == other.seed
+    }
+}
+
+impl ModelMeta {
+    /// The compact summary exposed on `/healthz`, `/metrics`, and the
+    /// reload acknowledgment.
+    pub fn summary_json(&self) -> Json {
+        Json::obj(vec![
+            ("version", Json::num(self.version as f64)),
+            ("name", Json::str(&self.name)),
+            ("task", Json::str(self.task.name())),
+            ("kernel", Json::str(self.kernel.name())),
+            ("n", Json::num(self.n as f64)),
+            ("d", Json::num(self.d as f64)),
+            ("solver", Json::str(&self.solver)),
+            ("iters", Json::num(self.iters as f64)),
+            ("final_metric", Json::num(self.final_metric)),
+            ("train_residual", Json::num(self.final_residual)),
+        ])
+    }
+
+    fn manifest_json(&self) -> Json {
+        let mut j = self.summary_json();
+        // The seed is a decimal *string*: JSON numbers are f64 and
+        // silently round u64 provenance above 2^53.
+        j.set("sigma", Json::num(self.sigma))
+            .set("lambda", Json::num(self.lam))
+            .set("train_secs", Json::num(self.train_secs))
+            .set("seed", Json::str(&self.seed.to_string()))
+            .set("slab", Json::str(SLAB_FILE));
+        j
+    }
+}
+
+/// A trained model as a first-class value: metadata + the two slabs a
+/// predictor needs.
+#[derive(Debug, Clone)]
+pub struct ModelArtifact {
+    pub meta: ModelMeta,
+    /// Training rows, row-major n x d.
+    pub x_train: Vec<f64>,
+    /// Learned full-KRR weights, length n.
+    pub weights: Vec<f64>,
+}
+
+impl ModelArtifact {
+    /// Package a finished solve. Requires full-KRR weights (length n):
+    /// inducing-points solvers (Falkon) keep their own center slab and
+    /// are not servable through this artifact format.
+    pub fn from_solve(
+        problem: &KrrProblem,
+        report: &SolveReport,
+        seed: u64,
+    ) -> anyhow::Result<ModelArtifact> {
+        anyhow::ensure!(
+            report.weights.len() == problem.n(),
+            "model artifacts need full-KRR weights: solver {:?} returned {} weights for n={} \
+             (inducing-points models are not supported)",
+            report.solver,
+            report.weights.len(),
+            problem.n()
+        );
+        Ok(ModelArtifact {
+            meta: ModelMeta {
+                version: MODEL_FORMAT_VERSION,
+                name: problem.name.clone(),
+                task: problem.task,
+                kernel: problem.kernel,
+                sigma: problem.sigma,
+                lam: problem.lam,
+                n: problem.n(),
+                d: problem.d(),
+                solver: report.solver.clone(),
+                iters: report.iters,
+                train_secs: report.wall_secs,
+                final_metric: report.final_metric,
+                final_residual: report.final_residual,
+                seed,
+            },
+            x_train: problem.train.x.clone(),
+            weights: report.weights.clone(),
+        })
+    }
+
+    /// Write the artifact directory (created if missing): manifest +
+    /// checksummed weights slab. Both files go through temp-name +
+    /// rename, slab first, so overwriting an existing artifact can
+    /// never leave a half-written file behind a valid manifest.
+    pub fn save(&self, dir: &str) -> anyhow::Result<()> {
+        let dir = Path::new(dir);
+        std::fs::create_dir_all(dir)
+            .map_err(|e| anyhow::anyhow!("creating model dir {dir:?}: {e}"))?;
+        let slab_tmp = dir.join(format!("{SLAB_FILE}.tmp"));
+        super::slab::write_sections(
+            &slab_tmp,
+            &[("x_train", &self.x_train), ("weights", &self.weights)],
+        )?;
+        std::fs::rename(&slab_tmp, dir.join(SLAB_FILE))
+            .map_err(|e| anyhow::anyhow!("publishing model slab in {dir:?}: {e}"))?;
+        let manifest_tmp = dir.join(format!("{MANIFEST_FILE}.tmp"));
+        std::fs::write(&manifest_tmp, self.meta.manifest_json().pretty())
+            .map_err(|e| anyhow::anyhow!("writing model manifest in {dir:?}: {e}"))?;
+        std::fs::rename(&manifest_tmp, dir.join(MANIFEST_FILE))
+            .map_err(|e| anyhow::anyhow!("publishing model manifest in {dir:?}: {e}"))?;
+        Ok(())
+    }
+
+    /// Load an artifact directory, validating the format version, the
+    /// slab checksum, and the section lengths against the manifest.
+    pub fn load(dir: &str) -> anyhow::Result<ModelArtifact> {
+        let dirp = Path::new(dir);
+        let text = std::fs::read_to_string(dirp.join(MANIFEST_FILE))
+            .map_err(|e| anyhow::anyhow!("reading model manifest in {dir:?}: {e}"))?;
+        let v = json::parse(&text)
+            .map_err(|e| anyhow::anyhow!("model manifest in {dir:?}: {e}"))?;
+        let root = Decoder::root(&v, "model");
+        let version = root.field("version")?.usize()? as u32;
+        anyhow::ensure!(
+            version == MODEL_FORMAT_VERSION,
+            "model in {dir:?} has format version {version}, this build reads \
+             {MODEL_FORMAT_VERSION} (retrain or convert)"
+        );
+        let meta = ModelMeta {
+            version,
+            name: root.field("name")?.string()?,
+            task: TaskKind::parse(root.field("task")?.str()?)?,
+            kernel: KernelKind::parse(root.field("kernel")?.str()?)?,
+            sigma: root.field("sigma")?.f64()?,
+            lam: root.field("lambda")?.f64()?,
+            n: root.field("n")?.usize()?,
+            d: root.field("d")?.usize()?,
+            solver: root.field("solver")?.string()?,
+            iters: root.field("iters")?.usize()?,
+            train_secs: root.field("train_secs")?.f64()?,
+            final_metric: opt_num(&root, "final_metric")?,
+            final_residual: opt_num(&root, "train_residual")?,
+            seed: {
+                let d = root.field("seed")?;
+                let s = d.str()?;
+                s.parse::<u64>()
+                    .map_err(|_| anyhow::anyhow!("{}: bad u64 seed {s:?}", d.path()))?
+            },
+        };
+        anyhow::ensure!(meta.sigma > 0.0, "model in {dir:?}: bandwidth must be positive");
+        let slab_name = root.field("slab")?.string()?;
+        let sections = super::slab::read_sections(&dirp.join(&slab_name))?;
+        let x_train = super::slab::section(&sections, "x_train", meta.n * meta.d)?.to_vec();
+        let weights = super::slab::section(&sections, "weights", meta.n)?.to_vec();
+        Ok(ModelArtifact { meta, x_train, weights })
+    }
+
+    /// The serving snapshot this artifact describes (consumes the
+    /// slabs; no copies).
+    pub fn into_snapshot(self) -> ModelSnapshot {
+        ModelSnapshot {
+            kernel: self.meta.kernel,
+            sigma: self.meta.sigma,
+            x_train: self.x_train,
+            n: self.meta.n,
+            d: self.meta.d,
+            weights: self.weights,
+        }
+    }
+}
+
+/// A numeric manifest field that may legitimately be `null` (NaN
+/// metrics serialize as `null` — the printer's non-finite rule).
+fn opt_num(root: &Decoder<'_>, key: &str) -> anyhow::Result<f64> {
+    let d = root.field(key)?;
+    match d.json() {
+        Json::Null => Ok(f64::NAN),
+        _ => Ok(d.f64()?),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::BandwidthSpec;
+    use crate::data::synthetic;
+    use crate::metrics::Trace;
+
+    fn temp_dir(tag: &str) -> String {
+        let mut p = std::env::temp_dir();
+        p.push(format!("askotch_model_test_{}_{tag}", std::process::id()));
+        p.to_string_lossy().to_string()
+    }
+
+    fn toy_artifact() -> (KrrProblem, ModelArtifact) {
+        let ds = synthetic::taxi_like(60, 4, 1).standardized();
+        let problem =
+            KrrProblem::from_dataset(ds, KernelKind::Rbf, BandwidthSpec::Auto, 1e-6, 0).unwrap();
+        let report = SolveReport {
+            solver: "test-solver(r=5)".into(),
+            problem: problem.name.clone(),
+            task: problem.task,
+            iters: 12,
+            wall_secs: 0.5,
+            trace: Trace::default(),
+            final_metric: 0.25,
+            final_residual: f64::NAN,
+            weights: (0..problem.n()).map(|i| (i as f64 * 0.37).sin()).collect(),
+            state_bytes: 0,
+            diverged: false,
+        };
+        // Seed above 2^53: must survive the manifest round trip exactly
+        // (it is stored as a decimal string, not a JSON f64).
+        let art = ModelArtifact::from_solve(&problem, &report, (1u64 << 60) + 3).unwrap();
+        (problem, art)
+    }
+
+    #[test]
+    fn save_load_roundtrip_is_bit_exact() {
+        let (_, art) = toy_artifact();
+        let dir = temp_dir("roundtrip");
+        art.save(&dir).unwrap();
+        let back = ModelArtifact::load(&dir).unwrap();
+        assert_eq!(back.meta, art.meta);
+        assert_eq!(back.weights.len(), art.weights.len());
+        for (a, b) in art.weights.iter().zip(&back.weights) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        for (a, b) in art.x_train.iter().zip(&back.x_train) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        // NaN residual survives as NaN through the null path.
+        assert!(back.meta.final_residual.is_nan());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn wrong_version_is_rejected() {
+        let (_, art) = toy_artifact();
+        let dir = temp_dir("version");
+        art.save(&dir).unwrap();
+        let manifest = std::path::Path::new(&dir).join(MANIFEST_FILE);
+        let text = std::fs::read_to_string(&manifest).unwrap();
+        std::fs::write(&manifest, text.replace("\"version\": 1", "\"version\": 99")).unwrap();
+        let err = ModelArtifact::load(&dir).unwrap_err().to_string();
+        assert!(err.contains("format version 99"), "got: {err}");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn inducing_point_weights_are_rejected() {
+        let (problem, art) = toy_artifact();
+        let mut report = SolveReport {
+            solver: "falkon(m=8)".into(),
+            problem: problem.name.clone(),
+            task: problem.task,
+            iters: 1,
+            wall_secs: 0.0,
+            trace: Trace::default(),
+            final_metric: 0.0,
+            final_residual: 0.0,
+            weights: vec![0.0; 8], // m != n
+            state_bytes: 0,
+            diverged: false,
+        };
+        let err = ModelArtifact::from_solve(&problem, &report, 0).unwrap_err().to_string();
+        assert!(err.contains("full-KRR weights"), "got: {err}");
+        report.weights = art.weights.clone();
+        assert!(ModelArtifact::from_solve(&problem, &report, 0).is_ok());
+    }
+
+    #[test]
+    fn snapshot_matches_artifact() {
+        let (_, art) = toy_artifact();
+        let meta = art.meta.clone();
+        let weights = art.weights.clone();
+        let snap = art.into_snapshot();
+        assert_eq!(snap.n, meta.n);
+        assert_eq!(snap.d, meta.d);
+        assert_eq!(snap.kernel, meta.kernel);
+        assert_eq!(snap.weights, weights);
+    }
+}

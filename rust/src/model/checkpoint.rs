@@ -1,0 +1,248 @@
+//! On-disk persistence for solver checkpoints
+//! ([`crate::solvers::Checkpoint`]).
+//!
+//! A checkpoint directory holds
+//!
+//! * `checkpoint.json` — identity (family / solver / problem), the
+//!   iteration counter, wall clock, the RNG streams (u64 words as hex
+//!   strings — JSON numbers are f64 and cannot carry 64 bits), the
+//!   slab section order, and the slab file name (the atomic commit
+//!   pointer);
+//! * `state-<iters>.slab` — every iterate vector as raw IEEE-754 bits
+//!   through the checksummed slab container ([`super::slab`]), so a
+//!   restored solve continues **bit-for-bit**.
+//!
+//! The inherent `save`/`load` impls live here (not in `solvers::state`)
+//! so the solver layer stays storage-agnostic.
+
+use crate::json::{self, Decoder, Json};
+use crate::solvers::state::{Checkpoint, CHECKPOINT_VERSION};
+use crate::util::RngState;
+use std::path::Path;
+
+/// Manifest file name inside a checkpoint directory.
+pub const MANIFEST_FILE: &str = "checkpoint.json";
+
+/// Slab files are named per checkpoint; the manifest's `slab` field is
+/// the commit pointer, so a manifest always references a slab that was
+/// fully written before the manifest was published.
+fn slab_file(iters: usize) -> String {
+    format!("state-{iters}.slab")
+}
+
+fn hex_u64(x: u64) -> Json {
+    Json::str(&format!("{x:016x}"))
+}
+
+fn parse_hex_u64(d: &Decoder<'_>) -> anyhow::Result<u64> {
+    let s = d.str()?;
+    u64::from_str_radix(s, 16)
+        .map_err(|_| anyhow::anyhow!("{}: bad hex u64 {s:?}", d.path()))
+}
+
+fn rng_json(st: &RngState) -> Json {
+    Json::obj(vec![
+        ("s", Json::Arr(st.s.iter().map(|&w| hex_u64(w)).collect())),
+        (
+            "spare",
+            match st.spare {
+                Some(x) => hex_u64(x.to_bits()),
+                None => Json::Null,
+            },
+        ),
+    ])
+}
+
+fn rng_from_json(d: &Decoder<'_>) -> anyhow::Result<RngState> {
+    let words = d.field("s")?.items()?;
+    anyhow::ensure!(words.len() == 4, "{}: RNG state needs 4 words", d.path());
+    let mut s = [0u64; 4];
+    for (i, w) in words.iter().enumerate() {
+        s[i] = parse_hex_u64(w)?;
+    }
+    let spare_d = d.field("spare")?;
+    let spare = match spare_d.json() {
+        Json::Null => None,
+        _ => Some(f64::from_bits(parse_hex_u64(&spare_d)?)),
+    };
+    Ok(RngState { s, spare })
+}
+
+impl Checkpoint {
+    /// Write this checkpoint to directory `path` (created if missing),
+    /// superseding any previous checkpoint there.
+    ///
+    /// Crash-safe by construction: the slab is written under a
+    /// checkpoint-specific name and the manifest is renamed into place
+    /// *last* — a kill mid-save (the exact event checkpoints exist to
+    /// survive) leaves the previous consistent (manifest, slab) pair,
+    /// never a manifest paired with a newer slab. Superseded slabs are
+    /// cleaned up best-effort after the commit.
+    pub fn save(&self, path: &str) -> anyhow::Result<()> {
+        let dir = Path::new(path);
+        std::fs::create_dir_all(dir)
+            .map_err(|e| anyhow::anyhow!("creating checkpoint dir {dir:?}: {e}"))?;
+        let sections: Vec<(&str, &[f64])> =
+            self.vectors.iter().map(|(n, v)| (n.as_str(), v.as_slice())).collect();
+        let slab_name = slab_file(self.iters);
+        let slab_tmp = dir.join(format!("{slab_name}.tmp"));
+        super::slab::write_sections(&slab_tmp, &sections)?;
+        std::fs::rename(&slab_tmp, dir.join(&slab_name))
+            .map_err(|e| anyhow::anyhow!("publishing checkpoint slab in {dir:?}: {e}"))?;
+        let manifest = Json::obj(vec![
+            ("version", Json::num(CHECKPOINT_VERSION as f64)),
+            ("family", Json::str(&self.family)),
+            ("solver", Json::str(&self.solver)),
+            ("problem", Json::str(&self.problem)),
+            ("iters", Json::num(self.iters as f64)),
+            ("secs", Json::num(self.secs)),
+            (
+                "rngs",
+                Json::Obj(
+                    self.rngs.iter().map(|(n, st)| (n.clone(), rng_json(st))).collect(),
+                ),
+            ),
+            (
+                "vectors",
+                Json::Arr(self.vectors.iter().map(|(n, _)| Json::str(n)).collect()),
+            ),
+            ("slab", Json::str(&slab_name)),
+        ]);
+        let manifest_tmp = dir.join(format!("{MANIFEST_FILE}.tmp"));
+        std::fs::write(&manifest_tmp, manifest.pretty())
+            .map_err(|e| anyhow::anyhow!("writing checkpoint manifest in {dir:?}: {e}"))?;
+        std::fs::rename(&manifest_tmp, dir.join(MANIFEST_FILE))
+            .map_err(|e| anyhow::anyhow!("publishing checkpoint manifest in {dir:?}: {e}"))?;
+        // Best-effort cleanup of slabs no manifest references anymore.
+        if let Ok(entries) = std::fs::read_dir(dir) {
+            for entry in entries.flatten() {
+                let name = entry.file_name().to_string_lossy().into_owned();
+                let stale = name != slab_name
+                    && name.starts_with("state-")
+                    && (name.ends_with(".slab") || name.ends_with(".tmp"));
+                if stale {
+                    let _ = std::fs::remove_file(entry.path());
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Load a checkpoint directory written by [`Checkpoint::save`].
+    pub fn load(path: &str) -> anyhow::Result<Checkpoint> {
+        let dir = Path::new(path);
+        let text = std::fs::read_to_string(dir.join(MANIFEST_FILE))
+            .map_err(|e| anyhow::anyhow!("reading checkpoint manifest in {dir:?}: {e}"))?;
+        let v = json::parse(&text)
+            .map_err(|e| anyhow::anyhow!("checkpoint manifest in {dir:?}: {e}"))?;
+        let root = Decoder::root(&v, "checkpoint");
+        let version = root.field("version")?.usize()? as u32;
+        anyhow::ensure!(
+            version == CHECKPOINT_VERSION,
+            "checkpoint in {dir:?} has format version {version}, this build reads \
+             {CHECKPOINT_VERSION}"
+        );
+        let mut ck = Checkpoint::new(
+            &root.field("family")?.string()?,
+            &root.field("solver")?.string()?,
+            &root.field("problem")?.string()?,
+            root.field("iters")?.usize()?,
+            root.field("secs")?.f64()?,
+        );
+        if let Some(rngs) = root.opt_field("rngs")? {
+            let Json::Obj(m) = rngs.json() else {
+                anyhow::bail!("{}: expected object", rngs.path());
+            };
+            for name in m.keys() {
+                let st = rng_from_json(&rngs.field(name)?)?;
+                ck.push_rng(name, st);
+            }
+        }
+        let order: Vec<String> = root.field("vectors")?.decode().map_err(anyhow::Error::from)?;
+        let slab_name = root.field("slab")?.string()?;
+        let mut sections = super::slab::read_sections(&dir.join(&slab_name))?;
+        anyhow::ensure!(
+            sections.len() == order.len(),
+            "checkpoint in {dir:?}: slab has {} sections, manifest lists {}",
+            sections.len(),
+            order.len()
+        );
+        for name in order {
+            let pos = sections
+                .iter()
+                .position(|(n, _)| *n == name)
+                .ok_or_else(|| {
+                    anyhow::anyhow!("checkpoint in {dir:?}: slab is missing section {name:?}")
+                })?;
+            let (_, data) = sections.remove(pos);
+            ck.vectors.push((name, data));
+        }
+        Ok(ck)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn temp_dir(tag: &str) -> String {
+        let mut p = std::env::temp_dir();
+        p.push(format!("askotch_ckpt_test_{}_{tag}", std::process::id()));
+        p.to_string_lossy().to_string()
+    }
+
+    #[test]
+    fn checkpoint_roundtrip_is_bit_exact() {
+        let mut rng = Rng::new(3);
+        rng.normal(); // leave a Box-Muller spare pending
+        let mut ck = Checkpoint::new("pcg", "pcg(rpc,r=5,backend)", "toy", 17, 2.5);
+        ck.push_rng("main", rng.state());
+        ck.push_vec("w", vec![1.0, -0.0, f64::NAN, 1.0 / 3.0]);
+        ck.push_vec("res", vec![2.0; 4]);
+        ck.push_scalar("rz", 1e-17);
+        let dir = temp_dir("roundtrip");
+        ck.save(&dir).unwrap();
+        let back = Checkpoint::load(&dir).unwrap();
+        assert_eq!(back.family, "pcg");
+        assert_eq!(back.solver, "pcg(rpc,r=5,backend)");
+        assert_eq!(back.problem, "toy");
+        assert_eq!(back.iters, 17);
+        assert_eq!(back.secs, 2.5);
+        let st = back.rng("main").unwrap();
+        assert_eq!(st.s, rng.state().s);
+        assert_eq!(
+            st.spare.unwrap().to_bits(),
+            rng.state().spare.unwrap().to_bits(),
+            "Box-Muller spare must survive bit-for-bit"
+        );
+        // Vector order and bits preserved.
+        assert_eq!(back.vectors[0].0, "w");
+        for (a, b) in ck.vec("w", 4).unwrap().iter().zip(back.vec("w", 4).unwrap()) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        assert_eq!(back.scalar("rz").unwrap(), 1e-17);
+        // A restored RNG continues the original stream.
+        let mut a = Rng::from_state(rng.state());
+        let mut b = Rng::from_state(st);
+        for _ in 0..20 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn missing_and_corrupt_checkpoints_fail_cleanly() {
+        assert!(Checkpoint::load("/definitely/not/here").is_err());
+        let dir = temp_dir("corrupt");
+        let mut ck = Checkpoint::new("f", "s", "p", 1, 0.0);
+        ck.push_vec("w", vec![1.0]);
+        ck.save(&dir).unwrap();
+        let manifest = Path::new(&dir).join(MANIFEST_FILE);
+        let text = std::fs::read_to_string(&manifest).unwrap();
+        std::fs::write(&manifest, text.replace("\"version\": 1", "\"version\": 5")).unwrap();
+        let err = Checkpoint::load(&dir).unwrap_err().to_string();
+        assert!(err.contains("format version 5"), "got: {err}");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -1,0 +1,28 @@
+//! Model lifecycle: durable artifacts connecting the solve stage to
+//! the serve stage.
+//!
+//! The paper's solves are long-running iterative computations; a
+//! production deployment trains **once**, persists the result, and
+//! serves it cold-start-free (cf. You et al., *Accurate, Fast and
+//! Scalable KRR*, 2018 — solve and serve as separate lifecycle stages).
+//! This subsystem owns the durable values between those stages:
+//!
+//! * [`artifact`] — versioned on-disk model artifacts
+//!   ([`ModelArtifact`]): a JSON manifest (kernel / bandwidth / lambda
+//!   / solver provenance / final residual) plus a checksummed binary
+//!   weights slab. Written by `askotch train --save`, loaded by
+//!   `askotch serve --model`, hot-swapped by `POST /v1/admin/reload`.
+//! * [`checkpoint`] — persistence for solver checkpoints
+//!   ([`crate::solvers::Checkpoint`]): an interrupted solve resumes
+//!   bit-for-bit from the saved iterate core.
+//! * [`slab`] — the shared binary f64 container (named sections, raw
+//!   IEEE-754 bits, FNV-1a checksum) both formats are built on.
+//!
+//! `docs/MODELS.md` documents the formats, versioning, and resume
+//! semantics.
+
+pub mod artifact;
+pub mod checkpoint;
+pub mod slab;
+
+pub use artifact::{ModelArtifact, ModelMeta, MODEL_FORMAT_VERSION};

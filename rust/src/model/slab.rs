@@ -1,0 +1,237 @@
+//! Binary f64 slab files: the byte layer under model artifacts and
+//! solver checkpoints.
+//!
+//! A slab file is a small self-describing container of named f64
+//! sections, little-endian throughout:
+//!
+//! ```text
+//! magic "ASKSLAB1" (8 bytes)
+//! u32   section count
+//! per section: u32 name length | name (utf-8) | u64 element count
+//! payload: every section's f64 data, in header order
+//! u64   FNV-1a of the payload bytes
+//! ```
+//!
+//! f64 values are written as raw IEEE-754 bit patterns, so a round trip
+//! is bit-exact by construction — including negative zero, subnormals,
+//! and NaN payloads that no decimal path can promise. The trailing
+//! checksum turns silent truncation/corruption into a load error.
+
+use std::io::{BufWriter, Write};
+use std::path::Path;
+
+/// File magic + layout version (the trailing digit).
+pub const MAGIC: &[u8; 8] = b"ASKSLAB1";
+
+/// FNV-1a 64-bit over a byte stream.
+fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// Write named f64 sections to `path` (parent directory must exist).
+pub fn write_sections(path: &Path, sections: &[(&str, &[f64])]) -> anyhow::Result<()> {
+    let file = std::fs::File::create(path)
+        .map_err(|e| anyhow::anyhow!("creating slab {path:?}: {e}"))?;
+    let mut w = BufWriter::new(file);
+    w.write_all(MAGIC)?;
+    w.write_all(&(sections.len() as u32).to_le_bytes())?;
+    for (name, data) in sections {
+        let nb = name.as_bytes();
+        w.write_all(&(nb.len() as u32).to_le_bytes())?;
+        w.write_all(nb)?;
+        w.write_all(&(data.len() as u64).to_le_bytes())?;
+    }
+    let mut hash = 0xcbf2_9ce4_8422_2325u64;
+    for (_, data) in sections {
+        for &x in *data {
+            let bytes = x.to_bits().to_le_bytes();
+            // Stream the checksum so the payload is walked once.
+            for &b in &bytes {
+                hash ^= b as u64;
+                hash = hash.wrapping_mul(0x0000_0100_0000_01b3);
+            }
+            w.write_all(&bytes)?;
+        }
+    }
+    w.write_all(&hash.to_le_bytes())?;
+    w.flush()?;
+    Ok(())
+}
+
+/// Advance `off` by `n` bytes of `bytes`, or fail with a truncation
+/// error naming `path`.
+fn take<'a>(bytes: &'a [u8], off: &mut usize, n: usize, path: &Path) -> anyhow::Result<&'a [u8]> {
+    // `off <= bytes.len()` is an invariant, so this subtraction-form
+    // bound cannot overflow even for hostile `n`.
+    anyhow::ensure!(
+        n <= bytes.len() - *off,
+        "slab {path:?} truncated at byte {} (want {n} more of {})",
+        *off,
+        bytes.len()
+    );
+    let s = &bytes[*off..*off + n];
+    *off += n;
+    Ok(s)
+}
+
+/// Read every section of a slab file, in header order.
+pub fn read_sections(path: &Path) -> anyhow::Result<Vec<(String, Vec<f64>)>> {
+    let bytes =
+        std::fs::read(path).map_err(|e| anyhow::anyhow!("reading slab {path:?}: {e}"))?;
+    let mut off = 0usize;
+    let magic = take(&bytes, &mut off, 8, path)?;
+    anyhow::ensure!(
+        magic == MAGIC,
+        "{path:?} is not a slab file (magic {magic:?}, want {MAGIC:?})"
+    );
+    let count =
+        u32::from_le_bytes(take(&bytes, &mut off, 4, path)?.try_into().unwrap()) as usize;
+    anyhow::ensure!(count <= 1 << 16, "slab {path:?}: implausible section count {count}");
+    let mut headers = Vec::with_capacity(count);
+    for _ in 0..count {
+        let name_len =
+            u32::from_le_bytes(take(&bytes, &mut off, 4, path)?.try_into().unwrap()) as usize;
+        anyhow::ensure!(name_len <= 4096, "slab {path:?}: implausible name length {name_len}");
+        let name = String::from_utf8(take(&bytes, &mut off, name_len, path)?.to_vec())
+            .map_err(|_| anyhow::anyhow!("slab {path:?}: non-utf8 section name"))?;
+        let len = u64::from_le_bytes(take(&bytes, &mut off, 8, path)?.try_into().unwrap());
+        // Header-supplied lengths are untrusted (reload endpoint, bit
+        // rot): bound each against the file size *before* any usize
+        // arithmetic, so corruption is a clean load error, not an
+        // overflow-then-panic.
+        anyhow::ensure!(
+            len <= bytes.len() as u64 / 8,
+            "slab {path:?}: section {name:?} claims {len} elements, file is {} bytes",
+            bytes.len()
+        );
+        headers.push((name, len as usize));
+    }
+    let mut payload_len = 0usize;
+    for (name, len) in &headers {
+        payload_len = payload_len
+            .checked_add(len * 8)
+            .filter(|&total| total <= bytes.len())
+            .ok_or_else(|| {
+                anyhow::anyhow!("slab {path:?}: section sizes overflow at {name:?}")
+            })?;
+    }
+    let payload = take(&bytes, &mut off, payload_len, path)?;
+    let want_hash = fnv1a(payload);
+    let got_hash = u64::from_le_bytes(take(&bytes, &mut off, 8, path)?.try_into().unwrap());
+    anyhow::ensure!(
+        want_hash == got_hash,
+        "slab {path:?}: checksum mismatch (corrupt or truncated payload)"
+    );
+    anyhow::ensure!(off == bytes.len(), "slab {path:?}: {} trailing bytes", bytes.len() - off);
+    let mut out = Vec::with_capacity(count);
+    let mut pos = 0usize;
+    for (name, len) in headers {
+        let mut data = Vec::with_capacity(len);
+        for k in 0..len {
+            let b: [u8; 8] = payload[pos + k * 8..pos + k * 8 + 8].try_into().unwrap();
+            data.push(f64::from_bits(u64::from_le_bytes(b)));
+        }
+        pos += len * 8;
+        out.push((name, data));
+    }
+    Ok(out)
+}
+
+/// Find one named section in a [`read_sections`] result, with a length
+/// check.
+pub fn section<'a>(
+    sections: &'a [(String, Vec<f64>)],
+    name: &str,
+    want_len: usize,
+) -> anyhow::Result<&'a [f64]> {
+    let (_, data) = sections
+        .iter()
+        .find(|(n, _)| n == name)
+        .ok_or_else(|| anyhow::anyhow!("slab is missing section {name:?}"))?;
+    anyhow::ensure!(
+        data.len() == want_len,
+        "slab section {name:?} has {} entries, want {want_len}",
+        data.len()
+    );
+    Ok(data)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn temp_path(tag: &str) -> std::path::PathBuf {
+        let mut p = std::env::temp_dir();
+        p.push(format!("askotch_slab_test_{}_{tag}.slab", std::process::id()));
+        p
+    }
+
+    #[test]
+    fn roundtrip_is_bit_exact() {
+        let path = temp_path("roundtrip");
+        let tricky = vec![
+            0.0,
+            -0.0,
+            1.0,
+            f64::MIN_POSITIVE / 2.0, // subnormal
+            f64::MAX,
+            f64::NAN,
+            f64::NEG_INFINITY,
+            9007199254740993.0f64, // > 2^53
+            1.0 / 3.0,
+        ];
+        let other = vec![42.0; 100];
+        write_sections(&path, &[("tricky", &tricky), ("other", &other)]).unwrap();
+        let back = read_sections(&path).unwrap();
+        assert_eq!(back.len(), 2);
+        let t = section(&back, "tricky", tricky.len()).unwrap();
+        for (a, b) in tricky.iter().zip(t) {
+            assert_eq!(a.to_bits(), b.to_bits(), "{a} vs {b}");
+        }
+        assert_eq!(section(&back, "other", 100).unwrap()[7], 42.0);
+        assert!(section(&back, "other", 99).is_err());
+        assert!(section(&back, "missing", 1).is_err());
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn corruption_is_detected() {
+        let path = temp_path("corrupt");
+        write_sections(&path, &[("w", &[1.0, 2.0, 3.0])]).unwrap();
+        let mut bytes = std::fs::read(&path).unwrap();
+        // Flip one payload bit.
+        let k = bytes.len() - 12;
+        bytes[k] ^= 0x01;
+        std::fs::write(&path, &bytes).unwrap();
+        let err = read_sections(&path).unwrap_err().to_string();
+        assert!(err.contains("checksum"), "got: {err}");
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn truncation_and_bad_magic_are_errors() {
+        let path = temp_path("trunc");
+        write_sections(&path, &[("w", &[1.0; 32])]).unwrap();
+        let bytes = std::fs::read(&path).unwrap();
+        std::fs::write(&path, &bytes[..bytes.len() - 9]).unwrap();
+        assert!(read_sections(&path).is_err());
+        std::fs::write(&path, b"NOTASLAB00000000").unwrap();
+        let err = read_sections(&path).unwrap_err().to_string();
+        assert!(err.contains("not a slab"), "got: {err}");
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn empty_sections_are_fine() {
+        let path = temp_path("empty");
+        write_sections(&path, &[("nothing", &[])]).unwrap();
+        let back = read_sections(&path).unwrap();
+        assert_eq!(section(&back, "nothing", 0).unwrap().len(), 0);
+        let _ = std::fs::remove_file(&path);
+    }
+}

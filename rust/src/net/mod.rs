@@ -6,13 +6,18 @@
 //! ```text
 //!   clients --TCP--> [accept pool: N worker threads]    [model thread]
 //!                      parse HTTP + wire JSON             owns Predictor
-//!                      mpsc::Sender<server::Request> ---> dynamic batcher
-//!                      <----- per-request reply channel ----'
+//!                      mpsc::Sender<server::Job> -------> dynamic batcher
+//!                      <----- per-request reply channel ----'      + hot swap
 //! ```
 //!
-//! * **Routes**: `POST /v1/predict` (single + batch), `GET /healthz`,
+//! * **Routes**: `POST /v1/predict` (single + batch), `GET /healthz`
+//!   (liveness + served-model summary + time-to-first-prediction),
 //!   `GET /metrics` (JSON serving stats: req/s, batch-size histogram,
-//!   latency percentiles).
+//!   latency percentiles, model metadata), and
+//!   `POST /v1/admin/reload` (hot-swap the served model from an
+//!   on-disk artifact — the worker loads and validates the artifact,
+//!   then the model thread swaps it in between batches, so no
+//!   in-flight request is dropped).
 //! * **Keep-alive** per connection with a request cap; bounded request
 //!   bodies and header blocks (see [`http`]).
 //! * **Graceful shutdown**: [`Server::shutdown`] stops accepting, lets
@@ -28,7 +33,7 @@ pub mod stats;
 pub mod wire;
 
 use crate::json::Json;
-use crate::server::Request;
+use crate::server::{Job, ReloadRequest, Request};
 use http::{read_request, write_response, HttpRequest};
 use stats::Metrics;
 use std::io::{self, BufRead, BufReader, BufWriter, Write};
@@ -78,10 +83,10 @@ pub struct Server {
 }
 
 impl Server {
-    /// Bind and start the accept pool. `submit` is the batcher's request
+    /// Bind and start the accept pool. `submit` is the batcher's job
     /// channel; each worker holds a clone, and all clones are dropped on
     /// shutdown so the batcher loop can exit.
-    pub fn start(cfg: &NetConfig, submit: mpsc::Sender<Request>) -> anyhow::Result<Server> {
+    pub fn start(cfg: &NetConfig, submit: mpsc::Sender<Job>) -> anyhow::Result<Server> {
         let listener = TcpListener::bind(&cfg.addr)
             .map_err(|e| anyhow::anyhow!("binding {}: {e}", cfg.addr))?;
         let addr = listener.local_addr()?;
@@ -169,7 +174,7 @@ const IDLE_TICK: Duration = Duration::from_millis(200);
 fn handle_connection(
     stream: TcpStream,
     cfg: &NetConfig,
-    submit: &mpsc::Sender<Request>,
+    submit: &mpsc::Sender<Job>,
     metrics: &Metrics,
     stop: &AtomicBool,
 ) -> anyhow::Result<()> {
@@ -246,12 +251,13 @@ fn respond<W: Write>(w: &mut W, status: u16, body: &Json, keep: bool) -> anyhow:
 }
 
 /// Dispatch one request to its handler.
-fn route(req: &HttpRequest, submit: &mpsc::Sender<Request>, metrics: &Metrics) -> (u16, Json) {
+fn route(req: &HttpRequest, submit: &mpsc::Sender<Job>, metrics: &Metrics) -> (u16, Json) {
     match (req.method.as_str(), req.target.as_str()) {
         ("POST", "/v1/predict") => handle_predict(req, submit, metrics),
-        ("GET", "/healthz") => (200, Json::obj(vec![("status", Json::str("ok"))])),
+        ("POST", "/v1/admin/reload") => handle_reload(req, submit),
+        ("GET", "/healthz") => (200, metrics.health_json()),
         ("GET", "/metrics") => (200, metrics.snapshot_json()),
-        (_, "/v1/predict" | "/healthz" | "/metrics") => (
+        (_, "/v1/predict" | "/v1/admin/reload" | "/healthz" | "/metrics") => (
             405,
             wire::error_body("method_not_allowed", &format!("{} not allowed here", req.method)),
         ),
@@ -259,9 +265,41 @@ fn route(req: &HttpRequest, submit: &mpsc::Sender<Request>, metrics: &Metrics) -
     }
 }
 
+/// `POST /v1/admin/reload {"model": "<artifact dir>"}`: load + validate
+/// the artifact on this worker thread (disk + checksum work stays off
+/// the model thread), then hand the snapshot to the batcher loop for
+/// an atomic between-batches swap.
+fn handle_reload(req: &HttpRequest, submit: &mpsc::Sender<Job>) -> (u16, Json) {
+    let path = match wire::parse_reload_body(&req.body) {
+        Ok(p) => p,
+        Err(e) => return (400, wire::error_body("bad_request", &e.to_string())),
+    };
+    let artifact = match crate::model::ModelArtifact::load(&path) {
+        Ok(a) => a,
+        Err(e) => {
+            return (400, wire::error_body("bad_model", &format!("loading {path:?}: {e}")))
+        }
+    };
+    let meta = artifact.meta.summary_json();
+    let snapshot = artifact.into_snapshot();
+    let (rtx, rrx) = mpsc::channel();
+    let job = Job::Reload(ReloadRequest { model: Box::new(snapshot), meta, reply: rtx });
+    if submit.send(job).is_err() {
+        return (503, wire::error_body("unavailable", "model thread is down; try again later"));
+    }
+    match rrx.recv() {
+        Ok(Ok(info)) => (
+            200,
+            Json::obj(vec![("status", Json::str("reloaded")), ("model", info)]),
+        ),
+        Ok(Err(e)) => (500, wire::error_body("reload_failed", &e.to_string())),
+        Err(_) => (503, wire::error_body("unavailable", "model thread dropped the reload")),
+    }
+}
+
 fn handle_predict(
     req: &HttpRequest,
-    submit: &mpsc::Sender<Request>,
+    submit: &mpsc::Sender<Job>,
     metrics: &Metrics,
 ) -> (u16, Json) {
     let t0 = Instant::now();
@@ -277,7 +315,8 @@ fn handle_predict(
     let mut pending = Vec::with_capacity(requests.len());
     for r in requests {
         let (rtx, rrx) = mpsc::channel();
-        if submit.send(Request { features: r.features, reply: rtx }).is_err() {
+        let job = Job::Predict(Request { features: r.features, reply: rtx });
+        if submit.send(job).is_err() {
             return (
                 503,
                 wire::error_body("unavailable", "model thread is down; try again later"),
@@ -338,15 +377,15 @@ mod tests {
     }
 
     fn start_toy() -> (Server, std::thread::JoinHandle<crate::server::ServerStats>) {
-        let (tx, rx) = mpsc::channel();
+        let (tx, rx) = mpsc::channel::<crate::server::Job>();
         let cfg = NetConfig { addr: "127.0.0.1:0".into(), threads: 2, ..Default::default() };
         let server = Server::start(&cfg, tx).expect("start");
         let live = server.metrics().clone();
+        server.metrics().set_model_info(Json::obj(vec![("solver", Json::str("toy"))]));
         let model_thread = std::thread::spawn(move || {
             let backend = HostBackend::new(1);
-            let model = toy_model();
             serve_predictor(
-                &BackendPredictor::new(&backend, &model),
+                &BackendPredictor::new(&backend, toy_model()),
                 rx,
                 &ServerConfig::default(),
                 Some(live.batcher()),
@@ -362,10 +401,37 @@ mod tests {
         let (status, body) = http_call(addr, "GET", "/healthz", None);
         assert_eq!(status, 200);
         assert!(body.contains("\"ok\""));
+        // healthz carries the served-model summary + the cold-start
+        // figure (null until a prediction completes).
+        let v = crate::json::parse(&body).unwrap();
+        assert_eq!(v.get("model").unwrap().get("solver").unwrap().as_str().unwrap(), "toy");
+        assert!(v.get("time_to_first_prediction_ms").is_some());
         let (status, _) = http_call(addr, "GET", "/nope", None);
         assert_eq!(status, 404);
         let (status, _) = http_call(addr, "GET", "/v1/predict", None);
         assert_eq!(status, 405);
+        let (status, _) = http_call(addr, "GET", "/v1/admin/reload", None);
+        assert_eq!(status, 405);
+        server.shutdown();
+        model.join().unwrap();
+    }
+
+    #[test]
+    fn reload_with_bad_body_or_model_is_400() {
+        let (server, model) = start_toy();
+        let addr = server.addr();
+        let (status, body) =
+            http_call(addr, "POST", "/v1/admin/reload", Some(r#"{"nope":1}"#));
+        assert_eq!(status, 400);
+        assert!(body.contains("model"), "got: {body}");
+        let (status, body) = http_call(
+            addr,
+            "POST",
+            "/v1/admin/reload",
+            Some(r#"{"model":"/definitely/not/a/model"}"#),
+        );
+        assert_eq!(status, 400);
+        assert!(body.contains("bad_model"), "got: {body}");
         server.shutdown();
         model.join().unwrap();
     }

@@ -1,10 +1,11 @@
-//! Serving observability: request counters, latency percentiles, and
-//! the batcher's live batch-size histogram, exported as JSON on
-//! `GET /metrics`.
+//! Serving observability: request counters, latency percentiles, the
+//! batcher's live batch-size histogram, the served model's metadata,
+//! and the cold-start measure `time_to_first_prediction` — exported as
+//! JSON on `GET /metrics` (and, summarized, on `GET /healthz`).
 
+use crate::json::Json;
 use crate::metrics::percentile;
 use crate::server::{ServerStats, BATCH_HIST_BUCKETS};
-use crate::json::Json;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 use std::time::Instant;
@@ -13,7 +14,8 @@ use std::time::Instant;
 const LATENCY_WINDOW: usize = 4096;
 
 /// Shared, thread-safe serving metrics. One instance per `net::Server`,
-/// shared with the batcher thread through [`Metrics::batcher`].
+/// shared with the batcher thread through [`Metrics::batcher`] and
+/// [`Metrics::model_slot`].
 pub struct Metrics {
     started: Instant,
     /// All HTTP requests, any route or status.
@@ -23,11 +25,18 @@ pub struct Metrics {
     /// Feature vectors pushed through the batcher (a batch POST counts
     /// each slot).
     pub predictions: AtomicU64,
+    /// Seconds from server start to the first answered prediction —
+    /// the cold-start figure `serve --model` exists to shrink. `None`
+    /// until the first prediction completes.
+    first_prediction: Mutex<Option<f64>>,
     /// Ring buffer of recent predict-request latencies (seconds).
     latencies: Mutex<LatencyWindow>,
     /// Live mirror of the batcher's stats (the batcher thread updates
     /// it after every batch).
     batcher: Mutex<ServerStats>,
+    /// Summary of the currently-served model (swapped on reload by the
+    /// model thread). `Json::Null` until a model is registered.
+    model: Mutex<Json>,
 }
 
 struct LatencyWindow {
@@ -42,22 +51,53 @@ impl Default for Metrics {
             http_requests: AtomicU64::new(0),
             http_errors: AtomicU64::new(0),
             predictions: AtomicU64::new(0),
+            first_prediction: Mutex::new(None),
             latencies: Mutex::new(LatencyWindow { buf: Vec::new(), next: 0 }),
             batcher: Mutex::new(ServerStats::default()),
+            model: Mutex::new(Json::Null),
         }
     }
 }
 
 impl Metrics {
     /// The mutex the batching loop mirrors its stats into (pass to
-    /// `server::serve_predictor` as the `live` argument).
+    /// `server::serve_reloadable` / `serve_predictor` as the `live`
+    /// argument).
     pub fn batcher(&self) -> &Mutex<ServerStats> {
         &self.batcher
+    }
+
+    /// The slot the model thread mirrors the served model's summary
+    /// into (pass to `server::serve_reloadable` as `model_info`).
+    pub fn model_slot(&self) -> &Mutex<Json> {
+        &self.model
+    }
+
+    /// Register the initially-served model's summary.
+    pub fn set_model_info(&self, info: Json) {
+        if let Ok(mut m) = self.model.lock() {
+            *m = info;
+        }
+    }
+
+    /// Summary of the currently-served model (`Json::Null` if none).
+    pub fn model_info(&self) -> Json {
+        self.model.lock().map(|m| m.clone()).unwrap_or(Json::Null)
+    }
+
+    /// Seconds from server start to the first answered prediction.
+    pub fn time_to_first_prediction(&self) -> Option<f64> {
+        self.first_prediction.lock().ok().and_then(|t| *t)
     }
 
     /// Record one served predict request.
     pub fn record_predict(&self, slots: usize, latency_secs: f64) {
         self.predictions.fetch_add(slots as u64, Ordering::Relaxed);
+        if let Ok(mut first) = self.first_prediction.lock() {
+            if first.is_none() {
+                *first = Some(self.started.elapsed().as_secs_f64());
+            }
+        }
         let mut w = self.latencies.lock().unwrap();
         if w.buf.len() < LATENCY_WINDOW {
             w.buf.push(latency_secs);
@@ -66,6 +106,23 @@ impl Metrics {
             w.buf[i] = latency_secs;
         }
         w.next = (w.next + 1) % LATENCY_WINDOW;
+    }
+
+    fn ttfp_json(&self) -> Json {
+        match self.time_to_first_prediction() {
+            Some(s) => Json::num(s * 1e3),
+            None => Json::Null,
+        }
+    }
+
+    /// The `GET /healthz` document: liveness plus the served model and
+    /// the cold-start figure.
+    pub fn health_json(&self) -> Json {
+        Json::obj(vec![
+            ("status", Json::str("ok")),
+            ("model", self.model_info()),
+            ("time_to_first_prediction_ms", self.ttfp_json()),
+        ])
     }
 
     /// Snapshot all metrics as the `GET /metrics` JSON document.
@@ -92,6 +149,8 @@ impl Metrics {
             ("http_errors", Json::num(self.http_errors.load(Ordering::Relaxed) as f64)),
             ("requests_per_sec", Json::num(http_requests as f64 / uptime)),
             ("predictions", Json::num(self.predictions.load(Ordering::Relaxed) as f64)),
+            ("time_to_first_prediction_ms", self.ttfp_json()),
+            ("model", self.model_info()),
             ("latency", lat_json),
             ("batcher", batcher_json(&b)),
         ])
@@ -117,6 +176,7 @@ fn batcher_json(s: &ServerStats) -> Json {
         ("mean_batch", Json::num(s.mean_batch())),
         ("max_batch", Json::num(s.max_batch_seen as f64)),
         ("busy_secs", Json::num(s.busy_secs)),
+        ("reloads", Json::num(s.reloads as f64)),
         ("batch_size_hist", Json::Obj(hist.into_iter().collect())),
     ])
 }
@@ -162,5 +222,44 @@ mod tests {
         }
         let w = m.latencies.lock().unwrap();
         assert_eq!(w.buf.len(), LATENCY_WINDOW);
+    }
+
+    #[test]
+    fn first_prediction_is_recorded_once() {
+        let m = Metrics::default();
+        assert!(m.time_to_first_prediction().is_none());
+        assert_eq!(m.snapshot_json().get("time_to_first_prediction_ms").unwrap(), &Json::Null);
+        m.record_predict(1, 0.001);
+        let first = m.time_to_first_prediction().expect("set after first prediction");
+        std::thread::sleep(std::time::Duration::from_millis(5));
+        m.record_predict(1, 0.001);
+        assert_eq!(m.time_to_first_prediction().unwrap(), first, "must not move");
+        assert!(m
+            .snapshot_json()
+            .get("time_to_first_prediction_ms")
+            .unwrap()
+            .as_f64()
+            .is_some());
+    }
+
+    #[test]
+    fn model_info_flows_into_health_and_metrics() {
+        let m = Metrics::default();
+        assert_eq!(m.model_info(), Json::Null);
+        let h = m.health_json();
+        assert_eq!(h.get("status").unwrap().as_str().unwrap(), "ok");
+        assert_eq!(h.get("model").unwrap(), &Json::Null);
+        m.set_model_info(Json::obj(vec![("solver", Json::str("askotch"))]));
+        let h = m.health_json();
+        assert_eq!(
+            h.get("model").unwrap().get("solver").unwrap().as_str().unwrap(),
+            "askotch"
+        );
+        let j = m.snapshot_json();
+        assert_eq!(
+            j.get("model").unwrap().get("solver").unwrap().as_str().unwrap(),
+            "askotch"
+        );
+        assert!(crate::json::parse(&h.to_string()).is_ok());
     }
 }

@@ -97,6 +97,20 @@ pub fn parse_predict_body(bytes: &[u8]) -> Result<PredictBody, DecodeError> {
     }
 }
 
+/// Parse a `POST /v1/admin/reload` body: `{"model": "<artifact dir>"}`.
+/// The error path is rooted at `body`.
+pub fn parse_reload_body(bytes: &[u8]) -> Result<String, DecodeError> {
+    let text = std::str::from_utf8(bytes)
+        .map_err(|_| DecodeError::new("body", "request body is not valid UTF-8"))?;
+    let v = json::parse(text).map_err(|e| DecodeError::new("body", format!("invalid JSON: {e}")))?;
+    let root = Decoder::root(&v, "body");
+    let path = root.field("model")?.string()?;
+    if path.is_empty() {
+        return Err(root.field("model")?.error("model path must be non-empty"));
+    }
+    Ok(path)
+}
+
 /// Outcome of one prediction slot.
 pub type SlotResult = Result<f64, String>;
 
@@ -214,6 +228,17 @@ mod tests {
             parsed.get("error").unwrap().get("message").unwrap().as_str().unwrap(),
             "body.features: expected array, got string"
         );
+    }
+
+    #[test]
+    fn reload_body() {
+        assert_eq!(parse_reload_body(br#"{"model":"models/taxi"}"#).unwrap(), "models/taxi");
+        let e = parse_reload_body(br#"{}"#).unwrap_err();
+        assert!(e.to_string().contains("model"), "got: {e}");
+        let e = parse_reload_body(br#"{"model":""}"#).unwrap_err();
+        assert!(e.to_string().contains("non-empty"), "got: {e}");
+        let e = parse_reload_body(br#"{"model":3}"#).unwrap_err();
+        assert_eq!(e.to_string(), "body.model: expected string, got number");
     }
 
     #[test]

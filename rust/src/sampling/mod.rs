@@ -10,7 +10,7 @@
 use crate::config::KernelKind;
 use crate::kernels;
 use crate::linalg::{Chol, Mat};
-use crate::util::Rng;
+use crate::util::{Rng, RngState};
 
 /// Exact lambda-ridge leverage scores, `diag(K (K + lam I)^-1)` — O(n^3),
 /// for tests and small-n validation only.
@@ -128,10 +128,21 @@ fn sample_weighted_distinct(weights: &[f64], k: usize, rng: &mut Rng) -> Vec<usi
 }
 
 /// Trait for per-iteration block samplers.
+///
+/// Samplers are the one RNG consumer outside the SAP stepper on the
+/// ASkotch hot path, so checkpoints capture their stream state
+/// ([`BlockSampler::rng_state`]): derived score tables (ARLS) are
+/// rebuilt deterministically from the seed at resume, only the live
+/// stream position is persisted.
 pub trait BlockSampler {
     /// Sample a block of (up to) `b` distinct coordinates from `[0, n)`.
     fn sample_block(&mut self, n: usize, b: usize) -> Vec<usize>;
     fn name(&self) -> &'static str;
+    /// Snapshot the sampler's RNG stream (for solver checkpoints).
+    fn rng_state(&self) -> RngState;
+    /// Restore a stream snapshot; subsequent blocks continue the
+    /// original sequence bit-for-bit.
+    fn set_rng_state(&mut self, st: RngState);
 }
 
 /// Uniform distinct sampling (the paper's default `P`).
@@ -151,6 +162,12 @@ impl BlockSampler for UniformSampler {
     }
     fn name(&self) -> &'static str {
         "uniform"
+    }
+    fn rng_state(&self) -> RngState {
+        self.rng.state()
+    }
+    fn set_rng_state(&mut self, st: RngState) {
+        self.rng = Rng::from_state(st);
     }
 }
 
@@ -197,6 +214,12 @@ impl BlockSampler for ArlsSampler {
     }
     fn name(&self) -> &'static str {
         "arls"
+    }
+    fn rng_state(&self) -> RngState {
+        self.rng.state()
+    }
+    fn set_rng_state(&mut self, st: RngState) {
+        self.rng = Rng::from_state(st);
     }
 }
 
@@ -271,6 +294,28 @@ mod tests {
             }
         }
         assert!(hits7 > 150, "high-leverage point sampled only {hits7}/200");
+    }
+
+    #[test]
+    fn sampler_stream_state_resumes_bit_for_bit() {
+        let mut a = UniformSampler::new(3);
+        for _ in 0..5 {
+            a.sample_block(50, 8);
+        }
+        let st = a.rng_state();
+        let next = a.sample_block(50, 8);
+        let mut b = UniformSampler::new(999); // seed irrelevant after restore
+        b.set_rng_state(st);
+        assert_eq!(b.sample_block(50, 8), next);
+
+        let scores = vec![0.2; 40];
+        let mut a = ArlsSampler::from_scores(&scores, 5);
+        a.sample_block(40, 6);
+        let st = a.rng_state();
+        let next = a.sample_block(40, 6);
+        let mut b = ArlsSampler::from_scores(&scores, 5);
+        b.set_rng_state(st);
+        assert_eq!(b.sample_block(40, 6), next);
     }
 
     #[test]

@@ -2,23 +2,28 @@
 //!
 //! A dedicated model thread owns the predictor (for the PJRT backend
 //! the engine is not `Send`, so it must live on one thread) and the
-//! trained weights; client threads submit feature vectors over an mpsc
+//! trained weights; client threads submit [`Job`]s over an mpsc
 //! channel. The model thread drains the queue into dynamic batches (up
 //! to `max_batch`, bounded linger) and answers each request with one
 //! batched prediction — the same dynamic-batching structure a GPU
 //! serving stack would use, with the batch dimension amortizing the
 //! per-invocation overhead.
 //!
-//! The [`Predictor`] trait decouples the batching loop from the compute
-//! layer; [`BackendPredictor`] implements it over *any*
-//! [`crate::backend::Backend`] — the AOT artifacts through
-//! [`crate::backend::PjrtBackend`], or the artifact-free parallel
-//! [`crate::backend::HostBackend`] (tests, fresh clones, serving hosts
-//! without the artifact grid). The `net` subsystem puts an HTTP/1.1
-//! front end on the same channel.
+//! Two serving loops share the batching machinery:
+//!
+//! * [`serve_predictor`] — a fixed [`Predictor`] for the model's whole
+//!   lifetime (tests, embedded uses).
+//! * [`serve_reloadable`] — owns a [`BackendPredictor`] and honors
+//!   [`Job::Reload`]: the predictor snapshot (cached model-slab norms
+//!   included) is rebuilt **between batches**, so a hot swap never
+//!   drops an in-flight request. This is what `askotch serve` runs and
+//!   what `POST /v1/admin/reload` drives.
+//!
+//! The `net` subsystem puts an HTTP/1.1 front end on the same channel.
 
 use crate::backend::Backend;
 use crate::config::KernelKind;
+use crate::json::Json;
 use crate::kernels::fused;
 use std::sync::mpsc;
 use std::sync::Mutex;
@@ -28,6 +33,23 @@ use std::time::{Duration, Instant};
 pub struct Request {
     pub features: Vec<f64>,
     pub reply: mpsc::Sender<anyhow::Result<f64>>,
+}
+
+/// Hot-swap request: the already-loaded snapshot to serve next, its
+/// metadata summary (mirrored into the metrics endpoint), and an ack
+/// channel answered once the swap is effective.
+pub struct ReloadRequest {
+    pub model: Box<ModelSnapshot>,
+    /// Summary JSON shown on `/healthz` / `/metrics` (usually
+    /// [`crate::model::ModelMeta::summary_json`]).
+    pub meta: Json,
+    pub reply: mpsc::Sender<anyhow::Result<Json>>,
+}
+
+/// A unit of work for the model thread.
+pub enum Job {
+    Predict(Request),
+    Reload(ReloadRequest),
 }
 
 /// Server configuration.
@@ -55,6 +77,8 @@ pub struct ServerStats {
     pub batches: usize,
     pub max_batch_seen: usize,
     pub busy_secs: f64,
+    /// Model hot-swaps served ([`Job::Reload`]).
+    pub reloads: usize,
     /// Power-of-two batch-size histogram (see [`BATCH_HIST_BUCKETS`]).
     pub batch_hist: [usize; BATCH_HIST_BUCKETS],
 }
@@ -66,6 +90,7 @@ impl Default for ServerStats {
             batches: 0,
             max_batch_seen: 0,
             busy_secs: 0.0,
+            reloads: 0,
             batch_hist: [0; BATCH_HIST_BUCKETS],
         }
     }
@@ -90,7 +115,9 @@ impl ServerStats {
     }
 }
 
-/// The trained model a server hosts.
+/// The trained model a server hosts (built in memory after a solve, or
+/// loaded cold-start-free from a [`crate::model::ModelArtifact`]).
+#[derive(Debug, Clone)]
 pub struct ModelSnapshot {
     pub kernel: KernelKind,
     pub sigma: f64,
@@ -111,10 +138,11 @@ pub trait Predictor {
 
 /// Predictor over any compute backend: batches run through
 /// [`Backend::predict_with_norms`] (tiled `kmv` artifacts on PJRT, the
-/// fused panel engine on the host).
+/// fused panel engine on the host). Owns its [`ModelSnapshot`] so a
+/// reload can rebuild the whole snapshot atomically.
 pub struct BackendPredictor<'a> {
     backend: &'a dyn Backend,
-    model: &'a ModelSnapshot,
+    model: ModelSnapshot,
     /// Squared row norms of the model slab, computed once per snapshot:
     /// without the cache every single-row request would pay an O(n d)
     /// norm pass comparable to its whole kernel product. Empty when
@@ -123,13 +151,18 @@ pub struct BackendPredictor<'a> {
 }
 
 impl<'a> BackendPredictor<'a> {
-    pub fn new(backend: &'a dyn Backend, model: &'a ModelSnapshot) -> BackendPredictor<'a> {
+    pub fn new(backend: &'a dyn Backend, model: ModelSnapshot) -> BackendPredictor<'a> {
         let train_sq_norms = if fused::uses_norms(model.kernel) {
             fused::sq_norms(&model.x_train, model.n, model.d)
         } else {
             Vec::new()
         };
         BackendPredictor { backend, model, train_sq_norms }
+    }
+
+    /// The snapshot currently served.
+    pub fn model(&self) -> &ModelSnapshot {
+        &self.model
     }
 }
 
@@ -139,7 +172,7 @@ impl Predictor for BackendPredictor<'_> {
     }
 
     fn predict_batch(&self, x_eval: &[f64], rows: usize) -> anyhow::Result<Vec<f64>> {
-        let m = self.model;
+        let m = &self.model;
         self.backend.predict_with_norms(
             m.kernel,
             &m.x_train,
@@ -154,102 +187,175 @@ impl Predictor for BackendPredictor<'_> {
     }
 }
 
-/// Run the serving loop over a backend until the request channel
-/// closes. Returns stats.
+/// Drain one dynamic batch from `rx`: blocks for the first job, then
+/// lingers for more up to `max_batch`. Returns `None` when the channel
+/// closed before any job arrived (shutdown). A [`Job::Reload`] stops
+/// collection and is handed back so the caller can swap *after*
+/// answering the batch already collected.
+fn next_batch(
+    rx: &mpsc::Receiver<Job>,
+    cfg: &ServerConfig,
+) -> Option<(Vec<Request>, Option<ReloadRequest>)> {
+    let first = match rx.recv() {
+        Ok(Job::Predict(r)) => r,
+        Ok(Job::Reload(r)) => return Some((Vec::new(), Some(r))),
+        Err(_) => return None, // channel closed: shut down
+    };
+    let mut batch = vec![first];
+    let mut reload = None;
+    let deadline = Instant::now() + cfg.linger;
+    while batch.len() < cfg.max_batch && reload.is_none() {
+        let now = Instant::now();
+        if now >= deadline {
+            break;
+        }
+        match rx.recv_timeout(deadline - now) {
+            Ok(Job::Predict(r)) => batch.push(r),
+            Ok(Job::Reload(r)) => reload = Some(r),
+            Err(mpsc::RecvTimeoutError::Timeout) => break,
+            Err(mpsc::RecvTimeoutError::Disconnected) => break,
+        }
+    }
+    Some((batch, reload))
+}
+
+/// Predict one collected batch and answer every slot.
+fn answer_batch<P: Predictor + ?Sized>(
+    predictor: &P,
+    batch: Vec<Request>,
+    stats: &mut ServerStats,
+    live: Option<&Mutex<ServerStats>>,
+) {
+    let d = predictor.dim();
+    let t0 = Instant::now();
+    let mut x_eval = Vec::with_capacity(batch.len() * d);
+    let mut ok_shape = Vec::with_capacity(batch.len());
+    for r in &batch {
+        if r.features.len() == d {
+            x_eval.extend_from_slice(&r.features);
+            ok_shape.push(true);
+        } else {
+            // keep the slab aligned; this slot gets an error reply
+            x_eval.extend(std::iter::repeat(0.0).take(d));
+            ok_shape.push(false);
+        }
+    }
+    let preds = predictor.predict_batch(&x_eval, batch.len());
+    stats.record_batch(batch.len(), t0.elapsed().as_secs_f64());
+    if let Some(shared) = live {
+        if let Ok(mut s) = shared.lock() {
+            *s = stats.clone();
+        }
+    }
+
+    match preds {
+        Ok(p) => {
+            for (k, req) in batch.into_iter().enumerate() {
+                let reply = if !ok_shape[k] {
+                    Err(anyhow::anyhow!(
+                        "feature dim mismatch: got {}, want {}",
+                        req.features.len(),
+                        d
+                    ))
+                } else if let Some(&pk) = p.get(k) {
+                    Ok(pk)
+                } else {
+                    // Backend returned fewer predictions than the
+                    // batch size: answer with an error instead of
+                    // panicking the whole serving thread.
+                    Err(anyhow::anyhow!(
+                        "predict returned {} values for batch of {}",
+                        p.len(),
+                        k + 1
+                    ))
+                };
+                let _ = req.reply.send(reply);
+            }
+        }
+        Err(e) => {
+            for req in batch {
+                let _ = req.reply.send(Err(anyhow::anyhow!("predict failed: {e}")));
+            }
+        }
+    }
+}
+
+/// Run the serving loop over a backend until the job channel closes,
+/// honoring hot swaps. Returns stats.
 ///
 /// Call from a thread that owns the backend (the PJRT engine is not
 /// `Send`; the host backend can live anywhere).
 pub fn serve(
     backend: &dyn Backend,
-    model: &ModelSnapshot,
-    rx: mpsc::Receiver<Request>,
+    model: ModelSnapshot,
+    rx: mpsc::Receiver<Job>,
     cfg: &ServerConfig,
 ) -> ServerStats {
-    serve_predictor(&BackendPredictor::new(backend, model), rx, cfg, None)
+    serve_reloadable(backend, model, rx, cfg, None, None)
 }
 
-/// Run the serving loop over any [`Predictor`] until the request channel
-/// closes. If `live` is given, stats are mirrored into it after every
-/// batch so another thread (the `net` metrics endpoint) can observe
-/// them mid-flight.
+/// The reloadable serving loop behind `askotch serve`: owns the
+/// [`BackendPredictor`], answers predict batches, and applies
+/// [`Job::Reload`] swaps between batches (rebuilding the snapshot's
+/// cached norms; in-flight requests are answered by the old model
+/// first, none are dropped). If `live` is given, stats are mirrored
+/// into it after every batch; if `model_info` is given, the served
+/// model's summary is mirrored into it on every swap.
+pub fn serve_reloadable(
+    backend: &dyn Backend,
+    model: ModelSnapshot,
+    rx: mpsc::Receiver<Job>,
+    cfg: &ServerConfig,
+    live: Option<&Mutex<ServerStats>>,
+    model_info: Option<&Mutex<Json>>,
+) -> ServerStats {
+    let mut predictor = BackendPredictor::new(backend, model);
+    let mut stats = ServerStats::default();
+    loop {
+        let Some((batch, reload)) = next_batch(&rx, cfg) else { break };
+        if !batch.is_empty() {
+            answer_batch(&predictor, batch, &mut stats, live);
+        }
+        if let Some(ReloadRequest { model, meta, reply }) = reload {
+            predictor = BackendPredictor::new(backend, *model);
+            stats.reloads += 1;
+            if let Some(slot) = model_info {
+                if let Ok(mut m) = slot.lock() {
+                    *m = meta.clone();
+                }
+            }
+            if let Some(shared) = live {
+                if let Ok(mut s) = shared.lock() {
+                    *s = stats.clone();
+                }
+            }
+            let _ = reply.send(Ok(meta));
+        }
+    }
+    stats
+}
+
+/// Run the serving loop over a fixed [`Predictor`] until the job
+/// channel closes. [`Job::Reload`] is answered with an error — use
+/// [`serve_reloadable`] for hot-swappable serving. If `live` is given,
+/// stats are mirrored into it after every batch so another thread (the
+/// `net` metrics endpoint) can observe them mid-flight.
 pub fn serve_predictor<P: Predictor + ?Sized>(
     predictor: &P,
-    rx: mpsc::Receiver<Request>,
+    rx: mpsc::Receiver<Job>,
     cfg: &ServerConfig,
     live: Option<&Mutex<ServerStats>>,
 ) -> ServerStats {
-    let d = predictor.dim();
     let mut stats = ServerStats::default();
     loop {
-        // Block for the first request of a batch.
-        let first = match rx.recv() {
-            Ok(r) => r,
-            Err(_) => break, // channel closed: shut down
-        };
-        let mut batch = vec![first];
-        let deadline = Instant::now() + cfg.linger;
-        while batch.len() < cfg.max_batch {
-            let now = Instant::now();
-            if now >= deadline {
-                break;
-            }
-            match rx.recv_timeout(deadline - now) {
-                Ok(r) => batch.push(r),
-                Err(mpsc::RecvTimeoutError::Timeout) => break,
-                Err(mpsc::RecvTimeoutError::Disconnected) => break,
-            }
+        let Some((batch, reload)) = next_batch(&rx, cfg) else { break };
+        if !batch.is_empty() {
+            answer_batch(predictor, batch, &mut stats, live);
         }
-
-        let t0 = Instant::now();
-        let mut x_eval = Vec::with_capacity(batch.len() * d);
-        let mut ok_shape = Vec::with_capacity(batch.len());
-        for r in &batch {
-            if r.features.len() == d {
-                x_eval.extend_from_slice(&r.features);
-                ok_shape.push(true);
-            } else {
-                // keep the slab aligned; this slot gets an error reply
-                x_eval.extend(std::iter::repeat(0.0).take(d));
-                ok_shape.push(false);
-            }
-        }
-        let preds = predictor.predict_batch(&x_eval, batch.len());
-        stats.record_batch(batch.len(), t0.elapsed().as_secs_f64());
-        if let Some(shared) = live {
-            if let Ok(mut s) = shared.lock() {
-                *s = stats.clone();
-            }
-        }
-
-        match preds {
-            Ok(p) => {
-                for (k, req) in batch.into_iter().enumerate() {
-                    let reply = if !ok_shape[k] {
-                        Err(anyhow::anyhow!(
-                            "feature dim mismatch: got {}, want {}",
-                            req.features.len(),
-                            d
-                        ))
-                    } else if let Some(&pk) = p.get(k) {
-                        Ok(pk)
-                    } else {
-                        // Backend returned fewer predictions than the
-                        // batch size: answer with an error instead of
-                        // panicking the whole serving thread.
-                        Err(anyhow::anyhow!(
-                            "predict returned {} values for batch of {}",
-                            p.len(),
-                            k + 1
-                        ))
-                    };
-                    let _ = req.reply.send(reply);
-                }
-            }
-            Err(e) => {
-                for req in batch {
-                    let _ = req.reply.send(Err(anyhow::anyhow!("predict failed: {e}")));
-                }
-            }
+        if let Some(r) = reload {
+            let _ = r.reply.send(Err(anyhow::anyhow!(
+                "this serving loop has a fixed model; reload is not supported"
+            )));
         }
     }
     stats
@@ -259,6 +365,11 @@ pub fn serve_predictor<P: Predictor + ?Sized>(
 mod tests {
     use super::*;
     use crate::backend::HostBackend;
+
+    fn predict_job(features: Vec<f64>) -> (Job, mpsc::Receiver<anyhow::Result<f64>>) {
+        let (rtx, rrx) = mpsc::channel();
+        (Job::Predict(Request { features, reply: rtx }), rrx)
+    }
 
     #[test]
     fn stats_mean_batch() {
@@ -296,9 +407,9 @@ mod tests {
 
     #[test]
     fn short_prediction_batch_yields_error_not_panic() {
-        let (tx, rx) = mpsc::channel::<Request>();
-        let (rtx, rrx) = mpsc::channel();
-        tx.send(Request { features: vec![1.0, 2.0], reply: rtx }).unwrap();
+        let (tx, rx) = mpsc::channel::<Job>();
+        let (job, rrx) = predict_job(vec![1.0, 2.0]);
+        tx.send(job).unwrap();
         drop(tx);
         let stats = serve_predictor(&ShortPredictor, rx, &ServerConfig::default(), None);
         assert_eq!(stats.requests, 1);
@@ -307,22 +418,26 @@ mod tests {
         assert!(reply.unwrap_err().to_string().contains("returned 0 values"));
     }
 
-    #[test]
-    fn host_backend_predictor_serves_exact_predictions() {
-        // weights = e_0 => prediction is k(x, x_train[0]).
-        let model = ModelSnapshot {
+    fn toy_model(first_weight: f64) -> ModelSnapshot {
+        // weights = c * e_0 => prediction is c * k(x, x_train[0]).
+        ModelSnapshot {
             kernel: KernelKind::Rbf,
             sigma: 1.0,
             x_train: vec![0.0, 0.0, 1.0, 1.0],
             n: 2,
             d: 2,
-            weights: vec![1.0, 0.0],
-        };
+            weights: vec![first_weight, 0.0],
+        }
+    }
+
+    #[test]
+    fn host_backend_predictor_serves_exact_predictions() {
         let backend = HostBackend::new(2);
-        let p = BackendPredictor::new(&backend, &model);
-        let (tx, rx) = mpsc::channel::<Request>();
-        let (rtx, rrx) = mpsc::channel();
-        tx.send(Request { features: vec![0.0, 0.0], reply: rtx }).unwrap();
+        let p = BackendPredictor::new(&backend, toy_model(1.0));
+        assert_eq!(p.model().n, 2);
+        let (tx, rx) = mpsc::channel::<Job>();
+        let (job, rrx) = predict_job(vec![0.0, 0.0]);
+        tx.send(job).unwrap();
         drop(tx);
         let live = Mutex::new(ServerStats::default());
         serve_predictor(&p, rx, &ServerConfig::default(), Some(&live));
@@ -342,15 +457,67 @@ mod tests {
             weights: vec![1.0],
         };
         let backend = HostBackend::new(1);
-        let (tx, rx) = mpsc::channel::<Request>();
-        let (rtx1, rrx1) = mpsc::channel();
-        let (rtx2, rrx2) = mpsc::channel();
-        tx.send(Request { features: vec![0.0, 0.0], reply: rtx1 }).unwrap();
-        tx.send(Request { features: vec![0.0], reply: rtx2 }).unwrap();
+        let (tx, rx) = mpsc::channel::<Job>();
+        let (job1, rrx1) = predict_job(vec![0.0, 0.0]);
+        let (job2, rrx2) = predict_job(vec![0.0]);
+        tx.send(job1).unwrap();
+        tx.send(job2).unwrap();
         drop(tx);
-        let p = BackendPredictor::new(&backend, &model);
+        let p = BackendPredictor::new(&backend, model);
         serve_predictor(&p, rx, &ServerConfig::default(), None);
         assert!(rrx1.recv().unwrap().is_ok());
         assert!(rrx2.recv().unwrap().is_err());
+    }
+
+    #[test]
+    fn reload_swaps_the_model_between_batches() {
+        let backend = HostBackend::new(1);
+        let (tx, rx) = mpsc::channel::<Job>();
+        let (job1, rrx1) = predict_job(vec![0.0, 0.0]);
+        tx.send(job1).unwrap();
+        let (ack_tx, ack_rx) = mpsc::channel();
+        tx.send(Job::Reload(ReloadRequest {
+            model: Box::new(toy_model(2.0)),
+            meta: Json::obj(vec![("solver", Json::str("v2"))]),
+            reply: ack_tx,
+        }))
+        .unwrap();
+        let (job2, rrx2) = predict_job(vec![0.0, 0.0]);
+        tx.send(job2).unwrap();
+        drop(tx);
+        let info = Mutex::new(Json::Null);
+        let stats = serve_reloadable(
+            &backend,
+            toy_model(1.0),
+            rx,
+            &ServerConfig::default(),
+            None,
+            Some(&info),
+        );
+        // First request answered by the old model, second by the new.
+        assert!((rrx1.recv().unwrap().unwrap() - 1.0).abs() < 1e-12);
+        assert!((rrx2.recv().unwrap().unwrap() - 2.0).abs() < 1e-12);
+        let ack = ack_rx.recv().unwrap().unwrap();
+        assert_eq!(ack.get("solver").unwrap().as_str().unwrap(), "v2");
+        assert_eq!(stats.reloads, 1);
+        assert_eq!(
+            info.lock().unwrap().get("solver").unwrap().as_str().unwrap(),
+            "v2"
+        );
+    }
+
+    #[test]
+    fn fixed_predictor_rejects_reload() {
+        let (tx, rx) = mpsc::channel::<Job>();
+        let (ack_tx, ack_rx) = mpsc::channel();
+        tx.send(Job::Reload(ReloadRequest {
+            model: Box::new(toy_model(1.0)),
+            meta: Json::Null,
+            reply: ack_tx,
+        }))
+        .unwrap();
+        drop(tx);
+        serve_predictor(&ShortPredictor, rx, &ServerConfig::default(), None);
+        assert!(ack_rx.recv().unwrap().is_err());
     }
 }

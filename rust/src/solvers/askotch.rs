@@ -1,21 +1,26 @@
 //! ASkotch / Skotch — the paper's contribution (Algorithms 2 & 3).
 //!
-//! The solver owns the outer loop: per iteration it samples a block
-//! (uniform or ARLS) and hands it to the backend's
-//! [`crate::backend::SapStepper`], which performs the fused gather ->
-//! K_BB -> Nystrom -> get_L -> approximate projection -> (Nesterov)
-//! update. On the PJRT backend that chain is one compiled HLO module;
-//! on the host backend it is the multi-threaded f64 twin. Host-side
-//! per-iteration work in this file is O(b) sampling plus budget checks.
+//! The solver is an explicit state machine ([`AskotchState`]): per
+//! [`SolveState::step`] it samples a block (uniform or ARLS) and hands
+//! it to the backend's [`crate::backend::SapStepper`], which performs
+//! the fused gather -> K_BB -> Nystrom -> get_L -> approximate
+//! projection -> (Nesterov) update. On the PJRT backend that chain is
+//! one compiled HLO module; on the host backend it is the
+//! multi-threaded f64 twin. Host-side per-iteration work in this file
+//! is O(b) sampling plus budget checks (owned by the shared
+//! [`crate::solvers::drive`] loop).
+//!
+//! The resumable core of a solve is the stepper's iterate vectors plus
+//! two RNG streams (stepper + sampler) — a [`Checkpoint`] captures
+//! them, and a restored solve continues bit-for-bit.
 
-use crate::backend::{Backend, SapOptions};
+use crate::backend::{Backend, SapOptions, SapStepper};
 use crate::config::{ExperimentConfig, RhoMode, SamplingScheme};
-use crate::coordinator::{runtime_ops, Budget, KrrProblem, SolveReport};
+use crate::coordinator::{runtime_ops, Budget, KrrProblem};
 use crate::metrics::Trace;
 use crate::sampling::{self, ArlsSampler, BlockSampler, UniformSampler};
-use crate::solvers::{eval_every, eval_point, looks_diverged, Observer, Solver};
+use crate::solvers::{eval_point, Checkpoint, Observer, SolveState, Solver, StepOutcome};
 use crate::util::Rng;
-use std::time::Instant;
 
 /// Hyperparameters (paper SS3.2 defaults).
 #[derive(Debug, Clone)]
@@ -77,6 +82,15 @@ impl AskotchSolver {
         }
     }
 
+    fn family(&self) -> &'static str {
+        match (self.accelerated, self.identity) {
+            (true, false) => "askotch",
+            (false, false) => "skotch",
+            (true, true) => "askotch-identity",
+            (false, true) => "skotch-identity",
+        }
+    }
+
     fn build_sampler(&self, problem: &KrrProblem, b: usize) -> Box<dyn BlockSampler> {
         match self.cfg.sampling {
             SamplingScheme::Uniform => Box::new(UniformSampler::new(self.cfg.seed ^ 0xB10C)),
@@ -103,12 +117,6 @@ impl AskotchSolver {
 
 impl Solver for AskotchSolver {
     fn name(&self) -> String {
-        let base = match (self.accelerated, self.identity) {
-            (true, false) => "askotch",
-            (false, false) => "skotch",
-            (true, true) => "askotch-identity",
-            (false, true) => "skotch-identity",
-        };
         format!(
             "{base}(r={},rho={},P={})",
             self.cfg.rank,
@@ -119,18 +127,21 @@ impl Solver for AskotchSolver {
             match self.cfg.sampling {
                 SamplingScheme::Uniform => "uniform",
                 SamplingScheme::Arls => "arls",
-            }
+            },
+            base = self.family(),
         )
     }
 
-    fn run_observed(
-        &mut self,
-        backend: &dyn Backend,
-        problem: &KrrProblem,
-        budget: &Budget,
-        obs: &mut dyn Observer,
-    ) -> anyhow::Result<SolveReport> {
-        let (n, d) = (problem.n(), problem.d());
+    fn eval_every_override(&self) -> usize {
+        self.cfg.eval_every
+    }
+
+    fn init<'a>(
+        &self,
+        backend: &'a dyn Backend,
+        problem: &'a KrrProblem,
+        _budget: &Budget,
+    ) -> anyhow::Result<Box<dyn SolveState + 'a>> {
         let opts = SapOptions {
             rank: self.cfg.rank,
             accelerated: self.accelerated,
@@ -138,95 +149,121 @@ impl Solver for AskotchSolver {
             rho: self.cfg.rho,
             seed: self.cfg.seed,
         };
-        let mut stepper = backend.sap_stepper(problem, &opts)?;
+        let stepper = backend.sap_stepper(problem, &opts)?;
         let b = stepper.block_size();
-        let mut sampler = self.build_sampler(problem, b);
-
-        let eval_stride = if self.cfg.eval_every > 0 {
-            self.cfg.eval_every
-        } else {
-            eval_every(budget, 20)
-        };
-
-        let mut trace = Trace::default();
-        let mut diverged = false;
-        let t0 = Instant::now();
-        let mut iters = 0;
-        while !budget.exhausted(iters, t0.elapsed().as_secs_f64()) {
-            let idx = sampler.sample_block(n, b);
-            stepper.step(&idx)?;
-            iters += 1;
-            obs.on_iter(iters, t0.elapsed().as_secs_f64());
-
-            if iters % eval_stride == 0 || budget.exhausted(iters, t0.elapsed().as_secs_f64()) {
-                let w64 = stepper.weights();
-                if looks_diverged(&w64) {
-                    diverged = true;
-                    break;
-                }
-                let residual = if self.cfg.track_residual {
-                    if !backend.exact_arithmetic() && n <= 4096 {
-                        // Scalar f64 oracle: the f32 artifact matvec floors
-                        // the *measurement* around 1e-3 relative on
-                        // ill-conditioned K (fig9 needs better). Exact
-                        // backends skip this — their own (parallel) matvec
-                        // is already f64.
-                        runtime_ops::relative_residual_host(
-                            problem.kernel,
-                            &problem.train.x,
-                            n,
-                            d,
-                            &w64,
-                            &problem.train.y,
-                            problem.sigma,
-                            problem.lam,
-                        )
-                    } else {
-                        runtime_ops::relative_residual(
-                            backend,
-                            problem.kernel,
-                            &problem.train.x,
-                            n,
-                            d,
-                            &w64,
-                            &problem.train.y,
-                            problem.sigma,
-                            problem.lam,
-                            Some(&problem.train_sq_norms),
-                        )?
-                    }
-                } else {
-                    f64::NAN
-                };
-                eval_point(
-                    backend,
-                    problem,
-                    &w64,
-                    iters,
-                    t0.elapsed().as_secs_f64(),
-                    &mut trace,
-                    residual,
-                    obs,
-                )?;
-            }
-        }
-
-        let weights = stepper.weights();
-        let final_metric = trace.last_metric().unwrap_or(f64::NAN);
-        let final_residual = trace.last_residual().unwrap_or(f64::NAN);
-        let state_bytes = stepper.state_bytes();
-        Ok(SolveReport {
+        let sampler = self.build_sampler(problem, b);
+        Ok(Box::new(AskotchState {
+            backend,
+            problem,
+            stepper,
+            sampler,
             solver: self.name(),
-            problem: problem.name.clone(),
-            task: problem.task,
-            iters,
-            wall_secs: t0.elapsed().as_secs_f64(),
-            trace,
-            final_metric,
-            final_residual,
-            weights,
-            state_bytes,
-            diverged,
-        })
+            family: self.family(),
+            b,
+            iters: 0,
+            track_residual: self.cfg.track_residual,
+        }))
+    }
+}
+
+/// One in-flight ASkotch/Skotch solve: the backend-bound stepper, the
+/// block sampler, and the iteration counter. The resumable core is the
+/// stepper's iterates + both RNG streams; the sampler's derived score
+/// table (ARLS) is rebuilt from the seed by `init`.
+pub struct AskotchState<'a> {
+    backend: &'a dyn Backend,
+    problem: &'a KrrProblem,
+    stepper: Box<dyn SapStepper + 'a>,
+    sampler: Box<dyn BlockSampler>,
+    solver: String,
+    family: &'static str,
+    b: usize,
+    iters: usize,
+    track_residual: bool,
+}
+
+impl SolveState for AskotchState<'_> {
+    fn family(&self) -> &'static str {
+        self.family
+    }
+
+    fn iters(&self) -> usize {
+        self.iters
+    }
+
+    fn step(&mut self) -> anyhow::Result<StepOutcome> {
+        let idx = self.sampler.sample_block(self.problem.n(), self.b);
+        self.stepper.step(&idx)?;
+        self.iters += 1;
+        Ok(StepOutcome::Continue)
+    }
+
+    fn weights(&self) -> Vec<f64> {
+        self.stepper.weights()
+    }
+
+    fn eval(
+        &mut self,
+        weights: &[f64],
+        secs: f64,
+        trace: &mut Trace,
+        obs: &mut dyn Observer,
+    ) -> anyhow::Result<StepOutcome> {
+        let problem = self.problem;
+        let (n, d) = (problem.n(), problem.d());
+        let residual = if self.track_residual {
+            if !self.backend.exact_arithmetic() && n <= 4096 {
+                // Scalar f64 oracle: the f32 artifact matvec floors the
+                // *measurement* around 1e-3 relative on ill-conditioned
+                // K (fig9 needs better). Exact backends skip this —
+                // their own (parallel) matvec is already f64.
+                runtime_ops::relative_residual_host(
+                    problem.kernel,
+                    &problem.train.x,
+                    n,
+                    d,
+                    weights,
+                    &problem.train.y,
+                    problem.sigma,
+                    problem.lam,
+                )
+            } else {
+                runtime_ops::relative_residual(
+                    self.backend,
+                    problem.kernel,
+                    &problem.train.x,
+                    n,
+                    d,
+                    weights,
+                    &problem.train.y,
+                    problem.sigma,
+                    problem.lam,
+                    Some(&problem.train_sq_norms),
+                )?
+            }
+        } else {
+            f64::NAN
+        };
+        eval_point(self.backend, problem, weights, self.iters, secs, trace, residual, obs)?;
+        Ok(StepOutcome::Continue)
+    }
+
+    fn state_bytes(&self) -> usize {
+        self.stepper.state_bytes()
+    }
+
+    fn checkpoint(&self, secs: f64) -> Checkpoint {
+        let mut ck =
+            Checkpoint::new(self.family, &self.solver, &self.problem.name, self.iters, secs);
+        ck.push_rng("sampler", self.sampler.rng_state());
+        self.stepper.export_state(&mut ck);
+        ck
+    }
+
+    fn restore(&mut self, ck: &Checkpoint) -> anyhow::Result<()> {
+        ck.expect(self.family, &self.solver, &self.problem.name)?;
+        self.iters = ck.iters;
+        self.sampler.set_rng_state(ck.rng("sampler")?);
+        self.stepper.import_state(ck)
     }
 }

@@ -2,15 +2,16 @@
 //! introduction rules out at scale. Kept for ground truth on small
 //! problems and for the Table 2 scaling measurements. Kernel assembly
 //! goes through the backend (parallel tiled on the host engine); the
-//! factorization itself is the host Cholesky.
+//! factorization itself is the host Cholesky. As a state machine the
+//! whole solve is one [`StepOutcome::Done`] step; a checkpoint taken
+//! after it simply carries the solved weights.
 
 use crate::backend::Backend;
-use crate::coordinator::{Budget, KrrProblem, SolveReport};
+use crate::coordinator::{Budget, KrrProblem};
 use crate::kernels;
 use crate::linalg::{Chol, Mat};
 use crate::metrics::Trace;
-use crate::solvers::{eval_point, Observer, Solver};
-use std::time::Instant;
+use crate::solvers::{eval_point, Checkpoint, Observer, SolveState, Solver, StepOutcome};
 
 /// Hard cap: beyond this the dense build/factorization is pointless on a
 /// CPU testbed (that is the paper's whole argument).
@@ -73,32 +74,80 @@ impl Solver for CholeskySolver {
         "cholesky".into()
     }
 
-    fn run_observed(
-        &mut self,
-        backend: &dyn Backend,
-        problem: &KrrProblem,
+    fn init<'a>(
+        &self,
+        backend: &'a dyn Backend,
+        problem: &'a KrrProblem,
         _budget: &Budget,
+    ) -> anyhow::Result<Box<dyn SolveState + 'a>> {
+        Self::check_cap(problem.n())?;
+        Ok(Box::new(CholeskyState { backend, problem, w: None, iters: 0 }))
+    }
+}
+
+/// The direct solve as a one-step state machine: `step` assembles,
+/// factors, and solves, then reports [`StepOutcome::Done`].
+pub struct CholeskyState<'a> {
+    backend: &'a dyn Backend,
+    problem: &'a KrrProblem,
+    w: Option<Vec<f64>>,
+    iters: usize,
+}
+
+impl SolveState for CholeskyState<'_> {
+    fn family(&self) -> &'static str {
+        "cholesky"
+    }
+
+    fn iters(&self) -> usize {
+        self.iters
+    }
+
+    fn step(&mut self) -> anyhow::Result<StepOutcome> {
+        self.w = Some(CholeskySolver::solve_weights_on(self.backend, self.problem)?);
+        self.iters = 1;
+        Ok(StepOutcome::Done)
+    }
+
+    fn weights(&self) -> Vec<f64> {
+        self.w.clone().unwrap_or_else(|| vec![0.0; self.problem.n()])
+    }
+
+    fn eval(
+        &mut self,
+        weights: &[f64],
+        secs: f64,
+        trace: &mut Trace,
         obs: &mut dyn Observer,
-    ) -> anyhow::Result<SolveReport> {
-        let t0 = Instant::now();
-        let w = Self::solve_weights_on(backend, problem)?;
-        obs.on_iter(1, t0.elapsed().as_secs_f64());
-        let mut trace = Trace::default();
-        let secs = t0.elapsed().as_secs_f64();
-        let metric = eval_point(backend, problem, &w, 1, secs, &mut trace, f64::NAN, obs)?;
-        let n = problem.n();
-        Ok(SolveReport {
-            solver: self.name(),
-            problem: problem.name.clone(),
-            task: problem.task,
-            iters: 1,
-            wall_secs: t0.elapsed().as_secs_f64(),
-            trace,
-            final_metric: metric,
-            final_residual: 0.0,
-            weights: w,
-            state_bytes: n * n * 8,
-            diverged: false,
-        })
+    ) -> anyhow::Result<StepOutcome> {
+        // The direct solve is exact up to factorization rounding:
+        // residual 0 by convention (matches the pre-refactor report).
+        eval_point(self.backend, self.problem, weights, self.iters, secs, trace, 0.0, obs)?;
+        Ok(StepOutcome::Continue)
+    }
+
+    fn state_bytes(&self) -> usize {
+        let n = self.problem.n();
+        n * n * 8
+    }
+
+    fn checkpoint(&self, secs: f64) -> Checkpoint {
+        let mut ck =
+            Checkpoint::new("cholesky", "cholesky", &self.problem.name, self.iters, secs);
+        if let Some(w) = &self.w {
+            ck.push_vec("w", w.clone());
+        }
+        ck
+    }
+
+    fn restore(&mut self, ck: &Checkpoint) -> anyhow::Result<()> {
+        ck.expect("cholesky", "cholesky", &self.problem.name)?;
+        self.iters = ck.iters;
+        self.w = if ck.iters > 0 {
+            Some(ck.vec("w", self.problem.n())?.to_vec())
+        } else {
+            None
+        };
+        Ok(())
     }
 }

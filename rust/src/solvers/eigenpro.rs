@@ -4,7 +4,12 @@
 //! stochastic gradient descent whose gradient is preconditioned through
 //! the top-q eigensystem of a size-s uniform subsample of the kernel
 //! matrix. The batch gradient K(X_B, :) w runs through the backend's
-//! kernel matvec; the s x s eigensystem is a host subspace iteration.
+//! kernel matvec; the s x s eigensystem is a host subspace iteration,
+//! built in [`Solver::init`] and rebuilt deterministically on resume.
+//! The resumable core is the weight vector plus the live RNG stream
+//! (the eigensystem construction and the batch sampling share one
+//! stream, so the restored stream position reproduces the exact batch
+//! sequence).
 //!
 //! Default hyperparameters follow the reference implementation's spirit
 //! (fixed s, q, eta = 2 / lambda_{q+1} with a safety factor). As the
@@ -15,12 +20,11 @@
 
 use crate::backend::Backend;
 use crate::config::ExperimentConfig;
-use crate::coordinator::{Budget, KrrProblem, SolveReport};
-use crate::linalg::eig;
+use crate::coordinator::{Budget, KrrProblem};
+use crate::linalg::{eig, Mat};
 use crate::metrics::Trace;
-use crate::solvers::{eval_every, eval_point, looks_diverged, Observer, Solver};
+use crate::solvers::{eval_point, Checkpoint, Observer, SolveState, Solver, StepOutcome};
 use crate::util::Rng;
-use std::time::Instant;
 
 #[derive(Debug, Clone)]
 pub struct EigenProConfig {
@@ -58,25 +62,22 @@ impl Solver for EigenProSolver {
         format!("eigenpro(s={},q={},bg={})", self.cfg.s, self.cfg.q, self.cfg.batch)
     }
 
-    fn run_observed(
-        &mut self,
-        backend: &dyn Backend,
-        problem: &KrrProblem,
-        budget: &Budget,
-        obs: &mut dyn Observer,
-    ) -> anyhow::Result<SolveReport> {
+    fn init<'a>(
+        &self,
+        backend: &'a dyn Backend,
+        problem: &'a KrrProblem,
+        _budget: &Budget,
+    ) -> anyhow::Result<Box<dyn SolveState + 'a>> {
         let (n, d) = (problem.n(), problem.d());
         let s = self.cfg.s.min(n);
         let q = self.cfg.q.min(s.saturating_sub(1)).max(1);
         let bg = self.cfg.batch.min(n);
-        let t0 = Instant::now();
 
         // --- preconditioner: top-q eigensystem of (1/s) K_SS -------------
         let mut rng = Rng::new(self.cfg.seed ^ 0xE16E);
         let s_idx = rng.sample_distinct(n, s);
         let kss = backend.kernel_block(problem.kernel, &problem.train.x, d, &s_idx, problem.sigma);
-        let (mut eigs, qmat) =
-            eig::subspace_topk(s, q + 1, |v| kss.matvec(v), 40, &mut rng);
+        let (mut eigs, qmat) = eig::subspace_topk(s, q + 1, |v| kss.matvec(v), 40, &mut rng);
         for e in eigs.iter_mut() {
             *e /= s as f64; // spectrum of (1/s) K_SS approximates the integral operator
         }
@@ -92,81 +93,153 @@ impl Solver for EigenProSolver {
         let eta = 0.8 / ((lam_top * lam_cut).sqrt() * n as f64);
         // Flattening coefficients (1 - lambda_{q+1}/lambda_j).
         let flatten: Vec<f64> = (0..q).map(|j| 1.0 - lam_cut / eigs[j].max(1e-12)).collect();
-
-        // --- SGD loop -----------------------------------------------------
-        let mut w = vec![0.0f64; n];
-        let eval_stride = eval_every(budget, 20);
-        let mut trace = Trace::default();
-        let mut diverged = false;
-        let mut iters = 0;
-        let mut xb = vec![0.0f64; bg * d];
         let xs = subslab(&problem.train.x, &s_idx, d);
-        while !budget.exhausted(iters, t0.elapsed().as_secs_f64()) {
-            let batch = rng.sample_distinct(n, bg);
-            for (k, &i) in batch.iter().enumerate() {
-                xb[k * d..(k + 1) * d].copy_from_slice(problem.train.row(i));
-            }
-            // grad_k = K(x_k, :) w - y_k (lambda = 0), via the backend
-            // with the problem's cached train-slab norms
-            let kw = backend.kernel_matvec_with_norms(
-                problem.kernel,
-                &xb,
-                bg,
-                &problem.train.x,
-                n,
-                d,
-                &w,
-                problem.sigma,
-                Some(&problem.train_sq_norms),
-            )?;
-            let grad: Vec<f64> =
-                (0..bg).map(|k| kw[k] - problem.train.y[batch[k]]).collect();
 
-            // plain SGD part: w_B -= eta * grad
-            for (k, &i) in batch.iter().enumerate() {
-                w[i] -= eta * grad[k];
-            }
-            // preconditioner correction on the subsample coordinates:
-            // w_S += eta * Q diag(flatten) Q^T K(X_S, X_B) grad / s
-            let ksb = backend.kernel_matrix(problem.kernel, &xs, s, &xb, bg, d, problem.sigma);
-            let kg = ksb.matvec(&grad);
-            let qt_kg = qmat.matvec_t(&kg);
-            let mut coef = vec![0.0f64; q + 1];
-            for j in 0..q {
-                coef[j] = flatten[j] * qt_kg[j];
-            }
-            let corr = qmat.matvec(&coef);
-            for (k, &i) in s_idx.iter().enumerate() {
-                w[i] += eta * corr[k] / s as f64;
-            }
-            iters += 1;
-            obs.on_iter(iters, t0.elapsed().as_secs_f64());
-
-            if iters % eval_stride == 0 || budget.exhausted(iters, t0.elapsed().as_secs_f64()) {
-                if looks_diverged(&w) {
-                    diverged = true;
-                    break;
-                }
-                let secs = t0.elapsed().as_secs_f64();
-                eval_point(backend, problem, &w, iters, secs, &mut trace, f64::NAN, obs)?;
-            }
-        }
-
-        let final_metric = trace.last_metric().unwrap_or(f64::NAN);
-        let state_bytes = s * (q + 1) * 8 + s * s * 8 + n * 8;
-        Ok(SolveReport {
+        Ok(Box::new(EigenProState {
+            backend,
+            problem,
             solver: self.name(),
-            problem: problem.name.clone(),
-            task: problem.task,
-            iters,
-            wall_secs: t0.elapsed().as_secs_f64(),
+            s,
+            q,
+            bg,
+            s_idx,
+            xs,
+            qmat,
+            flatten,
+            eta,
+            rng,
+            w: vec![0.0f64; n],
+            xb: vec![0.0f64; bg * d],
+            iters: 0,
+        }))
+    }
+}
+
+/// One in-flight EigenPro solve: the subsample eigensystem (derived,
+/// rebuilt on resume) plus the weight vector and the live RNG stream
+/// (the resumable core).
+pub struct EigenProState<'a> {
+    backend: &'a dyn Backend,
+    problem: &'a KrrProblem,
+    solver: String,
+    s: usize,
+    q: usize,
+    bg: usize,
+    s_idx: Vec<usize>,
+    xs: Vec<f64>,
+    qmat: Mat,
+    flatten: Vec<f64>,
+    eta: f64,
+    rng: Rng,
+    w: Vec<f64>,
+    /// Reused gather buffer for the batch rows (bg x d).
+    xb: Vec<f64>,
+    iters: usize,
+}
+
+impl SolveState for EigenProState<'_> {
+    fn family(&self) -> &'static str {
+        "eigenpro"
+    }
+
+    fn iters(&self) -> usize {
+        self.iters
+    }
+
+    fn step(&mut self) -> anyhow::Result<StepOutcome> {
+        let problem = self.problem;
+        let (n, d) = (problem.n(), problem.d());
+        let (s, q, bg) = (self.s, self.q, self.bg);
+        let batch = self.rng.sample_distinct(n, bg);
+        for (k, &i) in batch.iter().enumerate() {
+            self.xb[k * d..(k + 1) * d].copy_from_slice(problem.train.row(i));
+        }
+        // grad_k = K(x_k, :) w - y_k (lambda = 0), via the backend
+        // with the problem's cached train-slab norms
+        let kw = self.backend.kernel_matvec_with_norms(
+            problem.kernel,
+            &self.xb,
+            bg,
+            &problem.train.x,
+            n,
+            d,
+            &self.w,
+            problem.sigma,
+            Some(&problem.train_sq_norms),
+        )?;
+        let grad: Vec<f64> = (0..bg).map(|k| kw[k] - problem.train.y[batch[k]]).collect();
+
+        // plain SGD part: w_B -= eta * grad
+        for (k, &i) in batch.iter().enumerate() {
+            self.w[i] -= self.eta * grad[k];
+        }
+        // preconditioner correction on the subsample coordinates:
+        // w_S += eta * Q diag(flatten) Q^T K(X_S, X_B) grad / s
+        let ksb = self.backend.kernel_matrix(
+            problem.kernel,
+            &self.xs,
+            s,
+            &self.xb,
+            bg,
+            d,
+            problem.sigma,
+        );
+        let kg = ksb.matvec(&grad);
+        let qt_kg = self.qmat.matvec_t(&kg);
+        let mut coef = vec![0.0f64; q + 1];
+        for j in 0..q {
+            coef[j] = self.flatten[j] * qt_kg[j];
+        }
+        let corr = self.qmat.matvec(&coef);
+        for (k, &i) in self.s_idx.iter().enumerate() {
+            self.w[i] += self.eta * corr[k] / s as f64;
+        }
+        self.iters += 1;
+        Ok(StepOutcome::Continue)
+    }
+
+    fn weights(&self) -> Vec<f64> {
+        self.w.clone()
+    }
+
+    fn eval(
+        &mut self,
+        weights: &[f64],
+        secs: f64,
+        trace: &mut Trace,
+        obs: &mut dyn Observer,
+    ) -> anyhow::Result<StepOutcome> {
+        eval_point(
+            self.backend,
+            self.problem,
+            weights,
+            self.iters,
+            secs,
             trace,
-            final_metric,
-            final_residual: f64::NAN,
-            weights: w,
-            state_bytes,
-            diverged,
-        })
+            f64::NAN,
+            obs,
+        )?;
+        Ok(StepOutcome::Continue)
+    }
+
+    fn state_bytes(&self) -> usize {
+        self.s * (self.q + 1) * 8 + self.s * self.s * 8 + self.problem.n() * 8
+    }
+
+    fn checkpoint(&self, secs: f64) -> Checkpoint {
+        let mut ck =
+            Checkpoint::new("eigenpro", &self.solver, &self.problem.name, self.iters, secs);
+        ck.push_rng("sgd_rng", self.rng.state());
+        ck.push_vec("w", self.w.clone());
+        ck
+    }
+
+    fn restore(&mut self, ck: &Checkpoint) -> anyhow::Result<()> {
+        ck.expect("eigenpro", &self.solver, &self.problem.name)?;
+        self.iters = ck.iters;
+        self.rng = Rng::from_state(ck.rng("sgd_rng")?);
+        self.w = ck.vec("w", self.problem.n())?.to_vec();
+        Ok(())
     }
 }
 

@@ -6,17 +6,18 @@
 //! through the backend's kernel matvec; the m x m preconditioner
 //! (K_mm + delta I)^{-1} is a host Cholesky — exactly the memory object
 //! whose O(m^2) footprint limits inducing-points methods (Table 1
-//! "Memory-efficient? NO").
+//! "Memory-efficient? NO"). Setup (centers, K_mm, its factor, the rhs)
+//! happens in [`Solver::init`] and is rebuilt deterministically on
+//! resume; the CG iterates are the state machine's resumable core.
 
 use crate::backend::Backend;
 use crate::config::ExperimentConfig;
-use crate::coordinator::{Budget, KrrProblem, SolveReport};
+use crate::coordinator::{Budget, KrrProblem};
 use crate::kernels::fused;
-use crate::linalg::{dense, Chol};
+use crate::linalg::{dense, Chol, Mat};
 use crate::metrics::{Trace, TracePoint};
-use crate::solvers::{eval_every, looks_diverged, Observer, Solver};
+use crate::solvers::{Checkpoint, Observer, SolveState, Solver, StepOutcome};
 use crate::util::Rng;
-use std::time::Instant;
 
 #[derive(Debug, Clone)]
 pub struct FalkonConfig {
@@ -52,17 +53,15 @@ impl Solver for FalkonSolver {
         format!("falkon(m={})", self.cfg.m)
     }
 
-    fn run_observed(
-        &mut self,
-        backend: &dyn Backend,
-        problem: &KrrProblem,
-        budget: &Budget,
-        obs: &mut dyn Observer,
-    ) -> anyhow::Result<SolveReport> {
+    fn init<'a>(
+        &self,
+        backend: &'a dyn Backend,
+        problem: &'a KrrProblem,
+        _budget: &Budget,
+    ) -> anyhow::Result<Box<dyn SolveState + 'a>> {
         let (n, d) = (problem.n(), problem.d());
         let m = self.cfg.m.min(n);
         let lam = problem.lam;
-        let t0 = Instant::now();
 
         // Inducing points: uniform sample without replacement (SC.2.2).
         let mut rng = Rng::new(self.cfg.seed ^ 0xFA1C);
@@ -83,37 +82,6 @@ impl Solver for FalkonSolver {
         kmm_reg.add_diag(lam + 1e-8 * m as f64);
         let pre = Chol::new(&kmm_reg, 0.0)?;
 
-        // Operator A(v) = K_nm^T (K_nm v) + lam K_mm v via the backend.
-        let apply = |v: &[f64]| -> anyhow::Result<Vec<f64>> {
-            let t = backend.kernel_matvec_with_norms(
-                problem.kernel,
-                &problem.train.x,
-                n,
-                &xm,
-                m,
-                d,
-                v,
-                problem.sigma,
-                Some(&xm_sq),
-            )?;
-            let mut s = backend.kernel_matvec_with_norms(
-                problem.kernel,
-                &xm,
-                m,
-                &problem.train.x,
-                n,
-                d,
-                &t,
-                problem.sigma,
-                Some(&problem.train_sq_norms),
-            )?;
-            let kv = kmm.matvec(v);
-            for i in 0..m {
-                s[i] += lam * kv[i];
-            }
-            Ok(s)
-        };
-
         // rhs = K_nm^T y.
         let rhs = backend.kernel_matvec_with_norms(
             problem.kernel,
@@ -128,88 +96,177 @@ impl Solver for FalkonSolver {
         )?;
         let rhs_norm = dense::norm(&rhs).max(1e-300);
 
-        // Preconditioned CG on the m-dimensional system.
-        let mut w = vec![0.0f64; m];
-        let mut res = rhs.clone();
-        let mut z = pre.solve(&res);
-        let mut p = z.clone();
-        let mut rz = dense::dot(&res, &z);
-
-        let eval_stride = eval_every(budget, 20);
-        let mut trace = Trace::default();
-        let mut diverged = false;
-        let mut iters = 0;
-        while !budget.exhausted(iters, t0.elapsed().as_secs_f64()) {
-            let ap = apply(&p)?;
-            let pap = dense::dot(&p, &ap);
-            if pap <= 0.0 || !pap.is_finite() {
-                diverged = !pap.is_finite();
-                break;
-            }
-            let alpha = rz / pap;
-            for i in 0..m {
-                w[i] += alpha * p[i];
-                res[i] -= alpha * ap[i];
-            }
-            z = pre.solve(&res);
-            let rz_new = dense::dot(&res, &z);
-            let beta = rz_new / rz;
-            rz = rz_new;
-            for i in 0..m {
-                p[i] = z[i] + beta * p[i];
-            }
-            iters += 1;
-            obs.on_iter(iters, t0.elapsed().as_secs_f64());
-
-            if iters % eval_stride == 0 || budget.exhausted(iters, t0.elapsed().as_secs_f64()) {
-                if looks_diverged(&w) {
-                    diverged = true;
-                    break;
-                }
-                // Inducing-points prediction: K(test, Xm) w.
-                let pred = backend.predict_with_norms(
-                    problem.kernel,
-                    &xm,
-                    m,
-                    d,
-                    &w,
-                    &problem.test.x,
-                    problem.test.n,
-                    problem.sigma,
-                    Some(&xm_sq),
-                )?;
-                let metric = crate::metrics::task_metric(problem.task, &pred, &problem.test.y);
-                let rel = dense::norm(&res) / rhs_norm;
-                let point = TracePoint {
-                    iter: iters,
-                    secs: t0.elapsed().as_secs_f64(),
-                    metric,
-                    residual: rel,
-                };
-                trace.push(point);
-                obs.on_eval(&point);
-                if rel < 1e-12 {
-                    break;
-                }
-            }
-        }
-
-        let final_metric = trace.last_metric().unwrap_or(f64::NAN);
-        let final_residual = trace.last_residual().unwrap_or(f64::NAN);
-        // K_mm + its factor dominate: 2 m^2 f64.
-        let state_bytes = 2 * m * m * 8 + 4 * m * 8;
-        Ok(SolveReport {
+        // CG state: w = 0, r = rhs, z = P^{-1} r, p = z.
+        let res = rhs;
+        let z = pre.solve(&res);
+        let p = z.clone();
+        let rz = dense::dot(&res, &z);
+        Ok(Box::new(FalkonState {
+            backend,
+            problem,
             solver: self.name(),
-            problem: problem.name.clone(),
-            task: problem.task,
-            iters,
-            wall_secs: t0.elapsed().as_secs_f64(),
-            trace,
-            final_metric,
-            final_residual,
-            weights: w,
-            state_bytes,
-            diverged,
-        })
+            m,
+            xm,
+            xm_sq,
+            kmm,
+            pre,
+            w: vec![0.0f64; m],
+            res,
+            z,
+            p,
+            rz,
+            rhs_norm,
+            iters: 0,
+        }))
+    }
+}
+
+/// One in-flight Falkon solve: the inducing-point slab, K_mm and its
+/// factor (derived, rebuilt on resume), and the m-dimensional CG
+/// iterates (the resumable core).
+pub struct FalkonState<'a> {
+    backend: &'a dyn Backend,
+    problem: &'a KrrProblem,
+    solver: String,
+    m: usize,
+    xm: Vec<f64>,
+    xm_sq: Vec<f64>,
+    kmm: Mat,
+    pre: Chol,
+    w: Vec<f64>,
+    res: Vec<f64>,
+    z: Vec<f64>,
+    p: Vec<f64>,
+    rz: f64,
+    rhs_norm: f64,
+    iters: usize,
+}
+
+impl FalkonState<'_> {
+    /// Operator A(v) = K_nm^T (K_nm v) + lam K_mm v via the backend.
+    fn apply(&self, v: &[f64]) -> anyhow::Result<Vec<f64>> {
+        let (n, d) = (self.problem.n(), self.problem.d());
+        let m = self.m;
+        let lam = self.problem.lam;
+        let t = self.backend.kernel_matvec_with_norms(
+            self.problem.kernel,
+            &self.problem.train.x,
+            n,
+            &self.xm,
+            m,
+            d,
+            v,
+            self.problem.sigma,
+            Some(&self.xm_sq),
+        )?;
+        let mut s = self.backend.kernel_matvec_with_norms(
+            self.problem.kernel,
+            &self.xm,
+            m,
+            &self.problem.train.x,
+            n,
+            d,
+            &t,
+            self.problem.sigma,
+            Some(&self.problem.train_sq_norms),
+        )?;
+        let kv = self.kmm.matvec(v);
+        for i in 0..m {
+            s[i] += lam * kv[i];
+        }
+        Ok(s)
+    }
+}
+
+impl SolveState for FalkonState<'_> {
+    fn family(&self) -> &'static str {
+        "falkon"
+    }
+
+    fn iters(&self) -> usize {
+        self.iters
+    }
+
+    fn step(&mut self) -> anyhow::Result<StepOutcome> {
+        let m = self.m;
+        let ap = self.apply(&self.p)?;
+        let pap = dense::dot(&self.p, &ap);
+        if pap <= 0.0 || !pap.is_finite() {
+            return Ok(if pap.is_finite() { StepOutcome::Abort } else { StepOutcome::Diverged });
+        }
+        let alpha = self.rz / pap;
+        for i in 0..m {
+            self.w[i] += alpha * self.p[i];
+            self.res[i] -= alpha * ap[i];
+        }
+        self.z = self.pre.solve(&self.res);
+        let rz_new = dense::dot(&self.res, &self.z);
+        let beta = rz_new / self.rz;
+        self.rz = rz_new;
+        for i in 0..m {
+            self.p[i] = self.z[i] + beta * self.p[i];
+        }
+        self.iters += 1;
+        Ok(StepOutcome::Continue)
+    }
+
+    fn weights(&self) -> Vec<f64> {
+        self.w.clone()
+    }
+
+    fn eval(
+        &mut self,
+        weights: &[f64],
+        secs: f64,
+        trace: &mut Trace,
+        obs: &mut dyn Observer,
+    ) -> anyhow::Result<StepOutcome> {
+        // Inducing-points prediction: K(test, Xm) w.
+        let problem = self.problem;
+        let pred = self.backend.predict_with_norms(
+            problem.kernel,
+            &self.xm,
+            self.m,
+            problem.d(),
+            weights,
+            &problem.test.x,
+            problem.test.n,
+            problem.sigma,
+            Some(&self.xm_sq),
+        )?;
+        let metric = crate::metrics::task_metric(problem.task, &pred, &problem.test.y);
+        let rel = dense::norm(&self.res) / self.rhs_norm;
+        let point = TracePoint { iter: self.iters, secs, metric, residual: rel };
+        trace.push(point);
+        obs.on_eval(&point);
+        Ok(if rel < 1e-12 { StepOutcome::Done } else { StepOutcome::Continue })
+    }
+
+    fn state_bytes(&self) -> usize {
+        // K_mm + its factor dominate: 2 m^2 f64.
+        2 * self.m * self.m * 8 + 4 * self.m * 8
+    }
+
+    fn checkpoint(&self, secs: f64) -> Checkpoint {
+        let mut ck =
+            Checkpoint::new("falkon", &self.solver, &self.problem.name, self.iters, secs);
+        ck.push_vec("w", self.w.clone());
+        ck.push_vec("res", self.res.clone());
+        ck.push_vec("z", self.z.clone());
+        ck.push_vec("p", self.p.clone());
+        ck.push_scalar("rz", self.rz);
+        ck
+    }
+
+    fn restore(&mut self, ck: &Checkpoint) -> anyhow::Result<()> {
+        ck.expect("falkon", &self.solver, &self.problem.name)?;
+        let m = self.m;
+        self.iters = ck.iters;
+        self.w = ck.vec("w", m)?.to_vec();
+        self.res = ck.vec("res", m)?.to_vec();
+        self.z = ck.vec("z", m)?.to_vec();
+        self.p = ck.vec("p", m)?.to_vec();
+        self.rz = ck.scalar("rz")?;
+        Ok(())
     }
 }

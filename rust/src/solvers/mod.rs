@@ -3,12 +3,23 @@
 //! Cholesky). All heavy kernel products dispatch through the
 //! [`crate::backend::Backend`] trait — the AOT artifacts when a PJRT
 //! backend is supplied, the parallel host engine otherwise.
+//!
+//! Every solver is an explicit state machine ([`SolveState`], built by
+//! [`Solver::init`]): `step` advances one iteration, the shared
+//! [`drive`] loop owns budgets / eval cadence / checkpoints, and the
+//! iterate core is a first-class, serializable [`Checkpoint`] — a
+//! solve can pause every N iterations and `--resume` bit-for-bit
+//! (`docs/MODELS.md`). [`Solver::run_observed`] is now a thin default
+//! over that machinery.
 
 pub mod askotch;
 pub mod cholesky;
 pub mod eigenpro;
 pub mod falkon;
 pub mod pcg;
+pub mod state;
+
+pub use state::{drive, Checkpoint, DrivePolicy, SolveState, StepOutcome, CHECKPOINT_VERSION};
 
 use crate::backend::Backend;
 use crate::coordinator::{Budget, KrrProblem, SolveReport};
@@ -46,8 +57,30 @@ pub struct NullObserver;
 impl Observer for NullObserver {}
 
 /// A KRR solver that can be driven by the coordinator.
+///
+/// Implementations provide [`Solver::init`] — everything else
+/// ([`Solver::run`], [`Solver::run_observed`]) is the shared [`drive`]
+/// loop over the returned [`SolveState`].
 pub trait Solver {
     fn name(&self) -> String;
+
+    /// Bind this solver to a problem on a backend: build the
+    /// setup-time state (preconditioners, steppers, samplers) and
+    /// fresh iterates. `budget` is visible to setup so its cost can be
+    /// charged against the wall clock (PCG's Gaussian sketch
+    /// deliberately starves it at scale — paper Fig. 1).
+    fn init<'a>(
+        &self,
+        backend: &'a dyn Backend,
+        problem: &'a KrrProblem,
+        budget: &Budget,
+    ) -> anyhow::Result<Box<dyn SolveState + 'a>>;
+
+    /// Per-solver eval-cadence override consumed by the default
+    /// [`Solver::run_observed`] (0 = the driver's auto cadence).
+    fn eval_every_override(&self) -> usize {
+        0
+    }
 
     /// Run until the budget is exhausted (or convergence/divergence).
     fn run(
@@ -68,7 +101,20 @@ pub trait Solver {
         problem: &KrrProblem,
         budget: &Budget,
         obs: &mut dyn Observer,
-    ) -> anyhow::Result<SolveReport>;
+    ) -> anyhow::Result<SolveReport> {
+        let name = self.name();
+        let t_init = std::time::Instant::now();
+        let mut state = self.init(backend, problem, budget)?;
+        // Setup time (preconditioners, eigensystems, sketches) counts
+        // against the wall budget, exactly as when it lived inside the
+        // old monolithic loops.
+        let policy = DrivePolicy {
+            eval_every: self.eval_every_override(),
+            base_secs: t_init.elapsed().as_secs_f64(),
+            ..Default::default()
+        };
+        drive(name, state.as_mut(), problem, budget, obs, &policy)
+    }
 }
 
 /// Shared trace-evaluation cadence: evaluate the test metric roughly

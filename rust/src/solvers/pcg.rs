@@ -1,7 +1,9 @@
 //! Full-KRR preconditioned conjugate gradient — the paper's strongest
 //! classical baseline (SS4.1). O(n^2) per iteration through the
 //! backend's full kernel matvec; rank-r Nystrom preconditioner built at
-//! setup.
+//! [`Solver::init`]. The CG iterates (`w`, `res`, `z`, `p`, `rz`) are
+//! the state machine's resumable core; the preconditioner is rebuilt
+//! deterministically from the seed on resume.
 //!
 //! Two preconditioner constructions, mirroring the paper's comparisons:
 //! * `Rpc` — column (pivoted) Nystrom from r uniformly sampled columns,
@@ -9,14 +11,18 @@
 //! * `Gaussian` — Gaussian sketch Y = K Omega, needing r full O(n^2)
 //!   matvecs at setup. This is the construction whose setup cost blows up
 //!   at scale (Fig. 1: "fails to complete a single iteration").
+//!
+//! The Woodbury application of `(B B^T + rho I)^{-1}` is the shared
+//! [`crate::linalg::Woodbury`] — one implementation serves this
+//! preconditioner and the SAP stepper's approximate projection.
 
 use crate::backend::Backend;
 use crate::config::ExperimentConfig;
-use crate::coordinator::{Budget, KrrProblem, SolveReport};
+use crate::coordinator::{Budget, KrrProblem};
 use crate::kernels;
-use crate::linalg::{dense, Chol, Mat};
+use crate::linalg::{dense, Chol, Mat, Woodbury};
 use crate::metrics::Trace;
-use crate::solvers::{eval_every, eval_point, looks_diverged, Observer, Solver};
+use crate::solvers::{eval_point, Checkpoint, Observer, SolveState, Solver, StepOutcome};
 use crate::util::Rng;
 use std::time::Instant;
 
@@ -47,29 +53,6 @@ impl Default for PcgConfig {
 
 pub struct PcgSolver {
     pub cfg: PcgConfig,
-}
-
-/// Woodbury application of `(B B^T + rho I)^{-1}`.
-struct NystromPrecond {
-    b_factor: Mat,
-    core: Chol,
-    rho: f64,
-}
-
-impl NystromPrecond {
-    fn new(b_factor: Mat, rho: f64) -> anyhow::Result<NystromPrecond> {
-        let mut core = b_factor.gram();
-        core.add_diag(rho);
-        let core = Chol::new(&core, 0.0)?;
-        Ok(NystromPrecond { b_factor, core, rho })
-    }
-
-    fn apply(&self, v: &[f64]) -> Vec<f64> {
-        let btv = self.b_factor.matvec_t(v);
-        let s = self.core.solve(&btv);
-        let bs = self.b_factor.matvec(&s);
-        v.iter().zip(&bs).map(|(x, y)| (x - y) / self.rho).collect()
-    }
 }
 
 impl PcgSolver {
@@ -132,7 +115,7 @@ impl PcgSolver {
             for i in 0..n {
                 col[i] = omega[(i, j)];
             }
-            let kcol = self.matvec(backend, problem, &col)?;
+            let kcol = kernel_matvec_full(backend, problem, self.cfg.f64_matvec, &col)?;
             for i in 0..n {
                 y[(i, j)] = kcol[i];
             }
@@ -148,31 +131,32 @@ impl PcgSolver {
         }
         Ok(Some(b))
     }
+}
 
-    /// K @ v (without the ridge term).
-    fn matvec(
-        &self,
-        backend: &dyn Backend,
-        problem: &KrrProblem,
-        v: &[f64],
-    ) -> anyhow::Result<Vec<f64>> {
-        let (n, d) = (problem.n(), problem.d());
-        if self.cfg.f64_matvec {
-            let idx: Vec<usize> = (0..n).collect();
-            Ok(kernels::rows_matvec(problem.kernel, &problem.train.x, n, d, &idx, v, problem.sigma))
-        } else {
-            backend.kernel_matvec_with_norms(
-                problem.kernel,
-                &problem.train.x,
-                n,
-                &problem.train.x,
-                n,
-                d,
-                v,
-                problem.sigma,
-                Some(&problem.train_sq_norms),
-            )
-        }
+/// K @ v (without the ridge term), through the backend or the f64
+/// scalar oracle.
+fn kernel_matvec_full(
+    backend: &dyn Backend,
+    problem: &KrrProblem,
+    f64_matvec: bool,
+    v: &[f64],
+) -> anyhow::Result<Vec<f64>> {
+    let (n, d) = (problem.n(), problem.d());
+    if f64_matvec {
+        let idx: Vec<usize> = (0..n).collect();
+        Ok(kernels::rows_matvec(problem.kernel, &problem.train.x, n, d, &idx, v, problem.sigma))
+    } else {
+        backend.kernel_matvec_with_norms(
+            problem.kernel,
+            &problem.train.x,
+            n,
+            &problem.train.x,
+            n,
+            d,
+            v,
+            problem.sigma,
+            Some(&problem.train_sq_norms),
+        )
     }
 }
 
@@ -200,120 +184,175 @@ impl Solver for PcgSolver {
         )
     }
 
-    fn run_observed(
-        &mut self,
-        backend: &dyn Backend,
-        problem: &KrrProblem,
+    fn init<'a>(
+        &self,
+        backend: &'a dyn Backend,
+        problem: &'a KrrProblem,
         budget: &Budget,
-        obs: &mut dyn Observer,
-    ) -> anyhow::Result<SolveReport> {
+    ) -> anyhow::Result<Box<dyn SolveState + 'a>> {
         let n = problem.n();
         let lam = problem.lam;
         let t0 = Instant::now();
 
         // --- preconditioner setup (counted against the budget) ----------
+        let mut starved = false;
         let precond = match self.cfg.precond {
             PcgPrecond::Rpc => {
-                Some(NystromPrecond::new(self.rpc_b_factor(backend, problem)?, lam.max(1e-10))?)
+                Some(Woodbury::from_factor(self.rpc_b_factor(backend, problem)?, lam.max(1e-10))?)
             }
             PcgPrecond::Gaussian => {
                 match self.gaussian_b_factor(backend, problem, budget, &t0)? {
-                    Some(b) => Some(NystromPrecond::new(b, lam.max(1e-10))?),
+                    Some(b) => Some(Woodbury::from_factor(b, lam.max(1e-10))?),
                     None => {
-                        // Setup starved the budget: report zero iterations
-                        // (paper Fig. 1's "did not complete one iteration").
-                        return Ok(SolveReport {
-                            solver: self.name(),
-                            problem: problem.name.clone(),
-                            task: problem.task,
-                            iters: 0,
-                            wall_secs: t0.elapsed().as_secs_f64(),
-                            trace: Trace::default(),
-                            final_metric: f64::NAN,
-                            final_residual: f64::NAN,
-                            weights: vec![0.0; n],
-                            state_bytes: n * self.cfg.rank * 8,
-                            diverged: false,
-                        });
+                        // Setup starved the budget: the first step()
+                        // aborts with zero iterations (paper Fig. 1's
+                        // "did not complete one iteration").
+                        starved = true;
+                        None
                     }
                 }
             }
             PcgPrecond::None => None,
         };
 
-        // --- CG loop -----------------------------------------------------
+        // --- CG state: w = 0, r = y, z = P^{-1} r, p = z ----------------
         let y = &problem.train.y;
-        let mut w = vec![0.0f64; n];
-        let mut res: Vec<f64> = y.clone(); // r = y - A w, w = 0
-        let mut zv = match &precond {
-            Some(p) => p.apply(&res),
+        let res: Vec<f64> = y.clone();
+        let zv = match &precond {
+            Some(pc) => pc.apply(&res),
             None => res.clone(),
         };
-        let mut p = zv.clone();
-        let mut rz = dense::dot(&res, &zv);
+        let p = zv.clone();
+        let rz = dense::dot(&res, &zv);
         let y_norm = dense::norm(y).max(1e-300);
-
-        let eval_stride = eval_every(budget, 20);
-        let mut trace = Trace::default();
-        let mut diverged = false;
-        let mut iters = 0;
-        while !budget.exhausted(iters, t0.elapsed().as_secs_f64()) {
-            let mut ap = self.matvec(backend, problem, &p)?;
-            for i in 0..n {
-                ap[i] += lam * p[i];
-            }
-            let pap = dense::dot(&p, &ap);
-            if pap <= 0.0 || !pap.is_finite() {
-                diverged = !pap.is_finite();
-                break;
-            }
-            let alpha = rz / pap;
-            for i in 0..n {
-                w[i] += alpha * p[i];
-                res[i] -= alpha * ap[i];
-            }
-            zv = match &precond {
-                Some(pc) => pc.apply(&res),
-                None => res.clone(),
-            };
-            let rz_new = dense::dot(&res, &zv);
-            let beta = rz_new / rz;
-            rz = rz_new;
-            for i in 0..n {
-                p[i] = zv[i] + beta * p[i];
-            }
-            iters += 1;
-            obs.on_iter(iters, t0.elapsed().as_secs_f64());
-
-            if iters % eval_stride == 0 || budget.exhausted(iters, t0.elapsed().as_secs_f64()) {
-                if looks_diverged(&w) {
-                    diverged = true;
-                    break;
-                }
-                let rel = dense::norm(&res) / y_norm;
-                let secs = t0.elapsed().as_secs_f64();
-                eval_point(backend, problem, &w, iters, secs, &mut trace, rel, obs)?;
-                if rel < 1e-12 {
-                    break;
-                }
-            }
-        }
-
-        let final_metric = trace.last_metric().unwrap_or(f64::NAN);
-        let final_residual = trace.last_residual().unwrap_or(f64::NAN);
-        let state_bytes = n * self.cfg.rank * 8 + 4 * n * 8;
-        Ok(SolveReport {
+        Ok(Box::new(PcgState {
+            backend,
+            problem,
             solver: self.name(),
-            problem: problem.name.clone(),
-            task: problem.task,
-            iters,
-            wall_secs: t0.elapsed().as_secs_f64(),
-            trace,
-            final_metric,
-            final_residual,
-            weights: w,
-            state_bytes,
-            diverged,
-        })
+            f64_matvec: self.cfg.f64_matvec,
+            rank: self.cfg.rank,
+            precond,
+            starved,
+            w: vec![0.0f64; n],
+            res,
+            zv,
+            p,
+            rz,
+            y_norm,
+            iters: 0,
+        }))
+    }
+}
+
+/// One in-flight PCG solve: the preconditioner (derived, rebuilt on
+/// resume) plus the CG iterates (the resumable core).
+pub struct PcgState<'a> {
+    backend: &'a dyn Backend,
+    problem: &'a KrrProblem,
+    solver: String,
+    f64_matvec: bool,
+    rank: usize,
+    precond: Option<Woodbury>,
+    /// Gaussian setup blew the whole budget: report zero iterations.
+    starved: bool,
+    w: Vec<f64>,
+    res: Vec<f64>,
+    zv: Vec<f64>,
+    p: Vec<f64>,
+    rz: f64,
+    y_norm: f64,
+    iters: usize,
+}
+
+impl SolveState for PcgState<'_> {
+    fn family(&self) -> &'static str {
+        "pcg"
+    }
+
+    fn iters(&self) -> usize {
+        self.iters
+    }
+
+    fn step(&mut self) -> anyhow::Result<StepOutcome> {
+        if self.starved {
+            return Ok(StepOutcome::Abort);
+        }
+        let n = self.problem.n();
+        let lam = self.problem.lam;
+        let mut ap = kernel_matvec_full(self.backend, self.problem, self.f64_matvec, &self.p)?;
+        for i in 0..n {
+            ap[i] += lam * self.p[i];
+        }
+        let pap = dense::dot(&self.p, &ap);
+        if pap <= 0.0 || !pap.is_finite() {
+            // Curvature breakdown: numerical exhaustion stops silently,
+            // a non-finite product is divergence.
+            return Ok(if pap.is_finite() { StepOutcome::Abort } else { StepOutcome::Diverged });
+        }
+        let alpha = self.rz / pap;
+        for i in 0..n {
+            self.w[i] += alpha * self.p[i];
+            self.res[i] -= alpha * ap[i];
+        }
+        self.zv = match &self.precond {
+            Some(pc) => pc.apply(&self.res),
+            None => self.res.clone(),
+        };
+        let rz_new = dense::dot(&self.res, &self.zv);
+        let beta = rz_new / self.rz;
+        self.rz = rz_new;
+        for i in 0..n {
+            self.p[i] = self.zv[i] + beta * self.p[i];
+        }
+        self.iters += 1;
+        Ok(StepOutcome::Continue)
+    }
+
+    fn weights(&self) -> Vec<f64> {
+        self.w.clone()
+    }
+
+    fn eval(
+        &mut self,
+        weights: &[f64],
+        secs: f64,
+        trace: &mut Trace,
+        obs: &mut dyn Observer,
+    ) -> anyhow::Result<StepOutcome> {
+        let rel = dense::norm(&self.res) / self.y_norm;
+        eval_point(self.backend, self.problem, weights, self.iters, secs, trace, rel, obs)?;
+        Ok(if rel < 1e-12 { StepOutcome::Done } else { StepOutcome::Continue })
+    }
+
+    fn state_bytes(&self) -> usize {
+        let n = self.problem.n();
+        if self.starved {
+            n * self.rank * 8
+        } else {
+            n * self.rank * 8 + 4 * n * 8
+        }
+    }
+
+    fn checkpoint(&self, secs: f64) -> Checkpoint {
+        let mut ck =
+            Checkpoint::new("pcg", &self.solver, &self.problem.name, self.iters, secs);
+        ck.push_vec("w", self.w.clone());
+        ck.push_vec("res", self.res.clone());
+        ck.push_vec("z", self.zv.clone());
+        ck.push_vec("p", self.p.clone());
+        ck.push_scalar("rz", self.rz);
+        ck
+    }
+
+    fn restore(&mut self, ck: &Checkpoint) -> anyhow::Result<()> {
+        ck.expect("pcg", &self.solver, &self.problem.name)?;
+        let n = self.problem.n();
+        self.iters = ck.iters;
+        self.w = ck.vec("w", n)?.to_vec();
+        self.res = ck.vec("res", n)?.to_vec();
+        self.zv = ck.vec("z", n)?.to_vec();
+        self.p = ck.vec("p", n)?.to_vec();
+        self.rz = ck.scalar("rz")?;
+        Ok(())
     }
 }

@@ -1,0 +1,325 @@
+//! The explicit solver state machine behind every `run_observed`.
+//!
+//! Each solver family implements [`SolveState`]: `init` (on the
+//! [`super::Solver`] trait) builds the setup-time objects
+//! (preconditioners, steppers, samplers) plus fresh iterates, `step`
+//! advances one iteration, `eval` records a trace point, and
+//! [`drive`] owns the outer loop — budgets, eval cadence, divergence
+//! checks, checkpoint cadence, and the final [`SolveReport`]. Before
+//! this refactor every solver re-implemented that loop privately and
+//! the iterate state lived in loop locals; now it is a first-class
+//! value that can be captured ([`SolveState::checkpoint`]) and restored
+//! ([`SolveState::restore`]) bit-for-bit.
+//!
+//! A [`Checkpoint`] is the serializable core of a paused solve: named
+//! f64 slabs (iterate vectors, CG directions, scalars as length-1
+//! slabs) plus named RNG streams ([`RngState`]). Everything *derived*
+//! (kernel caches, preconditioners, Nystrom factors, samplers' scores)
+//! is deliberately excluded: it is rebuilt deterministically by `init`
+//! from the problem and the seed, which keeps checkpoints O(n) instead
+//! of O(n r). Persistence (JSON manifest + binary slab) lives in
+//! `crate::model::checkpoint`.
+
+use crate::coordinator::{Budget, KrrProblem, SolveReport};
+use crate::metrics::Trace;
+use crate::solvers::{eval_every, looks_diverged, Observer};
+use crate::util::RngState;
+use std::time::Instant;
+
+/// Format version of the checkpoint schema (bumped on layout changes;
+/// load rejects mismatches instead of misreading state).
+pub const CHECKPOINT_VERSION: u32 = 1;
+
+/// What one call to [`SolveState::step`] / [`SolveState::eval`] decided
+/// about the solve.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StepOutcome {
+    /// Keep iterating.
+    Continue,
+    /// This iteration completed *and* the solve is finished (direct
+    /// solvers after their single step; CG at tolerance). The driver
+    /// records a final eval, then stops.
+    Done,
+    /// The step could not make progress (CG curvature breakdown,
+    /// setup starved the whole budget): stop immediately, no divergence
+    /// flag, no further eval.
+    Abort,
+    /// Numerical divergence: stop immediately and flag the report.
+    Diverged,
+}
+
+/// A solver bound to `(backend, problem)`: the explicit state machine
+/// driven by [`drive`]. Implementations hold borrowed setup state
+/// (steppers, preconditioners) and owned iterates.
+pub trait SolveState {
+    /// Solver family tag recorded in checkpoints (`"askotch"`,
+    /// `"pcg"`, ...): coarse compatibility key next to the exact
+    /// solver display name.
+    fn family(&self) -> &'static str;
+
+    /// Iterations completed so far (continues across a restore).
+    fn iters(&self) -> usize;
+
+    /// Advance one iteration.
+    fn step(&mut self) -> anyhow::Result<StepOutcome>;
+
+    /// Current full weights in f64 (length n for full KRR, m for
+    /// inducing points).
+    fn weights(&self) -> Vec<f64>;
+
+    /// Evaluate the test metric (and the family's residual notion) at
+    /// the current iterate, push a [`crate::metrics::TracePoint`], and
+    /// notify `obs`. Returns [`StepOutcome::Done`] when a convergence
+    /// tolerance was hit. `weights` is the slab the driver already
+    /// extracted for its divergence check.
+    fn eval(
+        &mut self,
+        weights: &[f64],
+        secs: f64,
+        trace: &mut Trace,
+        obs: &mut dyn Observer,
+    ) -> anyhow::Result<StepOutcome>;
+
+    /// Explicitly-allocated solver state in bytes (Table 1/2 storage
+    /// accounting).
+    fn state_bytes(&self) -> usize;
+
+    /// Capture the resumable core (iterates + RNG streams + counter)
+    /// at `secs` elapsed wall clock.
+    fn checkpoint(&self, secs: f64) -> Checkpoint;
+
+    /// Restore a core previously captured by the same solver family on
+    /// the same problem; the continued solve is bit-identical to one
+    /// that never paused. Validate with [`Checkpoint::expect`] first.
+    fn restore(&mut self, ck: &Checkpoint) -> anyhow::Result<()>;
+}
+
+/// The serializable core of a paused solve: named f64 slabs + named
+/// RNG streams + the iteration counter. See the module docs for what
+/// belongs here (iterates) and what does not (derived setup state).
+#[derive(Debug, Clone, Default)]
+pub struct Checkpoint {
+    /// Solver family tag ([`SolveState::family`]).
+    pub family: String,
+    /// Exact solver display name ([`super::Solver::name`]); restore
+    /// refuses a checkpoint from a differently-configured solver.
+    pub solver: String,
+    /// Problem name the solve ran on.
+    pub problem: String,
+    /// Iterations completed when the checkpoint was taken.
+    pub iters: usize,
+    /// Wall-clock seconds elapsed when the checkpoint was taken
+    /// (becomes [`DrivePolicy::base_secs`] on resume).
+    pub secs: f64,
+    /// Named RNG streams, in export order.
+    pub rngs: Vec<(String, RngState)>,
+    /// Named f64 slabs, in export order (scalars are length-1 slabs).
+    pub vectors: Vec<(String, Vec<f64>)>,
+}
+
+impl Checkpoint {
+    pub fn new(family: &str, solver: &str, problem: &str, iters: usize, secs: f64) -> Checkpoint {
+        Checkpoint {
+            family: family.to_string(),
+            solver: solver.to_string(),
+            problem: problem.to_string(),
+            iters,
+            secs,
+            rngs: Vec::new(),
+            vectors: Vec::new(),
+        }
+    }
+
+    pub fn push_vec(&mut self, name: &str, data: Vec<f64>) {
+        self.vectors.push((name.to_string(), data));
+    }
+
+    pub fn push_scalar(&mut self, name: &str, x: f64) {
+        self.vectors.push((name.to_string(), vec![x]));
+    }
+
+    pub fn push_rng(&mut self, name: &str, st: RngState) {
+        self.rngs.push((name.to_string(), st));
+    }
+
+    /// Named slab, with a length check.
+    pub fn vec(&self, name: &str, want_len: usize) -> anyhow::Result<&[f64]> {
+        let (_, v) = self
+            .vectors
+            .iter()
+            .find(|(n, _)| n == name)
+            .ok_or_else(|| anyhow::anyhow!("checkpoint is missing vector {name:?}"))?;
+        anyhow::ensure!(
+            v.len() == want_len,
+            "checkpoint vector {name:?} has {} entries, want {want_len}",
+            v.len()
+        );
+        Ok(v)
+    }
+
+    pub fn scalar(&self, name: &str) -> anyhow::Result<f64> {
+        Ok(self.vec(name, 1)?[0])
+    }
+
+    pub fn rng(&self, name: &str) -> anyhow::Result<RngState> {
+        self.rngs
+            .iter()
+            .find(|(n, _)| n == name)
+            .map(|(_, st)| *st)
+            .ok_or_else(|| anyhow::anyhow!("checkpoint is missing RNG stream {name:?}"))
+    }
+
+    /// Compatibility gate for restore: same family, same exact solver
+    /// configuration, same problem.
+    pub fn expect(&self, family: &str, solver: &str, problem: &str) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            self.family == family,
+            "checkpoint is from solver family {:?}, want {family:?}",
+            self.family
+        );
+        anyhow::ensure!(
+            self.solver == solver,
+            "checkpoint is from solver {:?}, want {solver:?} (same family, different \
+             configuration)",
+            self.solver
+        );
+        anyhow::ensure!(
+            self.problem == problem,
+            "checkpoint is from problem {:?}, want {problem:?}",
+            self.problem
+        );
+        Ok(())
+    }
+}
+
+/// How [`drive`] paces evals and checkpoints.
+#[derive(Debug, Clone, Default)]
+pub struct DrivePolicy {
+    /// Evaluate the test metric every this many iterations (0 = auto:
+    /// ~20 points over the budget).
+    pub eval_every: usize,
+    /// Write a checkpoint every this many completed iterations
+    /// (0 = never).
+    pub checkpoint_every: usize,
+    /// Checkpoint directory (required when `checkpoint_every > 0`;
+    /// overwritten at each cadence).
+    pub checkpoint_path: String,
+    /// Wall clock already spent before this drive — a resumed solve
+    /// passes the checkpoint's `secs` so trace timestamps and time
+    /// budgets continue instead of restarting.
+    pub base_secs: f64,
+}
+
+/// The one outer loop shared by every solver family: budgets, eval
+/// cadence, divergence checks, checkpoint cadence, final report.
+///
+/// Semantics (kept identical to the pre-refactor per-solver loops):
+/// the test metric is evaluated every `eval_every` iterations and at
+/// budget exhaustion; divergent iterates stop the solve without a
+/// final eval; [`StepOutcome::Abort`] stops silently (PCG curvature
+/// breakdown / starved setup); [`StepOutcome::Done`] records one final
+/// eval and stops.
+pub fn drive(
+    solver_name: String,
+    state: &mut dyn SolveState,
+    problem: &KrrProblem,
+    budget: &Budget,
+    obs: &mut dyn Observer,
+    policy: &DrivePolicy,
+) -> anyhow::Result<SolveReport> {
+    let eval_stride =
+        if policy.eval_every > 0 { policy.eval_every } else { eval_every(budget, 20) };
+    let t0 = Instant::now();
+    let el = || policy.base_secs + t0.elapsed().as_secs_f64();
+    let mut trace = Trace::default();
+    let mut diverged = false;
+    loop {
+        if budget.exhausted(state.iters(), el()) {
+            break;
+        }
+        let out = state.step()?;
+        match out {
+            StepOutcome::Abort => break,
+            StepOutcome::Diverged => {
+                diverged = true;
+                break;
+            }
+            StepOutcome::Continue | StepOutcome::Done => {}
+        }
+        obs.on_iter(state.iters(), el());
+        // Checkpoint first: the completed step's state is durable even
+        // if the eval below detects divergence (a resumed run then
+        // re-diverges identically — the checkpoint is still honest).
+        if policy.checkpoint_every > 0 && state.iters() % policy.checkpoint_every == 0 {
+            state.checkpoint(el()).save(&policy.checkpoint_path)?;
+        }
+        let mut stop = out == StepOutcome::Done;
+        if stop || state.iters() % eval_stride == 0 || budget.exhausted(state.iters(), el()) {
+            let w = state.weights();
+            if looks_diverged(&w) {
+                diverged = true;
+                break;
+            }
+            if state.eval(&w, el(), &mut trace, obs)? == StepOutcome::Done {
+                stop = true;
+            }
+        }
+        if stop {
+            break;
+        }
+    }
+
+    // A resumed solve whose budget is already spent never enters the
+    // loop; without this it would report NaN metrics for work that was
+    // in fact completed (e.g. a testbed --resume rerun over finished
+    // tasks). One eval at the restored iterate keeps reports honest.
+    if trace.points.is_empty() && state.iters() > 0 && !diverged {
+        let w = state.weights();
+        if looks_diverged(&w) {
+            diverged = true;
+        } else {
+            state.eval(&w, el(), &mut trace, obs)?;
+        }
+    }
+
+    let weights = state.weights();
+    let final_metric = trace.last_metric().unwrap_or(f64::NAN);
+    let final_residual = trace.last_residual().unwrap_or(f64::NAN);
+    Ok(SolveReport {
+        solver: solver_name,
+        problem: problem.name.clone(),
+        task: problem.task,
+        iters: state.iters(),
+        wall_secs: el(),
+        trace,
+        final_metric,
+        final_residual,
+        weights,
+        state_bytes: state.state_bytes(),
+        diverged,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn checkpoint_accessors_and_validation() {
+        let mut ck = Checkpoint::new("pcg", "pcg(rpc,r=5,backend)", "toy", 3, 1.5);
+        ck.push_vec("w", vec![1.0, 2.0]);
+        ck.push_scalar("rz", 0.25);
+        ck.push_rng("r", crate::util::Rng::new(1).state());
+        assert_eq!(ck.vec("w", 2).unwrap(), &[1.0, 2.0]);
+        assert!(ck.vec("w", 3).is_err(), "length mismatch must fail");
+        assert!(ck.vec("nope", 2).is_err());
+        assert_eq!(ck.scalar("rz").unwrap(), 0.25);
+        assert!(ck.rng("r").is_ok());
+        assert!(ck.rng("missing").is_err());
+        assert!(ck.expect("pcg", "pcg(rpc,r=5,backend)", "toy").is_ok());
+        assert!(ck.expect("askotch", "pcg(rpc,r=5,backend)", "toy").is_err());
+        assert!(ck.expect("pcg", "pcg(rpc,r=9,backend)", "toy").is_err());
+        assert!(ck.expect("pcg", "pcg(rpc,r=5,backend)", "other").is_err());
+    }
+
+}

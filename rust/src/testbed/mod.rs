@@ -63,6 +63,15 @@ pub struct TestbedConfig {
     /// Print per-eval heartbeat lines (very chatty; per-run summary
     /// lines print regardless).
     pub echo_evals: bool,
+    /// Directory for per-(task, solver) solve checkpoints ("" = none).
+    /// Suite runs become interruptible: with `resume`, a rerun picks
+    /// every solve up from its last checkpoint bit-for-bit.
+    pub checkpoint_dir: String,
+    /// Checkpoint cadence in iterations (0 with `checkpoint_dir` set =
+    /// the coordinator's default).
+    pub checkpoint_every: usize,
+    /// Resume each (task, solver) run from its checkpoint if present.
+    pub resume: bool,
 }
 
 impl Default for TestbedConfig {
@@ -80,6 +89,9 @@ impl Default for TestbedConfig {
             out_dir: "testbed_results".into(),
             report_path: "docs/RESULTS.md".into(),
             echo_evals: false,
+            checkpoint_dir: String::new(),
+            checkpoint_every: 0,
+            resume: false,
         }
     }
 }
@@ -141,6 +153,15 @@ impl TestbedConfig {
         }
         if let Some(d) = root.opt_field("report_path")? {
             c.report_path = d.string()?;
+        }
+        if let Some(d) = root.opt_field("checkpoint_dir")? {
+            c.checkpoint_dir = d.string()?;
+        }
+        if let Some(d) = root.opt_field("checkpoint_every")? {
+            c.checkpoint_every = d.usize()?;
+        }
+        if let Some(d) = root.opt_field("resume")? {
+            c.resume = d.bool()?;
         }
         Ok(c)
     }

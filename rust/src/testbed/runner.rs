@@ -7,11 +7,11 @@ use crate::backend::HostBackend;
 use crate::config::{
     BackendKind, BandwidthSpec, ExperimentConfig, KernelKind, RhoMode, SamplingScheme, SolverKind,
 };
-use crate::coordinator::{Coordinator, KrrProblem, SolveReport};
+use crate::coordinator::{Budget, Coordinator, KrrProblem, SolveReport};
 use crate::data::{synthetic, Dataset, TaskKind};
 use crate::json::{Json, ToJson};
 use crate::metrics::{Trace, TracePoint};
-use crate::solvers::Observer;
+use crate::solvers::{drive, Checkpoint, DrivePolicy, Observer, Solver};
 use crate::util::fmt;
 use std::sync::Mutex;
 use std::time::Instant;
@@ -331,17 +331,19 @@ fn run_task(
     let mut out = Vec::with_capacity(cfg.solvers.len());
     for &kind in &cfg.solvers {
         let ecfg = experiment_for(cfg, &meta, kind);
-        let mut solver = coord.solver(&ecfg);
+        let solver = coord.solver(&ecfg);
         let budget = cfg.budgets.budget(kind);
         let mut heartbeat = Heartbeat {
             label: format!("{}/{}", meta.name, kind.name()),
             metric_name: meta.kind.metric_name(),
             echo: cfg.echo_evals.then_some(echo_lock),
         };
-        let record = match solver.run_observed(backend, &problem, &budget, &mut heartbeat) {
-            Ok(r) => RunRecord::from_report(&meta, &problem, kind, r),
-            Err(e) => RunRecord::failed(&meta, Some(&problem), kind, e.to_string()),
-        };
+        let record =
+            match run_one(cfg, solver.as_ref(), backend, &problem, &budget, kind, &mut heartbeat)
+            {
+                Ok(r) => RunRecord::from_report(&meta, &problem, kind, r),
+                Err(e) => RunRecord::failed(&meta, Some(&problem), kind, e.to_string()),
+            };
         {
             let _guard = echo_lock.lock().unwrap();
             let status = if let Some(e) = &record.error {
@@ -363,6 +365,45 @@ fn run_task(
         out.push(record);
     }
     out
+}
+
+/// One (task, solver) solve through the shared state machinery: init,
+/// optional checkpoint restore (`cfg.resume`), then the [`drive`] loop
+/// with the suite's checkpoint policy. Each run checkpoints into its
+/// own `<checkpoint_dir>/<task>_<solver>` directory, so an interrupted
+/// suite resumes every solve bit-for-bit.
+fn run_one(
+    cfg: &TestbedConfig,
+    solver: &dyn Solver,
+    backend: &HostBackend,
+    problem: &KrrProblem,
+    budget: &Budget,
+    kind: SolverKind,
+    obs: &mut dyn Observer,
+) -> anyhow::Result<SolveReport> {
+    let mut policy = DrivePolicy { eval_every: solver.eval_every_override(), ..Default::default() };
+    if !cfg.checkpoint_dir.is_empty() {
+        policy.checkpoint_every = if cfg.checkpoint_every > 0 {
+            cfg.checkpoint_every
+        } else {
+            crate::coordinator::DEFAULT_CHECKPOINT_EVERY
+        };
+        policy.checkpoint_path =
+            format!("{}/{}_{}", cfg.checkpoint_dir, problem.name, kind.name());
+    }
+    let t_init = Instant::now();
+    let mut state = solver.init(backend, problem, budget)?;
+    policy.base_secs = t_init.elapsed().as_secs_f64();
+    if cfg.resume && !policy.checkpoint_path.is_empty() {
+        let manifest = std::path::Path::new(&policy.checkpoint_path)
+            .join(crate::model::checkpoint::MANIFEST_FILE);
+        if manifest.exists() {
+            let ck = Checkpoint::load(&policy.checkpoint_path)?;
+            state.restore(&ck)?;
+            policy.base_secs += ck.secs;
+        }
+    }
+    drive(solver.name(), state.as_mut(), problem, budget, obs, &policy)
 }
 
 /// Write the JSON records and the Markdown report the config asks for;

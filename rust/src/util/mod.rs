@@ -9,4 +9,4 @@ pub mod cli;
 pub mod fmt;
 pub mod rng;
 
-pub use rng::Rng;
+pub use rng::{Rng, RngState};

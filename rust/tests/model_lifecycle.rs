@@ -1,0 +1,349 @@
+//! Model-lifecycle acceptance suite (artifact-free, host backend):
+//!
+//! 1. **Artifact round trip** — a saved model predicts bit-identically
+//!    to the in-memory `ModelSnapshot` it came from.
+//! 2. **Checkpoint/resume** — every solver family interrupted at
+//!    iteration k and resumed matches the uninterrupted solve's
+//!    weights bit-for-bit.
+//! 3. **Serve lifecycle over HTTP** — train -> save -> serve --model
+//!    (no training at startup) -> predict -> POST /v1/admin/reload ->
+//!    predict, with model metadata and time_to_first_prediction on
+//!    /healthz and /metrics. This is the CI gate for the lifecycle.
+
+use askotch::backend::{Backend, HostBackend};
+use askotch::config::{BandwidthSpec, ExperimentConfig, KernelKind, SolverKind};
+use askotch::coordinator::{Coordinator, KrrProblem};
+use askotch::data::synthetic;
+use askotch::json;
+use askotch::model::ModelArtifact;
+use askotch::net::{http, NetConfig, Server};
+use askotch::server::{serve_reloadable, BackendPredictor, Job, Predictor, ServerConfig};
+use askotch::solvers::cholesky::CholeskySolver;
+use askotch::solvers::{Checkpoint, DrivePolicy, NullObserver};
+use std::io::{BufReader, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::sync::mpsc;
+
+fn temp_dir(tag: &str) -> String {
+    let mut p = std::env::temp_dir();
+    p.push(format!("askotch_lifecycle_{}_{tag}", std::process::id()));
+    p.to_string_lossy().to_string()
+}
+
+fn toy_problem(n: usize) -> KrrProblem {
+    let ds = synthetic::taxi_like(n, 5, 11).standardized();
+    KrrProblem::from_dataset(ds, KernelKind::Rbf, BandwidthSpec::Auto, 1e-6, 0).unwrap()
+}
+
+fn assert_bits_eq(got: &[f64], want: &[f64], ctx: &str) {
+    assert_eq!(got.len(), want.len(), "{ctx}: length");
+    for (i, (g, w)) in got.iter().zip(want).enumerate() {
+        assert_eq!(g.to_bits(), w.to_bits(), "{ctx}: slot {i}: {g} vs {w}");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// 1. Artifact round trip
+// ---------------------------------------------------------------------------
+
+#[test]
+fn saved_model_predicts_bit_identically_to_in_memory_snapshot() {
+    let backend = HostBackend::new(2);
+    let problem = toy_problem(180);
+    let weights = CholeskySolver::solve_weights_on(&backend, &problem).unwrap();
+    let report = {
+        let mut solver = CholeskySolver::new();
+        use askotch::solvers::Solver;
+        solver.run(&backend, &problem, &askotch::coordinator::Budget::iterations(1)).unwrap()
+    };
+    assert_bits_eq(&report.weights, &weights, "direct solve is deterministic");
+
+    let artifact = ModelArtifact::from_solve(&problem, &report, 0).unwrap();
+    let in_memory = artifact.clone().into_snapshot();
+    let dir = temp_dir("artifact_roundtrip");
+    artifact.save(&dir).unwrap();
+    let loaded = ModelArtifact::load(&dir).unwrap();
+    assert_eq!(loaded.meta, artifact.meta);
+    assert_bits_eq(&loaded.weights, &artifact.weights, "weights slab");
+    assert_bits_eq(&loaded.x_train, &artifact.x_train, "x_train slab");
+
+    // Predictions from the loaded artifact match the in-memory
+    // snapshot bit-for-bit (same backend, same slabs, same norms).
+    let p_mem = BackendPredictor::new(&backend, in_memory);
+    let p_disk = BackendPredictor::new(&backend, loaded.into_snapshot());
+    let rows = problem.test.n.min(40);
+    let x_eval = &problem.test.x[..rows * problem.d()];
+    let want = p_mem.predict_batch(x_eval, rows).unwrap();
+    let got = p_disk.predict_batch(x_eval, rows).unwrap();
+    assert_bits_eq(&got, &want, "served predictions");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+// ---------------------------------------------------------------------------
+// 2. Checkpoint/resume bit-for-bit, all five solver families
+// ---------------------------------------------------------------------------
+
+/// Run `kind` to `full_iters` uninterrupted, then again interrupted at
+/// `k` + resumed, and require bit-identical final weights.
+fn interrupted_resume_matches(kind: SolverKind, full_iters: usize, k: usize) {
+    let backend = HostBackend::new(2);
+    let coord = Coordinator::new(&backend);
+    let mut cfg = ExperimentConfig {
+        name: format!("lifecycle_{}", kind.name()),
+        dataset: "physics_like".into(),
+        n: 320,
+        d: 8,
+        solver: kind,
+        rank: 10,
+        seed: 3,
+        max_iters: full_iters,
+        time_limit_secs: 1e9,
+        ..Default::default()
+    };
+    // Evals only at budget exhaustion: the interrupted run's shorter
+    // budget must not change the eval cadence the solve sees.
+    let eval_every = 1_000_000;
+
+    // Uninterrupted reference.
+    let policy = DrivePolicy { eval_every, ..Default::default() };
+    let (_, want) =
+        coord.run_with_policy(&cfg, &mut NullObserver, &policy, None).unwrap();
+    assert_eq!(want.iters, if kind == SolverKind::Cholesky { 1 } else { full_iters });
+
+    // Interrupted at k (checkpoint written by the drive loop) ...
+    let dir = temp_dir(&format!("resume_{}", kind.name()));
+    let _ = std::fs::remove_dir_all(&dir);
+    cfg.max_iters = k;
+    let policy_k = DrivePolicy {
+        eval_every,
+        checkpoint_every: k,
+        checkpoint_path: dir.clone(),
+        ..Default::default()
+    };
+    coord.run_with_policy(&cfg, &mut NullObserver, &policy_k, None).unwrap();
+    let ck = Checkpoint::load(&dir).unwrap();
+    assert_eq!(ck.iters, k, "{}: checkpoint at the interruption point", kind.name());
+    assert_eq!(ck.family, kind.name());
+
+    // ... then resumed to the full budget.
+    cfg.max_iters = full_iters;
+    let policy = DrivePolicy { eval_every, ..Default::default() };
+    let (_, got) =
+        coord.run_with_policy(&cfg, &mut NullObserver, &policy, Some(&ck)).unwrap();
+    assert_eq!(got.iters, want.iters, "{}: iteration count", kind.name());
+    assert_eq!(got.diverged, want.diverged, "{}: divergence flag", kind.name());
+    assert_bits_eq(&got.weights, &want.weights, kind.name());
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn askotch_resumes_bit_for_bit() {
+    interrupted_resume_matches(SolverKind::Askotch, 30, 11);
+}
+
+#[test]
+fn skotch_resumes_bit_for_bit() {
+    interrupted_resume_matches(SolverKind::Skotch, 24, 7);
+}
+
+#[test]
+fn pcg_resumes_bit_for_bit() {
+    interrupted_resume_matches(SolverKind::Pcg, 18, 5);
+}
+
+#[test]
+fn falkon_resumes_bit_for_bit() {
+    interrupted_resume_matches(SolverKind::Falkon, 18, 5);
+}
+
+#[test]
+fn eigenpro_resumes_bit_for_bit() {
+    interrupted_resume_matches(SolverKind::EigenPro, 16, 6);
+}
+
+#[test]
+fn cholesky_resumes_bit_for_bit() {
+    interrupted_resume_matches(SolverKind::Cholesky, 1, 1);
+}
+
+#[test]
+fn checkpoint_refuses_mismatched_solver_or_problem() {
+    let backend = HostBackend::new(2);
+    let coord = Coordinator::new(&backend);
+    let dir = temp_dir("mismatch");
+    let _ = std::fs::remove_dir_all(&dir);
+    let mut cfg = ExperimentConfig {
+        dataset: "physics_like".into(),
+        n: 320,
+        d: 8,
+        solver: SolverKind::Pcg,
+        rank: 10,
+        seed: 3,
+        max_iters: 6,
+        time_limit_secs: 1e9,
+        ..Default::default()
+    };
+    let policy = DrivePolicy {
+        eval_every: 1_000_000,
+        checkpoint_every: 6,
+        checkpoint_path: dir.clone(),
+        ..Default::default()
+    };
+    coord.run_with_policy(&cfg, &mut NullObserver, &policy, None).unwrap();
+    let ck = Checkpoint::load(&dir).unwrap();
+
+    // Same family, different configuration (rank) -> refused.
+    cfg.rank = 20;
+    let err = coord
+        .run_with_policy(&cfg, &mut NullObserver, &DrivePolicy::default(), Some(&ck))
+        .unwrap_err()
+        .to_string();
+    assert!(err.contains("different"), "got: {err}");
+    cfg.rank = 10;
+
+    // Different solver family -> refused.
+    cfg.solver = SolverKind::Askotch;
+    assert!(coord
+        .run_with_policy(&cfg, &mut NullObserver, &DrivePolicy::default(), Some(&ck))
+        .is_err());
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+// ---------------------------------------------------------------------------
+// 3. train -> save -> serve --model -> predict -> reload -> predict
+// ---------------------------------------------------------------------------
+
+fn http_call(addr: SocketAddr, method: &str, path: &str, body: &str) -> (u16, String) {
+    let mut stream = TcpStream::connect(addr).expect("connect");
+    let mut reader = BufReader::new(stream.try_clone().expect("clone"));
+    write!(
+        stream,
+        "{method} {path} HTTP/1.1\r\nhost: t\r\ncontent-length: {}\r\nconnection: close\r\n\r\n{body}",
+        body.len()
+    )
+    .unwrap();
+    stream.flush().unwrap();
+    let (status, body) = http::read_response(&mut reader).expect("response");
+    (status, String::from_utf8(body).expect("utf8"))
+}
+
+#[test]
+fn serve_lifecycle_train_save_serve_predict_reload_predict() {
+    let backend = HostBackend::new(2);
+    let problem = toy_problem(160);
+
+    // "Train" two model versions: the exact solve, and a retrained v2
+    // whose predictions are exactly doubled (weights scaled by 2).
+    let weights = CholeskySolver::solve_weights_on(&backend, &problem).unwrap();
+    let report_v1 = {
+        use askotch::solvers::Solver;
+        CholeskySolver::new()
+            .run(&backend, &problem, &askotch::coordinator::Budget::iterations(1))
+            .unwrap()
+    };
+    let mut report_v2 = report_v1.clone();
+    report_v2.solver = "cholesky-v2".into();
+    report_v2.weights = weights.iter().map(|w| 2.0 * w).collect();
+
+    let dir_v1 = temp_dir("serve_v1");
+    let dir_v2 = temp_dir("serve_v2");
+    ModelArtifact::from_solve(&problem, &report_v1, 0).unwrap().save(&dir_v1).unwrap();
+    ModelArtifact::from_solve(&problem, &report_v2, 0).unwrap().save(&dir_v2).unwrap();
+
+    // Expected predictions for one test row, through the same backend
+    // path the server uses.
+    let row = problem.test.row(0).to_vec();
+    let want_v1 = backend
+        .predict(
+            problem.kernel,
+            &problem.train.x,
+            problem.n(),
+            problem.d(),
+            &report_v1.weights,
+            &row,
+            1,
+            problem.sigma,
+        )
+        .unwrap()[0];
+
+    // serve --model dir_v1: load the artifact (no training work) and
+    // stand the stack up.
+    let artifact = ModelArtifact::load(&dir_v1).unwrap();
+    assert_eq!(artifact.meta.solver, "cholesky");
+    let meta = artifact.meta.summary_json();
+    let snapshot = artifact.into_snapshot();
+    let (tx, rx) = mpsc::channel::<Job>();
+    let net_cfg = NetConfig { addr: "127.0.0.1:0".into(), threads: 2, ..Default::default() };
+    let server = Server::start(&net_cfg, tx).expect("bind");
+    server.metrics().set_model_info(meta);
+    let live = server.metrics().clone();
+    let addr = server.addr();
+    let model_thread = std::thread::spawn(move || {
+        let backend = HostBackend::new(2);
+        serve_reloadable(
+            &backend,
+            snapshot,
+            rx,
+            &ServerConfig::default(),
+            Some(live.batcher()),
+            Some(live.model_slot()),
+        )
+    });
+
+    // healthz advertises the v1 model before any prediction; the
+    // cold-start figure is still null.
+    let (status, body) = http_call(addr, "GET", "/healthz", "");
+    assert_eq!(status, 200, "{body}");
+    let h = json::parse(&body).unwrap();
+    assert_eq!(h.get("model").unwrap().get("solver").unwrap().as_str().unwrap(), "cholesky");
+    assert_eq!(h.get("time_to_first_prediction_ms").unwrap(), &json::Json::Null);
+
+    // predict against v1.
+    let features = json::Json::arr_nums(&row).to_string();
+    let (status, body) =
+        http_call(addr, "POST", "/v1/predict", &format!("{{\"features\":{features}}}"));
+    assert_eq!(status, 200, "{body}");
+    let got = json::parse(&body).unwrap().get("prediction").unwrap().as_f64().unwrap();
+    assert_eq!(got.to_bits(), want_v1.to_bits(), "served {got} vs direct {want_v1}");
+
+    // reload to v2 (hot swap; the ack carries the new model summary).
+    let (status, body) = http_call(
+        addr,
+        "POST",
+        "/v1/admin/reload",
+        &format!("{{\"model\":{}}}", json::Json::str(&dir_v2)),
+    );
+    assert_eq!(status, 200, "{body}");
+    let ack = json::parse(&body).unwrap();
+    assert_eq!(ack.get("status").unwrap().as_str().unwrap(), "reloaded");
+    assert_eq!(
+        ack.get("model").unwrap().get("solver").unwrap().as_str().unwrap(),
+        "cholesky-v2"
+    );
+
+    // predict against v2: exactly doubled.
+    let (status, body) =
+        http_call(addr, "POST", "/v1/predict", &format!("{{\"features\":{features}}}"));
+    assert_eq!(status, 200, "{body}");
+    let got2 = json::parse(&body).unwrap().get("prediction").unwrap().as_f64().unwrap();
+    assert_eq!(got2.to_bits(), (2.0 * want_v1).to_bits(), "{got2} vs {}", 2.0 * want_v1);
+
+    // metrics now show the swap, the v2 model, and a real cold-start
+    // figure.
+    let (status, body) = http_call(addr, "GET", "/metrics", "");
+    assert_eq!(status, 200);
+    let m = json::parse(&body).unwrap();
+    assert_eq!(
+        m.get("model").unwrap().get("solver").unwrap().as_str().unwrap(),
+        "cholesky-v2"
+    );
+    assert!(m.get("time_to_first_prediction_ms").unwrap().as_f64().is_some(), "{body}");
+    assert_eq!(m.get("batcher").unwrap().get("reloads").unwrap().as_f64().unwrap(), 1.0);
+
+    server.shutdown();
+    let stats = model_thread.join().unwrap();
+    assert_eq!(stats.reloads, 1);
+    assert!(stats.requests >= 2);
+    let _ = std::fs::remove_dir_all(&dir_v1);
+    let _ = std::fs::remove_dir_all(&dir_v2);
+}

@@ -15,7 +15,7 @@ use askotch::linalg::Chol;
 use askotch::net::wire::PredictRequest;
 use askotch::net::{http, NetConfig, Server};
 use askotch::backend::HostBackend;
-use askotch::server::{serve_predictor, BackendPredictor, ModelSnapshot, Request, ServerConfig};
+use askotch::server::{serve_predictor, BackendPredictor, Job, ModelSnapshot, ServerConfig};
 use std::io::{BufReader, Write};
 use std::net::{SocketAddr, TcpStream};
 use std::sync::mpsc;
@@ -67,14 +67,14 @@ fn start_stack(
     model: ModelSnapshot,
     threads: usize,
 ) -> (Server, std::thread::JoinHandle<askotch::server::ServerStats>) {
-    let (tx, rx) = mpsc::channel::<Request>();
+    let (tx, rx) = mpsc::channel::<Job>();
     let cfg = NetConfig { addr: "127.0.0.1:0".into(), threads, ..Default::default() };
     let server = Server::start(&cfg, tx).expect("bind");
     let live = server.metrics().clone();
     let batcher = std::thread::spawn(move || {
         let backend = HostBackend::auto_threads();
         serve_predictor(
-            &BackendPredictor::new(&backend, &model),
+            &BackendPredictor::new(&backend, model),
             rx,
             &ServerConfig::default(),
             Some(live.batcher()),

@@ -163,7 +163,7 @@ fn cholesky_is_the_gold_standard() {
 #[test]
 fn prediction_server_matches_direct_predict() {
     let Some(engine) = engine() else { return };
-    use askotch::server::{serve, ModelSnapshot, Request, ServerConfig};
+    use askotch::server::{serve, Job, ModelSnapshot, Request, ServerConfig};
     use std::sync::mpsc;
 
     let problem = taxi_problem(400);
@@ -191,18 +191,18 @@ fn prediction_server_matches_direct_predict() {
     )
     .unwrap();
 
-    let (tx, rx) = mpsc::channel::<Request>();
+    let (tx, rx) = mpsc::channel::<Job>();
     let rows: Vec<Vec<f64>> = (0..problem.test.n).map(|i| problem.test.row(i).to_vec()).collect();
     let client = std::thread::spawn(move || {
         let mut got = Vec::new();
         for row in rows {
             let (rtx, rrx) = mpsc::channel();
-            tx.send(Request { features: row, reply: rtx }).unwrap();
+            tx.send(Job::Predict(Request { features: row, reply: rtx })).unwrap();
             got.push(rrx.recv().unwrap().unwrap());
         }
         got
     });
-    let stats = serve(&engine, &model, rx, &ServerConfig::default());
+    let stats = serve(&engine, model, rx, &ServerConfig::default());
     let got = client.join().unwrap();
     assert_eq!(stats.requests, problem.test.n);
     for (g, w) in got.iter().zip(&want) {
@@ -213,7 +213,7 @@ fn prediction_server_matches_direct_predict() {
 #[test]
 fn server_rejects_bad_feature_dim() {
     let Some(engine) = engine() else { return };
-    use askotch::server::{serve, ModelSnapshot, Request, ServerConfig};
+    use askotch::server::{serve, Job, ModelSnapshot, Request, ServerConfig};
     use std::sync::mpsc;
     let problem = taxi_problem(200);
     let model = ModelSnapshot {
@@ -224,13 +224,13 @@ fn server_rejects_bad_feature_dim() {
         d: problem.d(),
         weights: vec![0.0; problem.n()],
     };
-    let (tx, rx) = mpsc::channel::<Request>();
+    let (tx, rx) = mpsc::channel::<Job>();
     let handle = std::thread::spawn(move || {
         let (rtx, rrx) = mpsc::channel();
-        tx.send(Request { features: vec![1.0, 2.0], reply: rtx }).unwrap();
+        tx.send(Job::Predict(Request { features: vec![1.0, 2.0], reply: rtx })).unwrap();
         rrx.recv().unwrap()
     });
-    let _ = serve(&engine, &model, rx, &ServerConfig::default());
+    let _ = serve(&engine, model, rx, &ServerConfig::default());
     let reply = handle.join().unwrap();
     assert!(reply.is_err(), "dim mismatch must be rejected");
 }

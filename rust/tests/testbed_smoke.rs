@@ -117,6 +117,43 @@ fn persists_json_records_and_markdown_report() {
     std::fs::remove_dir_all(&dir).ok();
 }
 
+/// Suite runs checkpoint per (task, solver) and a `resume` rerun picks
+/// the solve up from the saved iterate core instead of iteration 0
+/// (the state machinery of `docs/MODELS.md`, driven through the
+/// testbed runner).
+#[test]
+fn suite_checkpoints_and_resumes() {
+    let dir =
+        std::env::temp_dir().join(format!("askotch_testbed_ckpt_{}", std::process::id()));
+    std::fs::remove_dir_all(&dir).ok();
+    let mut cfg = smoke_config();
+    cfg.filter = "taxi".into();
+    cfg.solvers = vec![SolverKind::Askotch];
+    cfg.budgets.time_limit_secs = 60.0; // iteration-capped, not wall-capped
+    cfg.checkpoint_dir = dir.to_string_lossy().into_owned();
+    cfg.checkpoint_every = 10;
+
+    let outcome = testbed::run(&cfg).unwrap();
+    assert!(outcome.records[0].error.is_none());
+    let full_iters = outcome.records[0].iters;
+    assert_eq!(full_iters, cfg.budgets.sap_iters);
+    let ck = dir.join("taxi_like_askotch");
+    assert!(ck.join("checkpoint.json").exists(), "per-run checkpoint dir missing");
+    assert!(
+        ck.join(format!("state-{full_iters}.slab")).exists(),
+        "latest per-checkpoint slab missing"
+    );
+
+    // The rerun resumes at the checkpointed iteration: the budget is
+    // already exhausted, so no new iterations run.
+    cfg.resume = true;
+    let outcome2 = testbed::run(&cfg).unwrap();
+    assert!(outcome2.records[0].error.is_none(), "{:?}", outcome2.records[0].error);
+    assert_eq!(outcome2.records[0].iters, full_iters, "resumed run continues the counter");
+
+    std::fs::remove_dir_all(&dir).ok();
+}
+
 /// The filter is honored and an unmatched filter errors instead of
 /// silently reporting an empty suite.
 #[test]
