@@ -52,6 +52,7 @@ fn main() -> anyhow::Result<()> {
         ("fig12_precision", fig12_precision),
         ("host_kernel_assembly", host_kernel_assembly),
         ("host_kernel_engine", host_kernel_engine),
+        ("host_kernel_obs_overhead", host_kernel_obs_overhead),
     ];
 
     for (name, run) in exhibits {
@@ -815,4 +816,83 @@ fn host_kernel_engine(_backend: &dyn Backend, scale: usize) -> anyhow::Result<Js
     std::fs::write("BENCH_KERNELS.json", summary.to_string())?;
     println!("[perf trajectory -> BENCH_KERNELS.json]");
     Ok(summary)
+}
+
+// ---------------------------------------------------------------------------
+// Host engine: obs span/counter overhead on the fused matvec hot loop
+// ---------------------------------------------------------------------------
+
+/// Measures what the `obs` instrumentation costs on the hottest op the
+/// solvers run: the fused kernel matvec, spans + flop/byte counters on
+/// (the default) vs `obs::set_enabled(false)`. The contract in
+/// `docs/OBSERVABILITY.md` is < 1% median overhead — spans are two
+/// thread-local ops and one `Instant` pair per panel, amortized over
+/// millions of kernel evaluations. Median-of-repeats keeps scheduler
+/// noise out; the result is folded into `BENCH_KERNELS.json` as
+/// `obs_overhead`.
+fn host_kernel_obs_overhead(_backend: &dyn Backend, scale: usize) -> anyhow::Result<Json> {
+    let (sigma, d) = (1.3, 64usize);
+    let n1 = 512;
+    let n2 = 16 * 1024 * scale;
+    let backend = HostBackend::auto_threads();
+    let mut rng = askotch::util::Rng::new(7);
+    let x1: Vec<f64> = (0..n1 * d).map(|_| rng.normal()).collect();
+    let x2: Vec<f64> = (0..n2 * d).map(|_| rng.normal()).collect();
+    let v: Vec<f64> = (0..n2).map(|_| rng.normal()).collect();
+
+    let median = |mut xs: Vec<f64>| -> f64 {
+        xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        xs[xs.len() / 2]
+    };
+    let mut time_arm = |on: bool| -> anyhow::Result<f64> {
+        askotch::obs::set_enabled(on);
+        // one warmup, then median of 9
+        backend.kernel_matvec(KernelKind::Rbf, &x1, n1, &x2, n2, d, &v, sigma)?;
+        let mut samples = Vec::new();
+        for _ in 0..9 {
+            let t0 = Instant::now();
+            backend.kernel_matvec(KernelKind::Rbf, &x1, n1, &x2, n2, d, &v, sigma)?;
+            samples.push(t0.elapsed().as_secs_f64());
+        }
+        Ok(median(samples))
+    };
+    // interleave-free A/B: disabled first so the instrumented arm can't
+    // ride a warmer cache
+    let t_off = time_arm(false)?;
+    let t_on = time_arm(true)?;
+    askotch::obs::set_enabled(true); // never leave the process dark
+
+    let overhead = t_on / t_off.max(1e-12) - 1.0;
+    println!(
+        "fused matvec {n1}x{n2} d={d}: obs on {} vs off {} -> {:+.3}% overhead (budget < 1%)",
+        fmt::duration(t_on),
+        fmt::duration(t_off),
+        overhead * 100.0
+    );
+    anyhow::ensure!(
+        overhead < 0.01,
+        "obs overhead {:.3}% exceeds the 1% budget (docs/OBSERVABILITY.md)",
+        overhead * 100.0
+    );
+
+    let result = Json::obj(vec![
+        ("n1", Json::num(n1 as f64)),
+        ("n2", Json::num(n2 as f64)),
+        ("d", Json::num(d as f64)),
+        ("obs_on_secs", Json::num(t_on)),
+        ("obs_off_secs", Json::num(t_off)),
+        ("overhead_fraction", Json::num(overhead)),
+        ("budget_fraction", Json::num(0.01)),
+    ]);
+    // Fold into the perf-trajectory file the engine exhibit writes;
+    // stand alone if this exhibit ran filtered on its own.
+    let mut summary = std::fs::read_to_string("BENCH_KERNELS.json")
+        .ok()
+        .and_then(|t| askotch::json::parse(&t).ok())
+        .filter(|j| matches!(j, Json::Obj(_)))
+        .unwrap_or_else(|| Json::obj(vec![("exhibit", Json::str("host_kernel_engine"))]));
+    summary.set("obs_overhead", result.clone());
+    std::fs::write("BENCH_KERNELS.json", summary.to_string())?;
+    println!("[obs overhead -> BENCH_KERNELS.json]");
+    Ok(result)
 }

@@ -136,13 +136,21 @@ impl HostBackend {
     {
         let rows = self.rows_per_worker(n1);
         if rows >= n1 {
+            let _sp = crate::obs::span("host/matvec");
             f(0, out);
             return;
         }
+        // Workers get fresh threads: hand them the spawner's obs domain
+        // so per-run phase extraction sees their spans and flops.
+        let dom = crate::obs::current_domain();
         std::thread::scope(|s| {
             for (t, chunk) in out.chunks_mut(rows).enumerate() {
                 let f = &f;
-                s.spawn(move || f(t * rows, chunk));
+                s.spawn(move || {
+                    crate::obs::set_domain(dom);
+                    let _sp = crate::obs::span("host/matvec");
+                    f(t * rows, chunk)
+                });
             }
         });
     }
@@ -165,6 +173,9 @@ impl HostBackend {
         out: &mut [f64],
     ) {
         let panel = self.panel_rows(d);
+        // Nominal per-pair cost: one d-dim distance plus the kernel
+        // nonlinearity plus the multiply-add into the accumulator.
+        let per_pair = 2.0 * d as f64 + 37.0;
         let mut j0 = 0;
         while j0 < n2 {
             let j1 = (j0 + panel).min(n2);
@@ -177,6 +188,7 @@ impl HostBackend {
                 }
                 *o += acc;
             }
+            crate::obs::add_flops(((j1 - j0) * out.len()) as f64 * per_pair);
             j0 = j1;
         }
     }
@@ -205,6 +217,7 @@ impl HostBackend {
             }
             *o += acc;
         }
+        crate::obs::add_flops((nz.len() * out.len()) as f64 * (2.0 * d as f64 + 37.0));
     }
 
     /// Fused matvec span: `X2` walked in GEMM panels; each row chunk
@@ -259,6 +272,9 @@ impl HostBackend {
                 for r in 0..m {
                     out[r0 + r] += dense::dot(&panel[r * w..r * w + w], &v[j0..j0 + w]);
                 }
+                // The GEMV accumulation on top of the panel (the panel
+                // itself self-reports in `kernel_panel` / `gemm_nt`).
+                crate::obs::add_flops(2.0 * (m * w) as f64);
                 j0 += w;
             }
             r0 += m;
@@ -454,13 +470,19 @@ impl Backend for HostBackend {
         };
         let rows = self.rows_per_worker(n1);
         if rows >= n1 {
+            let _sp = crate::obs::span("host/assembly");
             fill(0, &mut out.data);
             return out;
         }
+        let dom = crate::obs::current_domain();
         std::thread::scope(|s| {
             for (t, slab) in out.data.chunks_mut(rows * n2).enumerate() {
                 let fill = &fill;
-                s.spawn(move || fill(t * rows, slab));
+                s.spawn(move || {
+                    crate::obs::set_domain(dom);
+                    let _sp = crate::obs::span("host/assembly");
+                    fill(t * rows, slab)
+                });
             }
         });
         out
@@ -523,14 +545,18 @@ impl Backend for HostBackend {
 
         let parts = self.threads.min(pairs.len()).max(1);
         let tiles: Vec<(usize, usize, Vec<f64>)> = if parts == 1 {
+            let _sp = crate::obs::span("host/assembly");
             pairs.iter().copied().map(compute).collect()
         } else {
+            let dom = crate::obs::current_domain();
             std::thread::scope(|s| {
                 let handles: Vec<_> = (0..parts)
                     .map(|t| {
                         let pairs = &pairs;
                         let compute = &compute;
                         s.spawn(move || {
+                            crate::obs::set_domain(dom);
+                            let _sp = crate::obs::span("host/assembly");
                             pairs
                                 .iter()
                                 .skip(t)
@@ -684,26 +710,35 @@ impl SapStepper for HostSapStepper<'_> {
         // solve. An early `?` return forfeits the buffers — they regrow
         // on the next step, and errors are terminal anyway.
         let mut xb = std::mem::take(&mut self.scratch.xb);
-        xb.clear();
-        for &i in idx {
-            xb.extend_from_slice(&p.train.x[i * d..(i + 1) * d]);
-        }
-        // Randomness first: `zfull` immutably borrows the iterate state,
-        // so the (mutable) RNG must be done before it.
         let mut pv0 = std::mem::take(&mut self.scratch.pv0);
-        pv0.clear();
-        pv0.extend((0..b).map(|_| self.rng.normal()));
-        let omega_seed = if self.identity { 0 } else { self.rng.next_u64() };
         let mut zb = std::mem::take(&mut self.scratch.zb);
+        let omega_seed;
+        {
+            let _sp = crate::obs::span("gather");
+            xb.clear();
+            for &i in idx {
+                xb.extend_from_slice(&p.train.x[i * d..(i + 1) * d]);
+            }
+            // Randomness first: `zfull` immutably borrows the iterate
+            // state, so the (mutable) RNG must be done before it.
+            pv0.clear();
+            pv0.extend((0..b).map(|_| self.rng.normal()));
+            omega_seed = if self.identity { 0 } else { self.rng.next_u64() };
+            let zfull: &[f64] = if self.accelerated { &self.z } else { &self.w };
+            zb.clear();
+            zb.extend(idx.iter().map(|&i| zfull[i]));
+        }
         let zfull: &[f64] = if self.accelerated { &self.z } else { &self.w };
-        zb.clear();
-        zb.extend(idx.iter().map(|&i| zfull[i]));
 
-        let kbb = self.backend.kernel_block(p.kernel, &p.train.x, d, idx, p.sigma);
+        let kbb = {
+            let _sp = crate::obs::span("kbb");
+            self.backend.kernel_block(p.kernel, &p.train.x, d, idx, p.sigma)
+        };
 
         let s = if self.identity {
             // Ablation arm: projector = identity, stepsize still
             // automatic (1 / lambda_max(K_BB + lam I) by powering).
+            let sp_pre = crate::obs::span("precond");
             let l_pb = power_max_eig(
                 |v| {
                     let mut kv = kbb.matvec(v);
@@ -716,9 +751,14 @@ impl SapStepper for HostSapStepper<'_> {
                 GETL_ITERS,
             )
             .max(1e-12);
-            let g_b = self.block_gradient(&xb, idx, zfull, &zb)?;
+            drop(sp_pre);
+            let g_b = {
+                let _sp = crate::obs::span("grad");
+                self.block_gradient(&xb, idx, zfull, &zb)?
+            };
             g_b.into_iter().map(|g| g / l_pb).collect::<Vec<f64>>()
         } else {
+            let sp_pre = crate::obs::span("precond");
             // Rank-r Nystrom B-factor from a per-thread-RNG Gaussian
             // test matrix (K_hat_BB = B B^T).
             let omega = Mat {
@@ -753,14 +793,19 @@ impl SapStepper for HostSapStepper<'_> {
                 GETL_ITERS,
             )
             .max(1.0);
+            drop(sp_pre);
 
-            let g_b = self.block_gradient(&xb, idx, zfull, &zb)?;
+            let g_b = {
+                let _sp = crate::obs::span("grad");
+                self.block_gradient(&xb, idx, zfull, &zb)?
+            };
             let d_b = wb.apply(&g_b);
             d_b.into_iter().map(|g| g / l_pb).collect()
         };
 
         // Iterate update (Gower et al. 2018 Alg. 2 indexing; duplicates
         // in idx accumulate, matching jax's scatter-add).
+        let _sp_upd = crate::obs::span("update");
         if self.accelerated {
             let mut w1 = self.z.clone();
             for (k, &i) in idx.iter().enumerate() {

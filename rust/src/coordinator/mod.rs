@@ -124,7 +124,10 @@ impl<'b> Coordinator<'b> {
         let solver = self.solver(cfg);
         let budget = Budget { max_iters: cfg.max_iters, time_limit_secs: cfg.time_limit_secs };
         let t_init = std::time::Instant::now();
-        let mut state = solver.init(self.backend, &problem, &budget)?;
+        let mut state = {
+            let _sp = crate::obs::span("solve/init");
+            solver.init(self.backend, &problem, &budget)?
+        };
         let mut policy = policy.clone();
         if policy.eval_every == 0 {
             policy.eval_every = solver.eval_every_override();

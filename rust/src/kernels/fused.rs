@@ -106,6 +106,19 @@ pub fn kernel_panel(
     if m == 0 || n == 0 {
         return;
     }
+    // Credit panel traffic (read both slabs, write the output region)
+    // and the per-entry nonlinearity to the open spans; the GEMM cross
+    // term self-reports inside `gemm_nt`. The per-entry costs are
+    // nominal flop counts (`exp_fast` is a 13-term Horner plus range
+    // reduction, ~30 flops) so span GFLOP/s stays comparable across
+    // kernels rather than cycle-exact.
+    let nonlin = match kind {
+        KernelKind::Rbf => 35.0,
+        KernelKind::Matern52 => 45.0,
+        KernelKind::Laplacian => 2.0 * d as f64 + 32.0,
+    };
+    crate::obs::add_flops(nonlin * (m * n) as f64);
+    crate::obs::add_bytes(8.0 * ((m + n) * d + m * n) as f64);
     match kind {
         KernelKind::Rbf | KernelKind::Matern52 => {
             debug_assert!(x1sq.len() == m && x2sq.len() == n, "norms required for GEMM kernels");

@@ -57,6 +57,7 @@
 //! | [`metrics`]   | Task metrics, convergence traces, latency percentiles |
 //! | [`model`]     | Durable model artifacts + solver checkpoints (`docs/MODELS.md`) |
 //! | [`net`]       | HTTP/1.1 prediction service + typed JSON wire protocol (`docs/SERVING.md`) |
+//! | [`obs`]       | Observability: structured JSONL events, phase spans + flop counters, phase registry (`docs/OBSERVABILITY.md`) |
 //! | [`runtime`]   | PJRT engine, artifact manifest, host tensors |
 //! | [`sampling`]  | Block coordinate sampling (uniform, BLESS/ARLS) |
 //! | [`server`]    | Dynamic-batching model thread and [`server::Predictor`] over any backend |
@@ -82,6 +83,7 @@ pub mod linalg;
 pub mod metrics;
 pub mod model;
 pub mod net;
+pub mod obs;
 pub mod runtime;
 pub mod sampling;
 pub mod server;

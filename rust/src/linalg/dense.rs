@@ -233,6 +233,9 @@ pub fn gemm_nt(
     if m == 0 || n == 0 {
         return;
     }
+    // One multiply-add per (i, j, k) triple regardless of path; credited
+    // here so every caller (matmul, fused panels) reports GFLOP/s.
+    crate::obs::add_flops(2.0 * m as f64 * n as f64 * k as f64);
     if m < 3 || k == 0 {
         // Degenerate heights (serving single rows) are plain dot
         // products; packing would cost as much as the compute.

@@ -35,14 +35,28 @@ use askotch::config::{
     BackendKind, BandwidthSpec, ExperimentConfig, KernelKind, SamplingScheme, SolverKind,
 };
 use askotch::coordinator::{Budget, Coordinator};
+use askotch::json::Json;
 use askotch::model::ModelArtifact;
+use askotch::obs;
 use askotch::solvers::Checkpoint;
 use askotch::util::cli::Args;
 use askotch::util::fmt;
 
+/// Boolean flag, tolerant of the parser's `--flag value` reading when a
+/// non-dash token follows (`--profile --log f.jsonl` vs `--log f.jsonl
+/// --profile`).
+fn flag(args: &Args, name: &str) -> bool {
+    args.has_flag(name) || args.get(name).is_some()
+}
+
 fn main() -> Result<()> {
     let args = Args::from_env();
-    match args.positional.first().map(String::as_str) {
+    // Global observability flags, before any subcommand runs:
+    //   --log FILE   structured JSONL events to FILE instead of stderr
+    //   --quiet      stderr events at warn+ only
+    //   --profile    phase-breakdown summary on exit
+    obs::init(args.get("log"), flag(&args, "quiet"))?;
+    let result = match args.positional.first().map(String::as_str) {
         Some("solve") => cmd_solve(&args),
         Some("train") => cmd_train(&args),
         Some("experiment") => cmd_experiment(&args),
@@ -55,14 +69,25 @@ fn main() -> Result<()> {
             eprintln!(
                 "usage: askotch <solve|train|experiment|compare|testbed|info|serve|perf> \
                  [options]\n\
-                 common: --backend auto|host|pjrt (default auto), --host-threads N\n\
+                 common: --backend auto|host|pjrt (default auto), --host-threads N, \
+                 --log FILE, --quiet, --profile\n\
                  lifecycle: train --save DIR, serve --model DIR, \
                  solve/train --checkpoint DIR [--checkpoint-every N] [--resume]\n\
                  run `askotch info` to inspect the selected backend"
             );
             Ok(())
         }
+    };
+    if flag(&args, "profile") {
+        let rows = obs::snapshot();
+        // The span-tree summary for humans, and the same rows as a
+        // structured `profile` event for the log sink / CI gate.
+        if !rows.is_empty() {
+            println!("{}", obs::render(&rows));
+        }
+        obs::info_kv("obs", "profile", &[("phases", obs::profile_json(&rows))]);
     }
+    result
 }
 
 fn artifacts_dir(args: &Args) -> String {
@@ -86,9 +111,17 @@ fn make_backend(args: &Args, cfg_kind: BackendKind) -> Result<AnyBackend> {
         AnyBackend::from_kind(kind, &dir)?
     };
     if let AnyBackend::Host(h) = &backend {
-        eprintln!("backend: host ({} threads, zero artifacts)", h.threads());
+        obs::info_kv(
+            "cli",
+            "backend selected",
+            &[("backend", Json::str("host")), ("threads", Json::num(h.threads() as f64))],
+        );
     } else {
-        eprintln!("backend: pjrt (artifacts at {dir:?})");
+        obs::info_kv(
+            "cli",
+            "backend selected",
+            &[("backend", Json::str("pjrt")), ("artifacts", Json::str(&format!("{dir:?}")))],
+        );
     }
     Ok(backend)
 }
@@ -168,16 +201,23 @@ fn load_resume(args: &Args, cfg: &ExperimentConfig) -> Result<Option<Checkpoint>
     let manifest = std::path::Path::new(&cfg.checkpoint_dir)
         .join(askotch::model::checkpoint::MANIFEST_FILE);
     if !manifest.exists() {
-        eprintln!("no checkpoint at {:?} yet; starting fresh", cfg.checkpoint_dir);
+        obs::info_kv(
+            "cli",
+            "no checkpoint yet; starting fresh",
+            &[("dir", Json::str(&cfg.checkpoint_dir))],
+        );
         return Ok(None);
     }
     let ck = Checkpoint::load(&cfg.checkpoint_dir)?;
-    eprintln!(
-        "resuming {} on {} from iteration {} ({} elapsed)",
-        ck.solver,
-        ck.problem,
-        ck.iters,
-        fmt::duration(ck.secs)
+    obs::info_kv(
+        "cli",
+        "resuming from checkpoint",
+        &[
+            ("solver", Json::str(&ck.solver)),
+            ("problem", Json::str(&ck.problem)),
+            ("iters", Json::num(ck.iters as f64)),
+            ("secs", Json::num(ck.secs)),
+        ],
     );
     Ok(Some(ck))
 }
@@ -250,7 +290,7 @@ fn cmd_train(args: &Args) -> Result<()> {
                 artifact.meta.kernel.name()
             );
         }
-        None => eprintln!("note: no --save DIR given; the trained weights were discarded"),
+        None => obs::warn("cli", "no --save DIR given; the trained weights were discarded"),
     }
     Ok(())
 }
@@ -377,13 +417,20 @@ fn cmd_testbed(args: &Args) -> Result<()> {
     }
     cfg.checkpoint_every = args.get_usize("checkpoint-every", cfg.checkpoint_every);
     cfg.resume = cfg.resume || args.has_flag("resume");
+    cfg.profile = cfg.profile || flag(args, "profile");
 
-    eprintln!(
-        "testbed: scale={} (row factor {}), solvers=[{}], budget {}/run",
-        cfg.scale.name(),
-        cfg.scale.row_factor(),
-        cfg.solvers.iter().map(|s| s.name()).collect::<Vec<_>>().join(","),
-        fmt::duration(cfg.budgets.time_limit_secs),
+    obs::info_kv(
+        "testbed",
+        "suite starting",
+        &[
+            ("scale", Json::str(cfg.scale.name())),
+            ("row_factor", Json::num(cfg.scale.row_factor())),
+            (
+                "solvers",
+                Json::str(&cfg.solvers.iter().map(|s| s.name()).collect::<Vec<_>>().join(",")),
+            ),
+            ("budget_secs", Json::num(cfg.budgets.time_limit_secs)),
+        ],
     );
     let outcome = testbed::run(&cfg)?;
     println!(
@@ -396,6 +443,9 @@ fn cmd_testbed(args: &Args) -> Result<()> {
     );
 
     println!("{}", testbed::report::profile_table(&outcome.records).render());
+    if cfg.profile {
+        println!("{}", testbed::report::phase_table(&outcome.records).render());
+    }
 
     for path in testbed::runner::persist(&outcome, &cfg)? {
         println!("wrote {path}");

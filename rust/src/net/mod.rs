@@ -303,9 +303,12 @@ fn handle_predict(
     metrics: &Metrics,
 ) -> (u16, Json) {
     let t0 = Instant::now();
-    let body = match wire::parse_predict_body(&req.body) {
-        Ok(b) => b,
-        Err(e) => return (400, wire::error_body("bad_request", &e.to_string())),
+    let body = {
+        let _sp = crate::obs::span("serve/parse");
+        match wire::parse_predict_body(&req.body) {
+            Ok(b) => b,
+            Err(e) => return (400, wire::error_body("bad_request", &e.to_string())),
+        }
     };
     let single = body.is_single();
     // Fan the slots into the batcher (moving each feature vector, no
@@ -315,7 +318,7 @@ fn handle_predict(
     let mut pending = Vec::with_capacity(requests.len());
     for r in requests {
         let (rtx, rrx) = mpsc::channel();
-        let job = Job::Predict(Request { features: r.features, reply: rtx });
+        let job = Job::Predict(Request::new(r.features, rtx));
         if submit.send(job).is_err() {
             return (
                 503,
@@ -325,11 +328,15 @@ fn handle_predict(
         pending.push(rrx);
     }
     let mut results: Vec<wire::SlotResult> = Vec::with_capacity(pending.len());
-    for rrx in pending {
-        match rrx.recv() {
-            Ok(Ok(x)) => results.push(Ok(x)),
-            Ok(Err(e)) => results.push(Err(e.to_string())),
-            Err(_) => results.push(Err("model thread dropped the request".into())),
+    {
+        // Queueing + batching + compute, as seen from the HTTP worker.
+        let _sp = crate::obs::span("serve/wait");
+        for rrx in pending {
+            match rrx.recv() {
+                Ok(Ok(x)) => results.push(Ok(x)),
+                Ok(Err(e)) => results.push(Err(e.to_string())),
+                Err(_) => results.push(Err("model thread dropped the request".into())),
+            }
         }
     }
     metrics.record_predict(results.len(), t0.elapsed().as_secs_f64());

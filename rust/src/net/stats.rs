@@ -115,13 +115,17 @@ impl Metrics {
         }
     }
 
-    /// The `GET /healthz` document: liveness plus the served model and
-    /// the cold-start figure.
+    /// The `GET /healthz` document: liveness plus the served model, the
+    /// cold-start figure, uptime, and process RSS.
     pub fn health_json(&self) -> Json {
+        let (rss_cur, rss_peak) = rss_json();
         Json::obj(vec![
             ("status", Json::str("ok")),
             ("model", self.model_info()),
             ("time_to_first_prediction_ms", self.ttfp_json()),
+            ("uptime_seconds", Json::num(self.started.elapsed().as_secs_f64())),
+            ("rss_current_bytes", rss_cur),
+            ("rss_peak_bytes", rss_peak),
         ])
     }
 
@@ -131,30 +135,67 @@ impl Metrics {
         let http_requests = self.http_requests.load(Ordering::Relaxed);
         let mut lat = self.latencies.lock().unwrap().buf.clone();
         lat.sort_by(|a, b| a.partial_cmp(b).unwrap_or(std::cmp::Ordering::Equal));
-        let lat_json = if lat.is_empty() {
-            Json::Null
-        } else {
-            Json::obj(vec![
-                ("p50_ms", Json::num(percentile(&lat, 0.50) * 1e3)),
-                ("p90_ms", Json::num(percentile(&lat, 0.90) * 1e3)),
-                ("p99_ms", Json::num(percentile(&lat, 0.99) * 1e3)),
-                ("max_ms", Json::num(percentile(&lat, 1.0) * 1e3)),
-                ("window", Json::num(lat.len() as f64)),
-            ])
-        };
         let b = self.batcher.lock().unwrap().clone();
+        let (rss_cur, rss_peak) = rss_json();
         Json::obj(vec![
-            ("uptime_secs", Json::num(uptime)),
+            ("uptime_seconds", Json::num(uptime)),
             ("http_requests", Json::num(http_requests as f64)),
             ("http_errors", Json::num(self.http_errors.load(Ordering::Relaxed) as f64)),
             ("requests_per_sec", Json::num(http_requests as f64 / uptime)),
             ("predictions", Json::num(self.predictions.load(Ordering::Relaxed) as f64)),
             ("time_to_first_prediction_ms", self.ttfp_json()),
+            ("rss_current_bytes", rss_cur),
+            ("rss_peak_bytes", rss_peak),
             ("model", self.model_info()),
-            ("latency", lat_json),
+            ("latency", window_json(&lat)),
+            ("queue_wait", window_json(&b.queue_wait.sorted())),
+            ("compute", window_json(&b.compute.sorted())),
             ("batcher", batcher_json(&b)),
+            // Process-wide phase totals from the obs registry: solver
+            // phases when a solve ran in-process, serve/* phases with
+            // GFLOP/s where the spans carried flop counts.
+            ("phases", phases_json()),
         ])
     }
+}
+
+/// Current/peak RSS as JSON (`Null` where `/proc` is unavailable).
+fn rss_json() -> (Json, Json) {
+    match crate::obs::proc_rss() {
+        Some((cur, peak)) => (Json::num(cur as f64), Json::num(peak as f64)),
+        None => (Json::Null, Json::Null),
+    }
+}
+
+/// Percentile block over an ascending-sorted window, `Null` when empty.
+fn window_json(sorted: &[f64]) -> Json {
+    if sorted.is_empty() {
+        return Json::Null;
+    }
+    Json::obj(vec![
+        ("p50_ms", Json::num(percentile(sorted, 0.50) * 1e3)),
+        ("p90_ms", Json::num(percentile(sorted, 0.90) * 1e3)),
+        ("p99_ms", Json::num(percentile(sorted, 0.99) * 1e3)),
+        ("max_ms", Json::num(percentile(sorted, 1.0) * 1e3)),
+        ("window", Json::num(sorted.len() as f64)),
+    ])
+}
+
+/// The obs phase registry as `[{phase, count, secs, gflops}, ...]`.
+fn phases_json() -> Json {
+    let rows = crate::obs::snapshot();
+    Json::Arr(
+        rows.iter()
+            .map(|(path, st)| {
+                Json::obj(vec![
+                    ("phase", Json::str(path)),
+                    ("count", Json::num(st.count as f64)),
+                    ("secs", Json::num(st.secs)),
+                    ("gflops", Json::num(st.gflops())),
+                ])
+            })
+            .collect(),
+    )
 }
 
 fn batcher_json(s: &ServerStats) -> Json {
@@ -215,13 +256,78 @@ mod tests {
     }
 
     #[test]
-    fn latency_window_wraps() {
+    fn latency_window_fills_exactly_to_capacity() {
+        let m = Metrics::default();
+        for i in 0..LATENCY_WINDOW {
+            m.record_predict(1, i as f64);
+        }
+        let w = m.latencies.lock().unwrap();
+        assert_eq!(w.buf.len(), LATENCY_WINDOW);
+        assert_eq!(w.next, 0, "write cursor wraps to 0 exactly at capacity");
+        assert_eq!(w.buf[0], 0.0, "nothing evicted yet");
+        assert_eq!(w.buf[LATENCY_WINDOW - 1], (LATENCY_WINDOW - 1) as f64);
+        drop(w);
+        // The very next sample must overwrite the oldest slot.
+        m.record_predict(1, -1.0);
+        let w = m.latencies.lock().unwrap();
+        assert_eq!(w.buf.len(), LATENCY_WINDOW);
+        assert_eq!(w.buf[0], -1.0, "oldest slot overwritten first");
+        assert_eq!(w.next, 1);
+    }
+
+    #[test]
+    fn latency_window_wraps_past_capacity() {
         let m = Metrics::default();
         for i in 0..(LATENCY_WINDOW + 100) {
             m.record_predict(1, i as f64);
         }
         let w = m.latencies.lock().unwrap();
         assert_eq!(w.buf.len(), LATENCY_WINDOW);
+        // Sample i lands in slot i % LATENCY_WINDOW: the first 100 slots
+        // hold the second lap, the rest still hold the first.
+        assert_eq!(w.buf[50], (LATENCY_WINDOW + 50) as f64);
+        assert_eq!(w.buf[200], 200.0);
+        assert_eq!(w.next, 100);
+    }
+
+    #[test]
+    fn percentiles_on_partially_filled_window() {
+        let m = Metrics::default();
+        for i in 1..=10 {
+            m.record_predict(1, i as f64 / 1000.0); // 1..=10 ms
+        }
+        let lat = m.snapshot_json();
+        let lat = lat.get("latency").unwrap();
+        assert_eq!(lat.get("window").unwrap().as_f64().unwrap(), 10.0);
+        // Nearest-rank over the 10 recorded samples, not the capacity.
+        assert!((lat.get("p50_ms").unwrap().as_f64().unwrap() - 5.0).abs() < 1e-9);
+        assert!((lat.get("p90_ms").unwrap().as_f64().unwrap() - 9.0).abs() < 1e-9);
+        assert!((lat.get("max_ms").unwrap().as_f64().unwrap() - 10.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn queue_wait_and_compute_windows_surface_in_metrics() {
+        let m = Metrics::default();
+        assert_eq!(m.snapshot_json().get("queue_wait").unwrap(), &Json::Null);
+        {
+            let mut b = m.batcher().lock().unwrap();
+            for i in 1..=4 {
+                b.queue_wait.push(i as f64 / 1000.0);
+                b.compute.push(2.0 * i as f64 / 1000.0);
+            }
+        }
+        let j = m.snapshot_json();
+        let qw = j.get("queue_wait").unwrap();
+        assert_eq!(qw.get("window").unwrap().as_f64().unwrap(), 4.0);
+        assert!((qw.get("max_ms").unwrap().as_f64().unwrap() - 4.0).abs() < 1e-9);
+        let c = j.get("compute").unwrap();
+        assert!((c.get("max_ms").unwrap().as_f64().unwrap() - 8.0).abs() < 1e-9);
+        assert!(j.get("phases").unwrap().as_arr().is_some());
+        assert!(j.get("uptime_seconds").unwrap().as_f64().unwrap() >= 0.0);
+        if cfg!(target_os = "linux") {
+            assert!(j.get("rss_current_bytes").unwrap().as_f64().unwrap() > 0.0);
+        }
+        assert!(crate::json::parse(&j.to_string()).is_ok());
     }
 
     #[test]

@@ -1,0 +1,575 @@
+//! Crate-wide observability: structured JSONL logging, hierarchical
+//! phase spans with flop/byte counters, and a global phase registry
+//! (`docs/OBSERVABILITY.md`).
+//!
+//! Three layers, all zero-dependency:
+//!
+//! * **Events** — leveled, per-target log records serialized through the
+//!   in-house [`crate::json`] subsystem as one JSON object per line.
+//!   Every record carries `ts` (unix seconds), `level`, `target`, and
+//!   `msg`, plus caller fields. Records go to the `--log FILE` sink when
+//!   one is installed ([`init`]), to stderr otherwise; `--quiet` raises
+//!   the stderr threshold to `warn`.
+//! * **Spans** — RAII phase timers ([`span`]) on a thread-local stack.
+//!   Nested spans join into `/`-separated paths (`solve/init/precond`),
+//!   timed with the monotonic clock. [`add_flops`] / [`add_bytes`]
+//!   accumulate into thread-local cells that each span snapshots on
+//!   entry and diffs on drop, so work is attributed *inclusively*: a
+//!   parent's flops include its children's, exactly like its seconds.
+//!   The hot path touches only thread-local state; the global registry
+//!   is locked once per *outermost* span close (per iteration / per
+//!   worker call), which keeps instrumentation overhead under the 1%
+//!   contract benchmarked in `benches/paper_suite.rs`.
+//! * **Registry** — per-thread shards merge into a process-wide map
+//!   keyed by `(domain, path)`. Domains ([`next_domain`] /
+//!   [`enter_domain`] / [`take_domain`]) let concurrent testbed runs
+//!   extract their own phase breakdowns without tearing each other's
+//!   numbers; extracted entries fold back into domain 0 so the global
+//!   `--profile` summary keeps process totals.
+//!
+//! [`set_enabled`]`(false)` turns the whole layer into near-no-ops
+//! (one relaxed atomic load per call site) — the baseline arm of the
+//! overhead bench.
+
+use crate::json::Json;
+use std::cell::{Cell, RefCell};
+use std::collections::BTreeMap;
+use std::io::Write;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::Instant;
+
+// ---------------------------------------------------------------------------
+// global switch
+// ---------------------------------------------------------------------------
+
+static ENABLED: AtomicBool = AtomicBool::new(true);
+
+/// Master switch. `false` turns events, spans, and counters into
+/// near-no-ops; the overhead bench uses this as its baseline arm.
+pub fn set_enabled(on: bool) {
+    ENABLED.store(on, Ordering::Relaxed);
+}
+
+/// Is the observability layer live? One relaxed atomic load.
+#[inline]
+pub fn enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+// ---------------------------------------------------------------------------
+// structured events
+// ---------------------------------------------------------------------------
+
+/// Event severity, ordered so thresholds compare with `>=`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Level {
+    Debug,
+    Info,
+    Warn,
+    Error,
+}
+
+impl Level {
+    pub fn name(self) -> &'static str {
+        match self {
+            Level::Debug => "debug",
+            Level::Info => "info",
+            Level::Warn => "warn",
+            Level::Error => "error",
+        }
+    }
+}
+
+struct Sink {
+    file: Option<std::fs::File>,
+    stderr_level: Level,
+    file_level: Level,
+}
+
+static SINK: Mutex<Sink> =
+    Mutex::new(Sink { file: None, stderr_level: Level::Info, file_level: Level::Debug });
+
+/// Install the process log sink: a `--log FILE` JSONL destination (all
+/// levels) and/or a `--quiet` stderr threshold (`warn` instead of
+/// `info`). Without `init`, events print to stderr at `info`.
+pub fn init(log_path: Option<&str>, quiet: bool) -> anyhow::Result<()> {
+    let file = match log_path {
+        Some(p) => {
+            Some(std::fs::File::create(p).map_err(|e| anyhow::anyhow!("--log {p}: {e}"))?)
+        }
+        None => None,
+    };
+    let mut s = SINK.lock().unwrap();
+    s.stderr_level = if quiet { Level::Warn } else { Level::Info };
+    s.file = file;
+    Ok(())
+}
+
+/// The JSON record an event serializes to — split out so tests can pin
+/// the schema without touching the process sink. Caller fields never
+/// displace the four required ones.
+pub fn event_json(level: Level, target: &str, msg: &str, fields: &[(&str, Json)]) -> Json {
+    let ts = std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_secs_f64())
+        .unwrap_or(0.0);
+    let mut j = Json::obj(fields.to_vec());
+    j.set("ts", Json::num(ts))
+        .set("level", Json::str(level.name()))
+        .set("target", Json::str(target))
+        .set("msg", Json::str(msg));
+    j
+}
+
+/// Emit one structured event: a single JSONL line to the installed
+/// sink (file if `--log`, stderr otherwise, subject to the level
+/// thresholds).
+pub fn event(level: Level, target: &str, msg: &str, fields: &[(&str, Json)]) {
+    if !enabled() {
+        return;
+    }
+    let line = event_json(level, target, msg, fields).to_string();
+    let mut s = SINK.lock().unwrap();
+    match s.file.as_mut() {
+        Some(f) => {
+            if level >= s.file_level {
+                let _ = writeln!(f, "{line}");
+            }
+        }
+        None => {
+            if level >= s.stderr_level {
+                eprintln!("{line}");
+            }
+        }
+    }
+}
+
+pub fn debug(target: &str, msg: &str) {
+    event(Level::Debug, target, msg, &[]);
+}
+
+pub fn info(target: &str, msg: &str) {
+    event(Level::Info, target, msg, &[]);
+}
+
+pub fn warn(target: &str, msg: &str) {
+    event(Level::Warn, target, msg, &[]);
+}
+
+pub fn error(target: &str, msg: &str) {
+    event(Level::Error, target, msg, &[]);
+}
+
+pub fn info_kv(target: &str, msg: &str, fields: &[(&str, Json)]) {
+    event(Level::Info, target, msg, fields);
+}
+
+pub fn warn_kv(target: &str, msg: &str, fields: &[(&str, Json)]) {
+    event(Level::Warn, target, msg, fields);
+}
+
+// ---------------------------------------------------------------------------
+// spans + counters
+// ---------------------------------------------------------------------------
+
+/// Accumulated statistics for one `(domain, path)` phase.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct PhaseStat {
+    /// Completed span closes.
+    pub count: u64,
+    /// Inclusive wall seconds (monotonic clock).
+    pub secs: f64,
+    /// Floating-point operations attributed while the span was open on
+    /// its thread (inclusive of nested spans, like `secs`).
+    pub flops: f64,
+    /// Bytes moved, same attribution as `flops`.
+    pub bytes: f64,
+}
+
+impl PhaseStat {
+    pub fn merge(&mut self, o: &PhaseStat) {
+        self.count += o.count;
+        self.secs += o.secs;
+        self.flops += o.flops;
+        self.bytes += o.bytes;
+    }
+
+    /// Attributed GFLOP/s (0 when the span carried no flop counts).
+    pub fn gflops(&self) -> f64 {
+        if self.secs > 0.0 && self.flops > 0.0 {
+            self.flops / self.secs / 1e9
+        } else {
+            0.0
+        }
+    }
+}
+
+type PhaseMap = BTreeMap<(u64, String), PhaseStat>;
+
+static REGISTRY: Mutex<PhaseMap> = Mutex::new(BTreeMap::new());
+static NEXT_DOMAIN: AtomicU64 = AtomicU64::new(1);
+
+thread_local! {
+    static STACK: RefCell<Vec<&'static str>> = const { RefCell::new(Vec::new()) };
+    static SHARD: RefCell<PhaseMap> = const { RefCell::new(BTreeMap::new()) };
+    static FLOPS: Cell<f64> = const { Cell::new(0.0) };
+    static BYTES: Cell<f64> = const { Cell::new(0.0) };
+    static DOMAIN: Cell<u64> = const { Cell::new(0) };
+}
+
+/// Credit `n` floating-point operations to the open spans on this
+/// thread. Thread-local add; no locks.
+#[inline]
+pub fn add_flops(n: f64) {
+    if enabled() {
+        FLOPS.with(|c| c.set(c.get() + n));
+    }
+}
+
+/// Credit `n` bytes moved to the open spans on this thread.
+#[inline]
+pub fn add_bytes(n: f64) {
+    if enabled() {
+        BYTES.with(|c| c.set(c.get() + n));
+    }
+}
+
+/// RAII phase timer. Created by [`span`]; records into the thread
+/// shard on drop, and flushes the shard into the global registry when
+/// the outermost span of the thread closes.
+#[must_use = "a span records its phase when dropped"]
+pub struct Span {
+    start: Instant,
+    flops0: f64,
+    bytes0: f64,
+    armed: bool,
+}
+
+/// Open a phase span. Nested spans join into `/`-separated paths:
+/// `span("solve/init")` then `span("precond")` records under
+/// `solve/init/precond`. Keep names `'static` — the hot path never
+/// allocates until close.
+pub fn span(name: &'static str) -> Span {
+    if !enabled() {
+        return Span { start: Instant::now(), flops0: 0.0, bytes0: 0.0, armed: false };
+    }
+    STACK.with(|s| s.borrow_mut().push(name));
+    Span {
+        start: Instant::now(),
+        flops0: FLOPS.with(|c| c.get()),
+        bytes0: BYTES.with(|c| c.get()),
+        armed: true,
+    }
+}
+
+impl Drop for Span {
+    fn drop(&mut self) {
+        if !self.armed {
+            return;
+        }
+        let secs = self.start.elapsed().as_secs_f64();
+        let flops = FLOPS.with(|c| c.get()) - self.flops0;
+        let bytes = BYTES.with(|c| c.get()) - self.bytes0;
+        let dom = DOMAIN.with(|c| c.get());
+        let depth = STACK.with(|s| {
+            let mut s = s.borrow_mut();
+            let path = s.join("/");
+            s.pop();
+            SHARD.with(|sh| {
+                let mut sh = sh.borrow_mut();
+                let e = sh.entry((dom, path)).or_default();
+                e.count += 1;
+                e.secs += secs;
+                e.flops += flops;
+                e.bytes += bytes;
+            });
+            s.len()
+        });
+        if depth == 0 {
+            flush_shard();
+        }
+    }
+}
+
+fn flush_shard() {
+    SHARD.with(|sh| {
+        let mut sh = sh.borrow_mut();
+        if sh.is_empty() {
+            return;
+        }
+        let mut reg = REGISTRY.lock().unwrap();
+        for (k, v) in std::mem::take(&mut *sh) {
+            reg.entry(k).or_default().merge(&v);
+        }
+    });
+}
+
+// ---------------------------------------------------------------------------
+// domains
+// ---------------------------------------------------------------------------
+
+/// Allocate a fresh registry domain (0 is the shared global domain).
+pub fn next_domain() -> u64 {
+    NEXT_DOMAIN.fetch_add(1, Ordering::Relaxed)
+}
+
+/// The domain this thread currently records into.
+pub fn current_domain() -> u64 {
+    DOMAIN.with(|c| c.get())
+}
+
+/// Point this thread's span records at `id`. Worker threads call this
+/// with the domain captured from their spawner ([`current_domain`]);
+/// run loops prefer the scoped [`enter_domain`].
+pub fn set_domain(id: u64) {
+    DOMAIN.with(|c| c.set(id));
+}
+
+/// Scoped domain switch; restores the previous domain on drop.
+pub struct DomainGuard {
+    prev: u64,
+}
+
+pub fn enter_domain(id: u64) -> DomainGuard {
+    let prev = current_domain();
+    set_domain(id);
+    DomainGuard { prev }
+}
+
+impl Drop for DomainGuard {
+    fn drop(&mut self) {
+        set_domain(self.prev);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// registry export
+// ---------------------------------------------------------------------------
+
+/// Process-wide phase totals, merged across all domains, sorted by
+/// path. The `--profile` summary and `GET /metrics` read this.
+pub fn snapshot() -> Vec<(String, PhaseStat)> {
+    let reg = REGISTRY.lock().unwrap();
+    let mut merged: BTreeMap<String, PhaseStat> = BTreeMap::new();
+    for ((_, path), st) in reg.iter() {
+        merged.entry(path.clone()).or_default().merge(st);
+    }
+    merged.into_iter().collect()
+}
+
+/// Extract (and remove) one domain's phase rows, folding them back
+/// into domain 0 so [`snapshot`] keeps process totals. Call after all
+/// spans of the run have closed (worker threads joined).
+pub fn take_domain(id: u64) -> Vec<(String, PhaseStat)> {
+    let mut reg = REGISTRY.lock().unwrap();
+    let keys: Vec<(u64, String)> =
+        reg.keys().filter(|(d, _)| *d == id).cloned().collect();
+    let mut out = Vec::with_capacity(keys.len());
+    for k in keys {
+        let st = reg.remove(&k).unwrap_or_default();
+        reg.entry((0, k.1.clone())).or_default().merge(&st);
+        out.push((k.1, st));
+    }
+    out
+}
+
+/// Render phase rows as an aligned text table (the `--profile`
+/// summary).
+pub fn render(rows: &[(String, PhaseStat)]) -> String {
+    let mut t = crate::util::fmt::Table::new(&["phase", "count", "secs", "GFLOP/s", "GB moved"]);
+    for (path, st) in rows {
+        t.row(vec![
+            path.clone(),
+            st.count.to_string(),
+            format!("{:.3}", st.secs),
+            if st.flops > 0.0 { format!("{:.2}", st.gflops()) } else { "-".into() },
+            if st.bytes > 0.0 { format!("{:.2}", st.bytes / 1e9) } else { "-".into() },
+        ]);
+    }
+    t.render()
+}
+
+/// Phase rows as a JSON array (`RunRecord.profile`, the `profile` log
+/// event, and the `/metrics` phase block share this shape).
+pub fn profile_json(rows: &[(String, PhaseStat)]) -> Json {
+    Json::Arr(
+        rows.iter()
+            .map(|(path, st)| {
+                Json::obj(vec![
+                    ("phase", Json::str(path)),
+                    ("count", Json::num(st.count as f64)),
+                    ("secs", Json::num(st.secs)),
+                    ("flops", Json::num(st.flops)),
+                    ("bytes", Json::num(st.bytes)),
+                ])
+            })
+            .collect(),
+    )
+}
+
+// ---------------------------------------------------------------------------
+// process gauges
+// ---------------------------------------------------------------------------
+
+/// `(current, peak)` resident set size in bytes, from
+/// `/proc/self/status` (`VmRSS` / `VmHWM`). `None` off Linux.
+pub fn proc_rss() -> Option<(u64, u64)> {
+    let text = std::fs::read_to_string("/proc/self/status").ok()?;
+    let mut cur = None;
+    let mut peak = None;
+    for line in text.lines() {
+        if let Some(rest) = line.strip_prefix("VmRSS:") {
+            cur = parse_kb(rest);
+        } else if let Some(rest) = line.strip_prefix("VmHWM:") {
+            peak = parse_kb(rest);
+        }
+    }
+    Some((cur?, peak?))
+}
+
+fn parse_kb(rest: &str) -> Option<u64> {
+    let digits: String = rest.trim().chars().take_while(|c| c.is_ascii_digit()).collect();
+    digits.parse::<u64>().ok().map(|kb| kb * 1024)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn event_json_has_required_fields_and_keeps_caller_fields() {
+        let j = event_json(Level::Warn, "serve", "slow request", &[("secs", Json::num(1.5))]);
+        assert!(j.get("ts").and_then(Json::as_f64).unwrap() > 0.0);
+        assert_eq!(j.get("level").and_then(Json::as_str), Some("warn"));
+        assert_eq!(j.get("target").and_then(Json::as_str), Some("serve"));
+        assert_eq!(j.get("msg").and_then(Json::as_str), Some("slow request"));
+        assert_eq!(j.get("secs").and_then(Json::as_f64), Some(1.5));
+        // caller fields can never displace the schema fields
+        let j = event_json(Level::Info, "t", "m", &[("level", Json::str("spoofed"))]);
+        assert_eq!(j.get("level").and_then(Json::as_str), Some("info"));
+        // and the line re-parses as strict JSON
+        assert!(crate::json::parse(&j.to_string()).is_ok());
+    }
+
+    #[test]
+    fn levels_order_for_thresholds() {
+        assert!(Level::Error > Level::Warn);
+        assert!(Level::Warn > Level::Info);
+        assert!(Level::Info > Level::Debug);
+        assert_eq!(Level::Debug.name(), "debug");
+        assert_eq!(Level::Error.name(), "error");
+    }
+
+    #[test]
+    fn nested_spans_join_paths_and_attribute_counters_inclusively() {
+        let dom = next_domain();
+        let _g = enter_domain(dom);
+        {
+            let _outer = span("solve/init");
+            add_flops(100.0);
+            {
+                let _inner = span("precond");
+                add_flops(40.0);
+                add_bytes(8.0);
+            }
+        }
+        let rows = take_domain(dom);
+        let get = |p: &str| {
+            rows.iter().find(|(path, _)| path == p).map(|(_, st)| *st).unwrap_or_default()
+        };
+        let outer = get("solve/init");
+        let inner = get("solve/init/precond");
+        assert_eq!(outer.count, 1);
+        assert_eq!(inner.count, 1);
+        // inclusive attribution: the parent sees its child's flops too
+        assert_eq!(outer.flops, 140.0);
+        assert_eq!(inner.flops, 40.0);
+        assert_eq!(inner.bytes, 8.0);
+        assert!(outer.secs >= inner.secs);
+        // extraction is destructive for the domain
+        assert!(take_domain(dom).is_empty());
+    }
+
+    #[test]
+    fn take_domain_folds_into_global_snapshot() {
+        let dom = next_domain();
+        {
+            let _g = enter_domain(dom);
+            let _s = span("solve/step");
+        }
+        let rows = take_domain(dom);
+        assert_eq!(rows.len(), 1);
+        // the extracted row is now part of domain 0 / the global merge
+        let snap = snapshot();
+        let st = snap.iter().find(|(p, _)| p == "solve/step");
+        assert!(st.is_some_and(|(_, st)| st.count >= 1));
+    }
+
+    #[test]
+    fn domains_isolate_concurrent_runs() {
+        let d1 = next_domain();
+        let d2 = next_domain();
+        let t1 = std::thread::spawn(move || {
+            set_domain(d1);
+            let _s = span("solve/step");
+        });
+        let t2 = std::thread::spawn(move || {
+            set_domain(d2);
+            let _s = span("solve/step");
+            let _e = span("solve/eval");
+        });
+        t1.join().unwrap();
+        t2.join().unwrap();
+        let r1 = take_domain(d1);
+        let r2 = take_domain(d2);
+        assert_eq!(r1.len(), 1);
+        assert_eq!(r2.len(), 2);
+    }
+
+    #[test]
+    fn disabled_spans_record_nothing() {
+        let dom = next_domain();
+        let _g = enter_domain(dom);
+        set_enabled(false);
+        {
+            let _s = span("solve/step");
+            add_flops(1e9);
+        }
+        set_enabled(true);
+        assert!(take_domain(dom).is_empty());
+    }
+
+    #[test]
+    fn phase_stat_merge_and_gflops() {
+        let mut a = PhaseStat { count: 1, secs: 0.5, flops: 1e9, bytes: 10.0 };
+        a.merge(&PhaseStat { count: 2, secs: 0.5, flops: 1e9, bytes: 5.0 });
+        assert_eq!(a.count, 3);
+        assert!((a.gflops() - 2.0).abs() < 1e-12);
+        assert_eq!(PhaseStat::default().gflops(), 0.0);
+    }
+
+    #[test]
+    fn profile_json_shape() {
+        let rows =
+            vec![("solve/step".to_string(), PhaseStat { count: 3, secs: 1.0, flops: 2.0, bytes: 4.0 })];
+        let j = profile_json(&rows);
+        let arr = j.as_arr().unwrap();
+        assert_eq!(arr.len(), 1);
+        assert_eq!(arr[0].get("phase").and_then(Json::as_str), Some("solve/step"));
+        assert_eq!(arr[0].get("count").and_then(Json::as_f64), Some(3.0));
+        let rendered = render(&rows);
+        assert!(rendered.contains("solve/step"));
+    }
+
+    #[test]
+    fn proc_rss_reports_on_linux() {
+        if cfg!(target_os = "linux") {
+            let (cur, peak) = proc_rss().expect("/proc/self/status readable on linux");
+            assert!(cur > 0);
+            assert!(peak >= cur);
+        }
+        assert_eq!(parse_kb("    1234 kB"), Some(1234 * 1024));
+        assert_eq!(parse_kb(" garbage"), None);
+    }
+}

@@ -25,14 +25,37 @@ use crate::backend::Backend;
 use crate::config::KernelKind;
 use crate::json::Json;
 use crate::kernels::fused;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc;
 use std::sync::Mutex;
 use std::time::{Duration, Instant};
 
-/// A prediction request: features plus a reply channel.
+/// Process-wide request id source ([`Request::new`]); ids thread the
+/// request through log events (`request_id`) end to end.
+static NEXT_REQUEST_ID: AtomicU64 = AtomicU64::new(1);
+
+/// Requests whose enqueue-to-reply time exceeds this are logged at
+/// `warn` (target `serve`) with their id.
+pub const SLOW_REQUEST_SECS: f64 = 1.0;
+
+/// A prediction request: features plus a reply channel, stamped with a
+/// process-unique id and its enqueue time (queue-wait accounting).
 pub struct Request {
+    pub id: u64,
     pub features: Vec<f64>,
     pub reply: mpsc::Sender<anyhow::Result<f64>>,
+    pub enqueued: Instant,
+}
+
+impl Request {
+    pub fn new(features: Vec<f64>, reply: mpsc::Sender<anyhow::Result<f64>>) -> Request {
+        Request {
+            id: NEXT_REQUEST_ID.fetch_add(1, Ordering::Relaxed),
+            features,
+            reply,
+            enqueued: Instant::now(),
+        }
+    }
 }
 
 /// Hot-swap request: the already-loaded snapshot to serve next, its
@@ -70,6 +93,48 @@ impl Default for ServerConfig {
 /// up to 65535, far beyond any realistic `max_batch`.
 pub const BATCH_HIST_BUCKETS: usize = 16;
 
+/// How many recent per-request samples the serving-side windows keep
+/// (queue wait, compute time) — matches the HTTP front end's latency
+/// window so the three percentile blocks on `GET /metrics` cover the
+/// same horizon.
+pub const SAMPLE_WINDOW: usize = 4096;
+
+/// Fixed-capacity ring of recent samples (seconds). Push is O(1);
+/// [`SampleWindow::sorted`] copies + sorts for percentile queries.
+#[derive(Debug, Clone, Default)]
+pub struct SampleWindow {
+    buf: Vec<f64>,
+    next: usize,
+}
+
+impl SampleWindow {
+    pub fn push(&mut self, x: f64) {
+        if self.buf.len() < SAMPLE_WINDOW {
+            self.buf.push(x);
+        } else {
+            let i = self.next;
+            self.buf[i] = x;
+        }
+        self.next = (self.next + 1) % SAMPLE_WINDOW;
+    }
+
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+
+    /// Ascending copy of the window, ready for
+    /// [`crate::metrics::percentile`].
+    pub fn sorted(&self) -> Vec<f64> {
+        let mut v = self.buf.clone();
+        v.sort_by(|a, b| a.partial_cmp(b).unwrap_or(std::cmp::Ordering::Equal));
+        v
+    }
+}
+
 /// Aggregate serving statistics.
 #[derive(Debug, Clone)]
 pub struct ServerStats {
@@ -81,6 +146,11 @@ pub struct ServerStats {
     pub reloads: usize,
     /// Power-of-two batch-size histogram (see [`BATCH_HIST_BUCKETS`]).
     pub batch_hist: [usize; BATCH_HIST_BUCKETS],
+    /// Recent per-request queue waits: enqueue to batch pickup, seconds.
+    pub queue_wait: SampleWindow,
+    /// Recent per-request compute times (each request in a batch records
+    /// the batch's predict duration — that is the latency it saw).
+    pub compute: SampleWindow,
 }
 
 impl Default for ServerStats {
@@ -92,6 +162,8 @@ impl Default for ServerStats {
             busy_secs: 0.0,
             reloads: 0,
             batch_hist: [0; BATCH_HIST_BUCKETS],
+            queue_wait: SampleWindow::default(),
+            compute: SampleWindow::default(),
         }
     }
 }
@@ -228,9 +300,11 @@ fn answer_batch<P: Predictor + ?Sized>(
 ) {
     let d = predictor.dim();
     let t0 = Instant::now();
+    let sp_asm = crate::obs::span("serve/batch/assemble");
     let mut x_eval = Vec::with_capacity(batch.len() * d);
     let mut ok_shape = Vec::with_capacity(batch.len());
     for r in &batch {
+        stats.queue_wait.push(t0.saturating_duration_since(r.enqueued).as_secs_f64());
         if r.features.len() == d {
             x_eval.extend_from_slice(&r.features);
             ok_shape.push(true);
@@ -240,7 +314,16 @@ fn answer_batch<P: Predictor + ?Sized>(
             ok_shape.push(false);
         }
     }
-    let preds = predictor.predict_batch(&x_eval, batch.len());
+    drop(sp_asm);
+    let t_compute = Instant::now();
+    let preds = {
+        let _sp = crate::obs::span("serve/batch/compute");
+        predictor.predict_batch(&x_eval, batch.len())
+    };
+    let compute_secs = t_compute.elapsed().as_secs_f64();
+    for _ in 0..batch.len() {
+        stats.compute.push(compute_secs);
+    }
     stats.record_batch(batch.len(), t0.elapsed().as_secs_f64());
     if let Some(shared) = live {
         if let Ok(mut s) = shared.lock() {
@@ -248,6 +331,7 @@ fn answer_batch<P: Predictor + ?Sized>(
         }
     }
 
+    let _sp_reply = crate::obs::span("serve/batch/reply");
     match preds {
         Ok(p) => {
             for (k, req) in batch.into_iter().enumerate() {
@@ -269,14 +353,34 @@ fn answer_batch<P: Predictor + ?Sized>(
                         k + 1
                     ))
                 };
+                warn_if_slow(&req, compute_secs);
                 let _ = req.reply.send(reply);
             }
         }
         Err(e) => {
             for req in batch {
+                warn_if_slow(&req, compute_secs);
                 let _ = req.reply.send(Err(anyhow::anyhow!("predict failed: {e}")));
             }
         }
+    }
+}
+
+/// Log requests that spent longer than [`SLOW_REQUEST_SECS`] between
+/// enqueue and reply, with the request id and the compute share so the
+/// queue-wait / compute split is visible per offender.
+fn warn_if_slow(req: &Request, compute_secs: f64) {
+    let total = req.enqueued.elapsed().as_secs_f64();
+    if total > SLOW_REQUEST_SECS {
+        crate::obs::warn_kv(
+            "serve",
+            "slow request",
+            &[
+                ("request_id", Json::num(req.id as f64)),
+                ("total_secs", Json::num(total)),
+                ("compute_secs", Json::num(compute_secs)),
+            ],
+        );
     }
 }
 
@@ -368,7 +472,42 @@ mod tests {
 
     fn predict_job(features: Vec<f64>) -> (Job, mpsc::Receiver<anyhow::Result<f64>>) {
         let (rtx, rrx) = mpsc::channel();
-        (Job::Predict(Request { features, reply: rtx }), rrx)
+        (Job::Predict(Request::new(features, rtx)), rrx)
+    }
+
+    #[test]
+    fn sample_window_wraps_and_sorts() {
+        let mut w = SampleWindow::default();
+        for i in 0..(SAMPLE_WINDOW + 10) {
+            w.push(i as f64);
+        }
+        assert_eq!(w.len(), SAMPLE_WINDOW);
+        let s = w.sorted();
+        assert_eq!(s[0], 10.0, "oldest 10 samples evicted");
+        assert_eq!(s[SAMPLE_WINDOW - 1], (SAMPLE_WINDOW + 9) as f64);
+    }
+
+    #[test]
+    fn batch_records_queue_wait_and_compute_windows() {
+        let backend = HostBackend::new(1);
+        let p = BackendPredictor::new(&backend, toy_model(1.0));
+        let (tx, rx) = mpsc::channel::<Job>();
+        let (job, _rrx) = predict_job(vec![0.0, 0.0]);
+        tx.send(job).unwrap();
+        drop(tx);
+        let stats = serve_predictor(&p, rx, &ServerConfig::default(), None);
+        assert_eq!(stats.queue_wait.len(), 1);
+        assert_eq!(stats.compute.len(), 1);
+        assert!(stats.queue_wait.sorted()[0] >= 0.0);
+        assert!(stats.compute.sorted()[0] >= 0.0);
+    }
+
+    #[test]
+    fn request_ids_are_unique_and_increasing() {
+        let (rtx, _rrx) = mpsc::channel();
+        let a = Request::new(vec![], rtx.clone());
+        let b = Request::new(vec![], rtx);
+        assert!(b.id > a.id);
     }
 
     #[test]

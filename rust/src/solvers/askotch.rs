@@ -149,9 +149,15 @@ impl Solver for AskotchSolver {
             rho: self.cfg.rho,
             seed: self.cfg.seed,
         };
-        let stepper = backend.sap_stepper(problem, &opts)?;
+        let stepper = {
+            let _sp = crate::obs::span("stepper");
+            backend.sap_stepper(problem, &opts)?
+        };
         let b = stepper.block_size();
-        let sampler = self.build_sampler(problem, b);
+        let sampler = {
+            let _sp = crate::obs::span("sampler");
+            self.build_sampler(problem, b)
+        };
         Ok(Box::new(AskotchState {
             backend,
             problem,

@@ -74,10 +74,12 @@ impl Solver for EigenProSolver {
         let bg = self.cfg.batch.min(n);
 
         // --- preconditioner: top-q eigensystem of (1/s) K_SS -------------
+        let sp_eig = crate::obs::span("eigensystem");
         let mut rng = Rng::new(self.cfg.seed ^ 0xE16E);
         let s_idx = rng.sample_distinct(n, s);
         let kss = backend.kernel_block(problem.kernel, &problem.train.x, d, &s_idx, problem.sigma);
         let (mut eigs, qmat) = eig::subspace_topk(s, q + 1, |v| kss.matvec(v), 40, &mut rng);
+        drop(sp_eig);
         for e in eigs.iter_mut() {
             *e /= s as f64; // spectrum of (1/s) K_SS approximates the integral operator
         }

@@ -76,13 +76,16 @@ impl Solver for FalkonSolver {
         let xm_sq = fused::sq_norms(&xm, m, d);
 
         // K_mm and its Cholesky preconditioner (the O(m^2)/O(m^3) cost).
+        let sp_kmm = crate::obs::span("kmm");
         let kmm =
             backend.kernel_block(problem.kernel, &problem.train.x, d, &centers, problem.sigma);
         let mut kmm_reg = kmm.clone();
         kmm_reg.add_diag(lam + 1e-8 * m as f64);
         let pre = Chol::new(&kmm_reg, 0.0)?;
+        drop(sp_kmm);
 
         // rhs = K_nm^T y.
+        let sp_rhs = crate::obs::span("rhs");
         let rhs = backend.kernel_matvec_with_norms(
             problem.kernel,
             &xm,
@@ -94,6 +97,7 @@ impl Solver for FalkonSolver {
             problem.sigma,
             Some(&problem.train_sq_norms),
         )?;
+        drop(sp_rhs);
         let rhs_norm = dense::norm(&rhs).max(1e-300);
 
         // CG state: w = 0, r = rhs, z = P^{-1} r, p = z.

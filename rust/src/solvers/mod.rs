@@ -29,10 +29,15 @@ use crate::metrics::{Trace, TracePoint};
 ///
 /// Every solver calls [`Observer::on_iter`] once per completed iteration
 /// (cheap — counters only) and [`Observer::on_eval`] whenever it records
-/// a [`TracePoint`] (test metric + residual at the eval cadence). The
-/// testbed runner uses this to print heartbeat lines and to account
-/// per-iteration timing without touching the solver loops; [`Solver::run`]
-/// plugs in [`NullObserver`] so existing call sites pay nothing.
+/// a [`TracePoint`] (test metric + residual at the eval cadence).
+///
+/// Since the `obs` subsystem landed, all *timing and phase accounting*
+/// lives in [`crate::obs`] spans (`solve/init`, `solve/step`,
+/// `solve/eval`, `solve/checkpoint` in [`drive`]); `Observer` is a thin
+/// progress adapter on top — the testbed heartbeat emits structured
+/// `obs` events from [`Observer::on_eval`] rather than keeping a
+/// parallel timing mechanism. [`Solver::run`] plugs in [`NullObserver`]
+/// so existing call sites pay nothing.
 ///
 /// Both hooks default to no-ops, so observers implement only what they
 /// watch.
@@ -104,7 +109,10 @@ pub trait Solver {
     ) -> anyhow::Result<SolveReport> {
         let name = self.name();
         let t_init = std::time::Instant::now();
-        let mut state = self.init(backend, problem, budget)?;
+        let mut state = {
+            let _sp = crate::obs::span("solve/init");
+            self.init(backend, problem, budget)?
+        };
         // Setup time (preconditioners, eigensystems, sketches) counts
         // against the wall budget, exactly as when it lived inside the
         // old monolithic loops.

@@ -195,6 +195,7 @@ impl Solver for PcgSolver {
         let t0 = Instant::now();
 
         // --- preconditioner setup (counted against the budget) ----------
+        let sp_pre = crate::obs::span("precond");
         let mut starved = false;
         let precond = match self.cfg.precond {
             PcgPrecond::Rpc => {
@@ -214,6 +215,7 @@ impl Solver for PcgSolver {
             }
             PcgPrecond::None => None,
         };
+        drop(sp_pre);
 
         // --- CG state: w = 0, r = y, z = P^{-1} r, p = z ----------------
         let y = &problem.train.y;

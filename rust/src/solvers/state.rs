@@ -237,7 +237,10 @@ pub fn drive(
         if budget.exhausted(state.iters(), el()) {
             break;
         }
-        let out = state.step()?;
+        let out = {
+            let _sp = crate::obs::span("solve/step");
+            state.step()?
+        };
         match out {
             StepOutcome::Abort => break,
             StepOutcome::Diverged => {
@@ -251,10 +254,12 @@ pub fn drive(
         // if the eval below detects divergence (a resumed run then
         // re-diverges identically — the checkpoint is still honest).
         if policy.checkpoint_every > 0 && state.iters() % policy.checkpoint_every == 0 {
+            let _sp = crate::obs::span("solve/checkpoint");
             state.checkpoint(el()).save(&policy.checkpoint_path)?;
         }
         let mut stop = out == StepOutcome::Done;
         if stop || state.iters() % eval_stride == 0 || budget.exhausted(state.iters(), el()) {
+            let _sp = crate::obs::span("solve/eval");
             let w = state.weights();
             if looks_diverged(&w) {
                 diverged = true;
@@ -274,6 +279,7 @@ pub fn drive(
     // in fact completed (e.g. a testbed --resume rerun over finished
     // tasks). One eval at the restored iterate keeps reports honest.
     if trace.points.is_empty() && state.iters() > 0 && !diverged {
+        let _sp = crate::obs::span("solve/eval");
         let w = state.weights();
         if looks_diverged(&w) {
             diverged = true;

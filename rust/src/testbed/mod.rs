@@ -72,6 +72,10 @@ pub struct TestbedConfig {
     pub checkpoint_every: usize,
     /// Resume each (task, solver) run from its checkpoint if present.
     pub resume: bool,
+    /// Print the per-(task, solver) phase-breakdown table on exit
+    /// (`--profile`). Phase collection itself is always on — records
+    /// carry their [`crate::obs`] profile either way.
+    pub profile: bool,
 }
 
 impl Default for TestbedConfig {
@@ -92,6 +96,7 @@ impl Default for TestbedConfig {
             checkpoint_dir: String::new(),
             checkpoint_every: 0,
             resume: false,
+            profile: false,
         }
     }
 }
@@ -162,6 +167,9 @@ impl TestbedConfig {
         }
         if let Some(d) = root.opt_field("resume")? {
             c.resume = d.bool()?;
+        }
+        if let Some(d) = root.opt_field("profile")? {
+            c.profile = d.bool()?;
         }
         Ok(c)
     }

@@ -169,6 +169,52 @@ pub fn profile_table(records: &[RunRecord]) -> fmt::Table {
     table
 }
 
+/// Per-(task, solver) phase breakdown from the records' [`crate::obs`]
+/// profiles: where each run's wall clock went (setup, stepping, evals,
+/// checkpoints) and the matvec throughput the host backend sustained.
+/// Runs without a profile (failed setups, older records) are skipped.
+pub fn phase_table(records: &[RunRecord]) -> fmt::Table {
+    let mut table = fmt::Table::new(&[
+        "task",
+        "solver",
+        "setup",
+        "step",
+        "eval",
+        "checkpoint",
+        "matvec GFLOP/s",
+    ]);
+    for r in records.iter().filter(|r| !r.profile.is_empty()) {
+        let find = |p: &str| {
+            r.profile.iter().find(|(path, _)| path == p).map(|(_, st)| *st).unwrap_or_default()
+        };
+        let secs = |p: &str| {
+            let st = find(p);
+            if st.count > 0 { fmt::duration(st.secs) } else { "-".into() }
+        };
+        // Matvec spans land at the root from backend worker threads, but
+        // nest under the calling phase when the backend runs the span
+        // inline (one worker) — merge every occurrence.
+        let mv = r
+            .profile
+            .iter()
+            .filter(|(p, _)| p == "host/matvec" || p.ends_with("/host/matvec"))
+            .fold(crate::obs::PhaseStat::default(), |mut acc, (_, st)| {
+                acc.merge(st);
+                acc
+            });
+        table.row(vec![
+            r.task.clone(),
+            r.solver.clone(),
+            secs("solve/init"),
+            secs("solve/step"),
+            secs("solve/eval"),
+            secs("solve/checkpoint"),
+            if mv.flops > 0.0 { format!("{:.2}", mv.gflops()) } else { "-".into() },
+        ]);
+    }
+    table
+}
+
 /// Format a metric/axis value compactly: plain decimals in the human
 /// range, scientific outside it, `-` for non-finite.
 pub fn fmt_metric(v: f64) -> String {
@@ -346,6 +392,20 @@ pub fn render_report(outcome: &TestbedOutcome, cfg: &TestbedConfig) -> String {
     md.push_str(&profile_table(records).render());
     md.push('\n');
 
+    // --- phase breakdown (obs spans) --------------------------------------
+    if records.iter().any(|r| !r.profile.is_empty()) {
+        md.push_str("## Phase breakdown\n\n");
+        md.push_str(
+            "Where each run spent its wall clock, from the `obs` span registry \
+             (`docs/OBSERVABILITY.md`): solver setup (preconditioners, \
+             eigensystems), the iteration loop, test-metric evals, and \
+             checkpoint writes, plus the kernel-matvec throughput the host \
+             backend sustained during the run.\n\n",
+        );
+        md.push_str(&phase_table(records).render());
+        md.push('\n');
+    }
+
     // --- per-domain task sections ----------------------------------------
     for &domain in DOMAINS {
         let domain_records: Vec<&RunRecord> =
@@ -495,6 +555,7 @@ mod tests {
             diverged,
             error: None,
             trace,
+            profile: Vec::new(),
         }
     }
 
@@ -576,6 +637,52 @@ mod tests {
         assert!(md.contains("A = askotch"));
         // the Fig. 8 domain section hosts taxi_like
         assert!(md.contains("paper Fig. 8"));
+    }
+
+    #[test]
+    fn phase_breakdown_renders_only_with_profiles() {
+        use crate::obs::PhaseStat;
+        let mut records = sample_records();
+        let outcome = TestbedOutcome {
+            records: records.clone(),
+            tasks: 2,
+            jobs: 1,
+            job_threads: 1,
+            wall_secs: 1.0,
+        };
+        let cfg = TestbedConfig::default();
+        // no profiles anywhere -> no section
+        assert!(!render_report(&outcome, &cfg).contains("## Phase breakdown"));
+
+        records[0].profile = vec![
+            ("solve/init".into(), PhaseStat { count: 1, secs: 0.5, flops: 0.0, bytes: 0.0 }),
+            ("solve/step".into(), PhaseStat { count: 20, secs: 1.2, flops: 0.0, bytes: 0.0 }),
+            ("host/matvec".into(), PhaseStat { count: 40, secs: 1.0, flops: 2e9, bytes: 0.0 }),
+        ];
+        let outcome = TestbedOutcome { records, tasks: 2, jobs: 1, job_threads: 1, wall_secs: 1.0 };
+        let md = render_report(&outcome, &cfg);
+        assert!(md.contains("## Phase breakdown"));
+        let table = phase_table(&outcome.records).render();
+        // one row: only the profiled record appears
+        assert_eq!(table.matches("taxi_like").count(), 1);
+        assert!(table.contains("2.00"), "matvec GFLOP/s column, got:\n{table}");
+        // unmeasured checkpoint phase shows as '-'
+        assert!(table.contains('-'));
+    }
+
+    #[test]
+    fn run_record_json_carries_profile() {
+        use crate::json::ToJson;
+        use crate::obs::PhaseStat;
+        let mut r = sample_records().remove(0);
+        r.profile =
+            vec![("solve/step".into(), PhaseStat { count: 2, secs: 0.1, flops: 8.0, bytes: 16.0 })];
+        let j = r.to_json();
+        let prof = j.get("profile").unwrap().as_arr().unwrap();
+        assert_eq!(prof.len(), 1);
+        assert_eq!(prof[0].get("phase").and_then(Json::as_str), Some("solve/step"));
+        assert_eq!(prof[0].get("secs").and_then(Json::as_f64), Some(0.1));
+        assert!(crate::json::parse(&j.to_string()).is_ok());
     }
 
     #[test]

@@ -12,7 +12,6 @@ use crate::data::{synthetic, Dataset, TaskKind};
 use crate::json::{Json, ToJson};
 use crate::metrics::{Trace, TracePoint};
 use crate::solvers::{drive, Checkpoint, DrivePolicy, Observer, Solver};
-use crate::util::fmt;
 use std::sync::Mutex;
 use std::time::Instant;
 
@@ -50,6 +49,10 @@ pub struct RunRecord {
     /// The solver returned an error (e.g. Cholesky past its size cap).
     pub error: Option<String>,
     pub trace: Trace,
+    /// Per-phase wall/flop breakdown from the run's [`crate::obs`]
+    /// domain (`solve/init`, `solve/step`, `host/matvec`, ...). Empty
+    /// for failed runs.
+    pub profile: Vec<(String, crate::obs::PhaseStat)>,
 }
 
 impl RunRecord {
@@ -58,6 +61,7 @@ impl RunRecord {
         problem: &KrrProblem,
         family: SolverKind,
         r: SolveReport,
+        profile: Vec<(String, crate::obs::PhaseStat)>,
     ) -> Self {
         RunRecord {
             task: meta.name.clone(),
@@ -80,6 +84,7 @@ impl RunRecord {
             diverged: r.diverged,
             error: None,
             trace: r.trace,
+            profile,
         }
     }
 
@@ -113,6 +118,7 @@ impl RunRecord {
             diverged: false,
             error: Some(err),
             trace: Trace::default(),
+            profile: Vec::new(),
         }
     }
 
@@ -154,6 +160,7 @@ impl ToJson for RunRecord {
                 },
             ),
             ("trace", self.trace.to_json()),
+            ("profile", crate::obs::profile_json(&self.profile)),
         ])
     }
 }
@@ -192,24 +199,27 @@ struct TaskMeta {
     lam_unscaled: f64,
 }
 
-/// Heartbeat observer: optional live eval lines for one run.
-struct Heartbeat<'a> {
+/// Heartbeat observer: optional live eval events for one run. Emission
+/// goes through `obs`, so `--quiet` / `--log` apply uniformly and lines
+/// from concurrent workers never interleave mid-record.
+struct Heartbeat {
     label: String,
     metric_name: &'static str,
-    echo: Option<&'a Mutex<()>>,
+    echo: bool,
 }
 
-impl Observer for Heartbeat<'_> {
+impl Observer for Heartbeat {
     fn on_eval(&mut self, p: &TracePoint) {
-        if let Some(lock) = self.echo {
-            let _guard = lock.lock().unwrap();
-            eprintln!(
-                "    {} iter={:6} t={:>8} {}={:.4}",
-                self.label,
-                p.iter,
-                fmt::duration(p.secs),
-                self.metric_name,
-                p.metric
+        if self.echo {
+            crate::obs::info_kv(
+                "testbed",
+                "eval",
+                &[
+                    ("run", Json::str(&self.label)),
+                    ("iter", Json::num(p.iter as f64)),
+                    ("secs", Json::num(p.secs)),
+                    (self.metric_name, Json::num(p.metric)),
+                ],
             );
         }
     }
@@ -261,7 +271,6 @@ pub fn run(cfg: &TestbedConfig) -> anyhow::Result<TestbedOutcome> {
     let queue: Mutex<Vec<(usize, Dataset)>> =
         Mutex::new(tasks.into_iter().enumerate().rev().collect());
     let results: Mutex<Vec<(usize, Vec<RunRecord>)>> = Mutex::new(Vec::with_capacity(total));
-    let echo_lock = Mutex::new(());
 
     std::thread::scope(|s| {
         for _ in 0..jobs {
@@ -270,7 +279,7 @@ pub fn run(cfg: &TestbedConfig) -> anyhow::Result<TestbedOutcome> {
                 loop {
                     let next = queue.lock().unwrap().pop();
                     let Some((index, ds)) = next else { break };
-                    let records = run_task(cfg, &backend, ds, &echo_lock, index, total);
+                    let records = run_task(cfg, &backend, ds, index, total);
                     results.lock().unwrap().push((index, records));
                 }
             });
@@ -295,7 +304,6 @@ fn run_task(
     cfg: &TestbedConfig,
     backend: &HostBackend,
     ds: Dataset,
-    echo_lock: &Mutex<()>,
     index: usize,
     total: usize,
 ) -> Vec<RunRecord> {
@@ -336,31 +344,37 @@ fn run_task(
         let mut heartbeat = Heartbeat {
             label: format!("{}/{}", meta.name, kind.name()),
             metric_name: meta.kind.metric_name(),
-            echo: cfg.echo_evals.then_some(echo_lock),
+            echo: cfg.echo_evals,
         };
-        let record =
-            match run_one(cfg, solver.as_ref(), backend, &problem, &budget, kind, &mut heartbeat)
-            {
-                Ok(r) => RunRecord::from_report(&meta, &problem, kind, r),
-                Err(e) => RunRecord::failed(&meta, Some(&problem), kind, e.to_string()),
-            };
-        {
-            let _guard = echo_lock.lock().unwrap();
-            let status = if let Some(e) = &record.error {
-                format!("ERROR: {e}")
-            } else if record.diverged {
-                "DIVERGED".into()
-            } else {
-                format!("{}={:.4}", record.task_kind.metric_name(), record.final_metric)
-            };
-            eprintln!(
-                "[{:2}/{total}] {:22} {:10} {:5} iters  {:>8}  {status}",
-                index + 1,
-                record.task,
-                kind.name(),
-                record.iters,
-                fmt::duration(record.wall_secs),
-            );
+        // Each run records into its own obs domain so concurrent task
+        // workers never tear each other's phase numbers; the backend's
+        // scoped worker threads inherit the domain and join before the
+        // run returns, so extraction below is race-free.
+        let dom = crate::obs::next_domain();
+        let result = {
+            let _g = crate::obs::enter_domain(dom);
+            run_one(cfg, solver.as_ref(), backend, &problem, &budget, kind, &mut heartbeat)
+        };
+        let profile = crate::obs::take_domain(dom);
+        let record = match result {
+            Ok(r) => RunRecord::from_report(&meta, &problem, kind, r, profile),
+            Err(e) => RunRecord::failed(&meta, Some(&problem), kind, e.to_string()),
+        };
+        let mut fields = vec![
+            ("progress", Json::str(&format!("{}/{total}", index + 1))),
+            ("task", Json::str(&record.task)),
+            ("solver", Json::str(kind.name())),
+            ("iters", Json::num(record.iters as f64)),
+            ("wall_secs", Json::num(record.wall_secs)),
+        ];
+        if let Some(e) = &record.error {
+            fields.push(("error", Json::str(e)));
+            crate::obs::warn_kv("testbed", "run failed", &fields);
+        } else if record.diverged {
+            crate::obs::warn_kv("testbed", "run diverged", &fields);
+        } else {
+            fields.push((record.task_kind.metric_name(), Json::num(record.final_metric)));
+            crate::obs::info_kv("testbed", "run complete", &fields);
         }
         out.push(record);
     }
@@ -392,7 +406,10 @@ fn run_one(
             format!("{}/{}_{}", cfg.checkpoint_dir, problem.name, kind.name());
     }
     let t_init = Instant::now();
-    let mut state = solver.init(backend, problem, budget)?;
+    let mut state = {
+        let _sp = crate::obs::span("solve/init");
+        solver.init(backend, problem, budget)?
+    };
     policy.base_secs = t_init.elapsed().as_secs_f64();
     if cfg.resume && !policy.checkpoint_path.is_empty() {
         let manifest = std::path::Path::new(&policy.checkpoint_path)
