@@ -724,23 +724,30 @@ fn host_kernel_assembly(_backend: &dyn Backend, scale: usize) -> anyhow::Result<
 // ---------------------------------------------------------------------------
 
 /// Times `K(X1, X2) v` — the product behind SAP block gradients, CG
-/// iterations, and serving — three ways at testbed-scale shapes
+/// iterations, and serving — four ways at testbed-scale shapes
 /// (n2 = 16k database rows): the single-thread scalar oracle, the
 /// parallel per-pair path (`with_fused(false)`, the pre-engine
-/// baseline), and the fused GEMM panel engine. Parity is asserted
-/// (<= 1e-8 relative) before timings count. Results also land in
-/// `BENCH_KERNELS.json` (via the in-house `json/` subsystem) so the
-/// perf trajectory is tracked across PRs; CI prints this exhibit as a
-/// non-gating throughput smoke.
+/// baseline), the fused f64 GEMM panel engine, and the mixed-precision
+/// f32 panel engine (SIMD `gemm_nt_f32` + `exp_fast32`, f64
+/// accumulation). Parity is asserted before timings count: <= 1e-8
+/// relative for the f64 arms, the documented `5e-4 * ||v||_1` matvec
+/// bar for f32. Results also land in `BENCH_KERNELS.json` (via the
+/// in-house `json/` subsystem) so the perf trajectory is tracked
+/// across PRs; CI prints this exhibit as a non-gating throughput smoke
+/// and compares the f32-vs-f64 ratio against the committed baseline.
 fn host_kernel_engine(_backend: &dyn Backend, scale: usize) -> anyhow::Result<Json> {
+    use askotch::config::Precision;
+    use askotch::kernels::fused::{F32Slab, SlabRef};
+
     let sigma = 1.3;
     let n2 = 16 * 1024 * scale;
     let par_fused = HostBackend::auto_threads();
     let par_pairs = HostBackend::auto_threads().with_fused(false);
+    let par_f32 = HostBackend::auto_threads().with_precision(Precision::F32);
     let mut rng = askotch::util::Rng::new(42);
     let mut rows = Vec::new();
     let mut table = fmt::Table::new(&[
-        "kernel", "d", "scalar(1t)", "per-pair", "fused", "fused Mpairs/s", "fused vs per-pair",
+        "kernel", "d", "scalar(1t)", "per-pair", "fused", "f32", "f32 Mpairs/s", "f32 vs f64",
     ]);
     for &d in &[9usize, 64, 784] {
         // keep the single-thread scalar arm affordable at large d
@@ -748,6 +755,10 @@ fn host_kernel_engine(_backend: &dyn Backend, scale: usize) -> anyhow::Result<Js
         let x1: Vec<f64> = (0..n1 * d).map(|_| rng.normal()).collect();
         let x2: Vec<f64> = (0..n2 * d).map(|_| rng.normal()).collect();
         let v: Vec<f64> = (0..n2).map(|_| rng.normal()).collect();
+        // Built once per problem in real solves; billed outside the
+        // per-matvec timings here for the same reason.
+        let slab = F32Slab::build(&x2, n2, d, true);
+        let v_l1: f64 = v.iter().map(|x| x.abs()).sum();
         for kernel in [KernelKind::Rbf, KernelKind::Laplacian, KernelKind::Matern52] {
             let t0 = Instant::now();
             let mut want = vec![0.0f64; n1];
@@ -769,6 +780,20 @@ fn host_kernel_engine(_backend: &dyn Backend, scale: usize) -> anyhow::Result<Js
             let fused = par_fused.kernel_matvec(kernel, &x1, n1, &x2, n2, d, &v, sigma)?;
             let t_fused = t0.elapsed().as_secs_f64();
 
+            let t0 = Instant::now();
+            let f32_got = par_f32.kernel_matvec_cached(
+                kernel,
+                &x1,
+                n1,
+                &x2,
+                n2,
+                d,
+                &v,
+                sigma,
+                SlabRef { sq: None, fp32: Some(&slab) },
+            )?;
+            let t_f32 = t0.elapsed().as_secs_f64();
+
             for (which, got) in [("per-pair", &pairs), ("fused", &fused)] {
                 for (g, w) in got.iter().zip(&want) {
                     anyhow::ensure!(
@@ -777,17 +802,27 @@ fn host_kernel_engine(_backend: &dyn Backend, scale: usize) -> anyhow::Result<Js
                     );
                 }
             }
+            let f32_tol = 5e-4 * v_l1.max(1.0);
+            for (g, w) in f32_got.iter().zip(&want) {
+                anyhow::ensure!(
+                    (g - w).abs() <= f32_tol,
+                    "f32 {kernel:?} d={d}: {g} vs {w} (tol {f32_tol:.2e})"
+                );
+            }
 
             let mpairs = (n1 * n2) as f64 / t_fused.max(1e-12) / 1e6;
+            let mpairs_f32 = (n1 * n2) as f64 / t_f32.max(1e-12) / 1e6;
             let speedup = t_pairs / t_fused.max(1e-12);
+            let speedup_f32 = t_fused / t_f32.max(1e-12);
             table.row(vec![
                 kernel.name().into(),
                 d.to_string(),
                 fmt::duration(t_scalar),
                 fmt::duration(t_pairs),
                 fmt::duration(t_fused),
-                format!("{mpairs:.0}"),
-                format!("{speedup:.1}x"),
+                fmt::duration(t_f32),
+                format!("{mpairs_f32:.0}"),
+                format!("{speedup_f32:.2}x"),
             ]);
             rows.push(Json::obj(vec![
                 ("kernel", Json::str(kernel.name())),
@@ -799,18 +834,24 @@ fn host_kernel_engine(_backend: &dyn Backend, scale: usize) -> anyhow::Result<Js
                 ("fused_secs", Json::num(t_fused)),
                 ("fused_mpairs_per_sec", Json::num(mpairs)),
                 ("speedup_fused_vs_per_pair", Json::num(speedup)),
+                ("f32_secs", Json::num(t_f32)),
+                ("f32_mpairs_per_sec", Json::num(mpairs_f32)),
+                ("speedup_f32_vs_f64", Json::num(speedup_f32)),
             ]));
         }
     }
     println!("{}", table.render());
     println!(
-        "(fused = GEMM distance algebra + cached norms + panel nonlinearity;\n\
-         per-pair = the previous engine; both on {} threads)",
+        "(fused = f64 GEMM distance algebra + cached norms + panel nonlinearity;\n\
+         f32 = SIMD gemm_nt_f32 [{}] + exp_fast32, f64 accumulation;\n\
+         per-pair = the previous engine; all on {} threads)",
+        askotch::linalg::dense::simd_isa(),
         par_fused.threads()
     );
     let summary = Json::obj(vec![
         ("exhibit", Json::str("host_kernel_engine")),
         ("threads", Json::num(par_fused.threads() as f64)),
+        ("simd_isa", Json::str(askotch::linalg::dense::simd_isa())),
         ("rows", Json::Arr(rows)),
     ]);
     std::fs::write("BENCH_KERNELS.json", summary.to_string())?;

@@ -37,7 +37,7 @@
 //! Fig. 12 comparison.
 
 use super::{accel_params, Backend, SapOptions, SapStepper};
-use crate::config::{KernelKind, RhoMode};
+use crate::config::{KernelKind, Precision, RhoMode};
 use crate::coordinator::KrrProblem;
 use crate::kernels::fused::PANEL_TARGET_BYTES;
 use crate::kernels::{self, fused};
@@ -65,6 +65,10 @@ pub struct HostBackend {
     /// keeps the per-pair scalar walk — the bench baseline and the
     /// 1e-12 near-bitwise reference arm.
     fused: bool,
+    /// Operating precision of the cached solver matvec path
+    /// ([`Backend::kernel_matvec_cached`]); exact entry points stay f64
+    /// in either mode. Never [`Precision::Auto`] after construction.
+    precision: Precision,
 }
 
 impl Default for HostBackend {
@@ -86,6 +90,7 @@ impl HostBackend {
             assembly_tile: DEFAULT_ASSEMBLY_TILE,
             predict_tile_override: None,
             fused: true,
+            precision: Precision::F64,
         }
     }
 
@@ -114,6 +119,15 @@ impl HostBackend {
     /// default). `with_fused(false)` is the pre-engine per-pair path.
     pub fn with_fused(mut self, fused: bool) -> HostBackend {
         self.fused = fused;
+        self
+    }
+
+    /// Set the operating precision of the cached solver matvec path
+    /// (`--precision`; `Auto` resolves to the host default, f64). The
+    /// exact entry points — `kernel_matvec_with_norms`, `predict`, the
+    /// eval/metric paths — compute in f64 regardless.
+    pub fn with_precision(mut self, p: Precision) -> HostBackend {
+        self.precision = if p == Precision::Auto { Precision::F64 } else { p };
         self
     }
 
@@ -281,6 +295,67 @@ impl HostBackend {
         }
     }
 
+    /// Fused f32 matvec span: the span's `x1` rows are narrowed once
+    /// into a span-local [`fused::F32Slab`] (the same narrowing + norm
+    /// path as the cached train slab, so shared rows match it
+    /// bit-for-bit), panels run through [`fused::kernel_panel_f32`],
+    /// and the GEMV accumulation stays f64. Every per-row result
+    /// depends only on that row's own data, so output is bit-identical
+    /// for any thread count.
+    #[allow(clippy::too_many_arguments)]
+    fn fused_matvec_span_f32(
+        &self,
+        kernel: KernelKind,
+        x1: &[f64],
+        row0: usize,
+        x2f: &fused::F32Slab,
+        n2: usize,
+        d: usize,
+        v: &[f64],
+        sigma: f64,
+        out: &mut [f64],
+    ) {
+        let nc = fused::panel_cols(d);
+        let span = out.len();
+        let x1f = fused::F32Slab::build(
+            &x1[row0 * d..(row0 + span) * d],
+            span,
+            d,
+            fused::uses_norms(kernel),
+        );
+        let mut scratch = fused::PanelScratch::default();
+        let mut panel = vec![0.0f64; fused::ROW_CHUNK.min(span) * nc.min(n2)];
+        let mut r0 = 0;
+        while r0 < span {
+            let m = (span - r0).min(fused::ROW_CHUNK);
+            let a = &x1f.x[r0 * d..(r0 + m) * d];
+            let mut j0 = 0;
+            while j0 < n2 {
+                let w = (n2 - j0).min(nc);
+                fused::kernel_panel_f32(
+                    kernel,
+                    a,
+                    m,
+                    fused::norm_slice(&x1f.sq, r0, r0 + m),
+                    &x2f.x[j0 * d..(j0 + w) * d],
+                    w,
+                    fused::norm_slice(&x2f.sq, j0, j0 + w),
+                    d,
+                    sigma,
+                    &mut panel,
+                    w,
+                    &mut scratch,
+                );
+                for r in 0..m {
+                    out[r0 + r] += dense::dot(&panel[r * w..r * w + w], &v[j0..j0 + w]);
+                }
+                crate::obs::add_flops(2.0 * (m * w) as f64);
+                j0 += w;
+            }
+            r0 += m;
+        }
+    }
+
     /// Deterministic parallel standard-normal slab: one RNG stream per
     /// `RNG_CHUNK`-element chunk, streams dealt round-robin to the
     /// workers. Identical output for any thread count.
@@ -310,6 +385,44 @@ impl HostBackend {
     }
 }
 
+/// Minimum rows before [`par_sq_norms`] spins up workers: below this
+/// the O(nd) norm pass is cheap enough that thread setup dominates.
+const PAR_NORMS_MIN_ROWS: usize = 4096;
+
+/// [`fused::sq_norms`] through a scoped worker pool for large slabs,
+/// with the pass's flops/bytes credited to the open obs span
+/// (`threads == 0` resolves to the machine's available parallelism).
+/// Each output element is one independent per-row dot, so the result
+/// is bit-identical to the serial pass for any thread count.
+pub fn par_sq_norms(x: &[f64], n: usize, d: usize, threads: usize) -> Vec<f64> {
+    let threads = if threads == 0 {
+        std::thread::available_parallelism().map(|t| t.get()).unwrap_or(1)
+    } else {
+        threads
+    };
+    crate::obs::add_flops(2.0 * (n * d) as f64);
+    crate::obs::add_bytes(8.0 * (n * d + n) as f64);
+    if threads <= 1 || n < PAR_NORMS_MIN_ROWS {
+        return fused::sq_norms(x, n, d);
+    }
+    let mut out = vec![0.0f64; n];
+    let rows = n.div_ceil(threads);
+    let dom = crate::obs::current_domain();
+    std::thread::scope(|s| {
+        for (t, chunk) in out.chunks_mut(rows).enumerate() {
+            s.spawn(move || {
+                crate::obs::set_domain(dom);
+                let row0 = t * rows;
+                for (k, o) in chunk.iter_mut().enumerate() {
+                    let r = &x[(row0 + k) * d..(row0 + k + 1) * d];
+                    *o = dense::dot(r, r);
+                }
+            });
+        }
+    });
+    out
+}
+
 fn fill_normal_chunk(seed: u64, chunk_id: usize, out: &mut [f64]) {
     let stream = seed ^ (chunk_id as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
     let mut rng = Rng::new(stream);
@@ -324,7 +437,13 @@ impl Backend for HostBackend {
     }
 
     fn exact_arithmetic(&self) -> bool {
-        true // every product runs in f64
+        // Under `--precision f32` the cached solver path computes f32
+        // panels, so residual checks must fall back to an exact oracle.
+        self.precision == Precision::F64
+    }
+
+    fn precision(&self) -> Precision {
+        self.precision
     }
 
     fn kernel_matvec(
@@ -383,7 +502,7 @@ impl Backend for HostBackend {
                     cached
                 }
                 None => {
-                    owned_norms = fused::sq_norms(x2, n2, d);
+                    owned_norms = par_sq_norms(x2, n2, d, self.threads);
                     &owned_norms
                 }
             }
@@ -392,6 +511,47 @@ impl Backend for HostBackend {
         };
         self.par_rows(n1, &mut out, |row0, chunk| {
             self.fused_matvec_span(kernel, x1, row0, x2, n2, d, v, sigma, x2sq, chunk);
+        });
+        Ok(out)
+    }
+
+    fn kernel_matvec_cached(
+        &self,
+        kernel: KernelKind,
+        x1: &[f64],
+        n1: usize,
+        x2: &[f64],
+        n2: usize,
+        d: usize,
+        v: &[f64],
+        sigma: f64,
+        slab: fused::SlabRef<'_>,
+    ) -> anyhow::Result<Vec<f64>> {
+        let x2f = match slab.fp32 {
+            Some(f) if self.precision == Precision::F32 && self.fused => f,
+            // f64 mode (or no f32 slab cached): the exact norms path,
+            // bit-identical to pre-precision builds.
+            _ => return self.kernel_matvec_with_norms(kernel, x1, n1, x2, n2, d, v, sigma, slab.sq),
+        };
+        anyhow::ensure!(v.len() == n2, "matvec length mismatch: {} vs {n2}", v.len());
+        debug_assert_eq!(x2f.rows(d), n2, "f32 slab rows mismatch");
+        let mut out = vec![0.0f64; n1];
+        if n1 == 0 || n2 == 0 {
+            return Ok(out);
+        }
+        // The sparse pre-scan keeps routing mostly-zero `v` (early SAP
+        // iterates) through the exact gathered walk — faster than any
+        // dense panel and strictly more accurate.
+        let nnz = v.iter().filter(|&&vj| vj != 0.0).count();
+        if nnz * kernels::SPARSE_DENSITY < n2 {
+            let nz: Vec<usize> = (0..n2).filter(|&j| v[j] != 0.0).collect();
+            self.par_rows(n1, &mut out, |row0, chunk| {
+                self.sparse_matvec_span(kernel, x1, row0, x2, d, v, &nz, sigma, chunk);
+            });
+            return Ok(out);
+        }
+        self.par_rows(n1, &mut out, |row0, chunk| {
+            self.fused_matvec_span_f32(kernel, x1, row0, x2f, n2, d, v, sigma, chunk);
         });
         Ok(out)
     }
@@ -412,7 +572,7 @@ impl Backend for HostBackend {
         }
         // x2 norms once for every span; x1 norms per span below.
         let x2sq = if self.fused && fused::uses_norms(kernel) {
-            fused::sq_norms(x2, n2, d)
+            par_sq_norms(x2, n2, d, self.threads)
         } else {
             Vec::new()
         };
@@ -671,26 +831,43 @@ impl<'a> HostSapStepper<'a> {
     }
 
     /// `(K_lambda)_{B:} z - y_B`: the O(nb) hot product, through the
-    /// fused panel matvec with the problem's cached train-slab norms.
+    /// cached panel matvec (f32 panels under `--precision f32`).
+    /// `exact` forces the full-f64 norms path — the refinement arm
+    /// ([`SapStepper::step_refined`]).
     fn block_gradient(
         &self,
         xb: &[f64],
         idx: &[usize],
         zfull: &[f64],
         zb: &[f64],
+        exact: bool,
     ) -> anyhow::Result<Vec<f64>> {
         let p = self.problem;
-        let kz = self.backend.kernel_matvec_with_norms(
-            p.kernel,
-            xb,
-            idx.len(),
-            &p.train.x,
-            p.n(),
-            p.d(),
-            zfull,
-            p.sigma,
-            Some(&p.train_sq_norms),
-        )?;
+        let kz = if exact {
+            self.backend.kernel_matvec_with_norms(
+                p.kernel,
+                xb,
+                idx.len(),
+                &p.train.x,
+                p.n(),
+                p.d(),
+                zfull,
+                p.sigma,
+                Some(&p.train_sq_norms),
+            )?
+        } else {
+            self.backend.kernel_matvec_cached(
+                p.kernel,
+                xb,
+                idx.len(),
+                &p.train.x,
+                p.n(),
+                p.d(),
+                zfull,
+                p.sigma,
+                p.train_slab(),
+            )?
+        };
         Ok((0..idx.len()).map(|k| kz[k] + p.lam * zb[k] - p.train.y[idx[k]]).collect())
     }
 }
@@ -701,6 +878,61 @@ impl SapStepper for HostSapStepper<'_> {
     }
 
     fn step(&mut self, idx: &[usize]) -> anyhow::Result<()> {
+        self.step_inner(idx, false)
+    }
+
+    fn step_refined(&mut self, idx: &[usize]) -> anyhow::Result<()> {
+        // Iterative refinement: identical step, block gradient in
+        // exact f64. Under f64 precision it is the plain step.
+        self.step_inner(idx, true)
+    }
+
+    fn weights(&self) -> Vec<f64> {
+        self.w.clone()
+    }
+
+    fn state_bytes(&self) -> usize {
+        let n = self.problem.n();
+        let iterates = (if self.accelerated { 3 } else { 1 }) * n * 8;
+        let sketch = self.b * self.r * 8 + self.b * 8;
+        // Reused per-step scratch: xb gather + zb + pv0.
+        let scratch = self.b * (self.problem.d() + 2) * 8;
+        iterates + sketch + scratch
+    }
+
+    fn export_state(&self, ck: &mut Checkpoint) {
+        // Precision tag: a checkpoint from the f32 PJRT stepper must
+        // not silently resume here (bit-for-bit would be broken). The
+        // host iterate state is f64 even under `--precision f32`.
+        ck.push_scalar("sap_precision", 64.0);
+        ck.push_rng("sap_rng", self.rng.state());
+        ck.push_vec("w", self.w.clone());
+        if self.accelerated {
+            ck.push_vec("v", self.v.clone());
+            ck.push_vec("z", self.z.clone());
+        }
+    }
+
+    fn import_state(&mut self, ck: &Checkpoint) -> anyhow::Result<()> {
+        let prec = ck.scalar("sap_precision")?;
+        anyhow::ensure!(
+            prec == 64.0,
+            "checkpoint was taken on a {prec}-bit SAP stepper; this is the 64-bit host \
+             stepper — resume on the original backend"
+        );
+        let n = self.problem.n();
+        self.rng = Rng::from_state(ck.rng("sap_rng")?);
+        self.w = ck.vec("w", n)?.to_vec();
+        if self.accelerated {
+            self.v = ck.vec("v", n)?.to_vec();
+            self.z = ck.vec("z", n)?.to_vec();
+        }
+        Ok(())
+    }
+}
+
+impl HostSapStepper<'_> {
+    fn step_inner(&mut self, idx: &[usize], exact: bool) -> anyhow::Result<()> {
         let p = self.problem;
         let (d, lam) = (p.d(), p.lam);
         let b = idx.len();
@@ -754,7 +986,7 @@ impl SapStepper for HostSapStepper<'_> {
             drop(sp_pre);
             let g_b = {
                 let _sp = crate::obs::span("grad");
-                self.block_gradient(&xb, idx, zfull, &zb)?
+                self.block_gradient(&xb, idx, zfull, &zb, exact)?
             };
             g_b.into_iter().map(|g| g / l_pb).collect::<Vec<f64>>()
         } else {
@@ -797,7 +1029,7 @@ impl SapStepper for HostSapStepper<'_> {
 
             let g_b = {
                 let _sp = crate::obs::span("grad");
-                self.block_gradient(&xb, idx, zfull, &zb)?
+                self.block_gradient(&xb, idx, zfull, &zb, exact)?
             };
             let d_b = wb.apply(&g_b);
             d_b.into_iter().map(|g| g / l_pb).collect()
@@ -836,48 +1068,6 @@ impl SapStepper for HostSapStepper<'_> {
         self.scratch.xb = xb;
         self.scratch.zb = zb;
         self.scratch.pv0 = pv0;
-        Ok(())
-    }
-
-    fn weights(&self) -> Vec<f64> {
-        self.w.clone()
-    }
-
-    fn state_bytes(&self) -> usize {
-        let n = self.problem.n();
-        let iterates = (if self.accelerated { 3 } else { 1 }) * n * 8;
-        let sketch = self.b * self.r * 8 + self.b * 8;
-        // Reused per-step scratch: xb gather + zb + pv0.
-        let scratch = self.b * (self.problem.d() + 2) * 8;
-        iterates + sketch + scratch
-    }
-
-    fn export_state(&self, ck: &mut Checkpoint) {
-        // Precision tag: a checkpoint from the f32 PJRT stepper must
-        // not silently resume here (bit-for-bit would be broken).
-        ck.push_scalar("sap_precision", 64.0);
-        ck.push_rng("sap_rng", self.rng.state());
-        ck.push_vec("w", self.w.clone());
-        if self.accelerated {
-            ck.push_vec("v", self.v.clone());
-            ck.push_vec("z", self.z.clone());
-        }
-    }
-
-    fn import_state(&mut self, ck: &Checkpoint) -> anyhow::Result<()> {
-        let prec = ck.scalar("sap_precision")?;
-        anyhow::ensure!(
-            prec == 64.0,
-            "checkpoint was taken on a {prec}-bit SAP stepper; this is the 64-bit host \
-             stepper — resume on the original backend"
-        );
-        let n = self.problem.n();
-        self.rng = Rng::from_state(ck.rng("sap_rng")?);
-        self.w = ck.vec("w", n)?.to_vec();
-        if self.accelerated {
-            self.v = ck.vec("v", n)?.to_vec();
-            self.z = ck.vec("z", n)?.to_vec();
-        }
         Ok(())
     }
 }
@@ -1106,6 +1296,100 @@ mod tests {
         let b = nystrom_b_factor(&k, omega).unwrap();
         let rec = b.matmul(&b.t());
         assert!(rec.max_abs_diff(&k) < 1e-6, "diff {}", rec.max_abs_diff(&k));
+    }
+
+    /// Build the `SlabRef` cache bundle a problem would carry for `x2`.
+    fn f32_bundle(x2: &[f64], n2: usize, d: usize, kind: KernelKind) -> (Vec<f64>, fused::F32Slab) {
+        (fused::sq_norms(x2, n2, d), fused::F32Slab::build(x2, n2, d, fused::uses_norms(kind)))
+    }
+
+    #[test]
+    fn cached_f32_matvec_tracks_exact_within_the_f32_bar() {
+        let (n1, n2, d) = (9, 140, 7);
+        let x1 = slab(n1, d, 51);
+        let x2 = slab(n2, d, 52);
+        let v = slab(n2, 1, 53);
+        // Per-entry bar is 5e-4 * max(1, |K|); a matvec row sums n2
+        // entries weighted by v, so the sound bound is 5e-4 * ||v||_1.
+        let tol = 5e-4 * v.iter().map(|x| x.abs()).sum::<f64>();
+        for kind in ALL {
+            let (sq, f32slab) = f32_bundle(&x2, n2, d, kind);
+            let cache = fused::SlabRef { sq: Some(&sq), fp32: Some(&f32slab) };
+            let want = HostBackend::new(2).kernel_matvec(kind, &x1, n1, &x2, n2, d, &v, 1.1).unwrap();
+            let got = HostBackend::new(2)
+                .with_precision(Precision::F32)
+                .kernel_matvec_cached(kind, &x1, n1, &x2, n2, d, &v, 1.1, cache)
+                .unwrap();
+            for (g, w) in got.iter().zip(&want) {
+                assert!((g - w).abs() <= tol, "{kind:?}: {g} vs {w} (tol {tol})");
+            }
+        }
+    }
+
+    #[test]
+    fn cached_f32_matvec_is_thread_count_invariant() {
+        let (n1, n2, d) = (37, 160, 5);
+        let x1 = slab(n1, d, 54);
+        let x2 = slab(n2, d, 55);
+        let v = slab(n2, 1, 56);
+        for kind in ALL {
+            let (sq, f32slab) = f32_bundle(&x2, n2, d, kind);
+            let cache = fused::SlabRef { sq: Some(&sq), fp32: Some(&f32slab) };
+            let want = HostBackend::new(1)
+                .with_precision(Precision::F32)
+                .kernel_matvec_cached(kind, &x1, n1, &x2, n2, d, &v, 0.9, cache)
+                .unwrap();
+            for threads in [2usize, 3, 5] {
+                let got = HostBackend::new(threads)
+                    .with_precision(Precision::F32)
+                    .kernel_matvec_cached(kind, &x1, n1, &x2, n2, d, &v, 0.9, cache)
+                    .unwrap();
+                for (g, w) in got.iter().zip(&want) {
+                    assert_eq!(g.to_bits(), w.to_bits(), "{kind:?} t={threads}: {g} vs {w}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn cached_matvec_without_f32_slab_is_bitwise_the_norms_path() {
+        // f64 mode ignores the fp32 slot entirely: the cached entry
+        // point must stay bit-identical to kernel_matvec_with_norms.
+        let (n1, n2, d) = (11, 90, 4);
+        let x1 = slab(n1, d, 57);
+        let x2 = slab(n2, d, 58);
+        let v = slab(n2, 1, 59);
+        let sq = fused::sq_norms(&x2, n2, d);
+        let b = HostBackend::new(3);
+        let want = b
+            .kernel_matvec_with_norms(KernelKind::Rbf, &x1, n1, &x2, n2, d, &v, 1.0, Some(&sq))
+            .unwrap();
+        let got = b
+            .kernel_matvec_cached(
+                KernelKind::Rbf,
+                &x1,
+                n1,
+                &x2,
+                n2,
+                d,
+                &v,
+                1.0,
+                fused::SlabRef::norms(Some(&sq)),
+            )
+            .unwrap();
+        for (g, w) in got.iter().zip(&want) {
+            assert_eq!(g.to_bits(), w.to_bits());
+        }
+    }
+
+    #[test]
+    fn par_sq_norms_matches_serial_for_any_thread_count() {
+        let n = PAR_NORMS_MIN_ROWS + 37; // past the serial threshold
+        let x = slab(n, 3, 61);
+        let want = fused::sq_norms(&x, n, 3);
+        for threads in [0usize, 1, 2, 5] {
+            assert_eq!(par_sq_norms(&x, n, 3, threads), want, "threads {threads}");
+        }
     }
 
     #[test]

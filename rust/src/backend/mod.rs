@@ -20,9 +20,10 @@
 //! `docs/BACKENDS.md` documents the trait surface, how to add a third
 //! backend, and the host-vs-PJRT tradeoffs.
 
-use crate::config::{BackendKind, KernelKind, RhoMode};
+use crate::config::{BackendKind, KernelKind, Precision, RhoMode};
 use crate::coordinator::KrrProblem;
 use crate::kernels;
+use crate::kernels::fused::SlabRef;
 use crate::linalg::Mat;
 use crate::solvers::state::Checkpoint;
 
@@ -60,6 +61,15 @@ pub trait SapStepper {
     /// One SAP iteration on the sampled coordinate block `idx`
     /// (`idx.len() == block_size()`, duplicates allowed — ARLS pads).
     fn step(&mut self, idx: &[usize]) -> anyhow::Result<()>;
+
+    /// One SAP iteration whose block gradient is evaluated in exact
+    /// f64 regardless of the backend's operating precision — the
+    /// iterative-refinement hook ([`crate::solvers::state::drive`]
+    /// calls it at the refinement cadence under `--precision f32`).
+    /// Steppers that always compute exactly just step.
+    fn step_refined(&mut self, idx: &[usize]) -> anyhow::Result<()> {
+        self.step(idx)
+    }
 
     /// Current full-KRR weights in f64 (length n).
     fn weights(&self) -> Vec<f64>;
@@ -157,6 +167,37 @@ pub trait Backend {
         kernels::block(kernel, x, d, idx, sigma)
     }
 
+    /// The arithmetic precision of the *hot* kernel matvec path
+    /// ([`Backend::kernel_matvec_cached`]). Exact-f64 entry points
+    /// ([`Backend::kernel_matvec_with_norms`], [`Backend::predict`])
+    /// keep full f64 semantics in every mode; `F32` only changes what
+    /// the cached/solver path computes in. Never `Auto`.
+    fn precision(&self) -> Precision {
+        Precision::F64
+    }
+
+    /// [`Backend::kernel_matvec_with_norms`] with a per-problem cache
+    /// bundle ([`SlabRef`]): precomputed f64 norms and, when the backend
+    /// runs at [`Precision::F32`], the one-time f32 slab + correlated
+    /// norms ([`crate::kernels::fused::F32Slab`]). This is the solver
+    /// hot path; backends without an f32 engine fall back to the exact
+    /// norms path.
+    #[allow(clippy::too_many_arguments)]
+    fn kernel_matvec_cached(
+        &self,
+        kernel: KernelKind,
+        x1: &[f64],
+        n1: usize,
+        x2: &[f64],
+        n2: usize,
+        d: usize,
+        v: &[f64],
+        sigma: f64,
+        slab: SlabRef<'_>,
+    ) -> anyhow::Result<Vec<f64>> {
+        self.kernel_matvec_with_norms(kernel, x1, n1, x2, n2, d, v, sigma, slab.sq)
+    }
+
     /// Does this backend evaluate kernel products in full f64? Exact
     /// backends have no measurement floor, so high-precision residual
     /// checks can run through them directly instead of falling back to
@@ -222,6 +263,39 @@ pub trait Backend {
                 weights,
                 sigma,
                 train_sq_norms,
+            )?;
+            out.extend_from_slice(&y);
+            start += rows;
+        }
+        Ok(out)
+    }
+
+    /// [`Backend::predict_with_norms`] with the full [`SlabRef`] cache
+    /// bundle (the serving path under `--precision f32`): tiles over
+    /// evaluation rows and runs each tile through
+    /// [`Backend::kernel_matvec_cached`].
+    #[allow(clippy::too_many_arguments)]
+    fn predict_cached(
+        &self,
+        kernel: KernelKind,
+        x_train: &[f64],
+        n_train: usize,
+        d: usize,
+        weights: &[f64],
+        x_eval: &[f64],
+        n_eval: usize,
+        sigma: f64,
+        slab: SlabRef<'_>,
+    ) -> anyhow::Result<Vec<f64>> {
+        assert_eq!(weights.len(), n_train);
+        let tile = self.predict_tile(kernel, n_train, d).max(1);
+        let mut out = Vec::with_capacity(n_eval);
+        let mut start = 0;
+        while start < n_eval {
+            let rows = tile.min(n_eval - start);
+            let x1 = &x_eval[start * d..(start + rows) * d];
+            let y = self.kernel_matvec_cached(
+                kernel, x1, rows, x_train, n_train, d, weights, sigma, slab,
             )?;
             out.extend_from_slice(&y);
             start += rows;

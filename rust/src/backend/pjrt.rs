@@ -12,7 +12,7 @@
 //! the pre-trait code used.
 
 use super::{accel_params, Backend, SapOptions, SapStepper};
-use crate::config::KernelKind;
+use crate::config::{KernelKind, Precision};
 use crate::coordinator::runtime_ops::{slab_to_f32_padded, vec_to_f32_padded};
 use crate::coordinator::KrrProblem;
 use crate::runtime::manifest::ShapeKey;
@@ -46,6 +46,13 @@ impl PjrtBackend {
 impl Backend for PjrtBackend {
     fn name(&self) -> &'static str {
         "pjrt"
+    }
+
+    /// The AOT artifacts are compiled for f32 inputs/outputs; there is
+    /// no f64 engine to select. `--precision f64` on this backend is
+    /// refused upstream ([`crate::coordinator::Coordinator::resolve_precision`]).
+    fn precision(&self) -> Precision {
+        Precision::F32
     }
 
     /// `K(X1, X2) @ v` through the `kmv` artifact family. Rows are

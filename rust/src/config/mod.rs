@@ -64,6 +64,43 @@ impl BackendKind {
     }
 }
 
+/// Arithmetic precision for the hot kernel matvec path
+/// (`docs/BACKENDS.md`, "Precision contract").
+///
+/// `F32` runs the fused panel engine on f32 slabs with f64 accumulation
+/// and periodic f64 iterative-refinement in the solvers; final accuracy
+/// is unchanged, time-to-tolerance improves. Eval/predict metrics and
+/// model weights stay f64 in every mode.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Precision {
+    /// Defer to the backend: f64 on host, f32 on pjrt.
+    #[default]
+    Auto,
+    /// f32 panels + f64 accumulation + iterative refinement.
+    F32,
+    /// Full f64 everywhere (bit-exact with pre-precision builds).
+    F64,
+}
+
+impl Precision {
+    pub fn name(self) -> &'static str {
+        match self {
+            Precision::Auto => "auto",
+            Precision::F32 => "f32",
+            Precision::F64 => "f64",
+        }
+    }
+
+    pub fn parse(s: &str) -> anyhow::Result<Precision> {
+        match s {
+            "auto" => Ok(Precision::Auto),
+            "f32" | "single" => Ok(Precision::F32),
+            "f64" | "double" => Ok(Precision::F64),
+            _ => anyhow::bail!("unknown precision {s:?} (auto|f32|f64)"),
+        }
+    }
+}
+
 /// How to choose the bandwidth sigma.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub enum BandwidthSpec {
@@ -339,6 +376,8 @@ pub struct ExperimentConfig {
     pub track_residual: bool,
     /// Compute backend to dispatch the solve through.
     pub backend: BackendKind,
+    /// Arithmetic precision for the hot kernel matvec path.
+    pub precision: Precision,
     /// Checkpoint directory for resumable solves ("" = no checkpoints;
     /// see `docs/MODELS.md`).
     pub checkpoint_dir: String,
@@ -366,6 +405,7 @@ impl Default for ExperimentConfig {
             time_limit_secs: 600.0,
             track_residual: false,
             backend: BackendKind::Auto,
+            precision: Precision::Auto,
             checkpoint_dir: String::new(),
             checkpoint_every: 0,
         }
@@ -435,6 +475,10 @@ impl ExperimentConfig {
         if let Some(d) = root.opt_field("backend")? {
             c.backend =
                 BackendKind::parse(d.str()?).map_err(|e| anyhow::anyhow!("{}: {e}", d.path()))?;
+        }
+        if let Some(d) = root.opt_field("precision")? {
+            c.precision =
+                Precision::parse(d.str()?).map_err(|e| anyhow::anyhow!("{}: {e}", d.path()))?;
         }
         if let Some(d) = root.opt_field("checkpoint_dir")? {
             c.checkpoint_dir = d.string()?;
@@ -513,6 +557,19 @@ mod tests {
         assert_eq!(ExperimentConfig::default().backend, BackendKind::Auto);
         let e = ExperimentConfig::from_json(r#"{"backend":"tpu"}"#).unwrap_err();
         assert!(e.to_string().contains("config.backend"), "got: {e}");
+    }
+
+    #[test]
+    fn precision_roundtrip_and_default() {
+        for p in [Precision::Auto, Precision::F32, Precision::F64] {
+            assert_eq!(Precision::parse(p.name()).unwrap(), p);
+        }
+        assert!(Precision::parse("f16").is_err());
+        let c = ExperimentConfig::from_json(r#"{"precision":"f32"}"#).unwrap();
+        assert_eq!(c.precision, Precision::F32);
+        assert_eq!(ExperimentConfig::default().precision, Precision::Auto);
+        let e = ExperimentConfig::from_json(r#"{"precision":"f16"}"#).unwrap_err();
+        assert!(e.to_string().contains("config.precision"), "got: {e}");
     }
 
     #[test]

@@ -8,7 +8,7 @@ pub mod runtime_ops;
 pub use problem::{Budget, KrrProblem, SolveReport};
 
 use crate::backend::Backend;
-use crate::config::{ExperimentConfig, SolverKind};
+use crate::config::{ExperimentConfig, Precision, SolverKind};
 use crate::data::{synthetic, Dataset};
 use crate::solvers;
 
@@ -47,11 +47,33 @@ impl<'b> Coordinator<'b> {
         Ok(ds)
     }
 
+    /// Resolve the config's precision request against the backend the
+    /// coordinator actually holds. `auto` takes whatever the backend
+    /// runs natively (host: f64 unless built `with_precision(F32)`;
+    /// PJRT engines: f32). An explicit request that the backend cannot
+    /// honour is refused here, before any work is done — precision is
+    /// a property of the whole run, never silently mixed.
+    pub fn resolve_precision(&self, cfg: &ExperimentConfig) -> anyhow::Result<Precision> {
+        let native = self.backend.precision();
+        anyhow::ensure!(
+            cfg.precision == Precision::Auto || cfg.precision == native,
+            "config.precision: requested {} but this backend runs {} \
+             (host backends take the precision at construction; PJRT engines are f32-native) \
+             — use --precision auto or match the backend",
+            cfg.precision.name(),
+            native.name(),
+        );
+        Ok(native)
+    }
+
     /// Build the KRR problem a config describes (standardize, split,
-    /// resolve bandwidth, scale lambda).
+    /// resolve bandwidth, scale lambda, stamp the resolved precision —
+    /// under f32 this also builds the one-time f32 training slab).
     pub fn problem(&self, cfg: &ExperimentConfig) -> anyhow::Result<KrrProblem> {
+        let precision = self.resolve_precision(cfg)?;
         let ds = Self::dataset(cfg)?.standardized();
-        KrrProblem::from_dataset(ds, cfg.kernel, cfg.bandwidth, cfg.lam_unscaled, cfg.seed)
+        Ok(KrrProblem::from_dataset(ds, cfg.kernel, cfg.bandwidth, cfg.lam_unscaled, cfg.seed)?
+            .with_precision(precision))
     }
 
     /// Instantiate the solver a config selects.
@@ -132,10 +154,30 @@ impl<'b> Coordinator<'b> {
         if policy.eval_every == 0 {
             policy.eval_every = solver.eval_every_override();
         }
+        // Precision is decided by the problem (resolved above): f32
+        // solves refine at the caller's cadence or the default; f64
+        // solves never refine. Checkpoints are stamped accordingly.
+        policy.precision = problem.precision;
+        policy.refine_every = match problem.precision {
+            Precision::F32 if policy.refine_every > 0 => policy.refine_every,
+            Precision::F32 => solvers::DEFAULT_REFINE_EVERY,
+            _ => 0,
+        };
         // Setup time counts against the wall budget; a resumed solve
         // additionally continues the original run's clock.
         policy.base_secs += t_init.elapsed().as_secs_f64();
         if let Some(ck) = resume {
+            let want = match problem.precision {
+                Precision::F32 => "f32",
+                _ => "f64",
+            };
+            anyhow::ensure!(
+                ck.precision == want,
+                "checkpoint.json: precision is {:?} but this run resolves to {want:?} — \
+                 resuming across precisions is refused (the f32 and f64 trajectories are \
+                 not interchangeable); rerun with the checkpoint's precision",
+                ck.precision,
+            );
             state.restore(ck)?;
             policy.base_secs += ck.secs;
         }

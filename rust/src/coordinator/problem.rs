@@ -1,6 +1,7 @@
 //! Problem and report types shared by every solver.
 
-use crate::config::{BandwidthSpec, KernelKind};
+use crate::backend::host::par_sq_norms;
+use crate::config::{BandwidthSpec, KernelKind, Precision};
 use crate::data::{preprocess, Dataset, TaskKind};
 use crate::kernels::fused;
 use crate::metrics::Trace;
@@ -23,6 +24,12 @@ pub struct KrrProblem {
     /// prediction tiles (`crate::kernels::fused`). Empty when the
     /// kernel's panel path ignores norms (Laplacian).
     pub train_sq_norms: Vec<f64>,
+    /// Operating precision of the solve (resolved — never `Auto`).
+    pub precision: Precision,
+    /// f32 mirror of the training slab plus correlated norms, built
+    /// once by [`KrrProblem::with_precision`] under [`Precision::F32`]
+    /// and reused by every cached kernel product. `None` in f64 mode.
+    pub train_f32: Option<fused::F32Slab>,
 }
 
 impl KrrProblem {
@@ -61,7 +68,7 @@ impl KrrProblem {
         anyhow::ensure!(sigma > 0.0, "bandwidth must be positive");
         let lam = (train.n as f64) * lam_unscaled;
         let train_sq_norms = if fused::uses_norms(kernel) {
-            fused::sq_norms(&train.x, train.n, train.d)
+            par_sq_norms(&train.x, train.n, train.d, 0)
         } else {
             Vec::new()
         };
@@ -74,6 +81,8 @@ impl KrrProblem {
             sigma,
             lam,
             train_sq_norms,
+            precision: Precision::F64,
+            train_f32: None,
         })
     }
 
@@ -86,7 +95,7 @@ impl KrrProblem {
         lam: f64,
     ) -> KrrProblem {
         let train_sq_norms = if fused::uses_norms(kernel) {
-            fused::sq_norms(&train.x, train.n, train.d)
+            par_sq_norms(&train.x, train.n, train.d, 0)
         } else {
             Vec::new()
         };
@@ -99,6 +108,36 @@ impl KrrProblem {
             sigma,
             lam,
             train_sq_norms,
+            precision: Precision::F64,
+            train_f32: None,
+        }
+    }
+
+    /// Resolve the operating precision (`Auto` is the caller's job —
+    /// this expects `F32` or `F64`) and, under `F32`, build the f32
+    /// training slab + correlated norms once for the whole solve.
+    pub fn with_precision(mut self, precision: Precision) -> KrrProblem {
+        debug_assert_ne!(precision, Precision::Auto, "resolve Auto before the problem");
+        self.precision = precision;
+        self.train_f32 = match precision {
+            Precision::F32 => Some(fused::F32Slab::build(
+                &self.train.x,
+                self.train.n,
+                self.train.d,
+                fused::uses_norms(self.kernel),
+            )),
+            _ => None,
+        };
+        self
+    }
+
+    /// The cache bundle for [`crate::backend::Backend::kernel_matvec_cached`]
+    /// against the training slab: f64 norms always, the f32 slab when
+    /// the solve runs at [`Precision::F32`].
+    pub fn train_slab(&self) -> fused::SlabRef<'_> {
+        fused::SlabRef {
+            sq: if self.train_sq_norms.is_empty() { None } else { Some(&self.train_sq_norms) },
+            fp32: self.train_f32.as_ref(),
         }
     }
 

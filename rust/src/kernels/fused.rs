@@ -30,6 +30,18 @@
 //! near-duplicate rows. Panel boundaries depend only on `d`, never on
 //! the worker count, so fused products are bit-identical for any
 //! thread count.
+//!
+//! **Mixed-precision path** ([`kernel_panel_f32`]). The engine also runs
+//! panels from an [`F32Slab`] — the slab and its norms narrowed once per
+//! problem — with the cross-term GEMM in explicitly-SIMD f32
+//! ([`crate::linalg::dense::gemm_nt_f32`]: f32 products, f64 chunk
+//! accumulation), the distance combine in f64, and the nonlinearity
+//! through [`exp_fast32`]. Parity vs the scalar f64 oracle is the
+//! documented looser bar `5e-4 * max(1, |K|)` (`docs/BACKENDS.md`),
+//! pinned in `rust/tests/proptests.rs` alongside the same bit-exact
+//! thread-count invariance the f64 path clears: every output element
+//! depends only on its input rows and the fixed `d`-derived panel/chunk
+//! grid, never on the worker partition.
 
 use crate::config::KernelKind;
 use crate::linalg::dense::{self, GemmScratch};
@@ -63,7 +75,7 @@ pub fn sq_norms(x: &[f64], n: usize, d: usize) -> Vec<f64> {
 
 /// Slice a norm cache to a row range; empty caches (Laplacian callers
 /// skip the norm pass entirely) stay empty.
-pub fn norm_slice(norms: &[f64], lo: usize, hi: usize) -> &[f64] {
+pub fn norm_slice<T>(norms: &[T], lo: usize, hi: usize) -> &[T] {
     if norms.is_empty() {
         norms
     } else {
@@ -71,12 +83,91 @@ pub fn norm_slice(norms: &[f64], lo: usize, hi: usize) -> &[f64] {
     }
 }
 
-/// Reusable per-thread scratch for [`kernel_panel`].
+/// One slab mirrored into f32 for the mixed-precision engine: the
+/// row-major matrix narrowed **once** per problem, plus squared row
+/// norms computed *through the f32 microkernel itself* (a 1x1
+/// [`crate::linalg::dense::gemm_nt_f32`] self-dot per row, kept in
+/// f64).
+///
+/// Running the norms through the same kernel path matters: the
+/// distance combine `||x||^2 + ||y||^2 - 2 x·y` cancels for nearby
+/// points, and `exp` amplifies any uncorrelated rounding between the
+/// norm and the cross dot. Because both go through the identical
+/// per-lane arithmetic (same chunking, same ISA, same FMA order), the
+/// rounding *correlates and cancels*: two bit-identical rows produce
+/// `sq == 0` exactly and a unit diagonal, just like the f64 engine.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct F32Slab {
+    /// Row-major `n x d` f32 copy of the slab.
+    pub x: Vec<f32>,
+    /// Squared row norms via the f32 kernel path (f64 chunk sums);
+    /// empty when the kernel ignores them ([`uses_norms`]).
+    pub sq: Vec<f64>,
+}
+
+impl F32Slab {
+    /// Narrow an f64 slab. `with_norms` should follow [`uses_norms`]
+    /// for the kernel the slab will be evaluated under.
+    pub fn build(x: &[f64], n: usize, d: usize, with_norms: bool) -> F32Slab {
+        // Read the f64 slab, write its f32 mirror.
+        crate::obs::add_bytes(12.0 * (n * d) as f64);
+        let xf: Vec<f32> = x[..n * d].iter().map(|&v| v as f32).collect();
+        let sq = if with_norms {
+            // One 1x1 gemm per row: wasteful per-flop (the microkernel
+            // runs a full tile for one lane) but one-time per problem
+            // and, crucially, bit-matched to the panel cross terms.
+            let mut scratch = GemmScratch::default();
+            let mut cell = [0.0f64];
+            (0..n)
+                .map(|i| {
+                    let row = &xf[i * d..(i + 1) * d];
+                    dense::gemm_nt_f32(1, 1, d, row, d, row, d, &mut cell, 1, &mut scratch);
+                    cell[0]
+                })
+                .collect()
+        } else {
+            Vec::new()
+        };
+        F32Slab { x: xf, sq }
+    }
+
+    /// Rows in the slab (requires `d > 0`, which every caller has).
+    pub fn rows(&self, d: usize) -> usize {
+        self.x.len() / d.max(1)
+    }
+}
+
+/// Borrowed per-slab caches a backend matvec/predict call can consume:
+/// the f64 squared-norm cache (exact path) and, when the problem was
+/// set up for f32, the narrowed slab. Both optional — a default
+/// `SlabRef` means "no caches, recompute what you need".
+#[derive(Debug, Clone, Copy, Default)]
+pub struct SlabRef<'a> {
+    /// Cached f64 squared row norms of the slab.
+    pub sq: Option<&'a [f64]>,
+    /// Cached f32 mirror (slab + norms) for the mixed-precision engine.
+    pub fp32: Option<&'a F32Slab>,
+}
+
+impl<'a> SlabRef<'a> {
+    /// A norms-only cache (the pre-mixed-precision calling convention).
+    pub fn norms(sq: Option<&'a [f64]>) -> SlabRef<'a> {
+        SlabRef { sq, fp32: None }
+    }
+}
+
+/// Reusable per-thread scratch for [`kernel_panel`] /
+/// [`kernel_panel_f32`].
 #[derive(Debug, Default)]
 pub struct PanelScratch {
     gemm: GemmScratch,
     /// Transposed `X2` panel for the Laplacian L1 walk (`[t][j]`).
     x2t: Vec<f64>,
+    /// f32 twin of `x2t` for the mixed-precision Laplacian walk.
+    x2tf: Vec<f32>,
+    /// Per-column f32 chunk accumulators of the mixed-precision L1
+    /// walk (flushed into the f64 output every [`L1_CHUNK`] features).
+    accf: Vec<f32>,
 }
 
 /// Fill `out[r * ldc + j] = K(x1[r], x2[j])` for `m` rows of `x1`
@@ -150,11 +241,7 @@ pub fn kernel_panel(
             // same order as the scalar oracle.
             scratch.x2t.clear();
             scratch.x2t.resize(d * n, 0.0);
-            for j in 0..n {
-                for t in 0..d {
-                    scratch.x2t[t * n + j] = x2[j * d + t];
-                }
-            }
+            dense::transpose_into(&x2[..n * d], n, d, &mut scratch.x2t);
             for r in 0..m {
                 let xr = &x1[r * d..(r + 1) * d];
                 let row = &mut out[r * ldc..r * ldc + n];
@@ -167,6 +254,119 @@ pub fn kernel_panel(
                 }
                 for o in row.iter_mut() {
                     *o = exp_fast(-*o / sigma);
+                }
+            }
+        }
+    }
+}
+
+/// Features per f32 chunk of the mixed-precision Laplacian walk: the
+/// L1 distance accumulates in f32 inside a chunk and widens into the
+/// f64 output between chunks — the same error-bounding structure as
+/// `gemm_nt_f32`'s k-chunks, and the same length so the two paths'
+/// error budgets match.
+const L1_CHUNK: usize = 64;
+
+/// Mixed-precision twin of [`kernel_panel`]: f32 slabs and norms in,
+/// f64 panel out.
+///
+/// Numerics per kernel family:
+/// * RBF / Matern-5/2 — cross term via
+///   [`crate::linalg::dense::gemm_nt_f32`] (f32 SIMD products, f64
+///   chunk accumulation), distance combine + clamp in f64 on widened
+///   norms, nonlinearity through [`exp_fast32`] on the narrowed
+///   argument.
+/// * Laplacian — transposed f32 panel walk with per-column f32
+///   accumulators flushed to f64 every [`L1_CHUNK`] features, then
+///   [`exp_fast32`].
+///
+/// Parity vs the scalar f64 oracle: `5e-4 * max(1, |K|)` (the f32
+/// input quantization alone moves distances by ~1e-7 relative, and the
+/// exp of a large negative argument amplifies absolute error by the
+/// argument's magnitude — the bar is documented in `docs/BACKENDS.md`
+/// and pinned in `rust/tests/proptests.rs`). Like the f64 path, every
+/// output element depends only on its input rows and `d`-derived
+/// chunking, so fused f32 products are bit-identical across thread
+/// counts.
+#[allow(clippy::too_many_arguments)]
+pub fn kernel_panel_f32(
+    kind: KernelKind,
+    x1: &[f32],
+    m: usize,
+    x1sq: &[f64],
+    x2: &[f32],
+    n: usize,
+    x2sq: &[f64],
+    d: usize,
+    sigma: f64,
+    out: &mut [f64],
+    ldc: usize,
+    scratch: &mut PanelScratch,
+) {
+    if m == 0 || n == 0 {
+        return;
+    }
+    // Same nominal nonlinearity flop counts as the f64 path (the work
+    // per entry is the same shape); the slab reads are half the bytes.
+    let nonlin = match kind {
+        KernelKind::Rbf => 35.0,
+        KernelKind::Matern52 => 45.0,
+        KernelKind::Laplacian => 2.0 * d as f64 + 32.0,
+    };
+    crate::obs::add_flops(nonlin * (m * n) as f64);
+    crate::obs::add_bytes((4 * (m + n) * d + 8 * m * n) as f64);
+    match kind {
+        KernelKind::Rbf | KernelKind::Matern52 => {
+            debug_assert!(x1sq.len() == m && x2sq.len() == n, "norms required for GEMM kernels");
+            dense::gemm_nt_f32(m, n, d, x1, d, x2, d, out, ldc, &mut scratch.gemm);
+            let inv2ss = 1.0 / (2.0 * sigma * sigma);
+            for r in 0..m {
+                let nr = x1sq[r];
+                let row = &mut out[r * ldc..r * ldc + n];
+                if kind == KernelKind::Rbf {
+                    for (o, &nc) in row.iter_mut().zip(x2sq) {
+                        let sq = (nr + nc - 2.0 * *o).max(0.0);
+                        *o = exp_fast32((-sq * inv2ss) as f32) as f64;
+                    }
+                } else {
+                    for (o, &nc) in row.iter_mut().zip(x2sq) {
+                        let sq = (nr + nc - 2.0 * *o).max(0.0);
+                        let u = (sq + 1e-12).sqrt() / sigma;
+                        let s5u = 5f64.sqrt() * u;
+                        *o = (1.0 + s5u + (5.0 / 3.0) * u * u) * exp_fast32(-s5u as f32) as f64;
+                    }
+                }
+            }
+        }
+        KernelKind::Laplacian => {
+            scratch.x2tf.clear();
+            scratch.x2tf.resize(d * n, 0.0);
+            dense::transpose_into(&x2[..n * d], n, d, &mut scratch.x2tf);
+            scratch.accf.clear();
+            scratch.accf.resize(n, 0.0);
+            for r in 0..m {
+                let xr = &x1[r * d..(r + 1) * d];
+                let row = &mut out[r * ldc..r * ldc + n];
+                row.fill(0.0);
+                let mut t0 = 0;
+                while t0 < d {
+                    let tc = (d - t0).min(L1_CHUNK);
+                    let accf = &mut scratch.accf[..n];
+                    accf.fill(0.0);
+                    for t in t0..t0 + tc {
+                        let xt = xr[t];
+                        let col = &scratch.x2tf[t * n..(t + 1) * n];
+                        for (acc, &b) in accf.iter_mut().zip(col) {
+                            *acc += (xt - b).abs();
+                        }
+                    }
+                    for (o, &a) in row.iter_mut().zip(scratch.accf.iter()) {
+                        *o += a as f64;
+                    }
+                    t0 += tc;
+                }
+                for o in row.iter_mut() {
+                    *o = exp_fast32((-*o / sigma) as f32) as f64;
                 }
             }
         }
@@ -226,6 +426,55 @@ pub fn exp_fast(x: f64) -> f64 {
     }
 }
 
+/// f32 twin of [`exp_fast`] for the mixed-precision panel path:
+/// power-of-two range reduction with the fdlibm single-precision
+/// hi/lo split of ln 2, degree-7 Taylor polynomial (Horner),
+/// exponent-bits scaling. Branch-free on the hot path.
+///
+/// Accuracy vs libm `expf` over the engine's reachable range (kernel
+/// arguments are always <= 0): a few ulp, pinned in the tests below.
+/// `exp_fast32(0.0) == 1.0` exactly, so unit kernel diagonals survive.
+/// Inputs below -87.0 flush to 0.0 (libm holds normals down to
+/// ~-87.33; at the engine's 5e-4 parity bar the difference is
+/// invisible), and inputs above 88.0 saturate to infinity — both
+/// boundaries keep `k` inside the exponent-bits trick's valid range.
+#[inline]
+pub fn exp_fast32(x: f32) -> f32 {
+    const INV_LN2: f32 = std::f32::consts::LOG2_E;
+    // High/low split of ln 2 (fdlibm expf): k * LN2_HI is exact.
+    const LN2_HI: f32 = 0.693_145_75;
+    const LN2_LO: f32 = 1.428_606_8e-6;
+    // 1/i! — Taylor coefficients of exp on |r| <= ln(2)/2; the degree-7
+    // tail bound (ln2/2)^8/8! ~ 5e-9 sits below f32 epsilon.
+    const C: [f32; 8] = [
+        1.0,
+        1.0,
+        0.5,
+        0.166_666_67,
+        0.041_666_668,
+        0.008_333_334,
+        0.001_388_888_9,
+        1.984_127e-4,
+    ];
+    let k = (x * INV_LN2).round();
+    let r = (x - k * LN2_HI) - k * LN2_LO;
+    let mut p = C[7];
+    for &c in C[..7].iter().rev() {
+        p = p * r + c;
+    }
+    // 2^k through the exponent bits; out-of-range k produces garbage
+    // that the selects below discard.
+    let scale = f32::from_bits(((k as i32).wrapping_add(127) as u32) << 23);
+    let y = p * scale;
+    if x < -87.0 {
+        0.0
+    } else if x > 88.0 {
+        f32::INFINITY
+    } else {
+        y
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -245,6 +494,136 @@ mod tests {
         assert_eq!(exp_fast(0.0), 1.0);
         assert_eq!(exp_fast(-1000.0), 0.0);
         assert_eq!(exp_fast(710.0), f64::INFINITY);
+    }
+
+    #[test]
+    fn exp_fast32_tracks_libm_to_a_few_ulp_over_reachable_range() {
+        // Kernel arguments are always <= 0; sweep the whole reachable
+        // range and measure the worst ulp distance against libm expf.
+        let mut max_ulp: i32 = 0;
+        let mut x = 0.0f32;
+        while x > -87.0 {
+            let want = x.exp();
+            let got = exp_fast32(x);
+            assert!(want > 0.0, "libm expf normal over the sweep");
+            let ulp = (got.to_bits() as i32 - want.to_bits() as i32).abs();
+            max_ulp = max_ulp.max(ulp);
+            assert!(ulp <= 8, "x={x}: {got} vs {want} ({ulp} ulp)");
+            x -= 0.001_37;
+        }
+        assert!(max_ulp <= 8, "max ulp {max_ulp}");
+        assert_eq!(exp_fast32(0.0), 1.0, "unit diagonal must be exact");
+    }
+
+    #[test]
+    fn exp_fast32_flush_and_saturation_boundaries() {
+        // Flush-to-zero: everything below -87.0 is exactly 0.0, and the
+        // last tracked point before the boundary is still normal.
+        assert_eq!(exp_fast32(-87.000_01), 0.0);
+        assert_eq!(exp_fast32(-1000.0), 0.0);
+        assert_eq!(exp_fast32(f32::NEG_INFINITY), 0.0);
+        let near = exp_fast32(-86.99);
+        assert!(near > 0.0 && near.is_normal(), "just above the flush boundary: {near}");
+        // Saturation on the (unreachable in kernel use) positive side.
+        assert_eq!(exp_fast32(88.1), f32::INFINITY);
+        let big = exp_fast32(87.9);
+        assert!(big.is_finite() && (big - 87.9f32.exp()).abs() / 87.9f32.exp() < 1e-5);
+    }
+
+    #[test]
+    fn f32_slab_narrows_rows_and_norms() {
+        let mut rng = Rng::new(5);
+        let (n, d) = (6, 4);
+        let x: Vec<f64> = (0..n * d).map(|_| rng.normal()).collect();
+        let slab = F32Slab::build(&x, n, d, true);
+        assert_eq!(slab.x.len(), n * d);
+        assert_eq!(slab.sq.len(), n);
+        assert_eq!(slab.rows(d), n);
+        for i in 0..n * d {
+            assert_eq!(slab.x[i], x[i] as f32);
+        }
+        // The f32-path norms track the exact f64 norms to f32 accuracy
+        // (they are *not* equal: they go through the chunked f32 kernel
+        // so their rounding matches the panel cross terms bit-for-bit).
+        let f64_norms = sq_norms(&x, n, d);
+        for i in 0..n {
+            assert!(
+                (slab.sq[i] - f64_norms[i]).abs() <= 1e-5 * f64_norms[i].max(1.0),
+                "row {i}: {got} vs {want}",
+                got = slab.sq[i],
+                want = f64_norms[i]
+            );
+        }
+        // Laplacian-style slabs skip the norm pass.
+        assert!(F32Slab::build(&x, n, d, false).sq.is_empty());
+    }
+
+    #[test]
+    fn kernel_panel_f32_matches_scalar_oracle_at_the_f32_bar() {
+        let mut rng = Rng::new(6);
+        let (m, n, d, sigma) = (5, 11, 6, 0.9);
+        let x1: Vec<f64> = (0..m * d).map(|_| rng.normal()).collect();
+        let mut x2: Vec<f64> = (0..n * d).map(|_| rng.normal()).collect();
+        for t in 0..d {
+            x2[t] = x1[t] + 1e-10;
+        }
+        for kind in [KernelKind::Rbf, KernelKind::Laplacian, KernelKind::Matern52] {
+            let s1 = F32Slab::build(&x1, m, d, uses_norms(kind));
+            let s2 = F32Slab::build(&x2, n, d, uses_norms(kind));
+            let ldc = n + 3;
+            let mut out = vec![f64::NAN; m * ldc];
+            let mut scratch = PanelScratch::default();
+            kernel_panel_f32(
+                kind, &s1.x, m, &s1.sq, &s2.x, n, &s2.sq, d, sigma, &mut out, ldc, &mut scratch,
+            );
+            for r in 0..m {
+                for j in 0..n {
+                    let want = kernels::eval(
+                        kind,
+                        &x1[r * d..(r + 1) * d],
+                        &x2[j * d..(j + 1) * d],
+                        sigma,
+                    );
+                    let got = out[r * ldc + j];
+                    assert!(
+                        (got - want).abs() <= 5e-4 * want.abs().max(1.0),
+                        "{kind:?} ({r},{j}): {got} vs {want}"
+                    );
+                }
+                for j in n..ldc {
+                    assert!(out[r * ldc + j].is_nan(), "panel wrote past ldc");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn kernel_panel_f32_keeps_identical_rows_at_exactly_one() {
+        // Identical rows under a tiny bandwidth: because the slab norms
+        // run through the same f32 kernel path as the cross term, the
+        // distance cancels bit-for-bit and the diagonal is exactly 1 —
+        // the same guarantee the f64 engine makes. Deliberately awkward
+        // (not-f32-representable) coordinates.
+        let x = vec![0.1, -1.7, 3.3, 0.77, -0.001, 5.9, 2.2];
+        let d = x.len();
+        let slab = F32Slab::build(&x, 1, d, true);
+        let mut out = vec![0.0f64; 1];
+        let mut scratch = PanelScratch::default();
+        kernel_panel_f32(
+            KernelKind::Rbf,
+            &slab.x,
+            1,
+            &slab.sq,
+            &slab.x,
+            1,
+            &slab.sq,
+            d,
+            0.03,
+            &mut out,
+            1,
+            &mut scratch,
+        );
+        assert_eq!(out[0], 1.0);
     }
 
     #[test]

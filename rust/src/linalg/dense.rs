@@ -51,11 +51,7 @@ impl Mat {
 
     pub fn t(&self) -> Mat {
         let mut out = Mat::zeros(self.cols, self.rows);
-        for i in 0..self.rows {
-            for j in 0..self.cols {
-                out[(j, i)] = self[(i, j)];
-            }
-        }
+        transpose_into(&self.data, self.rows, self.cols, &mut out.data);
         out
     }
 
@@ -190,6 +186,38 @@ pub fn axpy(a: &[f64], c: f64, b: &[f64]) -> Vec<f64> {
     a.iter().zip(b).map(|(x, y)| x + c * y).collect()
 }
 
+/// Square tile edge of the cache-blocked [`transpose_into`]: a 32x32
+/// f64 tile is 8 KiB per side, so one source tile plus one destination
+/// tile stay resident in L1 while every line is used fully.
+const TR_BLOCK: usize = 32;
+
+/// Cache-blocked out-of-place transpose: `dst[j*rows + i] = src[i*cols
+/// + j]`. The naive column walk writes `dst` with stride `rows`,
+/// touching a fresh cache line per element once `rows` outgrows L1;
+/// tiling keeps both the reads and the writes inside one tile pair.
+/// Hot path of [`Mat::matmul`] (the one-time B transpose) and of the
+/// Laplacian panel fill in `crate::kernels::fused` (both precisions).
+pub fn transpose_into<T: Copy>(src: &[T], rows: usize, cols: usize, dst: &mut [T]) {
+    debug_assert!(src.len() >= rows * cols);
+    debug_assert!(dst.len() >= rows * cols);
+    let mut i0 = 0;
+    while i0 < rows {
+        let ib = (rows - i0).min(TR_BLOCK);
+        let mut j0 = 0;
+        while j0 < cols {
+            let jb = (cols - j0).min(TR_BLOCK);
+            for i in i0..i0 + ib {
+                let base = i * cols;
+                for j in j0..j0 + jb {
+                    dst[j * rows + i] = src[base + j];
+                }
+            }
+            j0 += jb;
+        }
+        i0 += ib;
+    }
+}
+
 /// Rows per micro-tile of the [`gemm_nt`] register kernel.
 const GEMM_MR: usize = 4;
 /// Columns per micro-tile of the [`gemm_nt`] register kernel.
@@ -204,6 +232,8 @@ const GEMM_NR: usize = 8;
 pub struct GemmScratch {
     ap: Vec<f64>,
     bp: Vec<f64>,
+    apf: Vec<f32>,
+    bpf: Vec<f32>,
 }
 
 /// `c[i*ldc + j] = dot(a_row_i, b_row_j)` — the "NT" product `A Bᵀ` of
@@ -304,6 +334,252 @@ pub fn gemm_nt(
     }
 }
 
+/// Columns per micro-tile of the [`gemm_nt_f32`] kernel: twice the f64
+/// tile width, since f32 packs two lanes per SIMD slot (2 x 8-lane
+/// `__m256` on AVX2, 4 x 4-lane `float32x4` on NEON).
+const GEMM_NR32: usize = 16;
+
+/// k-chunk length of [`gemm_nt_f32`]: lanes accumulate in f32 inside a
+/// chunk and the chunk sums widen into f64, so rounding error stays
+/// O(KC * eps_f32) per chunk instead of O(k * eps_f32) over the whole
+/// inner dimension — the "f32 compute, f64 accumulate" half of the
+/// mixed-precision contract (`docs/BACKENDS.md`).
+const GEMM_KC32: usize = 64;
+
+/// Which SIMD path [`gemm_nt_f32`] dispatches to on this machine.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Isa {
+    #[cfg(target_arch = "x86_64")]
+    Avx2Fma,
+    #[cfg(target_arch = "aarch64")]
+    Neon,
+    // Constructed on x86_64 without AVX2 and on non-SIMD targets; on
+    // aarch64 NEON is baseline, so only the match arms reference it.
+    #[allow(dead_code)]
+    Scalar,
+}
+
+/// Runtime CPU feature detection, done once and cached: AVX2+FMA on
+/// x86_64 when the CPU reports both, NEON on aarch64 (baseline), the
+/// portable scalar kernel otherwise.
+fn isa() -> Isa {
+    static ISA: std::sync::OnceLock<Isa> = std::sync::OnceLock::new();
+    *ISA.get_or_init(|| {
+        #[cfg(target_arch = "x86_64")]
+        {
+            if std::arch::is_x86_feature_detected!("avx2")
+                && std::arch::is_x86_feature_detected!("fma")
+            {
+                Isa::Avx2Fma
+            } else {
+                Isa::Scalar
+            }
+        }
+        #[cfg(target_arch = "aarch64")]
+        {
+            Isa::Neon
+        }
+        #[cfg(not(any(target_arch = "x86_64", target_arch = "aarch64")))]
+        {
+            Isa::Scalar
+        }
+    })
+}
+
+/// The SIMD path the f32 microkernel selected at startup — surfaced in
+/// `--profile`, `askotch info`, and `GET /metrics` so a throughput
+/// number always names the instruction set that produced it.
+pub fn simd_isa() -> &'static str {
+    match isa() {
+        #[cfg(target_arch = "x86_64")]
+        Isa::Avx2Fma => "avx2+fma",
+        #[cfg(target_arch = "aarch64")]
+        Isa::Neon => "neon",
+        Isa::Scalar => "scalar",
+    }
+}
+
+/// Mixed-precision twin of [`gemm_nt`]: f32 row-major operands, f64
+/// output. `c[i*ldc + j] = dot(a_row_i, b_row_j)` with products and
+/// in-chunk sums in f32 (SIMD FMA where available) and chunk sums
+/// accumulated in f64.
+///
+/// Determinism contract: an output element depends only on its two
+/// input rows, `k`, and the fixed chunking — never on `m`, `n`, the
+/// tile an element lands in, or how callers split rows across threads.
+/// That makes the fused f32 engine bit-identical across thread counts
+/// (pinned in `tests/proptests.rs`). Results may differ across ISAs
+/// (FMA vs separate multiply-add), but every path meets the documented
+/// f32 parity bar against the f64 oracle.
+#[allow(clippy::too_many_arguments)]
+pub fn gemm_nt_f32(
+    m: usize,
+    n: usize,
+    k: usize,
+    a: &[f32],
+    lda: usize,
+    b: &[f32],
+    ldb: usize,
+    c: &mut [f64],
+    ldc: usize,
+    scratch: &mut GemmScratch,
+) {
+    if m == 0 || n == 0 {
+        return;
+    }
+    crate::obs::add_flops(2.0 * m as f64 * n as f64 * k as f64);
+    let which = isa();
+    // Pack A once: micro-blocks of MR rows, [k][MR] layout, zero-padded
+    // so every block (including a 1-row edge) runs the same kernel —
+    // a row's lanes never see the padding, which is what keeps the
+    // per-row result independent of the caller's row partitioning.
+    let mblocks = m.div_ceil(GEMM_MR);
+    scratch.apf.clear();
+    scratch.apf.resize(mblocks * k * GEMM_MR, 0.0);
+    for ib in 0..mblocks {
+        let base = ib * k * GEMM_MR;
+        let rmax = (m - ib * GEMM_MR).min(GEMM_MR);
+        for r in 0..rmax {
+            let arow = &a[(ib * GEMM_MR + r) * lda..(ib * GEMM_MR + r) * lda + k];
+            for (kk, &av) in arow.iter().enumerate() {
+                scratch.apf[base + kk * GEMM_MR + r] = av;
+            }
+        }
+    }
+    scratch.bpf.clear();
+    scratch.bpf.resize(k * GEMM_NR32, 0.0);
+    let mut j0 = 0;
+    while j0 < n {
+        let nb = (n - j0).min(GEMM_NR32);
+        for jj in 0..GEMM_NR32 {
+            if jj < nb {
+                let brow = &b[(j0 + jj) * ldb..(j0 + jj) * ldb + k];
+                for (kk, &bv) in brow.iter().enumerate() {
+                    scratch.bpf[kk * GEMM_NR32 + jj] = bv;
+                }
+            } else {
+                for kk in 0..k {
+                    scratch.bpf[kk * GEMM_NR32 + jj] = 0.0;
+                }
+            }
+        }
+        for ib in 0..mblocks {
+            let base = ib * k * GEMM_MR;
+            let mut accd = [[0.0f64; GEMM_NR32]; GEMM_MR];
+            let mut k0 = 0;
+            while k0 < k {
+                let kc = (k - k0).min(GEMM_KC32);
+                let ap = &scratch.apf[base + k0 * GEMM_MR..base + (k0 + kc) * GEMM_MR];
+                let bp = &scratch.bpf[k0 * GEMM_NR32..(k0 + kc) * GEMM_NR32];
+                match which {
+                    #[cfg(target_arch = "x86_64")]
+                    // SAFETY: isa() returned Avx2Fma only after runtime
+                    // detection confirmed both features on this CPU.
+                    Isa::Avx2Fma => unsafe { mk_f32_avx2(kc, ap, bp, &mut accd) },
+                    #[cfg(target_arch = "aarch64")]
+                    // SAFETY: NEON is baseline on aarch64.
+                    Isa::Neon => unsafe { mk_f32_neon(kc, ap, bp, &mut accd) },
+                    Isa::Scalar => mk_f32_scalar(kc, ap, bp, &mut accd),
+                }
+                k0 += kc;
+            }
+            let rmax = (m - ib * GEMM_MR).min(GEMM_MR);
+            for r in 0..rmax {
+                let row = ib * GEMM_MR + r;
+                c[row * ldc + j0..row * ldc + j0 + nb].copy_from_slice(&accd[r][..nb]);
+            }
+        }
+        j0 += GEMM_NR32;
+    }
+}
+
+/// Portable scalar chunk kernel: one f32 multiply-add sequence per
+/// output lane over the chunk, then one widening add per lane. The
+/// reference semantics every SIMD path mirrors lane-for-lane.
+fn mk_f32_scalar(kc: usize, ap: &[f32], bp: &[f32], accd: &mut [[f64; GEMM_NR32]; GEMM_MR]) {
+    let mut acc = [[0.0f32; GEMM_NR32]; GEMM_MR];
+    for kk in 0..kc {
+        let av = &ap[kk * GEMM_MR..kk * GEMM_MR + GEMM_MR];
+        let bv = &bp[kk * GEMM_NR32..kk * GEMM_NR32 + GEMM_NR32];
+        for r in 0..GEMM_MR {
+            let a = av[r];
+            for jj in 0..GEMM_NR32 {
+                acc[r][jj] += a * bv[jj];
+            }
+        }
+    }
+    for r in 0..GEMM_MR {
+        for jj in 0..GEMM_NR32 {
+            accd[r][jj] += acc[r][jj] as f64;
+        }
+    }
+}
+
+/// AVX2+FMA chunk kernel: 4 rows x 2 x 8-lane f32 accumulators (11 of
+/// 16 ymm live), widened to f64 once per chunk.
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2", enable = "fma")]
+unsafe fn mk_f32_avx2(kc: usize, ap: &[f32], bp: &[f32], accd: &mut [[f64; GEMM_NR32]; GEMM_MR]) {
+    use std::arch::x86_64::*;
+    debug_assert!(ap.len() >= kc * GEMM_MR && bp.len() >= kc * GEMM_NR32);
+    let mut acc = [[_mm256_setzero_ps(); 2]; GEMM_MR];
+    for kk in 0..kc {
+        let b0 = _mm256_loadu_ps(bp.as_ptr().add(kk * GEMM_NR32));
+        let b1 = _mm256_loadu_ps(bp.as_ptr().add(kk * GEMM_NR32 + 8));
+        for r in 0..GEMM_MR {
+            let av = _mm256_set1_ps(*ap.get_unchecked(kk * GEMM_MR + r));
+            acc[r][0] = _mm256_fmadd_ps(av, b0, acc[r][0]);
+            acc[r][1] = _mm256_fmadd_ps(av, b1, acc[r][1]);
+        }
+    }
+    for r in 0..GEMM_MR {
+        for h in 0..2 {
+            let mut tmp = [0.0f64; 8];
+            let lo = _mm256_cvtps_pd(_mm256_castps256_ps128(acc[r][h]));
+            let hi = _mm256_cvtps_pd(_mm256_extractf128_ps::<1>(acc[r][h]));
+            _mm256_storeu_pd(tmp.as_mut_ptr(), lo);
+            _mm256_storeu_pd(tmp.as_mut_ptr().add(4), hi);
+            for jj in 0..8 {
+                accd[r][h * 8 + jj] += tmp[jj];
+            }
+        }
+    }
+}
+
+/// NEON chunk kernel: 4 rows x 4 x 4-lane f32 accumulators, widened to
+/// f64 once per chunk.
+#[cfg(target_arch = "aarch64")]
+unsafe fn mk_f32_neon(kc: usize, ap: &[f32], bp: &[f32], accd: &mut [[f64; GEMM_NR32]; GEMM_MR]) {
+    use std::arch::aarch64::*;
+    debug_assert!(ap.len() >= kc * GEMM_MR && bp.len() >= kc * GEMM_NR32);
+    let mut acc = [[vdupq_n_f32(0.0); 4]; GEMM_MR];
+    for kk in 0..kc {
+        let bptr = bp.as_ptr().add(kk * GEMM_NR32);
+        let b = [
+            vld1q_f32(bptr),
+            vld1q_f32(bptr.add(4)),
+            vld1q_f32(bptr.add(8)),
+            vld1q_f32(bptr.add(12)),
+        ];
+        for r in 0..GEMM_MR {
+            let av = vdupq_n_f32(*ap.get_unchecked(kk * GEMM_MR + r));
+            for h in 0..4 {
+                acc[r][h] = vfmaq_f32(acc[r][h], av, b[h]);
+            }
+        }
+    }
+    for r in 0..GEMM_MR {
+        for h in 0..4 {
+            let mut tmp = [0.0f64; 4];
+            vst1q_f64(tmp.as_mut_ptr(), vcvt_f64_f32(vget_low_f32(acc[r][h])));
+            vst1q_f64(tmp.as_mut_ptr().add(2), vcvt_high_f64_f32(acc[r][h]));
+            for jj in 0..4 {
+                accd[r][h * 4 + jj] += tmp[jj];
+            }
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -388,6 +664,105 @@ mod tests {
         let mut rng = Rng::new(0);
         let a = Mat::randn(4, 7, &mut rng);
         assert_eq!(a.t().t(), a);
+    }
+
+    #[test]
+    fn blocked_transpose_matches_naive_past_tile_edges() {
+        // Straddle the 32x32 tile with odd remainders on both axes.
+        let mut rng = Rng::new(21);
+        for (r, c) in [(1usize, 1usize), (5, 70), (33, 32), (70, 65), (96, 97)] {
+            let a = Mat::randn(r, c, &mut rng);
+            let t = a.t();
+            assert_eq!((t.rows, t.cols), (c, r));
+            for i in 0..r {
+                for j in 0..c {
+                    assert_eq!(t[(j, i)], a[(i, j)], "({i},{j}) rows={r} cols={c}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn simd_isa_names_a_known_path() {
+        assert!(["avx2+fma", "neon", "scalar"].contains(&simd_isa()));
+    }
+
+    #[test]
+    fn gemm_nt_f32_tracks_f64_oracle_across_edge_shapes() {
+        // The f64 oracle on the *narrowed* inputs isolates the kernel's
+        // own rounding (f32 products, chunked accumulation) from the
+        // f64 -> f32 input quantization the caller owns.
+        let mut rng = Rng::new(31);
+        for (m, n, k) in
+            [(1usize, 5usize, 7usize), (2, 9, 3), (5, 17, 129), (13, 23, 1), (4, 16, 0), (7, 33, 64)]
+        {
+            let a: Vec<f32> = (0..m * k).map(|_| rng.normal() as f32).collect();
+            let b: Vec<f32> = (0..n * k).map(|_| rng.normal() as f32).collect();
+            let mut c = vec![f64::NAN; m * n];
+            let mut scratch = GemmScratch::default();
+            gemm_nt_f32(m, n, k, &a, k, &b, k, &mut c, n, &mut scratch);
+            for i in 0..m {
+                for j in 0..n {
+                    let mut want = 0.0f64;
+                    for kk in 0..k {
+                        want += a[i * k + kk] as f64 * b[j * k + kk] as f64;
+                    }
+                    let got = c[i * n + j];
+                    assert!(
+                        (got - want).abs() <= 1e-4 * want.abs().max(1.0),
+                        "({i},{j}) m={m} n={n} k={k}: {got} vs {want}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn gemm_nt_f32_rows_are_partition_invariant() {
+        // The same output row computed as part of a tall product and as
+        // a 1-row product must agree bit-for-bit: this is the property
+        // that makes the fused f32 engine thread-count invariant, since
+        // worker spans only change the row partition.
+        let mut rng = Rng::new(32);
+        let (m, n, k) = (13usize, 21usize, 150usize);
+        let a: Vec<f32> = (0..m * k).map(|_| rng.normal() as f32).collect();
+        let b: Vec<f32> = (0..n * k).map(|_| rng.normal() as f32).collect();
+        let mut full = vec![0.0f64; m * n];
+        let mut scratch = GemmScratch::default();
+        gemm_nt_f32(m, n, k, &a, k, &b, k, &mut full, n, &mut scratch);
+        for i in 0..m {
+            let mut row = vec![0.0f64; n];
+            gemm_nt_f32(1, n, k, &a[i * k..(i + 1) * k], k, &b, k, &mut row, n, &mut scratch);
+            assert_eq!(&full[i * n..(i + 1) * n], &row[..], "row {i}");
+        }
+        // And a two-way split along rows reproduces the full product.
+        let cut = 5;
+        let mut top = vec![0.0f64; cut * n];
+        let mut bot = vec![0.0f64; (m - cut) * n];
+        gemm_nt_f32(cut, n, k, &a[..cut * k], k, &b, k, &mut top, n, &mut scratch);
+        gemm_nt_f32(m - cut, n, k, &a[cut * k..], k, &b, k, &mut bot, n, &mut scratch);
+        assert_eq!(&full[..cut * n], &top[..]);
+        assert_eq!(&full[cut * n..], &bot[..]);
+    }
+
+    #[test]
+    fn gemm_nt_f32_respects_leading_dimensions() {
+        let mut rng = Rng::new(33);
+        let (m, n, k) = (3usize, 5usize, 4usize);
+        let a: Vec<f32> = (0..m * k).map(|_| rng.normal() as f32).collect();
+        let b: Vec<f32> = (0..n * k).map(|_| rng.normal() as f32).collect();
+        let ldc = 9;
+        let mut c = vec![-7.0f64; m * ldc];
+        let mut scratch = GemmScratch::default();
+        gemm_nt_f32(m, n, k, &a, k, &b, k, &mut c, ldc, &mut scratch);
+        for i in 0..m {
+            let mut want_row = vec![0.0f64; n];
+            gemm_nt_f32(1, n, k, &a[i * k..(i + 1) * k], k, &b, k, &mut want_row, n, &mut scratch);
+            assert_eq!(&c[i * ldc..i * ldc + n], &want_row[..]);
+            for j in n..ldc {
+                assert_eq!(c[i * ldc + j], -7.0, "untouched tail overwritten");
+            }
+        }
     }
 
     #[test]

@@ -32,7 +32,7 @@
 use anyhow::Result;
 use askotch::backend::{AnyBackend, Backend, HostBackend};
 use askotch::config::{
-    BackendKind, BandwidthSpec, ExperimentConfig, KernelKind, SamplingScheme, SolverKind,
+    BackendKind, BandwidthSpec, ExperimentConfig, KernelKind, Precision, SamplingScheme, SolverKind,
 };
 use askotch::coordinator::{Budget, Coordinator};
 use askotch::json::Json;
@@ -70,7 +70,7 @@ fn main() -> Result<()> {
                 "usage: askotch <solve|train|experiment|compare|testbed|info|serve|perf> \
                  [options]\n\
                  common: --backend auto|host|pjrt (default auto), --host-threads N, \
-                 --log FILE, --quiet, --profile\n\
+                 --precision auto|f32|f64 (default auto), --log FILE, --quiet, --profile\n\
                  lifecycle: train --save DIR, serve --model DIR, \
                  solve/train --checkpoint DIR [--checkpoint-every N] [--resume]\n\
                  run `askotch info` to inspect the selected backend"
@@ -81,11 +81,21 @@ fn main() -> Result<()> {
     if flag(&args, "profile") {
         let rows = obs::snapshot();
         // The span-tree summary for humans, and the same rows as a
-        // structured `profile` event for the log sink / CI gate.
+        // structured `profile` event for the log sink / CI gate. The
+        // dispatched SIMD ISA rides along so a profile is attributable
+        // to the microkernel that actually ran.
         if !rows.is_empty() {
             println!("{}", obs::render(&rows));
+            println!("simd isa: {}", askotch::linalg::dense::simd_isa());
         }
-        obs::info_kv("obs", "profile", &[("phases", obs::profile_json(&rows))]);
+        obs::info_kv(
+            "obs",
+            "profile",
+            &[
+                ("phases", obs::profile_json(&rows)),
+                ("simd_isa", Json::str(askotch::linalg::dense::simd_isa())),
+            ],
+        );
     }
     result
 }
@@ -94,9 +104,28 @@ fn artifacts_dir(args: &Args) -> String {
     args.get_or("artifacts", "artifacts")
 }
 
+/// `--precision auto|f32|f64`, for subcommands that have no experiment
+/// config to carry it (e.g. `info`, `serve --model`).
+fn precision_flag(args: &Args) -> Result<Precision> {
+    match args.get("precision") {
+        Some(s) => Precision::parse(s),
+        None => Ok(Precision::Auto),
+    }
+}
+
+/// `--precision` onto a config (the flag wins over a config file).
+fn apply_precision_flag(args: &Args, cfg: &mut ExperimentConfig) -> Result<()> {
+    if let Some(s) = args.get("precision") {
+        cfg.precision = Precision::parse(s)?;
+    }
+    Ok(())
+}
+
 /// Resolve the backend: `--backend` wins, then the config's `backend`
-/// field, then `auto`.
-fn make_backend(args: &Args, cfg_kind: BackendKind) -> Result<AnyBackend> {
+/// field, then `auto`. `precision` sets the host engine's kernel
+/// arithmetic (`Auto` = f64); the PJRT engine is f32-native and an
+/// explicit `--precision f64` on it is refused by the coordinator.
+fn make_backend(args: &Args, cfg_kind: BackendKind, precision: Precision) -> Result<AnyBackend> {
     let kind = match args.get("backend") {
         Some(s) => BackendKind::parse(s)?,
         None => cfg_kind,
@@ -106,15 +135,25 @@ fn make_backend(args: &Args, cfg_kind: BackendKind) -> Result<AnyBackend> {
     let force_host = kind == BackendKind::Host
         || (kind == BackendKind::Auto && args.get("host-threads").is_some());
     let backend = if force_host {
-        AnyBackend::Host(HostBackend::new(args.get_usize("host-threads", 0)))
+        AnyBackend::Host(
+            HostBackend::new(args.get_usize("host-threads", 0)).with_precision(precision),
+        )
     } else {
-        AnyBackend::from_kind(kind, &dir)?
+        match AnyBackend::from_kind(kind, &dir)? {
+            AnyBackend::Host(h) => AnyBackend::Host(h.with_precision(precision)),
+            b => b,
+        }
     };
     if let AnyBackend::Host(h) = &backend {
         obs::info_kv(
             "cli",
             "backend selected",
-            &[("backend", Json::str("host")), ("threads", Json::num(h.threads() as f64))],
+            &[
+                ("backend", Json::str("host")),
+                ("threads", Json::num(h.threads() as f64)),
+                ("precision", Json::str(h.precision().name())),
+                ("simd_isa", Json::str(askotch::linalg::dense::simd_isa())),
+            ],
         );
     } else {
         obs::info_kv(
@@ -154,6 +193,7 @@ fn config_from_args(args: &Args) -> Result<ExperimentConfig> {
     if let Some(b) = args.get("backend") {
         cfg.backend = BackendKind::parse(b)?;
     }
+    apply_precision_flag(args, &mut cfg)?;
     Ok(cfg)
 }
 
@@ -225,7 +265,7 @@ fn load_resume(args: &Args, cfg: &ExperimentConfig) -> Result<Option<Checkpoint>
 fn cmd_solve(args: &Args) -> Result<()> {
     let mut cfg = config_from_args(args)?;
     apply_checkpoint_flags(args, &mut cfg);
-    let backend = make_backend(args, cfg.backend)?;
+    let backend = make_backend(args, cfg.backend, cfg.precision)?;
     let coord = Coordinator::new(backend.as_dyn());
     let policy = Coordinator::checkpoint_policy(&cfg);
     let resume = load_resume(args, &cfg)?;
@@ -256,6 +296,7 @@ fn cmd_train(args: &Args) -> Result<()> {
         None => config_from_args(args)?,
     };
     apply_checkpoint_flags(args, &mut cfg);
+    apply_precision_flag(args, &mut cfg)?;
     // Fail before the (potentially hours-long) solve, not after it:
     // inducing-points weights are not packageable as model artifacts.
     anyhow::ensure!(
@@ -264,7 +305,7 @@ fn cmd_train(args: &Args) -> Result<()> {
          packaged as a model artifact (train a full-KRR solver, e.g. askotch)",
         cfg.solver.name()
     );
-    let backend = make_backend(args, cfg.backend)?;
+    let backend = make_backend(args, cfg.backend, cfg.precision)?;
     let coord = Coordinator::new(backend.as_dyn());
     let policy = Coordinator::checkpoint_policy(&cfg);
     let resume = load_resume(args, &cfg)?;
@@ -301,8 +342,9 @@ fn cmd_experiment(args: &Args) -> Result<()> {
         .get(1)
         .ok_or_else(|| anyhow::anyhow!("usage: askotch experiment <config.json>"))?;
     let text = std::fs::read_to_string(path)?;
-    let cfg = ExperimentConfig::from_json(&text)?;
-    let backend = make_backend(args, cfg.backend)?;
+    let mut cfg = ExperimentConfig::from_json(&text)?;
+    apply_precision_flag(args, &mut cfg)?;
+    let backend = make_backend(args, cfg.backend, cfg.precision)?;
     let coord = Coordinator::new(backend.as_dyn());
     // The config's checkpoint settings (and `--resume`) flow through
     // the same lifecycle entry point as `solve`/`train`.
@@ -324,7 +366,7 @@ fn cmd_experiment(args: &Args) -> Result<()> {
 
 fn cmd_compare(args: &Args) -> Result<()> {
     let base = config_from_args(args)?;
-    let backend = make_backend(args, base.backend)?;
+    let backend = make_backend(args, base.backend, base.precision)?;
     let coord = Coordinator::new(backend.as_dyn());
     let solvers = [
         SolverKind::Askotch,
@@ -417,6 +459,9 @@ fn cmd_testbed(args: &Args) -> Result<()> {
     }
     cfg.checkpoint_every = args.get_usize("checkpoint-every", cfg.checkpoint_every);
     cfg.resume = cfg.resume || args.has_flag("resume");
+    if let Some(s) = args.get("precision") {
+        cfg.precision = Precision::parse(s)?;
+    }
     cfg.profile = cfg.profile || flag(args, "profile");
 
     obs::info_kv(
@@ -430,6 +475,7 @@ fn cmd_testbed(args: &Args) -> Result<()> {
                 Json::str(&cfg.solvers.iter().map(|s| s.name()).collect::<Vec<_>>().join(",")),
             ),
             ("budget_secs", Json::num(cfg.budgets.time_limit_secs)),
+            ("precision", Json::str(cfg.precision.name())),
         ],
     );
     let outcome = testbed::run(&cfg)?;
@@ -454,11 +500,13 @@ fn cmd_testbed(args: &Args) -> Result<()> {
 }
 
 fn cmd_info(args: &Args) -> Result<()> {
-    let backend = make_backend(args, BackendKind::Auto)?;
+    let backend = make_backend(args, BackendKind::Auto, precision_flag(args)?)?;
     match &backend {
         AnyBackend::Host(h) => {
             println!("backend: host");
             println!("threads: {}", h.threads());
+            println!("precision: {}", h.precision().name());
+            println!("simd isa: {}", askotch::linalg::dense::simd_isa());
             println!(
                 "predict tile (n=2048, d=9): {} rows",
                 h.predict_tile(KernelKind::Rbf, 2048, 9)
@@ -469,6 +517,7 @@ fn cmd_info(args: &Args) -> Result<()> {
             let engine = p.engine();
             let m = engine.manifest();
             println!("backend: pjrt");
+            println!("precision: {}", p.precision().name());
             println!("platform: {}", engine.platform());
             println!("artifact dir: {:?}", m.dir);
             println!("ops: {:?}", m.ops());
@@ -500,7 +549,7 @@ fn cmd_perf(args: &Args) -> Result<()> {
 
     let mut cfg = config_from_args(args)?;
     cfg.solver = SolverKind::Askotch;
-    let backend = make_backend(args, cfg.backend)?;
+    let backend = make_backend(args, cfg.backend, cfg.precision)?;
     let coord = Coordinator::new(backend.as_dyn());
     let problem = coord.problem(&cfg)?;
     let iters = args.get_usize("iters", 200);
@@ -543,8 +592,11 @@ fn cmd_perf(args: &Args) -> Result<()> {
         );
     } else if let AnyBackend::Host(h) = &backend {
         println!(
-            "host backend: {} worker threads; step = gather + tiled K_BB + Nystrom + powering + O(nb) matvec",
-            h.threads()
+            "host backend: {} worker threads ({} kernels, simd {}); step = gather + tiled K_BB \
+             + Nystrom + powering + O(nb) matvec",
+            h.threads(),
+            h.precision().name(),
+            askotch::linalg::dense::simd_isa()
         );
     }
     Ok(())
@@ -556,17 +608,22 @@ fn serve_setup(
     args: &Args,
 ) -> Result<(AnyBackend, askotch::server::ModelSnapshot, askotch::json::Json)> {
     if let Some(path) = args.get("model") {
-        let backend = make_backend(args, BackendKind::Auto)?;
+        let backend = make_backend(args, BackendKind::Auto, precision_flag(args)?)?;
         let t0 = std::time::Instant::now();
         let artifact = ModelArtifact::load(path)?;
+        // Refuse cross-precision serving up front: an f32-trained model
+        // on an f64 backend (or vice versa) would silently change the
+        // arithmetic the weights were validated under.
+        artifact.ensure_precision(backend.as_dyn().precision())?;
         println!(
             "loaded model {path:?} in {} — no training at startup (solver {}, n={}, d={}, \
-             {} kernel, metric={:.5})",
+             {} kernel, {} weights, metric={:.5})",
             fmt::duration(t0.elapsed().as_secs_f64()),
             artifact.meta.solver,
             artifact.meta.n,
             artifact.meta.d,
             artifact.meta.kernel.name(),
+            artifact.meta.precision,
             artifact.meta.final_metric
         );
         let meta = artifact.meta.summary_json();
@@ -577,7 +634,8 @@ fn serve_setup(
         None => config_from_args(args)?,
     };
     cfg.solver = SolverKind::Askotch;
-    let backend = make_backend(args, cfg.backend)?;
+    apply_precision_flag(args, &mut cfg)?;
+    let backend = make_backend(args, cfg.backend, cfg.precision)?;
     let coord = Coordinator::new(backend.as_dyn());
     println!("training {} on {} (n={})...", cfg.solver.name(), cfg.dataset, cfg.n);
     let (problem, report) = coord.run_with_policy(

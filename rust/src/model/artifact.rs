@@ -16,7 +16,7 @@
 //! `POST /v1/admin/reload` hot-swaps one into a running server. See
 //! `docs/MODELS.md` for the schema and versioning rules.
 
-use crate::config::KernelKind;
+use crate::config::{KernelKind, Precision};
 use crate::coordinator::{KrrProblem, SolveReport};
 use crate::data::TaskKind;
 use crate::json::{self, Decoder, Json};
@@ -57,6 +57,10 @@ pub struct ModelMeta {
     /// Final training residual at save time (NaN if never measured).
     pub final_residual: f64,
     pub seed: u64,
+    /// Arithmetic the model was trained under (`"f64"` or `"f32"`).
+    /// Serving refuses to mix precisions ([`ModelArtifact::ensure_precision`]);
+    /// manifests written before this field existed load as `"f64"`.
+    pub precision: String,
 }
 
 /// Bitwise float comparison so metadata equality is total: a NaN
@@ -77,6 +81,7 @@ impl PartialEq for ModelMeta {
             && self.final_metric.to_bits() == other.final_metric.to_bits()
             && self.final_residual.to_bits() == other.final_residual.to_bits()
             && self.seed == other.seed
+            && self.precision == other.precision
     }
 }
 
@@ -95,6 +100,7 @@ impl ModelMeta {
             ("iters", Json::num(self.iters as f64)),
             ("final_metric", Json::num(self.final_metric)),
             ("train_residual", Json::num(self.final_residual)),
+            ("precision", Json::str(&self.precision)),
         ])
     }
 
@@ -155,6 +161,10 @@ impl ModelArtifact {
                 final_metric: report.final_metric,
                 final_residual: report.final_residual,
                 seed,
+                precision: match problem.precision {
+                    Precision::F32 => "f32".to_string(),
+                    _ => "f64".to_string(),
+                },
             },
             x_train: problem.train.x.clone(),
             weights: report.weights.clone(),
@@ -219,6 +229,20 @@ impl ModelArtifact {
                 s.parse::<u64>()
                     .map_err(|_| anyhow::anyhow!("{}: bad u64 seed {s:?}", d.path()))?
             },
+            // Pre-mixed-precision manifests carry no tag: they were
+            // all trained in f64.
+            precision: match root.opt_field("precision")? {
+                Some(d) => {
+                    let s = d.string()?;
+                    anyhow::ensure!(
+                        s == "f64" || s == "f32",
+                        "{}: expected \"f32\" or \"f64\", got {s:?}",
+                        d.path()
+                    );
+                    s
+                }
+                None => "f64".to_string(),
+            },
         };
         anyhow::ensure!(meta.sigma > 0.0, "model in {dir:?}: bandwidth must be positive");
         let slab_name = root.field("slab")?.string()?;
@@ -226,6 +250,27 @@ impl ModelArtifact {
         let x_train = super::slab::section(&sections, "x_train", meta.n * meta.d)?.to_vec();
         let weights = super::slab::section(&sections, "weights", meta.n)?.to_vec();
         Ok(ModelArtifact { meta, x_train, weights })
+    }
+
+    /// Refuse silent cross-precision mixing: a model trained under one
+    /// arithmetic must not be served (or warm-started) by a backend
+    /// running the other. The check is explicit rather than implicit —
+    /// an f32-trained weight vector fed to an exact f64 operator (or
+    /// vice versa) predicts *plausibly but differently* from the run
+    /// that produced its recorded metrics.
+    pub fn ensure_precision(&self, backend_precision: Precision) -> anyhow::Result<()> {
+        let want = match backend_precision {
+            Precision::F32 => "f32",
+            _ => "f64",
+        };
+        anyhow::ensure!(
+            self.meta.precision == want,
+            "model.json: precision is {:?} but this backend runs {want:?} — refusing to mix \
+             precisions; serve with --precision {} (matching backend) or retrain",
+            self.meta.precision,
+            self.meta.precision,
+        );
+        Ok(())
     }
 
     /// The serving snapshot this artifact describes (consumes the
@@ -238,6 +283,7 @@ impl ModelArtifact {
             n: self.meta.n,
             d: self.meta.d,
             weights: self.weights,
+            precision: self.meta.precision,
         }
     }
 }
@@ -340,6 +386,33 @@ mod tests {
         assert!(err.contains("full-KRR weights"), "got: {err}");
         report.weights = art.weights.clone();
         assert!(ModelArtifact::from_solve(&problem, &report, 0).is_ok());
+    }
+
+    #[test]
+    fn precision_tag_roundtrips_and_mixing_is_refused() {
+        let (_, art) = toy_artifact();
+        assert_eq!(art.meta.precision, "f64");
+        assert!(art.ensure_precision(Precision::F64).is_ok());
+        let err = art.ensure_precision(Precision::F32).unwrap_err().to_string();
+        assert!(err.contains("model.json: precision"), "got: {err}");
+
+        // An old manifest (no precision field) loads as f64.
+        let dir = temp_dir("precision");
+        art.save(&dir).unwrap();
+        let manifest = std::path::Path::new(&dir).join(MANIFEST_FILE);
+        let text = std::fs::read_to_string(&manifest).unwrap();
+        assert!(text.contains("\"precision\": \"f64\""));
+        std::fs::write(&manifest, text.replace("  \"precision\": \"f64\",\n", "")).unwrap();
+        let back = ModelArtifact::load(&dir).unwrap();
+        assert_eq!(back.meta.precision, "f64");
+
+        // A junk tag is rejected with the field path.
+        let text = std::fs::read_to_string(&manifest).unwrap();
+        std::fs::write(&manifest, text.replace("\"task\"", "\"precision\": \"f16\", \"task\""))
+            .unwrap();
+        let err = ModelArtifact::load(&dir).unwrap_err().to_string();
+        assert!(err.contains("model.precision"), "got: {err}");
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]

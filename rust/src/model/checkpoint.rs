@@ -96,6 +96,7 @@ impl Checkpoint {
             ("problem", Json::str(&self.problem)),
             ("iters", Json::num(self.iters as f64)),
             ("secs", Json::num(self.secs)),
+            ("precision", Json::str(&self.precision)),
             (
                 "rngs",
                 Json::Obj(
@@ -149,6 +150,17 @@ impl Checkpoint {
             root.field("iters")?.usize()?,
             root.field("secs")?.f64()?,
         );
+        // Pre-precision manifests carry no tag; those solves ran f64
+        // (the only arithmetic that existed when they were written).
+        if let Some(d) = root.opt_field("precision")? {
+            let p = d.string()?;
+            anyhow::ensure!(
+                p == "f64" || p == "f32",
+                "{}: unknown precision tag {p:?} (expected \"f64\" or \"f32\")",
+                d.path()
+            );
+            ck.precision = p;
+        }
         if let Some(rngs) = root.opt_field("rngs")? {
             let Json::Obj(m) = rngs.json() else {
                 anyhow::bail!("{}: expected object", rngs.path());
@@ -197,6 +209,7 @@ mod tests {
         let mut rng = Rng::new(3);
         rng.normal(); // leave a Box-Muller spare pending
         let mut ck = Checkpoint::new("pcg", "pcg(rpc,r=5,backend)", "toy", 17, 2.5);
+        ck.precision = "f32".to_string();
         ck.push_rng("main", rng.state());
         ck.push_vec("w", vec![1.0, -0.0, f64::NAN, 1.0 / 3.0]);
         ck.push_vec("res", vec![2.0; 4]);
@@ -209,6 +222,7 @@ mod tests {
         assert_eq!(back.problem, "toy");
         assert_eq!(back.iters, 17);
         assert_eq!(back.secs, 2.5);
+        assert_eq!(back.precision, "f32", "precision tag must roundtrip");
         let st = back.rng("main").unwrap();
         assert_eq!(st.s, rng.state().s);
         assert_eq!(

@@ -380,6 +380,7 @@ mod tests {
             n: 2,
             d: 2,
             weights: vec![1.0, 0.0],
+            precision: "f64".to_string(),
         }
     }
 

@@ -147,6 +147,9 @@ impl Metrics {
             ("rss_current_bytes", rss_cur),
             ("rss_peak_bytes", rss_peak),
             ("model", self.model_info()),
+            // The SIMD ISA the host microkernels dispatched to —
+            // precision numbers are only comparable within one ISA.
+            ("simd_isa", Json::str(crate::linalg::dense::simd_isa())),
             ("latency", window_json(&lat)),
             ("queue_wait", window_json(&b.queue_wait.sorted())),
             ("compute", window_json(&b.compute.sorted())),

@@ -21,8 +21,8 @@
 //!
 //! The `net` subsystem puts an HTTP/1.1 front end on the same channel.
 
-use crate::backend::Backend;
-use crate::config::KernelKind;
+use crate::backend::{host::par_sq_norms, Backend};
+use crate::config::{KernelKind, Precision};
 use crate::json::Json;
 use crate::kernels::fused;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -197,6 +197,10 @@ pub struct ModelSnapshot {
     pub n: usize,
     pub d: usize,
     pub weights: Vec<f64>,
+    /// Arithmetic the weights were trained under (`"f64"` or `"f32"`).
+    /// [`serve_reloadable`] refuses to swap in a snapshot whose
+    /// precision disagrees with the backend's.
+    pub precision: String,
 }
 
 /// A batched prediction backend.
@@ -215,21 +219,29 @@ pub trait Predictor {
 pub struct BackendPredictor<'a> {
     backend: &'a dyn Backend,
     model: ModelSnapshot,
-    /// Squared row norms of the model slab, computed once per snapshot:
-    /// without the cache every single-row request would pay an O(n d)
-    /// norm pass comparable to its whole kernel product. Empty when
-    /// the kernel's panel path ignores norms (Laplacian).
+    /// Squared row norms of the model slab, computed once per snapshot
+    /// (through the worker pool for large models): without the cache
+    /// every single-row request would pay an O(n d) norm pass
+    /// comparable to its whole kernel product. Empty when the kernel's
+    /// panel path ignores norms (Laplacian).
     train_sq_norms: Vec<f64>,
+    /// One-time f32 mirror of the model slab, built only when the
+    /// backend runs at [`Precision::F32`]; the batched predict then
+    /// goes through the mixed-precision cached path.
+    train_f32: Option<fused::F32Slab>,
 }
 
 impl<'a> BackendPredictor<'a> {
     pub fn new(backend: &'a dyn Backend, model: ModelSnapshot) -> BackendPredictor<'a> {
         let train_sq_norms = if fused::uses_norms(model.kernel) {
-            fused::sq_norms(&model.x_train, model.n, model.d)
+            par_sq_norms(&model.x_train, model.n, model.d, 0)
         } else {
             Vec::new()
         };
-        BackendPredictor { backend, model, train_sq_norms }
+        let train_f32 = (backend.precision() == Precision::F32).then(|| {
+            fused::F32Slab::build(&model.x_train, model.n, model.d, fused::uses_norms(model.kernel))
+        });
+        BackendPredictor { backend, model, train_sq_norms, train_f32 }
     }
 
     /// The snapshot currently served.
@@ -245,6 +257,17 @@ impl Predictor for BackendPredictor<'_> {
 
     fn predict_batch(&self, x_eval: &[f64], rows: usize) -> anyhow::Result<Vec<f64>> {
         let m = &self.model;
+        if let Some(f32slab) = &self.train_f32 {
+            // f32 backend: serve through the cached mixed-precision
+            // path (f32 panels, f64 accumulation).
+            let slab = fused::SlabRef {
+                sq: (!self.train_sq_norms.is_empty()).then_some(&self.train_sq_norms[..]),
+                fp32: Some(f32slab),
+            };
+            return self.backend.predict_cached(
+                m.kernel, &m.x_train, m.n, m.d, &m.weights, x_eval, rows, m.sigma, slab,
+            );
+        }
         self.backend.predict_with_norms(
             m.kernel,
             &m.x_train,
@@ -421,6 +444,22 @@ pub fn serve_reloadable(
             answer_batch(&predictor, batch, &mut stats, live);
         }
         if let Some(ReloadRequest { model, meta, reply }) = reload {
+            // Refuse cross-precision swaps: an f32-trained weight
+            // vector on an f64 backend (or vice versa) would serve
+            // plausible-but-wrong predictions. The old model keeps
+            // serving.
+            let want = match backend.precision() {
+                Precision::F32 => "f32",
+                _ => "f64",
+            };
+            if model.precision != want {
+                let _ = reply.send(Err(anyhow::anyhow!(
+                    "model.json: precision is {:?} but this server's backend runs {want:?} — \
+                     reload refused; restart the server with the matching --precision",
+                    model.precision,
+                )));
+                continue;
+            }
             predictor = BackendPredictor::new(backend, *model);
             stats.reloads += 1;
             if let Some(slot) = model_info {
@@ -566,6 +605,7 @@ mod tests {
             n: 2,
             d: 2,
             weights: vec![first_weight, 0.0],
+            precision: "f64".to_string(),
         }
     }
 
@@ -594,6 +634,7 @@ mod tests {
             n: 1,
             d: 2,
             weights: vec![1.0],
+            precision: "f64".to_string(),
         };
         let backend = HostBackend::new(1);
         let (tx, rx) = mpsc::channel::<Job>();
@@ -643,6 +684,31 @@ mod tests {
             info.lock().unwrap().get("solver").unwrap().as_str().unwrap(),
             "v2"
         );
+    }
+
+    #[test]
+    fn cross_precision_reload_is_refused_and_old_model_keeps_serving() {
+        let backend = HostBackend::new(1); // f64 backend
+        let (tx, rx) = mpsc::channel::<Job>();
+        let mut f32_model = toy_model(2.0);
+        f32_model.precision = "f32".to_string();
+        let (ack_tx, ack_rx) = mpsc::channel();
+        tx.send(Job::Reload(ReloadRequest {
+            model: Box::new(f32_model),
+            meta: Json::Null,
+            reply: ack_tx,
+        }))
+        .unwrap();
+        let (job, rrx) = predict_job(vec![0.0, 0.0]);
+        tx.send(job).unwrap();
+        drop(tx);
+        let stats =
+            serve_reloadable(&backend, toy_model(1.0), rx, &ServerConfig::default(), None, None);
+        let err = ack_rx.recv().unwrap().unwrap_err().to_string();
+        assert!(err.contains("model.json: precision"), "got: {err}");
+        assert_eq!(stats.reloads, 0, "refused swap must not count as a reload");
+        // The original model still answers.
+        assert!((rrx.recv().unwrap().unwrap() - 1.0).abs() < 1e-12);
     }
 
     #[test]

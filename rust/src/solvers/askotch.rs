@@ -204,6 +204,19 @@ impl SolveState for AskotchState<'_> {
         Ok(StepOutcome::Continue)
     }
 
+    fn refine(&mut self) -> anyhow::Result<()> {
+        // SAP refinement: one extra correction step whose block
+        // gradient runs in exact f64 (`SapStepper::step_refined`),
+        // re-anchoring the sampled coordinates against the f32
+        // operator's drift. Draws from the same sampler stream at a
+        // deterministic iteration count, so the corrected trajectory
+        // stays resumable; the iteration counter is not advanced (it
+        // is a correction, not a budgeted iteration).
+        let idx = self.sampler.sample_block(self.problem.n(), self.b);
+        self.stepper.step_refined(&idx)?;
+        Ok(())
+    }
+
     fn weights(&self) -> Vec<f64> {
         self.stepper.weights()
     }

@@ -11,7 +11,7 @@
 //! resume; the CG iterates are the state machine's resumable core.
 
 use crate::backend::Backend;
-use crate::config::ExperimentConfig;
+use crate::config::{ExperimentConfig, Precision};
 use crate::coordinator::{Budget, KrrProblem};
 use crate::kernels::fused;
 use crate::linalg::{dense, Chol, Mat};
@@ -72,8 +72,11 @@ impl Solver for FalkonSolver {
         }
         // Norm caches for the two slabs every CG iteration multiplies
         // against: the inducing points (computed once here) and the
-        // training slab (cached on the problem).
+        // training slab (cached on the problem). Under f32 the
+        // inducing-point slab also gets its one-time f32 mirror.
         let xm_sq = fused::sq_norms(&xm, m, d);
+        let xm_f32 = (backend.precision() == Precision::F32)
+            .then(|| fused::F32Slab::build(&xm, m, d, fused::uses_norms(problem.kernel)));
 
         // K_mm and its Cholesky preconditioner (the O(m^2)/O(m^3) cost).
         let sp_kmm = crate::obs::span("kmm");
@@ -100,8 +103,9 @@ impl Solver for FalkonSolver {
         drop(sp_rhs);
         let rhs_norm = dense::norm(&rhs).max(1e-300);
 
-        // CG state: w = 0, r = rhs, z = P^{-1} r, p = z.
-        let res = rhs;
+        // CG state: w = 0, r = rhs, z = P^{-1} r, p = z. The rhs is
+        // kept: the refinement restart recomputes res = rhs - A w.
+        let res = rhs.clone();
         let z = pre.solve(&res);
         let p = z.clone();
         let rz = dense::dot(&res, &z);
@@ -112,9 +116,11 @@ impl Solver for FalkonSolver {
             m,
             xm,
             xm_sq,
+            xm_f32,
             kmm,
             pre,
             w: vec![0.0f64; m],
+            rhs,
             res,
             z,
             p,
@@ -135,9 +141,13 @@ pub struct FalkonState<'a> {
     m: usize,
     xm: Vec<f64>,
     xm_sq: Vec<f64>,
+    /// f32 mirror of the inducing-point slab (`--precision f32` only).
+    xm_f32: Option<fused::F32Slab>,
     kmm: Mat,
     pre: Chol,
     w: Vec<f64>,
+    /// K_nm^T y, kept for the refinement restart.
+    rhs: Vec<f64>,
     res: Vec<f64>,
     z: Vec<f64>,
     p: Vec<f64>,
@@ -147,33 +157,62 @@ pub struct FalkonState<'a> {
 }
 
 impl FalkonState<'_> {
-    /// Operator A(v) = K_nm^T (K_nm v) + lam K_mm v via the backend.
-    fn apply(&self, v: &[f64]) -> anyhow::Result<Vec<f64>> {
+    /// Operator A(v) = K_nm^T (K_nm v) + lam K_mm v via the backend:
+    /// the cached path (f32 panels under `--precision f32`) in the hot
+    /// loop, the exact-f64 norms path when `exact` (the refinement
+    /// restart and, trivially, every f64 run).
+    fn apply(&self, v: &[f64], exact: bool) -> anyhow::Result<Vec<f64>> {
         let (n, d) = (self.problem.n(), self.problem.d());
         let m = self.m;
         let lam = self.problem.lam;
-        let t = self.backend.kernel_matvec_with_norms(
-            self.problem.kernel,
-            &self.problem.train.x,
-            n,
-            &self.xm,
-            m,
-            d,
-            v,
-            self.problem.sigma,
-            Some(&self.xm_sq),
-        )?;
-        let mut s = self.backend.kernel_matvec_with_norms(
-            self.problem.kernel,
-            &self.xm,
-            m,
-            &self.problem.train.x,
-            n,
-            d,
-            &t,
-            self.problem.sigma,
-            Some(&self.problem.train_sq_norms),
-        )?;
+        let mut s = if exact {
+            let t = self.backend.kernel_matvec_with_norms(
+                self.problem.kernel,
+                &self.problem.train.x,
+                n,
+                &self.xm,
+                m,
+                d,
+                v,
+                self.problem.sigma,
+                Some(&self.xm_sq),
+            )?;
+            self.backend.kernel_matvec_with_norms(
+                self.problem.kernel,
+                &self.xm,
+                m,
+                &self.problem.train.x,
+                n,
+                d,
+                &t,
+                self.problem.sigma,
+                Some(&self.problem.train_sq_norms),
+            )?
+        } else {
+            let xm_slab = fused::SlabRef { sq: Some(&self.xm_sq), fp32: self.xm_f32.as_ref() };
+            let t = self.backend.kernel_matvec_cached(
+                self.problem.kernel,
+                &self.problem.train.x,
+                n,
+                &self.xm,
+                m,
+                d,
+                v,
+                self.problem.sigma,
+                xm_slab,
+            )?;
+            self.backend.kernel_matvec_cached(
+                self.problem.kernel,
+                &self.xm,
+                m,
+                &self.problem.train.x,
+                n,
+                d,
+                &t,
+                self.problem.sigma,
+                self.problem.train_slab(),
+            )?
+        };
         let kv = self.kmm.matvec(v);
         for i in 0..m {
             s[i] += lam * kv[i];
@@ -193,7 +232,7 @@ impl SolveState for FalkonState<'_> {
 
     fn step(&mut self) -> anyhow::Result<StepOutcome> {
         let m = self.m;
-        let ap = self.apply(&self.p)?;
+        let ap = self.apply(&self.p, false)?;
         let pap = dense::dot(&self.p, &ap);
         if pap <= 0.0 || !pap.is_finite() {
             return Ok(if pap.is_finite() { StepOutcome::Abort } else { StepOutcome::Diverged });
@@ -212,6 +251,19 @@ impl SolveState for FalkonState<'_> {
         }
         self.iters += 1;
         Ok(StepOutcome::Continue)
+    }
+
+    fn refine(&mut self) -> anyhow::Result<()> {
+        // Exact-f64 residual restart: res = rhs - A w through the
+        // norms path, then re-derive the preconditioned direction. See
+        // the PCG twin for the inexact-operator rationale.
+        let m = self.m;
+        let aw = self.apply(&self.w, true)?;
+        self.res = (0..m).map(|i| self.rhs[i] - aw[i]).collect();
+        self.z = self.pre.solve(&self.res);
+        self.rz = dense::dot(&self.res, &self.z);
+        self.p = self.z.clone();
+        Ok(())
     }
 
     fn weights(&self) -> Vec<f64> {

@@ -19,7 +19,10 @@ pub mod falkon;
 pub mod pcg;
 pub mod state;
 
-pub use state::{drive, Checkpoint, DrivePolicy, SolveState, StepOutcome, CHECKPOINT_VERSION};
+pub use state::{
+    drive, Checkpoint, DrivePolicy, SolveState, StepOutcome, CHECKPOINT_VERSION,
+    DEFAULT_REFINE_EVERY,
+};
 
 use crate::backend::Backend;
 use crate::coordinator::{Budget, KrrProblem, SolveReport};
@@ -115,10 +118,16 @@ pub trait Solver {
         };
         // Setup time (preconditioners, eigensystems, sketches) counts
         // against the wall budget, exactly as when it lived inside the
-        // old monolithic loops.
+        // old monolithic loops. f32 problems get the default
+        // iterative-refinement cadence; f64 runs never refine.
         let policy = DrivePolicy {
             eval_every: self.eval_every_override(),
             base_secs: t_init.elapsed().as_secs_f64(),
+            refine_every: match problem.precision {
+                crate::config::Precision::F32 => DEFAULT_REFINE_EVERY,
+                _ => 0,
+            },
+            precision: problem.precision,
             ..Default::default()
         };
         drive(name, state.as_mut(), problem, budget, obs, &policy)

@@ -133,8 +133,8 @@ impl PcgSolver {
     }
 }
 
-/// K @ v (without the ridge term), through the backend or the f64
-/// scalar oracle.
+/// K @ v (without the ridge term), through the backend's cached path
+/// (f32 panels under `--precision f32`) or the f64 scalar oracle.
 fn kernel_matvec_full(
     backend: &dyn Backend,
     problem: &KrrProblem,
@@ -146,7 +146,7 @@ fn kernel_matvec_full(
         let idx: Vec<usize> = (0..n).collect();
         Ok(kernels::rows_matvec(problem.kernel, &problem.train.x, n, d, &idx, v, problem.sigma))
     } else {
-        backend.kernel_matvec_with_norms(
+        backend.kernel_matvec_cached(
             problem.kernel,
             &problem.train.x,
             n,
@@ -155,9 +155,29 @@ fn kernel_matvec_full(
             d,
             v,
             problem.sigma,
-            Some(&problem.train_sq_norms),
+            problem.train_slab(),
         )
     }
+}
+
+/// K @ v in exact f64 through the norms path — the refinement arm.
+fn kernel_matvec_exact(
+    backend: &dyn Backend,
+    problem: &KrrProblem,
+    v: &[f64],
+) -> anyhow::Result<Vec<f64>> {
+    let (n, d) = (problem.n(), problem.d());
+    backend.kernel_matvec_with_norms(
+        problem.kernel,
+        &problem.train.x,
+        n,
+        &problem.train.x,
+        n,
+        d,
+        v,
+        problem.sigma,
+        Some(&problem.train_sq_norms),
+    )
 }
 
 fn symmetrize(a: &Mat) -> Mat {
@@ -308,6 +328,32 @@ impl SolveState for PcgState<'_> {
         }
         self.iters += 1;
         Ok(StepOutcome::Continue)
+    }
+
+    fn refine(&mut self) -> anyhow::Result<()> {
+        if self.starved {
+            return Ok(());
+        }
+        // Iterative refinement (Avron et al. 2017's inexact-operator
+        // contract): recompute the residual in exact f64 against the
+        // current iterate — res = y - (K + lam I) w — and restart the
+        // CG recurrence from the corrected residual, discarding the
+        // drifted direction. The f32 operator then only has to be
+        // accurate *between* corrections.
+        let n = self.problem.n();
+        let lam = self.problem.lam;
+        let mut kw = kernel_matvec_exact(self.backend, self.problem, &self.w)?;
+        for i in 0..n {
+            kw[i] += lam * self.w[i];
+        }
+        self.res = (0..n).map(|i| self.problem.train.y[i] - kw[i]).collect();
+        self.zv = match &self.precond {
+            Some(pc) => pc.apply(&self.res),
+            None => self.res.clone(),
+        };
+        self.rz = dense::dot(&self.res, &self.zv);
+        self.p = self.zv.clone();
+        Ok(())
     }
 
     fn weights(&self) -> Vec<f64> {

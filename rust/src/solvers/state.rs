@@ -20,6 +20,7 @@
 //! of O(n r). Persistence (JSON manifest + binary slab) lives in
 //! `crate::model::checkpoint`.
 
+use crate::config::Precision;
 use crate::coordinator::{Budget, KrrProblem, SolveReport};
 use crate::metrics::Trace;
 use crate::solvers::{eval_every, looks_diverged, Observer};
@@ -29,6 +30,12 @@ use std::time::Instant;
 /// Format version of the checkpoint schema (bumped on layout changes;
 /// load rejects mismatches instead of misreading state).
 pub const CHECKPOINT_VERSION: u32 = 1;
+
+/// Default iterative-refinement cadence under [`Precision::F32`]: one
+/// exact-f64 residual correction every this many f32 iterations. Chosen
+/// to amortize the f64 pass to ~2% of wall clock while bounding the
+/// accumulated single-precision drift between corrections.
+pub const DEFAULT_REFINE_EVERY: usize = 50;
 
 /// What one call to [`SolveState::step`] / [`SolveState::eval`] decided
 /// about the solve.
@@ -62,6 +69,16 @@ pub trait SolveState {
 
     /// Advance one iteration.
     fn step(&mut self) -> anyhow::Result<StepOutcome>;
+
+    /// Iterative-refinement hook: recompute the family's residual
+    /// notion (or take one exact step) in full f64, correcting the
+    /// drift the f32 operator accumulates between calls. [`drive`]
+    /// invokes it every [`DrivePolicy::refine_every`] iterations; the
+    /// default is a no-op, correct for solvers that always compute
+    /// exactly (Cholesky) and for f64 runs (`refine_every == 0`).
+    fn refine(&mut self) -> anyhow::Result<()> {
+        Ok(())
+    }
 
     /// Current full weights in f64 (length n for full KRR, m for
     /// inducing points).
@@ -115,6 +132,10 @@ pub struct Checkpoint {
     pub rngs: Vec<(String, RngState)>,
     /// Named f64 slabs, in export order (scalars are length-1 slabs).
     pub vectors: Vec<(String, Vec<f64>)>,
+    /// Operating precision of the run that took the checkpoint
+    /// (`"f64"` / `"f32"`): resuming under a different precision is
+    /// refused (the continued trajectory would silently differ).
+    pub precision: String,
 }
 
 impl Checkpoint {
@@ -127,6 +148,7 @@ impl Checkpoint {
             secs,
             rngs: Vec::new(),
             vectors: Vec::new(),
+            precision: "f64".to_string(),
         }
     }
 
@@ -208,6 +230,14 @@ pub struct DrivePolicy {
     /// passes the checkpoint's `secs` so trace timestamps and time
     /// budgets continue instead of restarting.
     pub base_secs: f64,
+    /// Call [`SolveState::refine`] every this many completed
+    /// iterations (0 = never — the f64 default; f32 runs default to
+    /// [`DEFAULT_REFINE_EVERY`]).
+    pub refine_every: usize,
+    /// Operating precision of this run, stamped into every checkpoint
+    /// so cross-precision resumes are refused. `Auto` stamps as f64
+    /// (the host default).
+    pub precision: Precision,
 }
 
 /// The one outer loop shared by every solver family: budgets, eval
@@ -250,12 +280,24 @@ pub fn drive(
             StepOutcome::Continue | StepOutcome::Done => {}
         }
         obs.on_iter(state.iters(), el());
+        // Refinement before the checkpoint: the f64 correction lands at
+        // a deterministic iteration count, so a captured-and-resumed
+        // solve replays the same corrected trajectory.
+        if policy.refine_every > 0 && state.iters() % policy.refine_every == 0 {
+            let _sp = crate::obs::span("solve/refine");
+            state.refine()?;
+        }
         // Checkpoint first: the completed step's state is durable even
         // if the eval below detects divergence (a resumed run then
         // re-diverges identically — the checkpoint is still honest).
         if policy.checkpoint_every > 0 && state.iters() % policy.checkpoint_every == 0 {
             let _sp = crate::obs::span("solve/checkpoint");
-            state.checkpoint(el()).save(&policy.checkpoint_path)?;
+            let mut ck = state.checkpoint(el());
+            ck.precision = match policy.precision {
+                Precision::F32 => "f32".to_string(),
+                _ => "f64".to_string(),
+            };
+            ck.save(&policy.checkpoint_path)?;
         }
         let mut stop = out == StepOutcome::Done;
         if stop || state.iters() % eval_stride == 0 || budget.exhausted(state.iters(), el()) {

@@ -30,7 +30,7 @@ pub mod runner;
 pub use report::render_report;
 pub use runner::{run, RunRecord, TestbedOutcome};
 
-use crate::config::{BudgetSettings, SolverKind, TestbedScale};
+use crate::config::{BudgetSettings, Precision, SolverKind, TestbedScale};
 use crate::json::{self, Decoder};
 
 /// Everything one `askotch testbed` invocation runs: which tasks (scale
@@ -72,6 +72,10 @@ pub struct TestbedConfig {
     pub checkpoint_every: usize,
     /// Resume each (task, solver) run from its checkpoint if present.
     pub resume: bool,
+    /// Kernel arithmetic for every worker backend (`Auto` = f64). Under
+    /// `F32` the hot matvecs run the f32 panel path with periodic f64
+    /// refinement; evals and final metrics stay f64.
+    pub precision: Precision,
     /// Print the per-(task, solver) phase-breakdown table on exit
     /// (`--profile`). Phase collection itself is always on — records
     /// carry their [`crate::obs`] profile either way.
@@ -96,6 +100,7 @@ impl Default for TestbedConfig {
             checkpoint_dir: String::new(),
             checkpoint_every: 0,
             resume: false,
+            precision: Precision::Auto,
             profile: false,
         }
     }
@@ -167,6 +172,10 @@ impl TestbedConfig {
         }
         if let Some(d) = root.opt_field("resume")? {
             c.resume = d.bool()?;
+        }
+        if let Some(d) = root.opt_field("precision")? {
+            c.precision =
+                Precision::parse(d.str()?).map_err(|e| anyhow::anyhow!("{}: {e}", d.path()))?;
         }
         if let Some(d) = root.opt_field("profile")? {
             c.profile = d.bool()?;

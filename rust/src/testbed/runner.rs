@@ -3,9 +3,10 @@
 //! run recorded as a structured [`RunRecord`].
 
 use super::{domain_of, TestbedConfig};
-use crate::backend::HostBackend;
+use crate::backend::{Backend, HostBackend};
 use crate::config::{
-    BackendKind, BandwidthSpec, ExperimentConfig, KernelKind, RhoMode, SamplingScheme, SolverKind,
+    BackendKind, BandwidthSpec, ExperimentConfig, KernelKind, Precision, RhoMode, SamplingScheme,
+    SolverKind,
 };
 use crate::coordinator::{Budget, Coordinator, KrrProblem, SolveReport};
 use crate::data::{synthetic, Dataset, TaskKind};
@@ -246,6 +247,11 @@ fn experiment_for(cfg: &TestbedConfig, meta: &TaskMeta, kind: SolverKind) -> Exp
         time_limit_secs: cfg.budgets.time_limit_secs,
         track_residual: cfg.track_residual,
         backend: BackendKind::Host,
+        precision: cfg.precision,
+        // Testbed checkpointing is configured suite-wide on
+        // `TestbedConfig` and applied in `run_one`, not per experiment.
+        checkpoint_dir: String::new(),
+        checkpoint_every: 0,
     }
 }
 
@@ -275,7 +281,7 @@ pub fn run(cfg: &TestbedConfig) -> anyhow::Result<TestbedOutcome> {
     std::thread::scope(|s| {
         for _ in 0..jobs {
             s.spawn(|| {
-                let backend = HostBackend::new(job_threads);
+                let backend = HostBackend::new(job_threads).with_precision(cfg.precision);
                 loop {
                     let next = queue.lock().unwrap().pop();
                     let Some((index, ds)) = next else { break };
@@ -325,7 +331,7 @@ fn run_task(
         lam_unscaled,
         cfg.seed,
     ) {
-        Ok(p) => p,
+        Ok(p) => p.with_precision(backend.precision()),
         Err(e) => {
             return cfg
                 .solvers
@@ -396,6 +402,11 @@ fn run_one(
     obs: &mut dyn Observer,
 ) -> anyhow::Result<SolveReport> {
     let mut policy = DrivePolicy { eval_every: solver.eval_every_override(), ..Default::default() };
+    policy.precision = problem.precision;
+    policy.refine_every = match problem.precision {
+        Precision::F32 => crate::solvers::DEFAULT_REFINE_EVERY,
+        _ => 0,
+    };
     if !cfg.checkpoint_dir.is_empty() {
         policy.checkpoint_every = if cfg.checkpoint_every > 0 {
             cfg.checkpoint_every
@@ -416,6 +427,17 @@ fn run_one(
             .join(crate::model::checkpoint::MANIFEST_FILE);
         if manifest.exists() {
             let ck = Checkpoint::load(&policy.checkpoint_path)?;
+            let want = match problem.precision {
+                Precision::F32 => "f32",
+                _ => "f64",
+            };
+            anyhow::ensure!(
+                ck.precision == want,
+                "checkpoint.json: precision is {:?} but this run resolves to {want:?} — \
+                 resuming across precisions is refused (the f32 and f64 trajectories are \
+                 not interchangeable); rerun with the checkpoint's precision",
+                ck.precision,
+            );
             state.restore(&ck)?;
             policy.base_secs += ck.secs;
         }

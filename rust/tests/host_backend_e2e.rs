@@ -169,6 +169,7 @@ fn auto_backend_falls_back_to_host_and_serves() {
         n: problem.n(),
         d: problem.d(),
         weights: w.clone(),
+        precision: "f64".to_string(),
     };
     let want = runtime_ops::predict(
         backend.as_dyn(),

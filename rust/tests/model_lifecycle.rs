@@ -11,7 +11,7 @@
 //!    /healthz and /metrics. This is the CI gate for the lifecycle.
 
 use askotch::backend::{Backend, HostBackend};
-use askotch::config::{BandwidthSpec, ExperimentConfig, KernelKind, SolverKind};
+use askotch::config::{BandwidthSpec, ExperimentConfig, KernelKind, Precision, SolverKind};
 use askotch::coordinator::{Coordinator, KrrProblem};
 use askotch::data::synthetic;
 use askotch::json;
@@ -206,6 +206,110 @@ fn checkpoint_refuses_mismatched_solver_or_problem() {
     assert!(coord
         .run_with_policy(&cfg, &mut NullObserver, &DrivePolicy::default(), Some(&ck))
         .is_err());
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// A small Askotch solve under `precision`, saved as a model artifact
+/// in `dir` (the library path under `train --save --precision ...`).
+fn train_and_save(precision: Precision, dir: &str) {
+    let backend = HostBackend::new(2).with_precision(precision);
+    let coord = Coordinator::new(&backend);
+    let cfg = ExperimentConfig {
+        name: format!("lifecycle_precision_{}", precision.name()),
+        dataset: "physics_like".into(),
+        n: 240,
+        d: 8,
+        solver: SolverKind::Askotch,
+        rank: 10,
+        seed: 3,
+        max_iters: 8,
+        time_limit_secs: 1e9,
+        precision,
+        ..Default::default()
+    };
+    let policy = DrivePolicy { eval_every: 1_000_000, ..Default::default() };
+    let (problem, report) =
+        coord.run_with_policy(&cfg, &mut NullObserver, &policy, None).unwrap();
+    let _ = std::fs::remove_dir_all(dir);
+    ModelArtifact::from_solve(&problem, &report, cfg.seed).unwrap().save(dir).unwrap();
+}
+
+/// `train --save --precision f32` then serving the artifact on an f64
+/// backend must be refused with the manifest field path in the error —
+/// and vice versa. Matching precisions pass the same gate.
+#[test]
+fn serving_a_model_across_precisions_is_refused() {
+    let dir_f32 = temp_dir("precision_model_f32");
+    let dir_f64 = temp_dir("precision_model_f64");
+    train_and_save(Precision::F32, &dir_f32);
+    train_and_save(Precision::F64, &dir_f64);
+
+    let f32_model = ModelArtifact::load(&dir_f32).unwrap();
+    assert_eq!(f32_model.meta.precision, "f32", "artifact records its training arithmetic");
+    let f64_model = ModelArtifact::load(&dir_f64).unwrap();
+    assert_eq!(f64_model.meta.precision, "f64");
+
+    // The gate `serve --model` applies before standing the stack up.
+    let err = f32_model.ensure_precision(Precision::F64).unwrap_err().to_string();
+    assert!(err.contains("model.json: precision"), "got: {err}");
+    let err = f64_model.ensure_precision(Precision::F32).unwrap_err().to_string();
+    assert!(err.contains("model.json: precision"), "got: {err}");
+
+    // Matching backend precisions serve fine.
+    f32_model.ensure_precision(Precision::F32).unwrap();
+    f64_model.ensure_precision(Precision::F64).unwrap();
+    let _ = std::fs::remove_dir_all(&dir_f32);
+    let _ = std::fs::remove_dir_all(&dir_f64);
+}
+
+/// A checkpoint taken under one precision must refuse to resume under
+/// the other, with the manifest field path in the error.
+#[test]
+fn resuming_a_checkpoint_across_precisions_is_refused() {
+    let run = |precision: Precision, dir: &str, resume: Option<&Checkpoint>| {
+        let backend = HostBackend::new(2).with_precision(precision);
+        let coord = Coordinator::new(&backend);
+        let cfg = ExperimentConfig {
+            name: "lifecycle_precision_resume".into(),
+            dataset: "physics_like".into(),
+            n: 240,
+            d: 8,
+            solver: SolverKind::Pcg,
+            rank: 10,
+            seed: 3,
+            max_iters: 6,
+            time_limit_secs: 1e9,
+            precision,
+            ..Default::default()
+        };
+        let policy = DrivePolicy {
+            eval_every: 1_000_000,
+            checkpoint_every: 6,
+            checkpoint_path: dir.to_string(),
+            ..Default::default()
+        };
+        coord.run_with_policy(&cfg, &mut NullObserver, &policy, resume).map(|_| ())
+    };
+
+    let dir = temp_dir("precision_ckpt_f32");
+    let _ = std::fs::remove_dir_all(&dir);
+    run(Precision::F32, &dir, None).unwrap();
+    let ck_f32 = Checkpoint::load(&dir).unwrap();
+    assert_eq!(ck_f32.precision, "f32", "checkpoint records the run's arithmetic");
+    let err = run(Precision::F64, &dir, Some(&ck_f32)).unwrap_err().to_string();
+    assert!(err.contains("checkpoint.json: precision"), "got: {err}");
+    // Same precision resumes fine.
+    run(Precision::F32, &dir, Some(&ck_f32)).unwrap();
+    let _ = std::fs::remove_dir_all(&dir);
+
+    // And the f64 -> f32 direction.
+    let dir = temp_dir("precision_ckpt_f64");
+    let _ = std::fs::remove_dir_all(&dir);
+    run(Precision::F64, &dir, None).unwrap();
+    let ck_f64 = Checkpoint::load(&dir).unwrap();
+    assert_eq!(ck_f64.precision, "f64");
+    let err = run(Precision::F32, &dir, Some(&ck_f64)).unwrap_err().to_string();
+    assert!(err.contains("checkpoint.json: precision"), "got: {err}");
     let _ = std::fs::remove_dir_all(&dir);
 }
 

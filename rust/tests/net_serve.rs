@@ -47,6 +47,7 @@ fn trained_model() -> (ModelSnapshot, askotch::data::Dataset) {
         n: train.n,
         d: train.d,
         weights,
+        precision: "f64".to_string(),
     };
     (model, test)
 }

@@ -274,6 +274,107 @@ fn prop_fused_engine_parity_extreme_shapes() {
     });
 }
 
+/// The f32 panel path's documented parity bar (`docs/BACKENDS.md`):
+/// every matvec entry within `5e-4 * max(1, ||v||_1)` of the f64 scalar
+/// reference, over the same extreme shapes, bandwidths, and
+/// near-duplicate-row cancellation stress the f64 bar is pinned on.
+#[test]
+fn prop_f32_panel_matvec_parity_extreme_shapes() {
+    use askotch::config::Precision;
+    use askotch::kernels::fused::{F32Slab, SlabRef};
+    check("f32 parity", 25, |g| {
+        let d = *g.choice(&[1usize, 3, 50, 784]);
+        let n1 = g.usize_in(1, 24);
+        let n2 = g.usize_in(1, 80);
+        let sigma = *g.choice(&[0.05, 0.3, 1.0, 8.0]) * (d as f64).sqrt();
+        let kind = *g.choice(&ALL_KERNELS);
+        let threads = g.usize_in(1, 4);
+        let mut rng = askotch::util::Rng::new(g.rng().next_u64());
+        let x1: Vec<f64> = (0..n1 * d).map(|_| rng.normal()).collect();
+        let mut x2: Vec<f64> = (0..n2 * d).map(|_| rng.normal()).collect();
+        // near-duplicate stress: the distance-algebra cancellation case
+        for t in 0..d {
+            x2[t] = x1[t] + 1e-9;
+        }
+        // dense v — mostly-zero v routes through the exact gathered
+        // walk, which the sparse prop above already pins
+        let v: Vec<f64> = (0..n2).map(|_| rng.normal()).collect();
+        let backend = HostBackend::new(threads).with_precision(Precision::F32);
+        let slab = F32Slab::build(&x2, n2, d, true);
+
+        let want = kernels::matrix(kind, &x1, n1, &x2, n2, d, sigma).matvec(&v);
+        let got = backend
+            .kernel_matvec_cached(
+                kind,
+                &x1,
+                n1,
+                &x2,
+                n2,
+                d,
+                &v,
+                sigma,
+                SlabRef { sq: None, fp32: Some(&slab) },
+            )
+            .map_err(|e| e.to_string())?;
+        let tol = 5e-4 * v.iter().map(|x| x.abs()).sum::<f64>().max(1.0);
+        for (a, b) in got.iter().zip(&want) {
+            prop_assert!(
+                (a - b).abs() <= tol,
+                "{kind:?} d={d} sigma={sigma:.3}: f32 {a} vs f64 {b} (tol {tol:.2e})"
+            );
+        }
+        Ok(())
+    });
+}
+
+/// Like the f64 engine, the f32 panel path partitions work by `d` only:
+/// its matvec must be *bit-identical* for any worker count (the per-row
+/// f64 accumulation order never crosses a thread boundary).
+#[test]
+fn f32_panel_matvec_is_thread_count_invariant() {
+    use askotch::config::Precision;
+    use askotch::kernels::fused::{F32Slab, SlabRef};
+    let (n1, n2, d, sigma) = (37, 301, 17, 1.4);
+    let mut rng = askotch::util::Rng::new(78);
+    let x1: Vec<f64> = (0..n1 * d).map(|_| rng.normal()).collect();
+    let x2: Vec<f64> = (0..n2 * d).map(|_| rng.normal()).collect();
+    let v: Vec<f64> = (0..n2).map(|_| rng.normal()).collect();
+    let slab = F32Slab::build(&x2, n2, d, true);
+    for kind in ALL_KERNELS {
+        let base = HostBackend::new(1)
+            .with_precision(Precision::F32)
+            .kernel_matvec_cached(
+                kind,
+                &x1,
+                n1,
+                &x2,
+                n2,
+                d,
+                &v,
+                sigma,
+                SlabRef { sq: None, fp32: Some(&slab) },
+            )
+            .unwrap();
+        for threads in [2usize, 3, 5, 16] {
+            let got = HostBackend::new(threads)
+                .with_precision(Precision::F32)
+                .kernel_matvec_cached(
+                    kind,
+                    &x1,
+                    n1,
+                    &x2,
+                    n2,
+                    d,
+                    &v,
+                    sigma,
+                    SlabRef { sq: None, fp32: Some(&slab) },
+                )
+                .unwrap();
+            assert_eq!(got, base, "{kind:?} f32 matvec t={threads}");
+        }
+    }
+}
+
 /// Sparse-`v` pre-scan parity: the gathered fast path must agree with
 /// the dense reference for any sparsity pattern.
 #[test]

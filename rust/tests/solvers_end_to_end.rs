@@ -177,6 +177,7 @@ fn prediction_server_matches_direct_predict() {
         n: problem.n(),
         d: problem.d(),
         weights: report.weights.clone(),
+        precision: "f32".to_string(),
     };
     let want = runtime_ops::predict(
         &engine,
@@ -223,6 +224,7 @@ fn server_rejects_bad_feature_dim() {
         n: problem.n(),
         d: problem.d(),
         weights: vec![0.0; problem.n()],
+        precision: "f32".to_string(),
     };
     let (tx, rx) = mpsc::channel::<Job>();
     let handle = std::thread::spawn(move || {

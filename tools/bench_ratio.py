@@ -1,0 +1,96 @@
+#!/usr/bin/env python3
+"""Compare the fresh `host_kernel_engine` bench output against the
+committed baseline.
+
+CI boxes vary wildly in absolute speed, so absolute pairs/s numbers are
+not comparable across machines. The *ratio* between the f32 and f64
+panel engines within one run is the stable signal: it measures how much
+of the mixed-precision speedup survives, independent of the host. This
+script prints that ratio per (kernel, d) row next to the baseline's and
+flags rows where it collapsed.
+
+Usage (from rust/, the bench's working directory):
+
+    python3 ../tools/bench_ratio.py \
+        --current BENCH_KERNELS.json --baseline ../BENCH_KERNELS.json
+
+Exit status is 1 when any row's f32-vs-f64 speedup fell below
+`--min-fraction` (default 0.5) of the baseline's — the CI step runs
+with continue-on-error, so this reports rather than gates.
+
+Stdlib only; no third-party imports.
+"""
+
+import argparse
+import json
+import sys
+
+
+def load_rows(path):
+    """Rows of a BENCH_KERNELS.json keyed by (kernel, d); {} if absent."""
+    try:
+        with open(path, encoding="utf-8") as f:
+            doc = json.load(f)
+    except (OSError, ValueError) as e:
+        print(f"bench_ratio: cannot read {path}: {e}", file=sys.stderr)
+        return {}
+    rows = doc.get("rows", [])
+    return {(r.get("kernel"), int(r.get("d", 0))): r for r in rows}
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--current", default="BENCH_KERNELS.json")
+    ap.add_argument("--baseline", default="../BENCH_KERNELS.json")
+    ap.add_argument(
+        "--min-fraction",
+        type=float,
+        default=0.5,
+        help="flag rows whose f32/f64 speedup fell below this fraction "
+        "of the baseline's (default 0.5)",
+    )
+    args = ap.parse_args()
+
+    current = load_rows(args.current)
+    baseline = load_rows(args.baseline)
+    if not current:
+        print("bench_ratio: no current rows; did the bench run?", file=sys.stderr)
+        return 1
+
+    header = f"{'kernel':<10} {'d':>4} {'f32 Mp/s':>10} {'f64 Mp/s':>10} {'ratio':>7} {'baseline':>9}  status"
+    print(header)
+    print("-" * len(header))
+    regressed = []
+    for key in sorted(current, key=lambda k: (k[1], k[0] or "")):
+        row = current[key]
+        ratio = row.get("speedup_f32_vs_f64")
+        if ratio is None:
+            # Pre-mixed-precision bench output: nothing to compare.
+            continue
+        base_row = baseline.get(key, {})
+        base = base_row.get("speedup_f32_vs_f64")
+        status = "ok"
+        if base:
+            if ratio < args.min_fraction * base:
+                status = f"REGRESSED (<{args.min_fraction:.0%} of baseline)"
+                regressed.append(key)
+        else:
+            status = "no baseline"
+        print(
+            f"{key[0]:<10} {key[1]:>4} "
+            f"{row.get('f32_mpairs_per_sec', 0):>10.0f} "
+            f"{row.get('fused_mpairs_per_sec', 0):>10.0f} "
+            f"{ratio:>6.2f}x "
+            f"{(f'{base:.2f}x' if base else '-'):>9}  {status}"
+        )
+
+    if regressed:
+        names = ", ".join(f"{k[0]}/d={k[1]}" for k in regressed)
+        print(f"\nbench_ratio: f32 speedup collapsed on: {names}", file=sys.stderr)
+        return 1
+    print("\nbench_ratio: f32-vs-f64 ratios within budget of the baseline")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
