@@ -15,7 +15,7 @@
 
 use askotch::backend::{AnyBackend, Backend, HostBackend};
 use askotch::config::{
-    BandwidthSpec, ExperimentConfig, KernelKind, RhoMode, SamplingScheme, SolverKind,
+    BandwidthSpec, ExperimentConfig, KernelKind, PrecondKind, RhoMode, SamplingScheme, SolverKind,
 };
 use askotch::coordinator::{Budget, Coordinator, KrrProblem, SolveReport};
 use askotch::data::{synthetic, Dataset, TaskKind};
@@ -24,7 +24,7 @@ use askotch::metrics;
 use askotch::solvers::askotch::{AskotchConfig, AskotchSolver};
 use askotch::solvers::eigenpro::{EigenProConfig, EigenProSolver};
 use askotch::solvers::falkon::{FalkonConfig, FalkonSolver};
-use askotch::solvers::pcg::{PcgConfig, PcgPrecond, PcgSolver};
+use askotch::solvers::pcg::{PcgConfig, PcgSolver};
 use askotch::solvers::Solver;
 use askotch::util::cli::Args;
 use askotch::util::fmt;
@@ -53,6 +53,7 @@ fn main() -> anyhow::Result<()> {
         ("host_kernel_assembly", host_kernel_assembly),
         ("host_kernel_engine", host_kernel_engine),
         ("host_kernel_obs_overhead", host_kernel_obs_overhead),
+        ("precond_build", precond_build),
     ];
 
     for (name, run) in exhibits {
@@ -152,7 +153,7 @@ fn fig1_showcase(backend: &dyn Backend, scale: usize) -> anyhow::Result<Json> {
         record(format!("askotch(r={rank})"), &r, rmse_v, "full KRR");
     }
     for m in [256usize, 1024] {
-        let mut s = FalkonSolver::new(FalkonConfig { m, seed: 0 });
+        let mut s = FalkonSolver::new(FalkonConfig { m, ..Default::default() });
         let r = s.run(backend, &problem, &budget)?;
         let rmse_v = falkon_test_rmse(backend, &problem, m, &r.weights)?;
         record(format!("falkon(m={m})"), &r, rmse_v, "inducing points");
@@ -160,7 +161,7 @@ fn fig1_showcase(backend: &dyn Backend, scale: usize) -> anyhow::Result<Json> {
     {
         let mut s = PcgSolver::new(PcgConfig {
             rank: 50,
-            precond: PcgPrecond::Gaussian,
+            precond: PrecondKind::Gaussian,
             ..Default::default()
         });
         let r = s.run(backend, &problem, &budget)?;
@@ -607,13 +608,13 @@ fn fig12_precision(backend: &dyn Backend, _scale: usize) -> anyhow::Result<Json>
     for f64_mv in [false, true] {
         let mut s = PcgSolver::new(PcgConfig {
             rank: 50,
-            precond: PcgPrecond::Rpc,
+            precond: PrecondKind::Nystrom,
             f64_matvec: f64_mv,
             ..Default::default()
         });
         let r = s.run(backend, &problem, &budget)?;
         table.row(vec![
-            "pcg(rpc,r=50)".into(),
+            "pcg(nystrom,r=50)".into(),
             if f64_mv {
                 "f64 host (scalar oracle)".into()
             } else if backend.exact_arithmetic() {
@@ -935,5 +936,68 @@ fn host_kernel_obs_overhead(_backend: &dyn Backend, scale: usize) -> anyhow::Res
     summary.set("obs_overhead", result.clone());
     std::fs::write("BENCH_KERNELS.json", summary.to_string())?;
     println!("[obs overhead -> BENCH_KERNELS.json]");
+    Ok(result)
+}
+
+// ---------------------------------------------------------------------------
+// Preconditioner suite: build cost vs the PCG iterations it buys
+// ---------------------------------------------------------------------------
+
+/// Runs PCG once per preconditioner arm (plain CG, then the whole
+/// suite) on a taxi-like problem and tabulates the trade every
+/// randomized preconditioner makes: seconds spent building the factor
+/// against Krylov iterations saved, with the CG-Lanczos condition
+/// estimate explaining the savings. Folded into `BENCH_KERNELS.json`
+/// as `precond_build` so `tools/bench_ratio.py` can track the
+/// trade-off across PRs (non-gating in CI, like the engine exhibits).
+fn precond_build(backend: &dyn Backend, scale: usize) -> anyhow::Result<Json> {
+    let problem = problem_for(synthetic::taxi_like(2000 * scale, 9, 77))?;
+    let budget = Budget { max_iters: 200, time_limit_secs: 20.0 };
+    let rank = 100usize;
+    let mut rows = Vec::new();
+    let mut table = fmt::Table::new(&["precond", "rank", "build", "cond est", "iters", "residual"]);
+    let kinds = [PrecondKind::None, PrecondKind::Nystrom, PrecondKind::Rpchol, PrecondKind::Sketch];
+    for kind in kinds {
+        let mut s = PcgSolver::new(PcgConfig { rank, precond: kind, ..Default::default() });
+        let r = s.run(backend, &problem, &budget)?;
+        let (pname, prank, build, cond) = match &r.precond {
+            Some(p) => (p.name.clone(), p.rank, p.build_secs, p.cond_est),
+            None => (kind.name().to_string(), 0, f64::NAN, f64::NAN),
+        };
+        table.row(vec![
+            pname.clone(),
+            prank.to_string(),
+            if build.is_finite() && prank > 0 { fmt::duration(build) } else { "-".into() },
+            if cond.is_finite() { format!("{cond:.1}") } else { "-".into() },
+            r.iters.to_string(),
+            format!("{:.2e}", r.final_residual),
+        ]);
+        rows.push(Json::obj(vec![
+            ("precond", Json::str(&pname)),
+            ("rank", Json::num(prank as f64)),
+            ("build_secs", num_or_null(build)),
+            ("cond_est", num_or_null(cond)),
+            ("pcg_iters", Json::num(r.iters as f64)),
+            ("final_residual", num_or_null(r.final_residual)),
+        ]));
+    }
+    println!("{}", table.render());
+    println!("(build cost buys iterations: at equal rank the adaptive arms should need");
+    println!(" no more iterations than uniform nystrom; `none` is the plain-CG arm)");
+    let result = Json::obj(vec![
+        ("n", Json::num(problem.n() as f64)),
+        ("rank", Json::num(rank as f64)),
+        ("rows", Json::Arr(rows)),
+    ]);
+    // Fold into the perf-trajectory file the engine exhibit writes;
+    // stand alone if this exhibit ran filtered on its own.
+    let mut summary = std::fs::read_to_string("BENCH_KERNELS.json")
+        .ok()
+        .and_then(|t| askotch::json::parse(&t).ok())
+        .filter(|j| matches!(j, Json::Obj(_)))
+        .unwrap_or_else(|| Json::obj(vec![("exhibit", Json::str("host_kernel_engine"))]));
+    summary.set("precond_build", result.clone());
+    std::fs::write("BENCH_KERNELS.json", summary.to_string())?;
+    println!("[precond build trade-off -> BENCH_KERNELS.json]");
     Ok(result)
 }

@@ -336,6 +336,63 @@ impl SamplingScheme {
     }
 }
 
+/// Which randomized preconditioner the Krylov solvers build
+/// (`docs/PRECONDITIONERS.md`).
+///
+/// `Auto` picks per problem: RPCholesky for the smooth kernels
+/// (RBF/Matern), sketch-and-precondition for Laplacian whose slowly
+/// decaying spectrum suits the projection-based factor. `Gaussian` and
+/// `None` are PCG-only ablation arms kept from the pre-suite code.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum PrecondKind {
+    /// Per-problem policy; the resolved choice lands in RunRecords.
+    #[default]
+    Auto,
+    /// Trace-jittered uniform-pivot Nystrom (the original PCG factor).
+    Nystrom,
+    /// Accelerated RPCholesky: adaptive pivots via the residual
+    /// diagonal, approximate ridge leverage scores as a byproduct.
+    Rpchol,
+    /// CountSketch sketch-and-precondition (Avron-Clarkson-Woodruff).
+    Sketch,
+    /// Gaussian range-finder (PCG ablation; matvec-budget limited).
+    Gaussian,
+    /// Plain CG, no preconditioner (ablation).
+    None,
+}
+
+impl PrecondKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            PrecondKind::Auto => "auto",
+            PrecondKind::Nystrom => "nystrom",
+            PrecondKind::Rpchol => "rpchol",
+            PrecondKind::Sketch => "sketch",
+            PrecondKind::Gaussian => "gaussian",
+            PrecondKind::None => "none",
+        }
+    }
+
+    pub fn parse(s: &str) -> anyhow::Result<PrecondKind> {
+        match s {
+            "auto" => Ok(PrecondKind::Auto),
+            "nystrom" | "rpc" => Ok(PrecondKind::Nystrom),
+            "rpchol" | "rpcholesky" => Ok(PrecondKind::Rpchol),
+            "sketch" | "countsketch" => Ok(PrecondKind::Sketch),
+            "gaussian" => Ok(PrecondKind::Gaussian),
+            "none" | "plain" => Ok(PrecondKind::None),
+            _ => anyhow::bail!(
+                "unknown preconditioner {s:?} (auto|nystrom|rpchol|sketch|gaussian|none)"
+            ),
+        }
+    }
+
+    /// The suite implementations every conformance check covers.
+    pub fn suite() -> &'static [PrecondKind] {
+        &[PrecondKind::Nystrom, PrecondKind::Rpchol, PrecondKind::Sketch]
+    }
+}
+
 /// rho selection (paper SS6 "Optimizer hyperparameters").
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum RhoMode {
@@ -368,6 +425,10 @@ pub struct ExperimentConfig {
     pub solver: SolverKind,
     pub sampling: SamplingScheme,
     pub rho: RhoMode,
+    /// Preconditioner for PCG/Falkon and ASkotch's block sampler.
+    pub precond: PrecondKind,
+    /// Extra sketch rows / pivot-block oversampling on top of `rank`.
+    pub oversample: usize,
     pub rank: usize,
     pub seed: u64,
     pub max_iters: usize,
@@ -399,6 +460,8 @@ impl Default for ExperimentConfig {
             solver: SolverKind::Askotch,
             sampling: SamplingScheme::Uniform,
             rho: RhoMode::Damped,
+            precond: PrecondKind::Auto,
+            oversample: 8,
             rank: 20,
             seed: 0,
             max_iters: 500,
@@ -456,6 +519,13 @@ impl ExperimentConfig {
                 "regularization" => RhoMode::Regularization,
                 s => return Err(d.error(format!("unknown rho mode {s:?}")).into()),
             };
+        }
+        if let Some(d) = root.opt_field("precond")? {
+            c.precond =
+                PrecondKind::parse(d.str()?).map_err(|e| anyhow::anyhow!("{}: {e}", d.path()))?;
+        }
+        if let Some(d) = root.opt_field("oversample")? {
+            c.oversample = d.usize()?;
         }
         if let Some(d) = root.opt_field("rank")? {
             c.rank = d.usize()?;
@@ -570,6 +640,28 @@ mod tests {
         assert_eq!(ExperimentConfig::default().precision, Precision::Auto);
         let e = ExperimentConfig::from_json(r#"{"precision":"f16"}"#).unwrap_err();
         assert!(e.to_string().contains("config.precision"), "got: {e}");
+    }
+
+    #[test]
+    fn precond_roundtrip_and_default() {
+        for p in [
+            PrecondKind::Auto,
+            PrecondKind::Nystrom,
+            PrecondKind::Rpchol,
+            PrecondKind::Sketch,
+            PrecondKind::Gaussian,
+            PrecondKind::None,
+        ] {
+            assert_eq!(PrecondKind::parse(p.name()).unwrap(), p);
+        }
+        assert!(PrecondKind::parse("amg").is_err());
+        let c = ExperimentConfig::from_json(r#"{"precond":"rpchol","oversample":16}"#).unwrap();
+        assert_eq!(c.precond, PrecondKind::Rpchol);
+        assert_eq!(c.oversample, 16);
+        assert_eq!(ExperimentConfig::default().precond, PrecondKind::Auto);
+        let e = ExperimentConfig::from_json(r#"{"precond":"amg"}"#).unwrap_err();
+        assert!(e.to_string().contains("config.precond"), "got: {e}");
+        assert_eq!(PrecondKind::suite().len(), 3);
     }
 
     #[test]

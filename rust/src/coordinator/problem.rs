@@ -192,6 +192,9 @@ pub struct SolveReport {
     /// Did the solver detect divergence (EigenPro with bad defaults
     /// reproduces the paper's observation)?
     pub diverged: bool,
+    /// Preconditioner telemetry (resolved construction, build time,
+    /// condition-number estimate) for the solvers that build one.
+    pub precond: Option<crate::solvers::precond::PrecondReport>,
 }
 
 #[cfg(test)]

@@ -86,13 +86,29 @@ impl Chol {
 /// Cholesky with an escalating jitter ladder: f64 kernel blocks of very
 /// smooth kernels are numerically rank-deficient, and a fixed jitter
 /// occasionally underruns the rounding of the largest eigenvalue.
+///
+/// Every escalation past the first rung emits an `obs` warn event
+/// (target `linalg`): a factor regularized 1e4x beyond its caller's
+/// chosen jitter is numerically fine but statistically blunter, and the
+/// run log should say so.
 pub fn chol_jittered(a: &Mat, base: f64) -> anyhow::Result<Chol> {
-    let mut jitter = base.max(1e-300);
-    for _ in 0..4 {
+    let base = base.max(1e-300);
+    let mut jitter = base;
+    for rung in 0..4 {
         if let Ok(ch) = Chol::new(a, jitter) {
             return Ok(ch);
         }
         jitter *= 1e4;
+        crate::obs::warn_kv(
+            "linalg",
+            "cholesky jitter escalated",
+            &[
+                ("n", crate::json::Json::num(a.rows as f64)),
+                ("rung", crate::json::Json::num((rung + 1) as f64)),
+                ("base_jitter", crate::json::Json::num(base)),
+                ("jitter", crate::json::Json::num(jitter)),
+            ],
+        );
     }
     Chol::new(a, jitter)
 }

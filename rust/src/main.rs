@@ -32,7 +32,8 @@
 use anyhow::Result;
 use askotch::backend::{AnyBackend, Backend, HostBackend};
 use askotch::config::{
-    BackendKind, BandwidthSpec, ExperimentConfig, KernelKind, Precision, SamplingScheme, SolverKind,
+    BackendKind, BandwidthSpec, ExperimentConfig, KernelKind, Precision, PrecondKind,
+    SamplingScheme, SolverKind,
 };
 use askotch::coordinator::{Budget, Coordinator};
 use askotch::json::Json;
@@ -70,7 +71,9 @@ fn main() -> Result<()> {
                 "usage: askotch <solve|train|experiment|compare|testbed|info|serve|perf> \
                  [options]\n\
                  common: --backend auto|host|pjrt (default auto), --host-threads N, \
-                 --precision auto|f32|f64 (default auto), --log FILE, --quiet, --profile\n\
+                 --precision auto|f32|f64 (default auto), \
+                 --precond auto|nystrom|rpchol|sketch|gaussian|none [--oversample N], \
+                 --log FILE, --quiet, --profile\n\
                  lifecycle: train --save DIR, serve --model DIR, \
                  solve/train --checkpoint DIR [--checkpoint-every N] [--resume]\n\
                  run `askotch info` to inspect the selected backend"
@@ -185,6 +188,10 @@ fn config_from_args(args: &Args) -> Result<ExperimentConfig> {
     if let Some(s) = args.get("sampling") {
         cfg.sampling = SamplingScheme::parse(s)?;
     }
+    if let Some(s) = args.get("precond") {
+        cfg.precond = PrecondKind::parse(s)?;
+    }
+    cfg.oversample = args.get_usize("oversample", cfg.oversample);
     cfg.rank = args.get_usize("rank", 20);
     cfg.seed = args.get_u64("seed", 0);
     cfg.max_iters = args.get_usize("iters", 300);
@@ -430,6 +437,10 @@ fn cmd_testbed(args: &Args) -> Result<()> {
             .collect::<Result<Vec<_>>>()?;
     }
     cfg.rank = args.get_usize("rank", cfg.rank);
+    if let Some(s) = args.get("precond") {
+        cfg.precond = PrecondKind::parse(s)?;
+    }
+    cfg.oversample = args.get_usize("oversample", cfg.oversample);
     cfg.jobs = args.get_usize("jobs", cfg.jobs);
     cfg.job_threads = args.get_usize("job-threads", cfg.job_threads);
     cfg.seed = args.get_u64("seed", cfg.seed);

@@ -327,6 +327,7 @@ mod tests {
             weights: (0..problem.n()).map(|i| (i as f64 * 0.37).sin()).collect(),
             state_bytes: 0,
             diverged: false,
+            precond: None,
         };
         // Seed above 2^53: must survive the manifest round trip exactly
         // (it is stored as a decimal string, not a JSON f64).
@@ -381,6 +382,7 @@ mod tests {
             weights: vec![0.0; 8], // m != n
             state_bytes: 0,
             diverged: false,
+            precond: None,
         };
         let err = ModelArtifact::from_solve(&problem, &report, 0).unwrap_err().to_string();
         assert!(err.contains("full-KRR weights"), "got: {err}");

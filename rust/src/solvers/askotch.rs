@@ -15,10 +15,11 @@
 //! them, and a restored solve continues bit-for-bit.
 
 use crate::backend::{Backend, SapOptions, SapStepper};
-use crate::config::{ExperimentConfig, RhoMode, SamplingScheme};
+use crate::config::{ExperimentConfig, PrecondKind, RhoMode, SamplingScheme};
 use crate::coordinator::{runtime_ops, Budget, KrrProblem};
 use crate::metrics::Trace;
 use crate::sampling::{self, ArlsSampler, BlockSampler, UniformSampler};
+use crate::solvers::precond::{self, KernelOperand, PrecondReport, PrecondSettings};
 use crate::solvers::{eval_point, Checkpoint, Observer, SolveState, Solver, StepOutcome};
 use crate::util::Rng;
 
@@ -30,6 +31,13 @@ pub struct AskotchConfig {
     pub rank: usize,
     pub rho: RhoMode,
     pub sampling: SamplingScheme,
+    /// `Rpchol` replaces the block sampler's score table with the
+    /// RPCholesky factor's approximate ridge leverage scores (any other
+    /// value keeps the configured `sampling` scheme — ASkotch has no
+    /// CG preconditioner to swap).
+    pub precond: PrecondKind,
+    /// Oversampling knob forwarded to the RPCholesky build.
+    pub oversample: usize,
     pub seed: u64,
     /// Evaluate the test metric every this many iterations (0 = auto).
     pub eval_every: usize,
@@ -43,6 +51,8 @@ impl Default for AskotchConfig {
             rank: 50,
             rho: RhoMode::Damped,
             sampling: SamplingScheme::Uniform,
+            precond: PrecondKind::Auto,
+            oversample: 8,
             seed: 0,
             eval_every: 0,
             track_residual: false,
@@ -70,6 +80,8 @@ impl AskotchSolver {
                 rank: cfg.rank,
                 rho: cfg.rho,
                 sampling: cfg.sampling,
+                precond: cfg.precond,
+                oversample: cfg.oversample,
                 seed: cfg.seed,
                 eval_every: 0,
                 track_residual: cfg.track_residual,
@@ -91,27 +103,76 @@ impl AskotchSolver {
         }
     }
 
-    fn build_sampler(&self, problem: &KrrProblem, b: usize) -> Box<dyn BlockSampler> {
-        match self.cfg.sampling {
-            SamplingScheme::Uniform => Box::new(UniformSampler::new(self.cfg.seed ^ 0xB10C)),
-            SamplingScheme::Arls => {
-                // BLESS with the paper's k = O(sqrt n) cap (SS3.2).
-                let n = problem.n();
-                let q_max = ((n as f64).sqrt() as usize).max(b.min(n)).min(n);
-                let mut rng = Rng::new(self.cfg.seed ^ 0xB1E5);
-                let scores = sampling::bless_rls(
-                    &problem.train.x,
-                    n,
-                    problem.d(),
-                    problem.kernel,
-                    problem.sigma,
-                    problem.lam,
-                    q_max,
-                    &mut rng,
-                );
-                Box::new(ArlsSampler::from_scores(&scores, self.cfg.seed ^ 0xA125))
-            }
+    fn build_sampler(
+        &self,
+        backend: &dyn Backend,
+        problem: &KrrProblem,
+        b: usize,
+    ) -> anyhow::Result<(Box<dyn BlockSampler>, Option<PrecondReport>)> {
+        if self.cfg.precond == PrecondKind::Rpchol {
+            // RPCholesky path: build the pivoted factor over the full
+            // training operand and reweight SAP block sampling by its
+            // approximate ridge leverage scores — adaptively-chosen
+            // pivots concentrate mass on the directions the Nystrom
+            // projector misses, where BLESS only sees a subsample.
+            let n = problem.n();
+            let t0 = std::time::Instant::now();
+            let op = KernelOperand {
+                kernel: problem.kernel,
+                x: &problem.train.x,
+                n,
+                d: problem.d(),
+                sigma: problem.sigma,
+                slab: problem.train_slab(),
+            };
+            let s = PrecondSettings {
+                kind: PrecondKind::Rpchol,
+                rank: self.cfg.rank.min(n),
+                oversample: self.cfg.oversample,
+                seed: self.cfg.seed,
+                rho: problem.lam,
+            };
+            let pc = precond::build(backend, &op, &s)?;
+            let scores = pc
+                .leverage_scores()
+                .ok_or_else(|| anyhow::anyhow!("rpchol factor lost its leverage scores"))?;
+            let sampler: Box<dyn BlockSampler> =
+                Box::new(ArlsSampler::from_scores(scores, self.cfg.seed ^ 0xA125));
+            let report = PrecondReport {
+                name: pc.name().to_string(),
+                rank: pc.rank(),
+                build_secs: t0.elapsed().as_secs_f64(),
+                // No CG coefficient stream here — SAP has no Lanczos
+                // tridiagonal to read a condition number from.
+                cond_est: f64::NAN,
+            };
+            return Ok((sampler, Some(report)));
         }
+        Ok((
+            match self.cfg.sampling {
+                SamplingScheme::Uniform => {
+                    Box::new(UniformSampler::new(self.cfg.seed ^ 0xB10C)) as Box<dyn BlockSampler>
+                }
+                SamplingScheme::Arls => {
+                    // BLESS with the paper's k = O(sqrt n) cap (SS3.2).
+                    let n = problem.n();
+                    let q_max = ((n as f64).sqrt() as usize).max(b.min(n)).min(n);
+                    let mut rng = Rng::new(self.cfg.seed ^ 0xB1E5);
+                    let scores = sampling::bless_rls(
+                        &problem.train.x,
+                        n,
+                        problem.d(),
+                        problem.kernel,
+                        problem.sigma,
+                        problem.lam,
+                        q_max,
+                        &mut rng,
+                    );
+                    Box::new(ArlsSampler::from_scores(&scores, self.cfg.seed ^ 0xA125))
+                }
+            },
+            None,
+        ))
     }
 }
 
@@ -124,9 +185,10 @@ impl Solver for AskotchSolver {
                 RhoMode::Damped => "damped",
                 RhoMode::Regularization => "reg",
             },
-            match self.cfg.sampling {
-                SamplingScheme::Uniform => "uniform",
-                SamplingScheme::Arls => "arls",
+            match (self.cfg.precond, self.cfg.sampling) {
+                (PrecondKind::Rpchol, _) => "rpchol",
+                (_, SamplingScheme::Uniform) => "uniform",
+                (_, SamplingScheme::Arls) => "arls",
             },
             base = self.family(),
         )
@@ -154,15 +216,16 @@ impl Solver for AskotchSolver {
             backend.sap_stepper(problem, &opts)?
         };
         let b = stepper.block_size();
-        let sampler = {
+        let (sampler, precond) = {
             let _sp = crate::obs::span("sampler");
-            self.build_sampler(problem, b)
+            self.build_sampler(backend, problem, b)?
         };
         Ok(Box::new(AskotchState {
             backend,
             problem,
             stepper,
             sampler,
+            precond,
             solver: self.name(),
             family: self.family(),
             b,
@@ -181,6 +244,9 @@ pub struct AskotchState<'a> {
     problem: &'a KrrProblem,
     stepper: Box<dyn SapStepper + 'a>,
     sampler: Box<dyn BlockSampler>,
+    /// RPCholesky build telemetry when the sampler rides its leverage
+    /// scores; `None` for the uniform/BLESS schemes.
+    precond: Option<PrecondReport>,
     solver: String,
     family: &'static str,
     b: usize,
@@ -269,6 +335,10 @@ impl SolveState for AskotchState<'_> {
 
     fn state_bytes(&self) -> usize {
         self.stepper.state_bytes()
+    }
+
+    fn precond_report(&self) -> Option<PrecondReport> {
+        self.precond.clone()
     }
 
     fn checkpoint(&self, secs: f64) -> Checkpoint {

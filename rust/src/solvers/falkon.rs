@@ -3,19 +3,26 @@
 //! Solves the m-dimensional system (paper eq. 5)
 //!     (K_nm^T K_nm + lam K_mm) w = K_nm^T y
 //! by preconditioned CG. The O(nm) products K_nm v / K_nm^T u run
-//! through the backend's kernel matvec; the m x m preconditioner
-//! (K_mm + delta I)^{-1} is a host Cholesky — exactly the memory object
-//! whose O(m^2) footprint limits inducing-points methods (Table 1
-//! "Memory-efficient? NO"). Setup (centers, K_mm, its factor, the rhs)
-//! happens in [`Solver::init`] and is rebuilt deterministically on
-//! resume; the CG iterates are the state machine's resumable core.
+//! through the backend's kernel matvec; the default preconditioner
+//! (K_mm + delta I)^{-1} is an exact host Cholesky — exactly the
+//! memory object whose O(m^2) footprint limits inducing-points methods
+//! (Table 1 "Memory-efficient? NO"). `--precond nystrom|rpchol|sketch`
+//! swaps in a rank-r factor from [`crate::solvers::precond`] (O(m r)
+//! memory), and `--precond none` ablates to plain CG. Setup (centers,
+//! K_mm, the preconditioner, the rhs) happens in [`Solver::init`] and
+//! is rebuilt deterministically on resume; the CG iterates — plus the
+//! alpha/beta history behind the Lanczos condition estimate — are the
+//! state machine's resumable core.
 
 use crate::backend::Backend;
-use crate::config::{ExperimentConfig, Precision};
+use crate::config::{ExperimentConfig, Precision, PrecondKind};
 use crate::coordinator::{Budget, KrrProblem};
 use crate::kernels::fused;
 use crate::linalg::{dense, Chol, Mat};
 use crate::metrics::{Trace, TracePoint};
+use crate::solvers::precond::{
+    self, KernelOperand, PrecondReport, PrecondSettings, Preconditioner, LANCZOS_COEFF_CAP,
+};
 use crate::solvers::{Checkpoint, Observer, SolveState, Solver, StepOutcome};
 use crate::util::Rng;
 
@@ -23,12 +30,28 @@ use crate::util::Rng;
 pub struct FalkonConfig {
     /// Number of inducing points.
     pub m: usize,
+    /// Preconditioner over K_mm: `Auto` keeps the classic exact
+    /// Cholesky of `K_mm + delta I`; the suite kinds replace it with a
+    /// rank-r factor ([`crate::solvers::precond`]) — the memory knob
+    /// (O(m r) instead of O(m^2)) the paper's Table 1 critique is
+    /// about. `None` runs unpreconditioned CG.
+    pub precond: PrecondKind,
+    /// Factor rank for the suite preconditioners.
+    pub rank: usize,
+    /// Suite oversampling knob.
+    pub oversample: usize,
     pub seed: u64,
 }
 
 impl Default for FalkonConfig {
     fn default() -> Self {
-        FalkonConfig { m: 1024, seed: 0 }
+        FalkonConfig {
+            m: 1024,
+            precond: PrecondKind::Auto,
+            rank: 50,
+            oversample: 8,
+            seed: 0,
+        }
     }
 }
 
@@ -44,13 +67,47 @@ impl FalkonSolver {
     pub fn from_config(cfg: &ExperimentConfig) -> Self {
         // Paper regime: m << n (their m/n is ~1e-4..1e-2; memory caps m).
         // m = n/8 keeps the inducing-points character at testbed scale.
-        FalkonSolver { cfg: FalkonConfig { m: 1024.min((cfg.n / 8).max(16)), seed: cfg.seed } }
+        FalkonSolver {
+            cfg: FalkonConfig {
+                m: 1024.min((cfg.n / 8).max(16)),
+                precond: cfg.precond,
+                rank: cfg.rank,
+                oversample: cfg.oversample,
+                seed: cfg.seed,
+            },
+        }
+    }
+}
+
+/// The preconditioner arm of one Falkon solve.
+enum FalkonPre {
+    /// Exact Cholesky of `K_mm + delta I` (the classic construction).
+    Exact(Chol),
+    /// Rank-r suite factor over the inducing-point kernel.
+    LowRank(Box<dyn Preconditioner>),
+    /// Unpreconditioned CG (ablation).
+    Plain,
+}
+
+impl FalkonPre {
+    fn solve(&self, r: &[f64]) -> Vec<f64> {
+        match self {
+            FalkonPre::Exact(ch) => ch.solve(r),
+            FalkonPre::LowRank(pc) => pc.apply(r),
+            FalkonPre::Plain => r.to_vec(),
+        }
     }
 }
 
 impl Solver for FalkonSolver {
     fn name(&self) -> String {
-        format!("falkon(m={})", self.cfg.m)
+        // `Auto` keeps the historic name (exact Cholesky — unchanged
+        // behavior and checkpoint compatibility); explicit suite kinds
+        // are part of the configuration and so of the name.
+        match self.cfg.precond {
+            PrecondKind::Auto => format!("falkon(m={})", self.cfg.m),
+            other => format!("falkon(m={},pc={})", self.cfg.m, other.name()),
+        }
     }
 
     fn init<'a>(
@@ -78,14 +135,53 @@ impl Solver for FalkonSolver {
         let xm_f32 = (backend.precision() == Precision::F32)
             .then(|| fused::F32Slab::build(&xm, m, d, fused::uses_norms(problem.kernel)));
 
-        // K_mm and its Cholesky preconditioner (the O(m^2)/O(m^3) cost).
+        // K_mm (kept for the lam*K_mm term of the operator).
         let sp_kmm = crate::obs::span("kmm");
         let kmm =
             backend.kernel_block(problem.kernel, &problem.train.x, d, &centers, problem.sigma);
-        let mut kmm_reg = kmm.clone();
-        kmm_reg.add_diag(lam + 1e-8 * m as f64);
-        let pre = Chol::new(&kmm_reg, 0.0)?;
         drop(sp_kmm);
+
+        // Preconditioner over K_mm + rho I. `Auto` is the classic exact
+        // Cholesky (O(m^2) memory — the Table 1 critique); the suite
+        // kinds swap in a rank-r factor built over the inducing slab.
+        let rho = lam + 1e-8 * m as f64;
+        let t_pre = std::time::Instant::now();
+        let (pre, pre_name, pre_rank) = {
+            let _sp = crate::obs::span("precond");
+            match self.cfg.precond {
+                PrecondKind::Auto => {
+                    let mut kmm_reg = kmm.clone();
+                    kmm_reg.add_diag(rho);
+                    (FalkonPre::Exact(Chol::new(&kmm_reg, 0.0)?), "exact", m)
+                }
+                PrecondKind::None => (FalkonPre::Plain, "none", 0),
+                PrecondKind::Gaussian => anyhow::bail!(
+                    "falkon: --precond gaussian is a pcg-only ablation \
+                     (use auto|nystrom|rpchol|sketch|none)"
+                ),
+                kind => {
+                    let op = KernelOperand {
+                        kernel: problem.kernel,
+                        x: &xm,
+                        n: m,
+                        d,
+                        sigma: problem.sigma,
+                        slab: fused::SlabRef { sq: Some(&xm_sq), fp32: xm_f32.as_ref() },
+                    };
+                    let settings = PrecondSettings {
+                        kind: precond::resolve(kind, problem.kernel),
+                        rank: self.cfg.rank.min(m),
+                        oversample: self.cfg.oversample,
+                        seed: self.cfg.seed,
+                        rho,
+                    };
+                    let pc = precond::build(backend, &op, &settings)?;
+                    let (nm, rk) = (pc.name(), pc.rank());
+                    (FalkonPre::LowRank(pc), nm, rk)
+                }
+            }
+        };
+        let build_secs = t_pre.elapsed().as_secs_f64();
 
         // rhs = K_nm^T y.
         let sp_rhs = crate::obs::span("rhs");
@@ -119,6 +215,9 @@ impl Solver for FalkonSolver {
             xm_f32,
             kmm,
             pre,
+            precond_name: pre_name,
+            precond_rank: pre_rank,
+            build_secs,
             w: vec![0.0f64; m],
             rhs,
             res,
@@ -127,6 +226,9 @@ impl Solver for FalkonSolver {
             rz,
             rhs_norm,
             iters: 0,
+            alphas: Vec::new(),
+            betas: Vec::new(),
+            coeffs_valid: true,
         }))
     }
 }
@@ -144,7 +246,10 @@ pub struct FalkonState<'a> {
     /// f32 mirror of the inducing-point slab (`--precision f32` only).
     xm_f32: Option<fused::F32Slab>,
     kmm: Mat,
-    pre: Chol,
+    pre: FalkonPre,
+    precond_name: &'static str,
+    precond_rank: usize,
+    build_secs: f64,
     w: Vec<f64>,
     /// K_nm^T y, kept for the refinement restart.
     rhs: Vec<f64>,
@@ -154,6 +259,11 @@ pub struct FalkonState<'a> {
     rz: f64,
     rhs_norm: f64,
     iters: usize,
+    /// CG coefficient history feeding the Lanczos condition-number
+    /// estimate (capped; invalidated by refinement restarts).
+    alphas: Vec<f64>,
+    betas: Vec<f64>,
+    coeffs_valid: bool,
 }
 
 impl FalkonState<'_> {
@@ -249,6 +359,10 @@ impl SolveState for FalkonState<'_> {
         for i in 0..m {
             self.p[i] = self.z[i] + beta * self.p[i];
         }
+        if self.coeffs_valid && self.alphas.len() < LANCZOS_COEFF_CAP {
+            self.alphas.push(alpha);
+            self.betas.push(beta);
+        }
         self.iters += 1;
         Ok(StepOutcome::Continue)
     }
@@ -263,6 +377,9 @@ impl SolveState for FalkonState<'_> {
         self.z = self.pre.solve(&self.res);
         self.rz = dense::dot(&self.res, &self.z);
         self.p = self.z.clone();
+        // A restart breaks the single-Krylov-sequence assumption behind
+        // the Lanczos tridiagonal — stop trusting the coefficients.
+        self.coeffs_valid = false;
         Ok(())
     }
 
@@ -299,8 +416,28 @@ impl SolveState for FalkonState<'_> {
     }
 
     fn state_bytes(&self) -> usize {
-        // K_mm + its factor dominate: 2 m^2 f64.
-        2 * self.m * self.m * 8 + 4 * self.m * 8
+        // K_mm always (the operator's lam*K_mm term), plus whatever the
+        // preconditioner arm holds: the exact factor is a second m^2
+        // block; the suite factors are O(m r).
+        let pre_bytes = match &self.pre {
+            FalkonPre::Exact(_) => self.m * self.m * 8,
+            FalkonPre::LowRank(pc) => pc.state_bytes(),
+            FalkonPre::Plain => 0,
+        };
+        self.m * self.m * 8 + pre_bytes + 4 * self.m * 8
+    }
+
+    fn precond_report(&self) -> Option<PrecondReport> {
+        Some(PrecondReport {
+            name: self.precond_name.to_string(),
+            rank: self.precond_rank,
+            build_secs: self.build_secs,
+            cond_est: if self.coeffs_valid {
+                precond::lanczos_cond_estimate(&self.alphas, &self.betas)
+            } else {
+                f64::NAN
+            },
+        })
     }
 
     fn checkpoint(&self, secs: f64) -> Checkpoint {
@@ -311,6 +448,9 @@ impl SolveState for FalkonState<'_> {
         ck.push_vec("z", self.z.clone());
         ck.push_vec("p", self.p.clone());
         ck.push_scalar("rz", self.rz);
+        ck.push_vec("cg_alphas", self.alphas.clone());
+        ck.push_vec("cg_betas", self.betas.clone());
+        ck.push_scalar("cg_coeffs_valid", if self.coeffs_valid { 1.0 } else { 0.0 });
         ck
     }
 
@@ -323,6 +463,9 @@ impl SolveState for FalkonState<'_> {
         self.z = ck.vec("z", m)?.to_vec();
         self.p = ck.vec("p", m)?.to_vec();
         self.rz = ck.scalar("rz")?;
+        self.alphas = ck.vec_var("cg_alphas")?.to_vec();
+        self.betas = ck.vec_var("cg_betas")?.to_vec();
+        self.coeffs_valid = ck.scalar("cg_coeffs_valid")? != 0.0;
         Ok(())
     }
 }

@@ -17,8 +17,10 @@ pub mod cholesky;
 pub mod eigenpro;
 pub mod falkon;
 pub mod pcg;
+pub mod precond;
 pub mod state;
 
+pub use precond::{PrecondReport, Preconditioner};
 pub use state::{
     drive, Checkpoint, DrivePolicy, SolveState, StepOutcome, CHECKPOINT_VERSION,
     DEFAULT_REFINE_EVERY,

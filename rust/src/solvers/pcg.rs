@@ -5,40 +5,40 @@
 //! the state machine's resumable core; the preconditioner is rebuilt
 //! deterministically from the seed on resume.
 //!
-//! Two preconditioner constructions, mirroring the paper's comparisons:
-//! * `Rpc` — column (pivoted) Nystrom from r uniformly sampled columns,
-//!   O(n r d) setup (randomly-pivoted-Cholesky-style).
-//! * `Gaussian` — Gaussian sketch Y = K Omega, needing r full O(n^2)
+//! The preconditioner comes from the pluggable suite
+//! ([`crate::solvers::precond`]): `--precond auto|nystrom|rpchol|sketch`
+//! selects the construction (`auto` resolves per kernel family), plus
+//! two PCG-private ablation arms kept from the pre-suite code:
+//! * `gaussian` — Gaussian sketch Y = K Omega, needing r full O(n^2)
 //!   matvecs at setup. This is the construction whose setup cost blows up
 //!   at scale (Fig. 1: "fails to complete a single iteration").
+//! * `none` — plain CG.
 //!
-//! The Woodbury application of `(B B^T + rho I)^{-1}` is the shared
-//! [`crate::linalg::Woodbury`] — one implementation serves this
-//! preconditioner and the SAP stepper's approximate projection.
+//! Every step's CG `alpha`/`beta` pair is also a Lanczos coefficient of
+//! the *preconditioned* operator, so the solve reports an effective
+//! condition-number estimate for free
+//! ([`precond::lanczos_cond_estimate`]) — the number `docs/RESULTS.md`
+//! tabulates per preconditioner.
 
 use crate::backend::Backend;
-use crate::config::ExperimentConfig;
+use crate::config::{ExperimentConfig, PrecondKind};
 use crate::coordinator::{Budget, KrrProblem};
 use crate::kernels;
 use crate::linalg::{dense, Chol, Mat, Woodbury};
 use crate::metrics::Trace;
+use crate::solvers::precond::{
+    self, KernelOperand, PrecondReport, PrecondSettings, Preconditioner, LANCZOS_COEFF_CAP,
+};
 use crate::solvers::{eval_point, Checkpoint, Observer, SolveState, Solver, StepOutcome};
 use crate::util::Rng;
 use std::time::Instant;
 
-/// Preconditioner construction.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
-pub enum PcgPrecond {
-    Rpc,
-    Gaussian,
-    /// No preconditioner (plain CG), for ablations.
-    None,
-}
-
 #[derive(Debug, Clone)]
 pub struct PcgConfig {
     pub rank: usize,
-    pub precond: PcgPrecond,
+    pub precond: PrecondKind,
+    /// Suite oversampling knob (sketch rows / rpchol pivot block).
+    pub oversample: usize,
     pub seed: u64,
     /// Use exact f64 scalar matvecs instead of the backend (the paper's
     /// double-precision PCG oracle; only sensible at small n).
@@ -47,7 +47,13 @@ pub struct PcgConfig {
 
 impl Default for PcgConfig {
     fn default() -> Self {
-        PcgConfig { rank: 50, precond: PcgPrecond::Rpc, seed: 0, f64_matvec: false }
+        PcgConfig {
+            rank: 50,
+            precond: PrecondKind::Auto,
+            oversample: 8,
+            seed: 0,
+            f64_matvec: false,
+        }
     }
 }
 
@@ -57,39 +63,19 @@ pub struct PcgSolver {
 
 impl PcgSolver {
     pub fn from_config(cfg: &ExperimentConfig) -> Self {
-        PcgSolver { cfg: PcgConfig { rank: cfg.rank, ..PcgConfig::default() } }
+        PcgSolver {
+            cfg: PcgConfig {
+                rank: cfg.rank,
+                precond: cfg.precond,
+                oversample: cfg.oversample,
+                seed: cfg.seed,
+                ..PcgConfig::default()
+            },
+        }
     }
 
     pub fn new(cfg: PcgConfig) -> Self {
         PcgSolver { cfg }
-    }
-
-    /// Column-Nystrom B-factor from uniformly sampled pivots. The n x r
-    /// column slab and the r x r pivot block assemble through the
-    /// backend (blocked + parallel on the host engine).
-    fn rpc_b_factor(&self, backend: &dyn Backend, problem: &KrrProblem) -> anyhow::Result<Mat> {
-        let (n, d) = (problem.n(), problem.d());
-        let r = self.cfg.rank.min(n);
-        let mut rng = Rng::new(self.cfg.seed ^ 0x9C6);
-        let pivots = rng.sample_distinct(n, r);
-        let mut xp = Vec::with_capacity(r * d);
-        for &p in &pivots {
-            xp.extend_from_slice(problem.train.row(p));
-        }
-        // C = K(:, S): n x r, O(n r d)
-        let c =
-            backend.kernel_matrix(problem.kernel, &problem.train.x, n, &xp, r, d, problem.sigma);
-        // W = K_SS; B = C chol(W)^{-T}
-        let w = backend.kernel_block(problem.kernel, &problem.train.x, d, &pivots, problem.sigma);
-        let ch = Chol::new(&w, 1e-8 * r as f64)?;
-        // B row i solves: B[i,:] = solve_lower(L, C[i,:]) since
-        // K_hat = C W^-1 C^T = (C L^{-T})(C L^{-T})^T with W = L L^T.
-        let mut b = Mat::zeros(n, r);
-        for i in 0..n {
-            let bi = ch.solve_lower(c.row(i));
-            b.row_mut(i).copy_from_slice(&bi);
-        }
-        Ok(b)
     }
 
     /// Gaussian-sketch B-factor: Y = K Omega via r full matvecs (O(n^2 r)).
@@ -190,15 +176,33 @@ fn symmetrize(a: &Mat) -> Mat {
     out
 }
 
+/// The preconditioner arm of one PCG solve: a suite construction, the
+/// PCG-private Gaussian ablation, or plain CG.
+enum PcgPre {
+    Suite(Box<dyn Preconditioner>),
+    Gaussian(Woodbury),
+    Plain,
+}
+
+impl PcgPre {
+    fn apply(&self, g: &[f64]) -> Vec<f64> {
+        match self {
+            PcgPre::Suite(pc) => pc.apply(g),
+            PcgPre::Gaussian(wb) => wb.apply(g),
+            PcgPre::Plain => g.to_vec(),
+        }
+    }
+}
+
 impl Solver for PcgSolver {
     fn name(&self) -> String {
+        // The configured (pre-resolution) kind: `auto` stays `auto` so
+        // the name — and with it the checkpoint compatibility gate — is
+        // derivable from the config alone; the resolved construction is
+        // reported through `precond_report`.
         format!(
             "pcg({},r={},{})",
-            match self.cfg.precond {
-                PcgPrecond::Rpc => "rpc",
-                PcgPrecond::Gaussian => "gaussian",
-                PcgPrecond::None => "plain",
-            },
+            self.cfg.precond.name(),
             self.cfg.rank,
             if self.cfg.f64_matvec { "f64" } else { "backend" }
         )
@@ -212,38 +216,51 @@ impl Solver for PcgSolver {
     ) -> anyhow::Result<Box<dyn SolveState + 'a>> {
         let n = problem.n();
         let lam = problem.lam;
+        let rho = lam.max(1e-10);
         let t0 = Instant::now();
 
         // --- preconditioner setup (counted against the budget) ----------
         let sp_pre = crate::obs::span("precond");
         let mut starved = false;
-        let precond = match self.cfg.precond {
-            PcgPrecond::Rpc => {
-                Some(Woodbury::from_factor(self.rpc_b_factor(backend, problem)?, lam.max(1e-10))?)
-            }
-            PcgPrecond::Gaussian => {
+        let resolved = precond::resolve(self.cfg.precond, problem.kernel);
+        let (pre, precond_name, precond_rank) = match resolved {
+            PrecondKind::None => (PcgPre::Plain, "none", 0),
+            PrecondKind::Gaussian => {
                 match self.gaussian_b_factor(backend, problem, budget, &t0)? {
-                    Some(b) => Some(Woodbury::from_factor(b, lam.max(1e-10))?),
+                    Some(b) => {
+                        let r = b.cols;
+                        (PcgPre::Gaussian(Woodbury::from_factor(b, rho)?), "gaussian", r)
+                    }
                     None => {
                         // Setup starved the budget: the first step()
                         // aborts with zero iterations (paper Fig. 1's
                         // "did not complete one iteration").
                         starved = true;
-                        None
+                        (PcgPre::Plain, "gaussian", 0)
                     }
                 }
             }
-            PcgPrecond::None => None,
+            kind => {
+                let op = KernelOperand::from_problem(problem);
+                let s = PrecondSettings {
+                    kind,
+                    rank: self.cfg.rank,
+                    oversample: self.cfg.oversample,
+                    seed: self.cfg.seed,
+                    rho,
+                };
+                let pc = precond::build(backend, &op, &s)?;
+                let (nm, rk) = (pc.name(), pc.rank());
+                (PcgPre::Suite(pc), nm, rk)
+            }
         };
+        let build_secs = t0.elapsed().as_secs_f64();
         drop(sp_pre);
 
         // --- CG state: w = 0, r = y, z = P^{-1} r, p = z ----------------
         let y = &problem.train.y;
         let res: Vec<f64> = y.clone();
-        let zv = match &precond {
-            Some(pc) => pc.apply(&res),
-            None => res.clone(),
-        };
+        let zv = pre.apply(&res);
         let p = zv.clone();
         let rz = dense::dot(&res, &zv);
         let y_norm = dense::norm(y).max(1e-300);
@@ -253,7 +270,10 @@ impl Solver for PcgSolver {
             solver: self.name(),
             f64_matvec: self.cfg.f64_matvec,
             rank: self.cfg.rank,
-            precond,
+            pre,
+            precond_name,
+            precond_rank,
+            build_secs,
             starved,
             w: vec![0.0f64; n],
             res,
@@ -261,6 +281,9 @@ impl Solver for PcgSolver {
             p,
             rz,
             y_norm,
+            alphas: Vec::new(),
+            betas: Vec::new(),
+            coeffs_valid: true,
             iters: 0,
         }))
     }
@@ -274,7 +297,10 @@ pub struct PcgState<'a> {
     solver: String,
     f64_matvec: bool,
     rank: usize,
-    precond: Option<Woodbury>,
+    pre: PcgPre,
+    precond_name: &'static str,
+    precond_rank: usize,
+    build_secs: f64,
     /// Gaussian setup blew the whole budget: report zero iterations.
     starved: bool,
     w: Vec<f64>,
@@ -283,6 +309,14 @@ pub struct PcgState<'a> {
     p: Vec<f64>,
     rz: f64,
     y_norm: f64,
+    /// CG recurrence coefficients (= Lanczos tridiagonal of the
+    /// preconditioned operator), capped at [`LANCZOS_COEFF_CAP`];
+    /// checkpointed so a resumed solve reports the same estimate.
+    alphas: Vec<f64>,
+    betas: Vec<f64>,
+    /// Refinement restarts the recurrence, after which the collected
+    /// coefficients no longer form one Lanczos tridiagonal.
+    coeffs_valid: bool,
     iters: usize,
 }
 
@@ -316,15 +350,16 @@ impl SolveState for PcgState<'_> {
             self.w[i] += alpha * self.p[i];
             self.res[i] -= alpha * ap[i];
         }
-        self.zv = match &self.precond {
-            Some(pc) => pc.apply(&self.res),
-            None => self.res.clone(),
-        };
+        self.zv = self.pre.apply(&self.res);
         let rz_new = dense::dot(&self.res, &self.zv);
         let beta = rz_new / self.rz;
         self.rz = rz_new;
         for i in 0..n {
             self.p[i] = self.zv[i] + beta * self.p[i];
+        }
+        if self.coeffs_valid && self.alphas.len() < LANCZOS_COEFF_CAP {
+            self.alphas.push(alpha);
+            self.betas.push(beta);
         }
         self.iters += 1;
         Ok(StepOutcome::Continue)
@@ -347,12 +382,12 @@ impl SolveState for PcgState<'_> {
             kw[i] += lam * self.w[i];
         }
         self.res = (0..n).map(|i| self.problem.train.y[i] - kw[i]).collect();
-        self.zv = match &self.precond {
-            Some(pc) => pc.apply(&self.res),
-            None => self.res.clone(),
-        };
+        self.zv = self.pre.apply(&self.res);
         self.rz = dense::dot(&self.res, &self.zv);
         self.p = self.zv.clone();
+        // The restarted recurrence explores a fresh Krylov space; the
+        // concatenated coefficients are no longer one tridiagonal.
+        self.coeffs_valid = false;
         Ok(())
     }
 
@@ -381,6 +416,20 @@ impl SolveState for PcgState<'_> {
         }
     }
 
+    fn precond_report(&self) -> Option<PrecondReport> {
+        let cond_est = if self.coeffs_valid {
+            precond::lanczos_cond_estimate(&self.alphas, &self.betas)
+        } else {
+            f64::NAN
+        };
+        Some(PrecondReport {
+            name: self.precond_name.to_string(),
+            rank: self.precond_rank,
+            build_secs: self.build_secs,
+            cond_est,
+        })
+    }
+
     fn checkpoint(&self, secs: f64) -> Checkpoint {
         let mut ck =
             Checkpoint::new("pcg", &self.solver, &self.problem.name, self.iters, secs);
@@ -389,6 +438,11 @@ impl SolveState for PcgState<'_> {
         ck.push_vec("z", self.zv.clone());
         ck.push_vec("p", self.p.clone());
         ck.push_scalar("rz", self.rz);
+        // Lanczos coefficient history rides along so a resumed solve
+        // reports the same condition-number estimate.
+        ck.push_vec("cg_alphas", self.alphas.clone());
+        ck.push_vec("cg_betas", self.betas.clone());
+        ck.push_scalar("cg_coeffs_valid", if self.coeffs_valid { 1.0 } else { 0.0 });
         ck
     }
 
@@ -401,6 +455,9 @@ impl SolveState for PcgState<'_> {
         self.zv = ck.vec("z", n)?.to_vec();
         self.p = ck.vec("p", n)?.to_vec();
         self.rz = ck.scalar("rz")?;
+        self.alphas = ck.vec_var("cg_alphas")?.to_vec();
+        self.betas = ck.vec_var("cg_betas")?.to_vec();
+        self.coeffs_valid = ck.scalar("cg_coeffs_valid")? != 0.0;
         Ok(())
     }
 }

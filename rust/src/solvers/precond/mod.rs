@@ -1,0 +1,347 @@
+//! Randomized preconditioner suite (`docs/PRECONDITIONERS.md`).
+//!
+//! A first-class [`Preconditioner`] abstraction shared by the Krylov
+//! solvers (PCG, Falkon) and — through RPCholesky's ridge leverage
+//! scores — ASkotch's SAP block sampler. Three constructions register
+//! into the same conformance harness ([`crate::testing::precond`]):
+//!
+//! * [`NystromPrecond`] — the original trace-jittered column Nystrom
+//!   from uniformly sampled pivots (refactored out of `solvers::pcg`).
+//! * [`RpcholPrecond`] — accelerated (blocked) randomly pivoted
+//!   Cholesky: pivot blocks sampled proportionally to the residual
+//!   diagonal (Diaz, Epperly, Frangella, Tropp & Webber 2023), with
+//!   approximate ridge leverage scores as a byproduct.
+//! * [`SketchPrecond`] — CountSketch sketch-and-precondition (Avron,
+//!   Clarkson & Woodruff 2017): `K_hat = Y C^{-1} Y^T` with
+//!   `Y = K S^T`, `C = S K S^T`.
+//!
+//! All three produce a rank-r B-factor `K_hat = B B^T` applied through
+//! the shared [`Woodbury`] core, so `apply` is
+//! `(K_hat + rho I)^{-1} g`. Every construction satisfies
+//! `K_hat <= K` (in the psd order), which gives the conformance
+//! harness a closed-form spectral bound:
+//! `eig((K_hat + rho I)^{-1} (K + rho I)) in [1, 1 + tr(K - K_hat)/rho]`
+//! with `tr(K - K_hat) = n - approx_trace()` for normalized kernels.
+//!
+//! Preconditioners are *derived* state: checkpoints never store the
+//! factor; solvers rebuild it deterministically from the config seed at
+//! `init`, which is what keeps `--resume` bit-for-bit (see
+//! `docs/MODELS.md`).
+
+use crate::backend::Backend;
+use crate::config::{KernelKind, PrecondKind};
+use crate::coordinator::KrrProblem;
+use crate::kernels::fused::SlabRef;
+use crate::linalg::SymEig;
+
+mod nystrom;
+mod rpchol;
+mod sketch;
+
+pub use nystrom::NystromPrecond;
+pub use rpchol::RpcholPrecond;
+pub use sketch::SketchPrecond;
+
+/// Knobs for one preconditioner build, resolved from
+/// [`crate::config::ExperimentConfig`] by the solver.
+#[derive(Debug, Clone, Copy)]
+pub struct PrecondSettings {
+    /// Construction to build. Must be concrete (not `Auto`; resolve
+    /// with [`resolve`] first) and one of the suite kinds.
+    pub kind: PrecondKind,
+    /// Target rank of the factor.
+    pub rank: usize,
+    /// Extra sketch rows (sketch) / pivot-block size (rpchol) on top
+    /// of the rank.
+    pub oversample: usize,
+    /// Seed for the construction's private RNG stream.
+    pub seed: u64,
+    /// Ridge `rho` of the application `(K_hat + rho I)^{-1}`.
+    pub rho: f64,
+}
+
+/// A built preconditioner: the `(K_hat + rho I)^{-1}` application plus
+/// the metadata the conformance harness and testbed reports consume.
+pub trait Preconditioner {
+    /// Which suite construction this is.
+    fn kind(&self) -> PrecondKind;
+
+    /// Short display name (`nystrom`/`rpchol`/`sketch`).
+    fn name(&self) -> &'static str {
+        self.kind().name()
+    }
+
+    /// Columns of the B-factor actually built (adaptive constructions
+    /// may stop early when the residual is exhausted).
+    fn rank(&self) -> usize;
+
+    /// `(K_hat + rho I)^{-1} g`.
+    fn apply(&self, g: &[f64]) -> Vec<f64>;
+
+    /// `tr(K_hat) = ||B||_F^2` — the captured trace mass, feeding the
+    /// harness's spectral bound `1 + (tr K - tr K_hat)/rho`.
+    fn approx_trace(&self) -> f64;
+
+    /// Approximate ridge leverage scores (length n), when the
+    /// construction produces them (RPCholesky); `None` otherwise.
+    fn leverage_scores(&self) -> Option<&[f64]> {
+        None
+    }
+
+    /// Explicitly-allocated factor state, for storage accounting.
+    fn state_bytes(&self) -> usize;
+}
+
+/// The kernel operator a preconditioner is built over: a row-major
+/// point slab plus the per-slab caches. PCG builds over the full
+/// training slab; Falkon over its m inducing points.
+#[derive(Clone, Copy)]
+pub struct KernelOperand<'a> {
+    pub kernel: KernelKind,
+    pub x: &'a [f64],
+    pub n: usize,
+    pub d: usize,
+    pub sigma: f64,
+    pub slab: SlabRef<'a>,
+}
+
+impl<'a> KernelOperand<'a> {
+    /// The full-KRR operator `K(X_train, X_train)` of a problem.
+    pub fn from_problem(problem: &'a KrrProblem) -> Self {
+        KernelOperand {
+            kernel: problem.kernel,
+            x: &problem.train.x,
+            n: problem.n(),
+            d: problem.d(),
+            sigma: problem.sigma,
+            slab: problem.train_slab(),
+        }
+    }
+}
+
+/// Resolve `Auto` to a concrete construction for a kernel family:
+/// RPCholesky for the fast-decaying smooth kernels (RBF/Matern — the
+/// adaptive pivots chase the dominant spectrum), CountSketch for
+/// Laplacian whose slow spectral decay favors the projection factor.
+pub fn resolve(kind: PrecondKind, kernel: KernelKind) -> PrecondKind {
+    match kind {
+        PrecondKind::Auto => match kernel {
+            KernelKind::Laplacian => PrecondKind::Sketch,
+            KernelKind::Rbf | KernelKind::Matern52 => PrecondKind::Rpchol,
+        },
+        other => other,
+    }
+}
+
+/// Build one suite preconditioner over a kernel operand. `s.kind` must
+/// be concrete ([`resolve`] first); `Gaussian`/`None` are PCG-private
+/// ablation arms that never reach this entry point.
+pub fn build(
+    backend: &dyn Backend,
+    op: &KernelOperand<'_>,
+    s: &PrecondSettings,
+) -> anyhow::Result<Box<dyn Preconditioner>> {
+    anyhow::ensure!(op.n > 0 && s.rank > 0, "precond build needs n > 0 and rank > 0");
+    match s.kind {
+        PrecondKind::Nystrom => {
+            let _sp = crate::obs::span("precond/nystrom");
+            Ok(Box::new(NystromPrecond::build(backend, op, s)?))
+        }
+        PrecondKind::Rpchol => {
+            let _sp = crate::obs::span("precond/rpchol");
+            Ok(Box::new(RpcholPrecond::build(backend, op, s)?))
+        }
+        PrecondKind::Sketch => {
+            let _sp = crate::obs::span("precond/sketch");
+            Ok(Box::new(SketchPrecond::build(backend, op, s)?))
+        }
+        other => anyhow::bail!(
+            "precond::build only constructs the suite kinds (nystrom|rpchol|sketch), got {}",
+            other.name()
+        ),
+    }
+}
+
+/// What one solve learned about its preconditioner, surfaced through
+/// [`crate::coordinator::SolveReport`] into testbed RunRecords and
+/// `docs/RESULTS.md`.
+#[derive(Debug, Clone)]
+pub struct PrecondReport {
+    /// Resolved construction name (`auto` never appears here; exact
+    /// factorizations report `exact`, plain CG reports `none`).
+    pub name: String,
+    /// Factor rank actually built (0 for none/exact).
+    pub rank: usize,
+    /// Wall-clock seconds the build took.
+    pub build_secs: f64,
+    /// CG-Lanczos estimate of the preconditioned operator's condition
+    /// number ([`lanczos_cond_estimate`]); NaN when unavailable.
+    pub cond_est: f64,
+}
+
+/// Cap on the CG coefficient history kept for [`lanczos_cond_estimate`]
+/// (the Jacobi eigensolve on the tridiagonal is O(k^3) per sweep).
+pub const LANCZOS_COEFF_CAP: usize = 128;
+
+/// Condition-number estimate of the preconditioned operator from the CG
+/// recurrence coefficients, for free: the `alpha`/`beta` scalars of k
+/// CG steps define the Lanczos tridiagonal
+///
+/// ```text
+/// T[0,0]   = 1/alpha_0
+/// T[j,j]   = 1/alpha_j + beta_{j-1}/alpha_{j-1}
+/// T[j,j+1] = sqrt(beta_j)/alpha_j
+/// ```
+///
+/// whose extreme eigenvalues converge (from the inside) to the extreme
+/// eigenvalues of `P^{-1/2} A P^{-1/2}` — so `max/min` is a lower bound
+/// on, and in practice a tight estimate of, the effective condition
+/// number CG actually sees. Returns NaN for fewer than 2 coefficients.
+pub fn lanczos_cond_estimate(alphas: &[f64], betas: &[f64]) -> f64 {
+    let k = alphas.len().min(LANCZOS_COEFF_CAP);
+    if k < 2 || betas.len() + 1 < k {
+        return f64::NAN;
+    }
+    let mut t = crate::linalg::Mat::zeros(k, k);
+    for j in 0..k {
+        if !alphas[j].is_finite() || alphas[j] <= 0.0 {
+            return f64::NAN;
+        }
+        t[(j, j)] = 1.0 / alphas[j];
+        if j > 0 {
+            t[(j, j)] += betas[j - 1] / alphas[j - 1];
+        }
+        if j + 1 < k {
+            if !betas[j].is_finite() || betas[j] < 0.0 {
+                return f64::NAN;
+            }
+            let off = betas[j].sqrt() / alphas[j];
+            t[(j, j + 1)] = off;
+            t[(j + 1, j)] = off;
+        }
+    }
+    let eig = SymEig::jacobi(&t, 100);
+    let max = eig.values.first().copied().unwrap_or(f64::NAN);
+    let min = eig.values.last().copied().unwrap_or(f64::NAN);
+    if !(max.is_finite() && min.is_finite()) || min <= 0.0 {
+        return f64::NAN;
+    }
+    max / min
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::{dense, Chol, Mat};
+    use crate::util::Rng;
+
+    #[test]
+    fn auto_resolution_is_per_kernel_and_stable() {
+        assert_eq!(resolve(PrecondKind::Auto, KernelKind::Rbf), PrecondKind::Rpchol);
+        assert_eq!(resolve(PrecondKind::Auto, KernelKind::Matern52), PrecondKind::Rpchol);
+        assert_eq!(resolve(PrecondKind::Auto, KernelKind::Laplacian), PrecondKind::Sketch);
+        assert_eq!(resolve(PrecondKind::Sketch, KernelKind::Rbf), PrecondKind::Sketch);
+    }
+
+    #[test]
+    fn lanczos_estimate_recovers_cond_of_diagonal_operator() {
+        // Run exact CG on A = diag(eigs) and feed the recurrence
+        // coefficients to the estimator: with n distinct eigenvalues CG
+        // visits the full Krylov space, so T's spectrum is A's.
+        let eigs = [10.0, 4.0, 2.0, 1.0, 0.5, 0.25];
+        let n = eigs.len();
+        let mut a = Mat::zeros(n, n);
+        for i in 0..n {
+            a[(i, i)] = eigs[i];
+        }
+        let mut rng = Rng::new(7);
+        let b: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+        let mut x = vec![0.0; n];
+        let mut r = b.clone();
+        let mut p = r.clone();
+        let mut rz = dense::dot(&r, &r);
+        let (mut alphas, mut betas) = (Vec::new(), Vec::new());
+        for _ in 0..n {
+            let ap = a.matvec(&p);
+            let alpha = rz / dense::dot(&p, &ap);
+            alphas.push(alpha);
+            for i in 0..n {
+                x[i] += alpha * p[i];
+                r[i] -= alpha * ap[i];
+            }
+            let rz_new = dense::dot(&r, &r);
+            let beta = rz_new / rz;
+            betas.push(beta);
+            rz = rz_new;
+            for i in 0..n {
+                p[i] = r[i] + beta * p[i];
+            }
+        }
+        let cond = lanczos_cond_estimate(&alphas, &betas);
+        let want = 10.0 / 0.25;
+        assert!((cond - want).abs() / want < 1e-6, "cond {cond} want {want}");
+    }
+
+    #[test]
+    fn lanczos_estimate_degrades_to_nan() {
+        assert!(lanczos_cond_estimate(&[], &[]).is_nan());
+        assert!(lanczos_cond_estimate(&[0.5], &[]).is_nan());
+        assert!(lanczos_cond_estimate(&[0.5, -1.0], &[0.1]).is_nan());
+    }
+
+    #[test]
+    fn build_rejects_non_suite_kinds() {
+        let backend = crate::backend::HostBackend::new(1);
+        let x = vec![0.0, 1.0, 2.0, 3.0];
+        let op = KernelOperand {
+            kernel: KernelKind::Rbf,
+            x: &x,
+            n: 4,
+            d: 1,
+            sigma: 1.0,
+            slab: SlabRef::default(),
+        };
+        let s = PrecondSettings {
+            kind: PrecondKind::Gaussian,
+            rank: 2,
+            oversample: 2,
+            seed: 0,
+            rho: 0.1,
+        };
+        assert!(build(&backend, &op, &s).is_err());
+    }
+
+    /// Shared oracle: dense `(K_hat + rho I)^{-1}` from the operand's
+    /// exact kernel matrix must match `apply` when the factor is exact
+    /// (rank = n).
+    #[test]
+    fn full_rank_suite_applications_match_dense_ridge_solve() {
+        let backend = crate::backend::HostBackend::new(1);
+        let n = 24;
+        let d = 3;
+        let mut rng = Rng::new(41);
+        let x: Vec<f64> = (0..n * d).map(|_| rng.normal()).collect();
+        let rho = 0.5;
+        let op = KernelOperand {
+            kernel: KernelKind::Rbf,
+            x: &x,
+            n,
+            d,
+            sigma: 1.3,
+            slab: SlabRef::default(),
+        };
+        let k = crate::kernels::matrix(op.kernel, &x, n, &x, n, d, op.sigma);
+        let mut kr = k.clone();
+        kr.add_diag(rho);
+        let g: Vec<f64> = (0..n).map(|i| (i as f64 * 0.3).sin()).collect();
+        let want = Chol::new(&kr, 0.0).unwrap().solve(&g);
+        for kind in [PrecondKind::Nystrom, PrecondKind::Rpchol] {
+            let s = PrecondSettings { kind, rank: n, oversample: 8, seed: 3, rho };
+            let pc = build(&backend, &op, &s).unwrap();
+            let got = pc.apply(&g);
+            let err = dense::norm(&dense::sub(&got, &want)) / dense::norm(&want);
+            assert!(err < 1e-5, "{}: full-rank apply err {err}", kind.name());
+            assert!((pc.approx_trace() - n as f64).abs() < 1e-6, "{}", kind.name());
+        }
+    }
+}

@@ -1,0 +1,72 @@
+//! Column Nystrom from uniformly sampled pivots — the original PCG
+//! preconditioner (`solvers::pcg::rpc_b_factor` before the suite),
+//! refactored behind [`Preconditioner`]. `K_hat = C W^{-1} C^T` with
+//! `C = K(:, S)`, `W = K_SS` over r uniform distinct pivots, in
+//! B-factor form `B = C L^{-T}` (`W = L L^T`, trace-scaled jitter).
+
+use super::{KernelOperand, Preconditioner, PrecondSettings};
+use crate::backend::Backend;
+use crate::config::PrecondKind;
+use crate::linalg::{Chol, Mat, Woodbury};
+use crate::util::Rng;
+
+pub struct NystromPrecond {
+    wood: Woodbury,
+    rank: usize,
+    n: usize,
+    trace_hat: f64,
+}
+
+impl NystromPrecond {
+    pub fn build(
+        backend: &dyn Backend,
+        op: &KernelOperand<'_>,
+        s: &PrecondSettings,
+    ) -> anyhow::Result<NystromPrecond> {
+        let (n, d) = (op.n, op.d);
+        let r = s.rank.min(n);
+        // Seed stream kept from the pre-suite PCG factor so existing
+        // runs reproduce bit-for-bit.
+        let mut rng = Rng::new(s.seed ^ 0x9C6);
+        let pivots = rng.sample_distinct(n, r);
+        let mut xp = Vec::with_capacity(r * d);
+        for &p in &pivots {
+            xp.extend_from_slice(&op.x[p * d..(p + 1) * d]);
+        }
+        // C = K(:, S): n x r, O(n r d) through the panel engine.
+        let c = backend.kernel_matrix(op.kernel, op.x, n, &xp, r, d, op.sigma);
+        // W = K_SS; B = C chol(W)^{-T}.
+        let w = backend.kernel_block(op.kernel, op.x, d, &pivots, op.sigma);
+        let ch = Chol::new(&w, 1e-8 * r as f64)?;
+        let mut b = Mat::zeros(n, r);
+        for i in 0..n {
+            let bi = ch.solve_lower(c.row(i));
+            b.row_mut(i).copy_from_slice(&bi);
+        }
+        let trace_hat = b.data.iter().map(|v| v * v).sum();
+        let wood = Woodbury::from_factor(b, s.rho)?;
+        Ok(NystromPrecond { wood, rank: r, n, trace_hat })
+    }
+}
+
+impl Preconditioner for NystromPrecond {
+    fn kind(&self) -> PrecondKind {
+        PrecondKind::Nystrom
+    }
+
+    fn rank(&self) -> usize {
+        self.rank
+    }
+
+    fn apply(&self, g: &[f64]) -> Vec<f64> {
+        self.wood.apply(g)
+    }
+
+    fn approx_trace(&self) -> f64 {
+        self.trace_hat
+    }
+
+    fn state_bytes(&self) -> usize {
+        (self.n * self.rank + self.rank * self.rank) * 8
+    }
+}

@@ -1,0 +1,184 @@
+//! Accelerated (blocked) randomly pivoted Cholesky — Diaz, Epperly,
+//! Frangella, Tropp & Webber 2023. Maintains the residual diagonal
+//! `d_i = K_ii - ||F_i||^2` and per round samples a pivot *block*
+//! proportionally to it, assembles the panel `G = K(:, S) - F F_S^T`
+//! through the fused panel engine, factors the t x t residual block and
+//! appends `G L^{-T}` to the factor. Adaptive pivoting concentrates
+//! the factor on the dominant residual spectrum, so at equal rank the
+//! preconditioned CG typically needs fewer iterations than uniform
+//! column Nystrom.
+//!
+//! Byproduct: approximate ridge leverage scores
+//! `l_i = F_i (F^T F + rho I)^{-1} F_i^T` (one O(n r^2) pass), which
+//! ASkotch's SAP sampler consumes to reweight block sampling.
+
+use super::{KernelOperand, Preconditioner, PrecondSettings};
+use crate::backend::Backend;
+use crate::config::PrecondKind;
+use crate::kernels;
+use crate::linalg::{chol_jittered, Mat, Woodbury};
+use crate::util::Rng;
+
+pub struct RpcholPrecond {
+    wood: Woodbury,
+    rank: usize,
+    n: usize,
+    trace_hat: f64,
+    scores: Vec<f64>,
+}
+
+impl RpcholPrecond {
+    pub fn build(
+        backend: &dyn Backend,
+        op: &KernelOperand<'_>,
+        s: &PrecondSettings,
+    ) -> anyhow::Result<RpcholPrecond> {
+        let (n, d) = (op.n, op.d);
+        let r = s.rank.min(n);
+        let block = s.oversample.clamp(4, r.max(4)).min(n);
+        let mut rng = Rng::new(s.seed ^ 0x59C4);
+
+        // Residual diagonal d_i = K_ii - sum_k F[i,k]^2 (all shipped
+        // kernels are normalized radial: K_ii = 1; computed exactly so
+        // the construction survives future non-normalized kernels).
+        let mut diag: Vec<f64> = (0..n)
+            .map(|i| {
+                let xi = &op.x[i * d..(i + 1) * d];
+                kernels::eval(op.kernel, xi, xi, op.sigma)
+            })
+            .collect();
+        let trace_k: f64 = diag.iter().sum();
+
+        let mut f = Mat::zeros(n, r);
+        let mut cols = 0usize;
+        while cols < r {
+            let want = block.min(r - cols);
+            // Sample the pivot block i.i.d. proportionally to the
+            // residual diagonal, then dedupe: repeated draws mean the
+            // residual mass is concentrated and a smaller block is fine.
+            let total: f64 = diag.iter().sum();
+            if !(total > trace_k * 1e-12) {
+                break; // residual exhausted: K is numerically rank-`cols`
+            }
+            let mut picks: Vec<usize> = Vec::with_capacity(want);
+            for _ in 0..want {
+                let p = rng.weighted(&diag);
+                if !picks.contains(&p) {
+                    picks.push(p);
+                }
+            }
+            let t = picks.len();
+
+            // Panel G = K(:, S) through the backend, then project out
+            // the existing factor: G -= F F_S^T.
+            let mut xp = Vec::with_capacity(t * d);
+            for &p in &picks {
+                xp.extend_from_slice(&op.x[p * d..(p + 1) * d]);
+            }
+            let mut g = backend.kernel_matrix(op.kernel, op.x, n, &xp, t, d, op.sigma);
+            if cols > 0 {
+                for i in 0..n {
+                    for (jj, &p) in picks.iter().enumerate() {
+                        let mut acc = 0.0;
+                        for k in 0..cols {
+                            acc += f[(i, k)] * f[(p, k)];
+                        }
+                        g[(i, jj)] -= acc;
+                    }
+                }
+            }
+
+            // Residual pivot block H = G[S, :] (symmetrized: the two
+            // triangles differ only by projection round-off).
+            let mut h = Mat::zeros(t, t);
+            for (a, &pa) in picks.iter().enumerate() {
+                for b in 0..t {
+                    h[(a, b)] = g[(pa, b)];
+                }
+            }
+            for a in 0..t {
+                for b in (a + 1)..t {
+                    let m = 0.5 * (h[(a, b)] + h[(b, a)]);
+                    h[(a, b)] = m;
+                    h[(b, a)] = m;
+                }
+            }
+            let h_trace: f64 = (0..t).map(|i| h[(i, i)].max(0.0)).sum();
+            let ch = chol_jittered(&h, (f64::EPSILON * h_trace).max(1e-15))?;
+
+            // Append F[:, cols..cols+t] = G L^{-T} and downdate the
+            // residual diagonal (clamped: exact arithmetic keeps it
+            // nonnegative, floating point does not).
+            for i in 0..n {
+                let fi = ch.solve_lower(g.row(i));
+                let mut drop = 0.0;
+                for (k, v) in fi.iter().enumerate() {
+                    f[(i, cols + k)] = *v;
+                    drop += v * v;
+                }
+                diag[i] = (diag[i] - drop).max(0.0);
+            }
+            for &p in &picks {
+                diag[p] = 0.0; // pivots are captured exactly
+            }
+            cols += t;
+        }
+        anyhow::ensure!(cols > 0, "rpchol: kernel diagonal vanished before any pivot");
+
+        // Shrink to the columns actually built.
+        let f = if cols == r {
+            f
+        } else {
+            let mut f2 = Mat::zeros(n, cols);
+            for i in 0..n {
+                f2.row_mut(i).copy_from_slice(&f.row(i)[..cols]);
+            }
+            f2
+        };
+
+        let trace_hat: f64 = f.data.iter().map(|v| v * v).sum();
+        let gram = f.gram();
+
+        // Approximate ridge leverage scores from the factor:
+        // l_i = ||L_c^{-1} F_i||^2 with L_c L_c^T = F^T F + rho I.
+        let mut core = gram.clone();
+        core.add_diag(s.rho.max(1e-12));
+        let core_trace: f64 = (0..cols).map(|i| core[(i, i)]).sum();
+        let core_ch = chol_jittered(&core, 1e-14 * core_trace)?;
+        let scores: Vec<f64> = (0..n)
+            .map(|i| {
+                let y = core_ch.solve_lower(f.row(i));
+                y.iter().map(|v| v * v).sum()
+            })
+            .collect();
+
+        let wood = Woodbury::new(f, gram, s.rho)?;
+        Ok(RpcholPrecond { wood, rank: cols, n, trace_hat, scores })
+    }
+}
+
+impl Preconditioner for RpcholPrecond {
+    fn kind(&self) -> PrecondKind {
+        PrecondKind::Rpchol
+    }
+
+    fn rank(&self) -> usize {
+        self.rank
+    }
+
+    fn apply(&self, g: &[f64]) -> Vec<f64> {
+        self.wood.apply(g)
+    }
+
+    fn approx_trace(&self) -> f64 {
+        self.trace_hat
+    }
+
+    fn leverage_scores(&self) -> Option<&[f64]> {
+        Some(&self.scores)
+    }
+
+    fn state_bytes(&self) -> usize {
+        (self.n * self.rank + self.rank * self.rank + self.n) * 8
+    }
+}

@@ -101,6 +101,14 @@ pub trait SolveState {
     /// accounting).
     fn state_bytes(&self) -> usize;
 
+    /// What this solve learned about its preconditioner (resolved
+    /// construction, build time, condition-number estimate), surfaced
+    /// into the final [`SolveReport`]. Solvers without a
+    /// preconditioner report `None`.
+    fn precond_report(&self) -> Option<crate::solvers::precond::PrecondReport> {
+        None
+    }
+
     /// Capture the resumable core (iterates + RNG streams + counter)
     /// at `secs` elapsed wall clock.
     fn checkpoint(&self, secs: f64) -> Checkpoint;
@@ -162,6 +170,17 @@ impl Checkpoint {
 
     pub fn push_rng(&mut self, name: &str, st: RngState) {
         self.rngs.push((name.to_string(), st));
+    }
+
+    /// Named slab of caller-unknown length (CG coefficient histories
+    /// whose size depends on how far the paused solve got). Prefer
+    /// [`Checkpoint::vec`] whenever the length is derivable.
+    pub fn vec_var(&self, name: &str) -> anyhow::Result<&[f64]> {
+        self.vectors
+            .iter()
+            .find(|(n, _)| n == name)
+            .map(|(_, v)| v.as_slice())
+            .ok_or_else(|| anyhow::anyhow!("checkpoint is missing vector {name:?}"))
     }
 
     /// Named slab, with a length check.
@@ -345,6 +364,7 @@ pub fn drive(
         weights,
         state_bytes: state.state_bytes(),
         diverged,
+        precond: state.precond_report(),
     })
 }
 
@@ -359,6 +379,8 @@ mod tests {
         ck.push_scalar("rz", 0.25);
         ck.push_rng("r", crate::util::Rng::new(1).state());
         assert_eq!(ck.vec("w", 2).unwrap(), &[1.0, 2.0]);
+        assert_eq!(ck.vec_var("w").unwrap(), &[1.0, 2.0]);
+        assert!(ck.vec_var("nope").is_err());
         assert!(ck.vec("w", 3).is_err(), "length mismatch must fail");
         assert!(ck.vec("nope", 2).is_err());
         assert_eq!(ck.scalar("rz").unwrap(), 0.25);

@@ -30,7 +30,7 @@ pub mod runner;
 pub use report::render_report;
 pub use runner::{run, RunRecord, TestbedOutcome};
 
-use crate::config::{BudgetSettings, Precision, SolverKind, TestbedScale};
+use crate::config::{BudgetSettings, Precision, PrecondKind, SolverKind, TestbedScale};
 use crate::json::{self, Decoder};
 
 /// Everything one `askotch testbed` invocation runs: which tasks (scale
@@ -44,6 +44,12 @@ pub struct TestbedConfig {
     pub solvers: Vec<SolverKind>,
     /// Nystrom/preconditioner rank shared by the rank-r solvers.
     pub rank: usize,
+    /// Preconditioner construction for the Krylov solvers (and, as
+    /// `rpchol`, the ASkotch leverage-score sampler). `Auto` keeps
+    /// each solver's historic default.
+    pub precond: PrecondKind,
+    /// Oversampling knob for the suite preconditioners.
+    pub oversample: usize,
     /// Per-family iteration caps + the shared wall-clock cap.
     pub budgets: BudgetSettings,
     /// Parallel task workers (0 = half the cores).
@@ -88,6 +94,8 @@ impl Default for TestbedConfig {
             scale: TestbedScale::Small,
             solvers: SolverKind::families().to_vec(),
             rank: 50,
+            precond: PrecondKind::Auto,
+            oversample: 8,
             budgets: BudgetSettings::default(),
             jobs: 0,
             job_threads: 0,
@@ -130,6 +138,13 @@ impl TestbedConfig {
         }
         if let Some(d) = root.opt_field("rank")? {
             c.rank = d.usize()?;
+        }
+        if let Some(d) = root.opt_field("precond")? {
+            c.precond =
+                PrecondKind::parse(d.str()?).map_err(|e| anyhow::anyhow!("{}: {e}", d.path()))?;
+        }
+        if let Some(d) = root.opt_field("oversample")? {
+            c.oversample = d.usize()?;
         }
         if let Some(d) = root.opt_field("time_limit_secs")? {
             c.budgets.time_limit_secs = d.f64()?;
@@ -227,6 +242,7 @@ mod tests {
     fn config_from_json_overrides_defaults() {
         let c = TestbedConfig::from_json(
             r#"{"scale":"smoke","solvers":["askotch","cholesky"],"rank":20,
+                "precond":"sketch","oversample":16,
                 "time_limit_secs":2.5,"sap_iters":40,"cg_iters":12,"sgd_iters":20,
                 "jobs":3,"job_threads":2,"seed":7,"filter":"taxi",
                 "out_dir":"","report_path":"r.md"}"#,
@@ -235,6 +251,8 @@ mod tests {
         assert_eq!(c.scale, TestbedScale::Smoke);
         assert_eq!(c.solvers, vec![SolverKind::Askotch, SolverKind::Cholesky]);
         assert_eq!(c.rank, 20);
+        assert_eq!(c.precond, PrecondKind::Sketch);
+        assert_eq!(c.oversample, 16);
         assert_eq!(c.budgets.sap_iters, 40);
         assert_eq!(c.budgets.cg_iters, 12);
         assert!((c.budgets.time_limit_secs - 2.5).abs() < 1e-12);

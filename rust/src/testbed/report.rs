@@ -115,6 +115,8 @@ pub fn summary_json(outcome: &TestbedOutcome, cfg: &TestbedConfig) -> Json {
         ("job_threads", Json::num(outcome.job_threads as f64)),
         ("wall_secs", Json::num(outcome.wall_secs)),
         ("rank", Json::num(cfg.rank as f64)),
+        ("precond", Json::str(cfg.precond.name())),
+        ("oversample", Json::num(cfg.oversample as f64)),
         ("seed", Json::num(cfg.seed as f64)),
         (
             "budgets",
@@ -377,6 +379,10 @@ pub fn render_report(outcome: &TestbedOutcome, cfg: &TestbedConfig) -> String {
         ),
     ]);
     sys.row(vec!["rank".into(), cfg.rank.to_string()]);
+    sys.row(vec![
+        "precond".into(),
+        format!("{} (oversample {})", cfg.precond.name(), cfg.oversample),
+    ]);
     sys.row(vec!["seed".into(), cfg.seed.to_string()]);
     sys.row(vec!["suite wall clock".into(), fmt::duration(outcome.wall_secs)]);
     md.push_str(&sys.render());
@@ -453,6 +459,8 @@ pub fn render_report(outcome: &TestbedOutcome, cfg: &TestbedConfig) -> String {
                 head.task_kind.metric_name(),
                 "time-to-tol",
                 "residual",
+                "precond (build)",
+                "cond est",
                 "state",
                 "note",
             ]);
@@ -474,6 +482,13 @@ pub fn render_report(outcome: &TestbedOutcome, cfg: &TestbedConfig) -> String {
                 } else {
                     String::new()
                 };
+                let (pre_col, cond_col) = match &r.precond {
+                    Some(p) => (
+                        format!("{} r={} {}", p.name, p.rank, fmt::duration(p.build_secs)),
+                        fmt_metric(p.cond_est),
+                    ),
+                    None => ("-".into(), "-".into()),
+                };
                 table.row(vec![
                     r.solver.clone(),
                     r.iters.to_string(),
@@ -482,6 +497,8 @@ pub fn render_report(outcome: &TestbedOutcome, cfg: &TestbedConfig) -> String {
                     fmt_metric(r.final_metric),
                     tts.map_or("-".into(), fmt::duration),
                     fmt_metric(r.final_residual),
+                    pre_col,
+                    cond_col,
                     fmt::count(r.state_bytes as f64),
                     note,
                 ]);
@@ -553,6 +570,7 @@ mod tests {
             final_residual: f64::NAN,
             state_bytes: 800,
             diverged,
+            precond: None,
             error: None,
             trace,
             profile: Vec::new(),
@@ -619,15 +637,19 @@ mod tests {
 
     #[test]
     fn report_mentions_tasks_solvers_and_charts() {
-        let outcome = TestbedOutcome {
-            records: sample_records(),
-            tasks: 2,
-            jobs: 2,
-            job_threads: 1,
-            wall_secs: 1.5,
-        };
+        let mut records = sample_records();
+        records[1].precond = Some(crate::solvers::PrecondReport {
+            name: "rpchol".into(),
+            rank: 48,
+            build_secs: 0.25,
+            cond_est: 12.5,
+        });
+        let outcome = TestbedOutcome { records, tasks: 2, jobs: 2, job_threads: 1, wall_secs: 1.5 };
         let cfg = TestbedConfig::default();
         let md = render_report(&outcome, &cfg);
+        assert!(md.contains("precond (build)"));
+        assert!(md.contains("rpchol r=48"));
+        assert!(md.contains("12.5"));
         assert!(md.contains("# ASkotch testbed results"));
         assert!(md.contains("## Performance profile"));
         assert!(md.contains("### taxi_like"));

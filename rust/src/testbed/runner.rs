@@ -47,6 +47,9 @@ pub struct RunRecord {
     pub final_residual: f64,
     pub state_bytes: usize,
     pub diverged: bool,
+    /// Preconditioner telemetry (resolved construction, build seconds,
+    /// condition-number estimate) for solvers that build one.
+    pub precond: Option<crate::solvers::PrecondReport>,
     /// The solver returned an error (e.g. Cholesky past its size cap).
     pub error: Option<String>,
     pub trace: Trace,
@@ -83,6 +86,7 @@ impl RunRecord {
             final_residual: r.final_residual,
             state_bytes: r.state_bytes,
             diverged: r.diverged,
+            precond: r.precond,
             error: None,
             trace: r.trace,
             profile,
@@ -117,6 +121,7 @@ impl RunRecord {
             final_residual: f64::NAN,
             state_bytes: 0,
             diverged: false,
+            precond: None,
             error: Some(err),
             trace: Trace::default(),
             profile: Vec::new(),
@@ -153,6 +158,18 @@ impl ToJson for RunRecord {
             ("final_residual", Json::num(self.final_residual)),
             ("state_bytes", Json::num(self.state_bytes as f64)),
             ("diverged", Json::Bool(self.diverged)),
+            (
+                "precond",
+                match &self.precond {
+                    Some(p) => Json::obj(vec![
+                        ("name", Json::str(&p.name)),
+                        ("rank", Json::num(p.rank as f64)),
+                        ("build_secs", Json::num(p.build_secs)),
+                        ("cond_est", Json::num(p.cond_est)),
+                    ]),
+                    None => Json::Null,
+                },
+            ),
             (
                 "error",
                 match &self.error {
@@ -241,6 +258,8 @@ fn experiment_for(cfg: &TestbedConfig, meta: &TaskMeta, kind: SolverKind) -> Exp
         solver: kind,
         sampling: SamplingScheme::Uniform,
         rho: RhoMode::Damped,
+        precond: cfg.precond,
+        oversample: cfg.oversample,
         rank: cfg.rank,
         seed: cfg.seed,
         max_iters: cfg.budgets.max_iters(kind),

@@ -17,6 +17,8 @@
 //! });
 //! ```
 
+pub mod precond;
+
 use crate::util::Rng;
 
 /// A source of random test inputs for one case.

@@ -1,0 +1,321 @@
+//! Preconditioner conformance harness.
+//!
+//! Property-checks every suite construction
+//! ([`crate::solvers::precond`]) against dense oracles on small
+//! synthetic problems:
+//!
+//! * **SPD-ness** — `apply` is a symmetric positive definite operator.
+//! * **Spectral correctness** — every eigenvalue of
+//!   `(K_hat + rho I)^{-1} (K + rho I)` lies in
+//!   `[1, 1 + (tr K - tr K_hat)/rho]`, the bound the `K_hat <= K`
+//!   constructions guarantee (checked by full Jacobi eigendecomposition
+//!   of the similar symmetric pencil, not just extremal estimates).
+//! * **f32/f64 parity** — a factor built on an f32-precision backend
+//!   applies within the repo-wide `5e-4 * max(1, ||v||_1)` bar of the
+//!   f64 build (the builds assemble panels in exact f64, so this is
+//!   typically bit-identical; the bar catches regressions if a build
+//!   ever routes through the f32 panel path).
+//! * **Bookkeeping** — `rank`/`approx_trace`/`state_bytes` stay inside
+//!   their defining inequalities.
+//!
+//! `rust/tests/precond_conformance.rs` drives this over the
+//! (kind x kernel family) grid and adds the solver-level contracts
+//! (iterations-to-tolerance budgets, checkpoint bit-exactness) that
+//! need the full solve machinery.
+
+use crate::backend::{Backend, HostBackend};
+use crate::config::{KernelKind, Precision, PrecondKind};
+use crate::kernels::fused::SlabRef;
+use crate::linalg::{dense, Chol, Mat, SymEig};
+use crate::solvers::precond::{self, KernelOperand, PrecondSettings, Preconditioner};
+use crate::util::Rng;
+
+/// A small synthetic operand with a dense oracle in reach: clustered
+/// Gaussian blobs, so the kernel matrix has a genuinely decaying
+/// spectrum (the regime the suite preconditioners exist for).
+pub struct ConformanceProblem {
+    pub kernel: KernelKind,
+    pub n: usize,
+    pub d: usize,
+    pub sigma: f64,
+    pub rho: f64,
+    pub x: Vec<f64>,
+}
+
+impl ConformanceProblem {
+    pub fn synthetic(kernel: KernelKind, n: usize, seed: u64) -> ConformanceProblem {
+        let d = 4;
+        let clusters = 8;
+        let mut rng = Rng::new(seed ^ 0xC0F0);
+        let centers: Vec<f64> = (0..clusters * d).map(|_| 3.0 * rng.normal()).collect();
+        let mut x = Vec::with_capacity(n * d);
+        for i in 0..n {
+            let c = i % clusters;
+            for j in 0..d {
+                x.push(centers[c * d + j] + 0.3 * rng.normal());
+            }
+        }
+        ConformanceProblem { kernel, n, d, sigma: (d as f64).sqrt(), rho: 0.1, x }
+    }
+
+    /// One problem per shipped kernel family, at harness scale.
+    pub fn family_grid(n: usize) -> Vec<ConformanceProblem> {
+        [KernelKind::Rbf, KernelKind::Laplacian, KernelKind::Matern52]
+            .into_iter()
+            .enumerate()
+            .map(|(i, k)| ConformanceProblem::synthetic(k, n, 11 + i as u64))
+            .collect()
+    }
+
+    pub fn operand(&self) -> KernelOperand<'_> {
+        KernelOperand {
+            kernel: self.kernel,
+            x: &self.x,
+            n: self.n,
+            d: self.d,
+            sigma: self.sigma,
+            slab: SlabRef::default(),
+        }
+    }
+
+    pub fn settings(&self, kind: PrecondKind, rank: usize, seed: u64) -> PrecondSettings {
+        PrecondSettings { kind, rank, oversample: 8, seed, rho: self.rho }
+    }
+
+    /// Exact dense `K` (the oracle the spectral check diagonalizes).
+    pub fn dense_kernel(&self) -> Mat {
+        crate::kernels::matrix(self.kernel, &self.x, self.n, &self.x, self.n, self.d, self.sigma)
+    }
+}
+
+/// `apply` must be a symmetric positive definite operator:
+/// `<u, P^{-1} v> = <P^{-1} u, v>` and `<v, P^{-1} v> > 0`.
+pub fn check_spd(pc: &dyn Preconditioner, n: usize, seed: u64) -> Result<(), String> {
+    let mut rng = Rng::new(seed ^ 0x59D);
+    for trial in 0..4 {
+        let u: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+        let v: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+        let pu = pc.apply(&u);
+        let pv = pc.apply(&v);
+        let upv = dense::dot(&u, &pv);
+        let puv = dense::dot(&pu, &v);
+        let scale = upv.abs().max(puv.abs()).max(1e-300);
+        if !((upv - puv) / scale).abs().is_finite() || ((upv - puv) / scale).abs() > 1e-10 {
+            return Err(format!(
+                "{}: apply is not symmetric (trial {trial}: {upv:.6e} vs {puv:.6e})",
+                pc.name()
+            ));
+        }
+        let quad = dense::dot(&v, &pv);
+        if !(quad > 0.0) {
+            return Err(format!(
+                "{}: apply is not positive (trial {trial}: <v,Pv> = {quad:.6e})",
+                pc.name()
+            ));
+        }
+    }
+    Ok(())
+}
+
+/// Full-spectrum check of `(K_hat + rho I)^{-1} (K + rho I)`.
+///
+/// Materializes `P^{-1}` column by column from `apply`, factors
+/// `A = K + rho I = L L^T`, and diagonalizes the similar symmetric
+/// matrix `L^T P^{-1} L` — its eigenvalues are exactly the
+/// preconditioned operator's. `K_hat <= K` constructions must land in
+/// `[1, 1 + (tr K - tr K_hat)/rho]` (up to factorization jitter).
+pub fn check_spectral_bound(
+    pc: &dyn Preconditioner,
+    problem: &ConformanceProblem,
+) -> Result<(), String> {
+    let n = problem.n;
+    let mut p_inv = Mat::zeros(n, n);
+    let mut e = vec![0.0f64; n];
+    for j in 0..n {
+        e[j] = 1.0;
+        let col = pc.apply(&e);
+        e[j] = 0.0;
+        for i in 0..n {
+            p_inv[(i, j)] = col[i];
+        }
+    }
+    // Symmetrize away the O(eps) asymmetry of the triangular solves.
+    for i in 0..n {
+        for j in (i + 1)..n {
+            let s = 0.5 * (p_inv[(i, j)] + p_inv[(j, i)]);
+            p_inv[(i, j)] = s;
+            p_inv[(j, i)] = s;
+        }
+    }
+    let k = problem.dense_kernel();
+    let trace_k: f64 = (0..n).map(|i| k[(i, i)]).sum();
+    let mut a = k;
+    a.add_diag(problem.rho);
+    let ch = Chol::new(&a, 0.0).map_err(|e| format!("oracle chol failed: {e}"))?;
+    let s = ch.l.t().matmul(&p_inv).matmul(&ch.l);
+    let eig = SymEig::jacobi(&s, 100);
+    let max = eig.values.first().copied().unwrap_or(f64::NAN);
+    let min = eig.values.last().copied().unwrap_or(f64::NAN);
+    if !(max.is_finite() && min.is_finite()) {
+        return Err(format!("{}: non-finite preconditioned spectrum", pc.name()));
+    }
+    let slack = trace_k.max(1.0) / problem.rho;
+    let bound = 1.0 + (trace_k - pc.approx_trace()).max(0.0) / problem.rho;
+    // Relative tolerances: the constructions regularize their cores
+    // with trace-scaled jitter, which perturbs both ends by O(eps)
+    // relative to the trace/rho scale.
+    let tol = 1e-6 * slack.max(1.0);
+    if min < 1.0 - tol {
+        return Err(format!(
+            "{}: preconditioned eigenvalue {min:.9} below 1 (K_hat <= K violated)",
+            pc.name()
+        ));
+    }
+    if max > bound * (1.0 + 1e-6) + tol {
+        return Err(format!(
+            "{}: preconditioned eigenvalue {max:.6} above the trace bound {bound:.6}",
+            pc.name()
+        ));
+    }
+    Ok(())
+}
+
+/// Builds on an f32-precision backend must apply within the repo-wide
+/// mixed-precision bar `5e-4 * max(1, ||v||_1)` of the f64 build.
+pub fn check_f32_f64_parity(
+    problem: &ConformanceProblem,
+    kind: PrecondKind,
+    rank: usize,
+    seed: u64,
+) -> Result<(), String> {
+    let s = problem.settings(kind, rank, seed);
+    let op = problem.operand();
+    let b64 = HostBackend::new(1);
+    let b32 = HostBackend::new(1).with_precision(Precision::F32);
+    let pc64 = precond::build(&b64, &op, &s).map_err(|e| format!("f64 build: {e}"))?;
+    let pc32 = precond::build(&b32, &op, &s).map_err(|e| format!("f32 build: {e}"))?;
+    let mut rng = Rng::new(seed ^ 0xF32);
+    let v: Vec<f64> = (0..problem.n).map(|_| rng.normal()).collect();
+    let y64 = pc64.apply(&v);
+    let y32 = pc32.apply(&v);
+    let l1: f64 = v.iter().map(|a| a.abs()).sum();
+    let bar = 5e-4 * l1.max(1.0);
+    let err = dense::norm(&dense::sub(&y32, &y64));
+    if !(err <= bar) {
+        return Err(format!(
+            "{}: f32/f64 apply divergence {err:.3e} exceeds the {bar:.3e} parity bar",
+            kind.name()
+        ));
+    }
+    Ok(())
+}
+
+/// `rank`/`approx_trace`/`state_bytes` bookkeeping inequalities.
+pub fn check_bookkeeping(
+    pc: &dyn Preconditioner,
+    problem: &ConformanceProblem,
+    requested_rank: usize,
+    oversample: usize,
+) -> Result<(), String> {
+    let built = pc.rank();
+    if built == 0 || built > requested_rank + oversample {
+        return Err(format!(
+            "{}: built rank {built} outside (0, {requested_rank} + {oversample}]",
+            pc.name()
+        ));
+    }
+    let k = problem.dense_kernel();
+    let trace_k: f64 = (0..problem.n).map(|i| k[(i, i)]).sum();
+    let t = pc.approx_trace();
+    if !(t >= 0.0 && t <= trace_k * (1.0 + 1e-9)) {
+        return Err(format!("{}: approx_trace {t:.6} outside [0, tr K = {trace_k:.6}]", pc.name()));
+    }
+    if pc.state_bytes() == 0 {
+        return Err(format!("{}: zero state_bytes for a rank-{built} factor", pc.name()));
+    }
+    if pc.kind() == PrecondKind::Rpchol {
+        let scores = pc
+            .leverage_scores()
+            .ok_or_else(|| "rpchol: leverage scores missing".to_string())?;
+        if scores.len() != problem.n || scores.iter().any(|s| !s.is_finite() || *s < 0.0) {
+            return Err("rpchol: malformed leverage scores".to_string());
+        }
+    }
+    Ok(())
+}
+
+/// Run the full conformance battery for one (kind, problem) cell.
+/// Returns the built rank on success so callers can log coverage.
+pub fn run_conformance(
+    backend: &dyn Backend,
+    problem: &ConformanceProblem,
+    kind: PrecondKind,
+    rank: usize,
+    seed: u64,
+) -> Result<usize, String> {
+    let s = problem.settings(kind, rank, seed);
+    let pc = precond::build(backend, &problem.operand(), &s)
+        .map_err(|e| format!("{}: build failed: {e}", kind.name()))?;
+    check_spd(pc.as_ref(), problem.n, seed)?;
+    check_spectral_bound(pc.as_ref(), problem)?;
+    check_bookkeeping(pc.as_ref(), problem, rank, s.oversample)?;
+    check_f32_f64_parity(problem, kind, rank, seed)?;
+    Ok(pc.rank())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn harness_passes_for_every_suite_kind_on_one_problem() {
+        let backend = HostBackend::new(1);
+        let problem = ConformanceProblem::synthetic(KernelKind::Rbf, 64, 5);
+        for kind in PrecondKind::suite() {
+            let built = run_conformance(&backend, &problem, *kind, 24, 7)
+                .unwrap_or_else(|e| panic!("{e}"));
+            assert!(built > 0);
+        }
+    }
+
+    #[test]
+    fn spectral_check_rejects_a_bad_preconditioner() {
+        // An operator that is NOT (K_hat + rho I)^{-1} for any
+        // K_hat <= K: scaled identity far above 1/rho pushes the
+        // preconditioned spectrum below 1.
+        struct Bogus {
+            n: usize,
+        }
+        impl Preconditioner for Bogus {
+            fn kind(&self) -> PrecondKind {
+                PrecondKind::Nystrom
+            }
+            fn rank(&self) -> usize {
+                1
+            }
+            fn apply(&self, g: &[f64]) -> Vec<f64> {
+                g.iter().map(|v| v * 1e-6).collect()
+            }
+            fn approx_trace(&self) -> f64 {
+                0.0
+            }
+            fn state_bytes(&self) -> usize {
+                8
+            }
+            fn leverage_scores(&self) -> Option<&[f64]> {
+                let _ = self.n;
+                None
+            }
+        }
+        let problem = ConformanceProblem::synthetic(KernelKind::Rbf, 48, 9);
+        let err = check_spectral_bound(&Bogus { n: 48 }, &problem).unwrap_err();
+        assert!(err.contains("below 1"), "unexpected error: {err}");
+    }
+
+    #[test]
+    fn family_grid_covers_all_kernels() {
+        let grid = ConformanceProblem::family_grid(32);
+        assert_eq!(grid.len(), 3);
+        assert!(grid.iter().all(|p| p.x.len() == 32 * p.d));
+    }
+}

@@ -3,14 +3,16 @@
 //! for the `proptest` crate.
 
 use askotch::backend::{Backend, HostBackend};
-use askotch::config::{ExperimentConfig, KernelKind};
+use askotch::config::{ExperimentConfig, KernelKind, PrecondKind};
 use askotch::data::{csv, preprocess, synthetic};
 use askotch::kernels;
-use askotch::linalg::{Chol, Mat};
+use askotch::kernels::fused::SlabRef;
+use askotch::linalg::{dense, eig, Chol, Mat, SymEig};
 use askotch::prop_assert;
 use askotch::runtime::manifest::{Manifest, ShapeKey};
 use askotch::runtime::tensor::HostMat;
-use askotch::sampling::{ArlsSampler, BlockSampler, UniformSampler};
+use askotch::sampling::{exact_rls, ArlsSampler, BlockSampler, UniformSampler};
+use askotch::solvers::precond::{self, KernelOperand, PrecondSettings};
 use askotch::testing::check;
 
 #[test]
@@ -547,6 +549,185 @@ fn prop_split_is_a_partition() {
             let key: Vec<_> = tr.row(i).iter().map(|v| v.to_bits()).collect();
             prop_assert!(orig.contains(&key), "train row {i} not from original");
         }
+        Ok(())
+    });
+}
+
+// ------------------------------------------------------------------ //
+// RPCholesky preconditioner pinned against exact oracles             //
+// ------------------------------------------------------------------ //
+
+/// Exact greedy diagonally-pivoted Cholesky — the deterministic oracle
+/// that RPCholesky randomizes. Returns the step count at which the
+/// residual diagonal falls below `tol` (the numerical rank of `k`).
+fn pivoted_chol_rank(k: &Mat, tol: f64) -> usize {
+    let n = k.rows;
+    let mut diag: Vec<f64> = (0..n).map(|i| k[(i, i)]).collect();
+    let mut f = Mat::zeros(n, n);
+    for step in 0..n {
+        let p = (0..n).fold(0, |best, i| if diag[i] > diag[best] { i } else { best });
+        if diag[p] <= tol {
+            return step;
+        }
+        let scale = diag[p].sqrt();
+        for i in 0..n {
+            let mut v = k[(i, p)];
+            for j in 0..step {
+                v -= f[(i, j)] * f[(p, j)];
+            }
+            f[(i, step)] = v / scale;
+        }
+        for i in 0..n {
+            diag[i] = (diag[i] - f[(i, step)] * f[(i, step)]).max(0.0);
+        }
+        diag[p] = 0.0;
+    }
+    n
+}
+
+#[test]
+fn prop_rpchol_full_rank_apply_matches_dense_ridge_inverse() {
+    check("rpchol full-rank apply", 12, |g| {
+        let backend = HostBackend::new(1);
+        let n = g.usize_in(8, 28);
+        let d = g.usize_in(1, 4);
+        let sigma = g.f64_in(0.8, 2.5);
+        let rho = g.f64_in(0.05, 1.0);
+        let mut rng = askotch::util::Rng::new(g.rng().next_u64());
+        let x: Vec<f64> = (0..n * d).map(|_| rng.normal()).collect();
+        let op = KernelOperand {
+            kernel: KernelKind::Rbf,
+            x: &x,
+            n,
+            d,
+            sigma,
+            slab: SlabRef::default(),
+        };
+        let s = PrecondSettings {
+            kind: PrecondKind::Rpchol,
+            rank: n,
+            oversample: 6,
+            seed: g.rng().next_u64(),
+            rho,
+        };
+        let pc = precond::build(&backend, &op, &s).map_err(|e| e.to_string())?;
+        let k = kernels::matrix(KernelKind::Rbf, &x, n, &x, n, d, sigma);
+        let mut kr = k.clone();
+        kr.add_diag(rho);
+        let v: Vec<f64> = (0..n).map(|i| (0.7 * i as f64).cos()).collect();
+        let want = Chol::new(&kr, 0.0).map_err(|e| e.to_string())?.solve(&v);
+        let got = pc.apply(&v);
+        let err = dense::norm(&dense::sub(&got, &want)) / dense::norm(&want).max(1e-12);
+        prop_assert!(err < 1e-4, "full-rank apply err {err} (n={n} rho={rho})");
+        prop_assert!(
+            (pc.approx_trace() - n as f64).abs() < 1e-6 * n as f64,
+            "captured trace {} != tr K = {n}",
+            pc.approx_trace()
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_rpchol_rank_tracks_exact_pivoted_cholesky_on_clustered_data() {
+    check("rpchol rank adaptation", 12, |g| {
+        let backend = HostBackend::new(1);
+        let q = g.usize_in(3, 5);
+        let copies = 8;
+        let n = q * copies;
+        let d = 2;
+        let sigma = g.f64_in(0.8, 1.5);
+        // q well-separated centers, each duplicated `copies` times:
+        // K has numerical rank exactly q.
+        let mut x = vec![0.0; n * d];
+        for c in 0..q {
+            for dup in 0..copies {
+                x[(c * copies + dup) * d] = 8.0 * c as f64;
+                x[(c * copies + dup) * d + 1] = 0.5 * c as f64;
+            }
+        }
+        let k = kernels::matrix(KernelKind::Rbf, &x, n, &x, n, d, sigma);
+        let oracle = pivoted_chol_rank(&k, 1e-8 * n as f64);
+        prop_assert!(oracle == q, "oracle rank {oracle} != {q} clusters");
+
+        let rho = g.f64_in(0.05, 0.5);
+        let op = KernelOperand {
+            kernel: KernelKind::Rbf,
+            x: &x,
+            n,
+            d,
+            sigma,
+            slab: SlabRef::default(),
+        };
+        let s = PrecondSettings {
+            kind: PrecondKind::Rpchol,
+            rank: n,
+            oversample: 4,
+            seed: g.rng().next_u64(),
+            rho,
+        };
+        let pc = precond::build(&backend, &op, &s).map_err(|e| e.to_string())?;
+        // Adaptive pivoting exhausts the residual diagonal long before
+        // the requested n columns: at least one pivot per cluster, at
+        // most a block per cluster plus mop-up rounds.
+        prop_assert!(pc.rank() >= oracle, "rank {} below exact rank {oracle}", pc.rank());
+        prop_assert!(pc.rank() <= 4 * q + 8, "rank {} way past exact rank {q}", pc.rank());
+        // The truncated factor still spans range(K), so the application
+        // is the exact ridge inverse despite rank << n.
+        let mut kr = k.clone();
+        kr.add_diag(rho);
+        let v: Vec<f64> = (0..n).map(|i| (0.3 * i as f64).sin()).collect();
+        let want = Chol::new(&kr, 0.0).map_err(|e| e.to_string())?.solve(&v);
+        let got = pc.apply(&v);
+        let err = dense::norm(&dense::sub(&got, &want)) / dense::norm(&want).max(1e-12);
+        prop_assert!(err < 1e-5, "rank-deficient apply err {err}");
+        prop_assert!(
+            (pc.approx_trace() - n as f64).abs() < 1e-6 * n as f64,
+            "captured trace {} != tr K = {n}",
+            pc.approx_trace()
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_rpchol_leverage_scores_match_exact_rls_at_full_rank() {
+    check("rpchol leverage scores", 12, |g| {
+        let backend = HostBackend::new(1);
+        let n = g.usize_in(8, 24);
+        let d = g.usize_in(1, 3);
+        let sigma = g.f64_in(0.9, 2.0);
+        let rho = g.f64_in(0.05, 1.0);
+        let kind = *g.choice(&[KernelKind::Rbf, KernelKind::Laplacian, KernelKind::Matern52]);
+        let mut rng = askotch::util::Rng::new(g.rng().next_u64());
+        let x: Vec<f64> = (0..n * d).map(|_| rng.normal()).collect();
+        let op = KernelOperand { kernel: kind, x: &x, n, d, sigma, slab: SlabRef::default() };
+        let s = PrecondSettings {
+            kind: PrecondKind::Rpchol,
+            rank: n,
+            oversample: 6,
+            seed: g.rng().next_u64(),
+            rho,
+        };
+        let pc = precond::build(&backend, &op, &s).map_err(|e| e.to_string())?;
+        let scores = pc.leverage_scores().ok_or("rpchol must expose leverage scores")?;
+        let k = kernels::matrix(kind, &x, n, &x, n, d, sigma);
+        // At full rank F F^T = K, so by the push-through identity the
+        // approximate scores F (F^T F + rho I)^{-1} F^T are exactly the
+        // ridge leverage scores diag(K (K + rho I)^{-1}) ...
+        let exact = exact_rls(&k, rho);
+        for (i, (a, b)) in scores.iter().zip(&exact).enumerate() {
+            prop_assert!((a - b).abs() < 1e-4, "score {i}: {a} vs exact {b} ({kind:?})");
+            prop_assert!(*a >= 0.0 && *a <= 1.0 + 1e-9, "score {i} outside [0,1]: {a}");
+        }
+        // ... and their sum is the ridge effective dimension.
+        let eigs = SymEig::jacobi(&k, 100).values;
+        let deff = eig::effective_dimension(&eigs, rho);
+        let sum: f64 = scores.iter().sum();
+        prop_assert!(
+            (sum - deff).abs() < 1e-3 * deff.max(1.0),
+            "score sum {sum} vs effective dimension {deff}"
+        );
         Ok(())
     });
 }

@@ -143,7 +143,7 @@ fn pcg_converges_on_classification() {
 fn falkon_reaches_reasonable_accuracy() {
     let Some(engine) = engine() else { return };
     let problem = classification_problem(800);
-    let mut solver = FalkonSolver::new(FalkonConfig { m: 200, seed: 0 });
+    let mut solver = FalkonSolver::new(FalkonConfig { m: 200, ..Default::default() });
     let report = solver.run(&engine, &problem, &Budget::iterations(60)).unwrap();
     assert!(!report.diverged);
     assert!(report.final_metric > 0.6, "accuracy {}", report.final_metric);
@@ -248,7 +248,7 @@ fn full_krr_beats_small_inducing_points_on_hard_regression()
     let problem = taxi_problem(900);
     let mut askotch = AskotchSolver::new(AskotchConfig { rank: 20, ..Default::default() }, true);
     let a = askotch.run(&engine, &problem, &Budget::iterations(900)).unwrap();
-    let mut falkon = FalkonSolver::new(FalkonConfig { m: 16, seed: 0 });
+    let mut falkon = FalkonSolver::new(FalkonConfig { m: 16, ..Default::default() });
     let f = falkon.run(&engine, &problem, &Budget::iterations(200)).unwrap();
     assert!(
         metrics::better(TaskKind::Regression, a.final_metric, f.final_metric),

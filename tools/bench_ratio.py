@@ -14,9 +14,16 @@ Usage (from rust/, the bench's working directory):
     python3 ../tools/bench_ratio.py \
         --current BENCH_KERNELS.json --baseline ../BENCH_KERNELS.json
 
-Exit status is 1 when any row's f32-vs-f64 speedup fell below
-`--min-fraction` (default 0.5) of the baseline's — the CI step runs
-with continue-on-error, so this reports rather than gates.
+When the bench also ran the `precond_build` exhibit, its section is
+compared the same way: the machine-stable signal there is the PCG
+iteration count per preconditioner arm (and its ratio to the plain-CG
+arm), not build wall-clock.
+
+Exit status is 1 when any engine row's f32-vs-f64 speedup fell below
+`--min-fraction` (default 0.5) of the baseline's, or a preconditioner
+arm needed more iterations than plain CG / blew past its baseline
+count — the CI step runs with continue-on-error, so this reports
+rather than gates.
 
 Stdlib only; no third-party imports.
 """
@@ -26,16 +33,59 @@ import json
 import sys
 
 
-def load_rows(path):
-    """Rows of a BENCH_KERNELS.json keyed by (kernel, d); {} if absent."""
+def load_doc(path):
+    """Parsed BENCH_KERNELS.json object; {} if absent or malformed."""
     try:
         with open(path, encoding="utf-8") as f:
             doc = json.load(f)
     except (OSError, ValueError) as e:
         print(f"bench_ratio: cannot read {path}: {e}", file=sys.stderr)
         return {}
-    rows = doc.get("rows", [])
-    return {(r.get("kernel"), int(r.get("d", 0))): r for r in rows}
+    return doc if isinstance(doc, dict) else {}
+
+
+def engine_rows(doc):
+    """Engine rows keyed by (kernel, d); {} if the section is absent."""
+    return {(r.get("kernel"), int(r.get("d", 0))): r for r in doc.get("rows", [])}
+
+
+def precond_rows(doc):
+    """`precond_build` rows keyed by preconditioner name."""
+    rows = doc.get("precond_build", {}).get("rows", [])
+    return {r.get("precond"): r for r in rows if r.get("precond")}
+
+
+def compare_precond(current, baseline):
+    """Print the precond_build table; return the regressed arm names."""
+    if not current:
+        return []
+    plain = current.get("none", {}).get("pcg_iters")
+    header = f"{'precond':<10} {'rank':>5} {'iters':>6} {'vs plain':>9} {'baseline':>9}  status"
+    print("\n" + header)
+    print("-" * len(header))
+    regressed = []
+    for name in sorted(current):
+        row = current[name]
+        iters = row.get("pcg_iters")
+        if iters is None:
+            continue
+        saving = (plain / iters) if (plain and iters and name != "none") else None
+        base = baseline.get(name, {}).get("pcg_iters")
+        status = "ok"
+        if name != "none" and plain and iters > plain:
+            status = "WORSE THAN PLAIN CG"
+            regressed.append(name)
+        elif base and iters > 1.5 * base:
+            status = "REGRESSED (>150% of baseline iters)"
+            regressed.append(name)
+        elif not base:
+            status = "no baseline"
+        print(
+            f"{name:<10} {int(row.get('rank', 0)):>5} {int(iters):>6} "
+            f"{(f'{saving:.1f}x' if saving else '-'):>9} "
+            f"{(f'{int(base)}' if base else '-'):>9}  {status}"
+        )
+    return regressed
 
 
 def main():
@@ -51,9 +101,11 @@ def main():
     )
     args = ap.parse_args()
 
-    current = load_rows(args.current)
-    baseline = load_rows(args.baseline)
-    if not current:
+    current_doc = load_doc(args.current)
+    baseline_doc = load_doc(args.baseline)
+    current = engine_rows(current_doc)
+    baseline = engine_rows(baseline_doc)
+    if not current and not precond_rows(current_doc):
         print("bench_ratio: no current rows; did the bench run?", file=sys.stderr)
         return 1
 
@@ -84,11 +136,17 @@ def main():
             f"{(f'{base:.2f}x' if base else '-'):>9}  {status}"
         )
 
+    regressed_precond = compare_precond(precond_rows(current_doc), precond_rows(baseline_doc))
+
     if regressed:
         names = ", ".join(f"{k[0]}/d={k[1]}" for k in regressed)
         print(f"\nbench_ratio: f32 speedup collapsed on: {names}", file=sys.stderr)
+    if regressed_precond:
+        names = ", ".join(regressed_precond)
+        print(f"\nbench_ratio: preconditioner arms regressed: {names}", file=sys.stderr)
+    if regressed or regressed_precond:
         return 1
-    print("\nbench_ratio: f32-vs-f64 ratios within budget of the baseline")
+    print("\nbench_ratio: engine ratios and preconditioner arms within budget of the baseline")
     return 0
 
 
