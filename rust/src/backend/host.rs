@@ -796,6 +796,12 @@ pub struct HostSapStepper<'a> {
     beta: f64,
     gamma: f64,
     alpha: f64,
+    /// Multiplier on the preconditioned update, 1.0 in a healthy solve.
+    /// Divergence recovery halves it ([`SapStepper::backoff`]) —
+    /// Lemma 8's automatic stepsize assumes the powering estimate of
+    /// `L_PB` is honest, and a poisoned/diverged trajectory breaks that
+    /// assumption; a damped retry restores contraction.
+    step_scale: f64,
     rng: Rng,
     w: Vec<f64>,
     v: Vec<f64>,
@@ -822,6 +828,7 @@ impl<'a> HostSapStepper<'a> {
             beta,
             gamma,
             alpha,
+            step_scale: 1.0,
             rng: Rng::new(opts.seed ^ 0x5EED),
             w: vec![0.0; n],
             v: vec![0.0; n],
@@ -887,6 +894,15 @@ impl SapStepper for HostSapStepper<'_> {
         self.step_inner(idx, true)
     }
 
+    fn backoff(&mut self, factor: f64) -> bool {
+        self.step_scale *= factor.clamp(1e-3, 0.999);
+        // Momentum carries the divergent direction: restart it from the
+        // restored primal iterate.
+        self.v.copy_from_slice(&self.w);
+        self.z.copy_from_slice(&self.w);
+        true
+    }
+
     fn weights(&self) -> Vec<f64> {
         self.w.clone()
     }
@@ -905,6 +921,7 @@ impl SapStepper for HostSapStepper<'_> {
         // not silently resume here (bit-for-bit would be broken). The
         // host iterate state is f64 even under `--precision f32`.
         ck.push_scalar("sap_precision", 64.0);
+        ck.push_scalar("sap_step_scale", self.step_scale);
         ck.push_rng("sap_rng", self.rng.state());
         ck.push_vec("w", self.w.clone());
         if self.accelerated {
@@ -921,6 +938,8 @@ impl SapStepper for HostSapStepper<'_> {
              stepper — resume on the original backend"
         );
         let n = self.problem.n();
+        // Pre-recovery checkpoints carry no scale: they ran undamped.
+        self.step_scale = ck.scalar("sap_step_scale").unwrap_or(1.0);
         self.rng = Rng::from_state(ck.rng("sap_rng")?);
         self.w = ck.vec("w", n)?.to_vec();
         if self.accelerated {
@@ -1033,6 +1052,11 @@ impl HostSapStepper<'_> {
             };
             let d_b = wb.apply(&g_b);
             d_b.into_iter().map(|g| g / l_pb).collect()
+        };
+        let s: Vec<f64> = if self.step_scale == 1.0 {
+            s
+        } else {
+            s.into_iter().map(|x| x * self.step_scale).collect()
         };
 
         // Iterate update (Gower et al. 2018 Alg. 2 indexing; duplicates

@@ -71,6 +71,16 @@ pub trait SapStepper {
         self.step(idx)
     }
 
+    /// Damp the update after a divergence rollback: multiply the
+    /// effective step by `factor` (in `(0, 1)`) and reset any momentum
+    /// state to the restored iterate. Returns whether the stepper
+    /// supports backoff (the default does not — the drive loop then
+    /// flags the divergence instead of retrying).
+    fn backoff(&mut self, factor: f64) -> bool {
+        let _ = factor;
+        false
+    }
+
     /// Current full-KRR weights in f64 (length n).
     fn weights(&self) -> Vec<f64>;
 

@@ -192,6 +192,10 @@ pub struct SolveReport {
     /// Did the solver detect divergence (EigenPro with bad defaults
     /// reproduces the paper's observation)?
     pub diverged: bool,
+    /// How many divergence recoveries (checkpoint rollback + step
+    /// backoff, see `solvers::drive`) the solve performed. A nonzero
+    /// count with `diverged == false` means the run healed itself.
+    pub recoveries: usize,
     /// Preconditioner telemetry (resolved construction, build time,
     /// condition-number estimate) for the solvers that build one.
     pub precond: Option<crate::solvers::precond::PrecondReport>,

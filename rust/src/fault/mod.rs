@@ -1,0 +1,446 @@
+//! Deterministic, seedable fault injection.
+//!
+//! The chaos suite (`tests/chaos.rs`) and the robustness drills in
+//! `docs/ROBUSTNESS.md` need to reproduce rare failures — a torn
+//! checkpoint write, a panicking worker, a poisoned kernel value, an
+//! I/O error mid-save — on demand and *deterministically*, so a failing
+//! run can be replayed bit-for-bit. This module is the registry those
+//! drills arm: production code declares **named injection points**
+//! (`fault::fail_io("slab/write")`, `fault::panic_point("server/predict")`,
+//! ...) and tests arm [`FaultRule`]s against them.
+//!
+//! Discipline mirrors [`crate::obs::set_enabled`]: the registry is
+//! **disarmed by default** and every call-site helper starts with one
+//! relaxed atomic load ([`armed`]) — the disabled cost is the same
+//! "one predictable branch" contract the obs counters keep, which is
+//! what the `host_kernel_engine` bench's <1% overhead gate measures.
+//!
+//! Determinism: rules trigger on exact hit counts (`after` skips,
+//! `every` cadence, `limit` cap) or — when `prob` is set — on a stream
+//! drawn from a [`Rng`] seeded by [`arm`]; two runs with the same rules
+//! and seed inject at exactly the same hits. Every trigger increments
+//! a cumulative per-point counter (surfaced by `--profile` and
+//! [`counters`]) and emits a structured `fault` event through
+//! [`crate::obs`].
+
+use crate::json::Json;
+use crate::util::Rng;
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Mutex;
+
+/// Fast-path gate: one relaxed load, `false` in production.
+static ARMED: AtomicBool = AtomicBool::new(false);
+
+/// Armed rules + RNG + per-rule hit counts. `None` when disarmed.
+static REGISTRY: Mutex<Option<Registry>> = Mutex::new(None);
+
+/// Cumulative `point/kind -> trigger count`, surviving [`disarm`] so a
+/// `--profile` table at exit still shows what a test run injected.
+static COUNTS: Mutex<Option<BTreeMap<String, u64>>> = Mutex::new(None);
+
+/// What an armed rule does at its injection point.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultKind {
+    /// The guarded I/O operation fails with an injected
+    /// `std::io::Error` ([`fail_io`]).
+    Io,
+    /// A write is torn: only a prefix survives ([`torn_fraction`]
+    /// returns the fraction of bytes to keep).
+    Torn,
+    /// The calling thread sleeps `arg` milliseconds ([`latency`]).
+    Latency,
+    /// The calling thread panics ([`panic_point`]) — exercising the
+    /// `catch_unwind` isolation around workers.
+    Panic,
+    /// Numeric payloads are poisoned with NaN ([`poison_slice`]).
+    Poison,
+    /// A solver is forced onto a divergent trajectory ([`diverge`]).
+    Diverge,
+}
+
+impl FaultKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            FaultKind::Io => "io",
+            FaultKind::Torn => "torn",
+            FaultKind::Latency => "latency",
+            FaultKind::Panic => "panic",
+            FaultKind::Poison => "poison",
+            FaultKind::Diverge => "diverge",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<FaultKind> {
+        Some(match s {
+            "io" => FaultKind::Io,
+            "torn" => FaultKind::Torn,
+            "latency" => FaultKind::Latency,
+            "panic" => FaultKind::Panic,
+            "poison" => FaultKind::Poison,
+            "diverge" => FaultKind::Diverge,
+            _ => return None,
+        })
+    }
+}
+
+/// One armed injection: *which* point, *what* happens, and *when* (a
+/// deterministic hit schedule, optionally made probabilistic).
+#[derive(Debug, Clone)]
+pub struct FaultRule {
+    /// Injection-point name, matched exactly (the catalog lives in
+    /// `docs/ROBUSTNESS.md`).
+    pub point: String,
+    pub kind: FaultKind,
+    /// Skip the first `after` hits of the point.
+    pub after: usize,
+    /// Then trigger every `every`-th hit (1 = every hit).
+    pub every: usize,
+    /// Stop after this many triggers (0 = unlimited).
+    pub limit: usize,
+    /// When > 0, trigger each eligible hit with this probability from
+    /// the seeded stream instead of deterministically.
+    pub prob: f64,
+    /// Kind-specific argument: milliseconds for [`FaultKind::Latency`],
+    /// surviving-byte fraction for [`FaultKind::Torn`].
+    pub arg: f64,
+}
+
+impl FaultRule {
+    /// Rule that fires on every hit of `point`.
+    pub fn every_hit(point: &str, kind: FaultKind) -> FaultRule {
+        FaultRule { point: point.to_string(), kind, after: 0, every: 1, limit: 0, prob: 0.0, arg: 0.0 }
+    }
+
+    /// Rule that fires exactly once, on hit `after + 1`.
+    pub fn once_after(point: &str, kind: FaultKind, after: usize) -> FaultRule {
+        FaultRule { point: point.to_string(), kind, after, every: 1, limit: 1, prob: 0.0, arg: 0.0 }
+    }
+
+    pub fn with_arg(mut self, arg: f64) -> FaultRule {
+        self.arg = arg;
+        self
+    }
+}
+
+struct ArmedRule {
+    rule: FaultRule,
+    hits: usize,
+    fired: usize,
+}
+
+struct Registry {
+    rules: Vec<ArmedRule>,
+    rng: Rng,
+}
+
+/// Arm `rules` with a deterministic seed; replaces any previous set
+/// and resets per-rule hit counts (cumulative [`counters`] survive).
+pub fn arm(rules: Vec<FaultRule>, seed: u64) {
+    let mut reg = lock(&REGISTRY);
+    *reg = Some(Registry {
+        rules: rules.into_iter().map(|rule| ArmedRule { rule, hits: 0, fired: 0 }).collect(),
+        rng: Rng::new(seed ^ 0xFA_017),
+    });
+    ARMED.store(true, Ordering::Relaxed);
+}
+
+/// Disarm every rule; all helpers return to their no-op fast path.
+pub fn disarm() {
+    let mut reg = lock(&REGISTRY);
+    *reg = None;
+    ARMED.store(false, Ordering::Relaxed);
+}
+
+/// Is any rule armed? One relaxed load — the only cost a disabled
+/// injection point pays.
+#[inline(always)]
+pub fn armed() -> bool {
+    ARMED.load(Ordering::Relaxed)
+}
+
+fn lock<T>(m: &'static Mutex<T>) -> std::sync::MutexGuard<'static, T> {
+    // A panic injected *after* the guard drops can still poison other
+    // locks on the unwinding thread; fault bookkeeping must survive it.
+    m.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// Cold path: consult the registry for `(point, kind)`. Returns the
+/// rule's `arg` when it triggers.
+fn check(point: &str, kind: FaultKind) -> Option<f64> {
+    let mut reg = lock(&REGISTRY);
+    let reg = reg.as_mut()?;
+    let mut hit = None;
+    for ar in reg.rules.iter_mut() {
+        if ar.rule.kind != kind || ar.rule.point != point {
+            continue;
+        }
+        ar.hits += 1;
+        if ar.hits <= ar.rule.after {
+            continue;
+        }
+        if ar.rule.limit > 0 && ar.fired >= ar.rule.limit {
+            continue;
+        }
+        let every = ar.rule.every.max(1);
+        if (ar.hits - ar.rule.after - 1) % every != 0 {
+            continue;
+        }
+        if ar.rule.prob > 0.0 && reg.rng.uniform() >= ar.rule.prob {
+            continue;
+        }
+        ar.fired += 1;
+        hit = Some(ar.rule.arg);
+        break;
+    }
+    drop(reg);
+    if hit.is_some() {
+        let key = format!("{point}/{}", kind.name());
+        let mut counts = lock(&COUNTS);
+        *counts.get_or_insert_with(BTreeMap::new).entry(key).or_insert(0) += 1;
+        drop(counts);
+        crate::obs::warn_kv(
+            "fault",
+            "injected",
+            &[("point", Json::str(point)), ("kind", Json::str(kind.name()))],
+        );
+    }
+    hit
+}
+
+/// Cumulative `point/kind -> triggers` since process start (survives
+/// [`disarm`]; the `--profile` fault table).
+pub fn counters() -> Vec<(String, u64)> {
+    lock(&COUNTS).as_ref().map(|m| m.iter().map(|(k, v)| (k.clone(), *v)).collect()).unwrap_or_default()
+}
+
+/// Zero the cumulative counters (test isolation).
+pub fn reset_counters() {
+    *lock(&COUNTS) = None;
+}
+
+// ---------------------------------------------------------------------------
+// Call-site helpers — each is `armed()` + an early return when disarmed.
+// ---------------------------------------------------------------------------
+
+/// Guard an I/O operation: `fault::fail_io("slab/write")?` fails with
+/// an injected [`std::io::ErrorKind::Other`] error when armed.
+#[inline]
+pub fn fail_io(point: &str) -> std::io::Result<()> {
+    if !armed() {
+        return Ok(());
+    }
+    if check(point, FaultKind::Io).is_some() {
+        return Err(std::io::Error::other(format!("injected I/O fault at {point}")));
+    }
+    Ok(())
+}
+
+/// Torn-write injection: the fraction of the payload the "crash" let
+/// reach disk (clamped to `[0, 1)` so at least one byte is lost).
+#[inline]
+pub fn torn_fraction(point: &str) -> Option<f64> {
+    if !armed() {
+        return None;
+    }
+    check(point, FaultKind::Torn).map(|arg| arg.clamp(0.0, 0.999_999))
+}
+
+/// Injected latency: sleep the rule's `arg` milliseconds when armed.
+#[inline]
+pub fn latency(point: &str) {
+    if !armed() {
+        return;
+    }
+    if let Some(ms) = check(point, FaultKind::Latency) {
+        std::thread::sleep(std::time::Duration::from_millis(ms.max(0.0) as u64));
+    }
+}
+
+/// Injected worker panic — the `catch_unwind` drills.
+#[inline]
+pub fn panic_point(point: &str) {
+    if !armed() {
+        return;
+    }
+    if check(point, FaultKind::Panic).is_some() {
+        panic!("injected panic at {point}");
+    }
+}
+
+/// Poison a numeric payload with NaN (a "corrupted kernel value").
+/// Returns whether it fired.
+#[inline]
+pub fn poison_slice(point: &str, data: &mut [f64]) -> bool {
+    if !armed() {
+        return false;
+    }
+    if check(point, FaultKind::Poison).is_some() {
+        for (i, x) in data.iter_mut().enumerate() {
+            if i % 3 == 0 {
+                *x = f64::NAN;
+            }
+        }
+        return true;
+    }
+    false
+}
+
+/// Force a solver onto a divergent trajectory at this point?
+#[inline]
+pub fn diverge(point: &str) -> bool {
+    if !armed() {
+        return false;
+    }
+    check(point, FaultKind::Diverge).is_some()
+}
+
+// ---------------------------------------------------------------------------
+// Spec parsing — `kind@point[:k=v,...][;...]` for `--faults` / env.
+// ---------------------------------------------------------------------------
+
+/// Parse a fault spec string:
+/// `io@slab/write:after=2,limit=1;latency@server/predict:ms=50`.
+/// Keys: `after`, `every`, `limit`, `prob`, `ms`/`arg`/`frac`.
+pub fn parse_spec(spec: &str) -> anyhow::Result<Vec<FaultRule>> {
+    let mut rules = Vec::new();
+    for part in spec.split(';').map(str::trim).filter(|p| !p.is_empty()) {
+        let (head, opts) = match part.split_once(':') {
+            Some((h, o)) => (h, Some(o)),
+            None => (part, None),
+        };
+        let (kind_s, point) = head
+            .split_once('@')
+            .ok_or_else(|| anyhow::anyhow!("fault spec {part:?}: want kind@point"))?;
+        let kind = FaultKind::parse(kind_s.trim())
+            .ok_or_else(|| anyhow::anyhow!("fault spec {part:?}: unknown kind {kind_s:?}"))?;
+        let mut rule = FaultRule::every_hit(point.trim(), kind);
+        for kv in opts.unwrap_or("").split(',').map(str::trim).filter(|p| !p.is_empty()) {
+            let (k, v) = kv
+                .split_once('=')
+                .ok_or_else(|| anyhow::anyhow!("fault spec {part:?}: option {kv:?} wants k=v"))?;
+            let parse_usize =
+                |v: &str| v.parse::<usize>().map_err(|_| anyhow::anyhow!("bad count {v:?}"));
+            match k.trim() {
+                "after" => rule.after = parse_usize(v)?,
+                "every" => rule.every = parse_usize(v)?.max(1),
+                "limit" => rule.limit = parse_usize(v)?,
+                "prob" => rule.prob = v.parse().map_err(|_| anyhow::anyhow!("bad prob {v:?}"))?,
+                "ms" | "arg" | "frac" => {
+                    rule.arg = v.parse().map_err(|_| anyhow::anyhow!("bad arg {v:?}"))?
+                }
+                other => anyhow::bail!("fault spec {part:?}: unknown option {other:?}"),
+            }
+        }
+        rules.push(rule);
+    }
+    Ok(rules)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Fault tests share process-global registry state; serialize them.
+    static GUARD: Mutex<()> = Mutex::new(());
+
+    fn exclusive() -> std::sync::MutexGuard<'static, ()> {
+        GUARD.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    #[test]
+    fn disarmed_helpers_are_no_ops() {
+        let _g = exclusive();
+        disarm();
+        assert!(!armed());
+        assert!(fail_io("x").is_ok());
+        assert!(torn_fraction("x").is_none());
+        let mut v = vec![1.0, 2.0];
+        assert!(!poison_slice("x", &mut v));
+        assert_eq!(v, vec![1.0, 2.0]);
+        assert!(!diverge("x"));
+        panic_point("x"); // must not panic
+    }
+
+    #[test]
+    fn cadence_after_every_limit() {
+        let _g = exclusive();
+        reset_counters();
+        let rule = FaultRule {
+            point: "p".into(),
+            kind: FaultKind::Io,
+            after: 2,
+            every: 2,
+            limit: 2,
+            prob: 0.0,
+            arg: 0.0,
+        };
+        arm(vec![rule], 7);
+        // Hits: 1 2 3 4 5 6 7 8 -> triggers at 3 and 5 (after=2,
+        // every=2, limit=2), nothing else.
+        let fired: Vec<bool> = (0..8).map(|_| fail_io("p").is_err()).collect();
+        assert_eq!(fired, vec![false, false, true, false, true, false, false, false]);
+        let counts = counters();
+        assert_eq!(counts, vec![("p/io".to_string(), 2)]);
+        disarm();
+        assert!(fail_io("p").is_ok());
+    }
+
+    #[test]
+    fn probabilistic_trigger_is_seed_deterministic() {
+        let _g = exclusive();
+        let rule = FaultRule {
+            point: "q".into(),
+            kind: FaultKind::Diverge,
+            after: 0,
+            every: 1,
+            limit: 0,
+            prob: 0.5,
+            arg: 0.0,
+        };
+        let draw = |seed: u64| {
+            arm(vec![rule.clone()], seed);
+            let v: Vec<bool> = (0..32).map(|_| diverge("q")).collect();
+            disarm();
+            v
+        };
+        let a = draw(11);
+        let b = draw(11);
+        assert_eq!(a, b, "same seed, same schedule");
+        assert!(a.iter().any(|&x| x) && a.iter().any(|&x| !x), "prob=0.5 mixes");
+    }
+
+    #[test]
+    fn poison_and_torn_payloads() {
+        let _g = exclusive();
+        arm(
+            vec![
+                FaultRule::every_hit("k", FaultKind::Poison),
+                FaultRule::every_hit("w", FaultKind::Torn).with_arg(0.5),
+            ],
+            3,
+        );
+        let mut v = vec![1.0; 4];
+        assert!(poison_slice("k", &mut v));
+        assert!(v.iter().any(|x| x.is_nan()));
+        assert_eq!(torn_fraction("w"), Some(0.5));
+        disarm();
+    }
+
+    #[test]
+    fn spec_round_trip() {
+        let _g = exclusive();
+        let rules =
+            parse_spec("io@slab/write:after=2,limit=1; latency@server/predict:ms=50").unwrap();
+        assert_eq!(rules.len(), 2);
+        assert_eq!(rules[0].point, "slab/write");
+        assert_eq!(rules[0].kind, FaultKind::Io);
+        assert_eq!(rules[0].after, 2);
+        assert_eq!(rules[0].limit, 1);
+        assert_eq!(rules[1].kind, FaultKind::Latency);
+        assert_eq!(rules[1].arg, 50.0);
+        assert!(parse_spec("nope@x").is_err());
+        assert!(parse_spec("io").is_err());
+        assert!(parse_spec("io@x:bogus=1").is_err());
+    }
+}

@@ -51,6 +51,7 @@
 //! | [`config`]    | Experiment configuration (kernels, solvers, budgets, backend), JSON decode |
 //! | [`coordinator`] | Problem setup and the solver event loop |
 //! | [`data`]      | Synthetic testbed generators, CSV loading, preprocessing |
+//! | [`fault`]     | Deterministic, seedable fault injection for the chaos drills (`docs/ROBUSTNESS.md`) |
 //! | [`json`]      | First-class JSON subsystem: strict parser, printers, typed `FromJson`/`ToJson` |
 //! | [`kernels`]   | Exact scalar kernel evaluation (oracles, reference paths) |
 //! | [`linalg`]    | Dense matrices (tiled matmul), Cholesky/eigen factorizations |
@@ -77,6 +78,7 @@ pub mod backend;
 pub mod config;
 pub mod coordinator;
 pub mod data;
+pub mod fault;
 pub mod json;
 pub mod kernels;
 pub mod linalg;

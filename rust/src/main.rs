@@ -57,6 +57,14 @@ fn main() -> Result<()> {
     //   --quiet      stderr events at warn+ only
     //   --profile    phase-breakdown summary on exit
     obs::init(args.get("log"), flag(&args, "quiet"))?;
+    // Deterministic fault injection for chaos drills (docs/ROBUSTNESS.md):
+    //   --faults "io@slab/write:after=2;latency@server/predict:ms=50"
+    //   --fault-seed N    seed for probabilistic (prob=) rules
+    if let Some(spec) = args.get("faults") {
+        let rules = askotch::fault::parse_spec(spec)?;
+        askotch::fault::arm(rules, args.get_u64("fault-seed", 0));
+        obs::warn_kv("fault", "fault injection armed", &[("spec", Json::str(spec))]);
+    }
     let result = match args.positional.first().map(String::as_str) {
         Some("solve") => cmd_solve(&args),
         Some("train") => cmd_train(&args),
@@ -76,6 +84,8 @@ fn main() -> Result<()> {
                  --log FILE, --quiet, --profile\n\
                  lifecycle: train --save DIR, serve --model DIR, \
                  solve/train --checkpoint DIR [--checkpoint-every N] [--resume]\n\
+                 robustness (docs/ROBUSTNESS.md): --max-recoveries N, --retain N, \
+                 serve --queue-cap N --deadline-ms MS, --faults SPEC [--fault-seed N]\n\
                  run `askotch info` to inspect the selected backend"
             );
             Ok(())
@@ -91,12 +101,28 @@ fn main() -> Result<()> {
             println!("{}", obs::render(&rows));
             println!("simd isa: {}", askotch::linalg::dense::simd_isa());
         }
+        // Fault-injection counters ride on the profile output so a
+        // chaos drill shows exactly which points fired, how often.
+        let faults = askotch::fault::counters();
+        if !faults.is_empty() {
+            let mut table = fmt::Table::new(&["fault point", "hits"]);
+            for (key, hits) in &faults {
+                table.row(vec![key.clone(), hits.to_string()]);
+            }
+            println!("{}", table.render());
+        }
         obs::info_kv(
             "obs",
             "profile",
             &[
                 ("phases", obs::profile_json(&rows)),
                 ("simd_isa", Json::str(askotch::linalg::dense::simd_isa())),
+                (
+                    "faults",
+                    Json::Obj(
+                        faults.iter().map(|(k, v)| (k.clone(), Json::num(*v as f64))).collect(),
+                    ),
+                ),
             ],
         );
     }
@@ -206,14 +232,16 @@ fn config_from_args(args: &Args) -> Result<ExperimentConfig> {
 
 fn print_report(report: &askotch::coordinator::SolveReport) {
     println!(
-        "solver={} problem={} iters={} wall={} metric={:.6} residual={:.3e} diverged={}",
+        "solver={} problem={} iters={} wall={} metric={:.6} residual={:.3e} diverged={} \
+         recoveries={}",
         report.solver,
         report.problem,
         report.iters,
         fmt::duration(report.wall_secs),
         report.final_metric,
         report.final_residual,
-        report.diverged
+        report.diverged,
+        report.recoveries
     );
     for p in &report.trace.points {
         println!(
@@ -235,8 +263,10 @@ fn apply_checkpoint_flags(args: &Args, cfg: &mut ExperimentConfig) {
 }
 
 /// `--resume`: load the checkpoint in `cfg.checkpoint_dir` if one
-/// exists (a missing directory starts fresh; a corrupt one is a hard
-/// error — silently restarting would discard paid-for iterations).
+/// exists (a missing directory starts fresh). A corrupt current
+/// checkpoint falls back to the newest loadable retained generation;
+/// only when no generation loads either is it a hard error — silently
+/// restarting would discard paid-for iterations.
 fn load_resume(args: &Args, cfg: &ExperimentConfig) -> Result<Option<Checkpoint>> {
     if !args.has_flag("resume") {
         return Ok(None);
@@ -255,7 +285,14 @@ fn load_resume(args: &Args, cfg: &ExperimentConfig) -> Result<Option<Checkpoint>
         );
         return Ok(None);
     }
-    let ck = Checkpoint::load(&cfg.checkpoint_dir)?;
+    let (ck, fell_back) = Checkpoint::load_recover(&cfg.checkpoint_dir)?;
+    if fell_back {
+        println!(
+            "warning: current checkpoint in {} is corrupt; resuming from the previous \
+             retained generation (iter {})",
+            cfg.checkpoint_dir, ck.iters
+        );
+    }
     obs::info_kv(
         "cli",
         "resuming from checkpoint",
@@ -264,9 +301,18 @@ fn load_resume(args: &Args, cfg: &ExperimentConfig) -> Result<Option<Checkpoint>
             ("problem", Json::str(&ck.problem)),
             ("iters", Json::num(ck.iters as f64)),
             ("secs", Json::num(ck.secs)),
+            ("recovered", Json::Bool(fell_back)),
         ],
     );
     Ok(Some(ck))
+}
+
+/// `--max-recoveries N` / `--retain N` onto a drive policy: the
+/// divergence rollback budget and how many checkpoint generations the
+/// retention pruner keeps for the recovery ladder.
+fn apply_recovery_flags(args: &Args, policy: &mut askotch::solvers::DrivePolicy) {
+    policy.max_recoveries = args.get_usize("max-recoveries", policy.max_recoveries);
+    policy.checkpoint_retain = args.get_usize("retain", policy.checkpoint_retain);
 }
 
 fn cmd_solve(args: &Args) -> Result<()> {
@@ -274,7 +320,8 @@ fn cmd_solve(args: &Args) -> Result<()> {
     apply_checkpoint_flags(args, &mut cfg);
     let backend = make_backend(args, cfg.backend, cfg.precision)?;
     let coord = Coordinator::new(backend.as_dyn());
-    let policy = Coordinator::checkpoint_policy(&cfg);
+    let mut policy = Coordinator::checkpoint_policy(&cfg);
+    apply_recovery_flags(args, &mut policy);
     let resume = load_resume(args, &cfg)?;
     let (_, report) = coord.run_with_policy(
         &cfg,
@@ -314,7 +361,8 @@ fn cmd_train(args: &Args) -> Result<()> {
     );
     let backend = make_backend(args, cfg.backend, cfg.precision)?;
     let coord = Coordinator::new(backend.as_dyn());
-    let policy = Coordinator::checkpoint_policy(&cfg);
+    let mut policy = Coordinator::checkpoint_policy(&cfg);
+    apply_recovery_flags(args, &mut policy);
     let resume = load_resume(args, &cfg)?;
     println!("training {} on {} (n={})...", cfg.solver.name(), cfg.dataset, cfg.n);
     let (problem, report) = coord.run_with_policy(
@@ -355,7 +403,8 @@ fn cmd_experiment(args: &Args) -> Result<()> {
     let coord = Coordinator::new(backend.as_dyn());
     // The config's checkpoint settings (and `--resume`) flow through
     // the same lifecycle entry point as `solve`/`train`.
-    let policy = Coordinator::checkpoint_policy(&cfg);
+    let mut policy = Coordinator::checkpoint_policy(&cfg);
+    apply_recovery_flags(args, &mut policy);
     let resume = load_resume(args, &cfg)?;
     let (_, report) = coord.run_with_policy(
         &cfg,
@@ -621,7 +670,15 @@ fn serve_setup(
     if let Some(path) = args.get("model") {
         let backend = make_backend(args, BackendKind::Auto, precision_flag(args)?)?;
         let t0 = std::time::Instant::now();
-        let artifact = ModelArtifact::load(path)?;
+        // Recovery ladder: a corrupt current artifact falls back to the
+        // previous good save (kept by the save-time rotation) instead
+        // of refusing to start.
+        let (artifact, fell_back) = ModelArtifact::load_recover(path)?;
+        if fell_back {
+            println!(
+                "warning: current artifact in {path} is corrupt; serving the previous good save"
+            );
+        }
         // Refuse cross-precision serving up front: an f32-trained model
         // on an f64 backend (or vice versa) would silently change the
         // arithmetic the weights were validated under.
@@ -679,8 +736,7 @@ fn serve_setup(
 /// runs artifact-free.
 fn cmd_serve(args: &Args) -> Result<()> {
     use askotch::net::{NetConfig, Server};
-    use askotch::server::{serve_reloadable, Job, ServerConfig};
-    use std::sync::mpsc;
+    use askotch::server::{job_queue, serve_reloadable, ServerConfig, DEFAULT_QUEUE_CAP};
     use std::time::Duration;
 
     let (backend, snapshot, meta) = serve_setup(args)?;
@@ -689,20 +745,28 @@ fn cmd_serve(args: &Args) -> Result<()> {
         threads: args.get_usize("threads", 4),
         ..Default::default()
     };
+    // Admission control knobs (docs/ROBUSTNESS.md): `--queue-cap N`
+    // bounds the job queue (full => 429 + Retry-After), and
+    // `--deadline-ms MS` drops work that overstays the queue (0
+    // disables the deadline).
+    let deadline_ms = args.get_f64("deadline-ms", 30_000.0);
     let batch_cfg = ServerConfig {
         max_batch: args.get_usize("max-batch", 256),
         linger: Duration::from_micros((args.get_f64("linger-ms", 2.0) * 1e3) as u64),
+        deadline: (deadline_ms > 0.0).then(|| Duration::from_micros((deadline_ms * 1e3) as u64)),
     };
-    let (tx, rx) = mpsc::channel::<Job>();
+    let queue_cap = args.get_usize("queue-cap", DEFAULT_QUEUE_CAP);
+    let (tx, rx) = job_queue(queue_cap);
     let server = Server::start(&net_cfg, tx)?;
     server.metrics().set_model_info(meta);
     println!(
-        "serving on http://{} (backend={}, threads={}, max_batch={}) — POST /v1/predict, \
-         GET /healthz, GET /metrics, POST /v1/admin/reload",
+        "serving on http://{} (backend={}, threads={}, max_batch={}, queue_cap={}) — \
+         POST /v1/predict, GET /healthz, GET /metrics, POST /v1/admin/reload",
         server.addr(),
         backend.as_dyn().name(),
         net_cfg.threads,
-        batch_cfg.max_batch
+        batch_cfg.max_batch,
+        queue_cap
     );
     // Block this thread in the batching loop until the server goes away
     // (in practice: until the process is killed).
@@ -717,12 +781,16 @@ fn cmd_serve(args: &Args) -> Result<()> {
     );
     server.shutdown();
     println!(
-        "served {} requests in {} batches (mean batch {:.1}, max {}, reloads {})",
+        "served {} requests in {} batches (mean batch {:.1}, max {}, reloads {}, \
+         deadline_drops {}, panics {}, poisoned {})",
         stats.requests,
         stats.batches,
         stats.mean_batch(),
         stats.max_batch_seen,
-        stats.reloads
+        stats.reloads,
+        stats.deadline_drops,
+        stats.panics,
+        stats.poisoned
     );
     if let Some(ttfp) = live.time_to_first_prediction() {
         println!("time_to_first_prediction: {}", fmt::duration(ttfp));

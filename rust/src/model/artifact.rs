@@ -30,6 +30,11 @@ pub const MODEL_FORMAT_VERSION: u32 = 1;
 pub const MANIFEST_FILE: &str = "model.json";
 /// Weights-slab file name inside an artifact directory.
 pub const SLAB_FILE: &str = "weights.slab";
+/// Where [`ModelArtifact::save`] rotates the previous good manifest —
+/// the fallback rung of [`ModelArtifact::load_recover`].
+pub const PREV_MANIFEST_FILE: &str = "model.prev.json";
+/// Where [`ModelArtifact::save`] rotates the previous good slab.
+pub const PREV_SLAB_FILE: &str = "weights.prev.slab";
 
 /// Everything about a model that is not the numbers: problem
 /// parameters needed to predict, plus training provenance.
@@ -174,11 +179,22 @@ impl ModelArtifact {
     /// Write the artifact directory (created if missing): manifest +
     /// checksummed weights slab. Both files go through temp-name +
     /// rename, slab first, so overwriting an existing artifact can
-    /// never leave a half-written file behind a valid manifest.
+    /// never leave a half-written file behind a valid manifest. An
+    /// existing (manifest, slab) pair is first rotated to
+    /// `model.prev.json` / `weights.prev.slab` — the fallback rung
+    /// [`ModelArtifact::load_recover`] climbs when the current pair is
+    /// later found corrupt.
     pub fn save(&self, dir: &str) -> anyhow::Result<()> {
         let dir = Path::new(dir);
         std::fs::create_dir_all(dir)
             .map_err(|e| anyhow::anyhow!("creating model dir {dir:?}: {e}"))?;
+        if dir.join(MANIFEST_FILE).exists() && dir.join(SLAB_FILE).exists() {
+            // Slab first: if we crash between the renames, the old
+            // manifest still describes the (now prev-named) old slab,
+            // which the recovery ladder tries explicitly.
+            let _ = std::fs::rename(dir.join(SLAB_FILE), dir.join(PREV_SLAB_FILE));
+            let _ = std::fs::rename(dir.join(MANIFEST_FILE), dir.join(PREV_MANIFEST_FILE));
+        }
         let slab_tmp = dir.join(format!("{SLAB_FILE}.tmp"));
         super::slab::write_sections(
             &slab_tmp,
@@ -197,8 +213,52 @@ impl ModelArtifact {
     /// Load an artifact directory, validating the format version, the
     /// slab checksum, and the section lengths against the manifest.
     pub fn load(dir: &str) -> anyhow::Result<ModelArtifact> {
+        ModelArtifact::load_from(dir, MANIFEST_FILE, None)
+    }
+
+    /// Load with the recovery ladder: the current pair, then the
+    /// rotated previous pair, then the current manifest over the
+    /// previous slab (the crash window between `save`'s two rotation
+    /// renames). Returns the artifact and whether a fallback was taken;
+    /// emits a structured `recovery` event through [`crate::obs`] when
+    /// one was.
+    pub fn load_recover(dir: &str) -> anyhow::Result<(ModelArtifact, bool)> {
+        let first_err = match ModelArtifact::load(dir) {
+            Ok(art) => return Ok((art, false)),
+            Err(e) => e,
+        };
+        let rungs: [(&str, Option<&str>); 2] = [
+            (PREV_MANIFEST_FILE, Some(PREV_SLAB_FILE)),
+            (MANIFEST_FILE, Some(PREV_SLAB_FILE)),
+        ];
+        for (manifest, slab) in rungs {
+            if let Ok(art) = ModelArtifact::load_from(dir, manifest, slab) {
+                crate::obs::warn_kv(
+                    "recovery",
+                    "model fallback",
+                    &[
+                        ("dir", Json::str(dir)),
+                        ("manifest", Json::str(manifest)),
+                        ("cause", Json::str(&format!("{first_err:#}"))),
+                    ],
+                );
+                return Ok((art, true));
+            }
+        }
+        Err(first_err
+            .context(format!("model in {dir:?}: no previous good artifact to fall back to")))
+    }
+
+    /// The load body: read `manifest_name`, optionally overriding the
+    /// slab file it references (a rotated manifest still says
+    /// `weights.slab`; its payload now lives under the prev name).
+    fn load_from(
+        dir: &str,
+        manifest_name: &str,
+        slab_override: Option<&str>,
+    ) -> anyhow::Result<ModelArtifact> {
         let dirp = Path::new(dir);
-        let text = std::fs::read_to_string(dirp.join(MANIFEST_FILE))
+        let text = std::fs::read_to_string(dirp.join(manifest_name))
             .map_err(|e| anyhow::anyhow!("reading model manifest in {dir:?}: {e}"))?;
         let v = json::parse(&text)
             .map_err(|e| anyhow::anyhow!("model manifest in {dir:?}: {e}"))?;
@@ -245,7 +305,10 @@ impl ModelArtifact {
             },
         };
         anyhow::ensure!(meta.sigma > 0.0, "model in {dir:?}: bandwidth must be positive");
-        let slab_name = root.field("slab")?.string()?;
+        let slab_name = match slab_override {
+            Some(name) => name.to_string(),
+            None => root.field("slab")?.string()?,
+        };
         let sections = super::slab::read_sections(&dirp.join(&slab_name))?;
         let x_train = super::slab::section(&sections, "x_train", meta.n * meta.d)?.to_vec();
         let weights = super::slab::section(&sections, "weights", meta.n)?.to_vec();
@@ -327,6 +390,7 @@ mod tests {
             weights: (0..problem.n()).map(|i| (i as f64 * 0.37).sin()).collect(),
             state_bytes: 0,
             diverged: false,
+            recoveries: 0,
             precond: None,
         };
         // Seed above 2^53: must survive the manifest round trip exactly
@@ -382,6 +446,7 @@ mod tests {
             weights: vec![0.0; 8], // m != n
             state_bytes: 0,
             diverged: false,
+            recoveries: 0,
             precond: None,
         };
         let err = ModelArtifact::from_solve(&problem, &report, 0).unwrap_err().to_string();
@@ -415,6 +480,49 @@ mod tests {
         let err = ModelArtifact::load(&dir).unwrap_err().to_string();
         assert!(err.contains("model.precision"), "got: {err}");
         let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn corrupted_artifact_recovers_from_previous_save() {
+        let (_, art) = toy_artifact();
+        let dir = temp_dir("recover");
+        let _ = std::fs::remove_dir_all(&dir);
+        art.save(&dir).unwrap();
+        // A second save rotates the first pair to *.prev.*.
+        let mut art2 = art.clone();
+        art2.meta.iters = 99;
+        art2.save(&dir).unwrap();
+        let d = std::path::Path::new(&dir);
+        assert!(d.join(PREV_MANIFEST_FILE).exists());
+        assert!(d.join(PREV_SLAB_FILE).exists());
+        let (back, fell_back) = ModelArtifact::load_recover(&dir).unwrap();
+        assert!(!fell_back, "healthy current pair must not fall back");
+        assert_eq!(back.meta.iters, 99);
+        // Bit-flip the current slab: strict load refuses, recovery
+        // serves the previous generation.
+        let slab = d.join(SLAB_FILE);
+        let mut bytes = std::fs::read(&slab).unwrap();
+        let k = bytes.len() - 12;
+        bytes[k] ^= 0x01;
+        std::fs::write(&slab, &bytes).unwrap();
+        assert!(ModelArtifact::load(&dir).is_err(), "strict load must refuse corruption");
+        let (back, fell_back) = ModelArtifact::load_recover(&dir).unwrap();
+        assert!(fell_back);
+        assert_eq!(back.meta.iters, 12, "previous generation served");
+        // First save into an empty dir has no fallback: recovery after
+        // corruption reports the original failure.
+        let dir2 = temp_dir("recover_none");
+        let _ = std::fs::remove_dir_all(&dir2);
+        art.save(&dir2).unwrap();
+        let slab2 = std::path::Path::new(&dir2).join(SLAB_FILE);
+        let mut bytes = std::fs::read(&slab2).unwrap();
+        let k = bytes.len() - 12;
+        bytes[k] ^= 0x01;
+        std::fs::write(&slab2, &bytes).unwrap();
+        let err = ModelArtifact::load_recover(&dir2).unwrap_err();
+        assert!(format!("{err:#}").contains("no previous good artifact"), "got: {err:#}");
+        let _ = std::fs::remove_dir_all(&dir);
+        let _ = std::fs::remove_dir_all(&dir2);
     }
 
     #[test]

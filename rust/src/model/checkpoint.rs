@@ -10,7 +10,11 @@
 //!   pointer);
 //! * `state-<iters>.slab` — every iterate vector as raw IEEE-754 bits
 //!   through the checksummed slab container ([`super::slab`]), so a
-//!   restored solve continues **bit-for-bit**.
+//!   restored solve continues **bit-for-bit**;
+//! * `checkpoint-<iters>.json` — retained generation manifests (keep N,
+//!   [`DEFAULT_RETAIN`] by default): [`Checkpoint::load_recover`] walks
+//!   them newest-first when the current pair is corrupt, so a torn
+//!   write costs one checkpoint interval of progress, not the solve.
 //!
 //! The inherent `save`/`load` impls live here (not in `solvers::state`)
 //! so the solver layer stays storage-agnostic.
@@ -23,11 +27,40 @@ use std::path::Path;
 /// Manifest file name inside a checkpoint directory.
 pub const MANIFEST_FILE: &str = "checkpoint.json";
 
+/// How many checkpoint generations [`Checkpoint::save`] retains by
+/// default (the current one plus one fallback for the recovery ladder).
+pub const DEFAULT_RETAIN: usize = 2;
+
 /// Slab files are named per checkpoint; the manifest's `slab` field is
 /// the commit pointer, so a manifest always references a slab that was
 /// fully written before the manifest was published.
 fn slab_file(iters: usize) -> String {
     format!("state-{iters}.slab")
+}
+
+/// Per-generation manifest name (`checkpoint.json` is a copy of the
+/// newest one — the pointer every pre-retention reader already knows).
+fn generation_file(iters: usize) -> String {
+    format!("checkpoint-{iters}.json")
+}
+
+/// Retained generation manifests in `dir`, newest first.
+fn generations(dir: &Path) -> Vec<(usize, String)> {
+    let mut out = Vec::new();
+    if let Ok(entries) = std::fs::read_dir(dir) {
+        for entry in entries.flatten() {
+            let name = entry.file_name().to_string_lossy().into_owned();
+            if let Some(mid) =
+                name.strip_prefix("checkpoint-").and_then(|s| s.strip_suffix(".json"))
+            {
+                if let Ok(iters) = mid.parse::<usize>() {
+                    out.push((iters, name));
+                }
+            }
+        }
+    }
+    out.sort_by(|a, b| b.0.cmp(&a.0));
+    out
 }
 
 fn hex_u64(x: u64) -> Json {
@@ -79,6 +112,14 @@ impl Checkpoint {
     /// never a manifest paired with a newer slab. Superseded slabs are
     /// cleaned up best-effort after the commit.
     pub fn save(&self, path: &str) -> anyhow::Result<()> {
+        self.save_retaining(path, DEFAULT_RETAIN)
+    }
+
+    /// [`Checkpoint::save`] with an explicit retention depth: keep the
+    /// newest `retain` (manifest, slab) generations so a later load can
+    /// fall back past a corrupted current checkpoint
+    /// ([`Checkpoint::load_recover`]). `retain` is clamped to >= 1.
+    pub fn save_retaining(&self, path: &str, retain: usize) -> anyhow::Result<()> {
         let dir = Path::new(path);
         std::fs::create_dir_all(dir)
             .map_err(|e| anyhow::anyhow!("creating checkpoint dir {dir:?}: {e}"))?;
@@ -109,19 +150,34 @@ impl Checkpoint {
             ),
             ("slab", Json::str(&slab_name)),
         ]);
-        let manifest_tmp = dir.join(format!("{MANIFEST_FILE}.tmp"));
-        std::fs::write(&manifest_tmp, manifest.pretty())
-            .map_err(|e| anyhow::anyhow!("writing checkpoint manifest in {dir:?}: {e}"))?;
-        std::fs::rename(&manifest_tmp, dir.join(MANIFEST_FILE))
-            .map_err(|e| anyhow::anyhow!("publishing checkpoint manifest in {dir:?}: {e}"))?;
-        // Best-effort cleanup of slabs no manifest references anymore.
+        let text = manifest.pretty();
+        // Publish the generation manifest first, then the pointer —
+        // both tmp + rename, so every published manifest references a
+        // fully-written slab and `checkpoint.json` is always whole.
+        let gen_name = generation_file(self.iters);
+        for target in [gen_name.as_str(), MANIFEST_FILE] {
+            let tmp = dir.join(format!("{target}.tmp"));
+            std::fs::write(&tmp, &text)
+                .map_err(|e| anyhow::anyhow!("writing checkpoint manifest in {dir:?}: {e}"))?;
+            std::fs::rename(&tmp, dir.join(target))
+                .map_err(|e| anyhow::anyhow!("publishing checkpoint manifest in {dir:?}: {e}"))?;
+        }
+        // Best-effort pruning: keep the newest `retain` generations
+        // (manifests + the slabs they reference), drop the rest.
+        let keep: Vec<(usize, String)> =
+            generations(dir).into_iter().take(retain.max(1)).collect();
         if let Ok(entries) = std::fs::read_dir(dir) {
             for entry in entries.flatten() {
                 let name = entry.file_name().to_string_lossy().into_owned();
-                let stale = name != slab_name
-                    && name.starts_with("state-")
-                    && (name.ends_with(".slab") || name.ends_with(".tmp"));
-                if stale {
+                let stale_slab = name.starts_with("state-")
+                    && (name.ends_with(".tmp")
+                        || (name.ends_with(".slab")
+                            && !keep.iter().any(|(it, _)| slab_file(*it) == name)));
+                let stale_manifest = name.starts_with("checkpoint-")
+                    && (name.ends_with(".tmp")
+                        || (name.ends_with(".json")
+                            && !keep.iter().any(|(_, gn)| *gn == name)));
+                if stale_slab || stale_manifest {
                     let _ = std::fs::remove_file(entry.path());
                 }
             }
@@ -129,10 +185,46 @@ impl Checkpoint {
         Ok(())
     }
 
-    /// Load a checkpoint directory written by [`Checkpoint::save`].
+    /// Load a checkpoint directory written by [`Checkpoint::save`],
+    /// strictly: the current (`checkpoint.json`) generation only.
     pub fn load(path: &str) -> anyhow::Result<Checkpoint> {
+        Checkpoint::load_manifest(Path::new(path), MANIFEST_FILE)
+    }
+
+    /// Load with the recovery ladder: try the current generation, then
+    /// each retained generation newest-first. Returns the checkpoint
+    /// and whether a fallback was taken (surfaced so callers can count
+    /// recoveries). Emits a structured `recovery` event through
+    /// [`crate::obs`] when a fallback generation is used.
+    pub fn load_recover(path: &str) -> anyhow::Result<(Checkpoint, bool)> {
         let dir = Path::new(path);
-        let text = std::fs::read_to_string(dir.join(MANIFEST_FILE))
+        let current = Checkpoint::load_manifest(dir, MANIFEST_FILE);
+        let first_err = match current {
+            Ok(ck) => return Ok((ck, false)),
+            Err(e) => e,
+        };
+        for (iters, gen_name) in generations(dir) {
+            if let Ok(ck) = Checkpoint::load_manifest(dir, &gen_name) {
+                crate::obs::warn_kv(
+                    "recovery",
+                    "checkpoint fallback",
+                    &[
+                        ("dir", Json::str(path)),
+                        ("generation", Json::str(&gen_name)),
+                        ("iters", Json::num(iters as f64)),
+                        ("cause", Json::str(&format!("{first_err:#}"))),
+                    ],
+                );
+                return Ok((ck, true));
+            }
+        }
+        Err(first_err.context(format!(
+            "checkpoint in {dir:?}: no retained generation is loadable either"
+        )))
+    }
+
+    fn load_manifest(dir: &Path, manifest_name: &str) -> anyhow::Result<Checkpoint> {
+        let text = std::fs::read_to_string(dir.join(manifest_name))
             .map_err(|e| anyhow::anyhow!("reading checkpoint manifest in {dir:?}: {e}"))?;
         let v = json::parse(&text)
             .map_err(|e| anyhow::anyhow!("checkpoint manifest in {dir:?}: {e}"))?;
@@ -257,6 +349,49 @@ mod tests {
         std::fs::write(&manifest, text.replace("\"version\": 1", "\"version\": 5")).unwrap();
         let err = Checkpoint::load(&dir).unwrap_err().to_string();
         assert!(err.contains("format version 5"), "got: {err}");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn retention_and_recovery_ladder() {
+        let dir = temp_dir("retain");
+        let _ = std::fs::remove_dir_all(&dir);
+        let mk = |iters: usize| {
+            let mut ck = Checkpoint::new("f", "s", "p", iters, iters as f64);
+            ck.push_vec("w", vec![iters as f64; 3]);
+            ck
+        };
+        mk(10).save(&dir).unwrap();
+        mk(20).save(&dir).unwrap();
+        mk(30).save(&dir).unwrap();
+        let d = Path::new(&dir);
+        // Default retention keeps two generations: 30 (current) + 20.
+        assert!(d.join("checkpoint-30.json").exists());
+        assert!(d.join("checkpoint-20.json").exists());
+        assert!(!d.join("checkpoint-10.json").exists());
+        assert!(d.join("state-30.slab").exists());
+        assert!(d.join("state-20.slab").exists());
+        assert!(!d.join("state-10.slab").exists());
+        let (ck, fell_back) = Checkpoint::load_recover(&dir).unwrap();
+        assert_eq!(ck.iters, 30);
+        assert!(!fell_back, "healthy current pair must not fall back");
+        // Flip one payload bit in the newest slab: the strict load
+        // refuses, the ladder recovers generation 20.
+        let slab = d.join("state-30.slab");
+        let mut bytes = std::fs::read(&slab).unwrap();
+        let k = bytes.len() - 12;
+        bytes[k] ^= 0x01;
+        std::fs::write(&slab, &bytes).unwrap();
+        assert!(Checkpoint::load(&dir).is_err(), "strict load must refuse corruption");
+        let (ck, fell_back) = Checkpoint::load_recover(&dir).unwrap();
+        assert_eq!(ck.iters, 20);
+        assert!(fell_back);
+        assert_eq!(ck.vec("w", 3).unwrap()[0], 20.0);
+        // With every retained slab gone too, recovery reports the
+        // original failure.
+        std::fs::remove_file(d.join("state-20.slab")).unwrap();
+        let err = Checkpoint::load_recover(&dir).unwrap_err();
+        assert!(format!("{err:#}").contains("no retained generation"), "got: {err:#}");
         let _ = std::fs::remove_dir_all(&dir);
     }
 }

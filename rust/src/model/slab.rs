@@ -33,11 +33,52 @@ fn fnv1a(bytes: &[u8]) -> u64 {
     h
 }
 
+/// A writer that silently stops persisting bytes after a budget — the
+/// torn-write fault: the caller believes the full file landed, the disk
+/// holds only a prefix. `budget: None` passes everything through.
+struct TornWriter<W: Write> {
+    inner: W,
+    budget: Option<usize>,
+}
+
+impl<W: Write> Write for TornWriter<W> {
+    fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
+        match self.budget {
+            None => self.inner.write(buf),
+            Some(ref mut left) => {
+                let keep = buf.len().min(*left);
+                *left -= keep;
+                if keep > 0 {
+                    self.inner.write_all(&buf[..keep])?;
+                }
+                // Claim the full write "succeeded" — exactly what a
+                // crash between write-back and durability looks like.
+                Ok(buf.len())
+            }
+        }
+    }
+
+    fn flush(&mut self) -> std::io::Result<()> {
+        self.inner.flush()
+    }
+}
+
 /// Write named f64 sections to `path` (parent directory must exist).
+///
+/// The file is fsynced before returning, so a caller's tmp-write +
+/// rename commit is durable, not just ordered. Injection points:
+/// `io@slab/write` fails the write outright, `torn@slab/write` (with
+/// `frac`) persists only a prefix while reporting success.
 pub fn write_sections(path: &Path, sections: &[(&str, &[f64])]) -> anyhow::Result<()> {
+    crate::fault::fail_io("slab/write")
+        .map_err(|e| anyhow::anyhow!("writing slab {path:?}: {e}"))?;
+    let header_len = 12usize + sections.iter().map(|(n, _)| 12 + n.len()).sum::<usize>();
+    let payload_len = sections.iter().map(|(_, d)| d.len() * 8).sum::<usize>();
+    let budget = crate::fault::torn_fraction("slab/write")
+        .map(|f| ((header_len + payload_len + 8) as f64 * f) as usize);
     let file = std::fs::File::create(path)
         .map_err(|e| anyhow::anyhow!("creating slab {path:?}: {e}"))?;
-    let mut w = BufWriter::new(file);
+    let mut w = TornWriter { inner: BufWriter::new(file), budget };
     w.write_all(MAGIC)?;
     w.write_all(&(sections.len() as u32).to_le_bytes())?;
     for (name, data) in sections {
@@ -60,6 +101,11 @@ pub fn write_sections(path: &Path, sections: &[(&str, &[f64])]) -> anyhow::Resul
     }
     w.write_all(&hash.to_le_bytes())?;
     w.flush()?;
+    let file = w
+        .inner
+        .into_inner()
+        .map_err(|e| anyhow::anyhow!("flushing slab {path:?}: {e}"))?;
+    file.sync_all().map_err(|e| anyhow::anyhow!("syncing slab {path:?}: {e}"))?;
     Ok(())
 }
 

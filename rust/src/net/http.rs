@@ -190,9 +190,11 @@ pub fn reason(status: u16) -> &'static str {
         404 => "Not Found",
         405 => "Method Not Allowed",
         413 => "Payload Too Large",
+        429 => "Too Many Requests",
         500 => "Internal Server Error",
         501 => "Not Implemented",
         503 => "Service Unavailable",
+        504 => "Gateway Timeout",
         _ => "Unknown",
     }
 }
@@ -238,14 +240,31 @@ pub fn write_response<W: Write>(
     body: &[u8],
     keep_alive: bool,
 ) -> io::Result<()> {
+    write_response_with(w, status, &[], body, keep_alive)
+}
+
+/// [`write_response`] with extra headers (e.g. `Retry-After` on a load
+/// shed). Header names and values must already be valid HTTP tokens;
+/// this layer does no escaping.
+pub fn write_response_with<W: Write>(
+    w: &mut W,
+    status: u16,
+    extra_headers: &[(&str, &str)],
+    body: &[u8],
+    keep_alive: bool,
+) -> io::Result<()> {
     write!(
         w,
-        "HTTP/1.1 {} {}\r\ncontent-type: application/json\r\ncontent-length: {}\r\nconnection: {}\r\n\r\n",
+        "HTTP/1.1 {} {}\r\ncontent-type: application/json\r\ncontent-length: {}\r\nconnection: {}\r\n",
         status,
         reason(status),
         body.len(),
         if keep_alive { "keep-alive" } else { "close" },
     )?;
+    for (name, value) in extra_headers {
+        write!(w, "{name}: {value}\r\n")?;
+    }
+    w.write_all(b"\r\n")?;
     w.write_all(body)?;
     w.flush()
 }
@@ -348,6 +367,16 @@ mod tests {
         let e = req("POST / HTTP/1.1\r\nContent-Length: 5\r\nContent-Length: 5\r\n\r\nhello")
             .unwrap_err();
         assert!(matches!(e, HttpError::BadRequest(_)));
+    }
+
+    #[test]
+    fn extra_headers_are_emitted_before_the_body() {
+        let mut out = Vec::new();
+        write_response_with(&mut out, 429, &[("retry-after", "1")], b"{}", false).unwrap();
+        let s = String::from_utf8(out).unwrap();
+        assert!(s.starts_with("HTTP/1.1 429 Too Many Requests\r\n"), "got: {s}");
+        assert!(s.contains("retry-after: 1\r\n"));
+        assert!(s.ends_with("\r\n\r\n{}"));
     }
 
     #[test]

@@ -6,7 +6,7 @@
 //! ```text
 //!   clients --TCP--> [accept pool: N worker threads]    [model thread]
 //!                      parse HTTP + wire JSON             owns Predictor
-//!                      mpsc::Sender<server::Job> -------> dynamic batcher
+//!                      JobSender (bounded queue) --------> dynamic batcher
 //!                      <----- per-request reply channel ----'      + hot swap
 //! ```
 //!
@@ -24,6 +24,13 @@
 //!   in-flight requests drain (their replies are already in the reply
 //!   channels), then joins the workers and drops the batcher senders so
 //!   the model thread exits its loop.
+//! * **Admission control**: predict jobs go through the bounded
+//!   [`crate::server::queue`]; when it is full the request is shed with
+//!   `429 Too Many Requests` + `Retry-After` instead of growing an
+//!   unbounded backlog. Sheds are counted on `GET /metrics`.
+//! * **Panic isolation**: each connection handler runs under
+//!   `catch_unwind`, so a parser or handler bug drops one connection,
+//!   not an accept-pool worker (counted as `worker_panics`).
 //!
 //! The submodules are independently testable: [`http`] (message layer),
 //! [`wire`] (typed JSON protocol), [`stats`] (observability).
@@ -33,7 +40,7 @@ pub mod stats;
 pub mod wire;
 
 use crate::json::Json;
-use crate::server::{Job, ReloadRequest, Request};
+use crate::server::{Job, JobSender, ReloadRequest, Request, TrySendError};
 use http::{read_request, write_response, HttpRequest};
 use stats::Metrics;
 use std::io::{self, BufRead, BufReader, BufWriter, Write};
@@ -83,10 +90,10 @@ pub struct Server {
 }
 
 impl Server {
-    /// Bind and start the accept pool. `submit` is the batcher's job
-    /// channel; each worker holds a clone, and all clones are dropped on
-    /// shutdown so the batcher loop can exit.
-    pub fn start(cfg: &NetConfig, submit: mpsc::Sender<Job>) -> anyhow::Result<Server> {
+    /// Bind and start the accept pool. `submit` is the batcher's
+    /// bounded job queue; each worker holds a clone, and all clones are
+    /// dropped on shutdown so the batcher loop can exit.
+    pub fn start(cfg: &NetConfig, submit: JobSender) -> anyhow::Result<Server> {
         let listener = TcpListener::bind(&cfg.addr)
             .map_err(|e| anyhow::anyhow!("binding {}: {e}", cfg.addr))?;
         let addr = listener.local_addr()?;
@@ -106,7 +113,16 @@ impl Server {
                         if stop.load(Ordering::SeqCst) {
                             break;
                         }
-                        let _ = handle_connection(stream, &cfg, &submit, &metrics, &stop);
+                        // Panic isolation: a handler bug (or injected
+                        // panic) costs one connection, never an
+                        // accept-pool worker.
+                        let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(
+                            || handle_connection(stream, &cfg, &submit, &metrics, &stop),
+                        ));
+                        if outcome.is_err() {
+                            metrics.worker_panics.fetch_add(1, Ordering::Relaxed);
+                            crate::obs::warn_kv("fault", "connection handler panicked", &[]);
+                        }
                     }
                     Err(_) => {
                         if stop.load(Ordering::SeqCst) {
@@ -170,11 +186,16 @@ impl Drop for Server {
 /// Bounds how long `Server::shutdown` can wait on idle connections.
 const IDLE_TICK: Duration = Duration::from_millis(200);
 
+/// Advertised `Retry-After` (seconds) on a `429` load shed: the queue
+/// drains at batch cadence, so a one-second backoff is enough for a
+/// healthy server and cheap for a saturated one.
+const RETRY_AFTER_SECS: &str = "1";
+
 /// Serve one connection: a bounded keep-alive loop.
 fn handle_connection(
     stream: TcpStream,
     cfg: &NetConfig,
-    submit: &mpsc::Sender<Job>,
+    submit: &JobSender,
     metrics: &Metrics,
     stop: &AtomicBool,
 ) -> anyhow::Result<()> {
@@ -237,7 +258,17 @@ fn handle_connection(
         if status >= 400 {
             metrics.http_errors.fetch_add(1, Ordering::Relaxed);
         }
-        respond(&mut writer, status, &body, keep)?;
+        if status == 429 {
+            http::write_response_with(
+                &mut writer,
+                status,
+                &[("retry-after", RETRY_AFTER_SECS)],
+                body.to_string().as_bytes(),
+                keep,
+            )?;
+        } else {
+            respond(&mut writer, status, &body, keep)?;
+        }
         if !keep {
             break;
         }
@@ -251,7 +282,7 @@ fn respond<W: Write>(w: &mut W, status: u16, body: &Json, keep: bool) -> anyhow:
 }
 
 /// Dispatch one request to its handler.
-fn route(req: &HttpRequest, submit: &mpsc::Sender<Job>, metrics: &Metrics) -> (u16, Json) {
+fn route(req: &HttpRequest, submit: &JobSender, metrics: &Metrics) -> (u16, Json) {
     match (req.method.as_str(), req.target.as_str()) {
         ("POST", "/v1/predict") => handle_predict(req, submit, metrics),
         ("POST", "/v1/admin/reload") => handle_reload(req, submit),
@@ -269,12 +300,14 @@ fn route(req: &HttpRequest, submit: &mpsc::Sender<Job>, metrics: &Metrics) -> (u
 /// the artifact on this worker thread (disk + checksum work stays off
 /// the model thread), then hand the snapshot to the batcher loop for
 /// an atomic between-batches swap.
-fn handle_reload(req: &HttpRequest, submit: &mpsc::Sender<Job>) -> (u16, Json) {
+fn handle_reload(req: &HttpRequest, submit: &JobSender) -> (u16, Json) {
     let path = match wire::parse_reload_body(&req.body) {
         Ok(p) => p,
         Err(e) => return (400, wire::error_body("bad_request", &e.to_string())),
     };
-    let artifact = match crate::model::ModelArtifact::load(&path) {
+    // Recovery ladder: if the current artifact pair is corrupt, fall
+    // back to the previous good save instead of refusing the reload.
+    let (artifact, fell_back) = match crate::model::ModelArtifact::load_recover(&path) {
         Ok(a) => a,
         Err(e) => {
             return (400, wire::error_body("bad_model", &format!("loading {path:?}: {e}")))
@@ -284,24 +317,26 @@ fn handle_reload(req: &HttpRequest, submit: &mpsc::Sender<Job>) -> (u16, Json) {
     let snapshot = artifact.into_snapshot();
     let (rtx, rrx) = mpsc::channel();
     let job = Job::Reload(ReloadRequest { model: Box::new(snapshot), meta, reply: rtx });
+    // Reloads are control-plane work: they bypass the admission cap so
+    // an operator can always swap a model out from under an overload.
     if submit.send(job).is_err() {
         return (503, wire::error_body("unavailable", "model thread is down; try again later"));
     }
     match rrx.recv() {
         Ok(Ok(info)) => (
             200,
-            Json::obj(vec![("status", Json::str("reloaded")), ("model", info)]),
+            Json::obj(vec![
+                ("status", Json::str("reloaded")),
+                ("recovered", Json::Bool(fell_back)),
+                ("model", info),
+            ]),
         ),
         Ok(Err(e)) => (500, wire::error_body("reload_failed", &e.to_string())),
         Err(_) => (503, wire::error_body("unavailable", "model thread dropped the reload")),
     }
 }
 
-fn handle_predict(
-    req: &HttpRequest,
-    submit: &mpsc::Sender<Job>,
-    metrics: &Metrics,
-) -> (u16, Json) {
+fn handle_predict(req: &HttpRequest, submit: &JobSender, metrics: &Metrics) -> (u16, Json) {
     let t0 = Instant::now();
     let body = {
         let _sp = crate::obs::span("serve/parse");
@@ -319,13 +354,33 @@ fn handle_predict(
     for r in requests {
         let (rtx, rrx) = mpsc::channel();
         let job = Job::Predict(Request::new(r.features, rtx));
-        if submit.send(job).is_err() {
-            return (
-                503,
-                wire::error_body("unavailable", "model thread is down; try again later"),
-            );
+        match submit.try_send(job) {
+            Ok(()) => pending.push(rrx),
+            Err(TrySendError::Full(_)) => {
+                // Admission control: shed instead of queueing past the
+                // cap. Slots already submitted will be computed; their
+                // replies are dropped with this response.
+                metrics.http_shed.fetch_add(1, Ordering::Relaxed);
+                crate::obs::warn_kv(
+                    "shed",
+                    "queue full",
+                    &[("queue_cap", Json::num(submit.cap() as f64))],
+                );
+                return (
+                    429,
+                    wire::error_body(
+                        "overloaded",
+                        "prediction queue is full; retry after a short backoff",
+                    ),
+                );
+            }
+            Err(TrySendError::Closed(_)) => {
+                return (
+                    503,
+                    wire::error_body("unavailable", "model thread is down; try again later"),
+                );
+            }
         }
-        pending.push(rrx);
     }
     let mut results: Vec<wire::SlotResult> = Vec::with_capacity(pending.len());
     {
@@ -341,7 +396,20 @@ fn handle_predict(
     }
     metrics.record_predict(results.len(), t0.elapsed().as_secs_f64());
     let all_failed = results.iter().all(|r| r.is_err());
-    let status = if all_failed && single { 500 } else { 200 };
+    let status = if all_failed && single {
+        // A request dropped for overstaying its deadline is the
+        // server timing out on the client's behalf: 504, not 500.
+        let deadline = results
+            .iter()
+            .any(|r| r.as_ref().err().is_some_and(|m| m.contains("deadline exceeded")));
+        if deadline {
+            504
+        } else {
+            500
+        }
+    } else {
+        200
+    };
     (status, wire::predict_response(single, &results))
 }
 
@@ -385,7 +453,7 @@ mod tests {
     }
 
     fn start_toy() -> (Server, std::thread::JoinHandle<crate::server::ServerStats>) {
-        let (tx, rx) = mpsc::channel::<crate::server::Job>();
+        let (tx, rx) = crate::server::job_queue(64);
         let cfg = NetConfig { addr: "127.0.0.1:0".into(), threads: 2, ..Default::default() };
         let server = Server::start(&cfg, tx).expect("start");
         let live = server.metrics().clone();
@@ -460,5 +528,39 @@ mod tests {
         assert!(body.contains("body.features"), "field path in error, got: {body}");
         server.shutdown();
         model.join().unwrap();
+    }
+
+    #[test]
+    fn overload_sheds_with_429_and_retry_after() {
+        // No model thread: pre-fill a cap-1 queue so the next predict
+        // is refused at the door.
+        let (tx, rx) = crate::server::job_queue(1);
+        let cfg = NetConfig { addr: "127.0.0.1:0".into(), threads: 1, ..Default::default() };
+        let server = Server::start(&cfg, tx.clone()).expect("start");
+        let addr = server.addr();
+        let (rtx, _rrx) = mpsc::channel();
+        tx.send(Job::Predict(Request::new(vec![0.0, 0.0], rtx))).unwrap();
+
+        let mut stream = TcpStream::connect(addr).expect("connect");
+        let body = r#"{"features":[0,0]}"#;
+        write!(
+            stream,
+            "POST /v1/predict HTTP/1.1\r\nhost: t\r\ncontent-length: {}\r\nconnection: close\r\n\r\n{body}",
+            body.len()
+        )
+        .unwrap();
+        let mut raw = String::new();
+        use std::io::Read;
+        stream.read_to_string(&mut raw).unwrap();
+        assert!(raw.starts_with("HTTP/1.1 429 "), "got: {raw}");
+        assert!(raw.to_ascii_lowercase().contains("retry-after: 1"), "got: {raw}");
+        assert!(raw.contains("overloaded"), "got: {raw}");
+        assert_eq!(server.metrics().http_shed.load(Ordering::Relaxed), 1);
+
+        // The control plane still answers while the data plane sheds.
+        let (status, _) = http_call(addr, "GET", "/healthz", None);
+        assert_eq!(status, 200);
+        server.shutdown();
+        drop(rx);
     }
 }

@@ -25,6 +25,12 @@ pub struct Metrics {
     /// Feature vectors pushed through the batcher (a batch POST counts
     /// each slot).
     pub predictions: AtomicU64,
+    /// Predict requests refused with `429` because the bounded job
+    /// queue was full (admission control).
+    pub http_shed: AtomicU64,
+    /// Connection handlers that panicked and were contained by the
+    /// accept pool's `catch_unwind` wrapper.
+    pub worker_panics: AtomicU64,
     /// Seconds from server start to the first answered prediction —
     /// the cold-start figure `serve --model` exists to shrink. `None`
     /// until the first prediction completes.
@@ -51,6 +57,8 @@ impl Default for Metrics {
             http_requests: AtomicU64::new(0),
             http_errors: AtomicU64::new(0),
             predictions: AtomicU64::new(0),
+            http_shed: AtomicU64::new(0),
+            worker_panics: AtomicU64::new(0),
             first_prediction: Mutex::new(None),
             latencies: Mutex::new(LatencyWindow { buf: Vec::new(), next: 0 }),
             batcher: Mutex::new(ServerStats::default()),
@@ -119,11 +127,16 @@ impl Metrics {
     /// cold-start figure, uptime, and process RSS.
     pub fn health_json(&self) -> Json {
         let (rss_cur, rss_peak) = rss_json();
+        // Shed/panic counters ride on the liveness document so an
+        // operator watching /healthz sees overload and contained
+        // faults without pulling the full /metrics snapshot.
         Json::obj(vec![
             ("status", Json::str("ok")),
             ("model", self.model_info()),
             ("time_to_first_prediction_ms", self.ttfp_json()),
             ("uptime_seconds", Json::num(self.started.elapsed().as_secs_f64())),
+            ("http_shed", Json::num(self.http_shed.load(Ordering::Relaxed) as f64)),
+            ("worker_panics", Json::num(self.worker_panics.load(Ordering::Relaxed) as f64)),
             ("rss_current_bytes", rss_cur),
             ("rss_peak_bytes", rss_peak),
         ])
@@ -141,6 +154,8 @@ impl Metrics {
             ("uptime_seconds", Json::num(uptime)),
             ("http_requests", Json::num(http_requests as f64)),
             ("http_errors", Json::num(self.http_errors.load(Ordering::Relaxed) as f64)),
+            ("http_shed", Json::num(self.http_shed.load(Ordering::Relaxed) as f64)),
+            ("worker_panics", Json::num(self.worker_panics.load(Ordering::Relaxed) as f64)),
             ("requests_per_sec", Json::num(http_requests as f64 / uptime)),
             ("predictions", Json::num(self.predictions.load(Ordering::Relaxed) as f64)),
             ("time_to_first_prediction_ms", self.ttfp_json()),
@@ -221,6 +236,9 @@ fn batcher_json(s: &ServerStats) -> Json {
         ("max_batch", Json::num(s.max_batch_seen as f64)),
         ("busy_secs", Json::num(s.busy_secs)),
         ("reloads", Json::num(s.reloads as f64)),
+        ("panics", Json::num(s.panics as f64)),
+        ("deadline_drops", Json::num(s.deadline_drops as f64)),
+        ("poisoned", Json::num(s.poisoned as f64)),
         ("batch_size_hist", Json::Obj(hist.into_iter().collect())),
     ])
 }
@@ -349,6 +367,29 @@ mod tests {
             .unwrap()
             .as_f64()
             .is_some());
+    }
+
+    #[test]
+    fn shed_and_panic_counters_surface() {
+        let m = Metrics::default();
+        m.http_shed.fetch_add(3, Ordering::Relaxed);
+        m.worker_panics.fetch_add(1, Ordering::Relaxed);
+        {
+            let mut b = m.batcher().lock().unwrap();
+            b.panics = 2;
+            b.deadline_drops = 4;
+            b.poisoned = 5;
+        }
+        let h = m.health_json();
+        assert_eq!(h.get("http_shed").unwrap().as_f64().unwrap(), 3.0);
+        assert_eq!(h.get("worker_panics").unwrap().as_f64().unwrap(), 1.0);
+        let j = m.snapshot_json();
+        assert_eq!(j.get("http_shed").unwrap().as_f64().unwrap(), 3.0);
+        assert_eq!(j.get("worker_panics").unwrap().as_f64().unwrap(), 1.0);
+        let b = j.get("batcher").unwrap();
+        assert_eq!(b.get("panics").unwrap().as_f64().unwrap(), 2.0);
+        assert_eq!(b.get("deadline_drops").unwrap().as_f64().unwrap(), 4.0);
+        assert_eq!(b.get("poisoned").unwrap().as_f64().unwrap(), 5.0);
     }
 
     #[test]

@@ -31,9 +31,17 @@ pub struct PredictRequest {
 
 impl FromJson for PredictRequest {
     fn from_json(d: &Decoder<'_>) -> Result<PredictRequest, DecodeError> {
-        let features: Vec<f64> = d.field("features")?.decode()?;
+        let fd = d.field("features")?;
+        let features: Vec<f64> = fd.decode()?;
         if features.is_empty() {
-            return Err(d.field("features")?.error("features must be non-empty"));
+            return Err(fd.error("features must be non-empty"));
+        }
+        // JSON has no NaN/Inf literals, but overflowing numbers like
+        // 1e999 parse to infinity — and one non-finite feature poisons
+        // every kernel value in the batch slab it rides in. Refuse at
+        // the wire, with the offending element's field path.
+        if let Some(i) = features.iter().position(|x| !x.is_finite()) {
+            return Err(fd.items()?[i].error("features must be finite (got NaN or infinity)"));
         }
         Ok(PredictRequest { features })
     }
@@ -184,6 +192,18 @@ mod tests {
         assert_eq!(e.to_string(), "body.features[1]: expected number, got string");
         let e = parse_predict_body(br#"{"requests":[{}]}"#).unwrap_err();
         assert_eq!(e.to_string(), "body.requests[0]: missing field \"features\"");
+    }
+
+    #[test]
+    fn non_finite_features_are_rejected_with_field_path() {
+        let e = parse_predict_body(br#"{"features":[1,1e999]}"#).unwrap_err();
+        assert_eq!(
+            e.to_string(),
+            "body.features[1]: features must be finite (got NaN or infinity)"
+        );
+        let e = parse_predict_body(br#"{"requests":[{"features":[1]},{"features":[-1e999]}]}"#)
+            .unwrap_err();
+        assert!(e.to_string().starts_with("body.requests[1].features[0]:"), "got: {e}");
     }
 
     #[test]

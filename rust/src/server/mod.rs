@@ -2,12 +2,26 @@
 //!
 //! A dedicated model thread owns the predictor (for the PJRT backend
 //! the engine is not `Send`, so it must live on one thread) and the
-//! trained weights; client threads submit [`Job`]s over an mpsc
-//! channel. The model thread drains the queue into dynamic batches (up
-//! to `max_batch`, bounded linger) and answers each request with one
-//! batched prediction — the same dynamic-batching structure a GPU
-//! serving stack would use, with the batch dimension amortizing the
-//! per-invocation overhead.
+//! trained weights; client threads submit [`Job`]s over a bounded
+//! [`queue`] with admission control. The model thread drains the queue
+//! into dynamic batches (up to `max_batch`, bounded linger) and answers
+//! each request with one batched prediction — the same dynamic-batching
+//! structure a GPU serving stack would use, with the batch dimension
+//! amortizing the per-invocation overhead.
+//!
+//! The serving path is hardened against the failure modes that matter
+//! in production (`docs/ROBUSTNESS.md`):
+//!
+//! * **Overload** — the queue refuses work past its cap
+//!   ([`queue::JobSender::try_send`]); the HTTP layer sheds with
+//!   `429 Too Many Requests` + `Retry-After`.
+//! * **Stale work** — requests that overstay
+//!   [`ServerConfig::deadline`] in the queue are answered with an
+//!   error at batch-assembly time instead of burning a compute slot.
+//! * **Panics** — `predict_batch` runs under `catch_unwind`, so a
+//!   poisoned request kills one reply, not the model thread.
+//! * **Poisoned values** — non-finite predictions are rejected
+//!   per-slot rather than served as plausible-looking garbage.
 //!
 //! Two serving loops share the batching machinery:
 //!
@@ -29,6 +43,10 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc;
 use std::sync::Mutex;
 use std::time::{Duration, Instant};
+
+pub mod queue;
+
+pub use queue::{job_queue, JobReceiver, JobSender, TrySendError, DEFAULT_QUEUE_CAP};
 
 /// Process-wide request id source ([`Request::new`]); ids thread the
 /// request through log events (`request_id`) end to end.
@@ -80,11 +98,20 @@ pub enum Job {
 pub struct ServerConfig {
     pub max_batch: usize,
     pub linger: Duration,
+    /// Per-request deadline, measured from enqueue. Requests that are
+    /// already older than this when a batch is assembled are answered
+    /// with a `deadline exceeded` error instead of being computed
+    /// (the HTTP layer maps that to `504`). `None` disables the check.
+    pub deadline: Option<Duration>,
 }
 
 impl Default for ServerConfig {
     fn default() -> Self {
-        ServerConfig { max_batch: 256, linger: Duration::from_millis(2) }
+        ServerConfig {
+            max_batch: 256,
+            linger: Duration::from_millis(2),
+            deadline: Some(Duration::from_secs(30)),
+        }
     }
 }
 
@@ -151,6 +178,15 @@ pub struct ServerStats {
     /// Recent per-request compute times (each request in a batch records
     /// the batch's predict duration — that is the latency it saw).
     pub compute: SampleWindow,
+    /// Predictor panics caught and converted to error replies
+    /// (`catch_unwind` around `predict_batch`).
+    pub panics: usize,
+    /// Requests dropped at batch assembly for overstaying
+    /// [`ServerConfig::deadline`] in the queue.
+    pub deadline_drops: usize,
+    /// Non-finite predictions refused per-slot (poisoned kernel
+    /// values, NaN/Inf weights).
+    pub poisoned: usize,
 }
 
 impl Default for ServerStats {
@@ -164,6 +200,9 @@ impl Default for ServerStats {
             batch_hist: [0; BATCH_HIST_BUCKETS],
             queue_wait: SampleWindow::default(),
             compute: SampleWindow::default(),
+            panics: 0,
+            deadline_drops: 0,
+            poisoned: 0,
         }
     }
 }
@@ -283,18 +322,18 @@ impl Predictor for BackendPredictor<'_> {
 }
 
 /// Drain one dynamic batch from `rx`: blocks for the first job, then
-/// lingers for more up to `max_batch`. Returns `None` when the channel
+/// lingers for more up to `max_batch`. Returns `None` when the queue
 /// closed before any job arrived (shutdown). A [`Job::Reload`] stops
 /// collection and is handed back so the caller can swap *after*
 /// answering the batch already collected.
 fn next_batch(
-    rx: &mpsc::Receiver<Job>,
+    rx: &queue::JobReceiver,
     cfg: &ServerConfig,
 ) -> Option<(Vec<Request>, Option<ReloadRequest>)> {
     let first = match rx.recv() {
-        Ok(Job::Predict(r)) => r,
-        Ok(Job::Reload(r)) => return Some((Vec::new(), Some(r))),
-        Err(_) => return None, // channel closed: shut down
+        Some(Job::Predict(r)) => r,
+        Some(Job::Reload(r)) => return Some((Vec::new(), Some(r))),
+        None => return None, // queue closed: shut down
     };
     let mut batch = vec![first];
     let mut reload = None;
@@ -307,22 +346,63 @@ fn next_batch(
         match rx.recv_timeout(deadline - now) {
             Ok(Job::Predict(r)) => batch.push(r),
             Ok(Job::Reload(r)) => reload = Some(r),
-            Err(mpsc::RecvTimeoutError::Timeout) => break,
-            Err(mpsc::RecvTimeoutError::Disconnected) => break,
+            Err(queue::RecvTimeoutError::Timeout) => break,
+            Err(queue::RecvTimeoutError::Disconnected) => break,
         }
     }
     Some((batch, reload))
+}
+
+/// Copy the thread-local stats into the shared mirror the metrics
+/// endpoint reads.
+fn mirror_live(stats: &ServerStats, live: Option<&Mutex<ServerStats>>) {
+    if let Some(shared) = live {
+        if let Ok(mut s) = shared.lock() {
+            *s = stats.clone();
+        }
+    }
 }
 
 /// Predict one collected batch and answer every slot.
 fn answer_batch<P: Predictor + ?Sized>(
     predictor: &P,
     batch: Vec<Request>,
+    deadline: Option<Duration>,
     stats: &mut ServerStats,
     live: Option<&Mutex<ServerStats>>,
 ) {
     let d = predictor.dim();
     let t0 = Instant::now();
+    // Deadline enforcement happens here, at batch assembly: work that
+    // already overstayed its budget in the queue gets an error reply
+    // instead of a compute slot nobody is still waiting on.
+    let (batch, expired): (Vec<Request>, Vec<Request>) = match deadline {
+        Some(limit) => {
+            batch.into_iter().partition(|r| t0.saturating_duration_since(r.enqueued) <= limit)
+        }
+        None => (batch, Vec::new()),
+    };
+    for req in expired {
+        stats.deadline_drops += 1;
+        let waited = t0.saturating_duration_since(req.enqueued).as_secs_f64();
+        crate::obs::warn_kv(
+            "shed",
+            "deadline drop",
+            &[
+                ("request_id", Json::num(req.id as f64)),
+                ("queued_secs", Json::num(waited)),
+            ],
+        );
+        let _ = req.reply.send(Err(anyhow::anyhow!(
+            "deadline exceeded: request waited {:.0}ms in queue (limit {}ms)",
+            waited * 1e3,
+            deadline.map(|l| l.as_millis()).unwrap_or(0),
+        )));
+    }
+    if batch.is_empty() {
+        mirror_live(stats, live);
+        return;
+    }
     let sp_asm = crate::obs::span("serve/batch/assemble");
     let mut x_eval = Vec::with_capacity(batch.len() * d);
     let mut ok_shape = Vec::with_capacity(batch.len());
@@ -338,25 +418,37 @@ fn answer_batch<P: Predictor + ?Sized>(
         }
     }
     drop(sp_asm);
+    crate::fault::latency("server/predict");
     let t_compute = Instant::now();
     let preds = {
         let _sp = crate::obs::span("serve/batch/compute");
-        predictor.predict_batch(&x_eval, batch.len())
+        // Panic isolation: a poisoned request (or a backend bug) must
+        // kill one batch's replies, not the model thread — the server
+        // keeps answering /healthz and the next batch.
+        std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            crate::fault::panic_point("server/predict");
+            predictor.predict_batch(&x_eval, batch.len())
+        }))
+        .unwrap_or_else(|_| {
+            stats.panics += 1;
+            crate::obs::warn_kv(
+                "fault",
+                "predict panicked",
+                &[("batch", Json::num(batch.len() as f64))],
+            );
+            Err(anyhow::anyhow!("prediction worker panicked; batch failed, server still up"))
+        })
     };
     let compute_secs = t_compute.elapsed().as_secs_f64();
     for _ in 0..batch.len() {
         stats.compute.push(compute_secs);
     }
     stats.record_batch(batch.len(), t0.elapsed().as_secs_f64());
-    if let Some(shared) = live {
-        if let Ok(mut s) = shared.lock() {
-            *s = stats.clone();
-        }
-    }
 
     let _sp_reply = crate::obs::span("serve/batch/reply");
     match preds {
-        Ok(p) => {
+        Ok(mut p) => {
+            crate::fault::poison_slice("server/predict", &mut p);
             for (k, req) in batch.into_iter().enumerate() {
                 let reply = if !ok_shape[k] {
                     Err(anyhow::anyhow!(
@@ -365,7 +457,17 @@ fn answer_batch<P: Predictor + ?Sized>(
                         d
                     ))
                 } else if let Some(&pk) = p.get(k) {
-                    Ok(pk)
+                    if pk.is_finite() {
+                        Ok(pk)
+                    } else {
+                        // A NaN/Inf here means a poisoned kernel value
+                        // or corrupted weights; refusing beats serving
+                        // plausible-looking garbage.
+                        stats.poisoned += 1;
+                        Err(anyhow::anyhow!(
+                            "non-finite prediction ({pk}): poisoned kernel value, slot rejected"
+                        ))
+                    }
                 } else {
                     // Backend returned fewer predictions than the
                     // batch size: answer with an error instead of
@@ -387,6 +489,8 @@ fn answer_batch<P: Predictor + ?Sized>(
             }
         }
     }
+    drop(_sp_reply);
+    mirror_live(stats, live);
 }
 
 /// Log requests that spent longer than [`SLOW_REQUEST_SECS`] between
@@ -415,7 +519,7 @@ fn warn_if_slow(req: &Request, compute_secs: f64) {
 pub fn serve(
     backend: &dyn Backend,
     model: ModelSnapshot,
-    rx: mpsc::Receiver<Job>,
+    rx: queue::JobReceiver,
     cfg: &ServerConfig,
 ) -> ServerStats {
     serve_reloadable(backend, model, rx, cfg, None, None)
@@ -431,7 +535,7 @@ pub fn serve(
 pub fn serve_reloadable(
     backend: &dyn Backend,
     model: ModelSnapshot,
-    rx: mpsc::Receiver<Job>,
+    rx: queue::JobReceiver,
     cfg: &ServerConfig,
     live: Option<&Mutex<ServerStats>>,
     model_info: Option<&Mutex<Json>>,
@@ -441,7 +545,7 @@ pub fn serve_reloadable(
     loop {
         let Some((batch, reload)) = next_batch(&rx, cfg) else { break };
         if !batch.is_empty() {
-            answer_batch(&predictor, batch, &mut stats, live);
+            answer_batch(&predictor, batch, cfg.deadline, &mut stats, live);
         }
         if let Some(ReloadRequest { model, meta, reply }) = reload {
             // Refuse cross-precision swaps: an f32-trained weight
@@ -485,7 +589,7 @@ pub fn serve_reloadable(
 /// `net` metrics endpoint) can observe them mid-flight.
 pub fn serve_predictor<P: Predictor + ?Sized>(
     predictor: &P,
-    rx: mpsc::Receiver<Job>,
+    rx: queue::JobReceiver,
     cfg: &ServerConfig,
     live: Option<&Mutex<ServerStats>>,
 ) -> ServerStats {
@@ -493,7 +597,7 @@ pub fn serve_predictor<P: Predictor + ?Sized>(
     loop {
         let Some((batch, reload)) = next_batch(&rx, cfg) else { break };
         if !batch.is_empty() {
-            answer_batch(predictor, batch, &mut stats, live);
+            answer_batch(predictor, batch, cfg.deadline, &mut stats, live);
         }
         if let Some(r) = reload {
             let _ = r.reply.send(Err(anyhow::anyhow!(
@@ -530,7 +634,7 @@ mod tests {
     fn batch_records_queue_wait_and_compute_windows() {
         let backend = HostBackend::new(1);
         let p = BackendPredictor::new(&backend, toy_model(1.0));
-        let (tx, rx) = mpsc::channel::<Job>();
+        let (tx, rx) = job_queue(16);
         let (job, _rrx) = predict_job(vec![0.0, 0.0]);
         tx.send(job).unwrap();
         drop(tx);
@@ -585,7 +689,7 @@ mod tests {
 
     #[test]
     fn short_prediction_batch_yields_error_not_panic() {
-        let (tx, rx) = mpsc::channel::<Job>();
+        let (tx, rx) = job_queue(16);
         let (job, rrx) = predict_job(vec![1.0, 2.0]);
         tx.send(job).unwrap();
         drop(tx);
@@ -614,7 +718,7 @@ mod tests {
         let backend = HostBackend::new(2);
         let p = BackendPredictor::new(&backend, toy_model(1.0));
         assert_eq!(p.model().n, 2);
-        let (tx, rx) = mpsc::channel::<Job>();
+        let (tx, rx) = job_queue(16);
         let (job, rrx) = predict_job(vec![0.0, 0.0]);
         tx.send(job).unwrap();
         drop(tx);
@@ -637,7 +741,7 @@ mod tests {
             precision: "f64".to_string(),
         };
         let backend = HostBackend::new(1);
-        let (tx, rx) = mpsc::channel::<Job>();
+        let (tx, rx) = job_queue(16);
         let (job1, rrx1) = predict_job(vec![0.0, 0.0]);
         let (job2, rrx2) = predict_job(vec![0.0]);
         tx.send(job1).unwrap();
@@ -652,7 +756,7 @@ mod tests {
     #[test]
     fn reload_swaps_the_model_between_batches() {
         let backend = HostBackend::new(1);
-        let (tx, rx) = mpsc::channel::<Job>();
+        let (tx, rx) = job_queue(16);
         let (job1, rrx1) = predict_job(vec![0.0, 0.0]);
         tx.send(job1).unwrap();
         let (ack_tx, ack_rx) = mpsc::channel();
@@ -689,7 +793,7 @@ mod tests {
     #[test]
     fn cross_precision_reload_is_refused_and_old_model_keeps_serving() {
         let backend = HostBackend::new(1); // f64 backend
-        let (tx, rx) = mpsc::channel::<Job>();
+        let (tx, rx) = job_queue(16);
         let mut f32_model = toy_model(2.0);
         f32_model.precision = "f32".to_string();
         let (ack_tx, ack_rx) = mpsc::channel();
@@ -713,7 +817,7 @@ mod tests {
 
     #[test]
     fn fixed_predictor_rejects_reload() {
-        let (tx, rx) = mpsc::channel::<Job>();
+        let (tx, rx) = job_queue(16);
         let (ack_tx, ack_rx) = mpsc::channel();
         tx.send(Job::Reload(ReloadRequest {
             model: Box::new(toy_model(1.0)),
@@ -724,5 +828,77 @@ mod tests {
         drop(tx);
         serve_predictor(&ShortPredictor, rx, &ServerConfig::default(), None);
         assert!(ack_rx.recv().unwrap().is_err());
+    }
+
+    #[test]
+    fn expired_requests_are_dropped_at_assembly() {
+        let backend = HostBackend::new(1);
+        let p = BackendPredictor::new(&backend, toy_model(1.0));
+        let (tx, rx) = job_queue(16);
+        let (job, rrx) = predict_job(vec![0.0, 0.0]);
+        tx.send(job).unwrap();
+        drop(tx);
+        // Let the queued request age past the 1ms deadline before the
+        // serving loop picks it up.
+        std::thread::sleep(Duration::from_millis(5));
+        let cfg =
+            ServerConfig { deadline: Some(Duration::from_millis(1)), ..ServerConfig::default() };
+        let stats = serve_predictor(&p, rx, &cfg, None);
+        assert_eq!(stats.deadline_drops, 1);
+        assert_eq!(stats.requests, 0, "dropped work must never reach the model");
+        let err = rrx.recv().unwrap().unwrap_err().to_string();
+        assert!(err.contains("deadline exceeded"), "got: {err}");
+    }
+
+    /// A predictor with an internal bug that unwinds.
+    struct PanickyPredictor;
+    impl Predictor for PanickyPredictor {
+        fn dim(&self) -> usize {
+            2
+        }
+        fn predict_batch(&self, _x: &[f64], _rows: usize) -> anyhow::Result<Vec<f64>> {
+            panic!("injected predictor bug")
+        }
+    }
+
+    #[test]
+    fn predictor_panic_is_isolated_to_the_batch() {
+        let (tx, rx) = job_queue(16);
+        let (job1, rrx1) = predict_job(vec![1.0, 2.0]);
+        let (job2, rrx2) = predict_job(vec![3.0, 4.0]);
+        tx.send(job1).unwrap();
+        tx.send(job2).unwrap();
+        drop(tx);
+        // The loop survives the panicking batch and runs to clean
+        // shutdown instead of unwinding the model thread.
+        let stats = serve_predictor(&PanickyPredictor, rx, &ServerConfig::default(), None);
+        assert!(stats.panics >= 1);
+        for rrx in [rrx1, rrx2] {
+            let err = rrx.recv().unwrap().unwrap_err().to_string();
+            assert!(err.contains("panicked"), "got: {err}");
+        }
+    }
+
+    /// A predictor whose kernel values went NaN.
+    struct NanPredictor;
+    impl Predictor for NanPredictor {
+        fn dim(&self) -> usize {
+            1
+        }
+        fn predict_batch(&self, _x: &[f64], rows: usize) -> anyhow::Result<Vec<f64>> {
+            Ok(vec![f64::NAN; rows])
+        }
+    }
+
+    #[test]
+    fn non_finite_predictions_are_rejected_per_slot() {
+        let (tx, rx) = job_queue(16);
+        let (job, rrx) = predict_job(vec![1.0]);
+        tx.send(job).unwrap();
+        drop(tx);
+        let stats = serve_predictor(&NanPredictor, rx, &ServerConfig::default(), None);
+        assert_eq!(stats.poisoned, 1);
+        let err = rrx.recv().unwrap().unwrap_err().to_string();
+        assert!(err.contains("non-finite"), "got: {err}");
     }
 }

@@ -1,0 +1,284 @@
+//! Bounded job queue between the HTTP front end and the model thread.
+//!
+//! `std::sync::mpsc` is unbounded: under sustained overload every
+//! accepted request heaps up in the channel, latency grows without
+//! bound, and memory follows — the failure mode admission control
+//! exists to prevent. This queue is the bounded replacement:
+//!
+//! * [`JobSender::try_send`] — the **data plane**. Refuses new work
+//!   with [`TrySendError::Full`] once `cap` jobs are queued; the HTTP
+//!   layer turns that into `429 Too Many Requests` + `Retry-After`
+//!   (load shedding at the door beats queueing into a deadline miss).
+//! * [`JobSender::send`] — the **control plane** (model reloads,
+//!   tests). Bypasses the cap: an operator's hot-swap must not lose a
+//!   race against a traffic burst.
+//!
+//! Blocking receive semantics mirror `mpsc::Receiver` (including
+//! disconnect-on-last-sender-drop) so the batching loop is unchanged.
+
+use super::Job;
+use std::collections::VecDeque;
+use std::sync::{Arc, Condvar, Mutex, MutexGuard};
+use std::time::{Duration, Instant};
+
+/// Default admission cap: deep enough that a full queue means the
+/// model thread is genuinely saturated, shallow enough that queued
+/// work stays inside a human request timeout.
+pub const DEFAULT_QUEUE_CAP: usize = 1024;
+
+struct Inner {
+    queue: VecDeque<Job>,
+    cap: usize,
+    senders: usize,
+    receiver_alive: bool,
+}
+
+struct Shared {
+    inner: Mutex<Inner>,
+    avail: Condvar,
+}
+
+impl Shared {
+    fn lock(&self) -> MutexGuard<'_, Inner> {
+        // A worker thread can panic (injected or real) while other
+        // threads keep serving; queue state is a plain VecDeque that
+        // stays consistent, so poisoning is survivable.
+        self.inner.lock().unwrap_or_else(|e| e.into_inner())
+    }
+}
+
+/// Why a send was refused. Carries the job back so the caller can
+/// answer its reply channel.
+pub enum TrySendError {
+    /// The queue is at capacity: shed the request (`429`).
+    Full(Job),
+    /// The model thread is gone: fail the request (`503`).
+    Closed(Job),
+}
+
+impl std::fmt::Debug for TrySendError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            TrySendError::Full(_) => write!(f, "TrySendError::Full"),
+            TrySendError::Closed(_) => write!(f, "TrySendError::Closed"),
+        }
+    }
+}
+
+/// Blocking-receive outcome with a timeout, mirroring
+/// `mpsc::RecvTimeoutError`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RecvTimeoutError {
+    Timeout,
+    Disconnected,
+}
+
+/// The producer half (HTTP workers); clone freely across threads.
+pub struct JobSender {
+    sh: Arc<Shared>,
+}
+
+/// The consumer half (the model thread); exactly one exists.
+pub struct JobReceiver {
+    sh: Arc<Shared>,
+}
+
+/// Create a bounded job queue with admission cap `cap` (clamped >= 1).
+pub fn job_queue(cap: usize) -> (JobSender, JobReceiver) {
+    let sh = Arc::new(Shared {
+        inner: Mutex::new(Inner {
+            queue: VecDeque::new(),
+            cap: cap.max(1),
+            senders: 1,
+            receiver_alive: true,
+        }),
+        avail: Condvar::new(),
+    });
+    (JobSender { sh: Arc::clone(&sh) }, JobReceiver { sh })
+}
+
+impl Clone for JobSender {
+    fn clone(&self) -> JobSender {
+        self.sh.lock().senders += 1;
+        JobSender { sh: Arc::clone(&self.sh) }
+    }
+}
+
+impl Drop for JobSender {
+    fn drop(&mut self) {
+        let mut g = self.sh.lock();
+        g.senders -= 1;
+        if g.senders == 0 {
+            // Last producer gone: wake the model thread so it can
+            // drain and shut down.
+            drop(g);
+            self.sh.avail.notify_all();
+        }
+    }
+}
+
+impl JobSender {
+    /// Admission-controlled enqueue: refuses instead of blocking.
+    pub fn try_send(&self, job: Job) -> Result<(), TrySendError> {
+        let mut g = self.sh.lock();
+        if !g.receiver_alive {
+            return Err(TrySendError::Closed(job));
+        }
+        if g.queue.len() >= g.cap {
+            return Err(TrySendError::Full(job));
+        }
+        g.queue.push_back(job);
+        drop(g);
+        self.sh.avail.notify_one();
+        Ok(())
+    }
+
+    /// Cap-bypassing enqueue for control-plane jobs (reloads) and
+    /// tests. Still fails once the receiver is gone.
+    pub fn send(&self, job: Job) -> Result<(), TrySendError> {
+        let mut g = self.sh.lock();
+        if !g.receiver_alive {
+            return Err(TrySendError::Closed(job));
+        }
+        g.queue.push_back(job);
+        drop(g);
+        self.sh.avail.notify_one();
+        Ok(())
+    }
+
+    /// Jobs currently queued (the `/metrics` queue-depth gauge).
+    pub fn len(&self) -> usize {
+        self.sh.lock().queue.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// The admission cap this queue was built with.
+    pub fn cap(&self) -> usize {
+        self.sh.lock().cap
+    }
+}
+
+impl Drop for JobReceiver {
+    fn drop(&mut self) {
+        self.sh.lock().receiver_alive = false;
+    }
+}
+
+impl JobReceiver {
+    /// Block until a job arrives; `None` once the queue is drained and
+    /// every sender is dropped (shutdown).
+    pub fn recv(&self) -> Option<Job> {
+        let mut g = self.sh.lock();
+        loop {
+            if let Some(job) = g.queue.pop_front() {
+                return Some(job);
+            }
+            if g.senders == 0 {
+                return None;
+            }
+            g = self.sh.avail.wait(g).unwrap_or_else(|e| e.into_inner());
+        }
+    }
+
+    /// Block up to `dur` for a job, mirroring
+    /// `mpsc::Receiver::recv_timeout`.
+    pub fn recv_timeout(&self, dur: Duration) -> Result<Job, RecvTimeoutError> {
+        let deadline = Instant::now() + dur;
+        let mut g = self.sh.lock();
+        loop {
+            if let Some(job) = g.queue.pop_front() {
+                return Ok(job);
+            }
+            if g.senders == 0 {
+                return Err(RecvTimeoutError::Disconnected);
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                return Err(RecvTimeoutError::Timeout);
+            }
+            let (gg, _) = self
+                .sh
+                .avail
+                .wait_timeout(g, deadline - now)
+                .unwrap_or_else(|e| e.into_inner());
+            g = gg;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::server::Request;
+    use std::sync::mpsc;
+
+    fn predict_job() -> Job {
+        let (rtx, _rrx) = mpsc::channel();
+        Job::Predict(Request::new(vec![1.0], rtx))
+    }
+
+    #[test]
+    fn try_send_sheds_at_capacity_and_send_bypasses() {
+        let (tx, rx) = job_queue(2);
+        tx.try_send(predict_job()).unwrap();
+        tx.try_send(predict_job()).unwrap();
+        assert_eq!(tx.len(), 2);
+        assert!(matches!(tx.try_send(predict_job()), Err(TrySendError::Full(_))));
+        // The control plane is exempt from the cap.
+        tx.send(predict_job()).unwrap();
+        assert_eq!(tx.len(), 3);
+        // Draining one slot readmits the data plane.
+        assert!(rx.recv().is_some());
+        tx.try_send(predict_job()).unwrap();
+    }
+
+    #[test]
+    fn receiver_drop_closes_the_queue() {
+        let (tx, rx) = job_queue(4);
+        drop(rx);
+        assert!(matches!(tx.try_send(predict_job()), Err(TrySendError::Closed(_))));
+        assert!(matches!(tx.send(predict_job()), Err(TrySendError::Closed(_))));
+    }
+
+    #[test]
+    fn sender_drop_disconnects_after_drain() {
+        let (tx, rx) = job_queue(4);
+        tx.send(predict_job()).unwrap();
+        let tx2 = tx.clone();
+        drop(tx);
+        drop(tx2);
+        assert!(rx.recv().is_some(), "queued job survives sender drop");
+        assert!(rx.recv().is_none(), "then the queue reports disconnect");
+        assert_eq!(
+            rx.recv_timeout(Duration::from_millis(1)).unwrap_err(),
+            RecvTimeoutError::Disconnected
+        );
+    }
+
+    #[test]
+    fn recv_timeout_times_out_while_senders_live() {
+        let (tx, rx) = job_queue(4);
+        let t0 = Instant::now();
+        assert_eq!(
+            rx.recv_timeout(Duration::from_millis(10)).unwrap_err(),
+            RecvTimeoutError::Timeout
+        );
+        assert!(t0.elapsed() >= Duration::from_millis(10));
+        drop(tx);
+    }
+
+    #[test]
+    fn cross_thread_handoff_wakes_the_receiver() {
+        let (tx, rx) = job_queue(4);
+        let h = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(5));
+            tx.send(predict_job()).unwrap();
+        });
+        let job = rx.recv_timeout(Duration::from_secs(5)).expect("woken by sender");
+        assert!(matches!(job, Job::Predict(_)));
+        h.join().unwrap();
+    }
+}

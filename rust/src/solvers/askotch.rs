@@ -287,6 +287,12 @@ impl SolveState for AskotchState<'_> {
         self.stepper.weights()
     }
 
+    fn backoff(&mut self, _attempt: usize) -> bool {
+        // Halve the stepper's update scale per recovery (compounding
+        // across attempts) and let it reset its momentum.
+        self.stepper.backoff(0.5)
+    }
+
     fn eval(
         &mut self,
         weights: &[f64],

@@ -22,6 +22,7 @@
 
 use crate::config::Precision;
 use crate::coordinator::{Budget, KrrProblem, SolveReport};
+use crate::json::Json;
 use crate::metrics::Trace;
 use crate::solvers::{eval_every, looks_diverged, Observer};
 use crate::util::RngState;
@@ -107,6 +108,16 @@ pub trait SolveState {
     /// preconditioner report `None`.
     fn precond_report(&self) -> Option<crate::solvers::precond::PrecondReport> {
         None
+    }
+
+    /// Damp the family's step / acceleration parameters after a
+    /// divergence rollback (`attempt` = recoveries already taken this
+    /// solve). Returns whether the family supports backoff — when
+    /// `false`, [`drive`] flags the divergence instead of replaying
+    /// the identical trajectory.
+    fn backoff(&mut self, attempt: usize) -> bool {
+        let _ = attempt;
+        false
     }
 
     /// Capture the resumable core (iterates + RNG streams + counter)
@@ -257,6 +268,45 @@ pub struct DrivePolicy {
     /// so cross-precision resumes are refused. `Auto` stamps as f64
     /// (the host default).
     pub precision: Precision,
+    /// On divergence, roll back to the last good in-memory checkpoint,
+    /// damp the step ([`SolveState::backoff`]) and retry — at most this
+    /// many times per solve (0 = the strict behavior: flag and stop).
+    pub max_recoveries: usize,
+    /// On-disk checkpoint generations to retain for the recovery
+    /// ladder (0 = [`crate::model::checkpoint::DEFAULT_RETAIN`]).
+    pub checkpoint_retain: usize,
+}
+
+/// Roll the state back to `last_good` and damp its step. Returns
+/// whether the retry is on (budget left, a rollback target exists, and
+/// the family supports backoff).
+fn try_recover(
+    state: &mut dyn SolveState,
+    last_good: &Option<Checkpoint>,
+    recoveries: &mut usize,
+    policy: &DrivePolicy,
+) -> anyhow::Result<bool> {
+    if *recoveries >= policy.max_recoveries {
+        return Ok(false);
+    }
+    let Some(ck) = last_good else { return Ok(false) };
+    state.restore(ck)?;
+    if !state.backoff(*recoveries) {
+        // No way to damp the step: the restored trajectory would
+        // re-diverge identically, so give up (with sane weights — the
+        // rollback already replaced the non-finite iterates).
+        return Ok(false);
+    }
+    *recoveries += 1;
+    crate::obs::warn_kv(
+        "recovery",
+        "divergence rollback",
+        &[
+            ("rolled_back_to_iter", Json::num(ck.iters as f64)),
+            ("attempt", Json::num(*recoveries as f64)),
+        ],
+    );
+    Ok(true)
 }
 
 /// The one outer loop shared by every solver family: budgets, eval
@@ -282,17 +332,29 @@ pub fn drive(
     let el = || policy.base_secs + t0.elapsed().as_secs_f64();
     let mut trace = Trace::default();
     let mut diverged = false;
+    let mut recoveries = 0usize;
+    // The rollback target for divergence recovery: the freshest state
+    // known to pass the divergence check. Starts at the initial
+    // iterate so even a first-eval blow-up has somewhere to go.
+    let mut last_good: Option<Checkpoint> =
+        if policy.max_recoveries > 0 { Some(state.checkpoint(el())) } else { None };
     loop {
         if budget.exhausted(state.iters(), el()) {
             break;
         }
-        let out = {
+        let mut out = {
             let _sp = crate::obs::span("solve/step");
             state.step()?
         };
+        if crate::fault::diverge("solve/step") {
+            out = StepOutcome::Diverged;
+        }
         match out {
             StepOutcome::Abort => break,
             StepOutcome::Diverged => {
+                if try_recover(state, &last_good, &mut recoveries, policy)? {
+                    continue;
+                }
                 diverged = true;
                 break;
             }
@@ -316,15 +378,28 @@ pub fn drive(
                 Precision::F32 => "f32".to_string(),
                 _ => "f64".to_string(),
             };
-            ck.save(&policy.checkpoint_path)?;
+            let retain = if policy.checkpoint_retain > 0 {
+                policy.checkpoint_retain
+            } else {
+                crate::model::checkpoint::DEFAULT_RETAIN
+            };
+            ck.save_retaining(&policy.checkpoint_path, retain)?;
         }
         let mut stop = out == StepOutcome::Done;
         if stop || state.iters() % eval_stride == 0 || budget.exhausted(state.iters(), el()) {
             let _sp = crate::obs::span("solve/eval");
             let w = state.weights();
             if looks_diverged(&w) {
+                if try_recover(state, &last_good, &mut recoveries, policy)? {
+                    continue;
+                }
                 diverged = true;
                 break;
+            }
+            // This iterate passed the divergence check: it becomes the
+            // rollback target for any later blow-up.
+            if policy.max_recoveries > 0 {
+                last_good = Some(state.checkpoint(el()));
             }
             if state.eval(&w, el(), &mut trace, obs)? == StepOutcome::Done {
                 stop = true;
@@ -364,6 +439,7 @@ pub fn drive(
         weights,
         state_bytes: state.state_bytes(),
         diverged,
+        recoveries,
         precond: state.precond_report(),
     })
 }
@@ -392,4 +468,113 @@ mod tests {
         assert!(ck.expect("pcg", "pcg(rpc,r=5,backend)", "other").is_err());
     }
 
+    /// A solver state whose iterate blows up to NaN at one iteration —
+    /// unless a [`SolveState::backoff`] damped it first.
+    struct FlakyState {
+        iters: usize,
+        w: Vec<f64>,
+        diverge_at: usize,
+        damped: bool,
+    }
+
+    impl FlakyState {
+        fn new(diverge_at: usize) -> FlakyState {
+            FlakyState { iters: 0, w: vec![1.0, -1.0], diverge_at, damped: false }
+        }
+    }
+
+    impl SolveState for FlakyState {
+        fn family(&self) -> &'static str {
+            "flaky"
+        }
+        fn iters(&self) -> usize {
+            self.iters
+        }
+        fn step(&mut self) -> anyhow::Result<StepOutcome> {
+            self.iters += 1;
+            if self.iters == self.diverge_at && !self.damped {
+                self.w = vec![f64::NAN; self.w.len()];
+            }
+            Ok(StepOutcome::Continue)
+        }
+        fn weights(&self) -> Vec<f64> {
+            self.w.clone()
+        }
+        fn eval(
+            &mut self,
+            _weights: &[f64],
+            secs: f64,
+            trace: &mut Trace,
+            _obs: &mut dyn Observer,
+        ) -> anyhow::Result<StepOutcome> {
+            trace.push(crate::metrics::TracePoint {
+                iter: self.iters,
+                secs,
+                metric: 0.5,
+                residual: f64::NAN,
+            });
+            Ok(StepOutcome::Continue)
+        }
+        fn state_bytes(&self) -> usize {
+            self.w.len() * 8
+        }
+        fn backoff(&mut self, _attempt: usize) -> bool {
+            self.damped = true;
+            true
+        }
+        fn checkpoint(&self, secs: f64) -> Checkpoint {
+            let mut ck = Checkpoint::new("flaky", "flaky", "toy", self.iters, secs);
+            ck.push_vec("w", self.w.clone());
+            ck
+        }
+        fn restore(&mut self, ck: &Checkpoint) -> anyhow::Result<()> {
+            self.iters = ck.iters;
+            self.w = ck.vec_var("w")?.to_vec();
+            Ok(())
+        }
+    }
+
+    fn toy_problem() -> KrrProblem {
+        use crate::config::{BandwidthSpec, KernelKind};
+        let ds = crate::data::synthetic::taxi_like(30, 3, 1).standardized();
+        KrrProblem::from_dataset(ds, KernelKind::Rbf, BandwidthSpec::Auto, 1e-6, 0).unwrap()
+    }
+
+    #[test]
+    fn drive_recovers_from_divergence_with_rollback_and_backoff() {
+        let problem = toy_problem();
+        let mut state = FlakyState::new(5);
+        let policy = DrivePolicy { max_recoveries: 2, ..Default::default() };
+        let report = drive(
+            "flaky".into(),
+            &mut state,
+            &problem,
+            &Budget::iterations(10),
+            &mut crate::solvers::NullObserver,
+            &policy,
+        )
+        .unwrap();
+        assert!(!report.diverged, "rollback + backoff must heal the solve");
+        assert_eq!(report.recoveries, 1);
+        assert_eq!(report.iters, 10, "retried run completes the budget");
+        assert!(report.weights.iter().all(|x| x.is_finite()));
+    }
+
+    #[test]
+    fn drive_without_recovery_budget_still_flags_divergence() {
+        let problem = toy_problem();
+        let mut state = FlakyState::new(5);
+        let report = drive(
+            "flaky".into(),
+            &mut state,
+            &problem,
+            &Budget::iterations(10),
+            &mut crate::solvers::NullObserver,
+            &DrivePolicy::default(),
+        )
+        .unwrap();
+        assert!(report.diverged, "max_recoveries = 0 keeps the strict semantics");
+        assert_eq!(report.recoveries, 0);
+        assert_eq!(report.iters, 5);
+    }
 }

@@ -570,6 +570,7 @@ mod tests {
             final_residual: f64::NAN,
             state_bytes: 800,
             diverged,
+            recoveries: 0,
             precond: None,
             error: None,
             trace,

@@ -47,6 +47,9 @@ pub struct RunRecord {
     pub final_residual: f64,
     pub state_bytes: usize,
     pub diverged: bool,
+    /// Divergence recoveries (checkpoint rollback + step backoff) the
+    /// drive loop performed; see `DrivePolicy::max_recoveries`.
+    pub recoveries: usize,
     /// Preconditioner telemetry (resolved construction, build seconds,
     /// condition-number estimate) for solvers that build one.
     pub precond: Option<crate::solvers::PrecondReport>,
@@ -86,6 +89,7 @@ impl RunRecord {
             final_residual: r.final_residual,
             state_bytes: r.state_bytes,
             diverged: r.diverged,
+            recoveries: r.recoveries,
             precond: r.precond,
             error: None,
             trace: r.trace,
@@ -121,6 +125,7 @@ impl RunRecord {
             final_residual: f64::NAN,
             state_bytes: 0,
             diverged: false,
+            recoveries: 0,
             precond: None,
             error: Some(err),
             trace: Trace::default(),
@@ -158,6 +163,7 @@ impl ToJson for RunRecord {
             ("final_residual", Json::num(self.final_residual)),
             ("state_bytes", Json::num(self.state_bytes as f64)),
             ("diverged", Json::Bool(self.diverged)),
+            ("recoveries", Json::num(self.recoveries as f64)),
             (
                 "precond",
                 match &self.precond {
@@ -445,7 +451,18 @@ fn run_one(
         let manifest = std::path::Path::new(&policy.checkpoint_path)
             .join(crate::model::checkpoint::MANIFEST_FILE);
         if manifest.exists() {
-            let ck = Checkpoint::load(&policy.checkpoint_path)?;
+            // The recovery ladder falls back to the newest retained
+            // generation when the manifest itself is torn or corrupt,
+            // so an interrupted suite loses at most one checkpoint
+            // interval instead of the whole run.
+            let (ck, fell_back) = Checkpoint::load_recover(&policy.checkpoint_path)?;
+            if fell_back {
+                crate::obs::warn_kv(
+                    "recovery",
+                    "checkpoint fell back to retained generation",
+                    &[("path", Json::str(&policy.checkpoint_path))],
+                );
+            }
             let want = match problem.precision {
                 Precision::F32 => "f32",
                 _ => "f64",

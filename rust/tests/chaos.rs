@@ -1,0 +1,456 @@
+//! Chaos suite: the full train -> save -> serve -> reload -> resume
+//! lifecycle under injected faults (`askotch::fault`), one test per
+//! fault class from docs/ROBUSTNESS.md:
+//!
+//! * torn checkpoint writes  -> recovery ladder + bit-identical resume;
+//! * torn artifact saves     -> previous generation served via reload;
+//! * worker panics           -> 500 for the batch, server stays up;
+//! * poisoned kernel values  -> per-slot rejection, counted;
+//! * overload (2x a cap-1 queue) -> 429 + Retry-After, /healthz green;
+//! * forced solver divergence -> rollback + backoff, solve completes.
+//!
+//! The fault registry is process-global, so every test serializes on
+//! one mutex, arms exactly what it drills, and disarms before exit.
+
+use askotch::backend::{Backend, HostBackend};
+use askotch::config::{BandwidthSpec, ExperimentConfig, KernelKind, SolverKind};
+use askotch::coordinator::{Budget, Coordinator, KrrProblem, SolveReport};
+use askotch::data::synthetic;
+use askotch::fault::{self, FaultKind, FaultRule};
+use askotch::json;
+use askotch::model::ModelArtifact;
+use askotch::net::{http, NetConfig, Server};
+use askotch::server::{job_queue, serve_reloadable, ModelSnapshot, ServerConfig, ServerStats};
+use askotch::solvers::cholesky::CholeskySolver;
+use askotch::solvers::{Checkpoint, DrivePolicy, NullObserver, Solver};
+use std::io::{BufReader, Read, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::sync::Mutex;
+use std::time::Duration;
+
+/// One registry, many tests: serialize, and start each drill from a
+/// clean (disarmed, zeroed-counter) state.
+static FAULTS: Mutex<()> = Mutex::new(());
+
+fn fault_session() -> std::sync::MutexGuard<'static, ()> {
+    let g = FAULTS.lock().unwrap_or_else(|e| e.into_inner());
+    fault::disarm();
+    fault::reset_counters();
+    g
+}
+
+fn temp_dir(tag: &str) -> String {
+    let mut p = std::env::temp_dir();
+    p.push(format!("askotch_chaos_{}_{tag}", std::process::id()));
+    p.to_string_lossy().to_string()
+}
+
+fn toy_problem(n: usize) -> KrrProblem {
+    let ds = synthetic::taxi_like(n, 5, 11).standardized();
+    KrrProblem::from_dataset(ds, KernelKind::Rbf, BandwidthSpec::Auto, 1e-6, 0).unwrap()
+}
+
+/// Exact-KRR training on the toy problem: the model every serving
+/// drill stands its stack on.
+fn trained(problem: &KrrProblem, backend: &HostBackend) -> (SolveReport, ModelArtifact) {
+    let report =
+        CholeskySolver::new().run(backend, problem, &Budget::iterations(1)).unwrap();
+    let art = ModelArtifact::from_solve(problem, &report, 0).unwrap();
+    (report, art)
+}
+
+/// HTTP front end + reloadable batcher on a bounded queue of `cap`.
+fn start_stack(
+    snapshot: ModelSnapshot,
+    meta: json::Json,
+    cap: usize,
+    threads: usize,
+    batch_cfg: ServerConfig,
+) -> (Server, std::thread::JoinHandle<ServerStats>) {
+    let (tx, rx) = job_queue(cap);
+    let net_cfg = NetConfig { addr: "127.0.0.1:0".into(), threads, ..Default::default() };
+    let server = Server::start(&net_cfg, tx).expect("bind");
+    server.metrics().set_model_info(meta);
+    let live = server.metrics().clone();
+    let batcher = std::thread::spawn(move || {
+        let backend = HostBackend::new(2);
+        serve_reloadable(
+            &backend,
+            snapshot,
+            rx,
+            &batch_cfg,
+            Some(live.batcher()),
+            Some(live.model_slot()),
+        )
+    });
+    (server, batcher)
+}
+
+/// One request, parsed response body (headers consumed).
+fn call(addr: SocketAddr, method: &str, path: &str, body: &str) -> (u16, String) {
+    let mut stream = TcpStream::connect(addr).expect("connect");
+    let mut reader = BufReader::new(stream.try_clone().expect("clone"));
+    write!(
+        stream,
+        "{method} {path} HTTP/1.1\r\nhost: t\r\ncontent-length: {}\r\nconnection: close\r\n\r\n{body}",
+        body.len()
+    )
+    .unwrap();
+    stream.flush().unwrap();
+    let (status, body) = http::read_response(&mut reader).expect("response");
+    (status, String::from_utf8(body).expect("utf8"))
+}
+
+/// One request, raw response text (status line + headers + body) — for
+/// asserting on headers like `retry-after`.
+fn raw_call(addr: SocketAddr, method: &str, path: &str, body: &str) -> (u16, String) {
+    let mut stream = TcpStream::connect(addr).expect("connect");
+    write!(
+        stream,
+        "{method} {path} HTTP/1.1\r\nhost: t\r\ncontent-length: {}\r\nconnection: close\r\n\r\n{body}",
+        body.len()
+    )
+    .unwrap();
+    stream.flush().unwrap();
+    let mut text = String::new();
+    stream.read_to_string(&mut text).unwrap();
+    let status = text
+        .strip_prefix("HTTP/1.1 ")
+        .and_then(|r| r.get(..3))
+        .and_then(|s| s.parse::<u16>().ok())
+        .unwrap_or_else(|| panic!("no status line in {text:?}"));
+    (status, text)
+}
+
+fn assert_bits_eq(got: &[f64], want: &[f64], ctx: &str) {
+    assert_eq!(got.len(), want.len(), "{ctx}: length");
+    for (i, (g, w)) in got.iter().zip(want).enumerate() {
+        assert_eq!(g.to_bits(), w.to_bits(), "{ctx}: slot {i}: {g} vs {w}");
+    }
+}
+
+fn fault_count(key: &str) -> u64 {
+    fault::counters().iter().find(|(k, _)| k.as_str() == key).map(|(_, n)| *n).unwrap_or(0)
+}
+
+// ---------------------------------------------------------------------------
+// Torn writes
+// ---------------------------------------------------------------------------
+
+#[test]
+fn torn_checkpoint_write_recovers_and_resumes_bit_identically() {
+    let _g = fault_session();
+    let backend = HostBackend::new(2);
+    let coord = Coordinator::new(&backend);
+    let cfg = ExperimentConfig {
+        name: "chaos_torn_ckpt".into(),
+        dataset: "physics_like".into(),
+        n: 240,
+        d: 8,
+        solver: SolverKind::Pcg,
+        rank: 10,
+        seed: 3,
+        max_iters: 6,
+        time_limit_secs: 1e9,
+        ..Default::default()
+    };
+    let plain = DrivePolicy { eval_every: 1_000_000, ..Default::default() };
+    let (_, want) = coord.run_with_policy(&cfg, &mut NullObserver, &plain, None).unwrap();
+
+    // Checkpoint at iterations 3 and 6; the *second* slab write is
+    // torn — it reports success while only 60% of the bytes land.
+    let dir = temp_dir("torn_ckpt");
+    let _ = std::fs::remove_dir_all(&dir);
+    fault::arm(
+        vec![FaultRule::once_after("slab/write", FaultKind::Torn, 1).with_arg(0.6)],
+        0,
+    );
+    let policy = DrivePolicy {
+        eval_every: 1_000_000,
+        checkpoint_every: 3,
+        checkpoint_path: dir.clone(),
+        ..Default::default()
+    };
+    coord.run_with_policy(&cfg, &mut NullObserver, &policy, None).unwrap();
+    fault::disarm();
+    assert_eq!(fault_count("slab/write/torn"), 1, "exactly the second write torn");
+
+    // The strict load refuses the torn generation; the ladder serves
+    // the retained one, and the resume from it is bit-identical.
+    assert!(Checkpoint::load(&dir).is_err(), "torn state slab must refuse the strict load");
+    let (ck, fell_back) = Checkpoint::load_recover(&dir).unwrap();
+    assert!(fell_back);
+    assert_eq!(ck.iters, 3, "one checkpoint interval lost, not the solve");
+    let (_, got) = coord.run_with_policy(&cfg, &mut NullObserver, &plain, Some(&ck)).unwrap();
+    assert_eq!(got.iters, want.iters);
+    assert_bits_eq(&got.weights, &want.weights, "resume after torn write");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn torn_artifact_save_recovers_previous_generation_through_reload() {
+    let _g = fault_session();
+    let backend = HostBackend::new(2);
+    let problem = toy_problem(160);
+    let (report_v1, art_v1) = trained(&problem, &backend);
+    let dir = temp_dir("torn_artifact");
+    let _ = std::fs::remove_dir_all(&dir);
+    art_v1.save(&dir).unwrap();
+
+    // "Retrain" v2 and save it through a torn write: the save claims
+    // success, the disk holds a prefix of the slab.
+    let mut report_v2 = report_v1.clone();
+    report_v2.solver = "cholesky-v2".into();
+    report_v2.weights = report_v1.weights.iter().map(|w| 2.0 * w).collect();
+    fault::arm(vec![FaultRule::every_hit("slab/write", FaultKind::Torn).with_arg(0.5)], 0);
+    ModelArtifact::from_solve(&problem, &report_v2, 0).unwrap().save(&dir).unwrap();
+    fault::disarm();
+    assert!(ModelArtifact::load(&dir).is_err(), "torn slab must refuse the strict load");
+    assert_eq!(fault_count("slab/write/torn"), 1);
+
+    // Serve v1 from memory, then hot-reload from the damaged directory:
+    // the ladder serves the rotated previous (v1) pair and says so.
+    let meta = art_v1.meta.summary_json();
+    let snapshot = art_v1.clone().into_snapshot();
+    let (server, batcher) = start_stack(snapshot, meta, 64, 2, ServerConfig::default());
+    let addr = server.addr();
+    let (status, body) = call(
+        addr,
+        "POST",
+        "/v1/admin/reload",
+        &format!("{{\"model\":{}}}", json::Json::str(&dir)),
+    );
+    assert_eq!(status, 200, "{body}");
+    let ack = json::parse(&body).unwrap();
+    assert_eq!(ack.get("status").unwrap().as_str().unwrap(), "reloaded");
+    assert_eq!(ack.get("recovered").unwrap(), &json::Json::Bool(true), "{body}");
+    assert_eq!(
+        ack.get("model").unwrap().get("solver").unwrap().as_str().unwrap(),
+        "cholesky",
+        "previous good generation served"
+    );
+
+    // Predictions match v1 bit-for-bit.
+    let row = problem.test.row(0).to_vec();
+    let want = backend
+        .predict(
+            problem.kernel,
+            &problem.train.x,
+            problem.n(),
+            problem.d(),
+            &report_v1.weights,
+            &row,
+            1,
+            problem.sigma,
+        )
+        .unwrap()[0];
+    let features = json::Json::arr_nums(&row).to_string();
+    let (status, body) =
+        call(addr, "POST", "/v1/predict", &format!("{{\"features\":{features}}}"));
+    assert_eq!(status, 200, "{body}");
+    let got = json::parse(&body).unwrap().get("prediction").unwrap().as_f64().unwrap();
+    assert_eq!(got.to_bits(), want.to_bits(), "served {got} vs direct {want}");
+
+    server.shutdown();
+    batcher.join().unwrap();
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+// ---------------------------------------------------------------------------
+// Worker panics and poisoned kernel values
+// ---------------------------------------------------------------------------
+
+#[test]
+fn worker_panic_fails_the_batch_but_the_server_stays_up() {
+    let _g = fault_session();
+    let backend = HostBackend::new(2);
+    let problem = toy_problem(160);
+    let (_, art) = trained(&problem, &backend);
+    let row = problem.test.row(0).to_vec();
+    let body_json = format!("{{\"features\":{}}}", json::Json::arr_nums(&row));
+    let meta = art.meta.summary_json();
+    let (server, batcher) = start_stack(art.into_snapshot(), meta, 64, 2, ServerConfig::default());
+    let addr = server.addr();
+
+    fault::arm(vec![FaultRule::once_after("server/predict", FaultKind::Panic, 0)], 0);
+    let (status, body) = call(addr, "POST", "/v1/predict", &body_json);
+    assert_eq!(status, 500, "{body}");
+    assert!(body.contains("panicked"), "{body}");
+
+    // The model thread survived: health is green and the next request
+    // computes normally.
+    let (status, _) = call(addr, "GET", "/healthz", "");
+    assert_eq!(status, 200, "healthz must stay green after a worker panic");
+    let (status, body) = call(addr, "POST", "/v1/predict", &body_json);
+    assert_eq!(status, 200, "{body}");
+    let (_, body) = call(addr, "GET", "/metrics", "");
+    let m = json::parse(&body).unwrap();
+    assert_eq!(
+        m.get("batcher").unwrap().get("panics").unwrap().as_f64().unwrap(),
+        1.0,
+        "{body}"
+    );
+    assert_eq!(fault_count("server/predict/panic"), 1);
+
+    fault::disarm();
+    server.shutdown();
+    let stats = batcher.join().unwrap();
+    assert_eq!(stats.panics, 1);
+    assert!(stats.requests >= 1, "the non-panicking request was served");
+}
+
+#[test]
+fn poisoned_kernel_values_are_rejected_per_slot() {
+    let _g = fault_session();
+    let backend = HostBackend::new(2);
+    let problem = toy_problem(160);
+    let (_, art) = trained(&problem, &backend);
+    let row = problem.test.row(0).to_vec();
+    let body_json = format!("{{\"features\":{}}}", json::Json::arr_nums(&row));
+    let meta = art.meta.summary_json();
+    let (server, batcher) = start_stack(art.into_snapshot(), meta, 64, 2, ServerConfig::default());
+    let addr = server.addr();
+
+    fault::arm(vec![FaultRule::once_after("server/predict", FaultKind::Poison, 0)], 0);
+    let (status, body) = call(addr, "POST", "/v1/predict", &body_json);
+    assert_eq!(status, 500, "{body}");
+    assert!(body.contains("non-finite"), "poisoned slot must be named: {body}");
+
+    // NaN never reaches a client as a prediction; the next request is
+    // clean.
+    let (status, _) = call(addr, "GET", "/healthz", "");
+    assert_eq!(status, 200);
+    let (status, body) = call(addr, "POST", "/v1/predict", &body_json);
+    assert_eq!(status, 200, "{body}");
+    assert!(json::parse(&body).unwrap().get("prediction").unwrap().as_f64().unwrap().is_finite());
+    let (_, body) = call(addr, "GET", "/metrics", "");
+    let m = json::parse(&body).unwrap();
+    assert_eq!(
+        m.get("batcher").unwrap().get("poisoned").unwrap().as_f64().unwrap(),
+        1.0,
+        "{body}"
+    );
+    assert_eq!(fault_count("server/predict/poison"), 1);
+
+    fault::disarm();
+    server.shutdown();
+    let stats = batcher.join().unwrap();
+    assert_eq!(stats.poisoned, 1);
+}
+
+// ---------------------------------------------------------------------------
+// Overload
+// ---------------------------------------------------------------------------
+
+#[test]
+fn overload_sheds_429_with_retry_after_while_health_stays_green() {
+    let _g = fault_session();
+    let backend = HostBackend::new(2);
+    let problem = toy_problem(160);
+    let (_, art) = trained(&problem, &backend);
+    let row = problem.test.row(0).to_vec();
+    let body_json = format!("{{\"features\":{}}}", json::Json::arr_nums(&row));
+    let meta = art.meta.summary_json();
+    // Queue capacity 1, one request per batch, every batch slowed to
+    // 150ms: 16 requests are well over 2x what the server can admit.
+    let batch_cfg =
+        ServerConfig { max_batch: 1, linger: Duration::ZERO, ..ServerConfig::default() };
+    let (server, batcher) = start_stack(art.into_snapshot(), meta, 1, 8, batch_cfg);
+    let addr = server.addr();
+    fault::arm(
+        vec![FaultRule::every_hit("server/predict", FaultKind::Latency).with_arg(150.0)],
+        0,
+    );
+
+    let clients: Vec<_> = (0..8)
+        .map(|_| {
+            let body_json = body_json.clone();
+            std::thread::spawn(move || {
+                let mut out = Vec::new();
+                for _ in 0..2 {
+                    out.push(raw_call(addr, "POST", "/v1/predict", &body_json));
+                }
+                out
+            })
+        })
+        .collect();
+
+    // Mid-storm, the control plane still answers.
+    std::thread::sleep(Duration::from_millis(50));
+    let (status, _) = call(addr, "GET", "/healthz", "");
+    assert_eq!(status, 200, "healthz must answer during overload");
+
+    let (mut served, mut shed) = (0usize, 0usize);
+    for c in clients {
+        for (status, text) in c.join().unwrap() {
+            match status {
+                200 => served += 1,
+                429 => {
+                    shed += 1;
+                    let lower = text.to_lowercase();
+                    assert!(lower.contains("retry-after: 1"), "429 without retry-after: {text}");
+                    assert!(text.contains("overloaded"), "{text}");
+                }
+                other => panic!("unexpected status {other}: {text}"),
+            }
+        }
+    }
+    assert!(shed >= 1, "a cap-1 queue under 16 slow requests must shed (served {served})");
+    fault::disarm();
+
+    // Load gone: the door opens again.
+    let (status, body) = call(addr, "POST", "/v1/predict", &body_json);
+    assert_eq!(status, 200, "{body}");
+    let (_, body) = call(addr, "GET", "/metrics", "");
+    let m = json::parse(&body).unwrap();
+    assert!(
+        m.get("http_shed").unwrap().as_f64().unwrap() >= shed as f64,
+        "shed counter must cover every 429: {body}"
+    );
+
+    server.shutdown();
+    batcher.join().unwrap();
+}
+
+// ---------------------------------------------------------------------------
+// Forced solver divergence
+// ---------------------------------------------------------------------------
+
+#[test]
+fn forced_divergence_recovers_with_rollback_and_backoff() {
+    let _g = fault_session();
+    let backend = HostBackend::new(2);
+    let coord = Coordinator::new(&backend);
+    let cfg = ExperimentConfig {
+        name: "chaos_diverge".into(),
+        dataset: "physics_like".into(),
+        n: 240,
+        d: 8,
+        solver: SolverKind::Askotch,
+        rank: 10,
+        seed: 3,
+        max_iters: 12,
+        time_limit_secs: 1e9,
+        ..Default::default()
+    };
+
+    // Strict policy first: the injected divergence stops the solve.
+    fault::arm(vec![FaultRule::once_after("solve/step", FaultKind::Diverge, 4)], 0);
+    let strict = DrivePolicy { eval_every: 1_000_000, ..Default::default() };
+    let (_, report) = coord.run_with_policy(&cfg, &mut NullObserver, &strict, None).unwrap();
+    assert!(report.diverged, "max_recoveries = 0 keeps the strict semantics");
+    assert_eq!(report.recoveries, 0);
+
+    // With recoveries allowed: rollback + step backoff, and the solve
+    // completes its full budget with a finite metric.
+    fault::arm(vec![FaultRule::once_after("solve/step", FaultKind::Diverge, 4)], 0);
+    let policy =
+        DrivePolicy { eval_every: 1_000_000, max_recoveries: 2, ..Default::default() };
+    let (_, report) = coord.run_with_policy(&cfg, &mut NullObserver, &policy, None).unwrap();
+    fault::disarm();
+    assert!(!report.diverged, "recovered solve must not report divergence");
+    assert_eq!(report.recoveries, 1);
+    assert_eq!(report.iters, 12, "full budget after the rollback");
+    assert!(report.final_metric.is_finite());
+    assert_eq!(fault_count("solve/step/diverge"), 2, "one injection per armed run");
+}

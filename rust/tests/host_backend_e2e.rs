@@ -154,7 +154,7 @@ fn host_predict_matches_scalar_oracle() {
 /// in), and the batched prediction server must serve through it.
 #[test]
 fn auto_backend_falls_back_to_host_and_serves() {
-    use askotch::server::{serve, Job, ModelSnapshot, Request, ServerConfig};
+    use askotch::server::{job_queue, serve, Job, ModelSnapshot, Request, ServerConfig};
     use std::sync::mpsc;
 
     let backend = AnyBackend::auto("artifacts-definitely-missing").unwrap();
@@ -184,13 +184,13 @@ fn auto_backend_falls_back_to_host_and_serves() {
     )
     .unwrap();
 
-    let (tx, rx) = mpsc::channel::<Job>();
+    let (tx, rx) = job_queue(64);
     let rows: Vec<Vec<f64>> = (0..problem.test.n).map(|i| problem.test.row(i).to_vec()).collect();
     let client = std::thread::spawn(move || {
         let mut got = Vec::new();
         for row in rows {
             let (rtx, rrx) = mpsc::channel();
-            tx.send(Job::Predict(Request { features: row, reply: rtx })).unwrap();
+            tx.send(Job::Predict(Request::new(row, rtx))).unwrap();
             got.push(rrx.recv().unwrap().unwrap());
         }
         got

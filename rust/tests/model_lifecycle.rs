@@ -9,6 +9,10 @@
 //!    (no training at startup) -> predict -> POST /v1/admin/reload ->
 //!    predict, with model metadata and time_to_first_prediction on
 //!    /healthz and /metrics. This is the CI gate for the lifecycle.
+//! 4. **Corruption** — bit-flipped weights slab, truncated checkpoint
+//!    manifest, torn state slab: each refused with a typed error by the
+//!    strict loaders, and recovered by the `load_recover` ladders when
+//!    a previous good generation exists (docs/ROBUSTNESS.md).
 
 use askotch::backend::{Backend, HostBackend};
 use askotch::config::{BandwidthSpec, ExperimentConfig, KernelKind, Precision, SolverKind};
@@ -17,12 +21,11 @@ use askotch::data::synthetic;
 use askotch::json;
 use askotch::model::ModelArtifact;
 use askotch::net::{http, NetConfig, Server};
-use askotch::server::{serve_reloadable, BackendPredictor, Job, Predictor, ServerConfig};
+use askotch::server::{job_queue, serve_reloadable, BackendPredictor, Predictor, ServerConfig};
 use askotch::solvers::cholesky::CholeskySolver;
 use askotch::solvers::{Checkpoint, DrivePolicy, NullObserver};
 use std::io::{BufReader, Write};
 use std::net::{SocketAddr, TcpStream};
-use std::sync::mpsc;
 
 fn temp_dir(tag: &str) -> String {
     let mut p = std::env::temp_dir();
@@ -376,7 +379,7 @@ fn serve_lifecycle_train_save_serve_predict_reload_predict() {
     assert_eq!(artifact.meta.solver, "cholesky");
     let meta = artifact.meta.summary_json();
     let snapshot = artifact.into_snapshot();
-    let (tx, rx) = mpsc::channel::<Job>();
+    let (tx, rx) = job_queue(64);
     let net_cfg = NetConfig { addr: "127.0.0.1:0".into(), threads: 2, ..Default::default() };
     let server = Server::start(&net_cfg, tx).expect("bind");
     server.metrics().set_model_info(meta);
@@ -450,4 +453,125 @@ fn serve_lifecycle_train_save_serve_predict_reload_predict() {
     assert!(stats.requests >= 2);
     let _ = std::fs::remove_dir_all(&dir_v1);
     let _ = std::fs::remove_dir_all(&dir_v2);
+}
+
+// ---------------------------------------------------------------------------
+// 4. Corruption: typed refusals and the recovery ladders
+// ---------------------------------------------------------------------------
+
+#[test]
+fn bit_flipped_weights_slab_refused_and_recovered_from_previous_save() {
+    let backend = HostBackend::new(2);
+    let problem = toy_problem(140);
+    let report_v1 = {
+        use askotch::solvers::Solver;
+        CholeskySolver::new()
+            .run(&backend, &problem, &askotch::coordinator::Budget::iterations(1))
+            .unwrap()
+    };
+    let mut report_v2 = report_v1.clone();
+    report_v2.solver = "cholesky-v2".into();
+
+    let dir = temp_dir("corrupt_weights_slab");
+    let _ = std::fs::remove_dir_all(&dir);
+    // Two saves into the same directory: the second rotates the first
+    // (manifest, slab) pair to model.prev.json / weights.prev.slab.
+    ModelArtifact::from_solve(&problem, &report_v1, 0).unwrap().save(&dir).unwrap();
+    ModelArtifact::from_solve(&problem, &report_v2, 0).unwrap().save(&dir).unwrap();
+
+    // Flip one payload bit in the published slab (bit rot / bad disk).
+    let slab = std::path::Path::new(&dir).join("weights.slab");
+    let mut bytes = std::fs::read(&slab).unwrap();
+    let k = bytes.len() - 12;
+    bytes[k] ^= 0x01;
+    std::fs::write(&slab, &bytes).unwrap();
+
+    let err = ModelArtifact::load(&dir).unwrap_err().to_string();
+    assert!(err.contains("checksum"), "strict load must name the corruption, got: {err}");
+    let (art, fell_back) = ModelArtifact::load_recover(&dir).unwrap();
+    assert!(fell_back, "ladder must report the fallback");
+    assert_eq!(art.meta.solver, "cholesky", "previous good generation served");
+    assert_bits_eq(&art.weights, &report_v1.weights, "recovered weights");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn truncated_checkpoint_manifest_recovers_from_retained_generation() {
+    let backend = HostBackend::new(2);
+    let coord = Coordinator::new(&backend);
+    let dir = temp_dir("corrupt_ckpt_manifest");
+    let _ = std::fs::remove_dir_all(&dir);
+    let cfg = ExperimentConfig {
+        name: "lifecycle_corrupt_ckpt".into(),
+        dataset: "physics_like".into(),
+        n: 240,
+        d: 8,
+        solver: SolverKind::Pcg,
+        rank: 10,
+        seed: 3,
+        max_iters: 6,
+        time_limit_secs: 1e9,
+        ..Default::default()
+    };
+    let policy = DrivePolicy {
+        eval_every: 1_000_000,
+        checkpoint_every: 3,
+        checkpoint_path: dir.clone(),
+        ..Default::default()
+    };
+    let (_, want) = coord.run_with_policy(&cfg, &mut NullObserver, &policy, None).unwrap();
+    let d = std::path::Path::new(&dir);
+    assert!(d.join("checkpoint-6.json").exists(), "current generation");
+    assert!(d.join("checkpoint-3.json").exists(), "retained generation");
+
+    // Truncate the commit pointer mid-file: a torn manifest write.
+    let manifest = d.join("checkpoint.json");
+    let bytes = std::fs::read(&manifest).unwrap();
+    std::fs::write(&manifest, &bytes[..bytes.len() / 2]).unwrap();
+    let err = Checkpoint::load(&dir).unwrap_err().to_string();
+    assert!(err.contains("checkpoint manifest"), "strict load must refuse, got: {err}");
+    // The newest retained generation manifest is intact: same iterate.
+    let (ck, fell_back) = Checkpoint::load_recover(&dir).unwrap();
+    assert!(fell_back);
+    assert_eq!(ck.iters, 6);
+
+    // Tear the newest generation's slab too: the ladder climbs to the
+    // previous generation — one checkpoint interval of progress lost,
+    // not the solve.
+    let slab = d.join("state-6.slab");
+    let bytes = std::fs::read(&slab).unwrap();
+    std::fs::write(&slab, &bytes[..bytes.len() * 2 / 3]).unwrap();
+    let (ck, fell_back) = Checkpoint::load_recover(&dir).unwrap();
+    assert!(fell_back);
+    assert_eq!(ck.iters, 3, "torn state slab falls back one interval");
+
+    // And the recovered checkpoint resumes to weights bit-identical to
+    // the uninterrupted run.
+    let resume_policy = DrivePolicy { eval_every: 1_000_000, ..Default::default() };
+    let (_, got) =
+        coord.run_with_policy(&cfg, &mut NullObserver, &resume_policy, Some(&ck)).unwrap();
+    assert_eq!(got.iters, want.iters);
+    assert_bits_eq(&got.weights, &want.weights, "resume from recovered generation");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn torn_state_slab_is_refused_with_a_typed_error() {
+    let dir = temp_dir("torn_state_slab");
+    let _ = std::fs::remove_dir_all(&dir);
+    let mut ck = Checkpoint::new("f", "s", "p", 4, 0.0);
+    ck.push_vec("w", vec![1.0; 64]);
+    ck.save(&dir).unwrap();
+    // Keep only a prefix of the slab: what a crash between write-back
+    // and durability leaves behind.
+    let slab = std::path::Path::new(&dir).join("state-4.slab");
+    let bytes = std::fs::read(&slab).unwrap();
+    std::fs::write(&slab, &bytes[..bytes.len() - 9]).unwrap();
+    let err = Checkpoint::load(&dir).unwrap_err().to_string();
+    assert!(err.contains("truncated"), "strict load must name the tear, got: {err}");
+    // Only one generation exists and it references the torn slab:
+    // recovery reports there is nothing good to fall back to.
+    let err = format!("{:#}", Checkpoint::load_recover(&dir).unwrap_err());
+    assert!(err.contains("no retained generation"), "got: {err}");
+    let _ = std::fs::remove_dir_all(&dir);
 }

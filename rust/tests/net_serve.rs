@@ -15,10 +15,9 @@ use askotch::linalg::Chol;
 use askotch::net::wire::PredictRequest;
 use askotch::net::{http, NetConfig, Server};
 use askotch::backend::HostBackend;
-use askotch::server::{serve_predictor, BackendPredictor, Job, ModelSnapshot, ServerConfig};
+use askotch::server::{job_queue, serve_predictor, BackendPredictor, ModelSnapshot, ServerConfig};
 use std::io::{BufReader, Write};
 use std::net::{SocketAddr, TcpStream};
-use std::sync::mpsc;
 use std::time::Duration;
 
 const SIGMA: f64 = 2.0;
@@ -68,7 +67,7 @@ fn start_stack(
     model: ModelSnapshot,
     threads: usize,
 ) -> (Server, std::thread::JoinHandle<askotch::server::ServerStats>) {
-    let (tx, rx) = mpsc::channel::<Job>();
+    let (tx, rx) = job_queue(64);
     let cfg = NetConfig { addr: "127.0.0.1:0".into(), threads, ..Default::default() };
     let server = Server::start(&cfg, tx).expect("bind");
     let live = server.metrics().clone();

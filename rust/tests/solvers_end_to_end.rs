@@ -163,7 +163,7 @@ fn cholesky_is_the_gold_standard() {
 #[test]
 fn prediction_server_matches_direct_predict() {
     let Some(engine) = engine() else { return };
-    use askotch::server::{serve, Job, ModelSnapshot, Request, ServerConfig};
+    use askotch::server::{job_queue, serve, Job, ModelSnapshot, Request, ServerConfig};
     use std::sync::mpsc;
 
     let problem = taxi_problem(400);
@@ -192,13 +192,13 @@ fn prediction_server_matches_direct_predict() {
     )
     .unwrap();
 
-    let (tx, rx) = mpsc::channel::<Job>();
+    let (tx, rx) = job_queue(64);
     let rows: Vec<Vec<f64>> = (0..problem.test.n).map(|i| problem.test.row(i).to_vec()).collect();
     let client = std::thread::spawn(move || {
         let mut got = Vec::new();
         for row in rows {
             let (rtx, rrx) = mpsc::channel();
-            tx.send(Job::Predict(Request { features: row, reply: rtx })).unwrap();
+            tx.send(Job::Predict(Request::new(row, rtx))).unwrap();
             got.push(rrx.recv().unwrap().unwrap());
         }
         got
@@ -214,7 +214,7 @@ fn prediction_server_matches_direct_predict() {
 #[test]
 fn server_rejects_bad_feature_dim() {
     let Some(engine) = engine() else { return };
-    use askotch::server::{serve, Job, ModelSnapshot, Request, ServerConfig};
+    use askotch::server::{job_queue, serve, Job, ModelSnapshot, Request, ServerConfig};
     use std::sync::mpsc;
     let problem = taxi_problem(200);
     let model = ModelSnapshot {
@@ -226,10 +226,10 @@ fn server_rejects_bad_feature_dim() {
         weights: vec![0.0; problem.n()],
         precision: "f32".to_string(),
     };
-    let (tx, rx) = mpsc::channel::<Job>();
+    let (tx, rx) = job_queue(16);
     let handle = std::thread::spawn(move || {
         let (rtx, rrx) = mpsc::channel();
-        tx.send(Job::Predict(Request { features: vec![1.0, 2.0], reply: rtx })).unwrap();
+        tx.send(Job::Predict(Request::new(vec![1.0, 2.0], rtx))).unwrap();
         rrx.recv().unwrap()
     });
     let _ = serve(&engine, model, rx, &ServerConfig::default());
