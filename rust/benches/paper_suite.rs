@@ -54,6 +54,7 @@ fn main() -> anyhow::Result<()> {
         ("host_kernel_engine", host_kernel_engine),
         ("host_kernel_obs_overhead", host_kernel_obs_overhead),
         ("precond_build", precond_build),
+        ("dist_scaling", dist_scaling),
     ];
 
     for (name, run) in exhibits {
@@ -999,5 +1000,114 @@ fn precond_build(backend: &dyn Backend, scale: usize) -> anyhow::Result<Json> {
     summary.set("precond_build", result.clone());
     std::fs::write("BENCH_KERNELS.json", summary.to_string())?;
     println!("[precond build trade-off -> BENCH_KERNELS.json]");
+    Ok(result)
+}
+
+// ---------------------------------------------------------------------------
+// Distributed engine: block-row matvec throughput vs fleet size
+// ---------------------------------------------------------------------------
+
+/// Times the gather-arm kernel matvec (`K(X, X) v`, the solver hot op)
+/// across local fleets of 1, 2, and 4 workers, each worker pinned to
+/// **one** compute thread so throughput measures fleet scaling at
+/// fixed per-worker capacity — the shape a real multi-host deployment
+/// scales along — not this box's core count. Workers are in-process
+/// (`dist::worker::spawn_in_process`): real sockets, real frames, real
+/// scatter/all-reduce, so the wire + provisioning overhead the
+/// single-worker row exposes against the 1-thread host row is honest.
+/// Parity is asserted against the host engine (<= 1e-8, the gather arm
+/// is bitwise by construction) before any timing counts. Folded into
+/// `BENCH_KERNELS.json` as `dist_scaling` for `tools/bench_ratio.py`
+/// (non-gating in CI, like the engine exhibits).
+fn dist_scaling(_backend: &dyn Backend, scale: usize) -> anyhow::Result<Json> {
+    use askotch::backend::DistBackend;
+
+    let (sigma, d) = (1.3, 9usize);
+    let n = 8 * 1024 * scale;
+    let kernel = KernelKind::Rbf;
+    let mut rng = askotch::util::Rng::new(99);
+    let x: Vec<f64> = (0..n * d).map(|_| rng.normal()).collect();
+    let v: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+    let host1 = HostBackend::new(1);
+    let want = host1.kernel_matvec(kernel, &x, n, &x, n, d, &v, sigma)?;
+
+    let median = |mut xs: Vec<f64>| -> f64 {
+        xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        xs[xs.len() / 2]
+    };
+    let mut time_backend = |b: &dyn Backend| -> anyhow::Result<f64> {
+        // Warmup registers the session (SETUP ships the slab once) so
+        // the timed reps measure the steady-state collective.
+        let out = b.kernel_matvec(kernel, &x, n, &x, n, d, &v, sigma)?;
+        for (g, w) in out.iter().zip(&want) {
+            anyhow::ensure!(
+                (g - w).abs() <= 1e-8 * w.abs().max(1.0),
+                "dist parity: {g} vs {w}"
+            );
+        }
+        let mut samples = Vec::new();
+        for _ in 0..5 {
+            let t0 = Instant::now();
+            b.kernel_matvec(kernel, &x, n, &x, n, d, &v, sigma)?;
+            samples.push(t0.elapsed().as_secs_f64());
+        }
+        Ok(median(samples))
+    };
+
+    let mut rows = Vec::new();
+    let mut table = fmt::Table::new(&["fleet", "s/matvec", "Mpairs/s", "vs 1 worker"]);
+    let t_host = time_backend(&host1)?;
+    table.row(vec![
+        "host (1 thread)".into(),
+        fmt::duration(t_host),
+        format!("{:.0}", (n * n) as f64 / t_host.max(1e-12) / 1e6),
+        "-".into(),
+    ]);
+    let mut t_one = f64::NAN;
+    for w in [1usize, 2, 4] {
+        let addrs: Vec<String> = (0..w)
+            .map(|_| askotch::dist::worker::spawn_in_process(1).map(|a| a.to_string()))
+            .collect::<anyhow::Result<_>>()?;
+        let dist = DistBackend::dial(&addrs)?;
+        let t = time_backend(&dist)?;
+        if w == 1 {
+            t_one = t;
+        }
+        let speedup = t_one / t.max(1e-12);
+        table.row(vec![
+            format!("{w} worker{}", if w == 1 { "" } else { "s" }),
+            fmt::duration(t),
+            format!("{:.0}", (n * n) as f64 / t.max(1e-12) / 1e6),
+            format!("{speedup:.2}x"),
+        ]);
+        rows.push(Json::obj(vec![
+            ("workers", Json::num(w as f64)),
+            ("secs_per_matvec", Json::num(t)),
+            ("mpairs_per_sec", Json::num((n * n) as f64 / t.max(1e-12) / 1e6)),
+            ("speedup_vs_one_worker", Json::num(speedup)),
+        ]));
+    }
+    println!("{}", table.render());
+    println!(
+        "(each worker holds one contiguous block-row shard and one compute thread;\n\
+         the gather arm ships only v out and the shard rows of the product back,\n\
+         so fleet throughput scales until the frame loop saturates)"
+    );
+    let result = Json::obj(vec![
+        ("n", Json::num(n as f64)),
+        ("d", Json::num(d as f64)),
+        ("host_1t_secs", Json::num(t_host)),
+        ("rows", Json::Arr(rows)),
+    ]);
+    // Fold into the perf-trajectory file the engine exhibit writes;
+    // stand alone if this exhibit ran filtered on its own.
+    let mut summary = std::fs::read_to_string("BENCH_KERNELS.json")
+        .ok()
+        .and_then(|t| askotch::json::parse(&t).ok())
+        .filter(|j| matches!(j, Json::Obj(_)))
+        .unwrap_or_else(|| Json::obj(vec![("exhibit", Json::str("host_kernel_engine"))]));
+    summary.set("dist_scaling", result.clone());
+    std::fs::write("BENCH_KERNELS.json", summary.to_string())?;
+    println!("[dist scaling -> BENCH_KERNELS.json]");
     Ok(result)
 }

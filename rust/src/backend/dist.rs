@@ -1,0 +1,890 @@
+//! [`DistBackend`]: kernel products sharded across worker processes.
+//!
+//! The backend partitions the training slab into contiguous block-row
+//! shards ([`crate::dist::shard_ranges`]) — one per worker — and turns
+//! every hot product into scatter → per-shard fused panels → all-reduce
+//! over the length-prefixed binary frames of [`crate::net::wire`]:
+//!
+//! * **Gather arm** (output rows shard): `K(X, ·) v` and `K(X, ·)`
+//!   panels — each worker computes its block rows, the coordinator
+//!   concatenates. Per-element values are independent of the worker
+//!   partition (the fused-engine guarantee in
+//!   [`crate::kernels::fused`]), so the result is **bit-identical** to
+//!   [`HostBackend`] for any worker count.
+//! * **Reduce arm** (columns shard): `K(x1, X) v = Σ_w K(x1, X_w) v_w`
+//!   — partials summed in shard order; ≤ 1e-8 of the host (bitwise at
+//!   one worker, where the shard is the whole slab).
+//! * **Tile arm**: the symmetric-assembly tile grid dealt round-robin
+//!   across workers ([`crate::backend::host::block_tile_pairs`]),
+//!   bit-identical for any worker count.
+//!
+//! Ops that involve no session-sized slab fall back to a local
+//! [`HostBackend`], so every solver family runs unmodified.
+//!
+//! **Sessions.** The first registrable slab an op carries (the `x2` of
+//! a matvec, the `x1` of a cross-matrix, the `x` of a symmetric block)
+//! becomes the *session*: workers receive the full slab once
+//! (`SETUP`), build their shard caches, and serve until the session
+//! changes. Identity is content-based ([`crate::dist::slab_fingerprint`]),
+//! so a re-provisioned worker re-joins the same session and a changed
+//! problem forces a fresh setup.
+//!
+//! **Failure model.** Transport errors (connection reset, EOF, the
+//! heartbeat read timeout) mark the worker dead; its shard is
+//! re-provisioned — respawn for [`WorkerSpec::Spawn`], re-dial for
+//! [`WorkerSpec::Dial`] — and the request retried verbatim (every
+//! request is a pure function of its payload). Logical `ERR` responses
+//! abort the op. Retries exhausted is an error the solve layer sees;
+//! with PR-5 checkpointing armed the run resumes from the last
+//! checkpoint on a fresh pool instead of losing the solve. The drill
+//! lives in `rust/tests/chaos.rs`; `docs/DISTRIBUTED.md` has the full
+//! story.
+
+use std::io::{self, BufRead, BufReader, BufWriter, Write};
+use std::net::TcpStream;
+use std::path::PathBuf;
+use std::process::{Child, Command, Stdio};
+use std::sync::Mutex;
+use std::time::Duration;
+
+use crate::backend::host::{assemble_block_tiles, HostSapStepper};
+use crate::backend::{Backend, HostBackend, SapStepper, SapOptions};
+use crate::config::{KernelKind, Precision};
+use crate::coordinator::KrrProblem;
+use crate::dist::proto::{self, tag, OpHead, TaggedSlab, Wr};
+use crate::dist::{shard_ranges, slab_fingerprint, PROTO_VERSION};
+use crate::json::Json;
+use crate::kernels;
+use crate::kernels::fused::SlabRef;
+use crate::linalg::Mat;
+use crate::net::wire::{read_frame, write_frame, FRAME_OVERHEAD, MAX_FRAME_BYTES};
+
+/// How to reach (and, after a death, replace) one worker.
+#[derive(Debug, Clone)]
+pub enum WorkerSpec {
+    /// Spawn `<bin> worker --listen 127.0.0.1:0` as a child process and
+    /// dial the port it prints. Death ⇒ kill + respawn.
+    Spawn { bin: PathBuf, threads: usize },
+    /// Dial a worker someone else runs (`askotch worker --listen ADDR`
+    /// on this or another machine). Death ⇒ re-dial the same address.
+    Dial(String),
+}
+
+/// A dist session re-registers to a new slab only after this many
+/// consecutive misses on the *same* foreign slab — hysteresis so a
+/// solver alternating products on the training slab and a smaller side
+/// slab (Falkon's centers) never thrashes full-slab setups.
+const REGISTER_AFTER_MISSES: usize = 8;
+
+/// Coordinator configuration.
+#[derive(Debug, Clone)]
+pub struct DistConfig {
+    pub workers: Vec<WorkerSpec>,
+    /// Per-response read timeout (ms): the heartbeat. A worker silent
+    /// this long is declared dead and its shard re-provisioned. Killed
+    /// workers are detected much faster (connection reset/EOF).
+    pub heartbeat_ms: u64,
+    /// Re-provision attempts per worker per op before the op fails.
+    pub max_retries: usize,
+    /// Operating precision of the cached matvec path, mirrored by every
+    /// worker's session caches. Never `Auto` after construction.
+    pub precision: Precision,
+    /// Smallest slab (rows) worth a distributed session; below this
+    /// everything stays on the local fallback backend.
+    pub min_rows: usize,
+}
+
+impl Default for DistConfig {
+    fn default() -> Self {
+        DistConfig {
+            workers: Vec::new(),
+            heartbeat_ms: 30_000,
+            max_retries: 2,
+            precision: Precision::F64,
+            min_rows: 32,
+        }
+    }
+}
+
+struct Conn {
+    r: BufReader<TcpStream>,
+    w: BufWriter<TcpStream>,
+}
+
+struct Worker {
+    spec: WorkerSpec,
+    conn: Option<Conn>,
+    /// Session this connection has been `SETUP` for, if any.
+    session_fp: Option<u64>,
+    child: Option<Child>,
+}
+
+impl Worker {
+    /// Forget the connection (transport failure / session reset): the
+    /// next use re-dials or respawns and re-runs `SETUP`.
+    fn disconnect(&mut self) {
+        self.conn = None;
+        self.session_fp = None;
+    }
+}
+
+#[derive(Clone)]
+struct SessionMeta {
+    fp: u64,
+    n: usize,
+    d: usize,
+    shards: Vec<(usize, usize)>,
+}
+
+struct State {
+    workers: Vec<Worker>,
+    session: Option<SessionMeta>,
+    /// Re-registration hysteresis: fingerprint of the last foreign slab
+    /// seen and how many consecutive ops carried it.
+    miss_fp: u64,
+    misses: usize,
+}
+
+/// The sharded distributed backend. See the module docs for the
+/// partitioning, session, and failure model.
+pub struct DistBackend {
+    cfg: DistConfig,
+    /// Local twin: non-session products, sparse-`v` routing, and the
+    /// fallback when distribution cannot help.
+    local: HostBackend,
+    state: Mutex<State>,
+}
+
+impl DistBackend {
+    pub fn new(cfg: DistConfig) -> anyhow::Result<DistBackend> {
+        anyhow::ensure!(!cfg.workers.is_empty(), "dist: no workers configured");
+        let mut cfg = cfg;
+        if cfg.precision == Precision::Auto {
+            cfg.precision = Precision::F64;
+        }
+        let workers = cfg
+            .workers
+            .iter()
+            .map(|spec| Worker { spec: spec.clone(), conn: None, session_fp: None, child: None })
+            .collect();
+        let local = HostBackend::auto_threads().with_precision(cfg.precision);
+        Ok(DistBackend {
+            cfg,
+            local,
+            state: Mutex::new(State { workers, session: None, miss_fp: 0, misses: 0 }),
+        })
+    }
+
+    /// `workers` local child processes of `bin` (normally
+    /// `std::env::current_exe()`). `threads == 0` divides the machine's
+    /// cores evenly across the fleet.
+    pub fn spawn_local(bin: PathBuf, workers: usize, threads: usize) -> anyhow::Result<DistBackend> {
+        anyhow::ensure!(workers > 0, "dist: worker count must be positive");
+        let threads = if threads == 0 {
+            let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+            (cores / workers).max(1)
+        } else {
+            threads
+        };
+        let specs = (0..workers)
+            .map(|_| WorkerSpec::Spawn { bin: bin.clone(), threads })
+            .collect();
+        DistBackend::new(DistConfig { workers: specs, ..DistConfig::default() })
+    }
+
+    /// Dial an already-running fleet, one address per worker.
+    pub fn dial(addrs: &[String]) -> anyhow::Result<DistBackend> {
+        let specs = addrs.iter().map(|a| WorkerSpec::Dial(a.clone())).collect();
+        DistBackend::new(DistConfig { workers: specs, ..DistConfig::default() })
+    }
+
+    pub fn with_precision(mut self, p: Precision) -> DistBackend {
+        self.cfg.precision = if p == Precision::Auto { Precision::F64 } else { p };
+        self.local = HostBackend::auto_threads().with_precision(self.cfg.precision);
+        self
+    }
+
+    pub fn with_heartbeat_ms(mut self, ms: u64) -> DistBackend {
+        self.cfg.heartbeat_ms = ms.max(1);
+        self
+    }
+
+    pub fn with_max_retries(mut self, n: usize) -> DistBackend {
+        self.cfg.max_retries = n;
+        self
+    }
+
+    /// Lower the distributable-slab floor (tests with toy problems).
+    pub fn with_min_rows(mut self, n: usize) -> DistBackend {
+        self.cfg.min_rows = n.max(1);
+        self
+    }
+
+    pub fn worker_count(&self) -> usize {
+        self.cfg.workers.len()
+    }
+
+    /// Dial/spawn and handshake every worker now, so `--backend dist`
+    /// fails at startup (with a worker index in the error) instead of
+    /// at the first kernel product.
+    pub fn preflight(&self) -> anyhow::Result<()> {
+        let mut st = self.state.lock().unwrap();
+        for i in 0..st.workers.len() {
+            self.ensure_conn(&mut st.workers[i])
+                .map_err(|e| anyhow::anyhow!("dist: worker {i} unreachable: {e}"))?;
+        }
+        Ok(())
+    }
+
+    // -- transport ----------------------------------------------------------
+
+    /// Dial or spawn the worker and run the version handshake. No-op on
+    /// a live connection.
+    fn ensure_conn(&self, w: &mut Worker) -> io::Result<()> {
+        if w.conn.is_some() {
+            return Ok(());
+        }
+        let stream = match &w.spec {
+            WorkerSpec::Dial(addr) => TcpStream::connect(addr.as_str())?,
+            WorkerSpec::Spawn { bin, threads } => {
+                if let Some(mut old) = w.child.take() {
+                    let _ = old.kill();
+                    let _ = old.wait();
+                }
+                let mut child = Command::new(bin)
+                    .arg("worker")
+                    .arg("--listen")
+                    .arg("127.0.0.1:0")
+                    .arg("--host-threads")
+                    .arg(threads.to_string())
+                    .stdin(Stdio::null())
+                    .stdout(Stdio::piped())
+                    .stderr(Stdio::inherit())
+                    .spawn()?;
+                let stdout = child
+                    .stdout
+                    .take()
+                    .ok_or_else(|| io::Error::other("worker child has no stdout"))?;
+                // The worker prints exactly one line — "askotch worker
+                // listening on ADDR" — before serving.
+                let mut line = String::new();
+                BufReader::new(stdout).read_line(&mut line)?;
+                let addr = line
+                    .trim()
+                    .rsplit(' ')
+                    .next()
+                    .filter(|a| !a.is_empty())
+                    .ok_or_else(|| {
+                        io::Error::other(format!("worker printed no address: {line:?}"))
+                    })?
+                    .to_string();
+                let stream = TcpStream::connect(addr.as_str())?;
+                w.child = Some(child);
+                stream
+            }
+        };
+        stream.set_nodelay(true).ok();
+        stream.set_read_timeout(Some(Duration::from_millis(self.cfg.heartbeat_ms.max(1))))?;
+        w.conn = Some(Conn {
+            r: BufReader::new(stream.try_clone()?),
+            w: BufWriter::new(stream),
+        });
+        let (t, p) = self.rpc(w, tag::HELLO, &proto::Hello { version: PROTO_VERSION }.encode())?;
+        match t {
+            tag::HELLO_ACK => {
+                let ack = proto::Hello::decode(&p).map_err(io::Error::other)?;
+                if ack.version != PROTO_VERSION {
+                    return Err(io::Error::other(format!(
+                        "worker speaks protocol v{}, coordinator v{PROTO_VERSION}",
+                        ack.version
+                    )));
+                }
+                Ok(())
+            }
+            tag::ERR => Err(io::Error::other(proto::decode_err(&p))),
+            other => Err(io::Error::other(format!("unexpected hello reply tag {other:#04x}"))),
+        }
+    }
+
+    /// Send one request frame. `fault::fail_io("dist/rpc")` injects
+    /// here — a simulated transport failure that exercises the whole
+    /// re-provision path.
+    fn send(&self, w: &mut Worker, req_tag: u8, payload: &[u8]) -> io::Result<()> {
+        crate::fault::fail_io("dist/rpc")?;
+        let _sp = crate::obs::span("dist/rpc");
+        let conn = w.conn.as_mut().ok_or_else(|| io::Error::other("not connected"))?;
+        let sent = write_frame(&mut conn.w, req_tag, payload)?;
+        conn.w.flush()?;
+        crate::obs::add_bytes(sent as f64);
+        Ok(())
+    }
+
+    /// Read one response frame (clean EOF is a transport error here —
+    /// the worker hung up mid-conversation).
+    fn recv(&self, w: &mut Worker) -> io::Result<(u8, Vec<u8>)> {
+        let _sp = crate::obs::span("dist/rpc");
+        let conn = w.conn.as_mut().ok_or_else(|| io::Error::other("not connected"))?;
+        match read_frame(&mut conn.r, MAX_FRAME_BYTES)? {
+            Some((t, p)) => {
+                crate::obs::add_bytes((FRAME_OVERHEAD + p.len()) as f64);
+                Ok((t, p))
+            }
+            None => Err(io::Error::new(
+                io::ErrorKind::UnexpectedEof,
+                "worker closed the connection",
+            )),
+        }
+    }
+
+    fn rpc(&self, w: &mut Worker, req_tag: u8, payload: &[u8]) -> io::Result<(u8, Vec<u8>)> {
+        self.send(w, req_tag, payload)?;
+        self.recv(w)
+    }
+
+    // -- session ------------------------------------------------------------
+
+    /// Connect (if needed) and `SETUP` this worker for the session.
+    fn provision(
+        &self,
+        w: &mut Worker,
+        meta: &SessionMeta,
+        shard: (usize, usize),
+        x: &[f64],
+    ) -> io::Result<()> {
+        self.ensure_conn(w)?;
+        if w.session_fp == Some(meta.fp) {
+            return Ok(());
+        }
+        let mut wr = Wr::default();
+        wr.put_u64(meta.fp);
+        wr.put_u8(proto::precision_code(self.cfg.precision));
+        wr.put_u64(meta.d as u64);
+        wr.put_u64(meta.n as u64);
+        wr.put_u64(shard.0 as u64);
+        wr.put_u64(shard.1 as u64);
+        wr.put_f64s(x);
+        let (t, p) = self.rpc(w, tag::SETUP, &wr.0)?;
+        match t {
+            tag::SETUP_ACK => {
+                let ack = proto::SetupAck::decode(&p).map_err(io::Error::other)?;
+                if ack.session != meta.fp
+                    || ack.rows != shard.1 - shard.0
+                    || proto::precision_code(ack.precision)
+                        != proto::precision_code(self.cfg.precision)
+                {
+                    return Err(io::Error::other(format!(
+                        "setup ack mismatch: session {:#018x} rows {} precision {}-bit \
+                         (want {:#018x} / {} / {}-bit)",
+                        ack.session,
+                        ack.rows,
+                        proto::precision_code(ack.precision),
+                        meta.fp,
+                        shard.1 - shard.0,
+                        proto::precision_code(self.cfg.precision),
+                    )));
+                }
+                w.session_fp = Some(meta.fp);
+                Ok(())
+            }
+            tag::ERR => Err(io::Error::other(proto::decode_err(&p))),
+            other => Err(io::Error::other(format!("unexpected setup reply tag {other:#04x}"))),
+        }
+    }
+
+    /// Does the current session cover this exact slab?
+    fn session_matches(&self, st: &State, x: &[f64], n: usize, d: usize) -> bool {
+        match &st.session {
+            Some(m) => m.n == n && m.d == d && slab_fingerprint(x) == m.fp,
+            None => false,
+        }
+    }
+
+    /// Match the slab against the session, or make it the session —
+    /// immediately when none exists, after [`REGISTER_AFTER_MISSES`]
+    /// consecutive sightings when one does. Returns whether the slab is
+    /// (now) the session. Worker provisioning is lazy: the next
+    /// collective runs `SETUP` on any worker not yet in the session.
+    fn try_register(&self, st: &mut State, x: &[f64], n: usize, d: usize) -> bool {
+        if d == 0 || n < self.cfg.min_rows || n < st.workers.len() || x.len() != n * d {
+            return false;
+        }
+        let fp = slab_fingerprint(x);
+        if let Some(m) = &st.session {
+            if m.fp == fp && m.n == n && m.d == d {
+                st.misses = 0;
+                return true;
+            }
+            if st.miss_fp == fp {
+                st.misses += 1;
+            } else {
+                st.miss_fp = fp;
+                st.misses = 1;
+            }
+            if st.misses < REGISTER_AFTER_MISSES {
+                return false;
+            }
+        }
+        let shards = match shard_ranges(n, st.workers.len()) {
+            Ok(s) => s,
+            Err(_) => return false,
+        };
+        st.misses = 0;
+        st.session = Some(SessionMeta { fp, n, d, shards });
+        crate::obs::info_kv(
+            "dist",
+            "session registered",
+            &[
+                ("rows", Json::num(n as f64)),
+                ("dim", Json::num(d as f64)),
+                ("workers", Json::num(st.workers.len() as f64)),
+            ],
+        );
+        true
+    }
+
+    // -- collectives --------------------------------------------------------
+
+    /// One scatter/all-reduce round: build each worker's request with
+    /// `mk(worker, shard)`, send to everyone, then collect every
+    /// response in worker order. Transport failures re-provision the
+    /// worker (respawn/re-dial + `SETUP` with `x`, the session slab —
+    /// always an argument of a distributed op) and retry the request
+    /// verbatim, up to `max_retries` times. Logical `ERR` responses
+    /// abort after all workers have answered, so no connection is left
+    /// desynchronized.
+    fn collective<F>(&self, st: &mut State, x: &[f64], mk: F) -> anyhow::Result<Vec<Vec<u8>>>
+    where
+        F: Fn(usize, (usize, usize)) -> (u8, Vec<u8>),
+    {
+        let meta = st.session.clone().expect("collective without a session");
+        let nw = st.workers.len();
+        let mut send_err: Vec<Option<io::Error>> = Vec::with_capacity(nw);
+        {
+            let _sp = crate::obs::span("dist/scatter");
+            for i in 0..nw {
+                let w = &mut st.workers[i];
+                let res = (|| {
+                    self.provision(w, &meta, meta.shards[i], x)?;
+                    let (t, payload) = mk(i, meta.shards[i]);
+                    self.send(w, t, &payload)
+                })();
+                send_err.push(match res {
+                    Ok(()) => None,
+                    Err(e) => {
+                        w.disconnect();
+                        Some(e)
+                    }
+                });
+            }
+        }
+        let mut out = Vec::with_capacity(nw);
+        let mut logical: Option<anyhow::Error> = None;
+        {
+            let _sp = crate::obs::span("dist/wait");
+            for (i, pending) in send_err.into_iter().enumerate() {
+                let (t, p) = self.finish_worker(st, i, &meta, x, &mk, pending)?;
+                if t == tag::ERR && logical.is_none() {
+                    logical =
+                        Some(anyhow::anyhow!("dist: worker {i}: {}", proto::decode_err(&p)));
+                }
+                out.push(p);
+            }
+        }
+        match logical {
+            Some(e) => Err(e),
+            None => Ok(out),
+        }
+    }
+
+    /// Bring worker `i`'s exchange to completion: read the pending
+    /// response, or re-provision and retry the whole request.
+    fn finish_worker<F>(
+        &self,
+        st: &mut State,
+        i: usize,
+        meta: &SessionMeta,
+        x: &[f64],
+        mk: &F,
+        send_err: Option<io::Error>,
+    ) -> anyhow::Result<(u8, Vec<u8>)>
+    where
+        F: Fn(usize, (usize, usize)) -> (u8, Vec<u8>),
+    {
+        let w = &mut st.workers[i];
+        let mut last = match send_err {
+            Some(e) => e,
+            None => match self.recv(w) {
+                Ok(resp) => return Ok(resp),
+                Err(e) => {
+                    w.disconnect();
+                    e
+                }
+            },
+        };
+        for attempt in 1..=self.cfg.max_retries {
+            crate::obs::warn_kv(
+                "dist",
+                "worker lost; re-provisioning shard",
+                &[
+                    ("worker", Json::num(i as f64)),
+                    ("attempt", Json::num(attempt as f64)),
+                    ("error", Json::str(&last.to_string())),
+                ],
+            );
+            std::thread::sleep(Duration::from_millis(50 * attempt as u64));
+            let res = (|| {
+                self.provision(w, meta, meta.shards[i], x)?;
+                let (t, payload) = mk(i, meta.shards[i]);
+                self.rpc(w, t, &payload)
+            })();
+            match res {
+                Ok(resp) => return Ok(resp),
+                Err(e) => {
+                    w.disconnect();
+                    last = e;
+                }
+            }
+        }
+        anyhow::bail!(
+            "dist: worker {i} unreachable after {} attempts: {last}",
+            self.cfg.max_retries + 1
+        )
+    }
+
+    // -- distributed ops ----------------------------------------------------
+
+    /// Mostly-zero `v` (early SAP iterates): the host's exact gathered
+    /// walk beats shipping a dense `v` to the fleet. Mirrors the host
+    /// engine's own pre-scan, so routing local here is bit-identical.
+    fn sparse_route(v: &[f64], n2: usize) -> bool {
+        let nnz = v.iter().filter(|&&vj| vj != 0.0).count();
+        nnz * kernels::SPARSE_DENSITY < n2
+    }
+
+    /// Distribute a matvec if a session slab is involved; `Ok(None)`
+    /// means "not distributable — compute locally".
+    #[allow(clippy::too_many_arguments)]
+    fn dist_matvec(
+        &self,
+        kernel: KernelKind,
+        x1: &[f64],
+        n1: usize,
+        x2: &[f64],
+        n2: usize,
+        d: usize,
+        v: &[f64],
+        sigma: f64,
+        exact: bool,
+    ) -> anyhow::Result<Option<Vec<f64>>> {
+        if Self::sparse_route(v, n2) {
+            return Ok(None);
+        }
+        let mut st = self.state.lock().unwrap();
+        let st = &mut *st;
+        let same = std::ptr::eq(x1.as_ptr(), x2.as_ptr()) && n1 == n2;
+        let head = |meta: &SessionMeta| OpHead { session: meta.fp, kernel, sigma, exact };
+        let slab_tag = if exact { Precision::F64 } else { self.cfg.precision };
+
+        // Gather arm with a sent right slab: x1 is the session.
+        if !same && self.session_matches(st, x1, n1, d) {
+            st.misses = 0;
+            let meta = st.session.clone().unwrap();
+            let resps = self.collective(st, x1, |_, _| {
+                let mut wr = Wr::default();
+                head(&meta).put(&mut wr);
+                wr.put_u64(n2 as u64);
+                TaggedSlab::put(&mut wr, slab_tag, x2);
+                wr.put_f64s(v);
+                (tag::MATVEC_ROWS_X2, wr.0)
+            })?;
+            return Ok(Some(concat_rows(&meta, resps)?));
+        }
+
+        if !self.try_register(st, x2, n2, d) {
+            return Ok(None);
+        }
+        let meta = st.session.clone().unwrap();
+        if same {
+            // Gather arm: out[lo..hi] = K(X[lo..hi], X) v per worker.
+            let resps = self.collective(st, x2, |_, _| {
+                let mut wr = Wr::default();
+                head(&meta).put(&mut wr);
+                wr.put_f64s(v);
+                (tag::MATVEC_ROWS, wr.0)
+            })?;
+            return Ok(Some(concat_rows(&meta, resps)?));
+        }
+        // Reduce arm: partial K(x1, X_w) v_w per worker, summed here.
+        let resps = self.collective(st, x2, |_, (lo, hi)| {
+            let mut wr = Wr::default();
+            head(&meta).put(&mut wr);
+            wr.put_u64(n1 as u64);
+            TaggedSlab::put(&mut wr, slab_tag, x1);
+            wr.put_f64s(&v[lo..hi]);
+            (tag::MATVEC_PART, wr.0)
+        })?;
+        let _sp = crate::obs::span("dist/reduce");
+        let mut out = vec![0.0f64; n1];
+        for (i, p) in resps.iter().enumerate() {
+            let part = proto::decode_vec(p)?;
+            anyhow::ensure!(
+                part.len() == n1,
+                "dist: worker {i} returned {} partials, want {n1}",
+                part.len()
+            );
+            for (o, q) in out.iter_mut().zip(&part) {
+                *o += q;
+            }
+        }
+        crate::obs::add_flops(st.workers.len() as f64 * n1 as f64);
+        Ok(Some(out))
+    }
+
+    fn dist_matrix(
+        &self,
+        kernel: KernelKind,
+        x1: &[f64],
+        n1: usize,
+        x2: &[f64],
+        n2: usize,
+        d: usize,
+        sigma: f64,
+    ) -> anyhow::Result<Option<Mat>> {
+        let mut st = self.state.lock().unwrap();
+        let st = &mut *st;
+        if !self.try_register(st, x1, n1, d) {
+            return Ok(None);
+        }
+        let meta = st.session.clone().unwrap();
+        let resps = self.collective(st, x1, |_, _| {
+            let mut wr = Wr::default();
+            OpHead { session: meta.fp, kernel, sigma, exact: true }.put(&mut wr);
+            wr.put_u64(n2 as u64);
+            // Assembly is exact: the panel slab always travels f64.
+            TaggedSlab::put(&mut wr, Precision::F64, x2);
+            (tag::MATRIX_ROWS, wr.0)
+        })?;
+        let _sp = crate::obs::span("dist/reduce");
+        let mut data = Vec::with_capacity(n1 * n2);
+        for (i, p) in resps.iter().enumerate() {
+            let panel = proto::decode_vec(p)?;
+            let (lo, hi) = meta.shards[i];
+            anyhow::ensure!(
+                panel.len() == (hi - lo) * n2,
+                "dist: worker {i} panel is {} values, want {}x{n2}",
+                panel.len(),
+                hi - lo
+            );
+            data.extend_from_slice(&panel);
+        }
+        Ok(Some(Mat { rows: n1, cols: n2, data }))
+    }
+
+    fn dist_block(
+        &self,
+        kernel: KernelKind,
+        x: &[f64],
+        d: usize,
+        idx: &[usize],
+        sigma: f64,
+    ) -> anyhow::Result<Option<Mat>> {
+        if d == 0 || x.len() % d != 0 {
+            return Ok(None);
+        }
+        let n = x.len() / d;
+        let mut st = self.state.lock().unwrap();
+        let st = &mut *st;
+        if !self.try_register(st, x, n, d) {
+            return Ok(None);
+        }
+        if idx.iter().any(|&i| i >= n) {
+            return Ok(None); // out-of-range indices: let the local path panic loudly
+        }
+        let meta = st.session.clone().unwrap();
+        let tile = self.local.assembly_tile();
+        let nw = st.workers.len();
+        let resps = self.collective(st, x, |i, _| {
+            let mut wr = Wr::default();
+            OpHead { session: meta.fp, kernel, sigma, exact: true }.put(&mut wr);
+            wr.put_u64(tile as u64);
+            wr.put_u64(i as u64); // take
+            wr.put_u64(nw as u64); // step
+            wr.put_u64(idx.len() as u64);
+            for &j in idx {
+                wr.put_u64(j as u64);
+            }
+            (tag::BLOCK_TILES, wr.0)
+        })?;
+        let _sp = crate::obs::span("dist/reduce");
+        let mut tiles = Vec::new();
+        for p in &resps {
+            tiles.extend(proto::decode_tiles(p)?);
+        }
+        Ok(Some(assemble_block_tiles(idx.len(), tile, tiles)))
+    }
+}
+
+/// Concatenate per-shard block rows in shard order; each worker `i`
+/// returns exactly `hi - lo` rows of output.
+fn concat_rows(meta: &SessionMeta, resps: Vec<Vec<u8>>) -> anyhow::Result<Vec<f64>> {
+    let _sp = crate::obs::span("dist/reduce");
+    let mut out = Vec::with_capacity(meta.n);
+    for (i, p) in resps.iter().enumerate() {
+        let rows = proto::decode_vec(p)?;
+        let (lo, hi) = meta.shards[i];
+        anyhow::ensure!(
+            rows.len() == hi - lo,
+            "dist: worker {i} returned {} rows for shard [{lo}, {hi})",
+            rows.len()
+        );
+        out.extend_from_slice(&rows);
+    }
+    Ok(out)
+}
+
+impl Backend for DistBackend {
+    fn name(&self) -> &'static str {
+        "dist"
+    }
+
+    fn kernel_matvec(
+        &self,
+        kernel: KernelKind,
+        x1: &[f64],
+        n1: usize,
+        x2: &[f64],
+        n2: usize,
+        d: usize,
+        v: &[f64],
+        sigma: f64,
+    ) -> anyhow::Result<Vec<f64>> {
+        self.kernel_matvec_with_norms(kernel, x1, n1, x2, n2, d, v, sigma, None)
+    }
+
+    fn kernel_matvec_with_norms(
+        &self,
+        kernel: KernelKind,
+        x1: &[f64],
+        n1: usize,
+        x2: &[f64],
+        n2: usize,
+        d: usize,
+        v: &[f64],
+        sigma: f64,
+        x2_sq_norms: Option<&[f64]>,
+    ) -> anyhow::Result<Vec<f64>> {
+        if let Some(out) = self.dist_matvec(kernel, x1, n1, x2, n2, d, v, sigma, true)? {
+            return Ok(out);
+        }
+        self.local
+            .kernel_matvec_with_norms(kernel, x1, n1, x2, n2, d, v, sigma, x2_sq_norms)
+    }
+
+    fn kernel_matvec_cached(
+        &self,
+        kernel: KernelKind,
+        x1: &[f64],
+        n1: usize,
+        x2: &[f64],
+        n2: usize,
+        d: usize,
+        v: &[f64],
+        sigma: f64,
+        slab: SlabRef<'_>,
+    ) -> anyhow::Result<Vec<f64>> {
+        if let Some(out) = self.dist_matvec(kernel, x1, n1, x2, n2, d, v, sigma, false)? {
+            return Ok(out);
+        }
+        self.local.kernel_matvec_cached(kernel, x1, n1, x2, n2, d, v, sigma, slab)
+    }
+
+    fn kernel_matrix(
+        &self,
+        kernel: KernelKind,
+        x1: &[f64],
+        n1: usize,
+        x2: &[f64],
+        n2: usize,
+        d: usize,
+        sigma: f64,
+    ) -> Mat {
+        match self.dist_matrix(kernel, x1, n1, x2, n2, d, sigma) {
+            Ok(Some(m)) => m,
+            Ok(None) => self.local.kernel_matrix(kernel, x1, n1, x2, n2, d, sigma),
+            Err(e) => {
+                crate::obs::warn_kv(
+                    "dist",
+                    "distributed kernel_matrix failed; computing locally",
+                    &[("error", Json::str(&format!("{e:#}")))],
+                );
+                self.local.kernel_matrix(kernel, x1, n1, x2, n2, d, sigma)
+            }
+        }
+    }
+
+    fn kernel_block(
+        &self,
+        kernel: KernelKind,
+        x: &[f64],
+        d: usize,
+        idx: &[usize],
+        sigma: f64,
+    ) -> Mat {
+        match self.dist_block(kernel, x, d, idx, sigma) {
+            Ok(Some(m)) => m,
+            Ok(None) => self.local.kernel_block(kernel, x, d, idx, sigma),
+            Err(e) => {
+                crate::obs::warn_kv(
+                    "dist",
+                    "distributed kernel_block failed; computing locally",
+                    &[("error", Json::str(&format!("{e:#}")))],
+                );
+                self.local.kernel_block(kernel, x, d, idx, sigma)
+            }
+        }
+    }
+
+    fn precision(&self) -> Precision {
+        self.cfg.precision
+    }
+
+    fn exact_arithmetic(&self) -> bool {
+        // f64 throughout; the reduce arm reorders partial sums, which
+        // stays within f64 rounding of the host — no measurement floor.
+        self.cfg.precision != Precision::F32
+    }
+
+    fn predict_tile(&self, kernel: KernelKind, n_train: usize, d: usize) -> usize {
+        // Wider eval tiles than one host: each collective should hand
+        // every worker a meaty block-row product.
+        self.local.predict_tile(kernel, n_train, d).saturating_mul(self.cfg.workers.len())
+    }
+
+    fn sap_stepper<'a>(
+        &'a self,
+        problem: &'a KrrProblem,
+        opts: &SapOptions,
+    ) -> anyhow::Result<Box<dyn SapStepper + 'a>> {
+        // The host stepper is backend-generic: its K_BB assembly and
+        // block gradients dispatch right back through this backend and
+        // shard across the fleet.
+        Ok(Box::new(HostSapStepper::new(self, problem, opts)))
+    }
+}
+
+impl Drop for DistBackend {
+    fn drop(&mut self) {
+        if let Ok(mut st) = self.state.lock() {
+            for w in st.workers.iter_mut() {
+                if let Some(conn) = w.conn.as_mut() {
+                    let _ = write_frame(&mut conn.w, tag::SHUTDOWN, &[]);
+                    let _ = conn.w.flush();
+                }
+                if let Some(mut child) = w.child.take() {
+                    let _ = child.kill();
+                    let _ = child.wait();
+                }
+            }
+        }
+    }
+}

@@ -109,6 +109,13 @@ impl HostBackend {
         self
     }
 
+    /// The symmetric-assembly tile edge in force. The distributed
+    /// backend mirrors this so its workers compute the *same* tile
+    /// grid and stay bit-identical to a local assembly.
+    pub fn assembly_tile(&self) -> usize {
+        self.assembly_tile
+    }
+
     /// Override the prediction row tile (tests).
     pub fn with_predict_tile(mut self, tile: usize) -> HostBackend {
         self.predict_tile_override = Some(tile.max(1));
@@ -423,6 +430,20 @@ pub fn par_sq_norms(x: &[f64], n: usize, d: usize, threads: usize) -> Vec<f64> {
     out
 }
 
+/// Serial twin of [`HostBackend::par_normal_slab`]: same per-chunk
+/// streams, walked in order, so the output is bit-identical to the
+/// parallel path for any thread count. Free-standing so callers
+/// holding only a `&dyn Backend` (the generalized SAP stepper, the
+/// distributed coordinator) can still draw the exact slab a local run
+/// would.
+pub fn normal_slab(seed: u64, len: usize) -> Vec<f64> {
+    let mut data = vec![0.0f64; len];
+    for (c, chunk) in data.chunks_mut(RNG_CHUNK).enumerate() {
+        fill_normal_chunk(seed, c, chunk);
+    }
+    data
+}
+
 fn fill_normal_chunk(seed: u64, chunk_id: usize, out: &mut [f64]) {
     let stream = seed ^ (chunk_id as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
     let mut rng = Rng::new(stream);
@@ -656,12 +677,89 @@ impl Backend for HostBackend {
         idx: &[usize],
         sigma: f64,
     ) -> Mat {
+        let tiles = self.kernel_block_tiles(kernel, x, d, idx, sigma, 0, 1);
+        assemble_block_tiles(idx.len(), self.assembly_tile, tiles)
+    }
+
+    fn predict_tile(&self, _kernel: KernelKind, _n_train: usize, d: usize) -> usize {
+        if let Some(t) = self.predict_tile_override {
+            return t;
+        }
+        // Cache-sized eval panels, widened with the worker count so each
+        // kernel_matvec call has enough rows to split across threads.
+        let per_thread = (4 * PANEL_TARGET_BYTES / 8 / d.max(1)).clamp(64, 8192);
+        (self.threads * per_thread).clamp(256, 16384)
+    }
+
+    fn sap_stepper<'a>(
+        &'a self,
+        problem: &'a KrrProblem,
+        opts: &SapOptions,
+    ) -> anyhow::Result<Box<dyn SapStepper + 'a>> {
+        Ok(Box::new(HostSapStepper::new(self, problem, opts)))
+    }
+}
+
+/// The upper-triangular tile-pair grid of a `b x b` symmetric block
+/// under tile edge `tile`: each symmetric tile appears once, in a
+/// fixed order shared by the host assembly and the distributed
+/// workers (who deal the same list round-robin across processes).
+pub(crate) fn block_tile_pairs(b: usize, tile: usize) -> Vec<(usize, usize)> {
+    let nt = b.div_ceil(tile.max(1)).max(1);
+    (0..nt).flat_map(|ti| (ti..nt).map(move |tj| (ti, tj))).collect()
+}
+
+/// Mirror-scatter computed tiles into the full symmetric block. The
+/// inverse of [`block_tile_pairs`]: reads each tile's upper part and
+/// writes both halves, exactly as the pre-refactor `kernel_block` did.
+pub(crate) fn assemble_block_tiles(
+    b: usize,
+    tile: usize,
+    tiles: Vec<(usize, usize, Vec<f64>)>,
+) -> Mat {
+    let mut out = Mat::zeros(b, b);
+    for (ti, tj, buf) in tiles {
+        let (a0, a1) = (ti * tile, ((ti + 1) * tile).min(b));
+        let (c0, c1) = (tj * tile, ((tj + 1) * tile).min(b));
+        let w = c1 - c0;
+        for a in a0..a1 {
+            let start = if ti == tj { a.max(c0) } else { c0 };
+            for c in start..c1 {
+                let v = buf[(a - a0) * w + (c - c0)];
+                out[(a, c)] = v;
+                out[(c, a)] = v;
+            }
+        }
+    }
+    out
+}
+
+impl HostBackend {
+    /// Compute a round-robin share of the symmetric-assembly tile
+    /// grid: tiles `take, take + step, take + 2*step, ...` of
+    /// [`block_tile_pairs`], dealt across this backend's threads.
+    /// `(0, 1)` is the whole grid (the local [`Backend::kernel_block`]
+    /// path); a distributed worker `w` of `W` computes `(w, W)` so the
+    /// union over workers is exactly the local grid, tile for tile —
+    /// per-tile values do not depend on who computed them, which is
+    /// what keeps the sharded assembly bit-identical.
+    pub(crate) fn kernel_block_tiles(
+        &self,
+        kernel: KernelKind,
+        x: &[f64],
+        d: usize,
+        idx: &[usize],
+        sigma: f64,
+        take: usize,
+        step: usize,
+    ) -> Vec<(usize, usize, Vec<f64>)> {
         let b = idx.len();
         let tile = self.assembly_tile;
-        let nt = b.div_ceil(tile.max(1)).max(1);
-        // Upper-triangular tile pairs: each symmetric tile computed once.
-        let pairs: Vec<(usize, usize)> =
-            (0..nt).flat_map(|ti| (ti..nt).map(move |tj| (ti, tj))).collect();
+        let pairs: Vec<(usize, usize)> = block_tile_pairs(b, tile)
+            .into_iter()
+            .skip(take)
+            .step_by(step.max(1))
+            .collect();
         let compute = |(ti, tj): (usize, usize)| -> (usize, usize, Vec<f64>) {
             let (a0, a1) = (ti * tile, ((ti + 1) * tile).min(b));
             let (c0, c1) = (tj * tile, ((tj + 1) * tile).min(b));
@@ -730,40 +828,7 @@ impl Backend for HostBackend {
                 handles.into_iter().flat_map(|h| h.join().unwrap()).collect()
             })
         };
-
-        let mut out = Mat::zeros(b, b);
-        for (ti, tj, buf) in tiles {
-            let (a0, a1) = (ti * tile, ((ti + 1) * tile).min(b));
-            let (c0, c1) = (tj * tile, ((tj + 1) * tile).min(b));
-            let w = c1 - c0;
-            for a in a0..a1 {
-                let start = if ti == tj { a.max(c0) } else { c0 };
-                for c in start..c1 {
-                    let v = buf[(a - a0) * w + (c - c0)];
-                    out[(a, c)] = v;
-                    out[(c, a)] = v;
-                }
-            }
-        }
-        out
-    }
-
-    fn predict_tile(&self, _kernel: KernelKind, _n_train: usize, d: usize) -> usize {
-        if let Some(t) = self.predict_tile_override {
-            return t;
-        }
-        // Cache-sized eval panels, widened with the worker count so each
-        // kernel_matvec call has enough rows to split across threads.
-        let per_thread = (4 * PANEL_TARGET_BYTES / 8 / d.max(1)).clamp(64, 8192);
-        (self.threads * per_thread).clamp(256, 16384)
-    }
-
-    fn sap_stepper<'a>(
-        &'a self,
-        problem: &'a KrrProblem,
-        opts: &SapOptions,
-    ) -> anyhow::Result<Box<dyn SapStepper + 'a>> {
-        Ok(Box::new(HostSapStepper::new(self, problem, opts)))
+        tiles
     }
 }
 
@@ -785,8 +850,13 @@ struct StepScratch {
 
 /// Host f64 implementation of the fused SAP step — the twin of the
 /// `askotch_step` / `skotch_step` artifacts (`python/compile/model.py`).
+///
+/// Generic over the backend: every kernel product goes through the
+/// [`Backend`] trait, so the distributed backend reuses this exact
+/// stepper — same iterates, same RNG draws — with its sharded
+/// `kernel_block`/matvec underneath.
 pub struct HostSapStepper<'a> {
-    backend: &'a HostBackend,
+    backend: &'a dyn Backend,
     problem: &'a KrrProblem,
     b: usize,
     r: usize,
@@ -810,7 +880,11 @@ pub struct HostSapStepper<'a> {
 }
 
 impl<'a> HostSapStepper<'a> {
-    fn new(backend: &'a HostBackend, problem: &'a KrrProblem, opts: &SapOptions) -> Self {
+    pub(crate) fn new(
+        backend: &'a dyn Backend,
+        problem: &'a KrrProblem,
+        opts: &SapOptions,
+    ) -> Self {
         let n = problem.n();
         // Paper operating point: ~100 blocks per epoch, floored so tiny
         // problems still amortize the per-step Nystrom setup.
@@ -1012,11 +1086,10 @@ impl HostSapStepper<'_> {
             let sp_pre = crate::obs::span("precond");
             // Rank-r Nystrom B-factor from a per-thread-RNG Gaussian
             // test matrix (K_hat_BB = B B^T).
-            let omega = Mat {
-                rows: b,
-                cols: self.r,
-                data: self.backend.par_normal_slab(omega_seed, b * self.r),
-            };
+            // Serial draw (bit-identical to `par_normal_slab`): the
+            // sketch is rank-r-by-b, small next to the kernel products,
+            // and the free function keeps this stepper backend-generic.
+            let omega = Mat { rows: b, cols: self.r, data: normal_slab(omega_seed, b * self.r) };
             let b_factor = nystrom_b_factor(&kbb, omega)?;
             // One B^T B Gram serves both lambda_r and the Woodbury core
             // (the artifact computes its core once per step for the same

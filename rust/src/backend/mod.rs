@@ -27,9 +27,11 @@ use crate::kernels::fused::SlabRef;
 use crate::linalg::Mat;
 use crate::solvers::state::Checkpoint;
 
+pub mod dist;
 pub mod host;
 pub mod pjrt;
 
+pub use dist::{DistBackend, DistConfig, WorkerSpec};
 pub use host::HostBackend;
 pub use pjrt::PjrtBackend;
 
@@ -352,15 +354,20 @@ pub fn accel_params(n: usize, b: usize, lam: f64) -> (f64, f64, f64) {
 pub enum AnyBackend {
     Host(HostBackend),
     Pjrt(PjrtBackend),
+    Dist(DistBackend),
 }
 
 impl AnyBackend {
     /// Resolve a [`BackendKind`]: `Auto` picks PJRT when the artifact
-    /// manifest exists and the host engine otherwise.
+    /// manifest exists and the host engine otherwise. `Dist` needs a
+    /// worker fleet — use [`AnyBackend::dist`].
     pub fn from_kind(kind: BackendKind, artifacts_dir: &str) -> anyhow::Result<AnyBackend> {
         match kind {
             BackendKind::Host => Ok(AnyBackend::Host(HostBackend::auto_threads())),
             BackendKind::Pjrt => Ok(AnyBackend::Pjrt(PjrtBackend::from_manifest(artifacts_dir)?)),
+            BackendKind::Dist => anyhow::bail!(
+                "backend dist needs a worker fleet: pass --workers N or --worker-addrs LIST"
+            ),
             BackendKind::Auto => {
                 let manifest = std::path::Path::new(artifacts_dir).join("manifest.json");
                 if manifest.exists() {
@@ -372,6 +379,19 @@ impl AnyBackend {
         }
     }
 
+    /// The distributed backend: spawn `workers` local children of this
+    /// binary, or dial `worker_addrs` when non-empty. Preflights the
+    /// fleet so a bad address fails at startup, not mid-solve.
+    pub fn dist(workers: usize, worker_addrs: &[String]) -> anyhow::Result<AnyBackend> {
+        let b = if !worker_addrs.is_empty() {
+            DistBackend::dial(worker_addrs)?
+        } else {
+            DistBackend::spawn_local(std::env::current_exe()?, workers, 0)?
+        };
+        b.preflight()?;
+        Ok(AnyBackend::Dist(b))
+    }
+
     /// `Auto` resolution against the conventional `artifacts/` directory.
     pub fn auto(artifacts_dir: &str) -> anyhow::Result<AnyBackend> {
         Self::from_kind(BackendKind::Auto, artifacts_dir)
@@ -381,6 +401,7 @@ impl AnyBackend {
         match self {
             AnyBackend::Host(b) => b,
             AnyBackend::Pjrt(b) => b,
+            AnyBackend::Dist(b) => b,
         }
     }
 }

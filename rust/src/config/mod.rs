@@ -43,6 +43,9 @@ pub enum BackendKind {
     Host,
     /// AOT artifact engine; requires `make artifacts`.
     Pjrt,
+    /// Sharded distributed engine over worker processes
+    /// (`docs/DISTRIBUTED.md`); needs `workers`/`worker_addrs`.
+    Dist,
 }
 
 impl BackendKind {
@@ -51,6 +54,7 @@ impl BackendKind {
             BackendKind::Auto => "auto",
             BackendKind::Host => "host",
             BackendKind::Pjrt => "pjrt",
+            BackendKind::Dist => "dist",
         }
     }
 
@@ -59,7 +63,8 @@ impl BackendKind {
             "auto" => Ok(BackendKind::Auto),
             "host" => Ok(BackendKind::Host),
             "pjrt" | "artifact" | "artifacts" => Ok(BackendKind::Pjrt),
-            _ => anyhow::bail!("unknown backend {s:?} (auto|host|pjrt)"),
+            "dist" | "distributed" => Ok(BackendKind::Dist),
+            _ => anyhow::bail!("unknown backend {s:?} (auto|host|pjrt|dist)"),
         }
     }
 }
@@ -437,6 +442,12 @@ pub struct ExperimentConfig {
     pub track_residual: bool,
     /// Compute backend to dispatch the solve through.
     pub backend: BackendKind,
+    /// `backend = dist`: local worker processes to spawn (ignored when
+    /// `worker_addrs` is set; 0 with no addrs is a startup error).
+    pub workers: usize,
+    /// `backend = dist`: addresses of already-running `askotch worker`
+    /// processes, one shard each. Overrides `workers`.
+    pub worker_addrs: Vec<String>,
     /// Arithmetic precision for the hot kernel matvec path.
     pub precision: Precision,
     /// Checkpoint directory for resumable solves ("" = no checkpoints;
@@ -468,6 +479,8 @@ impl Default for ExperimentConfig {
             time_limit_secs: 600.0,
             track_residual: false,
             backend: BackendKind::Auto,
+            workers: 0,
+            worker_addrs: Vec::new(),
             precision: Precision::Auto,
             checkpoint_dir: String::new(),
             checkpoint_every: 0,
@@ -545,6 +558,13 @@ impl ExperimentConfig {
         if let Some(d) = root.opt_field("backend")? {
             c.backend =
                 BackendKind::parse(d.str()?).map_err(|e| anyhow::anyhow!("{}: {e}", d.path()))?;
+        }
+        if let Some(d) = root.opt_field("workers")? {
+            c.workers = d.usize()?;
+        }
+        if let Some(d) = root.opt_field("worker_addrs")? {
+            c.worker_addrs =
+                d.items()?.iter().map(|a| a.string()).collect::<Result<Vec<_>, _>>()?;
         }
         if let Some(d) = root.opt_field("precision")? {
             c.precision =

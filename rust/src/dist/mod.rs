@@ -1,0 +1,145 @@
+//! Distributed KRR: the protocol layer under
+//! [`crate::backend::DistBackend`].
+//!
+//! The host backend (PR 4/7) tops out at one machine's cores; this
+//! module is the scaling step ROADMAP names, mirroring the
+//! block-partitioned KRR of You, Demmel, Hsieh & Vuduc 2018: training
+//! rows are partitioned into **contiguous block-row shards**
+//! ([`shard_ranges`]), one per worker process, and every kernel
+//! product becomes scatter → per-shard fused panels → all-reduce.
+//!
+//! * [`proto`] — the request/response messages, encoded over the
+//!   length-prefixed binary frames of [`crate::net::wire`] (FNV-1a
+//!   checksummed, raw IEEE-754 bits like `model/slab.rs`).
+//! * [`worker`] — the worker process (`askotch worker --listen ADDR`):
+//!   owns a [`crate::backend::HostBackend`], holds the session slab
+//!   with its shard's `F32Slab`/row-norm caches built once at setup,
+//!   and serves block-row products until told to shut down.
+//!
+//! The coordinator side (session bring-up, scatter/reduce, heartbeat
+//! death detection, shard re-provisioning) lives in
+//! `backend/dist.rs`; `docs/DISTRIBUTED.md` has the full protocol,
+//! shard-layout, and failure-model reference.
+
+pub mod proto;
+pub mod worker;
+
+/// Wire protocol version, exchanged in `Hello`/`HelloAck`. A worker
+/// from a different build refuses the session instead of silently
+/// mis-decoding frames.
+pub const PROTO_VERSION: u32 = 1;
+
+/// Partition `n` rows into `workers` contiguous block-row shards,
+/// `[lo, hi)` per worker, sizes differing by at most one (the first
+/// `n % workers` shards take the extra row).
+///
+/// Refuses `workers == 0` and `workers > n`: the latter would leave
+/// empty tail shards — workers that hold no rows, contribute zero to
+/// every reduction, and hide a misconfigured fleet (a 64-worker
+/// session on a 40-row toy problem is a config bug, not a degenerate
+/// success).
+pub fn shard_ranges(n: usize, workers: usize) -> anyhow::Result<Vec<(usize, usize)>> {
+    anyhow::ensure!(workers > 0, "dist: worker count must be positive");
+    anyhow::ensure!(
+        workers <= n,
+        "dist: {workers} workers over {n} rows would leave empty tail shards; \
+         use at most {n} workers for this problem"
+    );
+    let base = n / workers;
+    let rem = n % workers;
+    let mut out = Vec::with_capacity(workers);
+    let mut lo = 0;
+    for w in 0..workers {
+        let hi = lo + base + usize::from(w < rem);
+        out.push((lo, hi));
+        lo = hi;
+    }
+    debug_assert_eq!(lo, n);
+    Ok(out)
+}
+
+/// Cheap content fingerprint of a slab: length plus FNV-1a over a few
+/// sampled windows (head, tail, and interior strides). Used as the
+/// session id, so a re-dialed worker re-provisioned with the same
+/// slab lands in the same session, and a *different* slab (problem
+/// changed under the backend) forces a fresh setup instead of serving
+/// stale rows.
+pub fn slab_fingerprint(x: &[f64]) -> u64 {
+    const WINDOW: usize = 128; // f64s per sampled window
+    let bytes = |lo: usize| {
+        let hi = (lo + WINDOW).min(x.len());
+        let mut buf = Vec::with_capacity((hi - lo) * 8);
+        for v in &x[lo..hi] {
+            buf.extend_from_slice(&v.to_bits().to_le_bytes());
+        }
+        buf
+    };
+    let mut h = crate::model::slab::fnv1a(&(x.len() as u64).to_le_bytes());
+    let samples = if x.len() <= 8 * WINDOW {
+        vec![0]
+    } else {
+        (0..8).map(|k| k * (x.len() - WINDOW) / 7).collect()
+    };
+    for lo in samples {
+        h ^= crate::model::slab::fnv1a(&bytes(lo));
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shard_ranges_even_split() {
+        let r = shard_ranges(12, 3).unwrap();
+        assert_eq!(r, vec![(0, 4), (4, 8), (8, 12)]);
+    }
+
+    #[test]
+    fn shard_ranges_uneven_split_spreads_remainder() {
+        // 10 rows over 4 workers: 3,3,2,2 — contiguous, covering, and
+        // never differing by more than one row.
+        let r = shard_ranges(10, 4).unwrap();
+        assert_eq!(r, vec![(0, 3), (3, 6), (6, 8), (8, 10)]);
+        for n in [1usize, 7, 97, 1000] {
+            for w in 1..=n.min(9) {
+                let r = shard_ranges(n, w).unwrap();
+                assert_eq!(r.len(), w);
+                assert_eq!(r[0].0, 0);
+                assert_eq!(r[w - 1].1, n);
+                let sizes: Vec<usize> = r.iter().map(|(lo, hi)| hi - lo).collect();
+                let (min, max) =
+                    (sizes.iter().min().unwrap(), sizes.iter().max().unwrap());
+                assert!(max - min <= 1, "n={n} w={w}: {sizes:?}");
+                for k in 1..w {
+                    assert_eq!(r[k - 1].1, r[k].0, "gap at {k}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn shard_ranges_rejects_empty_tail_and_zero_workers() {
+        assert!(shard_ranges(4, 0).is_err());
+        let err = shard_ranges(4, 5).unwrap_err().to_string();
+        assert!(err.contains("empty tail"), "{err}");
+        // Degenerate but legal: one row per worker.
+        assert_eq!(shard_ranges(3, 3).unwrap(), vec![(0, 1), (1, 2), (2, 3)]);
+    }
+
+    #[test]
+    fn fingerprint_sees_length_and_content() {
+        let a: Vec<f64> = (0..4096).map(|i| i as f64 * 0.5).collect();
+        let mut b = a.clone();
+        assert_eq!(slab_fingerprint(&a), slab_fingerprint(&b));
+        b[0] += 1.0;
+        assert_ne!(slab_fingerprint(&a), slab_fingerprint(&b));
+        assert_ne!(slab_fingerprint(&a), slab_fingerprint(&a[..4000]));
+        // Tail edits are sampled too.
+        let mut c = a.clone();
+        *c.last_mut().unwrap() = -7.0;
+        assert_ne!(slab_fingerprint(&a), slab_fingerprint(&c));
+    }
+}

@@ -1,0 +1,492 @@
+//! Request/response messages of the distributed protocol.
+//!
+//! Every message is one binary frame ([`crate::net::wire`]); this
+//! module owns the tag space and the payload encodings. Numeric slabs
+//! travel as raw little-endian IEEE-754 bit patterns — the
+//! `model/slab.rs` convention — so a round trip is bit-exact by
+//! construction; under an f32 session the hot-path `x1` slabs travel
+//! narrowed ([`Wr::put_f32s`]), tagged so a precision mismatch between
+//! coordinator and worker is a protocol error, never silent arithmetic
+//! drift.
+//!
+//! Requests carry the session id ([`crate::dist::slab_fingerprint`] of
+//! the training slab); a worker that does not hold that session
+//! answers [`tag::ERR`], which the coordinator treats as "re-provision
+//! and re-setup", not a solve abort.
+
+use crate::config::{KernelKind, Precision};
+
+/// Frame type tags. Requests are coordinator → worker; `VEC`/`TILES`/
+/// `ERR`/acks come back.
+pub mod tag {
+    pub const HELLO: u8 = 0x01;
+    pub const HELLO_ACK: u8 = 0x02;
+    pub const SETUP: u8 = 0x03;
+    pub const SETUP_ACK: u8 = 0x04;
+    /// Gather arm: `out[lo..hi] = K(X[lo..hi], X) v` — the worker's
+    /// block rows against the whole session slab.
+    pub const MATVEC_ROWS: u8 = 0x05;
+    /// Reduce arm: partial `K(x1, X[lo..hi]) v[lo..hi]` — sent rows
+    /// against the worker's shard columns.
+    pub const MATVEC_PART: u8 = 0x06;
+    /// Gather arm with a sent right slab: `K(X[lo..hi], x2) v`.
+    pub const MATVEC_ROWS_X2: u8 = 0x07;
+    /// Row panel of the cross matrix: `K(X[lo..hi], x2)`.
+    pub const MATRIX_ROWS: u8 = 0x08;
+    /// Symmetric-assembly tiles: the worker's round-robin share of the
+    /// upper-triangular tile-pair grid over `X[idx]`.
+    pub const BLOCK_TILES: u8 = 0x09;
+    pub const PING: u8 = 0x0a;
+    pub const PONG: u8 = 0x0b;
+    pub const SHUTDOWN: u8 = 0x0c;
+    pub const VEC: u8 = 0x10;
+    pub const TILES: u8 = 0x11;
+    pub const ERR: u8 = 0x1f;
+}
+
+// ---------------------------------------------------------------------------
+// Byte cursors
+// ---------------------------------------------------------------------------
+
+/// Payload writer: a `Vec<u8>` with typed little-endian appends.
+#[derive(Default)]
+pub struct Wr(pub Vec<u8>);
+
+impl Wr {
+    pub fn put_u8(&mut self, v: u8) {
+        self.0.push(v);
+    }
+    pub fn put_u32(&mut self, v: u32) {
+        self.0.extend_from_slice(&v.to_le_bytes());
+    }
+    pub fn put_u64(&mut self, v: u64) {
+        self.0.extend_from_slice(&v.to_le_bytes());
+    }
+    pub fn put_f64(&mut self, v: f64) {
+        self.0.extend_from_slice(&v.to_bits().to_le_bytes());
+    }
+    /// Length-prefixed f64 slab, raw bit patterns.
+    pub fn put_f64s(&mut self, v: &[f64]) {
+        self.put_u64(v.len() as u64);
+        self.0.reserve(v.len() * 8);
+        for x in v {
+            self.0.extend_from_slice(&x.to_bits().to_le_bytes());
+        }
+    }
+    /// Length-prefixed slab narrowed to f32 — half the bytes for the
+    /// mixed-precision hot path, widened back losslessly on receipt
+    /// (`f32 as f64` is exact, and the worker's panel engine narrows
+    /// again to the identical f32 the coordinator held).
+    pub fn put_f32s(&mut self, v: &[f64]) {
+        self.put_u64(v.len() as u64);
+        self.0.reserve(v.len() * 4);
+        for x in v {
+            self.0.extend_from_slice(&(*x as f32).to_bits().to_le_bytes());
+        }
+    }
+}
+
+/// Payload reader: a cursor with typed little-endian reads, erroring
+/// (never panicking) on short or trailing bytes.
+pub struct Rd<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Rd<'a> {
+    pub fn new(buf: &'a [u8]) -> Rd<'a> {
+        Rd { buf, pos: 0 }
+    }
+
+    fn take(&mut self, n: usize) -> anyhow::Result<&'a [u8]> {
+        anyhow::ensure!(
+            self.pos + n <= self.buf.len(),
+            "dist payload truncated: wanted {n} bytes at offset {}, have {}",
+            self.pos,
+            self.buf.len() - self.pos
+        );
+        let out = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(out)
+    }
+
+    pub fn get_u8(&mut self) -> anyhow::Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+    pub fn get_u32(&mut self) -> anyhow::Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+    pub fn get_u64(&mut self) -> anyhow::Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+    pub fn get_usize(&mut self) -> anyhow::Result<usize> {
+        Ok(self.get_u64()? as usize)
+    }
+    pub fn get_f64(&mut self) -> anyhow::Result<f64> {
+        Ok(f64::from_bits(u64::from_le_bytes(self.take(8)?.try_into().unwrap())))
+    }
+    pub fn get_f64s(&mut self) -> anyhow::Result<Vec<f64>> {
+        let n = self.get_usize()?;
+        let raw = self.take(n * 8)?;
+        Ok(raw
+            .chunks_exact(8)
+            .map(|c| f64::from_bits(u64::from_le_bytes(c.try_into().unwrap())))
+            .collect())
+    }
+    pub fn get_f32s(&mut self) -> anyhow::Result<Vec<f64>> {
+        let n = self.get_usize()?;
+        let raw = self.take(n * 4)?;
+        Ok(raw
+            .chunks_exact(4)
+            .map(|c| f32::from_bits(u32::from_le_bytes(c.try_into().unwrap())) as f64)
+            .collect())
+    }
+    /// Every byte must be consumed — trailing garbage means the two
+    /// ends disagree about the message layout.
+    pub fn finish(self) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            self.pos == self.buf.len(),
+            "dist payload has {} trailing bytes (layout mismatch)",
+            self.buf.len() - self.pos
+        );
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Enum codes
+// ---------------------------------------------------------------------------
+
+/// Stable wire code for a kernel family (independent of enum order).
+pub fn kernel_code(k: KernelKind) -> u8 {
+    match k {
+        KernelKind::Rbf => 0,
+        KernelKind::Laplacian => 1,
+        KernelKind::Matern52 => 2,
+    }
+}
+
+pub fn kernel_from_code(c: u8) -> anyhow::Result<KernelKind> {
+    match c {
+        0 => Ok(KernelKind::Rbf),
+        1 => Ok(KernelKind::Laplacian),
+        2 => Ok(KernelKind::Matern52),
+        _ => anyhow::bail!("dist: unknown kernel code {c}"),
+    }
+}
+
+/// Precision tag: the literal bit width, so a hexdump reads itself.
+pub fn precision_code(p: Precision) -> u8 {
+    match p {
+        Precision::F32 => 32,
+        // `Auto` resolves to f64 everywhere else in the stack.
+        Precision::F64 | Precision::Auto => 64,
+    }
+}
+
+pub fn precision_from_code(c: u8) -> anyhow::Result<Precision> {
+    match c {
+        32 => Ok(Precision::F32),
+        64 => Ok(Precision::F64),
+        _ => anyhow::bail!("dist: unknown precision tag {c} (expected 32 or 64)"),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Messages
+// ---------------------------------------------------------------------------
+
+/// `HELLO` / `HELLO_ACK`: version handshake, both directions.
+pub struct Hello {
+    pub version: u32,
+}
+
+impl Hello {
+    pub fn encode(&self) -> Vec<u8> {
+        let mut w = Wr::default();
+        w.put_u32(self.version);
+        w.0
+    }
+    pub fn decode(buf: &[u8]) -> anyhow::Result<Hello> {
+        let mut r = Rd::new(buf);
+        let version = r.get_u32()?;
+        r.finish()?;
+        Ok(Hello { version })
+    }
+}
+
+/// `SETUP`: provision one worker with the session slab and its shard
+/// range. The full row-major slab ships (block-row products with the
+/// session slab on the *left* need every row as columns); the worker
+/// builds its shard-scoped caches — shard `F32Slab` under f32, row
+/// norms — once, here, never per-request.
+pub struct Setup {
+    pub session: u64,
+    pub precision: Precision,
+    pub d: usize,
+    pub n: usize,
+    /// This worker's shard `[lo, hi)`.
+    pub lo: usize,
+    pub hi: usize,
+    pub x: Vec<f64>,
+}
+
+impl Setup {
+    pub fn encode(&self) -> Vec<u8> {
+        let mut w = Wr::default();
+        w.put_u64(self.session);
+        w.put_u8(precision_code(self.precision));
+        w.put_u64(self.d as u64);
+        w.put_u64(self.n as u64);
+        w.put_u64(self.lo as u64);
+        w.put_u64(self.hi as u64);
+        w.put_f64s(&self.x);
+        w.0
+    }
+
+    pub fn decode(buf: &[u8]) -> anyhow::Result<Setup> {
+        let mut r = Rd::new(buf);
+        let session = r.get_u64()?;
+        let precision = precision_from_code(r.get_u8()?)?;
+        let d = r.get_usize()?;
+        let n = r.get_usize()?;
+        let lo = r.get_usize()?;
+        let hi = r.get_usize()?;
+        let x = r.get_f64s()?;
+        r.finish()?;
+        anyhow::ensure!(d > 0 && n > 0, "dist setup: empty slab (n={n}, d={d})");
+        anyhow::ensure!(
+            x.len() == n * d,
+            "dist setup: slab is {} values, header says {n}x{d}",
+            x.len()
+        );
+        anyhow::ensure!(lo < hi && hi <= n, "dist setup: bad shard [{lo}, {hi}) of {n}");
+        Ok(Setup { session, precision, d, n, lo, hi, x })
+    }
+}
+
+/// `SETUP_ACK`: the worker echoes the session id and the precision it
+/// built its caches under — the coordinator refuses the ack when the
+/// tags disagree (f32/f64 agreement across the wire is checked here,
+/// not discovered as drift mid-solve).
+pub struct SetupAck {
+    pub session: u64,
+    pub precision: Precision,
+    pub rows: usize,
+}
+
+impl SetupAck {
+    pub fn encode(&self) -> Vec<u8> {
+        let mut w = Wr::default();
+        w.put_u64(self.session);
+        w.put_u8(precision_code(self.precision));
+        w.put_u64(self.rows as u64);
+        w.0
+    }
+    pub fn decode(buf: &[u8]) -> anyhow::Result<SetupAck> {
+        let mut r = Rd::new(buf);
+        let session = r.get_u64()?;
+        let precision = precision_from_code(r.get_u8()?)?;
+        let rows = r.get_usize()?;
+        r.finish()?;
+        Ok(SetupAck { session, precision, rows })
+    }
+}
+
+/// Shared head of every compute request: which session, which kernel
+/// arithmetic, and whether the exact-f64 arm was demanded (the
+/// refinement path under `--precision f32`).
+pub struct OpHead {
+    pub session: u64,
+    pub kernel: KernelKind,
+    pub sigma: f64,
+    pub exact: bool,
+}
+
+impl OpHead {
+    pub fn put(&self, w: &mut Wr) {
+        w.put_u64(self.session);
+        w.put_u8(kernel_code(self.kernel));
+        w.put_f64(self.sigma);
+        w.put_u8(self.exact as u8);
+    }
+    pub fn get(r: &mut Rd<'_>) -> anyhow::Result<OpHead> {
+        Ok(OpHead {
+            session: r.get_u64()?,
+            kernel: kernel_from_code(r.get_u8()?)?,
+            sigma: r.get_f64()?,
+            exact: r.get_u8()? != 0,
+        })
+    }
+}
+
+/// An `x1`/`x2` slab attached to a request, precision-tagged. The tag
+/// must match the session's: a worker holding f64 caches must not
+/// silently serve an f32-narrowed slab (or vice versa).
+pub struct TaggedSlab {
+    pub precision: Precision,
+    pub x: Vec<f64>,
+}
+
+impl TaggedSlab {
+    pub fn put(w: &mut Wr, precision: Precision, x: &[f64]) {
+        w.put_u8(precision_code(precision));
+        match precision {
+            Precision::F32 => w.put_f32s(x),
+            _ => w.put_f64s(x),
+        }
+    }
+    pub fn get(r: &mut Rd<'_>) -> anyhow::Result<TaggedSlab> {
+        let precision = precision_from_code(r.get_u8()?)?;
+        let x = match precision {
+            Precision::F32 => r.get_f32s()?,
+            _ => r.get_f64s()?,
+        };
+        Ok(TaggedSlab { precision, x })
+    }
+}
+
+/// `VEC` response: one f64 vector (matvec partials, gathered rows, or
+/// a row-major matrix panel).
+pub fn vec_response(v: &[f64]) -> Vec<u8> {
+    let mut w = Wr::default();
+    w.put_f64s(v);
+    w.0
+}
+
+pub fn decode_vec(buf: &[u8]) -> anyhow::Result<Vec<f64>> {
+    let mut r = Rd::new(buf);
+    let v = r.get_f64s()?;
+    r.finish()?;
+    Ok(v)
+}
+
+/// `TILES` response: the worker's share of symmetric-assembly tiles,
+/// each `(ti, tj, row-major buffer)` in the coordinator's tile grid.
+pub fn tiles_response(tiles: &[(usize, usize, Vec<f64>)]) -> Vec<u8> {
+    let mut w = Wr::default();
+    w.put_u64(tiles.len() as u64);
+    for (ti, tj, buf) in tiles {
+        w.put_u64(*ti as u64);
+        w.put_u64(*tj as u64);
+        w.put_f64s(buf);
+    }
+    w.0
+}
+
+pub fn decode_tiles(buf: &[u8]) -> anyhow::Result<Vec<(usize, usize, Vec<f64>)>> {
+    let mut r = Rd::new(buf);
+    let count = r.get_usize()?;
+    let mut out = Vec::with_capacity(count);
+    for _ in 0..count {
+        let ti = r.get_usize()?;
+        let tj = r.get_usize()?;
+        out.push((ti, tj, r.get_f64s()?));
+    }
+    r.finish()?;
+    Ok(out)
+}
+
+/// `ERR` response: a UTF-8 message. Logical errors (bad session, shape
+/// mismatch) come back this way and abort the op; only *transport*
+/// failures trigger re-provisioning.
+pub fn err_response(msg: &str) -> Vec<u8> {
+    msg.as_bytes().to_vec()
+}
+
+pub fn decode_err(buf: &[u8]) -> String {
+    String::from_utf8_lossy(buf).into_owned()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cursor_round_trip_and_truncation() {
+        let mut w = Wr::default();
+        w.put_u8(7);
+        w.put_u32(0xdead_beef);
+        w.put_u64(u64::MAX - 1);
+        w.put_f64(-0.0);
+        w.put_f64s(&[1.5, f64::NAN, 3e300]);
+        let buf = w.0;
+        let mut r = Rd::new(&buf);
+        assert_eq!(r.get_u8().unwrap(), 7);
+        assert_eq!(r.get_u32().unwrap(), 0xdead_beef);
+        assert_eq!(r.get_u64().unwrap(), u64::MAX - 1);
+        assert_eq!(r.get_f64().unwrap().to_bits(), (-0.0f64).to_bits());
+        let v = r.get_f64s().unwrap();
+        assert_eq!(v.len(), 3);
+        assert!(v[1].is_nan()); // bit-exact slabs carry NaN through
+        r.finish().unwrap();
+
+        let mut r = Rd::new(&buf[..buf.len() - 1]);
+        r.get_u8().unwrap();
+        r.get_u32().unwrap();
+        r.get_u64().unwrap();
+        r.get_f64().unwrap();
+        assert!(r.get_f64s().is_err());
+        let mut r = Rd::new(&buf);
+        r.get_u8().unwrap();
+        assert!(r.finish().is_err(), "trailing bytes must be refused");
+    }
+
+    #[test]
+    fn f32_slabs_narrow_once_and_widen_losslessly() {
+        let x = vec![0.1, -2.5, 1e-20, 3.0e7];
+        let mut w = Wr::default();
+        w.put_f32s(&x);
+        let mut r = Rd::new(&w.0);
+        let back = r.get_f32s().unwrap();
+        r.finish().unwrap();
+        for (orig, got) in x.iter().zip(&back) {
+            // The wire narrows exactly once: widened value == f32(orig),
+            // and re-narrowing is idempotent.
+            assert_eq!(*got, *orig as f32 as f64);
+            assert_eq!(*got as f32, *orig as f32);
+        }
+    }
+
+    #[test]
+    fn setup_round_trip_and_validation() {
+        let s = Setup {
+            session: 42,
+            precision: Precision::F32,
+            d: 3,
+            n: 4,
+            lo: 1,
+            hi: 3,
+            x: (0..12).map(|i| i as f64).collect(),
+        };
+        let back = Setup::decode(&s.encode()).unwrap();
+        assert_eq!(back.session, 42);
+        assert_eq!(back.precision, Precision::F32);
+        assert_eq!((back.d, back.n, back.lo, back.hi), (3, 4, 1, 3));
+        assert_eq!(back.x, s.x);
+
+        // Header/slab disagreement is refused.
+        let mut bad = Setup { n: 5, ..Setup::decode(&s.encode()).unwrap() };
+        bad.hi = 4;
+        assert!(Setup::decode(&bad.encode()).is_err());
+    }
+
+    #[test]
+    fn precision_codes_are_bit_widths() {
+        assert_eq!(precision_code(Precision::F32), 32);
+        assert_eq!(precision_code(Precision::F64), 64);
+        assert_eq!(precision_code(Precision::Auto), 64);
+        assert!(precision_from_code(16).is_err());
+        for k in [KernelKind::Rbf, KernelKind::Laplacian, KernelKind::Matern52] {
+            assert_eq!(kernel_from_code(kernel_code(k)).unwrap(), k);
+        }
+        assert!(kernel_from_code(9).is_err());
+    }
+
+    #[test]
+    fn tiles_round_trip() {
+        let tiles = vec![(0usize, 1usize, vec![1.0, 2.0]), (2, 2, vec![-0.5])];
+        let back = decode_tiles(&tiles_response(&tiles)).unwrap();
+        assert_eq!(back, tiles);
+    }
+}

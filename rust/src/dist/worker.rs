@@ -1,0 +1,496 @@
+//! The distributed worker: one process (or in-process thread) serving
+//! block-row kernel products for its shard.
+//!
+//! A worker is deliberately dumb: it holds no solver state, only the
+//! session slab and its shard caches, and answers pure compute
+//! requests. That is what makes the coordinator's recovery story
+//! simple — a dead worker is replaced by re-running `SETUP` on a fresh
+//! one, and any in-flight request can be retried verbatim because
+//! every request is deterministic in its payload.
+//!
+//! Each accepted connection is its own session (setup per connection),
+//! so a re-dialed replacement worker starts clean instead of
+//! inheriting half-torn state. Compute runs on a [`HostBackend`] with
+//! the worker's thread budget; the arithmetic is exactly the host
+//! engine's, which is what the parity guarantees in
+//! `docs/DISTRIBUTED.md` lean on.
+
+use std::io::{BufReader, BufWriter, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+
+use crate::backend::{Backend, HostBackend};
+use crate::config::Precision;
+use crate::dist::proto::{self, tag, OpHead, Rd, TaggedSlab, Wr};
+use crate::dist::PROTO_VERSION;
+use crate::kernels::fused::{self, F32Slab, SlabRef};
+use crate::net::wire::{read_frame, write_frame, MAX_FRAME_BYTES};
+
+/// How a worker serves.
+#[derive(Debug, Clone)]
+pub struct WorkerOptions {
+    /// Compute threads for the worker's [`HostBackend`] (0 = all cores).
+    pub threads: usize,
+    /// Exit the process when a `SHUTDOWN` frame arrives — the spawned
+    /// `askotch worker` mode. In-process test workers leave this off
+    /// and just close the connection.
+    pub exit_on_shutdown: bool,
+}
+
+impl Default for WorkerOptions {
+    fn default() -> Self {
+        WorkerOptions { threads: 0, exit_on_shutdown: false }
+    }
+}
+
+/// One provisioned session: the full slab plus shard-scoped caches,
+/// built once at `SETUP` and reused by every request on the
+/// connection.
+struct Session {
+    id: u64,
+    precision: Precision,
+    backend: HostBackend,
+    d: usize,
+    n: usize,
+    lo: usize,
+    hi: usize,
+    /// Full row-major session slab: block-row products need every row
+    /// of `X` as columns, so shard-only storage cannot serve them.
+    x: Vec<f64>,
+    /// Full squared row norms (f64) — row-local, so the shard slice
+    /// `sq[lo..hi]` is bitwise the norms a shard-only build would get.
+    sq: Vec<f64>,
+    /// f32 mirror of the full slab (gather arm: `x2` = whole session),
+    /// built only under an f32 session.
+    fp32_full: Option<F32Slab>,
+    /// f32 mirror of the shard rows (reduce arm: `x2` = this shard).
+    fp32_shard: Option<F32Slab>,
+}
+
+impl Session {
+    fn build(setup: proto::Setup, threads: usize) -> Session {
+        let proto::Setup { session, precision, d, n, lo, hi, x } = setup;
+        let backend = HostBackend::new(threads).with_precision(precision);
+        let sq = crate::backend::host::par_sq_norms(&x, n, d, backend.threads());
+        let (fp32_full, fp32_shard) = if backend.precision() == Precision::F32 {
+            // Norms ride along even for norm-free kernels: the session
+            // does not know which kernels its ops will ask for.
+            let full = F32Slab::build(&x, n, d, true);
+            let shard = F32Slab::build(&x[lo * d..hi * d], hi - lo, d, true);
+            (Some(full), Some(shard))
+        } else {
+            (None, None)
+        };
+        Session { id: session, precision, backend, d, n, lo, hi, x, sq, fp32_full, fp32_shard }
+    }
+
+    fn shard_rows(&self) -> &[f64] {
+        &self.x[self.lo * self.d..self.hi * self.d]
+    }
+
+    /// Validate a request head against this session; hot (non-exact)
+    /// requests must also match the session precision on any slab they
+    /// carry.
+    fn check(&self, op: &OpHead) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            op.session == self.id,
+            "unknown session {:#018x} (serving {:#018x})",
+            op.session,
+            self.id
+        );
+        Ok(())
+    }
+
+    fn check_slab(&self, op: &OpHead, slab: &TaggedSlab) -> anyhow::Result<()> {
+        let want = if op.exact { Precision::F64 } else { self.precision };
+        anyhow::ensure!(
+            slab.precision == want,
+            "precision tag mismatch: slab is {}-bit, session wants {}-bit{}",
+            proto::precision_code(slab.precision),
+            proto::precision_code(want),
+            if op.exact { " (exact op)" } else { "" }
+        );
+        Ok(())
+    }
+}
+
+/// Dispatch one request frame; `Ok` is `(response tag, payload)`.
+/// Logical failures become `ERR` frames at the caller.
+fn handle(
+    session: &mut Option<Session>,
+    threads: usize,
+    req_tag: u8,
+    payload: &[u8],
+) -> anyhow::Result<(u8, Vec<u8>)> {
+    match req_tag {
+        tag::HELLO => {
+            let hello = proto::Hello::decode(payload)?;
+            anyhow::ensure!(
+                hello.version == PROTO_VERSION,
+                "protocol version mismatch: coordinator speaks v{}, worker v{PROTO_VERSION}",
+                hello.version
+            );
+            Ok((tag::HELLO_ACK, proto::Hello { version: PROTO_VERSION }.encode()))
+        }
+        tag::SETUP => {
+            let setup = proto::Setup::decode(payload)?;
+            let s = Session::build(setup, threads);
+            let ack = proto::SetupAck {
+                session: s.id,
+                precision: s.precision,
+                rows: s.hi - s.lo,
+            };
+            *session = Some(s);
+            Ok((tag::SETUP_ACK, ack.encode()))
+        }
+        tag::PING => Ok((tag::PONG, Vec::new())),
+        _ => {
+            let s = session.as_ref().ok_or_else(|| {
+                anyhow::anyhow!("request {req_tag:#04x} before setup (no session)")
+            })?;
+            compute(s, req_tag, payload)
+        }
+    }
+}
+
+/// The compute requests proper — everything that needs a live session.
+fn compute(s: &Session, req_tag: u8, payload: &[u8]) -> anyhow::Result<(u8, Vec<u8>)> {
+    let mut r = Rd::new(payload);
+    let op = OpHead::get(&mut r)?;
+    s.check(&op)?;
+    let h = &s.backend;
+    let rows = s.hi - s.lo;
+    match req_tag {
+        // Gather arm: out[lo..hi] = K(X[lo..hi], X) v.
+        tag::MATVEC_ROWS => {
+            let v = r.get_f64s()?;
+            r.finish()?;
+            anyhow::ensure!(v.len() == s.n, "matvec v has {} entries, n = {}", v.len(), s.n);
+            let out = if op.exact || s.precision != Precision::F32 {
+                h.kernel_matvec_with_norms(
+                    op.kernel,
+                    s.shard_rows(),
+                    rows,
+                    &s.x,
+                    s.n,
+                    s.d,
+                    &v,
+                    op.sigma,
+                    Some(&s.sq),
+                )?
+            } else {
+                h.kernel_matvec_cached(
+                    op.kernel,
+                    s.shard_rows(),
+                    rows,
+                    &s.x,
+                    s.n,
+                    s.d,
+                    &v,
+                    op.sigma,
+                    SlabRef { sq: Some(&s.sq), fp32: s.fp32_full.as_ref() },
+                )?
+            };
+            Ok((tag::VEC, proto::vec_response(&out)))
+        }
+        // Reduce arm: partial K(x1, X[lo..hi]) v[lo..hi].
+        tag::MATVEC_PART => {
+            let n1 = r.get_usize()?;
+            let x1 = TaggedSlab::get(&mut r)?;
+            let v = r.get_f64s()?;
+            r.finish()?;
+            s.check_slab(&op, &x1)?;
+            anyhow::ensure!(
+                x1.x.len() == n1 * s.d,
+                "matvec_part x1 is {} values, header says {n1}x{}",
+                x1.x.len(),
+                s.d
+            );
+            anyhow::ensure!(v.len() == rows, "matvec_part v has {} entries, shard has {rows}", v.len());
+            let x2 = s.shard_rows();
+            let sq = &s.sq[s.lo..s.hi];
+            let out = if op.exact || s.precision != Precision::F32 {
+                h.kernel_matvec_with_norms(
+                    op.kernel, &x1.x, n1, x2, rows, s.d, &v, op.sigma, Some(sq),
+                )?
+            } else {
+                h.kernel_matvec_cached(
+                    op.kernel,
+                    &x1.x,
+                    n1,
+                    x2,
+                    rows,
+                    s.d,
+                    &v,
+                    op.sigma,
+                    SlabRef { sq: Some(sq), fp32: s.fp32_shard.as_ref() },
+                )?
+            };
+            Ok((tag::VEC, proto::vec_response(&out)))
+        }
+        // Gather arm against a sent right slab: out[lo..hi] = K(X[lo..hi], x2) v.
+        tag::MATVEC_ROWS_X2 => {
+            let n2 = r.get_usize()?;
+            let x2 = TaggedSlab::get(&mut r)?;
+            let v = r.get_f64s()?;
+            r.finish()?;
+            s.check_slab(&op, &x2)?;
+            anyhow::ensure!(
+                x2.x.len() == n2 * s.d,
+                "matvec_rows_x2 x2 is {} values, header says {n2}x{}",
+                x2.x.len(),
+                s.d
+            );
+            anyhow::ensure!(v.len() == n2, "matvec_rows_x2 v has {} entries, n2 = {n2}", v.len());
+            let out = if op.exact || s.precision != Precision::F32 {
+                h.kernel_matvec_with_norms(
+                    op.kernel,
+                    s.shard_rows(),
+                    rows,
+                    &x2.x,
+                    n2,
+                    s.d,
+                    &v,
+                    op.sigma,
+                    None,
+                )?
+            } else {
+                // The sent slab narrowed exactly once on the wire, so
+                // this f32 mirror is bitwise the coordinator's local
+                // cache of the same slab.
+                let f32_x2 =
+                    F32Slab::build(&x2.x, n2, s.d, fused::uses_norms(op.kernel));
+                h.kernel_matvec_cached(
+                    op.kernel,
+                    s.shard_rows(),
+                    rows,
+                    &x2.x,
+                    n2,
+                    s.d,
+                    &v,
+                    op.sigma,
+                    SlabRef { sq: None, fp32: Some(&f32_x2) },
+                )?
+            };
+            Ok((tag::VEC, proto::vec_response(&out)))
+        }
+        // Row panel of the cross matrix (always f64 — assembly paths).
+        tag::MATRIX_ROWS => {
+            let n2 = r.get_usize()?;
+            let x2 = TaggedSlab::get(&mut r)?;
+            r.finish()?;
+            anyhow::ensure!(
+                x2.precision != Precision::F32,
+                "matrix_rows slabs travel f64 (assembly is exact); got a 32-bit tag"
+            );
+            anyhow::ensure!(
+                x2.x.len() == n2 * s.d,
+                "matrix_rows x2 is {} values, header says {n2}x{}",
+                x2.x.len(),
+                s.d
+            );
+            let panel = h.kernel_matrix(op.kernel, s.shard_rows(), rows, &x2.x, n2, s.d, op.sigma);
+            Ok((tag::VEC, proto::vec_response(&panel.data)))
+        }
+        // Round-robin share of the symmetric-assembly tile grid.
+        tag::BLOCK_TILES => {
+            let tile = r.get_usize()?;
+            let take = r.get_usize()?;
+            let step = r.get_usize()?;
+            let count = r.get_usize()?;
+            let mut idx = Vec::with_capacity(count);
+            for _ in 0..count {
+                let i = r.get_usize()?;
+                anyhow::ensure!(i < s.n, "block index {i} out of range (n = {})", s.n);
+                idx.push(i);
+            }
+            r.finish()?;
+            anyhow::ensure!(step > 0 && tile > 0, "block_tiles: tile/step must be positive");
+            // Mirror the coordinator's tile edge so both ends walk the
+            // same grid; per-tile values are independent of who
+            // computes them.
+            let hb = HostBackend::new(h.threads())
+                .with_precision(s.precision)
+                .with_assembly_tile(tile);
+            let tiles = hb.kernel_block_tiles(op.kernel, &s.x, s.d, &idx, op.sigma, take, step);
+            Ok((tag::TILES, proto::tiles_response(&tiles)))
+        }
+        _ => anyhow::bail!("unknown request tag {req_tag:#04x}"),
+    }
+}
+
+/// Serve one connection until EOF or `SHUTDOWN`. Returns whether a
+/// `SHUTDOWN` frame asked the whole worker to stop.
+fn serve_conn(stream: TcpStream, opts: &WorkerOptions) -> anyhow::Result<bool> {
+    stream.set_nodelay(true).ok();
+    let mut reader = BufReader::new(stream.try_clone()?);
+    let mut writer = BufWriter::new(stream);
+    let mut session: Option<Session> = None;
+    loop {
+        let (req_tag, payload) = match read_frame(&mut reader, MAX_FRAME_BYTES)? {
+            Some(f) => f,
+            None => return Ok(false), // clean EOF: coordinator hung up
+        };
+        if req_tag == tag::SHUTDOWN {
+            return Ok(true);
+        }
+        match handle(&mut session, opts.threads, req_tag, &payload) {
+            Ok((resp_tag, resp)) => {
+                write_frame(&mut writer, resp_tag, &resp)?;
+            }
+            Err(e) => {
+                // Logical error: report it and keep serving. The
+                // connection itself is healthy.
+                write_frame(&mut writer, tag::ERR, &proto::err_response(&format!("{e:#}")))?;
+            }
+        }
+        writer.flush()?;
+    }
+}
+
+/// Accept loop: serve every connection (one thread each) until a
+/// `SHUTDOWN` frame arrives with `exit_on_shutdown` set.
+pub fn serve(listener: TcpListener, opts: WorkerOptions) -> anyhow::Result<()> {
+    for stream in listener.incoming() {
+        let stream = match stream {
+            Ok(s) => s,
+            Err(_) => continue,
+        };
+        let conn_opts = opts.clone();
+        std::thread::spawn(move || match serve_conn(stream, &conn_opts) {
+            Ok(true) if conn_opts.exit_on_shutdown => std::process::exit(0),
+            Ok(_) => {}
+            Err(e) => eprintln!("askotch worker: connection error: {e:#}"),
+        });
+    }
+    Ok(())
+}
+
+/// Spawn an in-process worker on a loopback port — the unit-test and
+/// bench harness (no child processes, no binary path). The accept
+/// thread is detached; it dies with the process, and each coordinator
+/// connection is shut down by the normal `SHUTDOWN`/EOF path.
+pub fn spawn_in_process(threads: usize) -> anyhow::Result<SocketAddr> {
+    let listener = TcpListener::bind(("127.0.0.1", 0))?;
+    let addr = listener.local_addr()?;
+    std::thread::spawn(move || {
+        let _ = serve(listener, WorkerOptions { threads, exit_on_shutdown: false });
+    });
+    Ok(addr)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::KernelKind;
+
+    fn dial(addr: SocketAddr) -> (BufReader<TcpStream>, BufWriter<TcpStream>) {
+        let s = TcpStream::connect(addr).unwrap();
+        (BufReader::new(s.try_clone().unwrap()), BufWriter::new(s))
+    }
+
+    fn rpc(
+        r: &mut BufReader<TcpStream>,
+        w: &mut BufWriter<TcpStream>,
+        tag: u8,
+        payload: &[u8],
+    ) -> (u8, Vec<u8>) {
+        write_frame(w, tag, payload).unwrap();
+        w.flush().unwrap();
+        read_frame(r, MAX_FRAME_BYTES).unwrap().expect("worker closed connection")
+    }
+
+    #[test]
+    fn worker_session_lifecycle_and_errors() {
+        let addr = spawn_in_process(1).unwrap();
+        let (mut r, mut w) = dial(addr);
+
+        // Version handshake.
+        let (t, p) = rpc(&mut r, &mut w, tag::HELLO, &proto::Hello { version: PROTO_VERSION }.encode());
+        assert_eq!(t, tag::HELLO_ACK);
+        assert_eq!(proto::Hello::decode(&p).unwrap().version, PROTO_VERSION);
+        let (t, p) =
+            rpc(&mut r, &mut w, tag::HELLO, &proto::Hello { version: 999 }.encode());
+        assert_eq!(t, tag::ERR);
+        assert!(proto::decode_err(&p).contains("version mismatch"));
+
+        // Compute before setup is a logical error, not a hangup.
+        let mut wr = Wr::default();
+        OpHead { session: 1, kernel: KernelKind::Rbf, sigma: 1.0, exact: false }.put(&mut wr);
+        wr.put_f64s(&[1.0]);
+        let (t, p) = rpc(&mut r, &mut w, tag::MATVEC_ROWS, &wr.0);
+        assert_eq!(t, tag::ERR);
+        assert!(proto::decode_err(&p).contains("before setup"));
+
+        // Provision rows [1, 3) of a 4x2 slab and run a gather matvec.
+        let x: Vec<f64> = (0..8).map(|i| i as f64 * 0.25).collect();
+        let setup = proto::Setup {
+            session: 7,
+            precision: Precision::F64,
+            d: 2,
+            n: 4,
+            lo: 1,
+            hi: 3,
+            x: x.clone(),
+        };
+        let (t, p) = rpc(&mut r, &mut w, tag::SETUP, &setup.encode());
+        assert_eq!(t, tag::SETUP_ACK);
+        let ack = proto::SetupAck::decode(&p).unwrap();
+        assert_eq!((ack.session, ack.rows), (7, 2));
+
+        let v = vec![0.5, -1.0, 2.0, 0.25];
+        let mut wr = Wr::default();
+        OpHead { session: 7, kernel: KernelKind::Rbf, sigma: 1.3, exact: false }.put(&mut wr);
+        wr.put_f64s(&v);
+        let (t, p) = rpc(&mut r, &mut w, tag::MATVEC_ROWS, &wr.0);
+        assert_eq!(t, tag::VEC);
+        let got = proto::decode_vec(&p).unwrap();
+        let h = HostBackend::new(1);
+        let want = h
+            .kernel_matvec_with_norms(KernelKind::Rbf, &x[2..6], 2, &x, 4, 2, &v, 1.3, None)
+            .unwrap();
+        assert_eq!(got.len(), 2);
+        for (g, e) in got.iter().zip(&want) {
+            assert_eq!(g.to_bits(), e.to_bits(), "gather rows must be bit-identical");
+        }
+
+        // Wrong session id → ERR, session keeps serving.
+        let mut wr = Wr::default();
+        OpHead { session: 99, kernel: KernelKind::Rbf, sigma: 1.3, exact: false }.put(&mut wr);
+        wr.put_f64s(&v);
+        let (t, p) = rpc(&mut r, &mut w, tag::MATVEC_ROWS, &wr.0);
+        assert_eq!(t, tag::ERR);
+        assert!(proto::decode_err(&p).contains("unknown session"));
+
+        // Ping still answers after the error.
+        let (t, _) = rpc(&mut r, &mut w, tag::PING, &[]);
+        assert_eq!(t, tag::PONG);
+    }
+
+    #[test]
+    fn worker_rejects_precision_tag_mismatch() {
+        let addr = spawn_in_process(1).unwrap();
+        let (mut r, mut w) = dial(addr);
+        let x: Vec<f64> = (0..12).map(|i| (i as f64).sin()).collect();
+        let setup = proto::Setup {
+            session: 3,
+            precision: Precision::F64,
+            d: 3,
+            n: 4,
+            lo: 0,
+            hi: 2,
+            x,
+        };
+        let (t, _) = rpc(&mut r, &mut w, tag::SETUP, &setup.encode());
+        assert_eq!(t, tag::SETUP_ACK);
+
+        // f32-tagged x1 into an f64 session: refused, loudly.
+        let mut wr = Wr::default();
+        OpHead { session: 3, kernel: KernelKind::Rbf, sigma: 1.0, exact: false }.put(&mut wr);
+        wr.put_u64(1);
+        TaggedSlab::put(&mut wr, Precision::F32, &[0.5, 0.25, 0.125]);
+        wr.put_f64s(&[1.0, 1.0]);
+        let (t, p) = rpc(&mut r, &mut w, tag::MATVEC_PART, &wr.0);
+        assert_eq!(t, tag::ERR);
+        assert!(proto::decode_err(&p).contains("precision tag mismatch"), "{}", proto::decode_err(&p));
+    }
+}

@@ -51,6 +51,7 @@
 //! | [`config`]    | Experiment configuration (kernels, solvers, budgets, backend), JSON decode |
 //! | [`coordinator`] | Problem setup and the solver event loop |
 //! | [`data`]      | Synthetic testbed generators, CSV loading, preprocessing |
+//! | [`dist`]      | Distributed protocol + worker: block-row shards, binary frames, restart-tolerant sessions (`docs/DISTRIBUTED.md`) |
 //! | [`fault`]     | Deterministic, seedable fault injection for the chaos drills (`docs/ROBUSTNESS.md`) |
 //! | [`json`]      | First-class JSON subsystem: strict parser, printers, typed `FromJson`/`ToJson` |
 //! | [`kernels`]   | Exact scalar kernel evaluation (oracles, reference paths) |
@@ -78,6 +79,7 @@ pub mod backend;
 pub mod config;
 pub mod coordinator;
 pub mod data;
+pub mod dist;
 pub mod fault;
 pub mod json;
 pub mod kernels;
@@ -96,7 +98,7 @@ pub mod util;
 
 /// Convenience re-exports covering the common workflow.
 pub mod prelude {
-    pub use crate::backend::{AnyBackend, Backend, HostBackend, PjrtBackend};
+    pub use crate::backend::{AnyBackend, Backend, DistBackend, HostBackend, PjrtBackend};
     pub use crate::config::{
         BackendKind, BandwidthSpec, ExperimentConfig, KernelKind, RhoMode, SamplingScheme,
         SolverKind,

@@ -13,11 +13,16 @@
 //!               saved artifact with `--model DIR` (cold-start-free)
 //!               or train at startup from `--config`/dataset flags
 //!   perf        profile the ASkotch hot loop
+//!   worker      serve block-row kernel products for a distributed
+//!               coordinator (`--listen ADDR`; docs/DISTRIBUTED.md)
 //!
-//! Every subcommand accepts `--backend auto|host|pjrt` (default `auto`:
-//! the PJRT artifact engine when `artifacts/manifest.json` exists, the
-//! host-native parallel engine otherwise — so a fresh clone solves with
-//! no artifacts at all). `--host-threads N` sizes the host worker pool.
+//! Every subcommand accepts `--backend auto|host|pjrt|dist` (default
+//! `auto`: the PJRT artifact engine when `artifacts/manifest.json`
+//! exists, the host-native parallel engine otherwise — so a fresh clone
+//! solves with no artifacts at all). `--host-threads N` sizes the host
+//! worker pool. `--backend dist` shards kernel products across worker
+//! processes: `--workers N` spawns N local children, `--worker-addrs
+//! a:p,b:p` dials an already-running fleet.
 //!
 //! Examples:
 //!   askotch solve --dataset taxi_like --n 2048 --solver askotch --iters 200
@@ -30,7 +35,7 @@
 //!   askotch info
 
 use anyhow::Result;
-use askotch::backend::{AnyBackend, Backend, HostBackend};
+use askotch::backend::{AnyBackend, Backend, DistBackend, HostBackend};
 use askotch::config::{
     BackendKind, BandwidthSpec, ExperimentConfig, KernelKind, Precision, PrecondKind,
     SamplingScheme, SolverKind,
@@ -74,14 +79,18 @@ fn main() -> Result<()> {
         Some("info") => cmd_info(&args),
         Some("serve") => cmd_serve(&args),
         Some("perf") => cmd_perf(&args),
+        Some("worker") => cmd_worker(&args),
         _ => {
             eprintln!(
-                "usage: askotch <solve|train|experiment|compare|testbed|info|serve|perf> \
+                "usage: askotch <solve|train|experiment|compare|testbed|info|serve|perf|worker> \
                  [options]\n\
-                 common: --backend auto|host|pjrt (default auto), --host-threads N, \
+                 common: --backend auto|host|pjrt|dist (default auto), --host-threads N, \
                  --precision auto|f32|f64 (default auto), \
                  --precond auto|nystrom|rpchol|sketch|gaussian|none [--oversample N], \
                  --log FILE, --quiet, --profile\n\
+                 distributed (docs/DISTRIBUTED.md): --backend dist --workers N | \
+                 --worker-addrs a:p,b:p [--worker-threads N] [--heartbeat-ms MS]; \
+                 worker --listen ADDR [--host-threads N]\n\
                  lifecycle: train --save DIR, serve --model DIR, \
                  solve/train --checkpoint DIR [--checkpoint-every N] [--resume]\n\
                  robustness (docs/ROBUSTNESS.md): --max-recoveries N, --retain N, \
@@ -150,15 +159,60 @@ fn apply_precision_flag(args: &Args, cfg: &mut ExperimentConfig) -> Result<()> {
     Ok(())
 }
 
+/// Comma-separated `--worker-addrs` list.
+fn worker_addrs_flag(args: &Args) -> Option<Vec<String>> {
+    args.get("worker-addrs").map(|s| {
+        s.split(',').map(|a| a.trim().to_string()).filter(|a| !a.is_empty()).collect()
+    })
+}
+
 /// Resolve the backend: `--backend` wins, then the config's `backend`
 /// field, then `auto`. `precision` sets the host engine's kernel
 /// arithmetic (`Auto` = f64); the PJRT engine is f32-native and an
 /// explicit `--precision f64` on it is refused by the coordinator.
-fn make_backend(args: &Args, cfg_kind: BackendKind, precision: Precision) -> Result<AnyBackend> {
+/// `dist_cfg` is the experiment config's `(workers, worker_addrs)`
+/// fleet, overridden by the `--workers` / `--worker-addrs` flags.
+fn make_backend(
+    args: &Args,
+    cfg_kind: BackendKind,
+    precision: Precision,
+    dist_cfg: (usize, &[String]),
+) -> Result<AnyBackend> {
     let kind = match args.get("backend") {
         Some(s) => BackendKind::parse(s)?,
         None => cfg_kind,
     };
+    if kind == BackendKind::Dist {
+        let workers = args.get_usize("workers", dist_cfg.0);
+        let addrs = worker_addrs_flag(args).unwrap_or_else(|| dist_cfg.1.to_vec());
+        let b = if !addrs.is_empty() {
+            DistBackend::dial(&addrs)?
+        } else {
+            anyhow::ensure!(
+                workers > 0,
+                "backend dist needs a worker fleet: pass --workers N or --worker-addrs LIST"
+            );
+            DistBackend::spawn_local(
+                std::env::current_exe()?,
+                workers,
+                args.get_usize("worker-threads", 0),
+            )?
+        };
+        let b = b
+            .with_precision(precision)
+            .with_heartbeat_ms(args.get_u64("heartbeat-ms", 30_000));
+        b.preflight()?;
+        obs::info_kv(
+            "cli",
+            "backend selected",
+            &[
+                ("backend", Json::str("dist")),
+                ("workers", Json::num(b.worker_count() as f64)),
+                ("precision", Json::str(b.precision().name())),
+            ],
+        );
+        return Ok(AnyBackend::Dist(b));
+    }
     let dir = artifacts_dir(args);
     // `--host-threads` implies the host engine unless pjrt was demanded.
     let force_host = kind == BackendKind::Host
@@ -225,6 +279,10 @@ fn config_from_args(args: &Args) -> Result<ExperimentConfig> {
     cfg.track_residual = args.has_flag("residual");
     if let Some(b) = args.get("backend") {
         cfg.backend = BackendKind::parse(b)?;
+    }
+    cfg.workers = args.get_usize("workers", cfg.workers);
+    if let Some(addrs) = worker_addrs_flag(args) {
+        cfg.worker_addrs = addrs;
     }
     apply_precision_flag(args, &mut cfg)?;
     Ok(cfg)
@@ -318,7 +376,7 @@ fn apply_recovery_flags(args: &Args, policy: &mut askotch::solvers::DrivePolicy)
 fn cmd_solve(args: &Args) -> Result<()> {
     let mut cfg = config_from_args(args)?;
     apply_checkpoint_flags(args, &mut cfg);
-    let backend = make_backend(args, cfg.backend, cfg.precision)?;
+    let backend = make_backend(args, cfg.backend, cfg.precision, (cfg.workers, &cfg.worker_addrs))?;
     let coord = Coordinator::new(backend.as_dyn());
     let mut policy = Coordinator::checkpoint_policy(&cfg);
     apply_recovery_flags(args, &mut policy);
@@ -359,7 +417,7 @@ fn cmd_train(args: &Args) -> Result<()> {
          packaged as a model artifact (train a full-KRR solver, e.g. askotch)",
         cfg.solver.name()
     );
-    let backend = make_backend(args, cfg.backend, cfg.precision)?;
+    let backend = make_backend(args, cfg.backend, cfg.precision, (cfg.workers, &cfg.worker_addrs))?;
     let coord = Coordinator::new(backend.as_dyn());
     let mut policy = Coordinator::checkpoint_policy(&cfg);
     apply_recovery_flags(args, &mut policy);
@@ -399,7 +457,7 @@ fn cmd_experiment(args: &Args) -> Result<()> {
     let text = std::fs::read_to_string(path)?;
     let mut cfg = ExperimentConfig::from_json(&text)?;
     apply_precision_flag(args, &mut cfg)?;
-    let backend = make_backend(args, cfg.backend, cfg.precision)?;
+    let backend = make_backend(args, cfg.backend, cfg.precision, (cfg.workers, &cfg.worker_addrs))?;
     let coord = Coordinator::new(backend.as_dyn());
     // The config's checkpoint settings (and `--resume`) flow through
     // the same lifecycle entry point as `solve`/`train`.
@@ -422,7 +480,7 @@ fn cmd_experiment(args: &Args) -> Result<()> {
 
 fn cmd_compare(args: &Args) -> Result<()> {
     let base = config_from_args(args)?;
-    let backend = make_backend(args, base.backend, base.precision)?;
+    let backend = make_backend(args, base.backend, base.precision, (base.workers, &base.worker_addrs))?;
     let coord = Coordinator::new(backend.as_dyn());
     let solvers = [
         SolverKind::Askotch,
@@ -523,6 +581,13 @@ fn cmd_testbed(args: &Args) -> Result<()> {
         cfg.precision = Precision::parse(s)?;
     }
     cfg.profile = cfg.profile || flag(args, "profile");
+    if let Some(b) = args.get("backend") {
+        cfg.backend = BackendKind::parse(b)?;
+    }
+    cfg.workers = args.get_usize("workers", cfg.workers);
+    if let Some(addrs) = worker_addrs_flag(args) {
+        cfg.worker_addrs = addrs;
+    }
 
     obs::info_kv(
         "testbed",
@@ -560,7 +625,7 @@ fn cmd_testbed(args: &Args) -> Result<()> {
 }
 
 fn cmd_info(args: &Args) -> Result<()> {
-    let backend = make_backend(args, BackendKind::Auto, precision_flag(args)?)?;
+    let backend = make_backend(args, BackendKind::Auto, precision_flag(args)?, (0, &[]))?;
     match &backend {
         AnyBackend::Host(h) => {
             println!("backend: host");
@@ -595,8 +660,35 @@ fn cmd_info(args: &Args) -> Result<()> {
             }
             println!("{}", table.render());
         }
+        AnyBackend::Dist(d) => {
+            println!("backend: dist");
+            println!("workers: {}", d.worker_count());
+            println!("precision: {}", d.precision().name());
+            println!("local fallback: host engine ({} threads)", HostBackend::auto_threads().threads());
+            println!("see docs/DISTRIBUTED.md for the shard/session model");
+        }
     }
     Ok(())
+}
+
+/// Serve block-row kernel products for a distributed coordinator
+/// (docs/DISTRIBUTED.md). Prints exactly one line — ending with the
+/// bound address — before serving, so a spawning coordinator can read
+/// the actual port behind `--listen 127.0.0.1:0`.
+fn cmd_worker(args: &Args) -> Result<()> {
+    use std::io::Write as _;
+    let listen = args.get_or("listen", "127.0.0.1:0");
+    let listener = std::net::TcpListener::bind(listen.as_str())?;
+    let addr = listener.local_addr()?;
+    println!("askotch worker listening on {addr}");
+    std::io::stdout().flush()?;
+    askotch::dist::worker::serve(
+        listener,
+        askotch::dist::worker::WorkerOptions {
+            threads: args.get_usize("host-threads", 0),
+            exit_on_shutdown: true,
+        },
+    )
 }
 
 /// Hot-path profiling: run N ASkotch iterations and report where the
@@ -609,7 +701,7 @@ fn cmd_perf(args: &Args) -> Result<()> {
 
     let mut cfg = config_from_args(args)?;
     cfg.solver = SolverKind::Askotch;
-    let backend = make_backend(args, cfg.backend, cfg.precision)?;
+    let backend = make_backend(args, cfg.backend, cfg.precision, (cfg.workers, &cfg.worker_addrs))?;
     let coord = Coordinator::new(backend.as_dyn());
     let problem = coord.problem(&cfg)?;
     let iters = args.get_usize("iters", 200);
@@ -621,7 +713,7 @@ fn cmd_perf(args: &Args) -> Result<()> {
     solver.run(backend.as_dyn(), &problem, &Budget::iterations(3))?;
     let pre = match &backend {
         AnyBackend::Pjrt(p) => Some(p.engine().stats()),
-        AnyBackend::Host(_) => None,
+        _ => None,
     };
     let t0 = std::time::Instant::now();
     let report = solver.run(backend.as_dyn(), &problem, &Budget::iterations(iters))?;
@@ -668,7 +760,7 @@ fn serve_setup(
     args: &Args,
 ) -> Result<(AnyBackend, askotch::server::ModelSnapshot, askotch::json::Json)> {
     if let Some(path) = args.get("model") {
-        let backend = make_backend(args, BackendKind::Auto, precision_flag(args)?)?;
+        let backend = make_backend(args, BackendKind::Auto, precision_flag(args)?, (0, &[]))?;
         let t0 = std::time::Instant::now();
         // Recovery ladder: a corrupt current artifact falls back to the
         // previous good save (kept by the save-time rotation) instead
@@ -703,7 +795,7 @@ fn serve_setup(
     };
     cfg.solver = SolverKind::Askotch;
     apply_precision_flag(args, &mut cfg)?;
-    let backend = make_backend(args, cfg.backend, cfg.precision)?;
+    let backend = make_backend(args, cfg.backend, cfg.precision, (cfg.workers, &cfg.worker_addrs))?;
     let coord = Coordinator::new(backend.as_dyn());
     println!("training {} on {} (n={})...", cfg.solver.name(), cfg.dataset, cfg.n);
     let (problem, report) = coord.run_with_policy(

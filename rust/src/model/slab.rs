@@ -23,8 +23,11 @@ use std::path::Path;
 /// File magic + layout version (the trailing digit).
 pub const MAGIC: &[u8; 8] = b"ASKSLAB1";
 
-/// FNV-1a 64-bit over a byte stream.
-fn fnv1a(bytes: &[u8]) -> u64 {
+/// FNV-1a 64-bit over a byte stream — the integrity hash shared by
+/// slab files and the distributed frame codec
+/// ([`crate::net::wire::write_frame`]), so one checksum convention
+/// covers every binary surface the repo persists or ships.
+pub fn fnv1a(bytes: &[u8]) -> u64 {
     let mut h = 0xcbf2_9ce4_8422_2325u64;
     for &b in bytes {
         h ^= b as u64;

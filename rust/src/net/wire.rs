@@ -1,4 +1,29 @@
-//! Typed JSON wire protocol for the prediction service.
+//! Typed wire protocols: JSON for the prediction service, binary
+//! frames for the distributed backend.
+//!
+//! # Binary frame codec
+//!
+//! The distributed backend (`docs/DISTRIBUTED.md`) ships f64/f32 slab
+//! payloads that JSON would bloat ~3x and round-trip lossily, so it
+//! rides a length-prefixed binary framing instead — serving keeps the
+//! HTTP/JSON path below, both stacks share this module. One frame,
+//! little-endian throughout:
+//!
+//! ```text
+//! magic "ASKW" (4 bytes)
+//! u8    type tag (dist/proto.rs owns the tag space)
+//! u64   payload length in bytes
+//! payload
+//! u64   FNV-1a of the payload (crate::model::slab::fnv1a — the same
+//!       checksum convention as slab files)
+//! ```
+//!
+//! [`read_frame`] refuses bad magic, oversized lengths, truncation
+//! mid-frame, and checksum mismatches; a clean EOF *between* frames is
+//! `Ok(None)` so connection teardown is distinguishable from
+//! corruption. The `latency@net/read` fault point
+//! ([`crate::fault::latency`]) injects slow-network stalls here for
+//! the chaos drills.
 //!
 //! Request body for `POST /v1/predict` is either a single prediction
 //!
@@ -22,6 +47,72 @@
 //! See `docs/SERVING.md` for the full schema reference.
 
 use crate::json::{self, DecodeError, Decoder, FromJson, Json, ToJson};
+use crate::model::slab::fnv1a;
+use std::io::{self, Read, Write};
+
+/// Magic prefix of every binary frame.
+pub const FRAME_MAGIC: [u8; 4] = *b"ASKW";
+
+/// Fixed frame overhead: magic + tag + length + trailing checksum.
+pub const FRAME_OVERHEAD: usize = 4 + 1 + 8 + 8;
+
+/// Default payload-size ceiling (1 GiB): large enough for a full
+/// training-slab setup frame, small enough that a corrupt length
+/// prefix cannot OOM the receiver.
+pub const MAX_FRAME_BYTES: usize = 1 << 30;
+
+/// Write one `(tag, payload)` frame. Returns the bytes put on the
+/// wire (for the caller's byte counters).
+pub fn write_frame<W: Write>(w: &mut W, tag: u8, payload: &[u8]) -> io::Result<usize> {
+    w.write_all(&FRAME_MAGIC)?;
+    w.write_all(&[tag])?;
+    w.write_all(&(payload.len() as u64).to_le_bytes())?;
+    w.write_all(payload)?;
+    w.write_all(&fnv1a(payload).to_le_bytes())?;
+    w.flush()?;
+    Ok(FRAME_OVERHEAD + payload.len())
+}
+
+/// Read one frame. `Ok(None)` on clean EOF at a frame boundary;
+/// truncation mid-frame, bad magic, an over-limit length, or a
+/// checksum mismatch are errors (the connection is unusable — framing
+/// is lost).
+pub fn read_frame<R: Read>(r: &mut R, max_payload: usize) -> io::Result<Option<(u8, Vec<u8>)>> {
+    crate::fault::latency("net/read");
+    let mut head = [0u8; 13];
+    // Manual first-byte read so EOF-before-any-byte is a clean close.
+    match r.read(&mut head[..1])? {
+        0 => return Ok(None),
+        _ => r.read_exact(&mut head[1..])?,
+    }
+    if head[..4] != FRAME_MAGIC {
+        return Err(io::Error::new(
+            io::ErrorKind::InvalidData,
+            format!("bad frame magic {:02x?} (expected {FRAME_MAGIC:02x?})", &head[..4]),
+        ));
+    }
+    let tag = head[4];
+    let len = u64::from_le_bytes(head[5..13].try_into().unwrap()) as usize;
+    if len > max_payload {
+        return Err(io::Error::new(
+            io::ErrorKind::InvalidData,
+            format!("frame payload {len} bytes exceeds limit {max_payload}"),
+        ));
+    }
+    let mut payload = vec![0u8; len];
+    r.read_exact(&mut payload)?;
+    let mut sum = [0u8; 8];
+    r.read_exact(&mut sum)?;
+    let want = u64::from_le_bytes(sum);
+    let got = fnv1a(&payload);
+    if want != got {
+        return Err(io::Error::new(
+            io::ErrorKind::InvalidData,
+            format!("frame checksum mismatch: stored {want:#018x}, computed {got:#018x}"),
+        ));
+    }
+    Ok(Some((tag, payload)))
+}
 
 /// One prediction to compute.
 #[derive(Debug, Clone, PartialEq)]
@@ -167,6 +258,64 @@ pub fn error_body(code: &str, message: &str) -> Json {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn frame_round_trip() {
+        let mut buf = Vec::new();
+        let n1 = write_frame(&mut buf, 7, b"hello frames").unwrap();
+        let n2 = write_frame(&mut buf, 0xfe, &[]).unwrap();
+        assert_eq!(n1, FRAME_OVERHEAD + 12);
+        assert_eq!(n2, FRAME_OVERHEAD);
+        let mut r = &buf[..];
+        let (tag, payload) = read_frame(&mut r, MAX_FRAME_BYTES).unwrap().unwrap();
+        assert_eq!((tag, payload.as_slice()), (7, &b"hello frames"[..]));
+        let (tag, payload) = read_frame(&mut r, MAX_FRAME_BYTES).unwrap().unwrap();
+        assert_eq!((tag, payload.len()), (0xfe, 0));
+        // Clean EOF at the frame boundary is a close, not an error.
+        assert!(read_frame(&mut r, MAX_FRAME_BYTES).unwrap().is_none());
+    }
+
+    #[test]
+    fn frame_truncation_is_an_error_not_a_close() {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, 3, &[1, 2, 3, 4, 5, 6, 7, 8]).unwrap();
+        // Cut anywhere after the first byte: header, payload, checksum.
+        for cut in [1, 4, 9, 14, buf.len() - 1] {
+            let mut r = &buf[..cut];
+            let err = read_frame(&mut r, MAX_FRAME_BYTES).unwrap_err();
+            assert_eq!(err.kind(), io::ErrorKind::UnexpectedEof, "cut at {cut}");
+        }
+    }
+
+    #[test]
+    fn frame_corrupt_checksum_and_payload_rejected() {
+        let mut good = Vec::new();
+        write_frame(&mut good, 1, b"payload bytes").unwrap();
+        // Flip one payload byte: stored checksum no longer matches.
+        let mut bad = good.clone();
+        bad[FRAME_OVERHEAD - 8] ^= 0x40;
+        let err = read_frame(&mut &bad[..], MAX_FRAME_BYTES).unwrap_err();
+        assert!(err.to_string().contains("checksum mismatch"), "{err}");
+        // Flip a checksum byte: same rejection.
+        let mut bad = good.clone();
+        *bad.last_mut().unwrap() ^= 0x01;
+        let err = read_frame(&mut &bad[..], MAX_FRAME_BYTES).unwrap_err();
+        assert!(err.to_string().contains("checksum mismatch"), "{err}");
+    }
+
+    #[test]
+    fn frame_bad_magic_and_oversize_rejected() {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, 1, b"xyz").unwrap();
+        let mut bad = buf.clone();
+        bad[0] = b'Z';
+        let err = read_frame(&mut &bad[..], MAX_FRAME_BYTES).unwrap_err();
+        assert!(err.to_string().contains("bad frame magic"), "{err}");
+        // A 3-byte payload against a 2-byte limit: refused before any
+        // allocation happens.
+        let err = read_frame(&mut &buf[..], 2).unwrap_err();
+        assert!(err.to_string().contains("exceeds limit"), "{err}");
+    }
 
     #[test]
     fn single_body() {

@@ -19,10 +19,13 @@
 //!    performance profile (paper Fig. 2), per-domain task tables
 //!    (Figs. 3-8), and ASCII convergence charts.
 //!
-//! The runner is deliberately **host-only**: tasks run concurrently on
-//! plain `std::thread::scope` workers, and the PJRT engine is neither
-//! `Send` nor shareable across them. On an artifact machine, point
-//! `askotch solve --backend pjrt` at a single task instead.
+//! The runner is **host-first**: tasks run concurrently on plain
+//! `std::thread::scope` workers, and the PJRT engine is neither `Send`
+//! nor shareable across them — on an artifact machine, point `askotch
+//! solve --backend pjrt` at a single task instead. `backend = dist`
+//! runs the suite through one shared sharded
+//! [`crate::backend::DistBackend`] (tasks serialize; the worker fleet
+//! is the parallelism — see `docs/DISTRIBUTED.md`).
 
 pub mod report;
 pub mod runner;
@@ -30,7 +33,7 @@ pub mod runner;
 pub use report::render_report;
 pub use runner::{run, RunRecord, TestbedOutcome};
 
-use crate::config::{BudgetSettings, Precision, PrecondKind, SolverKind, TestbedScale};
+use crate::config::{BackendKind, BudgetSettings, Precision, PrecondKind, SolverKind, TestbedScale};
 use crate::json::{self, Decoder};
 
 /// Everything one `askotch testbed` invocation runs: which tasks (scale
@@ -52,6 +55,17 @@ pub struct TestbedConfig {
     pub oversample: usize,
     /// Per-family iteration caps + the shared wall-clock cap.
     pub budgets: BudgetSettings,
+    /// Compute backend the suite runs on. `Host` (and `Auto`) keep the
+    /// historic per-job host engines; `Dist` shares one sharded
+    /// [`crate::backend::DistBackend`] across the suite (jobs forced to
+    /// 1 — the fleet itself is the parallelism). `Pjrt` is refused: the
+    /// engine is not shareable across task workers.
+    pub backend: BackendKind,
+    /// `backend = dist`: local worker processes to spawn.
+    pub workers: usize,
+    /// `backend = dist`: already-running worker addresses (overrides
+    /// `workers`).
+    pub worker_addrs: Vec<String>,
     /// Parallel task workers (0 = half the cores).
     pub jobs: usize,
     /// Host-backend threads per worker (0 = cores / jobs).
@@ -97,6 +111,9 @@ impl Default for TestbedConfig {
             precond: PrecondKind::Auto,
             oversample: 8,
             budgets: BudgetSettings::default(),
+            backend: BackendKind::Host,
+            workers: 0,
+            worker_addrs: Vec::new(),
             jobs: 0,
             job_threads: 0,
             seed: 0,
@@ -157,6 +174,17 @@ impl TestbedConfig {
         }
         if let Some(d) = root.opt_field("sgd_iters")? {
             c.budgets.sgd_iters = d.usize()?;
+        }
+        if let Some(d) = root.opt_field("backend")? {
+            c.backend =
+                BackendKind::parse(d.str()?).map_err(|e| anyhow::anyhow!("{}: {e}", d.path()))?;
+        }
+        if let Some(d) = root.opt_field("workers")? {
+            c.workers = d.usize()?;
+        }
+        if let Some(d) = root.opt_field("worker_addrs")? {
+            c.worker_addrs =
+                d.items()?.iter().map(|a| a.string()).collect::<Result<Vec<_>, _>>()?;
         }
         if let Some(d) = root.opt_field("jobs")? {
             c.jobs = d.usize()?;

@@ -3,7 +3,7 @@
 //! run recorded as a structured [`RunRecord`].
 
 use super::{domain_of, TestbedConfig};
-use crate::backend::{Backend, HostBackend};
+use crate::backend::{Backend, DistBackend, HostBackend};
 use crate::config::{
     BackendKind, BandwidthSpec, ExperimentConfig, KernelKind, Precision, RhoMode, SamplingScheme,
     SolverKind,
@@ -271,7 +271,9 @@ fn experiment_for(cfg: &TestbedConfig, meta: &TaskMeta, kind: SolverKind) -> Exp
         max_iters: cfg.budgets.max_iters(kind),
         time_limit_secs: cfg.budgets.time_limit_secs,
         track_residual: cfg.track_residual,
-        backend: BackendKind::Host,
+        backend: cfg.backend,
+        workers: cfg.workers,
+        worker_addrs: cfg.worker_addrs.clone(),
         precision: cfg.precision,
         // Testbed checkpointing is configured suite-wide on
         // `TestbedConfig` and applied in `run_one`, not per experiment.
@@ -286,6 +288,11 @@ fn experiment_for(cfg: &TestbedConfig, meta: &TaskMeta, kind: SolverKind) -> Exp
 /// sequentially so their wall-clock numbers are comparable.
 pub fn run(cfg: &TestbedConfig) -> anyhow::Result<TestbedOutcome> {
     anyhow::ensure!(!cfg.solvers.is_empty(), "testbed: no solvers selected");
+    anyhow::ensure!(
+        cfg.backend != BackendKind::Pjrt,
+        "testbed: the pjrt engine is not shareable across task workers; \
+         use --backend host or dist"
+    );
     let t0 = Instant::now();
     let tasks: Vec<Dataset> = synthetic::testbed_scaled(cfg.scale.row_factor())
         .into_iter()
@@ -293,8 +300,32 @@ pub fn run(cfg: &TestbedConfig) -> anyhow::Result<TestbedOutcome> {
         .collect();
     anyhow::ensure!(!tasks.is_empty(), "testbed: filter {:?} matched no task", cfg.filter);
 
+    // `dist` shares one coordinator: its collectives serialize on the
+    // fleet anyway, and concurrent tasks would thrash worker sessions.
+    let dist = match cfg.backend {
+        BackendKind::Dist => {
+            let b = if !cfg.worker_addrs.is_empty() {
+                DistBackend::dial(&cfg.worker_addrs)?
+            } else {
+                anyhow::ensure!(
+                    cfg.workers > 0,
+                    "testbed: backend dist needs --workers N or --worker-addrs LIST"
+                );
+                DistBackend::spawn_local(std::env::current_exe()?, cfg.workers, 0)?
+            }
+            .with_precision(cfg.precision);
+            b.preflight()?;
+            Some(b)
+        }
+        _ => None,
+    };
+
     let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
-    let jobs = if cfg.jobs == 0 { cores.div_ceil(2) } else { cfg.jobs }.clamp(1, tasks.len());
+    let jobs = if dist.is_some() {
+        1
+    } else {
+        if cfg.jobs == 0 { cores.div_ceil(2) } else { cfg.jobs }.clamp(1, tasks.len())
+    };
     let job_threads = if cfg.job_threads == 0 { (cores / jobs).max(1) } else { cfg.job_threads };
 
     let total = tasks.len();
@@ -306,11 +337,18 @@ pub fn run(cfg: &TestbedConfig) -> anyhow::Result<TestbedOutcome> {
     std::thread::scope(|s| {
         for _ in 0..jobs {
             s.spawn(|| {
-                let backend = HostBackend::new(job_threads).with_precision(cfg.precision);
+                let host;
+                let backend: &dyn Backend = match &dist {
+                    Some(d) => d,
+                    None => {
+                        host = HostBackend::new(job_threads).with_precision(cfg.precision);
+                        &host
+                    }
+                };
                 loop {
                     let next = queue.lock().unwrap().pop();
                     let Some((index, ds)) = next else { break };
-                    let records = run_task(cfg, &backend, ds, index, total);
+                    let records = run_task(cfg, backend, ds, index, total);
                     results.lock().unwrap().push((index, records));
                 }
             });
@@ -333,7 +371,7 @@ pub fn run(cfg: &TestbedConfig) -> anyhow::Result<TestbedOutcome> {
 /// against it, one record per run (errors become records, not aborts).
 fn run_task(
     cfg: &TestbedConfig,
-    backend: &HostBackend,
+    backend: &dyn Backend,
     ds: Dataset,
     index: usize,
     total: usize,
@@ -420,7 +458,7 @@ fn run_task(
 fn run_one(
     cfg: &TestbedConfig,
     solver: &dyn Solver,
-    backend: &HostBackend,
+    backend: &dyn Backend,
     problem: &KrrProblem,
     budget: &Budget,
     kind: SolverKind,

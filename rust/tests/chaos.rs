@@ -7,12 +7,17 @@
 //! * worker panics           -> 500 for the batch, server stays up;
 //! * poisoned kernel values  -> per-slot rejection, counted;
 //! * overload (2x a cap-1 queue) -> 429 + Retry-After, /healthz green;
-//! * forced solver divergence -> rollback + backoff, solve completes.
+//! * forced solver divergence -> rollback + backoff, solve completes;
+//! * distributed-fleet faults (docs/DISTRIBUTED.md): an injected RPC
+//!   failure -> transparent shard re-provision; frame-read latency ->
+//!   slower, never wrong; a killed worker process -> the solve fails
+//!   loudly, then resumes bit-identically from its checkpoint on a
+//!   fresh fleet.
 //!
 //! The fault registry is process-global, so every test serializes on
 //! one mutex, arms exactly what it drills, and disarms before exit.
 
-use askotch::backend::{Backend, HostBackend};
+use askotch::backend::{Backend, DistBackend, HostBackend};
 use askotch::config::{BandwidthSpec, ExperimentConfig, KernelKind, SolverKind};
 use askotch::coordinator::{Budget, Coordinator, KrrProblem, SolveReport};
 use askotch::data::synthetic;
@@ -22,8 +27,8 @@ use askotch::model::ModelArtifact;
 use askotch::net::{http, NetConfig, Server};
 use askotch::server::{job_queue, serve_reloadable, ModelSnapshot, ServerConfig, ServerStats};
 use askotch::solvers::cholesky::CholeskySolver;
-use askotch::solvers::{Checkpoint, DrivePolicy, NullObserver, Solver};
-use std::io::{BufReader, Read, Write};
+use askotch::solvers::{Checkpoint, DrivePolicy, NullObserver, Observer, Solver};
+use std::io::{BufRead, BufReader, Read, Write};
 use std::net::{SocketAddr, TcpStream};
 use std::sync::Mutex;
 use std::time::Duration;
@@ -453,4 +458,170 @@ fn forced_divergence_recovers_with_rollback_and_backoff() {
     assert_eq!(report.iters, 12, "full budget after the rollback");
     assert!(report.final_metric.is_finite());
     assert_eq!(fault_count("solve/step/diverge"), 2, "one injection per armed run");
+}
+
+// ---------------------------------------------------------------------------
+// Distributed fleet faults (docs/DISTRIBUTED.md)
+// ---------------------------------------------------------------------------
+
+/// Dial `n` fresh in-process workers — real sockets, this process.
+fn dist_fleet(n: usize) -> DistBackend {
+    let addrs: Vec<String> = (0..n)
+        .map(|_| askotch::dist::worker::spawn_in_process(1).unwrap().to_string())
+        .collect();
+    DistBackend::dial(&addrs).unwrap()
+}
+
+fn dist_cfg(name: &str) -> ExperimentConfig {
+    ExperimentConfig {
+        name: name.into(),
+        dataset: "physics_like".into(),
+        n: 240,
+        d: 8,
+        solver: SolverKind::Askotch,
+        rank: 10,
+        seed: 3,
+        max_iters: 12,
+        time_limit_secs: 1e9,
+        ..Default::default()
+    }
+}
+
+#[test]
+fn injected_rpc_fault_reprovisions_the_shard_transparently() {
+    let _g = fault_session();
+    let cfg = dist_cfg("chaos_dist_rpc");
+    let plain = DrivePolicy { eval_every: 1_000_000, ..Default::default() };
+    let want = {
+        let b = dist_fleet(2);
+        let (_, r) =
+            Coordinator::new(&b).run_with_policy(&cfg, &mut NullObserver, &plain, None).unwrap();
+        r
+    };
+
+    // One coordinator-side frame send fails mid-fleet: the backend must
+    // drop that connection, re-dial, re-provision the shard session,
+    // and replay the op — the solve never notices.
+    fault::arm(vec![FaultRule::once_after("dist/rpc", FaultKind::Io, 6)], 0);
+    let b = dist_fleet(2);
+    let (_, got) =
+        Coordinator::new(&b).run_with_policy(&cfg, &mut NullObserver, &plain, None).unwrap();
+    fault::disarm();
+    assert_eq!(fault_count("dist/rpc/io"), 1, "exactly one injected rpc failure");
+    assert!(!got.diverged);
+    assert_eq!(got.iters, want.iters);
+    assert_bits_eq(&got.weights, &want.weights, "solve across an injected rpc fault");
+}
+
+#[test]
+fn frame_read_latency_slows_but_never_corrupts() {
+    let _g = fault_session();
+    let problem = toy_problem(160);
+    let (n, d, sigma, k) = (problem.n(), problem.d(), problem.sigma, problem.kernel);
+    let v: Vec<f64> = (0..n).map(|i| ((i * 13 + 5) % 47) as f64 / 47.0 - 0.5).collect();
+    let b = dist_fleet(1).with_min_rows(8);
+    let want =
+        b.kernel_matvec(k, &problem.train.x, n, &problem.train.x, n, d, &v, sigma).unwrap();
+
+    fault::arm(
+        vec![FaultRule::once_after("net/read", FaultKind::Latency, 2).with_arg(40.0)],
+        0,
+    );
+    let got =
+        b.kernel_matvec(k, &problem.train.x, n, &problem.train.x, n, d, &v, sigma).unwrap();
+    fault::disarm();
+    assert_eq!(fault_count("net/read/latency"), 1, "one slowed frame read");
+    assert_bits_eq(&got, &want, "matvec across an injected frame-read stall");
+}
+
+/// Spawn a real `askotch worker` child and parse its announce line.
+fn spawn_worker_proc() -> (std::process::Child, String) {
+    let mut child = std::process::Command::new(env!("CARGO_BIN_EXE_askotch"))
+        .args(["worker", "--listen", "127.0.0.1:0", "--host-threads", "1"])
+        .stdin(std::process::Stdio::null())
+        .stdout(std::process::Stdio::piped())
+        .stderr(std::process::Stdio::null())
+        .spawn()
+        .expect("spawn worker process");
+    let mut line = String::new();
+    BufReader::new(child.stdout.take().expect("stdout"))
+        .read_line(&mut line)
+        .expect("read announce line");
+    let addr = line.trim().rsplit(' ').next().expect("address token").to_string();
+    (child, addr)
+}
+
+/// [`Observer`] that kills a worker process once iteration `at` lands.
+struct KillWorkerAt {
+    at: usize,
+    victim: Option<std::process::Child>,
+}
+
+impl Observer for KillWorkerAt {
+    fn on_iter(&mut self, iter: usize, _secs: f64) {
+        if iter >= self.at {
+            if let Some(mut c) = self.victim.take() {
+                let _ = c.kill();
+                let _ = c.wait();
+            }
+        }
+    }
+}
+
+#[test]
+fn killed_worker_fails_loudly_then_resumes_from_checkpoint() {
+    let _g = fault_session();
+    let cfg = dist_cfg("chaos_dist_kill");
+    let plain = DrivePolicy { eval_every: 1_000_000, ..Default::default() };
+
+    // The reference trajectory: an uninterrupted 2-worker solve. Shard
+    // arithmetic depends only on the fleet size, so the killed-and-
+    // resumed run below must land on these exact bits.
+    let want = {
+        let b = dist_fleet(2);
+        let (_, r) =
+            Coordinator::new(&b).run_with_policy(&cfg, &mut NullObserver, &plain, None).unwrap();
+        r
+    };
+
+    // Checkpointed run against two real worker processes; worker 1 is
+    // killed after iteration 4. Re-dialing a dead process cannot
+    // succeed, so once retries are exhausted the solve must fail
+    // loudly — not hang, not return garbage.
+    let (c0, a0) = spawn_worker_proc();
+    let (c1, a1) = spawn_worker_proc();
+    let dir = temp_dir("dist_kill");
+    let _ = std::fs::remove_dir_all(&dir);
+    let policy = DrivePolicy {
+        eval_every: 1_000_000,
+        checkpoint_every: 3,
+        checkpoint_path: dir.clone(),
+        ..Default::default()
+    };
+    let b = DistBackend::dial(&[a0, a1]).unwrap().with_max_retries(1).with_heartbeat_ms(5_000);
+    let mut killer = KillWorkerAt { at: 4, victim: Some(c1) };
+    let err = match Coordinator::new(&b).run_with_policy(&cfg, &mut killer, &policy, None) {
+        Err(e) => e,
+        Ok(_) => panic!("a killed worker must fail the solve"),
+    };
+    assert!(
+        format!("{err:#}").contains("unreachable"),
+        "the error must name the lost worker: {err:#}"
+    );
+    drop(b);
+    let mut c0 = c0;
+    let _ = c0.kill();
+    let _ = c0.wait();
+
+    // Recovery: load the surviving checkpoint, stand up a fresh fleet,
+    // resume — bit-identical to the uninterrupted run.
+    let ck = Checkpoint::load(&dir).expect("checkpoint survives the crash");
+    assert_eq!(ck.iters, 3, "one checkpoint interval lost, not the solve");
+    let b2 = dist_fleet(2);
+    let (_, got) = Coordinator::new(&b2)
+        .run_with_policy(&cfg, &mut NullObserver, &plain, Some(&ck))
+        .unwrap();
+    assert_eq!(got.iters, want.iters);
+    assert_bits_eq(&got.weights, &want.weights, "resume after a killed worker");
+    let _ = std::fs::remove_dir_all(&dir);
 }

@@ -1,0 +1,265 @@
+//! Distributed backend parity suite (`docs/DISTRIBUTED.md`): every
+//! wire arm of [`DistBackend`] against the host engine it shards.
+//!
+//! The fused engine computes each output element from its own input
+//! rows and a panel grid derived only from `d`, so the gather arm
+//! (`MATVEC_ROWS`), the shipped-x2 gather arm (`MATVEC_ROWS_X2`), the
+//! panel arm (`MATRIX_ROWS`), and the tile arm (`BLOCK_TILES`) must be
+//! **bitwise** identical to [`HostBackend`] for any fleet size. The
+//! reduce arm (`MATVEC_PART`) sums per-shard partials in shard order —
+//! bitwise at one worker, <= 1e-8 relative beyond that. Solver-level
+//! runs compose all of the arms; the suite pins both guarantees.
+//!
+//! Workers here are in-process ([`worker::spawn_in_process`]) — real
+//! sockets and frames, no child processes; `dist_e2e.rs` covers the
+//! spawned-binary path.
+
+use askotch::backend::{Backend, DistBackend, HostBackend};
+use askotch::config::{
+    BandwidthSpec, ExperimentConfig, KernelKind, Precision, SolverKind,
+};
+use askotch::coordinator::{Coordinator, KrrProblem, SolveReport};
+use askotch::data::synthetic;
+use askotch::dist::worker;
+
+/// Dial `n` fresh in-process workers (each on its own loopback port).
+fn fleet(n: usize) -> DistBackend {
+    let addrs: Vec<String> = (0..n)
+        .map(|_| worker::spawn_in_process(1).expect("spawn worker").to_string())
+        .collect();
+    DistBackend::dial(&addrs).expect("dial fleet")
+}
+
+fn taxi_problem(n: usize) -> KrrProblem {
+    let ds = synthetic::taxi_like(n, 9, 42).standardized();
+    KrrProblem::from_dataset(ds, KernelKind::Rbf, BandwidthSpec::Auto, 1e-6, 0).unwrap()
+}
+
+/// Deterministic dense test vector with entries in `[-0.5, 0.5)`.
+fn probe(n: usize) -> Vec<f64> {
+    (0..n).map(|i| ((i * 37 + 11) % 101) as f64 / 101.0 - 0.5).collect()
+}
+
+fn assert_bits_eq(got: &[f64], want: &[f64], ctx: &str) {
+    assert_eq!(got.len(), want.len(), "{ctx}: length");
+    for (i, (g, w)) in got.iter().zip(want).enumerate() {
+        assert_eq!(g.to_bits(), w.to_bits(), "{ctx}: slot {i}: {g} vs {w}");
+    }
+}
+
+fn assert_rel_close(got: &[f64], want: &[f64], tol: f64, ctx: &str) {
+    assert_eq!(got.len(), want.len(), "{ctx}: length");
+    for (i, (g, w)) in got.iter().zip(want).enumerate() {
+        let rel = (g - w).abs() / w.abs().max(1.0);
+        assert!(rel <= tol, "{ctx}: slot {i}: {g} vs {w} (rel {rel:.3e} > {tol:.0e})");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Single worker: every arm is the host computation over a socket
+// ---------------------------------------------------------------------------
+
+#[test]
+fn single_worker_is_bitwise_identical_to_host() {
+    let p = taxi_problem(260);
+    let (n, d, sigma, k) = (p.n(), p.d(), p.sigma, p.kernel);
+    let host = HostBackend::auto_threads();
+    let dist = fleet(1).with_min_rows(8);
+
+    // Gather arm: K(X, X) v, the same-slab hot path.
+    let v = probe(n);
+    let want = host.kernel_matvec(k, &p.train.x, n, &p.train.x, n, d, &v, sigma).unwrap();
+    let got = dist.kernel_matvec(k, &p.train.x, n, &p.train.x, n, d, &v, sigma).unwrap();
+    assert_bits_eq(&got, &want, "1-worker gather matvec");
+
+    // Reduce arm: K(X_test, X) v — one shard covers the whole slab, so
+    // the single partial IS the host product.
+    let want =
+        host.kernel_matvec(k, &p.test.x, p.test.n, &p.train.x, n, d, &v, sigma).unwrap();
+    let got =
+        dist.kernel_matvec(k, &p.test.x, p.test.n, &p.train.x, n, d, &v, sigma).unwrap();
+    assert_bits_eq(&got, &want, "1-worker reduce matvec");
+
+    // Panel arm: K(X, X_test).
+    let want = host.kernel_matrix(k, &p.train.x, n, &p.test.x, p.test.n, d, sigma);
+    let got = dist.kernel_matrix(k, &p.train.x, n, &p.test.x, p.test.n, d, sigma);
+    assert_eq!((got.rows, got.cols), (want.rows, want.cols), "matrix shape");
+    assert_bits_eq(&got.data, &want.data, "1-worker kernel matrix");
+
+    // Tile arm: strided symmetric block.
+    let idx: Vec<usize> = (0..n).step_by(3).collect();
+    let want = host.kernel_block(k, &p.train.x, d, &idx, sigma);
+    let got = dist.kernel_block(k, &p.train.x, d, &idx, sigma);
+    assert_eq!((got.rows, got.cols), (want.rows, want.cols), "block shape");
+    assert_bits_eq(&got.data, &want.data, "1-worker kernel block");
+}
+
+// ---------------------------------------------------------------------------
+// Uneven fleet: gather/panel/tile arms stay bitwise, reduce stays close
+// ---------------------------------------------------------------------------
+
+#[test]
+fn uneven_three_worker_fleet_gather_arms_stay_bitwise() {
+    // 259 rows over 3 workers: shards 87/86/86 — the uneven case.
+    let p = taxi_problem(259);
+    let (n, d, sigma, k) = (p.n(), p.d(), p.sigma, p.kernel);
+    let host = HostBackend::auto_threads();
+    let dist = fleet(3).with_min_rows(8);
+    let v = probe(n);
+
+    let want = host.kernel_matvec(k, &p.train.x, n, &p.train.x, n, d, &v, sigma).unwrap();
+    let got = dist.kernel_matvec(k, &p.train.x, n, &p.train.x, n, d, &v, sigma).unwrap();
+    assert_bits_eq(&got, &want, "3-worker gather matvec");
+
+    // Shipped-x2 gather arm: session slab on the left (K(X, C) w), a
+    // foreign slab on the right — rows still shard bitwise.
+    let m = 40;
+    let centers = p.train.x[..m * d].to_vec();
+    let w = probe(m);
+    let want = host.kernel_matvec(k, &p.train.x, n, &centers, m, d, &w, sigma).unwrap();
+    let got = dist.kernel_matvec(k, &p.train.x, n, &centers, m, d, &w, sigma).unwrap();
+    assert_bits_eq(&got, &want, "3-worker shipped-x2 gather matvec");
+
+    let want = host.kernel_matrix(k, &p.train.x, n, &p.test.x, p.test.n, d, sigma);
+    let got = dist.kernel_matrix(k, &p.train.x, n, &p.test.x, p.test.n, d, sigma);
+    assert_bits_eq(&got.data, &want.data, "3-worker kernel matrix");
+
+    let idx: Vec<usize> = (0..n).step_by(2).collect();
+    let want = host.kernel_block(k, &p.train.x, d, &idx, sigma);
+    let got = dist.kernel_block(k, &p.train.x, d, &idx, sigma);
+    assert_bits_eq(&got.data, &want.data, "3-worker kernel block");
+
+    // Reduce arm: per-shard partials regroup the f64 sums — close, not
+    // bitwise, beyond one worker.
+    let want =
+        host.kernel_matvec(k, &p.test.x, p.test.n, &p.train.x, n, d, &v, sigma).unwrap();
+    let got =
+        dist.kernel_matvec(k, &p.test.x, p.test.n, &p.train.x, n, d, &v, sigma).unwrap();
+    assert_rel_close(&got, &want, 1e-10, "3-worker reduce matvec");
+}
+
+// ---------------------------------------------------------------------------
+// Degenerate shapes fall back to the local engine instead of failing
+// ---------------------------------------------------------------------------
+
+#[test]
+fn tiny_slabs_and_sparse_probes_fall_back_to_local_bitwise() {
+    let host = HostBackend::auto_threads();
+    let dist = fleet(4).with_min_rows(8);
+    let (k, sigma) = (KernelKind::Rbf, 1.3);
+
+    // 3 rows across a 4-worker fleet would leave empty tail shards;
+    // the backend must answer locally, not error.
+    let x = vec![0.1, 0.4, -0.2, 0.9, 0.3, -0.5];
+    let v = vec![1.0, -2.0, 0.5];
+    let want = host.kernel_matvec(k, &x, 3, &x, 3, 2, &v, sigma).unwrap();
+    let got = dist.kernel_matvec(k, &x, 3, &x, 3, 2, &v, sigma).unwrap();
+    assert_bits_eq(&got, &want, "undersized slab falls back to local");
+
+    // A mostly-zero probe routes to the host sparse pre-scan even when
+    // the slab is registered — bit-identical by construction.
+    let p = taxi_problem(240);
+    let dense = probe(p.n());
+    let _ = dist
+        .kernel_matvec(k, &p.train.x, p.n(), &p.train.x, p.n(), p.d(), &dense, p.sigma)
+        .unwrap();
+    let mut sparse = vec![0.0; p.n()];
+    sparse[3] = 1.0;
+    sparse[p.n() - 5] = -2.0;
+    let want = host
+        .kernel_matvec(k, &p.train.x, p.n(), &p.train.x, p.n(), p.d(), &sparse, p.sigma)
+        .unwrap();
+    let got = dist
+        .kernel_matvec(k, &p.train.x, p.n(), &p.train.x, p.n(), p.d(), &sparse, p.sigma)
+        .unwrap();
+    assert_bits_eq(&got, &want, "sparse probe routes local");
+}
+
+// ---------------------------------------------------------------------------
+// Solver families: the composed arms, two workers vs. host
+// ---------------------------------------------------------------------------
+
+fn family_cfg(solver: SolverKind) -> ExperimentConfig {
+    ExperimentConfig {
+        name: format!("dist_parity_{}", solver.name()),
+        dataset: "physics_like".into(),
+        n: 320,
+        d: 8,
+        solver,
+        rank: 10,
+        seed: 3,
+        max_iters: 16,
+        time_limit_secs: 1e9,
+        ..Default::default()
+    }
+}
+
+fn run_pair(solver: SolverKind, dist: &DistBackend) -> (SolveReport, SolveReport) {
+    let cfg = family_cfg(solver);
+    let host = HostBackend::auto_threads();
+    let want = Coordinator::new(&host).run(&cfg).unwrap();
+    let got = Coordinator::new(dist).run(&cfg).unwrap();
+    (got, want)
+}
+
+#[test]
+fn two_worker_solves_match_host_across_all_families() {
+    let dist = fleet(2);
+    let families = [
+        SolverKind::Askotch,
+        SolverKind::Skotch,
+        SolverKind::Pcg,
+        SolverKind::Falkon,
+        SolverKind::EigenPro,
+        SolverKind::Cholesky,
+    ];
+    for solver in families {
+        let (got, want) = run_pair(solver, &dist);
+        let ctx = format!("family {}", want.solver);
+        assert_eq!(got.iters, want.iters, "{ctx}: iterations");
+        assert_eq!(got.diverged, want.diverged, "{ctx}: divergence flag");
+        if !want.diverged {
+            let rel = (got.final_metric - want.final_metric).abs()
+                / want.final_metric.abs().max(1.0);
+            assert!(
+                rel <= 1e-8,
+                "{ctx}: metric {} vs {} (rel {rel:.3e})",
+                got.final_metric,
+                want.final_metric
+            );
+            if !want.weights.is_empty() && !got.weights.is_empty() {
+                assert_rel_close(&got.weights, &want.weights, 1e-8, &ctx);
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Precision tags across the wire
+// ---------------------------------------------------------------------------
+
+#[test]
+fn f32_session_matches_f32_host_and_keeps_exact_ops_in_f64() {
+    let p = taxi_problem(260);
+    let (n, d, sigma, k) = (p.n(), p.d(), p.sigma, p.kernel);
+    let dist = fleet(2).with_min_rows(8).with_precision(Precision::F32);
+    assert_eq!(dist.precision(), Precision::F32);
+    assert!(!dist.exact_arithmetic(), "f32 hot path is not exact");
+
+    // Exact entry points carry a 64-bit slab tag regardless of the
+    // session precision: the f32 fleet answers bitwise like f64 host.
+    let host64 = HostBackend::auto_threads();
+    let v = probe(n);
+    let want = host64.kernel_matvec(k, &p.train.x, n, &p.train.x, n, d, &v, sigma).unwrap();
+    let got = dist.kernel_matvec(k, &p.train.x, n, &p.train.x, n, d, &v, sigma).unwrap();
+    assert_bits_eq(&got, &want, "exact matvec on an f32 session");
+
+    // The hot cached path runs the f32 engine on both sides: a whole
+    // solve agrees with the f32 host to reduce-regrouping error.
+    let host32 = HostBackend::auto_threads().with_precision(Precision::F32);
+    let cfg = family_cfg(SolverKind::Askotch);
+    let want = Coordinator::new(&host32).run(&cfg).unwrap();
+    let got = Coordinator::new(&dist).run(&cfg).unwrap();
+    assert_eq!(got.diverged, want.diverged, "f32 divergence flag");
+    assert_rel_close(&got.weights, &want.weights, 1e-7, "f32 solve weights");
+}

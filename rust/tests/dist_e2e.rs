@@ -1,0 +1,189 @@
+//! Multi-process distributed e2e (`docs/DISTRIBUTED.md`): the real
+//! `askotch` binary driving real worker child processes over loopback
+//! sockets — the path `dist_backend.rs` (in-process workers) cannot
+//! cover. Gating in CI:
+//!
+//! * `train --backend dist --workers 3` → `--save` → artifact parity
+//!   with the same train on `--backend host`, then predict parity on
+//!   the saved weights;
+//! * the `worker` subcommand's stdout contract (one line ending in the
+//!   bound address) and its `SHUTDOWN`-on-disconnect exit;
+//! * `info --backend dist` spawning and reporting a fleet.
+
+use askotch::backend::{Backend, DistBackend, HostBackend};
+use askotch::model::ModelArtifact;
+use std::io::{BufRead, BufReader};
+use std::process::{Command, Stdio};
+use std::time::{Duration, Instant};
+
+const BIN: &str = env!("CARGO_BIN_EXE_askotch");
+
+fn temp_dir(tag: &str) -> String {
+    let mut p = std::env::temp_dir();
+    p.push(format!("askotch_dist_e2e_{}_{tag}", std::process::id()));
+    p.to_string_lossy().to_string()
+}
+
+fn train_args(save: &str, backend: &[&str]) -> Vec<String> {
+    let mut a: Vec<String> = [
+        "train",
+        "--dataset",
+        "physics_like",
+        "--n",
+        "360",
+        "--d",
+        "8",
+        "--solver",
+        "askotch",
+        "--rank",
+        "10",
+        "--iters",
+        "12",
+        "--seed",
+        "3",
+        "--save",
+        save,
+    ]
+    .iter()
+    .map(|s| s.to_string())
+    .collect();
+    a.extend(backend.iter().map(|s| s.to_string()));
+    a
+}
+
+fn run_ok(args: &[String]) -> String {
+    let out = Command::new(BIN).args(args).output().expect("launch askotch");
+    assert!(
+        out.status.success(),
+        "askotch {:?} failed:\n--- stdout ---\n{}\n--- stderr ---\n{}",
+        args,
+        String::from_utf8_lossy(&out.stdout),
+        String::from_utf8_lossy(&out.stderr)
+    );
+    String::from_utf8_lossy(&out.stdout).to_string()
+}
+
+#[test]
+fn three_worker_cli_train_save_predict_matches_host() {
+    let host_dir = temp_dir("host");
+    let dist_dir = temp_dir("dist");
+    let _ = std::fs::remove_dir_all(&host_dir);
+    let _ = std::fs::remove_dir_all(&dist_dir);
+
+    run_ok(&train_args(&host_dir, &["--backend", "host"]));
+    let out = run_ok(&train_args(&dist_dir, &["--backend", "dist", "--workers", "3"]));
+    assert!(out.contains("model saved"), "dist train must save: {out}");
+
+    let host_art = ModelArtifact::load(&host_dir).expect("host artifact");
+    let dist_art = ModelArtifact::load(&dist_dir).expect("dist artifact");
+    let host_snap = host_art.into_snapshot();
+    let dist_snap = dist_art.into_snapshot();
+    assert_eq!((dist_snap.n, dist_snap.d), (host_snap.n, host_snap.d));
+    assert_eq!(dist_snap.weights.len(), host_snap.weights.len());
+    for (i, (g, w)) in dist_snap.weights.iter().zip(&host_snap.weights).enumerate() {
+        let rel = (g - w).abs() / w.abs().max(1.0);
+        assert!(rel <= 1e-8, "weight {i}: {g} vs {w} (rel {rel:.3e})");
+    }
+
+    // Predict leg: the saved models answer the same queries the same
+    // way (first training rows as the probe batch).
+    let backend = HostBackend::new(2);
+    let rows = 5.min(host_snap.n);
+    let probe = &host_snap.x_train[..rows * host_snap.d];
+    let want = backend
+        .predict(
+            host_snap.kernel,
+            &host_snap.x_train,
+            host_snap.n,
+            host_snap.d,
+            &host_snap.weights,
+            probe,
+            rows,
+            host_snap.sigma,
+        )
+        .unwrap();
+    let got = backend
+        .predict(
+            dist_snap.kernel,
+            &dist_snap.x_train,
+            dist_snap.n,
+            dist_snap.d,
+            &dist_snap.weights,
+            probe,
+            rows,
+            dist_snap.sigma,
+        )
+        .unwrap();
+    for (i, (g, w)) in got.iter().zip(&want).enumerate() {
+        let rel = (g - w).abs() / w.abs().max(1.0);
+        assert!(rel <= 1e-8, "prediction {i}: {g} vs {w} (rel {rel:.3e})");
+    }
+
+    let _ = std::fs::remove_dir_all(&host_dir);
+    let _ = std::fs::remove_dir_all(&dist_dir);
+}
+
+#[test]
+fn worker_subcommand_prints_its_address_and_exits_on_shutdown() {
+    let mut child = Command::new(BIN)
+        .args(["worker", "--listen", "127.0.0.1:0", "--host-threads", "1"])
+        .stdin(Stdio::null())
+        .stdout(Stdio::piped())
+        .stderr(Stdio::null())
+        .spawn()
+        .expect("spawn worker");
+
+    let mut line = String::new();
+    BufReader::new(child.stdout.take().expect("stdout"))
+        .read_line(&mut line)
+        .expect("read announce line");
+    assert!(
+        line.starts_with("askotch worker listening on "),
+        "announce contract broken: {line:?}"
+    );
+    let addr = line.trim().rsplit(' ').next().unwrap().to_string();
+
+    // Dial it like the coordinator would and run one exact product.
+    let x: Vec<f64> = (0..40 * 3).map(|i| (i as f64 * 0.37).sin()).collect();
+    let v: Vec<f64> = (0..40).map(|i| 1.0 - (i % 7) as f64 / 3.0).collect();
+    let (k, sigma) = (askotch::config::KernelKind::Laplacian, 1.1);
+    let dist = DistBackend::dial(&[addr]).unwrap().with_min_rows(4);
+    dist.preflight().unwrap();
+    let got = dist.kernel_matvec(k, &x, 40, &x, 40, 3, &v, sigma).unwrap();
+    let want = HostBackend::new(1).kernel_matvec(k, &x, 40, &x, 40, 3, &v, sigma).unwrap();
+    assert_eq!(got.len(), want.len());
+    for (g, w) in got.iter().zip(&want) {
+        assert_eq!(g.to_bits(), w.to_bits(), "{g} vs {w}");
+    }
+
+    // Dropping the backend sends SHUTDOWN; the spawned-mode worker
+    // process must exit on it.
+    drop(dist);
+    let deadline = Instant::now() + Duration::from_secs(10);
+    loop {
+        match child.try_wait().expect("try_wait") {
+            Some(status) => {
+                assert!(status.success(), "worker exit status {status}");
+                break;
+            }
+            None if Instant::now() > deadline => {
+                let _ = child.kill();
+                panic!("worker did not exit within 10s of SHUTDOWN");
+            }
+            None => std::thread::sleep(Duration::from_millis(50)),
+        }
+    }
+}
+
+#[test]
+fn info_reports_a_spawned_fleet() {
+    let out = run_ok(&[
+        "info".to_string(),
+        "--backend".to_string(),
+        "dist".to_string(),
+        "--workers".to_string(),
+        "2".to_string(),
+    ]);
+    assert!(out.contains("dist"), "info must name the dist backend: {out}");
+    assert!(out.contains('2'), "info must report the fleet size: {out}");
+}

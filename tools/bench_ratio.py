@@ -19,11 +19,17 @@ compared the same way: the machine-stable signal there is the PCG
 iteration count per preconditioner arm (and its ratio to the plain-CG
 arm), not build wall-clock.
 
+The `dist_scaling` exhibit is compared on its machine-stable signal
+too: the matvec speedup of each fleet size over the one-worker fleet
+(each worker is pinned to one compute thread, so the ratio measures
+fleet scaling, not the box). A multi-worker fleet that is no faster
+than one worker means the collective stopped scaling.
+
 Exit status is 1 when any engine row's f32-vs-f64 speedup fell below
-`--min-fraction` (default 0.5) of the baseline's, or a preconditioner
+`--min-fraction` (default 0.5) of the baseline's, a preconditioner
 arm needed more iterations than plain CG / blew past its baseline
-count — the CI step runs with continue-on-error, so this reports
-rather than gates.
+count, or a multi-worker fleet lost its scaling — the CI step runs
+with continue-on-error, so this reports rather than gates.
 
 Stdlib only; no third-party imports.
 """
@@ -53,6 +59,44 @@ def precond_rows(doc):
     """`precond_build` rows keyed by preconditioner name."""
     rows = doc.get("precond_build", {}).get("rows", [])
     return {r.get("precond"): r for r in rows if r.get("precond")}
+
+
+def dist_rows(doc):
+    """`dist_scaling` rows keyed by fleet size."""
+    rows = doc.get("dist_scaling", {}).get("rows", [])
+    return {int(r["workers"]): r for r in rows if r.get("workers")}
+
+
+def compare_dist(current, baseline):
+    """Print the dist_scaling table; return the regressed fleet sizes."""
+    if not current:
+        return []
+    header = f"{'fleet':>5} {'Mpairs/s':>10} {'vs 1 worker':>12} {'baseline':>9}  status"
+    print("\n" + header)
+    print("-" * len(header))
+    regressed = []
+    for w in sorted(current):
+        row = current[w]
+        speedup = row.get("speedup_vs_one_worker")
+        if speedup is None:
+            continue
+        base = baseline.get(w, {}).get("speedup_vs_one_worker")
+        status = "ok"
+        if w > 1 and speedup <= 1.0:
+            status = "NO FLEET SCALING (multi-worker <= one worker)"
+            regressed.append(w)
+        elif base and speedup < 0.5 * base:
+            status = "REGRESSED (<50% of baseline scaling)"
+            regressed.append(w)
+        elif not base:
+            status = "no baseline"
+        print(
+            f"{w:>5} "
+            f"{row.get('mpairs_per_sec', 0):>10.0f} "
+            f"{speedup:>11.2f}x "
+            f"{(f'{base:.2f}x' if base else '-'):>9}  {status}"
+        )
+    return regressed
 
 
 def compare_precond(current, baseline):
@@ -105,7 +149,7 @@ def main():
     baseline_doc = load_doc(args.baseline)
     current = engine_rows(current_doc)
     baseline = engine_rows(baseline_doc)
-    if not current and not precond_rows(current_doc):
+    if not current and not precond_rows(current_doc) and not dist_rows(current_doc):
         print("bench_ratio: no current rows; did the bench run?", file=sys.stderr)
         return 1
 
@@ -137,6 +181,7 @@ def main():
         )
 
     regressed_precond = compare_precond(precond_rows(current_doc), precond_rows(baseline_doc))
+    regressed_dist = compare_dist(dist_rows(current_doc), dist_rows(baseline_doc))
 
     if regressed:
         names = ", ".join(f"{k[0]}/d={k[1]}" for k in regressed)
@@ -144,9 +189,15 @@ def main():
     if regressed_precond:
         names = ", ".join(regressed_precond)
         print(f"\nbench_ratio: preconditioner arms regressed: {names}", file=sys.stderr)
-    if regressed or regressed_precond:
+    if regressed_dist:
+        names = ", ".join(f"{w} workers" for w in regressed_dist)
+        print(f"\nbench_ratio: fleet scaling regressed at: {names}", file=sys.stderr)
+    if regressed or regressed_precond or regressed_dist:
         return 1
-    print("\nbench_ratio: engine ratios and preconditioner arms within budget of the baseline")
+    print(
+        "\nbench_ratio: engine ratios, preconditioner arms, and fleet scaling "
+        "within budget of the baseline"
+    )
     return 0
 
 
